@@ -1,0 +1,504 @@
+//! Regenerate every table and figure of the paper's evaluation (§4–§5).
+//!
+//! ```text
+//! cargo run --release --example figures -- <table2|fig13|fig14|fig15|fig16|fig17|fig18|fig19|all>
+//! ```
+//!
+//! Each generator prints the paper's reported numbers next to ours.
+//! Simulated quantities (Summit/Turing wall-clock) come from the analytic
+//! device models in `mgr::simgpu` (see DESIGN.md §Substitutions); measured
+//! quantities run real compute on this host.
+
+use mgr::baseline::BaselineRefactorer;
+use mgr::compress::{Codec, MgardCompressor};
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::{recompose_with_classes, split_classes, Refactorer};
+use mgr::sim::GrayScott;
+use mgr::simgpu::cluster::Impl;
+use mgr::simgpu::{autotune, ClusterModel, DeviceSpec, Kernel, Parallelism, PerfModel};
+use mgr::storage::ParallelFs;
+use mgr::util::cli::Args;
+use mgr::util::stats::{linf, time, value_range};
+use mgr::vis::iso_surface_area;
+
+fn main() {
+    let args = Args::from_env();
+    let which = args.subcommand.unwrap_or_else(|| "all".to_string());
+    let all = which == "all";
+    if all || which == "table2" {
+        table2();
+    }
+    if all || which == "fig13" {
+        fig13();
+    }
+    if all || which == "fig14" {
+        fig14();
+    }
+    if all || which == "fig15" {
+        fig15();
+    }
+    if all || which == "fig16" {
+        fig16();
+    }
+    if all || which == "fig17" {
+        fig17();
+    }
+    if all || which == "fig18" {
+        fig18();
+    }
+    if all || which == "fig19" {
+        fig19();
+    }
+}
+
+fn header(title: &str) {
+    println!("\n================================================================");
+    println!("{title}");
+    println!("================================================================");
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: performance-model ranking of thread-block configurations
+// ---------------------------------------------------------------------------
+
+fn table2() {
+    header("TABLE 2 — perf-model ranking of block configs (V100, N=513, f32)");
+    let m = PerfModel::new(DeviceSpec::volta_v100(), 513, 4);
+    println!(
+        "{:<12} {:>4} {:>4} {:>4}   {:>5} {:>5} {:>5}   (m=model rank, a=simulated-measured rank)",
+        "(Bz,By,Bx)", "GPKm", "LPKm", "IPKm", "GPKa", "LPKa", "IPKa"
+    );
+    let ranks: Vec<(Vec<usize>, Vec<usize>)> = Kernel::ALL
+        .iter()
+        .map(|&k| (m.model_ranking(k), m.measured_ranking(k)))
+        .collect();
+    for (i, cfg) in mgr::simgpu::perfmodel::TABLE2_CONFIGS.iter().enumerate() {
+        println!(
+            "{:<12} {:>4} {:>4} {:>4}   {:>5} {:>5} {:>5}",
+            cfg.to_string(),
+            ranks[0].0[i],
+            ranks[1].0[i],
+            ranks[2].0[i],
+            ranks[0].1[i],
+            ranks[1].1[i],
+            ranks[2].1[i],
+        );
+    }
+    println!("paper: LPK model column is exactly 7,6,5,4,3,2,1; GPK best (4,4,32);");
+    println!("       the measured best is always inside the model's top-3 (the");
+    println!("       property that lets auto-tuning profile only 3 candidates).");
+    for &k in &Kernel::ALL {
+        let model = m.model_ranking(k);
+        let meas = m.measured_ranking(k);
+        let best = meas.iter().position(|&r| r == 1).unwrap();
+        println!(
+            "  {}: measured best {} has model rank {} -> top-3 pruning {}",
+            k.name(),
+            mgr::simgpu::perfmodel::TABLE2_CONFIGS[best],
+            model[best],
+            if model[best] <= 3 { "OK" } else { "MISS" }
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 13: per-kernel speedups vs the SOTA design
+// ---------------------------------------------------------------------------
+
+fn fig13() {
+    header("FIG 13 — kernel speedups vs SOTA (simulated devices + host-measured)");
+    println!("paper (Volta f32): GPK 4.9x  LPK 6.3x  IPK 3.0x ; +AT 1.2-4.9x ; +FMA 1.3-2.7x (Turing)");
+
+    // simulated per-kernel speedups from the calibrated profiles
+    for dev in [DeviceSpec::volta_v100(), DeviceSpec::turing_2080ti()] {
+        for bytes in [4usize, 8] {
+            let sota = Impl::SotaGpu.profile(&dev, bytes);
+            let opt = Impl::OptAtFmaReo.profile(&dev, bytes);
+            println!(
+                "  sim {:<10} f{:<2}: GPK {:.1}x  LPK {:.1}x  IPK {:.1}x",
+                dev.name,
+                bytes * 8,
+                opt.gpk_eff / sota.gpk_eff,
+                opt.lpk_eff / sota.lpk_eff,
+                opt.ipk_eff / sota.ipk_eff
+            );
+        }
+    }
+
+    // auto-tuning gains (the "+AT" band)
+    for dev in [DeviceSpec::volta_v100(), DeviceSpec::turing_2080ti()] {
+        let gains: Vec<String> = autotune::autotune_all(&dev, 513, 4)
+            .iter()
+            .map(|r| format!("{} {:.1}x", r.kernel.name(), r.speedup()))
+            .collect();
+        println!("  sim {:<10} +AT: {}", dev.name, gains.join("  "));
+    }
+
+    // host-measured: optimized native core vs the SOTA-style baseline,
+    // end-to-end decompose (all three kernels in their natural mix)
+    let shape = [65usize, 65, 65];
+    let h = Hierarchy::uniform(&shape);
+    let mut sim = GrayScott::new(65, 3);
+    sim.step(60);
+    let data = sim.v_field();
+
+    let mut opt_ref = Refactorer::new(h.clone());
+    let mut t1 = data.clone();
+    opt_ref.decompose(&mut t1); // warm
+    let mut t1 = data.clone();
+    let (_, t_opt) = time(|| opt_ref.decompose(&mut t1));
+
+    let base_ref = BaselineRefactorer::new(h);
+    let mut t2 = data.clone();
+    let (_, t_base) = time(|| base_ref.decompose(&mut t2));
+
+    assert!(linf(t1.data(), t2.data()) < 1e-10, "baseline must agree");
+    println!(
+        "  host-measured 65^3 f64 end-to-end decompose: optimized {:.1} ms, baseline {:.1} ms -> {:.1}x",
+        t_opt * 1e3,
+        t_base * 1e3,
+        t_base / t_opt
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fig 14: K x S cooperative-parallel throughput vs compression ratio
+// ---------------------------------------------------------------------------
+
+fn fig14() {
+    header("FIG 14 — K groups x S GPUs per group: throughput (sim) vs ratio (measured)");
+    println!("paper: 6x1 fastest; 3x2 ~= 2x3 slightly slower; 1x6 degraded by X-Bus;");
+    println!("       compression ratio improves with S (deeper shared hierarchy)");
+
+    let m = ClusterModel::new(DeviceSpec::volta_v100(), 3, 5, 8);
+    let total = 16e9; // the paper's 16 GB Gray-Scott input
+
+    // measured ratios: a group of S GPUs compresses a slab S times
+    // thicker as ONE hierarchy -> more levels along x -> better ratio
+    let n = 65;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(120);
+    let field = sim.v_field();
+    let range = value_range(field.data());
+    let eb = 1e-3 * range;
+
+    println!(
+        "{:<6} {:>18} {:>22}",
+        "K x S", "sim throughput GB/s", "measured ratio (65^3)"
+    );
+    for s in [1usize, 2, 3, 6] {
+        let k = 6 / s;
+        let tp = m.coop_group_throughput(
+            Impl::OptAtFmaReo,
+            s,
+            total / k as f64,
+            mgr::simgpu::Interconnect::nvlink(),
+            s > 3,
+        ) * k as f64;
+
+        // per-GPU slab: 8+1 nodes thick; a group's joint slab is ~8s+1
+        let thickness = (8 * s).next_power_of_two().min(64);
+        let slab_shape = [thickness + 1, n, n];
+        let slab = Tensor::from_fn(&slab_shape, |idx| field.get(&[idx[0], idx[1], idx[2]]));
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&slab_shape), Codec::Zlib);
+        let blob = c.compress(&slab, eb).unwrap();
+        println!("{:<6} {:>18.1} {:>22.2}", format!("{k}x{s}"), tp / 1e9, blob.ratio());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 15: spatiotemporal batching — throughput vs ratio trade-off
+// ---------------------------------------------------------------------------
+
+fn fig15() {
+    header("FIG 15 — spatiotemporal batching (3+1-D): ratio up, throughput down");
+    println!("paper: larger time batches -> higher compression ratio, lower throughput");
+
+    let n = 33;
+    let snaps = GrayScott::snapshots(n, 13, 150, 17, 3);
+    let range = value_range(snaps[0].data());
+    let eb = 1e-3 * range;
+
+    println!(
+        "{:<12} {:>14} {:>16} {:>16}",
+        "batch (T)", "ratio", "refactor ms", "GB/s (host)"
+    );
+    for batch in [1usize, 2, 4, 8, 16] {
+        let (ratio, secs, bytes) = if batch == 1 {
+            // pure spatial, one hierarchy per step
+            let mut total_payload = 0usize;
+            let mut total_bytes = 0usize;
+            let mut secs = 0.0;
+            for s in snaps.iter().take(4) {
+                let mut c = MgardCompressor::new(Hierarchy::uniform(s.shape()), Codec::Zlib);
+                let blob = c.compress(s, eb).unwrap();
+                total_payload += blob.payload.len();
+                total_bytes += blob.original_bytes;
+                secs += c.stats.decompose_s;
+            }
+            (
+                total_bytes as f64 / total_payload as f64,
+                secs,
+                total_bytes,
+            )
+        } else {
+            // 3+1-D hierarchy over batch+1 snapshots (time dim 2^k+1)
+            let t = batch + 1;
+            let mut data = Vec::new();
+            for s in snaps.iter().take(t) {
+                data.extend_from_slice(s.data());
+            }
+            let st = Tensor::from_vec(&[t, n, n, n], data);
+            let h = Hierarchy::uniform(st.shape());
+            let mut dec = st.clone();
+            let mut r = Refactorer::spatiotemporal(h.clone());
+            let (_, secs) = time(|| r.decompose(&mut dec));
+            let quant = mgr::compress::QuantMeta::for_bound(eb, h.nlevels());
+            let q = mgr::compress::quantize(dec.data(), &quant);
+            let payload = {
+                use std::io::Write;
+                let raw = mgr::compress::rle::encode(&q);
+                let mut enc = flate2::write::ZlibEncoder::new(
+                    Vec::new(),
+                    flate2::Compression::default(),
+                );
+                enc.write_all(&raw).unwrap();
+                enc.finish().unwrap()
+            };
+            (st.nbytes() as f64 / payload.len() as f64, secs, st.nbytes())
+        };
+        println!(
+            "{:<12} {:>14.2} {:>16.1} {:>16.2}",
+            batch,
+            ratio,
+            secs * 1e3,
+            bytes as f64 / secs / 1e9
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 16: single-GPU end-to-end throughput vs input size
+// ---------------------------------------------------------------------------
+
+fn fig16() {
+    header("FIG 16 — single-device refactoring throughput vs input size");
+    println!("paper: V100 peak 49.8 GB/s, 2080Ti peak 32.0 GB/s; SOTA <=10.4% of peak,");
+    println!("       optimized up to 92.2% of peak\n");
+
+    for dev in [DeviceSpec::volta_v100(), DeviceSpec::turing_2080ti()] {
+        let m = ClusterModel::new(dev.clone(), 3, 9, 4);
+        let peak = m.theoretical_peak();
+        println!(
+            "  sim {} (theoretical peak {:.1} GB/s):",
+            dev.name,
+            peak / 1e9
+        );
+        println!(
+            "    {:<8} {:>14} {:>10} {:>16} {:>10}",
+            "N^3", "SOTA GB/s", "% peak", "OPT+AT+FMA+REO", "% peak"
+        );
+        for npow in [65usize, 129, 257, 513] {
+            let elems = npow * npow * npow;
+            let sota = m.single_device_throughput(Impl::SotaGpu, elems);
+            let opt = m.single_device_throughput(Impl::OptAtFmaReo, elems);
+            println!(
+                "    {:<8} {:>14.2} {:>9.1}% {:>16.2} {:>9.1}%",
+                npow,
+                sota / 1e9,
+                100.0 * sota / peak,
+                opt / 1e9,
+                100.0 * opt / peak
+            );
+        }
+    }
+
+    // host-measured counterpart across sizes
+    println!("\n  host-measured (native core vs SOTA-style baseline, f64):");
+    println!(
+        "    {:<8} {:>14} {:>14} {:>10}",
+        "N^3", "baseline GB/s", "native GB/s", "speedup"
+    );
+    for n in [17usize, 33, 65] {
+        let shape = [n, n, n];
+        let h = Hierarchy::uniform(&shape);
+        let mut rng = mgr::util::rng::Rng::new(1);
+        let data = Tensor::from_fn(&shape, |_| rng.normal());
+        let mut r = Refactorer::new(h.clone());
+        let mut t = data.clone();
+        r.decompose(&mut t); // warm
+        let mut t = data.clone();
+        let (_, opt_s) = time(|| r.decompose(&mut t));
+        let b = BaselineRefactorer::new(h);
+        let mut t2 = data.clone();
+        let (_, base_s) = time(|| b.decompose(&mut t2));
+        let bytes = data.nbytes() as f64;
+        println!(
+            "    {:<8} {:>14.3} {:>14.3} {:>9.1}x",
+            n,
+            bytes / base_s / 1e9,
+            bytes / opt_s / 1e9,
+            base_s / opt_s
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 17: weak scaling on Summit
+// ---------------------------------------------------------------------------
+
+fn fig17() {
+    header("FIG 17 — aggregated refactoring throughput at scale (simulated Summit)");
+    println!("paper: 1 TB/s at 4 nodes (OPT) vs 64 (SOTA-GPU) vs 512 (SOTA-CPU);");
+    println!("       1024 nodes: 264 TB/s embarrassing / 130 TB/s cooperative\n");
+    let m = ClusterModel::new(DeviceSpec::volta_v100(), 3, 9, 8);
+    println!(
+        "{:<8} {:>14} {:>14} {:>14} {:>15}",
+        "nodes", "SOTA-CPU TB/s", "SOTA-GPU TB/s", "OPT(emb) TB/s", "OPT(coop) TB/s"
+    );
+    for nodes in [1usize, 4, 16, 64, 256, 1024] {
+        let cpu = m.weak_scaling(Impl::SotaCpu, nodes, Parallelism::Embarrassing);
+        let sota = m.weak_scaling(Impl::SotaGpu, nodes, Parallelism::Embarrassing);
+        let emb = m.weak_scaling(Impl::OptAtFmaReo, nodes, Parallelism::Embarrassing);
+        let coop = m.weak_scaling(
+            Impl::OptAtFmaReo,
+            nodes,
+            Parallelism::Cooperative { group_size: 6 },
+        );
+        println!(
+            "{:<8} {:>14.3} {:>14.3} {:>14.3} {:>15.3}",
+            nodes,
+            cpu / 1e12,
+            sota / 1e12,
+            emb / 1e12,
+            coop / 1e12
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 18: visualization workflow — I/O cost vs #classes + accuracy
+// ---------------------------------------------------------------------------
+
+fn fig18() {
+    header("FIG 18 — vis workflow: write/read cost vs classes kept (4 TB modeled)");
+    println!("paper: ~95% iso-surface accuracy from 3/10 classes -> ~66% I/O saving\n");
+
+    // measured accuracy on real Gray-Scott data (65^3)
+    let n = 65;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let field = sim.v_field();
+    let h = Hierarchy::uniform(field.shape());
+    let mut dec = field.clone();
+    let mut refac = Refactorer::new(h.clone());
+    let (_, dec_s) = time(|| refac.decompose(&mut dec));
+    let classes = split_classes(&dec, &h);
+    let total_values: usize = classes.iter().map(|c| c.len()).sum();
+    let iso = 0.25;
+    let full_area = iso_surface_area(&field, iso);
+
+    // modeled 4 TB write at 4096 ranks / read at 512 (paper's setup)
+    let fs = ParallelFs::alpine();
+    let total_bytes = 4e12;
+
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>14} {:>14}",
+        "classes", "% bytes", "write s", "read s", "iso-area acc", "refactor GB/s"
+    );
+    for keep in 1..=h.nclasses() {
+        let kept_values: usize = classes[..keep].iter().map(|c| c.len()).sum();
+        let frac = kept_values as f64 / total_values as f64;
+        let approx = recompose_with_classes(&dec, &h, keep);
+        let area = iso_surface_area(&approx, iso);
+        let acc = if full_area > 0.0 {
+            (1.0 - (area - full_area).abs() / full_area).max(0.0)
+        } else {
+            1.0
+        };
+        println!(
+            "{:<8} {:>9.2}% {:>12.1} {:>12.1} {:>13.1}% {:>14.2}",
+            keep,
+            frac * 100.0,
+            fs.write_time(4096, total_bytes * frac),
+            fs.read_time(512, total_bytes * frac),
+            acc * 100.0,
+            field.nbytes() as f64 / dec_s / 1e9
+        );
+    }
+    println!("\nnote: our class sizes are geometric (factor ~8/level in 3-D), so the");
+    println!("byte saving at a given class count is larger than the paper's ~66%;");
+    println!("the paper's qualitative claim (high derived-quantity accuracy from a");
+    println!("small class prefix => large I/O saving) is what reproduces.");
+}
+
+// ---------------------------------------------------------------------------
+// Fig 19: MGARD lossy compression breakdown, CPU vs GPU-offloaded
+// ---------------------------------------------------------------------------
+
+fn fig19() {
+    header("FIG 19 — MGARD compression breakdown: CPU(baseline) vs GPU-stand-in(optimized)");
+    println!("paper: offloading refactoring+quantization to GPU shrinks those bars;");
+    println!("       ZLib stays on CPU and dominates afterwards\n");
+
+    let n = 65;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(120);
+    let field = sim.v_field();
+    let range = value_range(field.data());
+    let eb = 1e-3 * range;
+    let h = Hierarchy::uniform(field.shape());
+
+    // "CPU" path: SOTA baseline refactoring + zlib
+    let base = BaselineRefactorer::new(h.clone());
+    let mut t = field.clone();
+    let (_, cpu_decompose) = time(|| base.decompose(&mut t));
+    let quant = mgr::compress::QuantMeta::for_bound(eb, h.nlevels());
+    let (q, cpu_quant) = time(|| mgr::compress::quantize(t.data(), &quant));
+    let (_payload, cpu_zlib) = time(|| {
+        use std::io::Write;
+        let raw = mgr::compress::rle::encode(&q);
+        let mut enc = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
+        enc.write_all(&raw).unwrap();
+        enc.finish().unwrap()
+    });
+
+    // "GPU" path: optimized native core (+ the same zlib on "CPU")
+    let mut c = MgardCompressor::new(h, Codec::Zlib);
+    let blob = c.compress(&field, eb).unwrap();
+    let back = c.decompress(&blob).unwrap();
+    assert!(linf(back.data(), field.data()) <= eb);
+
+    println!("  compression ({}^3 f64, eb 1e-3·range, ratio {:.1}x):", n, blob.ratio());
+    println!("    {:<22} {:>12} {:>12}", "stage", "CPU path ms", "GPU path ms");
+    println!(
+        "    {:<22} {:>12.1} {:>12.1}",
+        "data decomposition",
+        cpu_decompose * 1e3,
+        c.stats.decompose_s * 1e3
+    );
+    println!(
+        "    {:<22} {:>12.1} {:>12.1}",
+        "quantization",
+        cpu_quant * 1e3,
+        c.stats.quantize_s * 1e3
+    );
+    println!(
+        "    {:<22} {:>12.1} {:>12.1}",
+        "zlib (stays on CPU)",
+        cpu_zlib * 1e3,
+        c.stats.encode_s * 1e3
+    );
+    println!(
+        "    {:<22} {:>12.1} {:>12.1}",
+        "TOTAL",
+        (cpu_decompose + cpu_quant + cpu_zlib) * 1e3,
+        c.stats.compress_total() * 1e3
+    );
+    println!(
+        "  decompression (GPU path): decode {:.1} ms, dequantize {:.1} ms, recompose {:.1} ms",
+        c.stats.decode_s * 1e3,
+        c.stats.dequantize_s * 1e3,
+        c.stats.recompose_s * 1e3
+    );
+}

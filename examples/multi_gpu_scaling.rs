@@ -1,0 +1,108 @@
+//! Multi-GPU refactoring (§3.6, §4.5, §4.7 / Figs 14 & 17).
+//!
+//! Runs real cooperative and embarrassing parallel refactoring through
+//! the coordinator (worker fleet = simulated GPU group), verifies the
+//! modes agree with the serial engine, then prints the simulated Summit
+//! projections for node counts up to 1024.
+//!
+//! ```text
+//! cargo run --release --example multi_gpu_scaling -- [--n 65] [--devices 4]
+//! ```
+
+use mgr::compress::Codec;
+use mgr::coordinator::{
+    round_robin_owner, Backend, Coordinator, JobMode, JobSpec, ParallelRefactorer,
+};
+use mgr::coordinator::partition::sweep_utilization;
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::Refactorer;
+use mgr::simgpu::cluster::Impl;
+use mgr::simgpu::{ClusterModel, DeviceSpec, Parallelism};
+use mgr::util::cli::Args;
+use mgr::util::rng::Rng;
+use mgr::util::stats::time;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 65)?;
+    let devices = args.get_usize("devices", 4)?;
+
+    let shape = [n, n, n];
+    let mut rng = Rng::new(3);
+    let data = Tensor::from_fn(&shape, |_| rng.normal());
+
+    // --- real execution through the coordinator -------------------------
+    println!("== coordinator: real parallel refactoring ({n}^3, {devices} workers) ==");
+    let mut serial = data.clone();
+    let mut r = Refactorer::new(Hierarchy::uniform(&shape));
+    r.decompose(&mut serial); // warm
+    let mut serial = data.clone();
+    let (_, t_serial) = time(|| r.decompose(&mut serial));
+
+    let coop = ParallelRefactorer::new(Hierarchy::uniform(&shape), devices);
+    let mut coop_out = data.clone();
+    let (_, t_coop) = time(|| coop.decompose(&mut coop_out));
+    assert_eq!(coop_out.data(), serial.data(), "cooperative must be exact");
+
+    let coord = Coordinator::new(Backend::Native, devices);
+    let (emb, t_emb) = time(|| {
+        coord
+            .run_job(JobSpec {
+                name: "emb".into(),
+                data: data.clone(),
+                mode: JobMode::Embarrassing { devices },
+                error_bound: None,
+                codec: Codec::Zlib,
+            })
+            .unwrap()
+    });
+    let gb = data.nbytes() as f64 / 1e9;
+    println!("  serial:        {:.1} ms  ({:.2} GB/s)", t_serial * 1e3, gb / t_serial);
+    println!(
+        "  cooperative:   {:.1} ms  ({:.2} GB/s, {} workers, bit-identical)",
+        t_coop * 1e3,
+        gb / t_coop,
+        devices
+    );
+    println!(
+        "  embarrassing:  {:.1} ms  ({:.2} GB/s, {} slabs, per-slab hierarchies)",
+        t_emb * 1e3,
+        gb / t_emb,
+        emb.slab_outputs.as_ref().map(|s| s.len()).unwrap_or(0)
+    );
+
+    // --- shifted round-robin utilization (Fig 12) ------------------------
+    let rr = sweep_utilization(6, 3, |r, c| round_robin_owner(r, c, 3));
+    let blk = sweep_utilization(6, 3, |_r, c| c / 2);
+    println!("\n== Fig 12: IPK sweep utilization, 3 GPUs x 6 block-columns ==");
+    println!("  column-block partitioning: {:.0}%   shifted round-robin: {:.0}%", blk * 100.0, rr * 100.0);
+
+    // --- simulated Summit projections (Figs 14/17) -----------------------
+    println!("\n== simulated Summit node (Fig 14 shape) ==");
+    let m = ClusterModel::new(DeviceSpec::volta_v100(), 3, 5, 8);
+    for s in [1usize, 2, 3, 6] {
+        let k = 6 / s;
+        let tp = m.coop_group_throughput(
+            Impl::OptAtFmaReo,
+            s,
+            16e9 / k as f64,
+            mgr::simgpu::Interconnect::nvlink(),
+            s > 3,
+        ) * k as f64;
+        println!("  {k}x{s}: {:.0} GB/s", tp / 1e9);
+    }
+    println!("\n== simulated weak scaling (Fig 17 shape) ==");
+    let m = ClusterModel::new(DeviceSpec::volta_v100(), 3, 9, 8);
+    for nodes in [4usize, 64, 1024] {
+        println!(
+            "  {nodes:>5} nodes: {:.1} TB/s embarrassing, {:.1} TB/s cooperative",
+            m.weak_scaling(Impl::OptAtFmaReo, nodes, Parallelism::Embarrassing) / 1e12,
+            m.weak_scaling(
+                Impl::OptAtFmaReo,
+                nodes,
+                Parallelism::Cooperative { group_size: 6 }
+            ) / 1e12
+        );
+    }
+    Ok(())
+}

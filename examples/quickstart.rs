@@ -1,0 +1,94 @@
+//! Quickstart: the Fig 2/3 walkthrough plus the core public API.
+//!
+//! Decomposes a 5x5 grid exactly like the paper's Fig 3, prints each
+//! stage, then shows progressive reconstruction and the PJRT path.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::{class_norms, recompose_with_classes, split_classes, Refactorer};
+use mgr::runtime::EngineHandle;
+use mgr::util::stats::{linf, rmse};
+
+fn show(title: &str, t: &Tensor<f64>) {
+    println!("{title}:");
+    let n = t.shape()[1];
+    for i in 0..t.shape()[0] {
+        let row: Vec<String> = (0..n).map(|j| format!("{:7.3}", t.get(&[i, j]))).collect();
+        println!("  {}", row.join(" "));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Fig 3: a 5x5 dataset from a smooth function -------------------
+    let shape = [5usize, 5];
+    let u = Tensor::from_fn(&shape, |idx| {
+        let x = idx[0] as f64 / 4.0;
+        let y = idx[1] as f64 / 4.0;
+        x * x - 5.0 * x * y + 6.0 * y // the paper's Fig-2 style quadratic
+    });
+    show("original 5x5 data (Fig 3, leftmost)", &u);
+
+    let h = Hierarchy::uniform(&shape); // two levels: 5x5 -> 3x3 -> 2x2
+    let mut refactored = u.clone();
+    let mut engine = Refactorer::new(h.clone());
+    engine.decompose(&mut refactored);
+    show(
+        "\nrefactored representation (Fig 3, rightmost; interleaved layout)",
+        &refactored,
+    );
+
+    // --- coefficient classes (the progressive representation) ----------
+    let classes = split_classes(&refactored, &h);
+    let norms = class_norms(&refactored, &h);
+    println!("\ncoefficient classes (coarsest first):");
+    for (k, c) in classes.iter().enumerate() {
+        println!(
+            "  class {k}: {:>2} values, max|coef| = {:.3e}",
+            c.len(),
+            norms.linf[k]
+        );
+    }
+
+    // --- progressive reconstruction ------------------------------------
+    println!("\nprogressive reconstruction:");
+    for keep in 1..=h.nclasses() {
+        let approx = recompose_with_classes(&refactored, &h, keep);
+        println!(
+            "  classes 0..{keep}: RMSE {:.3e}, L∞ {:.3e}",
+            rmse(approx.data(), u.data()),
+            linf(approx.data(), u.data())
+        );
+    }
+
+    // --- exact inversion ------------------------------------------------
+    let mut back = refactored.clone();
+    engine.recompose(&mut back);
+    println!("\nlossless roundtrip L∞ = {:.3e}", linf(back.data(), u.data()));
+
+    // --- the same decompose through the AOT-compiled PJRT artifact -----
+    match EngineHandle::spawn("artifacts".into()) {
+        Ok(pjrt) => {
+            let shape3 = [17usize, 17, 17];
+            let h3 = Hierarchy::uniform(&shape3);
+            let t = Tensor::from_fn(&shape3, |idx| {
+                (idx[0] as f32 * 0.3).sin() + (idx[1] as f32 * 0.2).cos() + idx[2] as f32 * 0.01
+            });
+            let name = pjrt
+                .find("decompose", &shape3, "float32")?
+                .expect("17^3 float32 artifact (run `make artifacts`)");
+            let got = pjrt.run(&name, &t, &h3.coords().to_vec())?;
+            let mut want = t.clone();
+            Refactorer::new(h3).decompose(&mut want);
+            println!(
+                "PJRT artifact '{}' matches native core: L∞ = {:.2e}",
+                name,
+                linf(got.data(), want.data())
+            );
+        }
+        Err(e) => println!("(PJRT demo skipped: {e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Spatiotemporal (3+1-D) refactoring (§3.4, §4.6 / Fig 15).
+//!
+//! Takes a sequence of Gray-Scott snapshots and refactors them as one
+//! 3+1-D hierarchy (spatial phase batched over time, then a temporal
+//! phase — the paper's Fig 9/10 design), comparing compression ratio and
+//! cost against per-step spatial refactoring. Also runs the
+//! spatiotemporal PJRT artifact when available.
+//!
+//! ```text
+//! cargo run --release --example spatiotemporal -- [--n 33] [--steps 17]
+//! ```
+
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::Refactorer;
+use mgr::runtime::EngineHandle;
+use mgr::sim::GrayScott;
+use mgr::util::cli::Args;
+use mgr::util::stats::{linf, time, value_range};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 33)?;
+    let nt = args.get_usize("steps", 17)?;
+    anyhow::ensure!(mgr::grid::max_levels(&[nt]).is_some(), "--steps must be 2^k+1");
+
+    println!("collecting {nt} Gray-Scott snapshots at {n}^3 ...");
+    let snaps = GrayScott::snapshots(n, 13, 150, nt, 3);
+    let mut data = Vec::new();
+    for s in &snaps {
+        data.extend_from_slice(s.data());
+    }
+    let st = Tensor::from_vec(&[nt, n, n, n], data);
+    let range = value_range(st.data());
+    let eb = 1e-3 * range;
+
+    // spatiotemporal refactor + roundtrip
+    let h4 = Hierarchy::uniform(st.shape());
+    let mut engine = Refactorer::spatiotemporal(h4.clone());
+    let mut dec = st.clone();
+    let (_, st_secs) = time(|| engine.decompose(&mut dec));
+    let mut back = dec.clone();
+    engine.recompose(&mut back);
+    println!(
+        "3+1-D decompose: {:.1} ms ({:.2} GB/s); roundtrip L∞ = {:.2e}",
+        st_secs * 1e3,
+        st.nbytes() as f64 / st_secs / 1e9,
+        linf(back.data(), st.data())
+    );
+
+    // ratio: spatiotemporal vs per-step spatial
+    let quant = mgr::compress::QuantMeta::for_bound(eb, h4.nlevels());
+    let q4 = mgr::compress::quantize(dec.data(), &quant);
+    let st_bytes = zlib_len(&q4);
+
+    let mut spatial_bytes = 0usize;
+    let mut spatial_secs = 0.0;
+    for s in &snaps {
+        let mut d = s.clone();
+        let mut r = Refactorer::new(Hierarchy::uniform(s.shape()));
+        let (_, secs) = time(|| r.decompose(&mut d));
+        spatial_secs += secs;
+        let q = mgr::compress::quantize(d.data(), &quant);
+        spatial_bytes += zlib_len(&q);
+    }
+    println!(
+        "compressed bytes at eb=1e-3·range: spatial/step {spatial_bytes} vs spatiotemporal {st_bytes} \
+         ({:.1}% smaller); refactor cost {:.1} -> {:.1} ms",
+        (1.0 - st_bytes as f64 / spatial_bytes as f64) * 100.0,
+        spatial_secs * 1e3,
+        st_secs * 1e3
+    );
+
+    // PJRT spatiotemporal artifact (fixed small shape)
+    if let Ok(pjrt) = EngineHandle::spawn("artifacts".into()) {
+        let shape = [5usize, 17, 17, 17];
+        if let Some(name) = pjrt.find("st_decompose", &shape, "float32")? {
+            let t = Tensor::from_fn(&shape, |idx| {
+                ((idx[0] + idx[1]) as f32 * 0.2).sin() + (idx[2] as f32 * 0.1).cos() * idx[3] as f32
+            });
+            let hh = Hierarchy::uniform(&shape);
+            let got = pjrt.run(&name, &t, &hh.coords().to_vec())?;
+            let mut want = t.clone();
+            Refactorer::spatiotemporal(hh).decompose(&mut want);
+            println!(
+                "PJRT st artifact '{}' vs native: L∞ = {:.2e}",
+                name,
+                linf(got.data(), want.data())
+            );
+        }
+    }
+    Ok(())
+}
+
+fn zlib_len(q: &[i64]) -> usize {
+    use std::io::Write;
+    let raw = mgr::compress::rle::encode(q);
+    let mut enc = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
+    enc.write_all(&raw).unwrap();
+    enc.finish().unwrap().len()
+}

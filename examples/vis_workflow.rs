@@ -1,0 +1,91 @@
+//! Showcase 1 (§5.1): the visualization workflow.
+//!
+//! A Gray-Scott simulation writes refactored data; a visualization
+//! consumer reads only as many coefficient classes as its iso-surface
+//! analysis needs. Reports bytes moved, modeled parallel-I/O time (the
+//! paper's 4 TB ADIOS write) and the measured iso-surface-area accuracy.
+//!
+//! ```text
+//! cargo run --release --example vis_workflow -- [--n 65] [--target-acc 0.95]
+//! ```
+
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::{recompose_with_classes, split_classes, Refactorer};
+use mgr::sim::GrayScott;
+use mgr::storage::{place_classes, ParallelFs, TierSpec};
+use mgr::util::cli::Args;
+use mgr::vis::iso_surface_area;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.get_usize("n", 65)?;
+    let target_acc = args.get_f64("target-acc", 0.95)?;
+
+    println!("== producer: Gray-Scott simulation ({n}^3) ==");
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let field = sim.v_field();
+
+    let h = Hierarchy::uniform(field.shape());
+    let mut dec = field.clone();
+    Refactorer::new(h.clone()).decompose(&mut dec);
+    let classes = split_classes(&dec, &h);
+    let class_bytes: Vec<u64> = classes.iter().map(|c| (c.len() * 8) as u64).collect();
+
+    println!("== storage: placing {} classes across tiers ==", classes.len());
+    let tiers = vec![
+        TierSpec::burst_buffer(),
+        TierSpec::parallel_fs(),
+        TierSpec::archive(),
+    ];
+    let placement = place_classes(&class_bytes, &tiers);
+    for (k, tier) in placement.assignment.iter().enumerate() {
+        println!("  class {k}: {:>9} B -> {tier:?}", class_bytes[k]);
+    }
+
+    println!("== consumer: iso-surface analysis ==");
+    let iso = 0.25;
+    let full_area = iso_surface_area(&field, iso);
+    let fs = ParallelFs::alpine();
+    let modeled_total = 4e12; // the paper's 4 TB file
+    let total_values: usize = classes.iter().map(|c| c.len()).sum();
+
+    let mut chosen = h.nclasses();
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>12}",
+        "classes", "% bytes", "acc %", "read(512) s", "retrieve s"
+    );
+    for keep in 1..=h.nclasses() {
+        let approx = recompose_with_classes(&dec, &h, keep);
+        let area = iso_surface_area(&approx, iso);
+        let acc = (1.0 - (area - full_area).abs() / full_area).max(0.0);
+        let kept: usize = classes[..keep].iter().map(|c| c.len()).sum();
+        let frac = kept as f64 / total_values as f64;
+        println!(
+            "{:<8} {:>11.2}% {:>11.1}% {:>14.1} {:>12.3}",
+            keep,
+            frac * 100.0,
+            acc * 100.0,
+            fs.read_time(512, modeled_total * frac),
+            placement.retrieval_time(&tiers, keep)
+        );
+        if acc >= target_acc && keep < chosen {
+            chosen = keep;
+        }
+    }
+    let kept: usize = classes[..chosen].iter().map(|c| c.len()).sum();
+    let frac = kept as f64 / total_values as f64;
+    println!(
+        "\n=> {:.0}% iso-area accuracy reached with {chosen}/{} classes = {:.2}% of bytes;",
+        target_acc * 100.0,
+        h.nclasses(),
+        frac * 100.0
+    );
+    println!(
+        "   modeled 4 TB read cost: {:.1} s -> {:.1} s ({:.0}% I/O saving; paper: ~66% with its class sizing)",
+        fs.read_time(512, modeled_total),
+        fs.read_time(512, modeled_total * frac),
+        (1.0 - fs.read_time(512, modeled_total * frac) / fs.read_time(512, modeled_total)) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+"""AOT lowering: JAX model variants -> HLO text artifacts for the Rust runtime.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+Run once at build time (``make artifacts``); produces::
+
+    artifacts/<variant>.hlo.txt   one per entry in model.VARIANTS
+    artifacts/manifest.json       machine-readable registry for rust/src/runtime
+
+Python never runs on the request path — the Rust binary is self-contained
+once these artifacts exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # for float64 variants
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(op: str, shape: tuple[int, ...], dtype: str, outdir: pathlib.Path) -> dict:
+    """Lower one variant and write its artifact; return its manifest entry."""
+    name, fn, args = model.variant(op, shape, dtype)
+    t0 = time.time()
+    text = to_hlo_text(fn.lower(*args))
+    path = outdir / f"{name}.hlo.txt"
+    path.write_text(text)
+    entry = {
+        "name": name,
+        "op": op,
+        "shape": list(shape),
+        "dtype": dtype,
+        "nlevels": model.max_levels(shape),
+        "inputs": ["u"] + [f"x{d}" for d in range(len(shape))],
+        "file": path.name,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        "hlo_bytes": len(text),
+        "lower_seconds": round(time.time() - t0, 2),
+    }
+    print(f"  {name}: {len(text)/1e6:.2f} MB HLO in {entry['lower_seconds']}s")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="substring filter on variant names")
+    args = ap.parse_args()
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    entries = []
+    for op, shape, dtype in model.VARIANTS:
+        name = f"{op}_{'x'.join(map(str, shape))}_{dtype}"
+        if args.only and args.only not in name:
+            continue
+        entries.append(lower_variant(op, shape, dtype, outdir))
+
+    manifest = {
+        "format": "hlo-text",
+        "generated_by": "python/compile/aot.py",
+        "variants": entries,
+    }
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {len(entries)} artifacts + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for multigrid-based hierarchical data refactoring.
+
+Three kernels, one per processing style of the paper (§3.1):
+
+* :mod:`.gpk`  — grid processing kernel: coefficient computation.
+* :mod:`.lpk`  — linear processing kernel: fused mass x transfer stencil.
+* :mod:`.ipk`  — iterative processing kernel: batched Thomas solver.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec/grid structure is nevertheless written the way
+a real TPU lowering would want it: the (up to three) *selected* dimensions
+live in a single VMEM block, any outer dimensions are parallelized by the
+pallas grid — the paper's "hierarchical batch optimization" (§3.4.1).
+
+:mod:`.ref` is the pure-numpy oracle the kernels are verified against.
+"""
+
+from . import gpk, ipk, lpk, ref  # noqa: F401

@@ -1,0 +1,307 @@
+"""Pure-numpy reference oracle for multigrid-based hierarchical data refactoring.
+
+This module is the *trusted* implementation of the algorithms of
+Ainsworth et al. (the math behind MGARD) that the Pallas kernels
+(`gpk.py`, `lpk.py`, `ipk.py`) and the JAX model (`model.py`) are verified
+against, and that the Rust core mirrors (same operation order).
+
+It deliberately uses numpy only (no jax) so that it cannot share bugs with
+the kernel implementations.
+
+Grid model
+----------
+Each refactorable dimension has ``n = 2^k + 1`` nodes with arbitrary
+(non-uniform, strictly increasing) coordinates.  Level ``l`` of a dimension
+keeps every ``2^(L-l)``-th node (``L = k`` is the finest level).  One
+decompose step transforms the level-``l`` view (size ``m = 2a+1``) into
+
+* coefficients at odd local indices (``N_l \\ N_{l-1}``), and
+* corrected nodal values at even local indices (``N_{l-1}``),
+
+such that the even values are exactly the nodal values of the L2 projection
+``Q_{l-1} u`` (verified dense in the test suite).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Per-dimension primitive operators (1D building blocks)
+# ---------------------------------------------------------------------------
+
+
+def interp_ratios(xs: np.ndarray) -> np.ndarray:
+    """Interpolation ratios r for odd nodes of a level view with coords xs.
+
+    ``r[j] = (x_{2j+1} - x_{2j}) / (x_{2j+2} - x_{2j})`` so that the linear
+    interpolant at odd node ``2j+1`` is ``(1-r_j) v_{2j} + r_j v_{2j+2}``.
+    """
+    xs = np.asarray(xs)
+    return (xs[1::2] - xs[0:-1:2]) / (xs[2::2] - xs[0:-1:2])
+
+
+def upsample1d(coarse: np.ndarray, r: np.ndarray, axis: int) -> np.ndarray:
+    """Linear interpolation of a coarse vector onto the fine level view.
+
+    Input has ``a+1`` entries along ``axis``; output has ``2a+1``: even
+    positions copy the coarse values, odd positions are the r-weighted
+    linear interpolants (the fma form ``fma(r, v_{i+1}, fma(-r, v_i, v_i))``).
+    """
+    coarse = np.moveaxis(np.asarray(coarse), axis, 0)
+    a = coarse.shape[0] - 1
+    rr = np.asarray(r).reshape((a,) + (1,) * (coarse.ndim - 1))
+    odd = coarse[:-1] + rr * (coarse[1:] - coarse[:-1])
+    out = np.empty((2 * a + 1,) + coarse.shape[1:], dtype=coarse.dtype)
+    out[0::2] = coarse
+    out[1::2] = odd
+    return np.moveaxis(out, 0, axis)
+
+
+def mass_apply1d(v: np.ndarray, xs: np.ndarray, axis: int) -> np.ndarray:
+    """Apply the 1D piecewise-linear FEM mass matrix along ``axis``.
+
+    ``(Mv)_i = h_{i-1}/6 v_{i-1} + (h_{i-1}+h_i)/3 v_i + h_i/6 v_{i+1}``
+    with one-sided boundary rows.
+    """
+    v = np.moveaxis(np.asarray(v), axis, 0)
+    xs = np.asarray(xs, dtype=v.dtype)
+    h = xs[1:] - xs[:-1]
+    m = v.shape[0]
+    out = np.empty_like(v)
+    col = lambda a: a.reshape((-1,) + (1,) * (v.ndim - 1))  # noqa: E731
+    hl = col(h[: m - 2])
+    hr = col(h[1:])
+    out[1:-1] = hl / 6 * v[:-2] + (hl + hr) / 3 * v[1:-1] + hr / 6 * v[2:]
+    out[0] = h[0] / 3 * v[0] + h[0] / 6 * v[1]
+    out[-1] = h[-1] / 3 * v[-1] + h[-1] / 6 * v[-2]
+    return np.moveaxis(out, 0, axis)
+
+
+def transfer_weights(xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Hat-function transfer (restriction) weights for one level step.
+
+    For coarse node i (fine index 2i), the coarse hat expressed in the fine
+    basis picks up fine nodes 2i-1 and 2i+1 with weights
+
+    ``wl_i = (x_{2i-1} - x_{2i-2}) / (x_{2i} - x_{2i-2})``
+    ``wr_i = (x_{2i+2} - x_{2i+1}) / (x_{2i+2} - x_{2i})``
+
+    with ``wl_0 = wr_last = 0`` (no neighbour beyond the boundary).
+    """
+    xs = np.asarray(xs)
+    a = (len(xs) - 1) // 2
+    wl = np.zeros(a + 1, dtype=xs.dtype)
+    wr = np.zeros(a + 1, dtype=xs.dtype)
+    wl[1:] = (xs[1::2] - xs[0:-1:2]) / (xs[2::2] - xs[0:-1:2])
+    wr[:-1] = (xs[2::2] - xs[1::2]) / (xs[2::2] - xs[0:-1:2])
+    return wl, wr
+
+
+def restrict1d(v: np.ndarray, xs: np.ndarray, axis: int) -> np.ndarray:
+    """Apply the basis-transfer matrix R along ``axis`` (fine -> coarse)."""
+    v = np.moveaxis(np.asarray(v), axis, 0)
+    wl, wr = transfer_weights(np.asarray(xs, dtype=v.dtype))
+    sh = (-1,) + (1,) * (v.ndim - 1)
+    out = v[0::2].copy()
+    out[1:] += wl[1:].reshape(sh) * v[1::2]
+    out[:-1] += wr[:-1].reshape(sh) * v[1::2]
+    return np.moveaxis(out, 0, axis)
+
+
+def masstrans1d(v: np.ndarray, xs: np.ndarray, axis: int) -> np.ndarray:
+    """Fused mass x transfer ("mass-trans") apply along ``axis``.
+
+    Semantically ``restrict1d(mass_apply1d(v))`` — the paper's LPK fuses the
+    two 3-point stencils into a single 5-point stencil; the reference keeps
+    them separate (the fused/unfused equality is itself a unit test).
+    """
+    return restrict1d(mass_apply1d(v, xs, axis), xs, axis)
+
+
+def thomas_factors(xs: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Precomputed Thomas-algorithm factors for the mass matrix on ``xs``.
+
+    Returns ``(sub, cp, denom)``: sub-diagonal entries, eliminated
+    super-diagonal ``cp`` and reciprocal pivots ``denom`` such that the solve
+    is a forward scan ``dp_i = (d_i - sub_i dp_{i-1}) * denom_i`` followed by
+    a backward scan ``z_i = dp_i - cp_i z_{i+1}``.
+    """
+    xs = np.asarray(xs)
+    h = xs[1:] - xs[:-1]
+    m = len(xs)
+    diag = np.empty(m, dtype=xs.dtype)
+    if m > 2:
+        diag[1:-1] = (h[:-1] + h[1:]) / 3
+    diag[0] = h[0] / 3
+    diag[-1] = h[-1] / 3
+    sub = np.concatenate([np.zeros(1, dtype=xs.dtype), h / 6])
+    sup = h / 6
+    cp = np.zeros(m, dtype=xs.dtype)
+    denom = np.zeros(m, dtype=xs.dtype)
+    denom[0] = 1.0 / diag[0]
+    cp[0] = sup[0] * denom[0]
+    for i in range(1, m):
+        denom[i] = 1.0 / (diag[i] - sub[i] * cp[i - 1])
+        if i < m - 1:
+            cp[i] = sup[i] * denom[i]
+    return sub, cp, denom
+
+
+def thomas_solve1d(f: np.ndarray, xs: np.ndarray, axis: int) -> np.ndarray:
+    """Solve ``M z = f`` along ``axis`` for the mass matrix on ``xs``."""
+    f = np.moveaxis(np.asarray(f), axis, 0)
+    sub, cp, denom = thomas_factors(np.asarray(xs, dtype=f.dtype))
+    m = f.shape[0]
+    dp = np.empty_like(f)
+    dp[0] = f[0] * denom[0]
+    for i in range(1, m):
+        dp[i] = (f[i] - sub[i] * dp[i - 1]) * denom[i]
+    z = np.empty_like(f)
+    z[-1] = dp[-1]
+    for i in range(m - 2, -1, -1):
+        z[i] = dp[i] - cp[i] * z[i + 1]
+    return np.moveaxis(z, 0, axis)
+
+
+# ---------------------------------------------------------------------------
+# Level step (all dimensions), decompose / recompose
+# ---------------------------------------------------------------------------
+
+
+def _on_grid(shape: tuple[int, ...], stride: int) -> np.ndarray:
+    """Mask of nodes whose index is a multiple of ``stride`` in every dim."""
+    mask = np.ones(shape, dtype=bool)
+    for d, m in enumerate(shape):
+        idx = np.arange(m) % stride == 0
+        sh = [1] * len(shape)
+        sh[d] = m
+        mask &= idx.reshape(sh)
+    return mask
+
+
+def _even_mask(shape: tuple[int, ...]) -> np.ndarray:
+    return _on_grid(shape, 2)
+
+
+def compute_coefficients(v: np.ndarray, coords: list[np.ndarray]) -> np.ndarray:
+    """GPK reference: node value minus multilinear interpolant of N_{l-1}.
+
+    Returns an array of the same shape: coefficients at nodes with any odd
+    index, original values at all-even nodes.
+    """
+    v = np.asarray(v)
+    coarse = v[tuple(slice(None, None, 2) for _ in v.shape)]
+    interp = coarse
+    for d in range(v.ndim):
+        r = interp_ratios(np.asarray(coords[d], dtype=v.dtype))
+        interp = upsample1d(interp, r, d)
+    out = v - interp
+    mask = _even_mask(v.shape)
+    out[mask] = v[mask]
+    return out
+
+
+def coefficient_field(decomposed_view: np.ndarray) -> np.ndarray:
+    """C_l: coefficients at N_l \\ N_{l-1}, zeros at N_{l-1}."""
+    c = np.array(decomposed_view, copy=True)
+    c[_even_mask(c.shape)] = 0
+    return c
+
+
+def compute_correction(c: np.ndarray, coords: list[np.ndarray]) -> np.ndarray:
+    """LPK + IPK reference: z = (tensor-product M)^{-1} (tensor-product RM) C."""
+    f = np.asarray(c)
+    for d in range(f.ndim):
+        f = masstrans1d(f, coords[d], d)
+    z = f
+    for d in range(z.ndim):
+        z = thomas_solve1d(z, np.asarray(coords[d])[::2], d)
+    return z
+
+
+def decompose_step(v: np.ndarray, coords: list[np.ndarray]) -> np.ndarray:
+    """One level step l -> l-1 on a level view (every dim size 2a+1, a>=1)."""
+    out = compute_coefficients(v, coords)
+    z = compute_correction(coefficient_field(out), coords)
+    evens = tuple(slice(None, None, 2) for _ in v.shape)
+    out[evens] += z
+    return out
+
+
+def recompose_step(v: np.ndarray, coords: list[np.ndarray]) -> np.ndarray:
+    """Inverse of :func:`decompose_step`."""
+    v = np.array(v, copy=True)
+    z = compute_correction(coefficient_field(v), coords)
+    evens = tuple(slice(None, None, 2) for _ in v.shape)
+    v[evens] -= z
+    coarse = v[evens]
+    interp = coarse
+    for d in range(v.ndim):
+        r = interp_ratios(np.asarray(coords[d], dtype=v.dtype))
+        interp = upsample1d(interp, r, d)
+    out = v + interp
+    mask = _even_mask(v.shape)
+    out[mask] = v[mask]
+    return out
+
+
+def max_levels(shape: tuple[int, ...]) -> int:
+    """Number of decompose steps supported by ``shape`` (all dims 2^k+1)."""
+    levels = []
+    for n in shape:
+        if n < 3 or (n - 1) & (n - 2):
+            raise ValueError(f"dimension size {n} is not 2^k+1 with k>=1")
+        levels.append((n - 1).bit_length() - 1)
+    return min(levels)
+
+
+def decompose(u: np.ndarray, coords: list[np.ndarray], nlevels: int | None = None) -> np.ndarray:
+    """Full multi-level decomposition (interleaved layout)."""
+    u = np.array(u, copy=True)
+    L = max_levels(u.shape)
+    nlevels = L if nlevels is None else nlevels
+    assert 0 <= nlevels <= L
+    for step in range(nlevels):
+        s = 2**step
+        sl = tuple(slice(None, None, s) for _ in u.shape)
+        u[sl] = decompose_step(u[sl], [np.asarray(c)[::s] for c in coords])
+    return u
+
+
+def recompose(u: np.ndarray, coords: list[np.ndarray], nlevels: int | None = None) -> np.ndarray:
+    """Full multi-level recomposition — exact inverse of :func:`decompose`."""
+    u = np.array(u, copy=True)
+    L = max_levels(u.shape)
+    nlevels = L if nlevels is None else nlevels
+    for step in range(nlevels - 1, -1, -1):
+        s = 2**step
+        sl = tuple(slice(None, None, s) for _ in u.shape)
+        u[sl] = recompose_step(u[sl], [np.asarray(c)[::s] for c in coords])
+    return u
+
+
+# ---------------------------------------------------------------------------
+# Coefficient classes (progressive fidelity)
+# ---------------------------------------------------------------------------
+
+
+def class_mask(shape: tuple[int, ...], nlevels: int, k: int) -> np.ndarray:
+    """Mask of nodes belonging to coefficient class ``k``.
+
+    Class 0 is the coarsest-grid nodal block (stride ``2^nlevels``); class
+    ``k`` (1..nlevels) holds the coefficients introduced when decomposing
+    the stride-``2^(nlevels-k)`` grid — i.e. nodes on that grid that are NOT
+    on the next coarser (stride-``2^(nlevels-k+1)``) grid.
+    """
+    if k == 0:
+        return _on_grid(shape, 2**nlevels)
+    return _on_grid(shape, 2 ** (nlevels - k)) & ~_on_grid(shape, 2 ** (nlevels - k + 1))
+
+
+def truncate_classes(decomposed: np.ndarray, nlevels: int, keep: int) -> np.ndarray:
+    """Zero out coefficient classes >= ``keep`` (keep classes 0..keep-1)."""
+    out = np.array(decomposed, copy=True)
+    for k in range(keep, nlevels + 1):
+        out[class_mask(out.shape, nlevels, k)] = 0
+    return out

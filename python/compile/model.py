@@ -1,0 +1,293 @@
+"""Layer-2 JAX model: multi-level decompose/recompose graphs.
+
+Composes the Layer-1 Pallas kernels (:mod:`.kernels.gpk`, ``lpk``, ``ipk``)
+into complete multigrid refactoring transforms for 1-D, 2-D, 3-D and
+3+1-D (spatiotemporal) data, exactly mirroring the reference oracle
+(:mod:`.kernels.ref`) and the Rust native core.
+
+Grid coordinates are *runtime inputs* (non-uniform grids supported): all
+derived per-level vectors (interpolation ratios, spacings, transfer
+weights, Thomas factors) are computed inside the graph from the coordinate
+arrays, so one compiled artifact serves any grid geometry of its shape.
+
+Every transform here is AOT-lowered to HLO text by :mod:`.aot` and executed
+from the Rust coordinator through PJRT — Python never runs on the request
+path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gpk, ipk, lpk
+
+# ---------------------------------------------------------------------------
+# Per-dimension vectors derived from (traced) coordinates
+# ---------------------------------------------------------------------------
+
+
+def interp_ratios(xs: jax.Array) -> jax.Array:
+    """r_j = (x_{2j+1} - x_{2j}) / (x_{2j+2} - x_{2j})."""
+    return (xs[1::2] - xs[0:-1:2]) / (xs[2::2] - xs[0:-1:2])
+
+
+def transfer_weights(xs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Hat-basis transfer weights (wl, wr) with zero boundary entries."""
+    wl = interp_ratios(xs)
+    wr = (xs[2::2] - xs[1::2]) / (xs[2::2] - xs[0:-1:2])
+    zero = jnp.zeros((1,), xs.dtype)
+    return jnp.concatenate([zero, wl]), jnp.concatenate([wr, zero])
+
+
+def thomas_factors(xs: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(sub, cp, denom) Thomas factors of the mass matrix on ``xs``.
+
+    The forward-elimination recurrence is a ``lax.scan`` so the lowered HLO
+    stays compact for long dimensions.
+    """
+    h = xs[1:] - xs[:-1]
+    m = xs.shape[0]
+    diag = jnp.concatenate(
+        [h[:1] / 3, (h[:-1] + h[1:]) / 3 if m > 2 else jnp.zeros((0,), xs.dtype), h[-1:] / 3]
+    )
+    sub = jnp.concatenate([jnp.zeros((1,), xs.dtype), h / 6])
+    sup = jnp.concatenate([h / 6, jnp.zeros((1,), xs.dtype)])
+
+    denom0 = 1.0 / diag[0]
+    cp0 = sup[0] * denom0
+
+    def fwd(carry, t):
+        diag_i, sub_i, sup_i = t
+        den = 1.0 / (diag_i - sub_i * carry)
+        cp = sup_i * den
+        return cp, (cp, den)
+
+    _, (cps, dens) = jax.lax.scan(fwd, cp0, (diag[1:], sub[1:], sup[1:]))
+    cp = jnp.concatenate([jnp.array([cp0], xs.dtype), cps])
+    denom = jnp.concatenate([jnp.array([denom0], xs.dtype), dens])
+    return sub, cp, denom
+
+
+def _spatial_even_mask(shape_b: tuple[int, ...]) -> jax.Array:
+    """All-even mask over the non-batch dims of a (B, ...) shape."""
+    mask = None
+    for d in range(1, len(shape_b)):
+        par = jax.lax.broadcasted_iota(jnp.int32, shape_b, d) % 2 == 0
+        mask = par if mask is None else mask & par
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# One level step (batched over a leading grid dimension)
+# ---------------------------------------------------------------------------
+
+
+def _correction(cf: jax.Array, coords: list[jax.Array]) -> jax.Array:
+    """z = (⊗M)^{-1} (⊗RM) cf over the selected dims of a (B, ...) block."""
+    k = len(coords)
+    f = cf
+    for d in range(k):
+        h = coords[d][1:] - coords[d][:-1]
+        wl, wr = transfer_weights(coords[d])
+        f = lpk.masstrans(f, h, wl, wr, axis=d)
+    z = f
+    for d in range(k):
+        sub, cp, denom = thomas_factors(coords[d][::2])
+        z = ipk.solve(z, sub, cp, denom, axis=d)
+    return z
+
+
+def decompose_step(vb: jax.Array, coords: list[jax.Array]) -> jax.Array:
+    """One l -> l-1 step on a batch of level views ``(B, m_0, .., m_{k-1})``."""
+    k = len(coords)
+    rs = tuple(interp_ratios(c) for c in coords)
+    c = gpk.coefficients(vb, rs)
+    cf = jnp.where(_spatial_even_mask(vb.shape), 0, c)
+    z = _correction(cf, coords)
+    evens = (slice(None),) + tuple(slice(None, None, 2) for _ in range(k))
+    return c.at[evens].add(z)
+
+
+def recompose_step(vb: jax.Array, coords: list[jax.Array]) -> jax.Array:
+    """Inverse of :func:`decompose_step`."""
+    k = len(coords)
+    cf = jnp.where(_spatial_even_mask(vb.shape), 0, vb)
+    z = _correction(cf, coords)
+    evens = (slice(None),) + tuple(slice(None, None, 2) for _ in range(k))
+    v = vb.at[evens].add(-z)
+    rs = tuple(interp_ratios(c) for c in coords)
+    return gpk.interpolate(v, rs)
+
+
+def decompose_step_axis(vb: jax.Array, xs: jax.Array, axis: int) -> jax.Array:
+    """Single-axis level step (temporal phase of spatiotemporal refactoring)."""
+    r = interp_ratios(xs)
+    c = gpk.coefficients_axis(vb, r, axis)
+    par = jax.lax.broadcasted_iota(jnp.int32, vb.shape, axis + 1) % 2 == 0
+    cf = jnp.where(par, 0, c)
+    h = xs[1:] - xs[:-1]
+    wl, wr = transfer_weights(xs)
+    f = lpk.masstrans(cf, h, wl, wr, axis=axis)
+    sub, cp, denom = thomas_factors(xs[::2])
+    z = ipk.solve(f, sub, cp, denom, axis=axis)
+    sl = [slice(None)] * vb.ndim
+    sl[axis + 1] = slice(None, None, 2)
+    return c.at[tuple(sl)].add(z)
+
+
+def recompose_step_axis(vb: jax.Array, xs: jax.Array, axis: int) -> jax.Array:
+    """Inverse of :func:`decompose_step_axis`."""
+    par = jax.lax.broadcasted_iota(jnp.int32, vb.shape, axis + 1) % 2 == 0
+    cf = jnp.where(par, 0, vb)
+    h = xs[1:] - xs[:-1]
+    wl, wr = transfer_weights(xs)
+    f = lpk.masstrans(cf, h, wl, wr, axis=axis)
+    sub, cp, denom = thomas_factors(xs[::2])
+    z = ipk.solve(f, sub, cp, denom, axis=axis)
+    sl = [slice(None)] * vb.ndim
+    sl[axis + 1] = slice(None, None, 2)
+    v = vb.at[tuple(sl)].add(-z)
+    r = interp_ratios(xs)
+    return gpk.interpolate_axis(v, r, axis)
+
+
+# ---------------------------------------------------------------------------
+# Full multi-level transforms (1-3 spatial dims)
+# ---------------------------------------------------------------------------
+
+
+def max_levels(shape: tuple[int, ...]) -> int:
+    """Number of decompose steps supported by ``shape`` (all dims 2^k+1)."""
+    levels = []
+    for n in shape:
+        if n < 3 or (n - 1) & (n - 2):
+            raise ValueError(f"dimension size {n} is not 2^k+1 with k>=1")
+        levels.append((n - 1).bit_length() - 1)
+    return min(levels)
+
+
+def decompose(u: jax.Array, *coords: jax.Array, nlevels: int | None = None) -> jax.Array:
+    """Full decomposition of a 1-3D array (interleaved layout)."""
+    d = u.ndim
+    nlevels = max_levels(u.shape) if nlevels is None else nlevels
+    for step in range(nlevels):
+        s = 2**step
+        sl = tuple(slice(None, None, s) for _ in range(d))
+        view = u[sl]
+        cview = [c[::s] for c in coords]
+        new = decompose_step(view[None], cview)[0]
+        u = u.at[sl].set(new)
+    return u
+
+
+def recompose(u: jax.Array, *coords: jax.Array, nlevels: int | None = None) -> jax.Array:
+    """Full recomposition of a 1-3D array — inverse of :func:`decompose`."""
+    d = u.ndim
+    nlevels = max_levels(u.shape) if nlevels is None else nlevels
+    for step in range(nlevels - 1, -1, -1):
+        s = 2**step
+        sl = tuple(slice(None, None, s) for _ in range(d))
+        view = u[sl]
+        cview = [c[::s] for c in coords]
+        new = recompose_step(view[None], cview)[0]
+        u = u.at[sl].set(new)
+    return u
+
+
+# ---------------------------------------------------------------------------
+# Spatiotemporal (3+1-D) transforms — paper §3.4, Figs 9/10
+# ---------------------------------------------------------------------------
+#
+# Layout is (T, Z, Y, X).  Per level: a full 3-D step on each time slice
+# (hierarchical batch: the pallas grid runs over T — Fig 10a), then a 1-D
+# step along T batched over the spatial grid (Fig 10b).  The temporal phase
+# moves T inward so Z becomes the gridded batch dimension, matching the
+# paper's "batch the first two spatial dims plus the temporal dim, grid the
+# third spatial dim".
+
+
+def st_decompose(u: jax.Array, *coords: jax.Array, nlevels: int | None = None) -> jax.Array:
+    """Spatiotemporal decomposition of a (T, Z, Y, X) array."""
+    assert u.ndim == 4
+    tc, *sc = coords
+    nlevels = max_levels(u.shape) if nlevels is None else nlevels
+    for step in range(nlevels):
+        s = 2**step
+        sl = tuple(slice(None, None, s) for _ in range(4))
+        view = u[sl]
+        cview = [c[::s] for c in sc]
+        # spatial phase: batch over time
+        view = decompose_step(view, cview)
+        # temporal phase: batch over Z, selected dims (T, Y, X), axis 0 = T
+        vt = jnp.moveaxis(view, 1, 0)
+        vt = decompose_step_axis(vt, tc[::s], axis=0)
+        view = jnp.moveaxis(vt, 0, 1)
+        u = u.at[sl].set(view)
+    return u
+
+
+def st_recompose(u: jax.Array, *coords: jax.Array, nlevels: int | None = None) -> jax.Array:
+    """Inverse of :func:`st_decompose`."""
+    assert u.ndim == 4
+    tc, *sc = coords
+    nlevels = max_levels(u.shape) if nlevels is None else nlevels
+    for step in range(nlevels - 1, -1, -1):
+        s = 2**step
+        sl = tuple(slice(None, None, s) for _ in range(4))
+        view = u[sl]
+        cview = [c[::s] for c in sc]
+        vt = jnp.moveaxis(view, 1, 0)
+        vt = recompose_step_axis(vt, tc[::s], axis=0)
+        view = jnp.moveaxis(vt, 0, 1)
+        view = recompose_step(view, cview)
+        u = u.at[sl].set(view)
+    return u
+
+
+# ---------------------------------------------------------------------------
+# AOT variant registry (consumed by aot.py and mirrored in manifest.json)
+# ---------------------------------------------------------------------------
+
+
+def _fn_for(op: str):
+    return {
+        "decompose": decompose,
+        "recompose": recompose,
+        "st_decompose": st_decompose,
+        "st_recompose": st_recompose,
+    }[op]
+
+
+def variant(op: str, shape: tuple[int, ...], dtype: str, nlevels: int | None = None):
+    """Build (name, jitted_fn, example_args) for one AOT artifact."""
+    jdt = jnp.dtype(dtype)
+    nl = max_levels(shape) if nlevels is None else nlevels
+    fn = functools.partial(_fn_for(op), nlevels=nl)
+    name = f"{op}_{'x'.join(map(str, shape))}_{dtype}_l{nl}"
+    u = jax.ShapeDtypeStruct(shape, jdt)
+    cs = [jax.ShapeDtypeStruct((n,), jdt) for n in shape]
+    return name, jax.jit(fn), (u, *cs)
+
+
+#: Variants lowered by ``make artifacts``.  Shapes are chosen so the full
+#: CPU (interpret-mode) pipeline stays fast while covering every dimension
+#: count the evaluation needs; the Rust coordinator tiles larger inputs.
+VARIANTS: list[tuple[str, tuple[int, ...], str]] = [
+    ("decompose", (4097,), "float32"),
+    ("recompose", (4097,), "float32"),
+    ("decompose", (257, 257), "float32"),
+    ("recompose", (257, 257), "float32"),
+    ("decompose", (17, 17, 17), "float32"),
+    ("recompose", (17, 17, 17), "float32"),
+    ("decompose", (33, 33, 33), "float32"),
+    ("recompose", (33, 33, 33), "float32"),
+    ("decompose", (65, 65, 65), "float32"),
+    ("recompose", (65, 65, 65), "float32"),
+    ("decompose", (33, 33, 33), "float64"),
+    ("recompose", (33, 33, 33), "float64"),
+    ("st_decompose", (5, 17, 17, 17), "float32"),
+    ("st_recompose", (5, 17, 17, 17), "float32"),
+]

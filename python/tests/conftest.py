@@ -1,0 +1,8 @@
+import pathlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

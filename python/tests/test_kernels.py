@@ -1,0 +1,198 @@
+"""Pallas kernels (L1) vs the pure-numpy oracle — the core correctness signal.
+
+Every kernel is exercised across dimension counts, batch sizes, grid
+spacings (uniform and non-uniform) and dtypes, including a hypothesis
+sweep over randomly drawn shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gpk, ipk, lpk, ref
+
+DTYPES = [np.float32, np.float64]
+
+
+def _coords(rng, n, dtype, uniform=False):
+    if uniform:
+        return np.linspace(0.0, 1.0, n, dtype=dtype)
+    x = np.sort(rng.uniform(0.0, 1.0, n)).astype(dtype)
+    x[0], x[-1] = 0.0, 1.0
+    return x
+
+
+def _tol(dtype):
+    return 1e-4 if dtype == np.float32 else 1e-11
+
+
+class TestGPK:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("shape", [(5,), (9, 5), (5, 9, 17), (33, 33)])
+    def test_coefficients_vs_ref(self, shape, dtype):
+        rng = np.random.default_rng(42)
+        coords = [_coords(rng, m, dtype) for m in shape]
+        v = rng.normal(size=shape).astype(dtype)
+        rs = tuple(jnp.asarray(ref.interp_ratios(c), dtype) for c in coords)
+        got = np.asarray(gpk.coefficients(jnp.asarray(v)[None], rs)[0])
+        want = ref.compute_coefficients(v, coords)
+        np.testing.assert_allclose(got, want, atol=_tol(dtype))
+
+    def test_batched_matches_loop(self):
+        rng = np.random.default_rng(0)
+        coords = [_coords(rng, 9, np.float64), _coords(rng, 5, np.float64)]
+        v = rng.normal(size=(4, 9, 5))
+        rs = tuple(jnp.asarray(ref.interp_ratios(c)) for c in coords)
+        got = np.asarray(gpk.coefficients(jnp.asarray(v), rs))
+        for b in range(4):
+            want = ref.compute_coefficients(v[b], coords)
+            np.testing.assert_allclose(got[b], want, atol=1e-12)
+
+    def test_interpolate_inverts_coefficients(self):
+        rng = np.random.default_rng(1)
+        coords = [_coords(rng, 17, np.float64)] * 2
+        v = rng.normal(size=(1, 17, 17))
+        rs = tuple(jnp.asarray(ref.interp_ratios(c)) for c in coords)
+        c = gpk.coefficients(jnp.asarray(v), rs)
+        back = np.asarray(gpk.interpolate(c, rs))
+        np.testing.assert_allclose(back, v, atol=1e-12)
+
+    def test_axis_variant_vs_ref(self):
+        rng = np.random.default_rng(2)
+        xs = _coords(rng, 9, np.float64)
+        v = rng.normal(size=(3, 9, 4, 5))  # batch=3, selected dims (9,4,5), axis 0
+        r = jnp.asarray(ref.interp_ratios(xs))
+        got = np.asarray(gpk.coefficients_axis(jnp.asarray(v), r, axis=0))
+        # reference: odd slices along that axis minus 1D interp of even slices
+        want = v.copy()
+        up = ref.upsample1d(v[:, ::2], np.asarray(r), 1)
+        want[:, 1::2] = v[:, 1::2] - up[:, 1::2]
+        np.testing.assert_allclose(got, want, atol=1e-12)
+        back = np.asarray(gpk.interpolate_axis(jnp.asarray(got), r, axis=0))
+        np.testing.assert_allclose(back, v, atol=1e-12)
+
+    def test_uniform_grid_midpoint_average(self):
+        # On a uniform grid the interpolant is the midpoint average.
+        xs = np.linspace(0, 1, 9)
+        v = np.random.default_rng(3).normal(size=9)
+        r = jnp.asarray(ref.interp_ratios(xs))
+        got = np.asarray(gpk.coefficients(jnp.asarray(v)[None], (r,))[0])
+        np.testing.assert_allclose(
+            got[1::2], v[1::2] - 0.5 * (v[0:-2:2] + v[2::2]), atol=1e-12
+        )
+
+
+class TestLPK:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("axis", [0, 1, 2])
+    def test_masstrans_vs_ref_3d(self, axis, dtype):
+        rng = np.random.default_rng(axis)
+        shape = (9, 5, 17)
+        coords = [_coords(rng, m, dtype) for m in shape]
+        c = rng.normal(size=shape).astype(dtype)
+        xs = coords[axis]
+        h = jnp.asarray(np.diff(xs))
+        wl, wr = (jnp.asarray(w) for w in ref.transfer_weights(xs))
+        got = np.asarray(lpk.masstrans(jnp.asarray(c)[None], h, wl, wr, axis)[0])
+        want = ref.masstrans1d(c, xs, axis)
+        np.testing.assert_allclose(got, want, atol=_tol(dtype), rtol=1e-5)
+
+    def test_1d_smallest(self):
+        xs = np.array([0.0, 0.4, 1.0])
+        c = np.array([0.0, 2.0, 0.0])  # single coefficient
+        h = jnp.asarray(np.diff(xs))
+        wl, wr = (jnp.asarray(w) for w in ref.transfer_weights(xs))
+        got = np.asarray(lpk.masstrans(jnp.asarray(c)[None], h, wl, wr, 0)[0])
+        np.testing.assert_allclose(got, ref.masstrans1d(c, xs, 0), atol=1e-12)
+
+    def test_batched(self):
+        rng = np.random.default_rng(9)
+        xs = _coords(rng, 17, np.float64)
+        c = rng.normal(size=(5, 17, 3))
+        h = jnp.asarray(np.diff(xs))
+        wl, wr = (jnp.asarray(w) for w in ref.transfer_weights(xs))
+        got = np.asarray(lpk.masstrans(jnp.asarray(c), h, wl, wr, 0))
+        for b in range(5):
+            np.testing.assert_allclose(got[b], ref.masstrans1d(c[b], xs, 0), atol=1e-12)
+
+
+class TestIPK:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("axis", [0, 1])
+    def test_solve_vs_ref(self, axis, dtype):
+        rng = np.random.default_rng(10 + axis)
+        shape = (9, 17)
+        coords = [_coords(rng, m, dtype) for m in shape]
+        f = rng.normal(size=shape).astype(dtype)
+        xs = coords[axis]
+        sub, cp, denom = (jnp.asarray(a) for a in ref.thomas_factors(xs))
+        got = np.asarray(ipk.solve(jnp.asarray(f)[None], sub, cp, denom, axis)[0])
+        want = ref.thomas_solve1d(f, xs, axis)
+        np.testing.assert_allclose(got, want, atol=_tol(dtype), rtol=1e-4)
+
+    def test_solve_verifies_against_mass_apply(self):
+        """M (solve(f)) == f — checks the factors, not just ref-agreement."""
+        rng = np.random.default_rng(11)
+        xs = _coords(rng, 33, np.float64)
+        f = rng.normal(size=(1, 33, 5))
+        sub, cp, denom = (jnp.asarray(a) for a in ref.thomas_factors(xs))
+        z = np.asarray(ipk.solve(jnp.asarray(f), sub, cp, denom, 0)[0])
+        np.testing.assert_allclose(ref.mass_apply1d(z, xs, 0), f[0], atol=1e-10)
+
+    def test_two_node_system(self):
+        xs = np.array([0.0, 1.0])
+        f = np.array([1.0, 2.0])
+        sub, cp, denom = (jnp.asarray(a) for a in ref.thomas_factors(xs))
+        z = np.asarray(ipk.solve(jnp.asarray(f)[None], sub, cp, denom, 0)[0])
+        M = np.array([[1 / 3, 1 / 6], [1 / 6, 1 / 3]])
+        np.testing.assert_allclose(M @ z, f, atol=1e-12)
+
+
+SIZE = st.sampled_from([3, 5, 9, 17])
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        dims=st.lists(SIZE, min_size=1, max_size=3),
+        dtype=st.sampled_from(DTYPES),
+        uniform=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_gpk_any_shape(self, dims, dtype, uniform, seed):
+        rng = np.random.default_rng(seed)
+        shape = tuple(dims)
+        coords = [_coords(rng, m, dtype, uniform) for m in shape]
+        v = rng.normal(size=shape).astype(dtype)
+        rs = tuple(jnp.asarray(ref.interp_ratios(c), dtype) for c in coords)
+        got = np.asarray(gpk.coefficients(jnp.asarray(v)[None], rs)[0])
+        want = ref.compute_coefficients(v, coords)
+        np.testing.assert_allclose(got, want, atol=_tol(dtype), rtol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        dims=st.lists(SIZE, min_size=1, max_size=3),
+        axis_seed=st.integers(0, 100),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**16),
+    )
+    def test_lpk_ipk_any_shape(self, dims, axis_seed, dtype, seed):
+        rng = np.random.default_rng(seed)
+        shape = tuple(dims)
+        axis = axis_seed % len(shape)
+        coords = [_coords(rng, m, dtype) for m in shape]
+        c = rng.normal(size=shape).astype(dtype)
+        xs = coords[axis]
+        h = jnp.asarray(np.diff(xs))
+        wl, wr = (jnp.asarray(w) for w in ref.transfer_weights(xs))
+        f = lpk.masstrans(jnp.asarray(c)[None], h, wl, wr, axis)
+        np.testing.assert_allclose(
+            np.asarray(f[0]), ref.masstrans1d(c, xs, axis), atol=_tol(dtype), rtol=1e-4
+        )
+        xc = xs[::2]
+        sub, cp, denom = (jnp.asarray(a) for a in ref.thomas_factors(xc))
+        z = np.asarray(ipk.solve(f, sub, cp, denom, axis)[0])
+        want = ref.thomas_solve1d(np.asarray(f[0]), xc, axis)
+        np.testing.assert_allclose(z, want, atol=_tol(dtype) * 10, rtol=1e-3)

@@ -1,0 +1,131 @@
+"""L2 model (kernel-composed JAX graphs) vs the oracle, plus AOT sanity."""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def _coords(rng, n, dtype=np.float64):
+    x = np.sort(rng.uniform(0.0, 1.0, n)).astype(dtype)
+    x[0], x[-1] = 0.0, 1.0
+    return x
+
+
+class TestLevelStep:
+    @pytest.mark.parametrize("shape", [(5,), (9, 17), (5, 9, 17), (17, 17)])
+    def test_decompose_step_vs_ref(self, shape):
+        rng = np.random.default_rng(sum(shape))
+        coords = [_coords(rng, m) for m in shape]
+        u = rng.normal(size=shape)
+        want = ref.decompose_step(u, coords)
+        got = np.asarray(
+            model.decompose_step(jnp.asarray(u)[None], [jnp.asarray(c) for c in coords])[0]
+        )
+        np.testing.assert_allclose(got, want, atol=1e-11)
+
+    @pytest.mark.parametrize("shape", [(5,), (9, 17), (5, 9, 17)])
+    def test_recompose_step_inverts(self, shape):
+        rng = np.random.default_rng(1 + sum(shape))
+        coords = [jnp.asarray(_coords(rng, m)) for m in shape]
+        u = jnp.asarray(rng.normal(size=shape))[None]
+        d = model.decompose_step(u, list(coords))
+        r = model.recompose_step(d, list(coords))
+        np.testing.assert_allclose(np.asarray(r), np.asarray(u), atol=1e-10)
+
+
+class TestFullTransforms:
+    @pytest.mark.parametrize("shape", [(33,), (17, 9), (9, 9, 9)])
+    def test_decompose_vs_ref(self, shape):
+        rng = np.random.default_rng(7)
+        coords = [_coords(rng, m) for m in shape]
+        u = rng.normal(size=shape)
+        want = ref.decompose(u, coords)
+        got = np.asarray(model.decompose(jnp.asarray(u), *[jnp.asarray(c) for c in coords]))
+        np.testing.assert_allclose(got, want, atol=1e-10)
+
+    @pytest.mark.parametrize("shape", [(33,), (17, 9), (9, 9, 9)])
+    def test_roundtrip(self, shape):
+        rng = np.random.default_rng(8)
+        coords = [jnp.asarray(_coords(rng, m)) for m in shape]
+        u = jnp.asarray(rng.normal(size=shape))
+        d = model.decompose(u, *coords)
+        r = np.asarray(model.recompose(d, *coords))
+        np.testing.assert_allclose(r, np.asarray(u), atol=1e-9)
+
+    def test_float32_roundtrip_tolerance(self):
+        rng = np.random.default_rng(9)
+        shape = (17, 17, 17)
+        coords = [jnp.asarray(np.linspace(0, 1, m, dtype=np.float32)) for m in shape]
+        u = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        d = model.decompose(u, *coords)
+        r = np.asarray(model.recompose(d, *coords))
+        np.testing.assert_allclose(r, np.asarray(u), atol=1e-4)
+
+
+class TestSpatiotemporal:
+    def test_roundtrip(self):
+        rng = np.random.default_rng(10)
+        shape = (5, 9, 9, 9)
+        coords = [jnp.asarray(_coords(rng, m)) for m in shape]
+        u = jnp.asarray(rng.normal(size=shape))
+        d = model.st_decompose(u, *coords)
+        r = np.asarray(model.st_recompose(d, *coords))
+        np.testing.assert_allclose(r, np.asarray(u), atol=1e-9)
+
+    def test_temporal_phase_batches_over_space(self):
+        """Temporal step must equal per-spatial-column 1D decompose steps."""
+        rng = np.random.default_rng(11)
+        tc = _coords(rng, 5)
+        v = rng.normal(size=(5, 3, 4, 2))
+        vt = jnp.moveaxis(jnp.asarray(v), 1, 0)  # (Z=3, T=5, 4, 2)
+        got = np.moveaxis(
+            np.asarray(model.decompose_step_axis(vt, jnp.asarray(tc), axis=0)), 0, 1
+        )
+        for z in range(3):
+            for y in range(4):
+                for x in range(2):
+                    want = ref.decompose_step(v[:, z, y, x], [tc])
+                    np.testing.assert_allclose(got[:, z, y, x], want, atol=1e-11)
+
+    def test_constant_in_time_gives_zero_temporal_coeffs(self):
+        rng = np.random.default_rng(12)
+        sl = rng.normal(size=(9, 9, 9))
+        u = jnp.asarray(np.broadcast_to(sl, (5, 9, 9, 9)).copy())
+        coords = [jnp.asarray(np.linspace(0, 1, m)) for m in (5, 9, 9, 9)]
+        d = np.asarray(model.st_decompose(u, *coords))
+        # odd time slices hold pure temporal coefficients -> all zero
+        np.testing.assert_allclose(d[1::2], 0, atol=1e-10)
+
+
+class TestAOTArtifacts:
+    def test_manifest_exists_and_complete(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        names = {v["name"] for v in manifest["variants"]}
+        assert len(names) == len(model.VARIANTS)
+        for op, shape, dtype in model.VARIANTS:
+            nl = model.max_levels(shape)
+            assert f"{op}_{'x'.join(map(str, shape))}_{dtype}_l{nl}" in names
+        for v in manifest["variants"]:
+            assert (ARTIFACTS / v["file"]).exists()
+
+    def test_hlo_text_parses_as_module(self):
+        manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+        v = manifest["variants"][0]
+        text = (ARTIFACTS / v["file"]).read_text()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_variant_builder_signature(self):
+        name, fn, args = model.variant("decompose", (9, 9), "float32")
+        assert name == "decompose_9x9_float32_l3"
+        assert len(args) == 3  # u + 2 coords
+        out = fn.lower(*args)
+        assert out is not None

@@ -1,0 +1,203 @@
+"""Tests of the pure-numpy oracle itself: mathematical invariants.
+
+The oracle must be unimpeachable — everything else (Pallas kernels, JAX
+model, Rust core) is validated against it, so we validate it against
+*dense linear algebra* and closed-form properties here.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def _coords(rng, n):
+    x = np.sort(rng.uniform(0.0, 1.0, n))
+    x[0], x[-1] = 0.0, 1.0
+    return x
+
+
+def _mass_dense(xs):
+    h = np.diff(xs)
+    m = len(xs)
+    M = np.zeros((m, m))
+    for i in range(m):
+        if i > 0:
+            M[i, i - 1] = h[i - 1] / 6
+            M[i, i] += h[i - 1] / 3
+        if i < m - 1:
+            M[i, i + 1] = h[i] / 6
+            M[i, i] += h[i] / 3
+    return M
+
+
+def _transfer_dense(xs):
+    a = (len(xs) - 1) // 2
+    wl, wr = ref.transfer_weights(xs)
+    R = np.zeros((a + 1, len(xs)))
+    for i in range(a + 1):
+        R[i, 2 * i] = 1.0
+        if i > 0:
+            R[i, 2 * i - 1] = wl[i]
+        if i < a:
+            R[i, 2 * i + 1] = wr[i]
+    return R
+
+
+class TestPrimitives:
+    @pytest.mark.parametrize("n", [3, 5, 9, 17, 65])
+    def test_mass_apply_matches_dense(self, n):
+        rng = np.random.default_rng(n)
+        xs = _coords(rng, n)
+        v = rng.normal(size=n)
+        want = _mass_dense(xs) @ v
+        got = ref.mass_apply1d(v, xs, 0)
+        np.testing.assert_allclose(got, want, atol=1e-12)
+
+    @pytest.mark.parametrize("n", [3, 5, 9, 33])
+    def test_restrict_matches_dense(self, n):
+        rng = np.random.default_rng(n)
+        xs = _coords(rng, n)
+        v = rng.normal(size=n)
+        np.testing.assert_allclose(
+            ref.restrict1d(v, xs, 0), _transfer_dense(xs) @ v, atol=1e-12
+        )
+
+    @pytest.mark.parametrize("n", [3, 5, 9, 33])
+    def test_masstrans_is_fused_mass_restrict(self, n):
+        rng = np.random.default_rng(n)
+        xs = _coords(rng, n)
+        v = rng.normal(size=n)
+        np.testing.assert_allclose(
+            ref.masstrans1d(v, xs, 0),
+            ref.restrict1d(ref.mass_apply1d(v, xs, 0), xs, 0),
+            atol=1e-12,
+        )
+
+    @pytest.mark.parametrize("n", [2, 3, 5, 9, 17])
+    def test_thomas_solves_mass_system(self, n):
+        rng = np.random.default_rng(n)
+        xs = _coords(rng, n)
+        f = rng.normal(size=n)
+        z = ref.thomas_solve1d(f, xs, 0)
+        np.testing.assert_allclose(_mass_dense(xs) @ z, f, atol=1e-10)
+
+    def test_mass_apply_batched_axis(self):
+        rng = np.random.default_rng(7)
+        xs = _coords(rng, 9)
+        v = rng.normal(size=(4, 9, 3))
+        got = ref.mass_apply1d(v, xs, 1)
+        for i in range(4):
+            for j in range(3):
+                np.testing.assert_allclose(
+                    got[i, :, j], _mass_dense(xs) @ v[i, :, j], atol=1e-12
+                )
+
+    def test_upsample_preserves_coarse(self):
+        rng = np.random.default_rng(3)
+        xs = _coords(rng, 9)
+        c = rng.normal(size=5)
+        up = ref.upsample1d(c, ref.interp_ratios(xs), 0)
+        np.testing.assert_allclose(up[::2], c)
+
+
+class TestProjectionProperty:
+    """Decomposed coarse values must equal the nodal values of Q_{l-1}u."""
+
+    @pytest.mark.parametrize("n", [5, 9, 17, 33])
+    def test_1d(self, n):
+        rng = np.random.default_rng(n)
+        xs = _coords(rng, n)
+        u = rng.normal(size=n)
+        out = ref.decompose_step(u, [xs])
+        Mf, Mc = _mass_dense(xs), _mass_dense(xs[::2])
+        R = _transfer_dense(xs)
+        qc = np.linalg.solve(Mc, R @ Mf @ u)
+        np.testing.assert_allclose(out[::2], qc, atol=1e-10)
+
+    def test_2d_tensor_product(self):
+        rng = np.random.default_rng(0)
+        shape = (9, 5)
+        coords = [_coords(rng, m) for m in shape]
+        u = rng.normal(size=shape)
+        out = ref.decompose_step(u, coords)
+        # dense tensor-product projection
+        M = [np.kron(_mass_dense(coords[0]), _mass_dense(coords[1]))]
+        Mc = np.kron(_mass_dense(coords[0][::2]), _mass_dense(coords[1][::2]))
+        R = np.kron(_transfer_dense(coords[0]), _transfer_dense(coords[1]))
+        qc = np.linalg.solve(Mc, R @ M[0] @ u.ravel())
+        np.testing.assert_allclose(out[::2, ::2].ravel(), qc, atol=1e-10)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize(
+        "shape",
+        [(3,), (5,), (17,), (129,), (3, 3), (5, 9), (17, 17), (3, 5, 9), (9, 9, 9), (5, 5, 5, 5)],
+    )
+    def test_decompose_recompose_identity(self, shape):
+        rng = np.random.default_rng(hash(shape) % 2**31)
+        coords = [_coords(rng, m) for m in shape]
+        u = rng.normal(size=shape)
+        d = ref.decompose(u, coords)
+        r = ref.recompose(d, coords)
+        np.testing.assert_allclose(r, u, atol=1e-9)
+
+    @pytest.mark.parametrize("nlevels", [0, 1, 2])
+    def test_partial_levels(self, nlevels):
+        rng = np.random.default_rng(5)
+        coords = [_coords(rng, 17)] * 2
+        u = rng.normal(size=(17, 17))
+        d = ref.decompose(u, coords, nlevels)
+        r = ref.recompose(d, coords, nlevels)
+        np.testing.assert_allclose(r, u, atol=1e-10)
+
+
+class TestStructure:
+    def test_multilinear_data_zero_coefficients(self):
+        n = 17
+        xs = np.linspace(0, 1, n)
+        X, Y = np.meshgrid(xs, xs, indexing="ij")
+        u = 2.0 * X - 3.0 * Y + 0.5
+        d = ref.decompose_step(u, [xs, xs])
+        assert np.allclose(d[1::2, :], 0, atol=1e-12)
+        assert np.allclose(d[:, 1::2], 0, atol=1e-12)
+        np.testing.assert_allclose(d[::2, ::2], u[::2, ::2], atol=1e-12)
+
+    def test_class_masks_partition_domain(self):
+        shape = (17, 33)
+        L = ref.max_levels(shape)
+        total = np.zeros(shape, dtype=int)
+        for k in range(L + 1):
+            total += ref.class_mask(shape, L, k).astype(int)
+        assert (total == 1).all()
+
+    def test_class_sizes_grow_geometrically(self):
+        shape = (33, 33)
+        L = ref.max_levels(shape)
+        sizes = [ref.class_mask(shape, L, k).sum() for k in range(L + 1)]
+        assert sizes[0] == 4  # 2x2 coarsest corner grid
+        for k in range(1, L):
+            assert sizes[k + 1] > sizes[k]
+
+    def test_progressive_error_monotone(self):
+        n = 33
+        xs = np.linspace(0, 1, n)
+        X, Y = np.meshgrid(xs, xs, indexing="ij")
+        u = np.sin(3 * X) * np.cos(2 * Y) + 0.5 * X * Y
+        coords = [xs, xs]
+        L = ref.max_levels(u.shape)
+        d = ref.decompose(u, coords)
+        errs = []
+        for keep in range(L + 2):
+            r = ref.recompose(ref.truncate_classes(d, L, keep), coords)
+            errs.append(np.sqrt(np.mean((r - u) ** 2)))
+        assert all(errs[i + 1] <= errs[i] + 1e-12 for i in range(len(errs) - 1))
+        assert errs[-1] < 1e-12  # all classes => lossless
+
+    def test_max_levels_validation(self):
+        with pytest.raises(ValueError):
+            ref.max_levels((6,))
+        with pytest.raises(ValueError):
+            ref.max_levels((2,))
+        assert ref.max_levels((5, 17)) == 2
+        assert ref.max_levels((513,)) == 9

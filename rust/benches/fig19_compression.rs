@@ -1,0 +1,50 @@
+//! Fig 19 bench: MGARD compression stage timings (CPU vs optimized path)
+//! across error bounds, on real Gray-Scott data.
+
+use mgr::compress::{Codec, MgardCompressor};
+use mgr::grid::Hierarchy;
+use mgr::sim::GrayScott;
+use mgr::util::bench::{bench_auto, report};
+use mgr::util::stats::value_range;
+
+fn main() {
+    println!("== Fig 19 (host): compression pipeline stage timings ==");
+    let n = 65;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(120);
+    let field = sim.v_field();
+    let range = value_range(field.data());
+    let h = Hierarchy::uniform(field.shape());
+
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        for rel in [1e-2, 1e-3, 1e-4] {
+            let eb = rel * range;
+            let mut c = MgardCompressor::new(h.clone(), codec);
+            let mut blob = None;
+            let m = bench_auto(
+                &format!("compress {n}^3 eb={rel:.0e} {}", codec.name()),
+                0.6,
+                || {
+                    blob = Some(c.compress(&field, eb).unwrap());
+                },
+            );
+            report(&m, Some(field.nbytes()));
+            let blob = blob.unwrap();
+            println!(
+                "    ratio {:>6.1}x | decompose {:>6.1} ms, quantize {:>5.1} ms, encode {:>6.1} ms",
+                blob.ratio(),
+                c.stats.decompose_s * 1e3,
+                c.stats.quantize_s * 1e3,
+                c.stats.encode_s * 1e3
+            );
+            let m = bench_auto(
+                &format!("decompress {n}^3 eb={rel:.0e} {}", codec.name()),
+                0.6,
+                || {
+                    let _ = c.decompress(&blob).unwrap();
+                },
+            );
+            report(&m, Some(field.nbytes()));
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Runtime bench: PJRT artifact execution vs the native core.
+//!
+//! Measures the L3 hot path: executing the AOT-compiled (L1 Pallas +
+//! L2 JAX) decompose through the `xla` crate, including the
+//! literal-marshalling overhead, against the native Rust implementation
+//! of the same transform. Requires `make artifacts`.
+
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::Refactorer;
+use mgr::runtime::EngineHandle;
+use mgr::util::bench::{bench_auto, report};
+use mgr::util::rng::Rng;
+
+fn main() {
+    println!("== runtime: PJRT artifact execution vs native core ==");
+    let engine = match EngineHandle::spawn("artifacts".into()) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipped: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    for (shape, dtype) in [
+        (vec![17usize, 17, 17], "float32"),
+        (vec![33, 33, 33], "float32"),
+        (vec![65, 65, 65], "float32"),
+    ] {
+        let Some(name) = engine.find("decompose", &shape, dtype).unwrap() else {
+            continue;
+        };
+        engine.warm(&name).unwrap();
+        let h = Hierarchy::uniform(&shape);
+        let coords = h.coords().to_vec();
+        let mut rng = Rng::new(2);
+        let t = Tensor::from_fn(&shape, |_| rng.normal() as f32);
+        let bytes = t.nbytes();
+
+        let m = bench_auto(&format!("pjrt {name}"), 0.6, || {
+            let _ = engine.run(&name, &t, &coords).unwrap();
+        });
+        report(&m, Some(bytes));
+
+        let mut r = Refactorer::<f32>::new(h.clone());
+        let mut buf = t.clone();
+        let m2 = bench_auto(&format!("native f32 {:?}", shape), 0.6, || {
+            buf.data_mut().copy_from_slice(t.data());
+            r.decompose(&mut buf);
+        });
+        report(&m2, Some(bytes));
+        println!(
+            "  PJRT/native time ratio: {:.1}x (interpret-mode Pallas HLO; structure, not TPU perf)",
+            m.median_s / m2.median_s
+        );
+    }
+}

@@ -1,0 +1,325 @@
+//! The state-of-the-art (pre-paper) refactoring design, used as baseline.
+//!
+//! This mirrors the MGARD implementation the paper compares against
+//! (its §2.2 "existing GPU-based data refactoring" and the SOTA-CPU MPI
+//! code): numerically identical results to [`crate::refactor::Refactorer`]
+//! (asserted by tests), but built the *pre-optimization* way:
+//!
+//! * **no reordered layout** — every level operates on the strided view of
+//!   the full array in place, so memory accesses stride by `2^step`
+//!   (the coalescing problem of §3.3);
+//! * **no mass-trans fusion** — mass multiply and basis transfer are two
+//!   separate passes with a materialized intermediate (the out-of-place
+//!   memory-footprint dilemma of §3.1.2);
+//! * **explicit copy-to-workspace** before the correction (the copy the
+//!   paper's kernel fusion removes);
+//! * **vector-wise processing** — every 1-D line is gathered, processed
+//!   element-at-a-time with per-node-type branching (the thread-divergence
+//!   analog of Fig 5's "existing kernel"), and scattered back; no batched
+//!   inner-lane vectorization.
+
+use crate::grid::{row_major_strides, Hierarchy, Tensor};
+use crate::refactor::DimOps;
+use crate::util::Scalar;
+
+/// Baseline multi-level refactoring engine (slow path, same math).
+pub struct BaselineRefactorer<T> {
+    hierarchy: Hierarchy,
+    ops: Vec<Vec<DimOps<T>>>,
+}
+
+impl<T: Scalar> BaselineRefactorer<T> {
+    pub fn new(hierarchy: Hierarchy) -> Self {
+        let ops = (0..hierarchy.nlevels())
+            .map(|step| {
+                hierarchy
+                    .level_coords(step)
+                    .iter()
+                    .map(|c| DimOps::new(c))
+                    .collect()
+            })
+            .collect();
+        BaselineRefactorer { hierarchy, ops }
+    }
+
+    pub fn decompose(&self, t: &mut Tensor<T>) {
+        assert_eq!(t.shape(), self.hierarchy.shape());
+        for step in 0..self.hierarchy.nlevels() {
+            self.decompose_step(t, step);
+        }
+    }
+
+    pub fn recompose(&self, t: &mut Tensor<T>) {
+        assert_eq!(t.shape(), self.hierarchy.shape());
+        for step in (0..self.hierarchy.nlevels()).rev() {
+            self.recompose_step(t, step);
+        }
+    }
+
+    // -- strided view helpers ------------------------------------------------
+
+    fn view_shape(&self, step: usize) -> Vec<usize> {
+        self.hierarchy.level_shape(step)
+    }
+
+    /// Offset of a view multi-index in the full array.
+    fn voff(&self, idx: &[usize], s: usize) -> usize {
+        let strides = row_major_strides(self.hierarchy.shape());
+        idx.iter().zip(&strides).map(|(&i, st)| i * s * st).sum()
+    }
+
+    fn each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
+        let d = shape.len();
+        let mut idx = vec![0usize; d];
+        let total: usize = shape.iter().product();
+        for _ in 0..total {
+            f(&idx);
+            for dd in (0..d).rev() {
+                idx[dd] += 1;
+                if idx[dd] < shape[dd] {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+    }
+
+    /// GPK baseline: per-node branching on the interpolation type
+    /// (linear / bilinear / trilinear), reading through the strided view.
+    fn coefficients(&self, t: &mut Tensor<T>, step: usize, forward: bool) {
+        let s = self.hierarchy.step_stride(step);
+        let vshape = self.view_shape(step);
+        let ops = &self.ops[step];
+        let d = vshape.len();
+        let snapshot = t.data().to_vec(); // sources are even nodes only, but
+                                          // the baseline copies everything
+        let data = t.data_mut();
+        let strides = row_major_strides(self.hierarchy.shape());
+        Self::each_index(&vshape, |idx| {
+            let odd_dims: Vec<usize> = (0..d).filter(|&dd| idx[dd] % 2 == 1).collect();
+            if odd_dims.is_empty() {
+                return;
+            }
+            // multilinear interpolation over the odd dims' corner nodes
+            let mut interp = T::ZERO;
+            let ncorners = 1usize << odd_dims.len();
+            for corner in 0..ncorners {
+                let mut w = T::ONE;
+                let mut off = 0usize;
+                for (b, &dd) in odd_dims.iter().enumerate() {
+                    let j = (idx[dd] - 1) / 2;
+                    let r = ops[dd].r[j];
+                    let hi = (corner >> b) & 1 == 1;
+                    w = w * if hi { r } else { T::ONE - r };
+                    let node = if hi { idx[dd] + 1 } else { idx[dd] - 1 };
+                    off += node * s * strides[dd];
+                }
+                for dd in 0..d {
+                    if idx[dd] % 2 == 0 {
+                        off += idx[dd] * s * strides[dd];
+                    }
+                }
+                interp = w.mul_add(snapshot[off], interp);
+            }
+            let off: usize = idx
+                .iter()
+                .zip(&strides)
+                .map(|(&i, st)| i * s * st)
+                .sum();
+            if forward {
+                data[off] -= interp;
+            } else {
+                data[off] += interp;
+            }
+        });
+    }
+
+    /// Correction via unfused passes with materialized intermediates.
+    fn correction(&self, t: &Tensor<T>, step: usize) -> Vec<T> {
+        let s = self.hierarchy.step_stride(step);
+        let vshape = self.view_shape(step);
+        let ops = &self.ops[step];
+        let d = vshape.len();
+
+        // explicit copy-to-workspace (the pass the paper fuses away):
+        // gather the coefficient field from the strided view
+        let mut work: Vec<T> = Vec::with_capacity(vshape.iter().product());
+        Self::each_index(&vshape, |idx| {
+            let all_even = idx.iter().all(|&i| i % 2 == 0);
+            let off = self.voff(idx, s);
+            work.push(if all_even { T::ZERO } else { t.data()[off] });
+        });
+
+        let mut cur_shape = vshape.clone();
+        let mut cur = work;
+        for k in 0..d {
+            // pass 1: mass multiply (full-size intermediate)
+            let (outer, m, inner) = crate::refactor::axis::axis_split(&cur_shape, k);
+            let o = &ops[k];
+            let mut massed = vec![T::ZERO; cur.len()];
+            for ou in 0..outer {
+                for e in 0..inner {
+                    // gather one vector (vector-wise processing)
+                    let mut line = vec![T::ZERO; m];
+                    for i in 0..m {
+                        line[i] = cur[(ou * m + i) * inner + e];
+                    }
+                    let h = &o.h;
+                    let third = T::from_f64(1.0 / 3.0);
+                    let sixth = T::from_f64(1.0 / 6.0);
+                    for i in 0..m {
+                        let v = if i == 0 {
+                            h[0] * third * line[0] + h[0] * sixth * line[1]
+                        } else if i == m - 1 {
+                            h[m - 2] * third * line[m - 1] + h[m - 2] * sixth * line[m - 2]
+                        } else {
+                            h[i - 1] * sixth * line[i - 1]
+                                + (h[i - 1] + h[i]) * third * line[i]
+                                + h[i] * sixth * line[i + 1]
+                        };
+                        massed[(ou * m + i) * inner + e] = v;
+                    }
+                }
+            }
+            // pass 2: basis transfer (second full pass + new buffer)
+            let mc = (m + 1) / 2;
+            let mut restricted = vec![T::ZERO; outer * mc * inner];
+            for ou in 0..outer {
+                for e in 0..inner {
+                    for i in 0..mc {
+                        let mut acc = massed[(ou * m + 2 * i) * inner + e];
+                        if i > 0 {
+                            acc = acc + o.wl[i] * massed[(ou * m + 2 * i - 1) * inner + e];
+                        }
+                        if i < mc - 1 {
+                            acc = acc + o.wr[i] * massed[(ou * m + 2 * i + 1) * inner + e];
+                        }
+                        restricted[(ou * mc + i) * inner + e] = acc;
+                    }
+                }
+            }
+            cur = restricted;
+            cur_shape[k] = mc;
+        }
+
+        // Thomas, one gathered vector at a time
+        for k in 0..d {
+            let (outer, m, inner) = crate::refactor::axis::axis_split(&cur_shape, k);
+            let o = &ops[k];
+            for ou in 0..outer {
+                for e in 0..inner {
+                    let mut line = vec![T::ZERO; m];
+                    for i in 0..m {
+                        line[i] = cur[(ou * m + i) * inner + e];
+                    }
+                    line[0] = line[0] * o.denom[0];
+                    for i in 1..m {
+                        line[i] = ((-o.sub[i]).mul_add(line[i - 1], line[i])) * o.denom[i];
+                    }
+                    for i in (0..m - 1).rev() {
+                        line[i] = (-o.cp[i]).mul_add(line[i + 1], line[i]);
+                    }
+                    for i in 0..m {
+                        cur[(ou * m + i) * inner + e] = line[i];
+                    }
+                }
+            }
+        }
+        cur
+    }
+
+    fn apply_correction(&self, t: &mut Tensor<T>, step: usize, z: &[T], sign: T) {
+        let s = self.hierarchy.step_stride(step) * 2;
+        let cshape: Vec<usize> = self
+            .view_shape(step)
+            .iter()
+            .map(|&m| (m + 1) / 2)
+            .collect();
+        let strides = row_major_strides(self.hierarchy.shape());
+        let mut zi = 0usize;
+        Self::each_index(&cshape, |idx| {
+            let off: usize = idx.iter().zip(&strides).map(|(&i, st)| i * s * st).sum();
+            let v = &mut t.data_mut()[off];
+            *v = sign.mul_add(z[zi], *v);
+            zi += 1;
+        });
+    }
+
+    fn decompose_step(&self, t: &mut Tensor<T>, step: usize) {
+        self.coefficients(t, step, true);
+        let z = self.correction(t, step);
+        self.apply_correction(t, step, &z, T::ONE);
+    }
+
+    fn recompose_step(&self, t: &mut Tensor<T>, step: usize) {
+        let z = self.correction(t, step);
+        self.apply_correction(t, step, &z, -T::ONE);
+        self.coefficients(t, step, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::refactor::Refactorer;
+    use crate::util::rng::Rng;
+    use crate::util::stats::linf;
+
+    #[test]
+    fn baseline_matches_optimized_2d() {
+        let shape = [17usize, 9];
+        let mut rng = Rng::new(20);
+        let coords: Vec<Vec<f64>> = shape.iter().map(|&m| rng.coords(m)).collect();
+        let h = Hierarchy::new(&shape, coords, None);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+
+        let mut a = orig.clone();
+        BaselineRefactorer::new(h.clone()).decompose(&mut a);
+        let mut b = orig.clone();
+        Refactorer::new(h).decompose(&mut b);
+        assert!(
+            linf(a.data(), b.data()) < 1e-11,
+            "baseline and optimized disagree: {}",
+            linf(a.data(), b.data())
+        );
+    }
+
+    #[test]
+    fn baseline_matches_optimized_3d() {
+        let shape = [9usize, 5, 9];
+        let mut rng = Rng::new(21);
+        let h = Hierarchy::uniform(&shape);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+        let mut a = orig.clone();
+        BaselineRefactorer::new(h.clone()).decompose(&mut a);
+        let mut b = orig.clone();
+        Refactorer::new(h).decompose(&mut b);
+        assert!(linf(a.data(), b.data()) < 1e-11);
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let shape = [17usize, 17];
+        let mut rng = Rng::new(22);
+        let h = Hierarchy::uniform(&shape);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+        let mut t = orig.clone();
+        let b = BaselineRefactorer::new(h);
+        b.decompose(&mut t);
+        b.recompose(&mut t);
+        assert!(linf(t.data(), orig.data()) < 1e-11);
+    }
+
+    #[test]
+    fn baseline_1d_matches() {
+        let shape = [33usize];
+        let mut rng = Rng::new(23);
+        let h = Hierarchy::uniform(&shape);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+        let mut a = orig.clone();
+        BaselineRefactorer::new(h.clone()).decompose(&mut a);
+        let mut b = orig.clone();
+        Refactorer::new(h).decompose(&mut b);
+        assert!(linf(a.data(), b.data()) < 1e-12);
+    }
+}

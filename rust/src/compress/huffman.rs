@@ -1,0 +1,221 @@
+//! Canonical Huffman coding over bytes.
+//!
+//! The in-tree lossless back-end (`Codec::HuffRle`): byte-frequency
+//! canonical Huffman with the code-length table stored in the header
+//! (256 nibble-packed lengths, max depth 15 via length limiting).
+
+use anyhow::{bail, ensure, Result};
+
+const MAX_BITS: usize = 15;
+
+/// Build length-limited canonical code lengths from byte frequencies.
+fn code_lengths(freqs: &[u64; 256]) -> [u8; 256] {
+    // package-merge would be exact; a simple repeated-rebalance of a
+    // Huffman tree is sufficient here (streams are byte-sized alphabets)
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        symbols: Vec<u8>,
+    }
+    let mut lengths = [0u8; 256];
+    let mut heap: Vec<Node> = freqs
+        .iter()
+        .enumerate()
+        .filter(|&(_, &f)| f > 0)
+        .map(|(s, &f)| Node {
+            weight: f,
+            symbols: vec![s as u8],
+        })
+        .collect();
+    if heap.is_empty() {
+        return lengths;
+    }
+    if heap.len() == 1 {
+        lengths[heap[0].symbols[0] as usize] = 1;
+        return lengths;
+    }
+    while heap.len() > 1 {
+        heap.sort_by(|a, b| b.weight.cmp(&a.weight));
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        for &s in a.symbols.iter().chain(&b.symbols) {
+            lengths[s as usize] += 1;
+        }
+        let mut symbols = a.symbols;
+        symbols.extend(b.symbols);
+        heap.push(Node {
+            weight: a.weight + b.weight,
+            symbols,
+        });
+    }
+    // length-limit by flattening anything deeper than MAX_BITS
+    if lengths.iter().any(|&l| l as usize > MAX_BITS) {
+        // fallback: semi-flat code (rarely hit on realistic streams)
+        let used: Vec<usize> = (0..256).filter(|&s| freqs[s] > 0).collect();
+        let bits = (used.len() as f64).log2().ceil().max(1.0) as u8;
+        for &s in &used {
+            lengths[s] = bits;
+        }
+    }
+    lengths
+}
+
+/// Canonical code assignment from lengths.
+fn canonical_codes(lengths: &[u8; 256]) -> [(u16, u8); 256] {
+    let mut codes = [(0u16, 0u8); 256];
+    let mut pairs: Vec<(u8, usize)> = (0..256)
+        .filter(|&s| lengths[s] > 0)
+        .map(|s| (lengths[s], s))
+        .collect();
+    pairs.sort();
+    let mut code = 0u16;
+    let mut prev_len = 0u8;
+    for (len, sym) in pairs {
+        code <<= (len - prev_len) as u32;
+        codes[sym] = (code, len);
+        code += 1;
+        prev_len = len;
+    }
+    codes
+}
+
+/// Encode `data`; output = 128-byte nibble-packed length table + bitstream.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut freqs = [0u64; 256];
+    for &b in data {
+        freqs[b as usize] += 1;
+    }
+    let lengths = code_lengths(&freqs);
+    let codes = canonical_codes(&lengths);
+
+    let mut out = Vec::with_capacity(data.len() / 2 + 160);
+    // header: original length (8 bytes LE) + 256 nibble... lengths need up
+    // to 15 -> one nibble each? MAX_BITS=15 fits a nibble.
+    out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+    for i in 0..128 {
+        out.push((lengths[2 * i] & 0x0f) | (lengths[2 * i + 1] << 4));
+    }
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    for &b in data {
+        let (code, len) = codes[b as usize];
+        acc = (acc << len) | code as u32;
+        nbits += len as u32;
+        while nbits >= 8 {
+            nbits -= 8;
+            out.push((acc >> nbits) as u8);
+        }
+    }
+    if nbits > 0 {
+        out.push((acc << (8 - nbits)) as u8);
+    }
+    out
+}
+
+/// Invert [`encode`].
+pub fn decode(buf: &[u8]) -> Result<Vec<u8>> {
+    ensure!(buf.len() >= 8 + 128, "huffman header truncated");
+    let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+    let mut lengths = [0u8; 256];
+    for i in 0..128 {
+        let b = buf[8 + i];
+        lengths[2 * i] = b & 0x0f;
+        lengths[2 * i + 1] = b >> 4;
+    }
+    let codes = canonical_codes(&lengths);
+    // decoding table: (code, len) -> symbol, via per-length first-code
+    let mut by_len: Vec<Vec<(u16, u8)>> = vec![Vec::new(); MAX_BITS + 1];
+    for s in 0..256usize {
+        let (code, len) = codes[s];
+        if len > 0 {
+            by_len[len as usize].push((code, s as u8));
+        }
+    }
+    for v in by_len.iter_mut() {
+        v.sort();
+    }
+
+    let mut out = Vec::with_capacity(n);
+    let mut acc = 0u32;
+    let mut nbits = 0usize;
+    let mut pos = 8 + 128;
+    while out.len() < n {
+        // fill
+        while nbits < MAX_BITS && pos < buf.len() {
+            acc = (acc << 8) | buf[pos] as u32;
+            pos += 1;
+            nbits += 8;
+        }
+        if nbits == 0 {
+            bail!("huffman bitstream exhausted");
+        }
+        // match shortest prefix
+        let mut matched = false;
+        for len in 1..=MAX_BITS.min(nbits) {
+            let prefix = ((acc >> (nbits - len)) & ((1u32 << len) - 1)) as u16;
+            if let Ok(i) = by_len[len].binary_search_by_key(&prefix, |&(c, _)| c) {
+                out.push(by_len[len][i].1);
+                nbits -= len;
+                matched = true;
+                break;
+            }
+        }
+        if !matched {
+            bail!("invalid huffman code");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_text() {
+        let data = b"the quick brown fox jumps over the lazy dog, repeatedly: \
+                     the quick brown fox jumps over the lazy dog";
+        let enc = encode(data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        assert!(enc.len() < data.len() + 136 + 8);
+    }
+
+    #[test]
+    fn roundtrip_skewed() {
+        // heavily skewed distribution compresses well
+        let mut rng = Rng::new(3);
+        let data: Vec<u8> = (0..20000)
+            .map(|_| if rng.uniform() < 0.9 { 0u8 } else { rng.below(256) as u8 })
+            .collect();
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        assert!(
+            enc.len() < data.len() / 2,
+            "skewed stream should halve: {} vs {}",
+            enc.len(),
+            data.len()
+        );
+    }
+
+    #[test]
+    fn roundtrip_edge_cases() {
+        for data in [vec![], vec![42u8], vec![7u8; 1000]] {
+            let enc = encode(&data);
+            assert_eq!(decode(&enc).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn roundtrip_uniform_random() {
+        let mut rng = Rng::new(4);
+        let data: Vec<u8> = (0..4096).map(|_| rng.below(256) as u8).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let enc = encode(b"hello world hello world");
+        assert!(decode(&enc[..10]).is_err());
+    }
+}

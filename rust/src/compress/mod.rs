@@ -1,0 +1,21 @@
+//! MGARD-style error-bounded lossy compression (paper §5.2, Fig 19).
+//!
+//! Pipeline: multigrid decomposition (the paper's contribution) →
+//! uniform scalar quantization of the coefficients → lossless entropy
+//! coding. Two lossless back-ends are provided:
+//!
+//! * `Codec::Zlib` — real DEFLATE via `flate2` (the paper's ZLib stage);
+//! * `Codec::HuffRle` — in-tree zero-RLE + canonical Huffman (a faster,
+//!   lighter coder used for ablations).
+//!
+//! The [`pipeline::Compressor`] records per-stage timings so Fig 19's
+//! breakdown can be regenerated directly.
+
+pub mod huffman;
+pub mod pipeline;
+pub mod quantize;
+pub mod rle;
+pub mod varint;
+
+pub use pipeline::{Codec, Compressed, CompressorStats, MgardCompressor};
+pub use quantize::{dequantize, quantize, QuantMeta};

@@ -1,0 +1,243 @@
+//! The MGARD compression pipeline with per-stage timing (Fig 19).
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::compress::quantize::{dequantize, quantize, QuantMeta};
+use crate::compress::{huffman, rle, varint};
+use crate::grid::{Hierarchy, Tensor};
+use crate::refactor::Refactorer;
+use crate::util::stats::time;
+use crate::util::Scalar;
+
+/// Lossless back-end for the quantized stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// DEFLATE via `flate2` — the paper's ZLib stage.
+    Zlib,
+    /// In-tree zero-RLE + canonical Huffman.
+    HuffRle,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::Zlib => "zlib",
+            Codec::HuffRle => "huff-rle",
+        }
+    }
+}
+
+/// Compressed payload + metadata needed to invert it.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    pub payload: Vec<u8>,
+    pub codec: Codec,
+    pub quant: QuantMeta,
+    pub shape: Vec<usize>,
+    pub original_bytes: usize,
+}
+
+impl Compressed {
+    pub fn ratio(&self) -> f64 {
+        self.original_bytes as f64 / self.payload.len() as f64
+    }
+}
+
+/// Per-stage wall-clock seconds (the Fig-19 breakdown).
+#[derive(Clone, Debug, Default)]
+pub struct CompressorStats {
+    pub decompose_s: f64,
+    pub quantize_s: f64,
+    pub encode_s: f64,
+    pub decode_s: f64,
+    pub dequantize_s: f64,
+    pub recompose_s: f64,
+}
+
+impl CompressorStats {
+    pub fn compress_total(&self) -> f64 {
+        self.decompose_s + self.quantize_s + self.encode_s
+    }
+
+    pub fn decompress_total(&self) -> f64 {
+        self.decode_s + self.dequantize_s + self.recompose_s
+    }
+}
+
+/// Error-bounded lossy compressor (refactor → quantize → entropy code).
+pub struct MgardCompressor<T> {
+    refactorer: Refactorer<T>,
+    codec: Codec,
+    pub stats: CompressorStats,
+}
+
+impl<T: Scalar> MgardCompressor<T> {
+    pub fn new(hierarchy: Hierarchy, codec: Codec) -> Self {
+        MgardCompressor {
+            refactorer: Refactorer::new(hierarchy),
+            codec,
+            stats: CompressorStats::default(),
+        }
+    }
+
+    pub fn hierarchy(&self) -> &Hierarchy {
+        self.refactorer.hierarchy()
+    }
+
+    /// Compress with absolute error bound `eb` (clears previous stats).
+    pub fn compress(&mut self, data: &Tensor<T>, eb: f64) -> Result<Compressed> {
+        anyhow::ensure!(
+            data.shape() == self.refactorer.hierarchy().shape(),
+            "shape mismatch"
+        );
+        self.stats = CompressorStats::default();
+
+        let mut work = data.clone();
+        let (_, t) = time(|| self.refactorer.decompose(&mut work));
+        self.stats.decompose_s = t;
+
+        let quant = QuantMeta::for_bound(eb, self.refactorer.hierarchy().nlevels());
+        let (q, t) = time(|| quantize(work.data(), &quant));
+        self.stats.quantize_s = t;
+
+        let (payload, t) = time(|| -> Result<Vec<u8>> {
+            match self.codec {
+                Codec::HuffRle => Ok(huffman::encode(&rle::encode(&q))),
+                Codec::Zlib => {
+                    let raw = varint::encode(&q);
+                    let mut enc =
+                        flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
+                    enc.write_all(&raw).context("zlib write")?;
+                    Ok(enc.finish().context("zlib finish")?)
+                }
+            }
+        });
+        self.stats.encode_s = t;
+
+        Ok(Compressed {
+            payload: payload?,
+            codec: self.codec,
+            quant,
+            shape: data.shape().to_vec(),
+            original_bytes: data.nbytes(),
+        })
+    }
+
+    /// Invert [`MgardCompressor::compress`]; result satisfies
+    /// `L∞(result, original) <= eb`.
+    pub fn decompress(&mut self, c: &Compressed) -> Result<Tensor<T>> {
+        if c.codec != self.codec {
+            bail!("codec mismatch: payload {:?}, compressor {:?}", c.codec, self.codec);
+        }
+        let (q, t) = time(|| -> Result<Vec<i64>> {
+            match c.codec {
+                Codec::HuffRle => rle::decode(&huffman::decode(&c.payload)?),
+                Codec::Zlib => {
+                    let mut dec = flate2::read::ZlibDecoder::new(&c.payload[..]);
+                    let mut raw = Vec::new();
+                    dec.read_to_end(&mut raw).context("zlib read")?;
+                    varint::decode(&raw)
+                }
+            }
+        });
+        self.stats.decode_s = t;
+        let q = q?;
+
+        let (vals, t) = time(|| dequantize::<T>(&q, &c.quant));
+        self.stats.dequantize_s = t;
+
+        let mut tensor = Tensor::from_vec(&c.shape, vals);
+        let (_, t) = time(|| self.refactorer.recompose(&mut tensor));
+        self.stats.recompose_s = t;
+        Ok(tensor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::linf;
+
+    fn smooth(n: usize) -> Tensor<f64> {
+        Tensor::from_fn(&[n, n, n], |idx| {
+            let x = idx[0] as f64 / (n - 1) as f64;
+            let y = idx[1] as f64 / (n - 1) as f64;
+            let z = idx[2] as f64 / (n - 1) as f64;
+            (4.0 * x).sin() * (3.0 * y).cos() * (2.0 * z + 1.0).ln()
+        })
+    }
+
+    #[test]
+    fn error_bound_respected_both_codecs() {
+        let n = 17;
+        let orig = smooth(n);
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            for eb in [1e-2, 1e-4] {
+                let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), codec);
+                let blob = c.compress(&orig, eb).unwrap();
+                let back = c.decompress(&blob).unwrap();
+                let err = linf(back.data(), orig.data());
+                assert!(err <= eb, "{codec:?} eb={eb}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_data_compresses_well() {
+        let n = 33;
+        let orig = smooth(n);
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::Zlib);
+        let blob = c.compress(&orig, 1e-3).unwrap();
+        assert!(
+            blob.ratio() > 8.0,
+            "smooth field should compress >8x, got {:.1}",
+            blob.ratio()
+        );
+    }
+
+    #[test]
+    fn random_data_compresses_poorly_but_correctly() {
+        let n = 9;
+        let mut rng = Rng::new(5);
+        let orig = Tensor::from_fn(&[n, n, n], |_| rng.normal());
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::HuffRle);
+        let blob = c.compress(&orig, 1e-3).unwrap();
+        let back = c.decompress(&blob).unwrap();
+        assert!(linf(back.data(), orig.data()) <= 1e-3);
+    }
+
+    #[test]
+    fn looser_bound_better_ratio() {
+        let n = 33;
+        let orig = smooth(n);
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::Zlib);
+        let tight = c.compress(&orig, 1e-6).unwrap().ratio();
+        let loose = c.compress(&orig, 1e-2).unwrap().ratio();
+        assert!(loose > tight, "loose {loose} vs tight {tight}");
+    }
+
+    #[test]
+    fn stats_populated() {
+        let n = 17;
+        let orig = smooth(n);
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::Zlib);
+        let blob = c.compress(&orig, 1e-3).unwrap();
+        assert!(c.stats.decompose_s > 0.0);
+        assert!(c.stats.compress_total() > 0.0);
+        let _ = c.decompress(&blob).unwrap();
+        assert!(c.stats.recompose_s > 0.0);
+    }
+
+    #[test]
+    fn codec_mismatch_rejected() {
+        let n = 9;
+        let orig = smooth(n);
+        let mut a = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::Zlib);
+        let blob = a.compress(&orig, 1e-3).unwrap();
+        let mut b = MgardCompressor::<f64>::new(Hierarchy::uniform(&[n, n, n]), Codec::HuffRle);
+        assert!(b.decompress(&blob).is_err());
+    }
+}

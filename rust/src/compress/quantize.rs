@@ -1,0 +1,110 @@
+//! Uniform scalar quantization of multigrid coefficients.
+//!
+//! With bin width `δ = 2·eb / (nlevels + 1)`, each coefficient is
+//! perturbed by at most `δ/2`; the recomposition cascade applies at most
+//! one interpolation per level with operator norm 1, so the reconstructed
+//! field's L∞ error is at most `(nlevels+1) · δ/2 = eb` — the same
+//! triangle-inequality argument MGARD uses for its uniform mode.
+
+use crate::util::Scalar;
+
+/// Quantization parameters stored with the compressed stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantMeta {
+    /// Bin width δ.
+    pub bin: f64,
+    /// Requested absolute error bound.
+    pub error_bound: f64,
+    pub nlevels: usize,
+}
+
+impl QuantMeta {
+    pub fn for_bound(error_bound: f64, nlevels: usize) -> Self {
+        assert!(error_bound > 0.0);
+        QuantMeta {
+            bin: 2.0 * error_bound / (nlevels as f64 + 1.0),
+            error_bound,
+            nlevels,
+        }
+    }
+}
+
+/// Quantize coefficients to signed integers (round-to-nearest).
+pub fn quantize<T: Scalar>(data: &[T], meta: &QuantMeta) -> Vec<i64> {
+    let inv = 1.0 / meta.bin;
+    data.iter()
+        .map(|v| (v.to_f64() * inv).round() as i64)
+        .collect()
+}
+
+/// Invert [`quantize`].
+pub fn dequantize<T: Scalar>(q: &[i64], meta: &QuantMeta) -> Vec<T> {
+    q.iter()
+        .map(|&k| T::from_f64(k as f64 * meta.bin))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{Hierarchy, Tensor};
+    use crate::refactor::Refactorer;
+    use crate::util::rng::Rng;
+    use crate::util::stats::linf;
+
+    #[test]
+    fn quantize_roundtrip_within_half_bin() {
+        let meta = QuantMeta::for_bound(1e-3, 4);
+        let mut rng = Rng::new(1);
+        let data: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let q = quantize(&data, &meta);
+        let back: Vec<f64> = dequantize(&q, &meta);
+        for (a, b) in data.iter().zip(&back) {
+            assert!((a - b).abs() <= meta.bin / 2.0 + 1e-15);
+        }
+    }
+
+    #[test]
+    fn end_to_end_error_bound_holds() {
+        // decompose -> quantize -> dequantize -> recompose must respect eb
+        let shape = [33usize, 33];
+        let h = Hierarchy::uniform(&shape);
+        let mut rng = Rng::new(2);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+        for eb in [1e-1, 1e-2, 1e-3, 1e-5] {
+            let mut dec = orig.clone();
+            let mut r = Refactorer::new(h.clone());
+            r.decompose(&mut dec);
+            let meta = QuantMeta::for_bound(eb, h.nlevels());
+            let q = quantize(dec.data(), &meta);
+            let back: Vec<f64> = dequantize(&q, &meta);
+            let mut rec = Tensor::from_vec(&shape, back);
+            r.recompose(&mut rec);
+            let err = linf(rec.data(), orig.data());
+            assert!(err <= eb * 1.0001, "eb={eb}: L∞={err}");
+        }
+    }
+
+    #[test]
+    fn zero_heavy_after_decomposition_of_smooth_data() {
+        // smooth data should quantize to mostly zeros (compressibility)
+        let n = 65;
+        let shape = [n, n];
+        let h = Hierarchy::uniform(&shape);
+        let orig = Tensor::from_fn(&shape, |idx| {
+            let x = idx[0] as f64 / (n - 1) as f64;
+            let y = idx[1] as f64 / (n - 1) as f64;
+            (2.0 * x).sin() * (3.0 * y).cos()
+        });
+        let mut dec = orig.clone();
+        Refactorer::new(h.clone()).decompose(&mut dec);
+        let meta = QuantMeta::for_bound(1e-2, h.nlevels());
+        let q = quantize(dec.data(), &meta);
+        let zeros = q.iter().filter(|&&v| v == 0).count();
+        assert!(
+            zeros as f64 > 0.5 * q.len() as f64,
+            "expected mostly zero coefficients, got {zeros}/{}",
+            q.len()
+        );
+    }
+}

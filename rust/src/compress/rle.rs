@@ -1,0 +1,86 @@
+//! Zero-run-length coding for quantized coefficient streams.
+//!
+//! Decomposed smooth fields quantize to long zero runs; collapsing them
+//! before entropy coding removes the bulk of the volume cheaply. The
+//! scheme codes a stream of i64 as tokens: `(zero_run, value)` pairs where
+//! `zero_run` counts zeros preceding a nonzero `value`, plus a trailing
+//! zero-run.
+
+use anyhow::Result;
+
+use crate::compress::varint::{push_uvarint, read_uvarint, unzigzag, zigzag};
+
+/// Encode a signed stream with zero-run collapsing.
+pub fn encode(values: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() / 4 + 16);
+    push_uvarint(&mut out, values.len() as u64);
+    let mut run = 0u64;
+    for &v in values {
+        if v == 0 {
+            run += 1;
+        } else {
+            push_uvarint(&mut out, run);
+            push_uvarint(&mut out, zigzag(v));
+            run = 0;
+        }
+    }
+    push_uvarint(&mut out, run); // trailing zeros
+    out
+}
+
+/// Invert [`encode`].
+pub fn decode(buf: &[u8]) -> Result<Vec<i64>> {
+    let mut pos = 0usize;
+    let n = read_uvarint(buf, &mut pos)? as usize;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let run = read_uvarint(buf, &mut pos)? as usize;
+        out.resize(out.len() + run, 0);
+        if out.len() == n {
+            break;
+        }
+        let v = unzigzag(read_uvarint(buf, &mut pos)?);
+        out.push(v);
+    }
+    anyhow::ensure!(out.len() == n, "RLE stream shorter than declared");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_sparse() {
+        let mut v = vec![0i64; 1000];
+        v[3] = 5;
+        v[500] = -17;
+        v[999] = 2;
+        let enc = encode(&v);
+        assert!(enc.len() < 32, "sparse stream should collapse: {}", enc.len());
+        assert_eq!(decode(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn roundtrip_dense_and_edge() {
+        for v in [
+            vec![],
+            vec![0i64],
+            vec![7i64],
+            vec![0, 0, 0],
+            vec![1, -1, 2, -2, 3],
+        ] {
+            assert_eq!(decode(&encode(&v)).unwrap(), v, "{v:?}");
+        }
+        let mut rng = Rng::new(9);
+        let dense: Vec<i64> = (0..4096).map(|_| (rng.normal() * 100.0) as i64).collect();
+        assert_eq!(decode(&encode(&dense)).unwrap(), dense);
+    }
+
+    #[test]
+    fn trailing_zero_run() {
+        let v = vec![5i64, 0, 0, 0, 0];
+        assert_eq!(decode(&encode(&v)).unwrap(), v);
+    }
+}

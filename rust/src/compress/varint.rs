@@ -1,0 +1,115 @@
+//! Zigzag + LEB128 varint coding of signed integer streams.
+//!
+//! The quantized coefficient stream is mostly small signed integers; the
+//! zigzag map sends them to small unsigned ones, and LEB128 packs those
+//! into 1 byte each in the common case.
+
+use anyhow::{bail, Result};
+
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+pub fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Append one varint.
+pub fn push_uvarint(out: &mut Vec<u8>, mut u: u64) {
+    loop {
+        let byte = (u & 0x7f) as u8;
+        u >>= 7;
+        if u == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read one varint from `buf[*pos..]`, advancing `pos`.
+pub fn read_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut u = 0u64;
+    let mut shift = 0u32;
+    loop {
+        if *pos >= buf.len() {
+            bail!("truncated varint");
+        }
+        let b = buf[*pos];
+        *pos += 1;
+        if shift >= 64 {
+            bail!("varint overflow");
+        }
+        u |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(u);
+        }
+        shift += 7;
+    }
+}
+
+/// Encode a signed stream.
+pub fn encode(values: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() + 8);
+    push_uvarint(&mut out, values.len() as u64);
+    for &v in values {
+        push_uvarint(&mut out, zigzag(v));
+    }
+    out
+}
+
+/// Decode a signed stream.
+pub fn decode(buf: &[u8]) -> Result<Vec<i64>> {
+    let mut pos = 0usize;
+    let n = read_uvarint(buf, &mut pos)? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(unzigzag(read_uvarint(buf, &mut pos)?));
+    }
+    if pos != buf.len() {
+        bail!("trailing bytes after varint stream");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn zigzag_pairs() {
+        for (v, u) in [(0i64, 0u64), (-1, 1), (1, 2), (-2, 3), (2, 4)] {
+            assert_eq!(zigzag(v), u);
+            assert_eq!(unzigzag(u), v);
+        }
+        for v in [i64::MIN, i64::MAX, -123456789, 987654321] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let mut rng = Rng::new(1);
+        let vals: Vec<i64> = (0..5000)
+            .map(|_| (rng.normal() * 10.0) as i64)
+            .collect();
+        let enc = encode(&vals);
+        assert_eq!(decode(&enc).unwrap(), vals);
+        // mostly single-byte symbols
+        assert!(enc.len() < vals.len() * 2 + 16);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let enc = encode(&[1, 2, 300]);
+        assert!(decode(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn empty_stream() {
+        assert_eq!(decode(&encode(&[])).unwrap(), Vec::<i64>::new());
+    }
+}

@@ -1,0 +1,24 @@
+//! Layer-3 coordinator: jobs, partitioning, and parallel execution.
+//!
+//! The deployable front of the system. A [`pipeline::Coordinator`] owns a
+//! worker pool and (optionally) the PJRT engine actor, accepts refactor /
+//! recompose / compress jobs, and executes them with the partitioning
+//! strategies of §3.6:
+//!
+//! * **embarrassing parallel** — the domain is split into independent
+//!   blocks ([`partition`]), one hierarchy per block, no communication;
+//! * **cooperative parallel** — one global hierarchy, with the per-axis
+//!   kernel loops of each level step distributed over the worker fleet
+//!   ([`parallel`]; the shifted round-robin of Fig 12 lives in
+//!   [`partition::round_robin_owner`]). Numerics are identical to the
+//!   single-worker path — asserted by tests — which is what lets
+//!   cooperative mode reach deeper hierarchies and better compression
+//!   ratios on partitioned data (Fig 14).
+
+pub mod parallel;
+pub mod partition;
+pub mod pipeline;
+
+pub use parallel::ParallelRefactorer;
+pub use partition::{partition_slabs, round_robin_owner, Slab};
+pub use pipeline::{Backend, Coordinator, JobResult, JobSpec, Mode as JobMode};

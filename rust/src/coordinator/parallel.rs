@@ -1,0 +1,308 @@
+//! Cooperative-parallel refactoring: one hierarchy, many workers (§3.6).
+//!
+//! The worker fleet stands in for the GPU group of a `K × S` layout: all
+//! workers share the level buffers (the shared-memory analog of NVLink
+//! peer access) and split each kernel's independent batch dimension. The
+//! trick that keeps this a thin layer over the serial kernels: every axis
+//! primitive only sees `(outer, m, inner)` loop bounds, so a contiguous
+//! chunk of the outer dimension *is itself a valid smaller tensor* — each
+//! worker calls the ordinary serial kernel on its chunk with a synthetic
+//! `[chunk, m, inner]` shape. Numerics are bit-identical to the serial
+//! path (asserted by tests), which is why cooperative mode can refactor
+//! the *global* hierarchy (deeper levels ⇒ better compression, Fig 14)
+//! where embarrassing mode cannot.
+
+use crossbeam_utils::thread;
+
+use crate::grid::{gather_view, scatter_add_view, scatter_view, zero_view, Hierarchy, Tensor};
+use crate::refactor::axis;
+use crate::refactor::DimOps;
+use crate::util::Scalar;
+
+/// Multi-worker cooperative refactorer.
+pub struct ParallelRefactorer<T> {
+    hierarchy: Hierarchy,
+    workers: usize,
+    ops: Vec<Vec<DimOps<T>>>,
+}
+
+/// Split `outer` into at most `workers` contiguous chunks.
+fn chunks(outer: usize, workers: usize) -> Vec<(usize, usize)> {
+    let w = workers.min(outer).max(1);
+    let base = outer / w;
+    let extra = outer % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        if len > 0 {
+            out.push((start, len));
+        }
+        start += len;
+    }
+    out
+}
+
+/// Parallel mass-trans along `ax` of `shape`: workers split the outer dim.
+fn par_masstrans<T: Scalar>(
+    src: &[T],
+    shape: &[usize],
+    ax: usize,
+    ops: &DimOps<T>,
+    dst: &mut [T],
+    workers: usize,
+) {
+    let (outer, m, inner) = axis::axis_split(shape, ax);
+    let mc = (m + 1) / 2;
+    if outer == 1 || workers <= 1 {
+        axis::masstrans(src, shape, ax, ops, dst);
+        return;
+    }
+    let in_block = m * inner;
+    let out_block = mc * inner;
+    thread::scope(|s| {
+        let mut rest = dst;
+        for (start, len) in chunks(outer, workers) {
+            let (mine, tail) = rest.split_at_mut(len * out_block);
+            rest = tail;
+            let src_chunk = &src[start * in_block..(start + len) * in_block];
+            s.spawn(move |_| {
+                axis::masstrans(src_chunk, &[len, m, inner], 1, ops, mine);
+            });
+        }
+    })
+    .unwrap();
+}
+
+/// Parallel Thomas along `ax`: workers split the outer dim.
+fn par_thomas<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    ax: usize,
+    ops: &DimOps<T>,
+    workers: usize,
+) {
+    let (outer, m, inner) = axis::axis_split(shape, ax);
+    if outer == 1 || workers <= 1 {
+        axis::thomas(buf, shape, ax, ops);
+        return;
+    }
+    let block = m * inner;
+    thread::scope(|s| {
+        let mut rest = buf;
+        for (_, len) in chunks(outer, workers) {
+            let (mine, tail) = rest.split_at_mut(len * block);
+            rest = tail;
+            s.spawn(move |_| {
+                axis::thomas(mine, &[len, m, inner], 1, ops);
+            });
+        }
+    })
+    .unwrap();
+}
+
+/// Parallel upsample along `ax`: workers split the outer dim.
+fn par_upsample<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    ax: usize,
+    r: &[T],
+    dst: &mut [T],
+    workers: usize,
+) {
+    let (outer, mc, inner) = axis::axis_split(src_shape, ax);
+    let mf = 2 * (mc - 1) + 1;
+    if outer == 1 || workers <= 1 {
+        axis::upsample(src, src_shape, ax, r, dst);
+        return;
+    }
+    let in_block = mc * inner;
+    let out_block = mf * inner;
+    thread::scope(|s| {
+        let mut rest = dst;
+        for (start, len) in chunks(outer, workers) {
+            let (mine, tail) = rest.split_at_mut(len * out_block);
+            rest = tail;
+            let src_chunk = &src[start * in_block..(start + len) * in_block];
+            s.spawn(move |_| {
+                axis::upsample(src_chunk, &[len, mc, inner], 1, r, mine);
+            });
+        }
+    })
+    .unwrap();
+}
+
+impl<T: Scalar> ParallelRefactorer<T> {
+    pub fn new(hierarchy: Hierarchy, workers: usize) -> Self {
+        assert!(workers >= 1);
+        let ops = (0..hierarchy.nlevels())
+            .map(|step| {
+                hierarchy
+                    .level_coords(step)
+                    .iter()
+                    .map(|c| DimOps::new(c))
+                    .collect()
+            })
+            .collect();
+        ParallelRefactorer {
+            hierarchy,
+            workers,
+            ops,
+        }
+    }
+
+    pub fn hierarchy(&self) -> &Hierarchy {
+        &self.hierarchy
+    }
+
+    pub fn decompose(&self, t: &mut Tensor<T>) {
+        for step in 0..self.hierarchy.nlevels() {
+            self.level_step(t, step, true);
+        }
+    }
+
+    pub fn recompose(&self, t: &mut Tensor<T>) {
+        for step in (0..self.hierarchy.nlevels()).rev() {
+            self.level_step(t, step, false);
+        }
+    }
+
+    fn level_step(&self, t: &mut Tensor<T>, step: usize, forward: bool) {
+        let s = self.hierarchy.step_stride(step);
+        let vshape = self.hierarchy.level_shape(step);
+        let vlen: usize = vshape.iter().product();
+        let full = t.shape().to_vec();
+        let ops = &self.ops[step];
+        let d = vshape.len();
+        let w = self.workers;
+
+        let mut view = vec![T::ZERO; vlen];
+        gather_view(t.data(), &full, s, &mut view);
+
+        let cshape: Vec<usize> = vshape.iter().map(|&m| (m + 1) / 2).collect();
+        let clen: usize = cshape.iter().product();
+        let mut coarse = vec![T::ZERO; clen];
+
+        if forward {
+            // GPK: interp = multilinear upsample of the coarse sub-grid
+            gather_view(&view, &vshape, 2, &mut coarse);
+            let interp = self.build_interp(&coarse, &cshape, &vshape, ops);
+            for (v, i) in view.iter_mut().zip(&interp) {
+                *v -= *i;
+            }
+            scatter_view(&mut view, &vshape, 2, &coarse);
+
+            let z = self.correction(&view, &vshape, ops);
+            scatter_add_view(&mut view, &vshape, 2, &z, T::ONE);
+        } else {
+            let z = self.correction(&view, &vshape, ops);
+            scatter_add_view(&mut view, &vshape, 2, &z, -T::ONE);
+            gather_view(&view, &vshape, 2, &mut coarse);
+            let interp = self.build_interp(&coarse, &cshape, &vshape, ops);
+            for (v, i) in view.iter_mut().zip(&interp) {
+                *v += *i;
+            }
+            scatter_view(&mut view, &vshape, 2, &coarse);
+        }
+        let _ = d;
+        let _ = w;
+        scatter_view(t.data_mut(), &full, s, &view);
+    }
+
+    fn build_interp(
+        &self,
+        coarse: &[T],
+        cshape: &[usize],
+        vshape: &[usize],
+        ops: &[DimOps<T>],
+    ) -> Vec<T> {
+        let d = vshape.len();
+        let mut cur = coarse.to_vec();
+        let mut cur_shape = cshape.to_vec();
+        for k in 0..d {
+            let mut out_shape = cur_shape.clone();
+            out_shape[k] = vshape[k];
+            let mut out = vec![T::ZERO; out_shape.iter().product()];
+            par_upsample(&cur, &cur_shape, k, &ops[k].r, &mut out, self.workers);
+            cur = out;
+            cur_shape = out_shape;
+        }
+        cur
+    }
+
+    fn correction(&self, view: &[T], vshape: &[usize], ops: &[DimOps<T>]) -> Vec<T> {
+        let d = vshape.len();
+        let mut cf = view.to_vec();
+        zero_view(&mut cf, vshape, 2);
+        let mut cur_shape = vshape.to_vec();
+        let mut cur = cf;
+        for k in 0..d {
+            let mut out_shape = cur_shape.clone();
+            out_shape[k] = (cur_shape[k] + 1) / 2;
+            let mut out = vec![T::ZERO; out_shape.iter().product()];
+            par_masstrans(&cur, &cur_shape, k, &ops[k], &mut out, self.workers);
+            cur = out;
+            cur_shape = out_shape;
+        }
+        for k in 0..d {
+            par_thomas(&mut cur, &cur_shape, k, &ops[k], self.workers);
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::refactor::Refactorer;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn chunking_covers_range() {
+        for (outer, w) in [(10usize, 3usize), (1, 8), (7, 7), (100, 6)] {
+            let cs = chunks(outer, w);
+            let total: usize = cs.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, outer, "outer={outer} w={w}");
+            assert_eq!(cs[0].0, 0);
+            for win in cs.windows(2) {
+                assert_eq!(win[0].0 + win[0].1, win[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn cooperative_matches_serial_exactly() {
+        let shape = [17usize, 17, 9];
+        let mut rng = Rng::new(30);
+        let coords: Vec<Vec<f64>> = shape.iter().map(|&m| rng.coords(m)).collect();
+        let h = Hierarchy::new(&shape, coords, None);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+
+        let mut serial = orig.clone();
+        Refactorer::new(h.clone()).decompose(&mut serial);
+
+        for workers in [1usize, 2, 3, 6] {
+            let mut coop = orig.clone();
+            ParallelRefactorer::new(h.clone(), workers).decompose(&mut coop);
+            assert_eq!(
+                coop.data(),
+                serial.data(),
+                "workers={workers} must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn cooperative_roundtrip() {
+        let shape = [33usize, 17];
+        let h = Hierarchy::uniform(&shape);
+        let mut rng = Rng::new(31);
+        let orig = Tensor::from_fn(&shape, |_| rng.normal());
+        let r = ParallelRefactorer::new(h, 4);
+        let mut t = orig.clone();
+        r.decompose(&mut t);
+        r.recompose(&mut t);
+        let e = crate::util::stats::linf(t.data(), orig.data());
+        assert!(e < 1e-10, "roundtrip error {e}");
+    }
+}

@@ -1,0 +1,205 @@
+//! Domain decomposition for multi-device refactoring (§3.6).
+//!
+//! Node-centered slab partitioning: a `2^k+1`-node dimension splits into
+//! `P = 2^m` slabs of `(n-1)/P + 1` nodes each, neighbouring slabs
+//! *sharing* their boundary node — each slab is itself a refactorable
+//! `2^j+1` grid, which is what makes embarrassing-parallel refactoring
+//! possible without any communication.
+
+use crate::grid::{row_major_strides, Tensor};
+use crate::util::Scalar;
+
+/// One slab of a partitioned domain (along a single axis).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Slab {
+    /// Partition axis.
+    pub axis: usize,
+    /// First node index (inclusive) in the full domain.
+    pub start: usize,
+    /// Node count along the axis (a 2^j + 1 size).
+    pub len: usize,
+    /// Owning device id.
+    pub device: usize,
+}
+
+/// Split axis `axis` of `shape` into `parts` refactorable slabs.
+///
+/// `parts` must divide `shape[axis] - 1` with a power-of-two quotient
+/// remaining `2^j` with `j >= 1`.
+pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Vec<Slab> {
+    let n = shape[axis];
+    assert!(parts >= 1 && (n - 1) % parts == 0, "parts must divide n-1");
+    let seg = (n - 1) / parts;
+    assert!(
+        seg >= 2 && seg.is_power_of_two(),
+        "slab interior must be 2^j (j>=1), got {seg}"
+    );
+    (0..parts)
+        .map(|p| Slab {
+            axis,
+            start: p * seg,
+            len: seg + 1,
+            device: p,
+        })
+        .collect()
+}
+
+/// Extract a slab's tensor (copying; boundary nodes are duplicated into
+/// both neighbours, matching node-centered domain decomposition).
+pub fn extract_slab<T: Scalar>(t: &Tensor<T>, slab: &Slab) -> Tensor<T> {
+    let mut shape = t.shape().to_vec();
+    shape[slab.axis] = slab.len;
+    let strides = row_major_strides(t.shape());
+    Tensor::from_fn(&shape, |idx| {
+        let mut full_idx: usize = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            let gi = if d == slab.axis { i + slab.start } else { i };
+            full_idx += gi * strides[d];
+        }
+        t.data()[full_idx]
+    })
+}
+
+/// Reassemble slabs into the full tensor (interior boundary nodes are
+/// taken from the lower slab; for refactored data both copies agree only
+/// on the *original* data, so reassembly is only meaningful for
+/// recomposed output — tests assert that case).
+pub fn assemble_slabs<T: Scalar>(shape: &[usize], slabs: &[(Slab, Tensor<T>)]) -> Tensor<T> {
+    let mut out = Tensor::zeros(shape);
+    let strides = row_major_strides(shape);
+    for (slab, data) in slabs {
+        let sstrides = row_major_strides(data.shape());
+        let total: usize = data.shape().iter().product();
+        let d = shape.len();
+        let mut idx = vec![0usize; d];
+        for li in 0..total {
+            let mut full_idx = 0usize;
+            for (dd, &i) in idx.iter().enumerate() {
+                let gi = if dd == slab.axis { i + slab.start } else { i };
+                full_idx += gi * strides[dd];
+            }
+            debug_assert_eq!(
+                li,
+                idx.iter().zip(&sstrides).map(|(i, s)| i * s).sum::<usize>()
+            );
+            out.data_mut()[full_idx] = data.data()[li];
+            // bump
+            for dd in (0..d).rev() {
+                idx[dd] += 1;
+                if idx[dd] < data.shape()[dd] {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+    }
+    out
+}
+
+/// Shifted round-robin ownership (Fig 12b): block `(row, col)` of a
+/// `blocks × blocks` grid is owned by `(col + row) % devices`, so a sweep
+/// along *either* dimension keeps every device busy.
+pub fn round_robin_owner(row: usize, col: usize, devices: usize) -> usize {
+    (row + col) % devices
+}
+
+/// Utilization of a sweep along `axis` under an ownership function:
+/// fraction of (step, device) slots doing useful work when the sweep
+/// processes block-columns in dependency order.
+pub fn sweep_utilization(blocks: usize, devices: usize, owner: impl Fn(usize, usize) -> usize) -> f64 {
+    // a sweep has `blocks` sequential stages; at stage s, every row's
+    // block (row, s) is processed — devices owning at least one such
+    // block are busy
+    let mut busy_slots = 0usize;
+    for s in 0..blocks {
+        let mut busy = vec![false; devices];
+        for row in 0..blocks {
+            busy[owner(row, s) % devices] = true;
+        }
+        busy_slots += busy.iter().filter(|&&b| b).count();
+    }
+    busy_slots as f64 / (blocks * devices) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Hierarchy;
+    use crate::refactor::Refactorer;
+    use crate::util::rng::Rng;
+    use crate::util::stats::linf;
+
+    #[test]
+    fn slab_sizes_refactorable() {
+        let slabs = partition_slabs(&[65, 65, 65], 0, 4);
+        assert_eq!(slabs.len(), 4);
+        for s in &slabs {
+            assert_eq!(s.len, 17);
+            assert!(crate::grid::max_levels(&[s.len]).is_some());
+        }
+        assert_eq!(slabs[1].start, 16);
+        assert_eq!(slabs[3].start + slabs[3].len, 65);
+    }
+
+    #[test]
+    #[should_panic(expected = "2^j")]
+    fn rejects_slabs_too_thin() {
+        // 64/64 leaves a 1-node interior -> not refactorable
+        partition_slabs(&[65], 0, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "divide")]
+    fn rejects_non_dividing_parts() {
+        partition_slabs(&[65], 0, 3);
+    }
+
+    #[test]
+    fn extract_assemble_roundtrip() {
+        let shape = [17usize, 9];
+        let mut rng = Rng::new(1);
+        let t = Tensor::from_fn(&shape, |_| rng.normal());
+        let slabs = partition_slabs(&shape, 0, 2);
+        let parts: Vec<(Slab, Tensor<f64>)> = slabs
+            .iter()
+            .map(|s| (s.clone(), extract_slab(&t, s)))
+            .collect();
+        let back = assemble_slabs(&shape, &parts);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn embarrassing_parallel_refactor_roundtrip() {
+        // per-slab decompose + recompose + reassemble == original
+        let shape = [33usize, 17];
+        let mut rng = Rng::new(2);
+        let t = Tensor::from_fn(&shape, |_| rng.normal());
+        let slabs = partition_slabs(&shape, 0, 2);
+        let mut parts = Vec::new();
+        for s in &slabs {
+            let mut block = extract_slab(&t, s);
+            let h = Hierarchy::uniform(block.shape());
+            let mut r = Refactorer::new(h);
+            r.decompose(&mut block);
+            r.recompose(&mut block);
+            parts.push((s.clone(), block));
+        }
+        let back = assemble_slabs(&shape, &parts);
+        assert!(linf(back.data(), t.data()) < 1e-10);
+    }
+
+    #[test]
+    fn round_robin_beats_block_partition() {
+        // Fig 12: shifted round-robin keeps all GPUs busy on sweeps along
+        // any dimension; block partitioning serializes one direction
+        let blocks = 6;
+        let devices = 3;
+        let rr = sweep_utilization(blocks, devices, |r, c| round_robin_owner(r, c, devices));
+        let block_rows = sweep_utilization(blocks, devices, |_r, c| c * devices / blocks);
+        assert!(rr > 0.99, "round-robin utilization {rr}");
+        assert!(
+            block_rows < 0.5,
+            "column-block partition should serialize: {block_rows}"
+        );
+    }
+}

@@ -1,0 +1,382 @@
+//! Job pipeline: the coordinator's request loop.
+//!
+//! Producers enqueue refactor/compress jobs; a worker pool drains the
+//! queue. Each job chooses a backend (native core, native baseline for
+//! comparisons, or the AOT-compiled PJRT artifacts) and a parallelism mode
+//! (embarrassing slab partitioning or cooperative whole-domain). This is
+//! the Layer-3 shape of the paper's Fig 1: simulation output comes in,
+//! coefficient classes (optionally quantized + encoded) go out to the
+//! storage mover.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::baseline::BaselineRefactorer;
+use crate::compress::{Codec, MgardCompressor};
+use crate::coordinator::parallel::ParallelRefactorer;
+use crate::coordinator::partition::{extract_slab, partition_slabs};
+use crate::grid::{Hierarchy, Tensor};
+use crate::refactor::{class_norms, split_classes, Refactorer};
+use crate::runtime::EngineHandle;
+use crate::util::stats::time;
+
+/// Compute backend for a job.
+#[derive(Clone)]
+pub enum Backend {
+    /// Optimized native core (reordered layout, fused kernels).
+    Native,
+    /// The SOTA baseline (for benchmarks).
+    Baseline,
+    /// AOT-compiled HLO artifacts through PJRT (f64 jobs require a
+    /// float64 artifact for the job's shape).
+    Pjrt(EngineHandle),
+}
+
+/// Parallelism mode (§3.6).
+#[derive(Clone, Copy, Debug)]
+pub enum Mode {
+    Serial,
+    /// Split axis 0 into `devices` slabs, one hierarchy each.
+    Embarrassing { devices: usize },
+    /// One global hierarchy executed by `workers` cooperating workers.
+    Cooperative { workers: usize },
+}
+
+/// One unit of work.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub data: Tensor<f64>,
+    pub mode: Mode,
+    /// `Some(eb)` → compress with that error bound; `None` → refactor only.
+    pub error_bound: Option<f64>,
+    pub codec: Codec,
+}
+
+/// Result of one job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub name: String,
+    /// Refactored tensor (interleaved layout) when refactor-only, for
+    /// serial/cooperative modes (one global hierarchy).
+    pub refactored: Option<Tensor<f64>>,
+    /// Per-slab refactored blocks for embarrassing mode: each device owns
+    /// its block and its own hierarchy — boundary nodes are duplicated,
+    /// so the blocks cannot be merged until *after* recomposition.
+    pub slab_outputs: Option<Vec<(crate::coordinator::partition::Slab, Tensor<f64>)>>,
+    /// Per-class byte sizes of the refactored representation.
+    pub class_bytes: Vec<usize>,
+    /// Per-class L∞ norms (error-control metadata).
+    pub class_linf: Vec<f64>,
+    /// Compressed payload when `error_bound` was set.
+    pub compressed: Option<crate::compress::Compressed>,
+    pub seconds: f64,
+    pub input_bytes: usize,
+}
+
+impl JobResult {
+    pub fn throughput_gbps(&self) -> f64 {
+        self.input_bytes as f64 / self.seconds / 1e9
+    }
+}
+
+/// The Layer-3 coordinator: a queue + worker pool.
+pub struct Coordinator {
+    backend: Backend,
+    pool_workers: usize,
+}
+
+impl Coordinator {
+    pub fn new(backend: Backend, pool_workers: usize) -> Self {
+        assert!(pool_workers >= 1);
+        Coordinator {
+            backend,
+            pool_workers,
+        }
+    }
+
+    /// Process a batch of jobs across the worker pool (jobs are
+    /// independent — this is the inter-job embarrassing parallelism; the
+    /// intra-job mode is each job's own).
+    pub fn run_batch(&self, jobs: Vec<JobSpec>) -> Vec<Result<JobResult>> {
+        let n = jobs.len();
+        let jobs = Mutex::new(
+            jobs.into_iter()
+                .enumerate()
+                .collect::<Vec<(usize, JobSpec)>>(),
+        );
+        let results: Mutex<Vec<Option<Result<JobResult>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let active = AtomicUsize::new(0);
+
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..self.pool_workers.min(n.max(1)) {
+                s.spawn(|_| loop {
+                    let next = jobs.lock().unwrap().pop();
+                    let Some((idx, job)) = next else { break };
+                    active.fetch_add(1, Ordering::SeqCst);
+                    let r = self.run_job(job);
+                    results.lock().unwrap()[idx] = Some(r);
+                    active.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+        })
+        .unwrap();
+
+        results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| Err(anyhow!("job was not executed"))))
+            .collect()
+    }
+
+    /// Execute one job synchronously.
+    pub fn run_job(&self, job: JobSpec) -> Result<JobResult> {
+        let input_bytes = job.data.nbytes();
+        let shape = job.data.shape().to_vec();
+        let (outcome, seconds) = time(|| -> Result<_> {
+            if let Some(eb) = job.error_bound {
+                // compression path (cooperative modes compress globally)
+                let h = Hierarchy::uniform(&shape);
+                let mut c = MgardCompressor::new(h, job.codec);
+                let blob = c.compress(&job.data, eb)?;
+                Ok((None, None, Some(blob)))
+            } else if let Mode::Embarrassing { devices } = job.mode {
+                let slabs = self.refactor_slabs(&job, devices)?;
+                Ok((None, Some(slabs), None))
+            } else {
+                let t = self.refactor(&job)?;
+                Ok((Some(t), None, None))
+            }
+        });
+        let (refactored, slab_outputs, compressed) = outcome?;
+        // class accounting from whichever representation we produced
+        let (class_bytes, class_linf) = if let Some(t) = &refactored {
+            let h = Hierarchy::uniform(&shape);
+            let classes = split_classes(t, &h);
+            let norms = class_norms(t, &h);
+            (
+                classes.iter().map(|c| c.len() * 8).collect(),
+                norms.linf,
+            )
+        } else if let Some(slabs) = &slab_outputs {
+            // aggregate class sizes/norms across the per-slab hierarchies
+            let mut bytes: Vec<usize> = Vec::new();
+            let mut linfs: Vec<f64> = Vec::new();
+            for (_, t) in slabs {
+                let h = Hierarchy::uniform(t.shape());
+                let classes = split_classes(t, &h);
+                let norms = class_norms(t, &h);
+                if bytes.len() < classes.len() {
+                    bytes.resize(classes.len(), 0);
+                    linfs.resize(classes.len(), 0.0);
+                }
+                for (k, c) in classes.iter().enumerate() {
+                    bytes[k] += c.len() * 8;
+                    linfs[k] = linfs[k].max(norms.linf[k]);
+                }
+            }
+            (bytes, linfs)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        Ok(JobResult {
+            name: job.name,
+            refactored,
+            slab_outputs,
+            class_bytes,
+            class_linf,
+            compressed,
+            seconds,
+            input_bytes,
+        })
+    }
+
+    fn refactor(&self, job: &JobSpec) -> Result<Tensor<f64>> {
+        let shape = job.data.shape().to_vec();
+        match job.mode {
+            Mode::Serial => self.refactor_whole(&job.data),
+            Mode::Cooperative { workers } => {
+                let h = Hierarchy::uniform(&shape);
+                let mut t = job.data.clone();
+                ParallelRefactorer::new(h, workers).decompose(&mut t);
+                Ok(t)
+            }
+            Mode::Embarrassing { .. } => unreachable!("handled via refactor_slabs"),
+        }
+    }
+
+    /// Embarrassing-parallel refactoring: one independent hierarchy per
+    /// slab, refactored concurrently, returned per-device.
+    fn refactor_slabs(
+        &self,
+        job: &JobSpec,
+        devices: usize,
+    ) -> Result<Vec<(crate::coordinator::partition::Slab, Tensor<f64>)>> {
+        let shape = job.data.shape().to_vec();
+        let slabs = partition_slabs(&shape, 0, devices);
+        let parts: Vec<_> = crossbeam_utils::thread::scope(|s| {
+            let handles: Vec<_> = slabs
+                .iter()
+                .map(|slab| {
+                    let data = &job.data;
+                    let slab = slab.clone();
+                    s.spawn(move |_| {
+                        let block = extract_slab(data, &slab);
+                        let r = self.refactor_whole(&block);
+                        r.map(|t| (slab, t))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+        .unwrap();
+        let mut ok = Vec::with_capacity(parts.len());
+        for p in parts {
+            ok.push(p?);
+        }
+        Ok(ok)
+    }
+
+    fn refactor_whole(&self, data: &Tensor<f64>) -> Result<Tensor<f64>> {
+        let shape = data.shape().to_vec();
+        match &self.backend {
+            Backend::Native => {
+                let mut t = data.clone();
+                Refactorer::new(Hierarchy::uniform(&shape)).decompose(&mut t);
+                Ok(t)
+            }
+            Backend::Baseline => {
+                let mut t = data.clone();
+                BaselineRefactorer::new(Hierarchy::uniform(&shape)).decompose(&mut t);
+                Ok(t)
+            }
+            Backend::Pjrt(engine) => {
+                let name = engine
+                    .find("decompose", &shape, "float64")?
+                    .ok_or_else(|| {
+                        anyhow!("no float64 decompose artifact for shape {shape:?}")
+                    })?;
+                let coords = Hierarchy::uniform(&shape).coords().to_vec();
+                engine.run(&name, data, &coords)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partition::assemble_slabs;
+    use crate::util::rng::Rng;
+    use crate::util::stats::linf;
+
+    fn random_tensor(shape: &[usize], seed: u64) -> Tensor<f64> {
+        let mut rng = Rng::new(seed);
+        Tensor::from_fn(shape, |_| rng.normal())
+    }
+
+    #[test]
+    fn serial_and_cooperative_agree() {
+        let c = Coordinator::new(Backend::Native, 2);
+        let data = random_tensor(&[17, 17], 1);
+        let a = c
+            .run_job(JobSpec {
+                name: "serial".into(),
+                data: data.clone(),
+                mode: Mode::Serial,
+                error_bound: None,
+                codec: Codec::Zlib,
+            })
+            .unwrap();
+        let b = c
+            .run_job(JobSpec {
+                name: "coop".into(),
+                data,
+                mode: Mode::Cooperative { workers: 3 },
+                error_bound: None,
+                codec: Codec::Zlib,
+            })
+            .unwrap();
+        assert_eq!(
+            a.refactored.unwrap().data(),
+            b.refactored.unwrap().data()
+        );
+    }
+
+    #[test]
+    fn embarrassing_mode_roundtrips_per_slab() {
+        let c = Coordinator::new(Backend::Native, 2);
+        let data = random_tensor(&[33, 17], 2);
+        let r = c
+            .run_job(JobSpec {
+                name: "emb".into(),
+                data: data.clone(),
+                mode: Mode::Embarrassing { devices: 2 },
+                error_bound: None,
+                codec: Codec::Zlib,
+            })
+            .unwrap();
+        // recompose each device's slab independently and reassemble
+        let parts: Vec<_> = r
+            .slab_outputs
+            .unwrap()
+            .into_iter()
+            .map(|(s, mut block)| {
+                Refactorer::new(Hierarchy::uniform(block.shape())).recompose(&mut block);
+                (s, block)
+            })
+            .collect();
+        let back = assemble_slabs(&[33, 17], &parts);
+        assert!(linf(back.data(), data.data()) < 1e-10);
+        // class accounting aggregated across slabs covers all nodes
+        assert_eq!(r.class_bytes.iter().sum::<usize>(), 2 * 17 * 17 * 8);
+    }
+
+    #[test]
+    fn batch_processes_all_jobs() {
+        let c = Coordinator::new(Backend::Native, 4);
+        let jobs: Vec<JobSpec> = (0..6)
+            .map(|i| JobSpec {
+                name: format!("job{i}"),
+                data: random_tensor(&[17, 17], 10 + i as u64),
+                mode: Mode::Serial,
+                error_bound: if i % 2 == 0 { Some(1e-3) } else { None },
+                codec: Codec::HuffRle,
+            })
+            .collect();
+        let results = c.run_batch(jobs);
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            let r = r.as_ref().unwrap();
+            assert_eq!(r.name, format!("job{i}"));
+            if i % 2 == 0 {
+                assert!(r.compressed.is_some());
+            } else {
+                assert!(r.refactored.is_some());
+                assert_eq!(r.class_bytes.len(), 4 + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_backend_matches_native() {
+        let data = random_tensor(&[17, 9], 3);
+        let native = Coordinator::new(Backend::Native, 1);
+        let base = Coordinator::new(Backend::Baseline, 1);
+        let job = |d: &Tensor<f64>| JobSpec {
+            name: "x".into(),
+            data: d.clone(),
+            mode: Mode::Serial,
+            error_bound: None,
+            codec: Codec::Zlib,
+        };
+        let a = native.run_job(job(&data)).unwrap().refactored.unwrap();
+        let b = base.run_job(job(&data)).unwrap().refactored.unwrap();
+        assert!(linf(a.data(), b.data()) < 1e-11);
+    }
+}

@@ -1,0 +1,410 @@
+//! Grid hierarchy, tensors, and strided level views.
+//!
+//! The refactorable domain is a tensor-product grid: each dimension has
+//! `2^k + 1` nodes at arbitrary strictly-increasing coordinates. Level `l`
+//! of the hierarchy keeps every `2^(L-l)`-th node per dimension. The
+//! *reordered data layout* of the paper (§3.3) corresponds to gathering a
+//! level view into a contiguous buffer ([`gather_view`]) so every kernel
+//! runs at stride 1 — see [`crate::refactor`].
+
+pub mod pad;
+
+use crate::util::Scalar;
+
+/// A dense row-major tensor (1–4 dimensions in practice).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::ZERO; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Fill from a function of the multi-index.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> T) -> Self {
+        let mut t = Self::zeros(shape);
+        let mut idx = vec![0usize; shape.len()];
+        for i in 0..t.data.len() {
+            t.data[i] = f(&idx);
+            for d in (0..shape.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Row-major element strides.
+    pub fn strides(&self) -> Vec<usize> {
+        row_major_strides(&self.shape)
+    }
+
+    /// Linear offset of a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+
+    pub fn get(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Total bytes of payload.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * T::BYTES
+    }
+}
+
+pub fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// The multigrid hierarchy of a tensor-product grid.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    shape: Vec<usize>,
+    /// Per-dimension node coordinates (finest level), strictly increasing.
+    coords: Vec<Vec<f64>>,
+    /// Number of decompose steps (levels below the finest).
+    nlevels: usize,
+}
+
+impl Hierarchy {
+    /// Uniform grid on `[0, 1]^d` with the maximum level count.
+    pub fn uniform(shape: &[usize]) -> Self {
+        let coords = shape
+            .iter()
+            .map(|&n| (0..n).map(|i| i as f64 / (n - 1) as f64).collect())
+            .collect();
+        Self::new(shape, coords, None)
+    }
+
+    /// Grid with explicit coordinates. `nlevels = None` means maximal.
+    pub fn new(shape: &[usize], coords: Vec<Vec<f64>>, nlevels: Option<usize>) -> Self {
+        assert_eq!(shape.len(), coords.len());
+        let max = max_levels(shape).expect("all dimension sizes must be 2^k+1, k>=1");
+        for (n, c) in shape.iter().zip(&coords) {
+            assert_eq!(*n, c.len(), "coords length must match dimension size");
+            assert!(
+                c.windows(2).all(|w| w[0] < w[1]),
+                "coordinates must be strictly increasing"
+            );
+        }
+        let nlevels = nlevels.unwrap_or(max);
+        assert!(nlevels <= max, "nlevels {nlevels} exceeds max {max}");
+        Hierarchy {
+            shape: shape.to_vec(),
+            coords,
+            nlevels,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn nlevels(&self) -> usize {
+        self.nlevels
+    }
+
+    pub fn coords(&self) -> &[Vec<f64>] {
+        &self.coords
+    }
+
+    /// Stride (in fine-grid index units) of decompose step `step` (0-based).
+    pub fn step_stride(&self, step: usize) -> usize {
+        1 << step
+    }
+
+    /// Shape of the level view processed at decompose step `step`.
+    pub fn level_shape(&self, step: usize) -> Vec<usize> {
+        let s = self.step_stride(step);
+        self.shape.iter().map(|&n| (n - 1) / s + 1).collect()
+    }
+
+    /// Coordinates of the level view at decompose step `step`.
+    pub fn level_coords(&self, step: usize) -> Vec<Vec<f64>> {
+        let s = self.step_stride(step);
+        self.coords
+            .iter()
+            .map(|c| c.iter().copied().step_by(s).collect())
+            .collect()
+    }
+
+    /// Number of coefficient classes (`nlevels + 1`; class 0 = coarsest grid).
+    pub fn nclasses(&self) -> usize {
+        self.nlevels + 1
+    }
+
+    /// Total number of nodes.
+    pub fn nnodes(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Largest number of decompose steps a shape supports, or `None` if some
+/// dimension is not of size `2^k + 1`.
+pub fn max_levels(shape: &[usize]) -> Option<usize> {
+    let mut min = usize::MAX;
+    for &n in shape {
+        if n < 3 || !(n - 1).is_power_of_two() {
+            return None;
+        }
+        min = min.min((n - 1).trailing_zeros() as usize);
+    }
+    if min == usize::MAX {
+        None
+    } else {
+        Some(min)
+    }
+}
+
+/// Gather the stride-`s` level view of `src` (shape `full`) into the
+/// contiguous buffer `dst` (the paper's §3.3 reordered, stride-1 layout).
+pub fn gather_view<T: Scalar>(src: &[T], full: &[usize], s: usize, dst: &mut [T]) {
+    copy_view::<T, false>(src, full, s, dst)
+}
+
+/// Scatter a contiguous level buffer back into the stride-`s` positions.
+pub fn scatter_view<T: Scalar>(dst: &mut [T], full: &[usize], s: usize, src: &[T]) {
+    copy_view_mut(dst, full, s, src)
+}
+
+fn view_shape(full: &[usize], s: usize) -> Vec<usize> {
+    full.iter().map(|&n| (n - 1) / s + 1).collect()
+}
+
+fn copy_view<T: Scalar, const _W: bool>(src: &[T], full: &[usize], s: usize, dst: &mut [T]) {
+    let vshape = view_shape(full, s);
+    let vlen: usize = vshape.iter().product();
+    assert_eq!(dst.len(), vlen);
+    let fstrides = row_major_strides(full);
+    let d = full.len();
+    // innermost dim handled as a strided copy
+    let inner_m = vshape[d - 1];
+    let inner_stride = s * fstrides[d - 1];
+    let outer: usize = vshape[..d - 1].iter().product();
+    let mut idx = vec![0usize; d - 1];
+    for o in 0..outer {
+        let base: usize = idx
+            .iter()
+            .enumerate()
+            .map(|(dd, &i)| i * s * fstrides[dd])
+            .sum();
+        let out = &mut dst[o * inner_m..(o + 1) * inner_m];
+        for (j, v) in out.iter_mut().enumerate() {
+            *v = src[base + j * inner_stride];
+        }
+        bump(&mut idx, &vshape[..d - 1]);
+    }
+}
+
+fn copy_view_mut<T: Scalar>(dst: &mut [T], full: &[usize], s: usize, src: &[T]) {
+    let vshape = view_shape(full, s);
+    let vlen: usize = vshape.iter().product();
+    assert_eq!(src.len(), vlen);
+    let fstrides = row_major_strides(full);
+    let d = full.len();
+    let inner_m = vshape[d - 1];
+    let inner_stride = s * fstrides[d - 1];
+    let outer: usize = vshape[..d - 1].iter().product();
+    let mut idx = vec![0usize; d - 1];
+    for o in 0..outer {
+        let base: usize = idx
+            .iter()
+            .enumerate()
+            .map(|(dd, &i)| i * s * fstrides[dd])
+            .sum();
+        let row = &src[o * inner_m..(o + 1) * inner_m];
+        for (j, v) in row.iter().enumerate() {
+            dst[base + j * inner_stride] = *v;
+        }
+        bump(&mut idx, &vshape[..d - 1]);
+    }
+}
+
+/// `dst[view positions] = sign * src + dst` — scatter-accumulate a
+/// contiguous level buffer onto the stride-`s` positions (used to apply
+/// corrections to the coarse grid in place).
+pub fn scatter_add_view<T: Scalar>(dst: &mut [T], full: &[usize], s: usize, src: &[T], sign: T) {
+    let vshape = view_shape(full, s);
+    let vlen: usize = vshape.iter().product();
+    assert_eq!(src.len(), vlen);
+    let fstrides = row_major_strides(full);
+    let d = full.len();
+    let inner_m = vshape[d - 1];
+    let inner_stride = s * fstrides[d - 1];
+    let outer: usize = vshape[..d - 1].iter().product();
+    let mut idx = vec![0usize; d - 1];
+    for o in 0..outer {
+        let base: usize = idx
+            .iter()
+            .enumerate()
+            .map(|(dd, &i)| i * s * fstrides[dd])
+            .sum();
+        let row = &src[o * inner_m..(o + 1) * inner_m];
+        for (j, v) in row.iter().enumerate() {
+            let t = &mut dst[base + j * inner_stride];
+            *t = sign.mul_add(*v, *t);
+        }
+        bump(&mut idx, &vshape[..d - 1]);
+    }
+}
+
+/// Zero the stride-`s` view positions of `dst` (builds coefficient fields).
+pub fn zero_view<T: Scalar>(dst: &mut [T], full: &[usize], s: usize) {
+    let vshape = view_shape(full, s);
+    let fstrides = row_major_strides(full);
+    let d = full.len();
+    let inner_m = vshape[d - 1];
+    let inner_stride = s * fstrides[d - 1];
+    let outer: usize = vshape[..d - 1].iter().product();
+    let mut idx = vec![0usize; d - 1];
+    for _ in 0..outer {
+        let base: usize = idx
+            .iter()
+            .enumerate()
+            .map(|(dd, &i)| i * s * fstrides[dd])
+            .sum();
+        for j in 0..inner_m {
+            dst[base + j * inner_stride] = T::ZERO;
+        }
+        bump(&mut idx, &vshape[..d - 1]);
+    }
+}
+
+#[inline]
+fn bump(idx: &mut [usize], shape: &[usize]) {
+    for d in (0..idx.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < shape[d] {
+            return;
+        }
+        idx[d] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_levels_validation() {
+        assert_eq!(max_levels(&[5, 17]), Some(2));
+        assert_eq!(max_levels(&[513]), Some(9));
+        assert_eq!(max_levels(&[6]), None);
+        assert_eq!(max_levels(&[2]), None);
+        assert_eq!(max_levels(&[3, 3, 3]), Some(1));
+    }
+
+    #[test]
+    fn hierarchy_levels() {
+        let h = Hierarchy::uniform(&[17, 9]);
+        assert_eq!(h.nlevels(), 3);
+        assert_eq!(h.level_shape(0), vec![17, 9]);
+        assert_eq!(h.level_shape(1), vec![9, 5]);
+        assert_eq!(h.level_shape(2), vec![5, 3]);
+        assert_eq!(h.level_coords(2)[1], vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "2^k+1")]
+    fn hierarchy_rejects_bad_shape() {
+        Hierarchy::uniform(&[6, 6]);
+    }
+
+    #[test]
+    fn tensor_indexing() {
+        let t = Tensor::from_fn(&[3, 4], |idx| (idx[0] * 10 + idx[1]) as f64);
+        assert_eq!(t.get(&[2, 3]), 23.0);
+        assert_eq!(t.strides(), vec![4, 1]);
+        assert_eq!(t.offset(&[1, 2]), 6);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let full = [5usize, 9];
+        let t = Tensor::from_fn(&full, |idx| (idx[0] * 100 + idx[1]) as f64);
+        let mut view = vec![0.0f64; 3 * 5];
+        gather_view(t.data(), &full, 2, &mut view);
+        assert_eq!(view[0], 0.0);
+        assert_eq!(view[1], 2.0); // (0,2)
+        assert_eq!(view[5], 200.0); // (2,0)
+        let mut t2 = Tensor::zeros(&full);
+        scatter_view(t2.data_mut(), &full, 2, &view);
+        for i in (0..5).step_by(2) {
+            for j in (0..9).step_by(2) {
+                assert_eq!(t2.get(&[i, j]), t.get(&[i, j]));
+            }
+        }
+        assert_eq!(t2.get(&[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn gather_stride_one_is_copy() {
+        let full = [4usize, 5]; // gather works on any shape at s=1
+        let t = Tensor::from_fn(&full, |idx| (idx[0] + idx[1]) as f32);
+        let mut view = vec![0.0f32; 20];
+        gather_view(t.data(), &full, 1, &mut view);
+        assert_eq!(view, t.data());
+    }
+}

@@ -1,0 +1,127 @@
+//! Padding of arbitrary-size tensors to refactorable `2^k + 1` shapes.
+//!
+//! The multigrid hierarchy requires every dimension to have `2^k + 1`
+//! nodes (the paper's experiments use 513³-style sizes). Real simulation
+//! output may not; we pad by edge replication — values are continued
+//! constantly past the boundary, which introduces no new extrema and keeps
+//! coefficients near the padded edge small — and record the original shape
+//! so recomposition can crop exactly.
+
+use crate::grid::{row_major_strides, Tensor};
+use crate::util::Scalar;
+
+/// Smallest `2^k + 1 >= n` (with `k >= 1`).
+pub fn next_refactorable(n: usize) -> usize {
+    assert!(n >= 1);
+    let mut k = 1usize;
+    while (1 << k) + 1 < n {
+        k += 1;
+    }
+    (1 << k) + 1
+}
+
+/// Result of padding: the padded tensor plus the crop metadata.
+#[derive(Clone, Debug)]
+pub struct Padded<T> {
+    pub tensor: Tensor<T>,
+    pub original_shape: Vec<usize>,
+}
+
+/// Pad every dimension up to the next `2^k+1` size by edge replication.
+pub fn pad_to_refactorable<T: Scalar>(t: &Tensor<T>) -> Padded<T> {
+    let target: Vec<usize> = t.shape().iter().map(|&n| next_refactorable(n)).collect();
+    if target == t.shape() {
+        return Padded {
+            tensor: t.clone(),
+            original_shape: t.shape().to_vec(),
+        };
+    }
+    let out = Tensor::from_fn(&target, |idx| {
+        let clamped: Vec<usize> = idx
+            .iter()
+            .zip(t.shape())
+            .map(|(&i, &n)| i.min(n - 1))
+            .collect();
+        t.get(&clamped)
+    });
+    Padded {
+        tensor: out,
+        original_shape: t.shape().to_vec(),
+    }
+}
+
+/// Crop a padded tensor back to its original shape.
+pub fn crop<T: Scalar>(t: &Tensor<T>, original_shape: &[usize]) -> Tensor<T> {
+    assert_eq!(t.ndim(), original_shape.len());
+    if t.shape() == original_shape {
+        return t.clone();
+    }
+    let strides = row_major_strides(t.shape());
+    Tensor::from_fn(original_shape, |idx| {
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        t.data()[off]
+    })
+}
+
+/// Extend coordinate arrays to match a padded shape (uniform continuation
+/// with the last spacing).
+pub fn pad_coords(coords: &[Vec<f64>], target: &[usize]) -> Vec<Vec<f64>> {
+    coords
+        .iter()
+        .zip(target)
+        .map(|(c, &n)| {
+            let mut out = c.clone();
+            let dx = if c.len() >= 2 {
+                c[c.len() - 1] - c[c.len() - 2]
+            } else {
+                1.0
+            };
+            while out.len() < n {
+                out.push(out.last().unwrap() + dx);
+            }
+            out
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_sizes() {
+        assert_eq!(next_refactorable(1), 3);
+        assert_eq!(next_refactorable(3), 3);
+        assert_eq!(next_refactorable(4), 5);
+        assert_eq!(next_refactorable(6), 9);
+        assert_eq!(next_refactorable(512), 513);
+        assert_eq!(next_refactorable(513), 513);
+        assert_eq!(next_refactorable(514), 1025);
+    }
+
+    #[test]
+    fn pad_and_crop_roundtrip() {
+        let t = Tensor::from_fn(&[4, 6], |idx| (idx[0] * 10 + idx[1]) as f64);
+        let p = pad_to_refactorable(&t);
+        assert_eq!(p.tensor.shape(), &[5, 9]);
+        // edge replication
+        assert_eq!(p.tensor.get(&[4, 0]), t.get(&[3, 0]));
+        assert_eq!(p.tensor.get(&[4, 8]), t.get(&[3, 5]));
+        let c = crop(&p.tensor, &p.original_shape);
+        assert_eq!(c, t);
+    }
+
+    #[test]
+    fn already_refactorable_is_identity() {
+        let t = Tensor::from_fn(&[5, 9], |idx| idx[0] as f32);
+        let p = pad_to_refactorable(&t);
+        assert_eq!(p.tensor, t);
+    }
+
+    #[test]
+    fn coords_extended_monotone() {
+        let c = pad_coords(&[vec![0.0, 0.5, 0.75, 1.0]], &[5]);
+        assert_eq!(c[0].len(), 5);
+        assert!(c[0].windows(2).all(|w| w[0] < w[1]));
+    }
+}

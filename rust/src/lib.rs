@@ -1,0 +1,40 @@
+//! # mgr — Multigrid-based Hierarchical Scientific Data Refactoring
+//!
+//! Reproduction of Chen et al., *"Scalable Multigrid-based Hierarchical
+//! Scientific Data Refactoring on GPUs"* (2021) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2** live under `python/compile/` and are AOT-lowered to HLO
+//!   text artifacts consumed by [`runtime`]. Python never runs at request
+//!   time.
+//! * **Layer 3** is this crate: the refactoring coordinator, the native
+//!   compute core (which doubles as the paper's SOTA-CPU baseline in its
+//!   [`baseline`] configuration), the multi-GPU performance simulator, the
+//!   multi-tier storage model, and the MGARD-style compression pipeline.
+//!
+//! Top-level map (see `DESIGN.md` for the paper-section cross-reference):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`grid`] | grid hierarchy, strided level views, padding |
+//! | [`refactor`] | decompose/recompose (GPK/LPK/IPK native kernels), coefficient classes, error control |
+//! | [`baseline`] | state-of-the-art (pre-paper) refactoring used as comparison baseline |
+//! | [`runtime`] | PJRT artifact registry + executor (the `xla` crate) |
+//! | [`coordinator`] | jobs, partitioning, cooperative-parallel orchestration |
+//! | [`simgpu`] | device/interconnect performance model, Table-2 auto-tuner, Summit cluster sim |
+//! | [`storage`] | multi-tier storage + parallel-I/O cost model |
+//! | [`compress`] | quantizer + lossless coders + MGARD compression pipeline |
+//! | [`sim`] | Gray-Scott reaction-diffusion workload generator |
+//! | [`vis`] | iso-surface area metric for the visualization showcase |
+
+pub mod baseline;
+pub mod compress;
+pub mod coordinator;
+pub mod grid;
+pub mod refactor;
+pub mod runtime;
+pub mod sim;
+pub mod simgpu;
+pub mod storage;
+pub mod util;
+pub mod vis;

@@ -1,0 +1,249 @@
+//! `mgr` — the data-refactoring coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `info` — artifact registry + device model summary.
+//! * `refactor` — decompose a Gray-Scott (or random) field, report class
+//!   sizes and error-control norms.
+//! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
+//! * `serve` — run a batch of jobs through the coordinator worker pool.
+//! * `pjrt-check` — execute the AOT artifacts and verify them against the
+//!   native core (the cross-layer integration check).
+
+use anyhow::{bail, Result};
+
+use mgr::compress::{Codec, MgardCompressor};
+use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::{class_norms, split_classes, Refactorer};
+use mgr::runtime::EngineHandle;
+use mgr::sim::GrayScott;
+use mgr::simgpu::{ClusterModel, DeviceSpec};
+use mgr::util::cli::Args;
+use mgr::util::rng::Rng;
+use mgr::util::stats::{linf, time};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_field(args: &Args) -> Result<Tensor<f64>> {
+    let shape = args.get_shape("shape", &[33, 33, 33])?;
+    match args.get_or("input", "grayscott").as_str() {
+        "grayscott" => {
+            if shape.len() != 3 || shape.iter().any(|&n| n != shape[0]) {
+                bail!("grayscott input needs a cubic --shape NxNxN");
+            }
+            let steps = args.get_usize("steps", 200)?;
+            let mut sim = GrayScott::new(shape[0], args.get_usize("seed", 7)? as u64);
+            sim.step(steps);
+            Ok(sim.v_field())
+        }
+        "random" => {
+            let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+            Ok(Tensor::from_fn(&shape, |_| rng.normal()))
+        }
+        other => bail!("unknown --input '{other}' (grayscott|random)"),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("info") => info(args),
+        Some("refactor") => refactor(args),
+        Some("compress") | Some("roundtrip") => compress(args),
+        Some("serve") => serve(args),
+        Some("pjrt-check") => pjrt_check(args),
+        _ => {
+            println!(
+                "mgr — multigrid-based hierarchical data refactoring\n\n\
+                 usage: mgr <subcommand> [options]\n\n\
+                 subcommands:\n\
+                 \x20 info                      artifact + device summary\n\
+                 \x20 refactor   [--shape NxNxN --input grayscott|random]\n\
+                 \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle]\n\
+                 \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
+                 \x20 pjrt-check [--artifacts DIR]\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    println!("== devices (analytic models, see DESIGN.md) ==");
+    for d in [DeviceSpec::volta_v100(), DeviceSpec::turing_2080ti()] {
+        let m = ClusterModel::new(d.clone(), 3, 9, 8);
+        println!(
+            "  {:<10}  mem {:>5.0} GB/s   refactor peak {:>5.1} GB/s",
+            d.name,
+            d.mem_bw / 1e9,
+            m.theoretical_peak() / 1e9
+        );
+    }
+    println!("== artifacts ({dir}) ==");
+    match mgr::runtime::Manifest::load(format!("{dir}/manifest.json")) {
+        Ok(m) => {
+            for v in &m.variants {
+                println!(
+                    "  {:<40} {:?} {} levels={}",
+                    v.name, v.shape, v.dtype, v.nlevels
+                );
+            }
+        }
+        Err(e) => println!("  (none: {e})"),
+    }
+    Ok(())
+}
+
+fn refactor(args: &Args) -> Result<()> {
+    let data = load_field(args)?;
+    let h = Hierarchy::uniform(data.shape());
+    let mut t = data.clone();
+    let (_, secs) = time(|| Refactorer::new(h.clone()).decompose(&mut t));
+    let classes = split_classes(&t, &h);
+    let norms = class_norms(&t, &h);
+    println!(
+        "decomposed {:?} ({} levels) in {:.1} ms — {:.2} GB/s",
+        data.shape(),
+        h.nlevels(),
+        secs * 1e3,
+        data.nbytes() as f64 / secs / 1e9
+    );
+    println!("{:<8} {:>12} {:>14} {:>14}", "class", "values", "bytes", "max|coef|");
+    for (k, c) in classes.iter().enumerate() {
+        println!(
+            "{:<8} {:>12} {:>14} {:>14.3e}",
+            k,
+            c.len(),
+            c.len() * 8,
+            norms.linf[k]
+        );
+    }
+    Ok(())
+}
+
+fn compress(args: &Args) -> Result<()> {
+    let data = load_field(args)?;
+    let eb = args.get_f64("eb", 1e-3)?;
+    let codec = match args.get_or("codec", "zlib").as_str() {
+        "zlib" => Codec::Zlib,
+        "huff-rle" => Codec::HuffRle,
+        other => bail!("unknown codec '{other}'"),
+    };
+    let h = Hierarchy::uniform(data.shape());
+    let mut c = MgardCompressor::new(h, codec);
+    let blob = c.compress(&data, eb)?;
+    println!(
+        "compressed {:?}: {} -> {} bytes (ratio {:.2}x) in {:.1} ms",
+        data.shape(),
+        blob.original_bytes,
+        blob.payload.len(),
+        blob.ratio(),
+        c.stats.compress_total() * 1e3
+    );
+    println!(
+        "  breakdown: decompose {:.1} ms, quantize {:.1} ms, {} {:.1} ms",
+        c.stats.decompose_s * 1e3,
+        c.stats.quantize_s * 1e3,
+        codec.name(),
+        c.stats.encode_s * 1e3
+    );
+    let back = c.decompress(&blob)?;
+    let err = linf(back.data(), data.data());
+    println!(
+        "  decompressed in {:.1} ms; L∞ error {:.3e} (bound {eb:.1e}) — {}",
+        c.stats.decompress_total() * 1e3,
+        err,
+        if err <= eb { "OK" } else { "VIOLATED" }
+    );
+    if err > eb {
+        bail!("error bound violated");
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let njobs = args.get_usize("jobs", 8)?;
+    let workers = args.get_usize("workers", 4)?;
+    let shape = args.get_shape("shape", &[33, 33, 33])?;
+    let mode = match args.get_or("mode", "serial").as_str() {
+        "serial" => JobMode::Serial,
+        "coop" => JobMode::Cooperative { workers: 3 },
+        "emb" => JobMode::Embarrassing { devices: 2 },
+        other => bail!("unknown mode '{other}'"),
+    };
+    let mut rng = Rng::new(11);
+    let jobs: Vec<JobSpec> = (0..njobs)
+        .map(|i| JobSpec {
+            name: format!("job{i}"),
+            data: Tensor::from_fn(&shape, |_| rng.normal()),
+            mode,
+            error_bound: None,
+            codec: Codec::Zlib,
+        })
+        .collect();
+    let total_bytes: usize = jobs.iter().map(|j| j.data.nbytes()).sum();
+    let coord = Coordinator::new(Backend::Native, workers);
+    let (results, secs) = time(|| coord.run_batch(jobs));
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    println!(
+        "served {ok}/{njobs} jobs ({} workers) in {:.1} ms — {:.2} GB/s aggregate",
+        workers,
+        secs * 1e3,
+        total_bytes as f64 / secs / 1e9
+    );
+    for r in results {
+        let r = r?;
+        println!(
+            "  {:<8} {:.1} ms  {:.2} GB/s",
+            r.name,
+            r.seconds * 1e3,
+            r.throughput_gbps()
+        );
+    }
+    Ok(())
+}
+
+fn pjrt_check(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let engine = EngineHandle::spawn(dir.into())?;
+    let variants = engine.variants()?;
+    println!("checking {} artifacts against the native core", variants.len());
+    let mut checked = 0;
+    for v in variants.iter().filter(|v| v.op == "decompose") {
+        let shape = v.shape.clone();
+        let h = Hierarchy::uniform(&shape);
+        let mut rng = Rng::new(42);
+        let err = if v.dtype == "float32" {
+            let t = Tensor::from_fn(&shape, |_| rng.normal() as f32);
+            let got = engine.run(&v.name, &t, &h.coords().to_vec())?;
+            let mut want = t.clone();
+            Refactorer::new(h.clone()).decompose(&mut want);
+            linf(got.data(), want.data())
+        } else {
+            let t = Tensor::from_fn(&shape, |_| rng.normal());
+            let got = engine.run(&v.name, &t, &h.coords().to_vec())?;
+            let mut want = t.clone();
+            Refactorer::new(h.clone()).decompose(&mut want);
+            linf(got.data(), want.data())
+        };
+        let tol = if v.dtype == "float32" { 1e-3 } else { 1e-9 };
+        println!("  {:<40} L∞(pjrt, native) = {err:.2e}", v.name);
+        if err > tol {
+            bail!("{}: PJRT and native disagree ({err})", v.name);
+        }
+        checked += 1;
+    }
+    println!("pjrt-check OK ({checked} decompose artifacts verified)");
+    Ok(())
+}

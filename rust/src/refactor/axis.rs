@@ -1,0 +1,386 @@
+//! Axis-wise kernel primitives on contiguous row-major buffers.
+//!
+//! Every primitive processes one dimension (`axis`) of a `shape`-described
+//! buffer, vectorizing over the `inner` trailing elements — the layout the
+//! §3.3 reordered gather guarantees makes `inner` contiguous, so the inner
+//! loops compile to straight-line SIMD.
+//!
+//! Naming follows the paper: `upsample` is the GPK interpolation engine,
+//! `masstrans` the LPK fused stencil, `thomas` the IPK solver.
+
+use crate::refactor::DimOps;
+use crate::util::Scalar;
+
+/// Decompose `shape` relative to `axis` into `(outer, m, inner)` loop bounds.
+#[inline]
+pub fn axis_split(shape: &[usize], axis: usize) -> (usize, usize, usize) {
+    let outer = shape[..axis].iter().product();
+    let m = shape[axis];
+    let inner = shape[axis + 1..].iter().product();
+    (outer, m, inner)
+}
+
+/// GPK interpolation: linearly upsample `src` (size `a+1` along `axis`)
+/// into `dst` (size `2a+1` along `axis`). Even rows copy, odd rows are the
+/// fma-form interpolants `fma(r, hi, fma(-r, lo, lo))`.
+pub fn upsample<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    axis: usize,
+    r: &[T],
+    dst: &mut [T],
+) {
+    let (outer, mc, inner) = axis_split(src_shape, axis);
+    let a = mc - 1;
+    debug_assert_eq!(r.len(), a);
+    let mf = 2 * a + 1;
+    debug_assert_eq!(dst.len(), outer * mf * inner);
+    for o in 0..outer {
+        let sb = o * mc * inner;
+        let db = o * mf * inner;
+        for i in 0..a {
+            let lo = &src[sb + i * inner..sb + (i + 1) * inner];
+            let hi = &src[sb + (i + 1) * inner..sb + (i + 2) * inner];
+            let (even_row, rest) = dst[db + 2 * i * inner..].split_at_mut(inner);
+            even_row.copy_from_slice(lo);
+            let odd_row = &mut rest[..inner];
+            let ri = r[i];
+            for e in 0..inner {
+                // fma(r, hi, fma(-r, lo, lo))
+                odd_row[e] = ri.mul_add(hi[e], (-ri).mul_add(lo[e], lo[e]));
+            }
+        }
+        dst[db + 2 * a * inner..db + mf * inner]
+            .copy_from_slice(&src[sb + a * inner..sb + mc * inner]);
+    }
+}
+
+/// LPK: fused mass × transfer apply along `axis`.
+///
+/// `src` has size `m = 2a+1` along `axis`; `dst` gets size `a+1`. For each
+/// coarse output `i`:
+///
+/// ```text
+/// dst_i = wl_i · (M src)_{2i-1} + (M src)_{2i} + wr_i · (M src)_{2i+1}
+/// ```
+///
+/// with the mass rows expanded in registers (the intermediate `M src`
+/// never hits memory — the paper's mass-trans fusion).
+pub fn masstrans<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    axis: usize,
+    ops: &DimOps<T>,
+    dst: &mut [T],
+) {
+    let (outer, m, inner) = axis_split(src_shape, axis);
+    debug_assert_eq!(m, ops.fine_len());
+    let a = (m - 1) / 2;
+    debug_assert_eq!(dst.len(), outer * (a + 1) * inner);
+    let k = &ops.k;
+
+    for o in 0..outer {
+        let sb = o * m * inner;
+        let db = o * (a + 1) * inner;
+        for i in 0..=a {
+            let j = 2 * i;
+            let row = &mut dst[db + i * inner..db + (i + 1) * inner];
+            // five precomputed taps centred at source row 2i (the fused
+            // mass-trans "K matrix"); boundary taps carry zero weight but
+            // would index out of bounds, so clamp the row range instead
+            let t0 = if j >= 2 { k[0][i] } else { T::ZERO };
+            let t1 = if j >= 1 { k[1][i] } else { T::ZERO };
+            let t2 = k[2][i];
+            let t3 = if j + 1 < m { k[3][i] } else { T::ZERO };
+            let t4 = if j + 2 < m { k[4][i] } else { T::ZERO };
+            let r0 = &src[sb + j.saturating_sub(2) * inner..][..inner];
+            let r1 = &src[sb + j.saturating_sub(1) * inner..][..inner];
+            let r2 = &src[sb + j * inner..][..inner];
+            let r3 = &src[sb + (j + 1).min(m - 1) * inner..][..inner];
+            let r4 = &src[sb + (j + 2).min(m - 1) * inner..][..inner];
+            for e in 0..inner {
+                let acc = t0.mul_add(r0[e], t1 * r1[e]);
+                let acc = t2.mul_add(r2[e], acc);
+                let acc = t3.mul_add(r3[e], acc);
+                row[e] = t4.mul_add(r4[e], acc);
+            }
+        }
+    }
+}
+
+/// IPK: in-place batched Thomas solve of `M z = f` along `axis`.
+///
+/// Forward sweep `dp_i = (f_i - sub_i · dp_{i-1}) · denom_i`, backward
+/// sweep `z_i = dp_i - cp_i · z_{i+1}` (the paper's Table-3 fma forms),
+/// with every `inner` lane carrying an independent load vector — the
+/// paper's `O(n²)` batched-vector concurrency maps to SIMD lanes here.
+pub fn thomas<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, ops: &DimOps<T>) {
+    let (outer, m, inner) = axis_split(shape, axis);
+    debug_assert_eq!(m, ops.coarse_len());
+    for o in 0..outer {
+        let b = o * m * inner;
+        // forward
+        for e in 0..inner {
+            buf[b + e] = buf[b + e] * ops.denom[0];
+        }
+        for i in 1..m {
+            let (prev, cur) = buf[b + (i - 1) * inner..].split_at_mut(inner);
+            let cur = &mut cur[..inner];
+            let s = ops.sub[i];
+            let d = ops.denom[i];
+            for e in 0..inner {
+                cur[e] = ((-s).mul_add(prev[e], cur[e])) * d;
+            }
+        }
+        // backward
+        for i in (0..m - 1).rev() {
+            let (cur, next) = buf[b + i * inner..].split_at_mut(inner);
+            let cur = &mut cur[..inner];
+            let c = ops.cp[i];
+            for e in 0..inner {
+                cur[e] = (-c).mul_add(next[e], cur[e]);
+            }
+        }
+    }
+}
+
+/// Fused final-dimension upsample + apply: `buf[..] += sign · interp`
+/// where the interpolant's last dimension is expanded on the fly from
+/// `src` (fine in all dims but the last, coarse in the last). Saves a
+/// full materialize-then-subtract pass over the fine array (GPK fusion;
+/// see EXPERIMENTS.md §Perf).
+pub fn upsample_apply_last<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    r: &[T],
+    buf: &mut [T],
+    sign: T,
+) {
+    let d = src_shape.len();
+    let mc = src_shape[d - 1];
+    let a = mc - 1;
+    let mf = 2 * a + 1;
+    let outer: usize = src_shape[..d - 1].iter().product();
+    debug_assert_eq!(buf.len(), outer * mf);
+    for o in 0..outer {
+        let s = &src[o * mc..(o + 1) * mc];
+        let b = &mut buf[o * mf..(o + 1) * mf];
+        for i in 0..a {
+            b[2 * i] = sign.mul_add(s[i], b[2 * i]);
+            let interp = r[i].mul_add(s[i + 1], (-r[i]).mul_add(s[i], s[i]));
+            b[2 * i + 1] = sign.mul_add(interp, b[2 * i + 1]);
+        }
+        b[2 * a] = sign.mul_add(s[a], b[2 * a]);
+    }
+}
+
+/// Single-axis GPK coefficients (temporal phase of spatiotemporal
+/// refactoring): odd rows along `axis` become `value - interpolant`, in
+/// place. Sources are even rows, which are never modified.
+pub fn coefficients_axis<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, r: &[T]) {
+    let (outer, m, inner) = axis_split(shape, axis);
+    let a = (m - 1) / 2;
+    debug_assert_eq!(r.len(), a);
+    for o in 0..outer {
+        let b = o * m * inner;
+        for j in 0..a {
+            let ri = r[j];
+            let (lo_part, rest) = buf[b + 2 * j * inner..].split_at_mut(inner);
+            let (odd, hi_part) = rest.split_at_mut(inner);
+            let hi = &hi_part[..inner];
+            for e in 0..inner {
+                let interp = ri.mul_add(hi[e], (-ri).mul_add(lo_part[e], lo_part[e]));
+                odd[e] -= interp;
+            }
+        }
+    }
+}
+
+/// Inverse of [`coefficients_axis`]: odd rows become `coef + interpolant`.
+pub fn interpolate_axis<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, r: &[T]) {
+    let (outer, m, inner) = axis_split(shape, axis);
+    let a = (m - 1) / 2;
+    for o in 0..outer {
+        let b = o * m * inner;
+        for j in 0..a {
+            let ri = r[j];
+            let (lo_part, rest) = buf[b + 2 * j * inner..].split_at_mut(inner);
+            let (odd, hi_part) = rest.split_at_mut(inner);
+            let hi = &hi_part[..inner];
+            for e in 0..inner {
+                let interp = ri.mul_add(hi[e], (-ri).mul_add(lo_part[e], lo_part[e]));
+                odd[e] += interp;
+            }
+        }
+    }
+}
+
+/// Zero the rows that are even along `axis` (leaving coefficients), used
+/// to build the temporal coefficient field.
+pub fn zero_even_axis<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize) {
+    let (outer, m, inner) = axis_split(shape, axis);
+    for o in 0..outer {
+        let b = o * m * inner;
+        for i in (0..m).step_by(2) {
+            buf[b + i * inner..b + (i + 1) * inner].fill(T::ZERO);
+        }
+    }
+}
+
+/// Add `z` (size `(m+1)/2` along `axis`) onto the even rows of `buf`.
+pub fn add_to_even_axis<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    axis: usize,
+    z: &[T],
+    sign: T,
+) {
+    let (outer, m, inner) = axis_split(shape, axis);
+    let mc = (m + 1) / 2;
+    debug_assert_eq!(z.len(), outer * mc * inner);
+    for o in 0..outer {
+        let b = o * m * inner;
+        let zb = o * mc * inner;
+        for i in 0..mc {
+            let row = &mut buf[b + 2 * i * inner..b + (2 * i + 1) * inner];
+            let zrow = &z[zb + i * inner..zb + (i + 1) * inner];
+            for e in 0..inner {
+                row[e] = sign.mul_add(zrow[e], row[e]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn uniform_ops(m: usize) -> DimOps<f64> {
+        let xs: Vec<f64> = (0..m).map(|i| i as f64 / (m - 1) as f64).collect();
+        DimOps::new(&xs)
+    }
+
+    #[test]
+    fn upsample_axis0() {
+        let ops = uniform_ops(5);
+        let src = [1.0, 2.0, 3.0];
+        let mut dst = [0.0; 5];
+        upsample(&src, &[3], 0, &ops.r, &mut dst);
+        assert_eq!(dst, [1.0, 1.5, 2.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn upsample_inner_axis() {
+        // shape (3, 2) upsampled along axis 0 -> (5, 2)
+        let ops = uniform_ops(5);
+        let src = [1.0, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let mut dst = [0.0; 10];
+        upsample(&src, &[3, 2], 0, &ops.r, &mut dst);
+        assert_eq!(dst, [1.0, 10.0, 1.5, 15.0, 2.0, 20.0, 2.5, 25.0, 3.0, 30.0]);
+    }
+
+    #[test]
+    fn masstrans_matches_dense() {
+        // dense check on a non-uniform 5-node dim
+        let xs = [0.0, 0.2, 0.5, 0.6, 1.0];
+        let ops: DimOps<f64> = DimOps::new(&xs);
+        let mut rng = Rng::new(1);
+        let v: Vec<f64> = (0..5).map(|_| rng.normal()).collect();
+        let mut out = vec![0.0; 3];
+        masstrans(&v, &[5], 0, &ops, &mut out);
+
+        // dense M and R
+        let h: Vec<f64> = xs.windows(2).map(|w| w[1] - w[0]).collect();
+        let mut mv = vec![0.0; 5];
+        mv[0] = h[0] / 3.0 * v[0] + h[0] / 6.0 * v[1];
+        mv[4] = h[3] / 3.0 * v[4] + h[3] / 6.0 * v[3];
+        for i in 1..4 {
+            mv[i] = h[i - 1] / 6.0 * v[i - 1] + (h[i - 1] + h[i]) / 3.0 * v[i] + h[i] / 6.0 * v[i + 1];
+        }
+        let wl1 = (xs[1] - xs[0]) / (xs[2] - xs[0]);
+        let wr0 = (xs[2] - xs[1]) / (xs[2] - xs[0]);
+        let wl2 = (xs[3] - xs[2]) / (xs[4] - xs[2]);
+        let wr1 = (xs[4] - xs[3]) / (xs[4] - xs[2]);
+        let want = [
+            mv[0] + wr0 * mv[1],
+            wl1 * mv[1] + mv[2] + wr1 * mv[3],
+            wl2 * mv[3] + mv[4],
+        ];
+        for i in 0..3 {
+            assert!((out[i] - want[i]).abs() < 1e-12, "{out:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn thomas_solves_mass_system() {
+        let xs: Vec<f64> = vec![0.0, 0.15, 0.3, 0.7, 1.0];
+        let ops: DimOps<f64> = DimOps::new(&xs);
+        // coarse nodes: 0.0, 0.3, 1.0 -> hc = [0.3, 0.7]
+        let f = vec![1.0, -2.0, 0.5];
+        let mut z = f.clone();
+        thomas(&mut z, &[3], 0, &ops);
+        // verify M z = f
+        let hc = [0.3, 0.7];
+        let m = [
+            [hc[0] / 3.0, hc[0] / 6.0, 0.0],
+            [hc[0] / 6.0, (hc[0] + hc[1]) / 3.0, hc[1] / 6.0],
+            [0.0, hc[1] / 6.0, hc[1] / 3.0],
+        ];
+        for i in 0..3 {
+            let got: f64 = (0..3).map(|j| m[i][j] * z[j]).sum();
+            assert!((got - f[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn thomas_batched_inner() {
+        // two independent systems in the inner lanes must match two solo solves
+        let xs: Vec<f64> = vec![0.0, 0.25, 0.5, 0.75, 1.0];
+        let ops: DimOps<f64> = DimOps::new(&xs);
+        let f1 = [0.3, 1.0, -0.7];
+        let f2 = [2.0, 0.1, 0.9];
+        let mut joint = vec![f1[0], f2[0], f1[1], f2[1], f1[2], f2[2]];
+        thomas(&mut joint, &[3, 2], 0, &ops);
+        let mut s1 = f1.to_vec();
+        let mut s2 = f2.to_vec();
+        thomas(&mut s1, &[3], 0, &ops);
+        thomas(&mut s2, &[3], 0, &ops);
+        for i in 0..3 {
+            assert!((joint[2 * i] - s1[i]).abs() < 1e-14);
+            assert!((joint[2 * i + 1] - s2[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn coefficients_axis_roundtrip() {
+        let ops = uniform_ops(5);
+        let mut rng = Rng::new(2);
+        let orig: Vec<f64> = (0..5 * 3).map(|_| rng.normal()).collect();
+        let mut buf = orig.clone();
+        coefficients_axis(&mut buf, &[5, 3], 0, &ops.r);
+        // even rows untouched
+        for e in 0..3 {
+            assert_eq!(buf[e], orig[e]);
+            assert_eq!(buf[2 * 3 + e], orig[2 * 3 + e]);
+        }
+        interpolate_axis(&mut buf, &[5, 3], 0, &ops.r);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn zero_even_and_add() {
+        let mut buf = vec![1.0f64; 5 * 2];
+        zero_even_axis(&mut buf, &[5, 2], 0);
+        assert_eq!(buf[0], 0.0);
+        assert_eq!(buf[2], 1.0); // odd row survives
+        let z = vec![10.0f64; 3 * 2];
+        add_to_even_axis(&mut buf, &[5, 2], 0, &z, 1.0);
+        assert_eq!(buf[0], 10.0);
+        assert_eq!(buf[2], 1.0);
+        add_to_even_axis(&mut buf, &[5, 2], 0, &z, -1.0);
+        assert_eq!(buf[0], 0.0);
+    }
+}

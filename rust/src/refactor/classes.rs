@@ -1,0 +1,158 @@
+//! Coefficient classes: the progressive representation (paper §1, Fig 1).
+//!
+//! A decomposed tensor is logically a set of `nlevels + 1` *coefficient
+//! classes*: class 0 is the coarsest-grid nodal block; class `k` holds the
+//! coefficients introduced when the stride-`2^(nlevels-k)` grid was
+//! decomposed. Splitting the interleaved tensor into per-class contiguous
+//! buffers *is* the paper's reordered storage layout — these buffers are
+//! what moves through storage tiers, networks, and the compressor.
+
+use crate::grid::{row_major_strides, Hierarchy, Tensor};
+use crate::util::Scalar;
+
+/// Number of nodes in class `k` of a hierarchy.
+pub fn class_len(h: &Hierarchy, k: usize) -> usize {
+    let nl = h.nlevels();
+    assert!(k <= nl);
+    let grid_nodes = |stride: usize| -> usize {
+        h.shape().iter().map(|&n| (n - 1) / stride + 1).product()
+    };
+    if k == 0 {
+        grid_nodes(1 << nl)
+    } else {
+        grid_nodes(1 << (nl - k)) - grid_nodes(1 << (nl - k + 1))
+    }
+}
+
+/// Iterate the positions (linear offsets) of class `k`, in canonical
+/// (row-major over the class's own grid) order.
+fn class_offsets(h: &Hierarchy, k: usize) -> Vec<usize> {
+    let nl = h.nlevels();
+    let shape = h.shape();
+    let strides = row_major_strides(shape);
+    let d = shape.len();
+    let s = if k == 0 { 1 << nl } else { 1 << (nl - k) };
+    let vshape: Vec<usize> = shape.iter().map(|&n| (n - 1) / s + 1).collect();
+    let mut out = Vec::with_capacity(class_len(h, k));
+    let mut idx = vec![0usize; d];
+    let total: usize = vshape.iter().product();
+    for _ in 0..total {
+        // skip nodes that belong to the next coarser grid (all-even local)
+        let keep = k == 0 || idx.iter().any(|&i| i % 2 == 1);
+        if keep {
+            let off: usize = idx
+                .iter()
+                .zip(&strides)
+                .map(|(&i, st)| i * s * st)
+                .sum();
+            out.push(off);
+        }
+        for dd in (0..d).rev() {
+            idx[dd] += 1;
+            if idx[dd] < vshape[dd] {
+                break;
+            }
+            idx[dd] = 0;
+        }
+    }
+    out
+}
+
+/// Split a decomposed tensor into its coefficient classes
+/// (`nlevels + 1` contiguous buffers, coarsest first).
+pub fn split_classes<T: Scalar>(t: &Tensor<T>, h: &Hierarchy) -> Vec<Vec<T>> {
+    assert_eq!(t.shape(), h.shape());
+    (0..h.nclasses())
+        .map(|k| {
+            class_offsets(h, k)
+                .into_iter()
+                .map(|o| t.data()[o])
+                .collect()
+        })
+        .collect()
+}
+
+/// Assemble a decomposed tensor from (a prefix of) its classes; missing
+/// classes are treated as all-zero — this is how a reader reconstructs a
+/// reduced-fidelity approximation.
+pub fn assemble_classes<T: Scalar>(classes: &[&[T]], h: &Hierarchy) -> Tensor<T> {
+    assert!(!classes.is_empty() && classes.len() <= h.nclasses());
+    let mut t = Tensor::zeros(h.shape());
+    for (k, class) in classes.iter().enumerate() {
+        let offs = class_offsets(h, k);
+        assert_eq!(offs.len(), class.len(), "class {k} length mismatch");
+        for (o, v) in offs.into_iter().zip(class.iter()) {
+            t.data_mut()[o] = *v;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::refactor::Refactorer;
+    use crate::util::rng::Rng;
+    use crate::util::stats::linf;
+
+    #[test]
+    fn class_lengths_partition() {
+        let h = Hierarchy::uniform(&[17, 33]);
+        let total: usize = (0..h.nclasses()).map(|k| class_len(&h, k)).sum();
+        assert_eq!(total, 17 * 33);
+        assert_eq!(class_len(&h, 0), 2 * 3); // stride 16 grid: 2 x 3 nodes
+    }
+
+    #[test]
+    fn split_assemble_roundtrip() {
+        let h = Hierarchy::uniform(&[9, 9]);
+        let mut rng = Rng::new(1);
+        let t = Tensor::from_fn(&[9, 9], |_| rng.normal());
+        let classes = split_classes(&t, &h);
+        assert_eq!(classes.len(), 4);
+        let refs: Vec<&[f64]> = classes.iter().map(|c| c.as_slice()).collect();
+        let back = assemble_classes(&refs, &h);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn prefix_assembly_equals_truncation() {
+        let shape = [17usize, 17];
+        let h = Hierarchy::uniform(&shape);
+        let mut rng = Rng::new(2);
+        let mut t = Tensor::from_fn(&shape, |_| rng.normal());
+        let orig = t.clone();
+        let mut r = Refactorer::new(h.clone());
+        r.decompose(&mut t);
+        let classes = split_classes(&t, &h);
+
+        // keeping every class reproduces the data exactly
+        let refs: Vec<&[f64]> = classes.iter().map(|c| c.as_slice()).collect();
+        let mut full = assemble_classes(&refs, &h);
+        r.recompose(&mut full);
+        assert!(linf(full.data(), orig.data()) < 1e-11);
+
+        // error decreases as more classes are kept
+        let mut last = f64::INFINITY;
+        for keep in 1..=h.nclasses() {
+            let refs: Vec<&[f64]> = classes[..keep].iter().map(|c| c.as_slice()).collect();
+            let mut approx = assemble_classes(&refs, &h);
+            r.recompose(&mut approx);
+            let e = crate::util::stats::rmse(approx.data(), orig.data());
+            assert!(e <= last + 1e-12, "keep={keep}: {e} > {last}");
+            last = e;
+        }
+        assert!(last < 1e-11);
+    }
+
+    #[test]
+    fn class_sizes_bytes() {
+        // geometric growth: finer classes dominate the payload
+        let h = Hierarchy::uniform(&[33, 33, 33]);
+        let sizes: Vec<usize> = (0..h.nclasses()).map(|k| class_len(&h, k)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 33 * 33 * 33);
+        for k in 1..sizes.len() - 1 {
+            assert!(sizes[k + 1] > sizes[k]);
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Error control for progressive reconstruction (paper §1, §5.1).
+//!
+//! Readers choose how many coefficient classes to fetch based on an
+//! accuracy requirement. We provide (a) cheap per-class norm summaries
+//! computed at write time, (b) a conservative error *estimate* for any
+//! prefix, and (c) exact error evaluation by actual recomposition (used by
+//! the showcase experiments to validate the estimates).
+
+use crate::grid::{Hierarchy, Tensor};
+use crate::refactor::classes::{assemble_classes, split_classes};
+use crate::refactor::Refactorer;
+use crate::util::stats;
+use crate::util::Scalar;
+
+/// Per-class magnitude summary recorded alongside the refactored data.
+#[derive(Clone, Debug)]
+pub struct ClassNorms {
+    /// max |coefficient| per class
+    pub linf: Vec<f64>,
+    /// sqrt(sum coefficient²) per class
+    pub l2: Vec<f64>,
+}
+
+/// Compute per-class norms of a decomposed tensor.
+pub fn class_norms<T: Scalar>(t: &Tensor<T>, h: &Hierarchy) -> ClassNorms {
+    let classes = split_classes(t, h);
+    let mut linf = Vec::with_capacity(classes.len());
+    let mut l2 = Vec::with_capacity(classes.len());
+    for c in &classes {
+        let mut mx = 0.0f64;
+        let mut ss = 0.0f64;
+        for v in c {
+            let a = v.to_f64().abs();
+            mx = mx.max(a);
+            ss += a * a;
+        }
+        linf.push(mx);
+        l2.push(ss.sqrt());
+    }
+    ClassNorms { linf, l2 }
+}
+
+impl ClassNorms {
+    /// Conservative L∞ error estimate when keeping classes `0..keep`.
+    ///
+    /// Each omitted class-`k` coefficient perturbs the reconstruction
+    /// through an interpolation cascade whose operator norm is 1 per
+    /// level, so the triangle inequality bounds the error by the sum of
+    /// omitted class L∞ norms times the cascade depth factor. This is the
+    /// standard (loose) multilevel bound; the examples compare it against
+    /// exact errors.
+    pub fn linf_estimate(&self, keep: usize) -> f64 {
+        self.linf[keep.min(self.linf.len())..].iter().sum()
+    }
+}
+
+/// Reconstruct the approximation carried by classes `0..keep`.
+pub fn recompose_with_classes<T: Scalar>(
+    decomposed: &Tensor<T>,
+    h: &Hierarchy,
+    keep: usize,
+) -> Tensor<T> {
+    assert!(keep >= 1 && keep <= h.nclasses());
+    let classes = split_classes(decomposed, h);
+    let refs: Vec<&[T]> = classes[..keep].iter().map(|c| c.as_slice()).collect();
+    let mut t = assemble_classes(&refs, h);
+    let mut r = Refactorer::new(h.clone());
+    r.recompose(&mut t);
+    t
+}
+
+/// Smallest number of classes whose *estimated* L∞ error meets `target`.
+pub fn select_classes(norms: &ClassNorms, target_linf: f64) -> usize {
+    let n = norms.linf.len();
+    for keep in 1..=n {
+        if norms.linf_estimate(keep) <= target_linf {
+            return keep;
+        }
+    }
+    n
+}
+
+/// Exact per-prefix errors (L∞ and RMSE) against the original data.
+pub fn progressive_errors<T: Scalar>(
+    decomposed: &Tensor<T>,
+    original: &Tensor<T>,
+    h: &Hierarchy,
+) -> Vec<(usize, f64, f64)> {
+    (1..=h.nclasses())
+        .map(|keep| {
+            let approx = recompose_with_classes(decomposed, h, keep);
+            (
+                keep,
+                stats::linf(approx.data(), original.data()),
+                stats::rmse(approx.data(), original.data()),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn smooth_tensor(n: usize) -> Tensor<f64> {
+        Tensor::from_fn(&[n, n], |idx| {
+            let x = idx[0] as f64 / (n - 1) as f64;
+            let y = idx[1] as f64 / (n - 1) as f64;
+            (3.0 * x).sin() * (2.0 * y).cos() + 0.5 * x * y
+        })
+    }
+
+    #[test]
+    fn estimate_bounds_actual_error() {
+        let n = 33;
+        let h = Hierarchy::uniform(&[n, n]);
+        let orig = smooth_tensor(n);
+        let mut dec = orig.clone();
+        Refactorer::new(h.clone()).decompose(&mut dec);
+        let norms = class_norms(&dec, &h);
+        for (keep, linf, _) in progressive_errors(&dec, &orig, &h) {
+            let est = norms.linf_estimate(keep);
+            assert!(
+                linf <= est + 1e-9,
+                "keep={keep}: actual {linf} exceeds estimate {est}"
+            );
+        }
+    }
+
+    #[test]
+    fn select_classes_meets_target() {
+        let n = 33;
+        let h = Hierarchy::uniform(&[n, n]);
+        let orig = smooth_tensor(n);
+        let mut dec = orig.clone();
+        Refactorer::new(h.clone()).decompose(&mut dec);
+        let norms = class_norms(&dec, &h);
+        for target in [1e-1, 1e-2, 1e-3] {
+            let keep = select_classes(&norms, target);
+            let approx = recompose_with_classes(&dec, &h, keep);
+            let err = stats::linf(approx.data(), orig.data());
+            assert!(err <= target, "target {target}, got {err} with {keep} classes");
+        }
+    }
+
+    #[test]
+    fn full_prefix_is_lossless() {
+        let h = Hierarchy::uniform(&[17, 17]);
+        let mut rng = Rng::new(4);
+        let orig = Tensor::from_fn(&[17, 17], |_| rng.normal());
+        let mut dec = orig.clone();
+        Refactorer::new(h.clone()).decompose(&mut dec);
+        let errs = progressive_errors(&dec, &orig, &h);
+        let (_, linf, _) = errs.last().unwrap();
+        assert!(*linf < 1e-11);
+    }
+
+    #[test]
+    fn norms_lengths() {
+        let h = Hierarchy::uniform(&[9, 9]);
+        let t = Tensor::<f64>::zeros(&[9, 9]);
+        let n = class_norms(&t, &h);
+        assert_eq!(n.linf.len(), 4);
+        assert_eq!(n.linf_estimate(4), 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! The refactoring core: native decompose/recompose kernels.
+//!
+//! This is the Rust mirror of the Layer-1/Layer-2 Python stack (verified
+//! against the same oracle through golden tests and against the PJRT
+//! artifacts through integration tests), organized exactly like the
+//! paper's three processing styles:
+//!
+//! * [`axis::upsample`] + [`step::compute_coefficients`] — **GPK** (§3.1.1):
+//!   multilinear interpolation / coefficient computation;
+//! * [`axis::masstrans`] — **LPK** (§3.1.2): the fused mass × transfer
+//!   5-point stencil;
+//! * [`axis::thomas`] — **IPK** (§3.1.3): the batched Thomas correction
+//!   solver with precomputed elimination factors.
+//!
+//! All kernels run on *contiguous level buffers*: each decompose step
+//! gathers the stride-`2^step` level view into a stride-1 workspace
+//! (the paper's §3.3 reordered layout), runs the step, and scatters back.
+//! [`Refactorer`] owns the preallocated workspaces and per-level operator
+//! tables so the hot path performs no allocation.
+
+pub mod axis;
+pub mod classes;
+pub mod error;
+pub mod step;
+pub mod transform;
+
+pub use classes::{assemble_classes, class_len, split_classes};
+pub use error::{class_norms, recompose_with_classes, select_classes};
+pub use transform::Refactorer;
+
+use crate::util::Scalar;
+
+/// Precomputed per-dimension operator vectors for one level step.
+///
+/// Everything here is a pure function of the level's node coordinates; the
+/// L2 JAX graph computes the same vectors from its coordinate inputs.
+#[derive(Clone, Debug)]
+pub struct DimOps<T> {
+    /// Interpolation ratios at odd nodes: `r_j = (x_{2j+1}-x_{2j})/(x_{2j+2}-x_{2j})`.
+    pub r: Vec<T>,
+    /// Node spacings `h_i = x_{i+1} - x_i`.
+    pub h: Vec<T>,
+    /// Transfer weights, left (`wl[0] = 0`).
+    pub wl: Vec<T>,
+    /// Transfer weights, right (`wr[last] = 0`).
+    pub wr: Vec<T>,
+    /// Coarse mass-matrix sub-diagonal (`sub[0] = 0`).
+    pub sub: Vec<T>,
+    /// Thomas eliminated super-diagonal.
+    pub cp: Vec<T>,
+    /// Thomas reciprocal pivots.
+    pub denom: Vec<T>,
+    /// Fused mass-trans ("K matrix") 5-tap stencil coefficients: output
+    /// `i` is `Σ_t k[t][i] · src[2i - 2 + t]` (taps outside the domain
+    /// have zero coefficient). Precomputing the taps turns LPK into five
+    /// fmas per element over contiguous rows — the paper's §3.1.2 fusion.
+    pub k: [Vec<T>; 5],
+}
+
+impl<T: Scalar> DimOps<T> {
+    /// Build from one dimension's level coordinates (length `m = 2a+1`).
+    pub fn new(xs: &[f64]) -> Self {
+        let m = xs.len();
+        assert!(m >= 3 && m % 2 == 1, "level view size must be odd >= 3");
+        let a = (m - 1) / 2;
+        let conv = |v: f64| T::from_f64(v);
+
+        let h: Vec<T> = (0..m - 1).map(|i| conv(xs[i + 1] - xs[i])).collect();
+        let r: Vec<T> = (0..a)
+            .map(|j| conv((xs[2 * j + 1] - xs[2 * j]) / (xs[2 * j + 2] - xs[2 * j])))
+            .collect();
+        let mut wl = vec![T::ZERO; a + 1];
+        let mut wr = vec![T::ZERO; a + 1];
+        for i in 1..=a {
+            wl[i] = conv((xs[2 * i - 1] - xs[2 * i - 2]) / (xs[2 * i] - xs[2 * i - 2]));
+        }
+        for i in 0..a {
+            wr[i] = conv((xs[2 * i + 2] - xs[2 * i + 1]) / (xs[2 * i + 2] - xs[2 * i]));
+        }
+
+        // Thomas factors for the coarse mass matrix (nodes xs[0::2]).
+        let xc: Vec<f64> = xs.iter().copied().step_by(2).collect();
+        let mc = xc.len();
+        let hc: Vec<f64> = (0..mc - 1).map(|i| xc[i + 1] - xc[i]).collect();
+        let mut diag = vec![0.0f64; mc];
+        diag[0] = hc[0] / 3.0;
+        diag[mc - 1] = hc[mc - 2] / 3.0;
+        for i in 1..mc - 1 {
+            diag[i] = (hc[i - 1] + hc[i]) / 3.0;
+        }
+        let mut sub = vec![0.0f64; mc];
+        for i in 1..mc {
+            sub[i] = hc[i - 1] / 6.0;
+        }
+        let sup: Vec<f64> = (0..mc - 1).map(|i| hc[i] / 6.0).collect();
+        let mut cp = vec![0.0f64; mc];
+        let mut denom = vec![0.0f64; mc];
+        denom[0] = 1.0 / diag[0];
+        cp[0] = sup[0] * denom[0];
+        for i in 1..mc {
+            denom[i] = 1.0 / (diag[i] - sub[i] * cp[i - 1]);
+            if i < mc - 1 {
+                cp[i] = sup[i] * denom[i];
+            }
+        }
+
+        // fused mass-trans taps: out_i = wl_i·mv(2i-1) + mv(2i) + wr_i·mv(2i+1)
+        // with mass rows mv(j) = a_j·v[j-1] + b_j·v[j] + c_j·v[j+1].
+        let hf: Vec<f64> = (0..m - 1).map(|i| xs[i + 1] - xs[i]).collect();
+        let ma = |j: usize| if j == 0 { 0.0 } else { hf[j - 1] / 6.0 };
+        let mb = |j: usize| {
+            if j == 0 {
+                hf[0] / 3.0
+            } else if j == m - 1 {
+                hf[m - 2] / 3.0
+            } else {
+                (hf[j - 1] + hf[j]) / 3.0
+            }
+        };
+        let mc2 = |j: usize| if j == m - 1 { 0.0 } else { hf[j] / 6.0 };
+        let wlf: Vec<f64> = (0..=a)
+            .map(|i| {
+                if i == 0 {
+                    0.0
+                } else {
+                    (xs[2 * i - 1] - xs[2 * i - 2]) / (xs[2 * i] - xs[2 * i - 2])
+                }
+            })
+            .collect();
+        let wrf: Vec<f64> = (0..=a)
+            .map(|i| {
+                if i == a {
+                    0.0
+                } else {
+                    (xs[2 * i + 2] - xs[2 * i + 1]) / (xs[2 * i + 2] - xs[2 * i])
+                }
+            })
+            .collect();
+        let mut k: [Vec<T>; 5] = std::array::from_fn(|_| vec![T::ZERO; a + 1]);
+        for i in 0..=a {
+            let j = 2 * i;
+            // taps at j-2, j-1, j, j+1, j+2
+            let mut t = [0.0f64; 5];
+            if i > 0 {
+                t[0] += wlf[i] * ma(j - 1);
+                t[1] += wlf[i] * mb(j - 1);
+                t[2] += wlf[i] * mc2(j - 1);
+            }
+            t[1] += ma(j);
+            t[2] += mb(j);
+            t[3] += mc2(j);
+            if i < a {
+                t[2] += wrf[i] * ma(j + 1);
+                t[3] += wrf[i] * mb(j + 1);
+                t[4] += wrf[i] * mc2(j + 1);
+            }
+            for (tap, kv) in t.iter().zip(k.iter_mut()) {
+                kv[i] = conv(*tap);
+            }
+        }
+
+        DimOps {
+            r,
+            h,
+            wl,
+            wr,
+            sub: sub.into_iter().map(conv).collect(),
+            cp: cp.into_iter().map(conv).collect(),
+            denom: denom.into_iter().map(conv).collect(),
+            k,
+        }
+    }
+
+    /// Fine size `m` this step operates on.
+    pub fn fine_len(&self) -> usize {
+        self.h.len() + 1
+    }
+
+    /// Coarse size `(m+1)/2` this step produces.
+    pub fn coarse_len(&self) -> usize {
+        self.sub.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dimops_uniform() {
+        let xs: Vec<f64> = (0..5).map(|i| i as f64 / 4.0).collect();
+        let ops: DimOps<f64> = DimOps::new(&xs);
+        assert_eq!(ops.fine_len(), 5);
+        assert_eq!(ops.coarse_len(), 3);
+        assert!(ops.r.iter().all(|&v| (v - 0.5).abs() < 1e-12));
+        assert_eq!(ops.wl[0], 0.0);
+        assert_eq!(ops.wr[2], 0.0);
+        assert!((ops.wl[1] - 0.5).abs() < 1e-12);
+        // coarse mass diag for h=0.5: [1/6, 1/3, 1/6]
+        assert!((ops.denom[0] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dimops_smallest() {
+        let ops: DimOps<f32> = DimOps::new(&[0.0, 0.3, 1.0]);
+        assert_eq!(ops.r.len(), 1);
+        assert!((ops.r[0] - 0.3).abs() < 1e-6);
+        assert_eq!(ops.coarse_len(), 2);
+    }
+}

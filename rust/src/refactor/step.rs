@@ -1,0 +1,358 @@
+//! One multigrid level step on a contiguous level buffer.
+//!
+//! The step is the paper's Fig. 3 pipeline: GPK (coefficients) → LPK
+//! (mass-trans per dimension) → IPK (Thomas per dimension) → apply
+//! correction; `recompose_step` runs it in reverse. All scratch comes from
+//! a caller-owned [`Workspace`] so the hot path never allocates.
+
+use crate::grid::{gather_view, scatter_add_view, scatter_view, zero_view};
+use crate::refactor::axis;
+use crate::refactor::DimOps;
+use crate::util::Scalar;
+
+/// Preallocated scratch for level steps up to `capacity` elements.
+#[derive(Clone, Debug)]
+pub struct Workspace<T> {
+    a: Vec<T>,
+    b: Vec<T>,
+    cf: Vec<T>,
+    coarse: Vec<T>,
+}
+
+impl<T: Scalar> Workspace<T> {
+    /// `capacity` must be at least the largest level-view element count.
+    pub fn new(capacity: usize) -> Self {
+        Workspace {
+            a: vec![T::ZERO; capacity],
+            b: vec![T::ZERO; capacity],
+            cf: vec![T::ZERO; capacity],
+            coarse: vec![T::ZERO; capacity],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.a.len()
+    }
+}
+
+fn coarse_shape(shape: &[usize]) -> Vec<usize> {
+    shape.iter().map(|&m| (m + 1) / 2).collect()
+}
+
+/// Partial multilinear interpolant of the all-even sub-grid: upsampled in
+/// dims `0..d-1`, still coarse in the last dim, normalized into `ws.a`.
+/// The caller expands the last dim on the fly with
+/// [`axis::upsample_apply_last`] (fused with the subtract/add pass).
+/// `ws.coarse` is left holding the even values. Returns the partial shape.
+fn build_interp_partial<T: Scalar>(
+    buf: &[T],
+    shape: &[usize],
+    ops: &[DimOps<T>],
+    ws: &mut Workspace<T>,
+) -> Vec<usize> {
+    let d = shape.len();
+    let cshape = coarse_shape(shape);
+    let clen: usize = cshape.iter().product();
+    gather_view(buf, shape, 2, &mut ws.coarse[..clen]);
+
+    // ping-pong per-dimension upsampling over dims 0..d-1 (the last dim
+    // stays coarse): after processing dim k, dims 0..=k are fine-sized.
+    let mut cur_shape = cshape;
+    ws.a[..clen].copy_from_slice(&ws.coarse[..clen]);
+    let mut in_a = true;
+    for k in 0..d - 1 {
+        let mut out_shape = cur_shape.clone();
+        out_shape[k] = shape[k];
+        let out_len: usize = out_shape.iter().product();
+        let in_len: usize = cur_shape.iter().product();
+        let (src, dst): (&[T], &mut [T]) = if in_a {
+            (&ws.a[..in_len], &mut ws.b[..out_len])
+        } else {
+            (&ws.b[..in_len], &mut ws.a[..out_len])
+        };
+        axis::upsample(src, &cur_shape, k, &ops[k].r, dst);
+        cur_shape = out_shape;
+        in_a = !in_a;
+    }
+    if !in_a {
+        let plen: usize = cur_shape.iter().product();
+        let (a, b) = (&mut ws.a, &ws.b);
+        a[..plen].copy_from_slice(&b[..plen]);
+    }
+    cur_shape
+}
+
+/// Correction `z` for the coefficient field currently in `ws.cf`
+/// (destroys `ws.a`/`ws.b`); returns the coarse-grid slice in `ws.a`.
+fn build_correction<'w, T: Scalar>(
+    shape: &[usize],
+    ops: &[DimOps<T>],
+    ws: &'w mut Workspace<T>,
+) -> (&'w [T], Vec<usize>) {
+    let d = shape.len();
+    // LPK cascade: dim-by-dim mass-trans, ping-pong cf -> a -> b -> ...
+    let mut cur_shape = shape.to_vec();
+    let mut src_is_cf = true;
+    let mut in_a = false; // next output goes to a
+    for k in 0..d {
+        let mut out_shape = cur_shape.clone();
+        out_shape[k] = (cur_shape[k] + 1) / 2;
+        let out_len: usize = out_shape.iter().product();
+        let in_len: usize = cur_shape.iter().product();
+        {
+            let (src, dst): (&[T], &mut [T]) = if src_is_cf {
+                (&ws.cf[..in_len], &mut ws.a[..out_len])
+            } else if in_a {
+                (&ws.b[..in_len], &mut ws.a[..out_len])
+            } else {
+                (&ws.a[..in_len], &mut ws.b[..out_len])
+            };
+            axis::masstrans(src, &cur_shape, k, &ops[k], dst);
+        }
+        if src_is_cf {
+            src_is_cf = false;
+            in_a = false; // result is in a; next output to b
+        } else {
+            in_a = !in_a;
+        }
+        cur_shape = out_shape;
+    }
+    // result buffer: if d odd -> a, if d even -> b (since first lands in a)
+    let zlen: usize = cur_shape.iter().product();
+    let result_in_a = d % 2 == 1;
+    if !result_in_a {
+        let (a, b) = (&mut ws.a, &ws.b);
+        a[..zlen].copy_from_slice(&b[..zlen]);
+    }
+    // IPK: in-place Thomas along every dim on the coarse grid
+    for k in 0..d {
+        axis::thomas(&mut ws.a[..zlen], &cur_shape, k, &ops[k]);
+    }
+    (&ws.a[..zlen], cur_shape)
+}
+
+/// One decompose step `l -> l-1` on the contiguous level buffer `buf`.
+pub fn decompose_step<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    ops: &[DimOps<T>],
+    ws: &mut Workspace<T>,
+) {
+    let vlen: usize = shape.iter().product();
+    debug_assert_eq!(buf.len(), vlen);
+
+    // --- GPK: coefficients = value - interpolant (evens pass through);
+    //     the last dim's upsample is fused with the subtract pass ---
+    let pshape = build_interp_partial(buf, shape, ops, ws);
+    {
+        let a = std::mem::take(&mut ws.a);
+        let plen: usize = pshape.iter().product();
+        axis::upsample_apply_last(&a[..plen], &pshape, &ops[shape.len() - 1].r, buf, -T::ONE);
+        ws.a = a;
+    }
+    let clen: usize = coarse_shape(shape).iter().product();
+    // restore exact even values (interp there equals them analytically;
+    // rewriting avoids fp cancellation noise)
+    {
+        let coarse = std::mem::take(&mut ws.coarse);
+        scatter_view(buf, shape, 2, &coarse[..clen]);
+        ws.coarse = coarse;
+    }
+
+    // --- coefficient field: zeros at N_{l-1} ---
+    ws.cf[..vlen].copy_from_slice(buf);
+    zero_view(&mut ws.cf[..vlen], shape, 2);
+
+    // --- LPK + IPK: correction ---
+    let (z, _zshape) = build_correction(shape, ops, ws);
+    debug_assert_eq!(z.len(), clen);
+
+    // --- apply: coarse nodes += z ---
+    scatter_add_view(buf, shape, 2, z, T::ONE);
+}
+
+/// Inverse of [`decompose_step`].
+pub fn recompose_step<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    ops: &[DimOps<T>],
+    ws: &mut Workspace<T>,
+) {
+    let vlen: usize = shape.iter().product();
+    debug_assert_eq!(buf.len(), vlen);
+    let clen: usize = coarse_shape(shape).iter().product();
+
+    // --- correction from stored coefficients ---
+    ws.cf[..vlen].copy_from_slice(buf);
+    zero_view(&mut ws.cf[..vlen], shape, 2);
+    let (z, _) = build_correction(shape, ops, ws);
+
+    // --- coarse nodes -= z ---
+    scatter_add_view(buf, shape, 2, z, -T::ONE);
+
+    // --- GPK inverse: odd-ish nodes = coef + interpolant (fused) ---
+    let pshape = build_interp_partial(buf, shape, ops, ws);
+    {
+        let a = std::mem::take(&mut ws.a);
+        let plen: usize = pshape.iter().product();
+        axis::upsample_apply_last(&a[..plen], &pshape, &ops[shape.len() - 1].r, buf, T::ONE);
+        ws.a = a;
+    }
+    {
+        let coarse = std::mem::take(&mut ws.coarse);
+        scatter_view(buf, shape, 2, &coarse[..clen]);
+        ws.coarse = coarse;
+    }
+}
+
+/// Single-axis decompose step (temporal phase, paper §3.4 Fig 10b).
+pub fn decompose_step_axis<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    ax: usize,
+    ops: &DimOps<T>,
+    ws: &mut Workspace<T>,
+) {
+    let vlen: usize = shape.iter().product();
+    axis::coefficients_axis(buf, shape, ax, &ops.r);
+    ws.cf[..vlen].copy_from_slice(buf);
+    axis::zero_even_axis(&mut ws.cf[..vlen], shape, ax);
+    let mut fshape = shape.to_vec();
+    fshape[ax] = (shape[ax] + 1) / 2;
+    let flen: usize = fshape.iter().product();
+    {
+        let (cf, a) = (&ws.cf[..vlen], &mut ws.a[..flen]);
+        axis::masstrans(cf, shape, ax, ops, a);
+    }
+    axis::thomas(&mut ws.a[..flen], &fshape, ax, ops);
+    let a = std::mem::take(&mut ws.a);
+    axis::add_to_even_axis(buf, shape, ax, &a[..flen], T::ONE);
+    ws.a = a;
+}
+
+/// Inverse of [`decompose_step_axis`].
+pub fn recompose_step_axis<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    ax: usize,
+    ops: &DimOps<T>,
+    ws: &mut Workspace<T>,
+) {
+    let vlen: usize = shape.iter().product();
+    ws.cf[..vlen].copy_from_slice(buf);
+    axis::zero_even_axis(&mut ws.cf[..vlen], shape, ax);
+    let mut fshape = shape.to_vec();
+    fshape[ax] = (shape[ax] + 1) / 2;
+    let flen: usize = fshape.iter().product();
+    {
+        let (cf, a) = (&ws.cf[..vlen], &mut ws.a[..flen]);
+        axis::masstrans(cf, shape, ax, ops, a);
+    }
+    axis::thomas(&mut ws.a[..flen], &fshape, ax, ops);
+    let a = std::mem::take(&mut ws.a);
+    axis::add_to_even_axis(buf, shape, ax, &a[..flen], -T::ONE);
+    ws.a = a;
+    axis::interpolate_axis(buf, shape, ax, &ops.r);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ops_for(coords: &[Vec<f64>]) -> Vec<DimOps<f64>> {
+        coords.iter().map(|c| DimOps::new(c)).collect()
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let mut rng = Rng::new(10);
+        let xs = rng.coords(9);
+        let ops = ops_for(&[xs]);
+        let orig: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let mut buf = orig.clone();
+        let mut ws = Workspace::new(9);
+        decompose_step(&mut buf, &[9], &ops, &mut ws);
+        assert_ne!(buf, orig);
+        recompose_step(&mut buf, &[9], &ops, &mut ws);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_3d() {
+        let mut rng = Rng::new(11);
+        let shape = [5usize, 9, 17];
+        let coords: Vec<Vec<f64>> = shape.iter().map(|&m| rng.coords(m)).collect();
+        let ops = ops_for(&coords);
+        let n: usize = shape.iter().product();
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut buf = orig.clone();
+        let mut ws = Workspace::new(n);
+        decompose_step(&mut buf, &shape, &ops, &mut ws);
+        recompose_step(&mut buf, &shape, &ops, &mut ws);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn multilinear_data_zero_coefficients_2d() {
+        let shape = [5usize, 5];
+        let xs: Vec<f64> = (0..5).map(|i| i as f64 / 4.0).collect();
+        let ops = ops_for(&[xs.clone(), xs.clone()]);
+        let mut buf = vec![0.0f64; 25];
+        for i in 0..5 {
+            for j in 0..5 {
+                buf[i * 5 + j] = 2.0 * xs[i] - 3.0 * xs[j] + 1.0;
+            }
+        }
+        let orig = buf.clone();
+        let mut ws = Workspace::new(25);
+        decompose_step(&mut buf, &shape, &ops, &mut ws);
+        for i in 0..5 {
+            for j in 0..5 {
+                if i % 2 == 1 || j % 2 == 1 {
+                    assert!(buf[i * 5 + j].abs() < 1e-12);
+                } else {
+                    assert!((buf[i * 5 + j] - orig[i * 5 + j]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axis_step_roundtrip_4d() {
+        let mut rng = Rng::new(12);
+        let shape = [5usize, 3, 4, 2];
+        let tcoords = rng.coords(5);
+        let ops: DimOps<f64> = DimOps::new(&tcoords);
+        let n: usize = shape.iter().product();
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut buf = orig.clone();
+        let mut ws = Workspace::new(n);
+        decompose_step_axis(&mut buf, &shape, 0, &ops, &mut ws);
+        recompose_step_axis(&mut buf, &shape, 0, &ops, &mut ws);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_tolerance() {
+        let mut rng = Rng::new(13);
+        let shape = [9usize, 9];
+        let coords: Vec<Vec<f64>> = shape.iter().map(|&m| rng.coords(m)).collect();
+        let ops: Vec<DimOps<f32>> = coords.iter().map(|c| DimOps::new(c)).collect();
+        let n = 81;
+        let orig: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut buf = orig.clone();
+        let mut ws = Workspace::new(n);
+        decompose_step(&mut buf, &shape, &ops, &mut ws);
+        recompose_step(&mut buf, &shape, &ops, &mut ws);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Executor actor: a `Send + Clone` handle to a dedicated PJRT thread.
+//!
+//! PJRT client/executable handles are raw pointers (not `Send`), so the
+//! engine lives on its own OS thread and the multi-threaded coordinator
+//! talks to it over a channel. One actor per process is the normal
+//! deployment (the CPU PJRT client runs its own intra-op thread pool); the
+//! coordinator pipelines gather/scatter and compression around it.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::grid::Tensor;
+use crate::runtime::{Engine, VariantMeta, XlaScalar};
+
+enum Request {
+    RunF32 {
+        name: String,
+        shape: Vec<usize>,
+        data: Vec<f32>,
+        coords: Vec<Vec<f64>>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    RunF64 {
+        name: String,
+        shape: Vec<usize>,
+        data: Vec<f64>,
+        coords: Vec<Vec<f64>>,
+        reply: mpsc::Sender<Result<Vec<f64>>>,
+    },
+    Variants {
+        reply: mpsc::Sender<Vec<VariantMeta>>,
+    },
+    Warm {
+        name: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread (loads the manifest, compiles lazily).
+    pub fn spawn(artifact_dir: PathBuf) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&artifact_dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for req in rx {
+                    match req {
+                        Request::RunF32 {
+                            name,
+                            shape,
+                            data,
+                            coords,
+                            reply,
+                        } => {
+                            let t = Tensor::from_vec(&shape, data);
+                            let r = engine.run::<f32>(&name, &t, &coords).map(|o| o.into_vec());
+                            let _ = reply.send(r);
+                        }
+                        Request::RunF64 {
+                            name,
+                            shape,
+                            data,
+                            coords,
+                            reply,
+                        } => {
+                            let t = Tensor::from_vec(&shape, data);
+                            let r = engine.run::<f64>(&name, &t, &coords).map(|o| o.into_vec());
+                            let _ = reply.send(r);
+                        }
+                        Request::Variants { reply } => {
+                            let _ = reply.send(engine.manifest().variants.clone());
+                        }
+                        Request::Warm { name, reply } => {
+                            let _ = reply.send(engine.executable(&name).map(|_| ()));
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(EngineHandle { tx })
+    }
+
+    /// List all artifact variants.
+    pub fn variants(&self) -> Result<Vec<VariantMeta>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Variants { reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Pre-compile a variant (amortize compile latency before serving).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Warm {
+                name: name.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+
+    /// Execute a named variant synchronously.
+    pub fn run<T: ActorDispatch>(
+        &self,
+        name: &str,
+        u: &Tensor<T>,
+        coords: &[Vec<f64>],
+    ) -> Result<Tensor<T>> {
+        let shape = u.shape().to_vec();
+        let out = T::dispatch_run(self, name, &shape, u.data(), coords)?;
+        Ok(Tensor::from_vec(&shape, out))
+    }
+
+    /// Find a variant name for op/shape/dtype.
+    pub fn find(&self, op: &str, shape: &[usize], dtype: &str) -> Result<Option<String>> {
+        Ok(self
+            .variants()?
+            .into_iter()
+            .find(|v| v.op == op && v.shape == shape && v.dtype == dtype)
+            .map(|v| v.name))
+    }
+}
+
+/// Monomorphic dispatch across the channel (the request enum is typed).
+pub trait ActorDispatch: XlaScalar {
+    fn dispatch_run(
+        h: &EngineHandle,
+        name: &str,
+        shape: &[usize],
+        data: &[Self],
+        coords: &[Vec<f64>],
+    ) -> Result<Vec<Self>>;
+}
+
+impl ActorDispatch for f32 {
+    fn dispatch_run(
+        h: &EngineHandle,
+        name: &str,
+        shape: &[usize],
+        data: &[f32],
+        coords: &[Vec<f64>],
+    ) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        h.tx.send(Request::RunF32 {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: data.to_vec(),
+            coords: coords.to_vec(),
+            reply,
+        })
+        .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+}
+
+impl ActorDispatch for f64 {
+    fn dispatch_run(
+        h: &EngineHandle,
+        name: &str,
+        shape: &[usize],
+        data: &[f64],
+        coords: &[Vec<f64>],
+    ) -> Result<Vec<f64>> {
+        let (reply, rx) = mpsc::channel();
+        h.tx.send(Request::RunF64 {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: data.to_vec(),
+            coords: coords.to_vec(),
+            reply,
+        })
+        .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))?
+    }
+}

@@ -1,0 +1,139 @@
+//! The artifact registry written by `python/compile/aot.py`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One AOT-lowered model variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantMeta {
+    pub name: String,
+    /// "decompose" | "recompose" | "st_decompose" | "st_recompose"
+    pub op: String,
+    pub shape: Vec<usize>,
+    /// "float32" | "float64"
+    pub dtype: String,
+    pub nlevels: usize,
+    pub inputs: Vec<String>,
+    pub file: String,
+    pub sha256: String,
+    pub hlo_bytes: usize,
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub variants: Vec<VariantMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("parsing manifest.json")?;
+        let format = v.req_str("format")?.to_string();
+        anyhow::ensure!(format == "hlo-text", "unsupported artifact format {format}");
+        let mut variants = Vec::new();
+        for item in v
+            .get("variants")
+            .and_then(Value::as_arr)
+            .context("manifest missing 'variants' array")?
+        {
+            let shape = item
+                .get("shape")
+                .and_then(Value::as_arr)
+                .context("variant missing shape")?
+                .iter()
+                .map(|x| x.as_usize().context("non-numeric shape entry"))
+                .collect::<Result<Vec<_>>>()?;
+            let inputs = item
+                .get("inputs")
+                .and_then(Value::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default();
+            variants.push(VariantMeta {
+                name: item.req_str("name")?.to_string(),
+                op: item.req_str("op")?.to_string(),
+                shape,
+                dtype: item.req_str("dtype")?.to_string(),
+                nlevels: item.req_usize("nlevels")?,
+                inputs,
+                file: item.req_str("file")?.to_string(),
+                sha256: item
+                    .get("sha256")
+                    .and_then(Value::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                hlo_bytes: item
+                    .get("hlo_bytes")
+                    .and_then(Value::as_usize)
+                    .unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { format, variants })
+    }
+
+    /// Variants for a given op, sorted by total element count.
+    pub fn by_op(&self, op: &str) -> Vec<&VariantMeta> {
+        let mut v: Vec<&VariantMeta> = self.variants.iter().filter(|v| v.op == op).collect();
+        v.sort_by_key(|v| v.shape.iter().product::<usize>());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal() {
+        let json = r#"{
+            "format": "hlo-text",
+            "variants": [{
+                "name": "decompose_9x9_float32_l3",
+                "op": "decompose",
+                "shape": [9, 9],
+                "dtype": "float32",
+                "nlevels": 3,
+                "inputs": ["u", "x0", "x1"],
+                "file": "decompose_9x9_float32_l3.hlo.txt"
+            }]
+        }"#;
+        let m = Manifest::parse(json).unwrap();
+        assert_eq!(m.variants.len(), 1);
+        assert_eq!(m.variants[0].shape, vec![9, 9]);
+        assert_eq!(m.by_op("decompose").len(), 1);
+        assert!(m.by_op("recompose").is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let json = r#"{"format": "proto", "variants": []}"#;
+        assert!(Manifest::parse(json).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration sanity: if `make artifacts` has run, the real
+        // manifest must parse and every referenced file must exist
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(!m.variants.is_empty());
+            for v in &m.variants {
+                assert!(std::path::Path::new("artifacts").join(&v.file).exists());
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Scientific workload generators.
+//!
+//! The paper evaluates on Gray-Scott reaction–diffusion output (§4.1,
+//! the ADIOS tutorial simulation); [`grayscott`] implements the same
+//! model so compression ratios and iso-surface metrics are measured on
+//! genuinely structured scientific data, not synthetic noise.
+
+pub mod grayscott;
+
+pub use grayscott::GrayScott;

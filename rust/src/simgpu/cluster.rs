@@ -1,0 +1,425 @@
+//! Cluster-level throughput models (Figs 14, 16, 17).
+//!
+//! Roll-ups from the per-kernel efficiency profiles to single-GPU,
+//! single-node multi-GPU (cooperative / embarrassing) and Summit-scale
+//! aggregate refactoring throughput.
+//!
+//! ## Calibration
+//!
+//! Implementation profiles ([`ImplProfile`]) carry per-kernel memory
+//! efficiencies. The OPT-family numbers are derived from the §3.2
+//! transaction model (small halo/ceil overheads); the SOTA numbers are
+//! those divided by the paper's measured Fig-13 kernel speedups, plus the
+//! extra unfused passes the baseline performs. The resulting *end-to-end*
+//! efficiencies land at ≈92% (OPT+AT+FMA+REO) and ≈10% (SOTA-GPU) of the
+//! theoretical peak — the paper's Fig 16 numbers — which makes Figs 14/17
+//! derived quantities, exactly as they are in the paper.
+
+use crate::simgpu::device::{DeviceSpec, Interconnect};
+
+/// Data-refactoring implementation variants evaluated in §4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Impl {
+    SotaCpu,
+    SotaGpu,
+    Opt,
+    OptAt,
+    OptAtFma,
+    OptAtFmaReo,
+}
+
+impl Impl {
+    pub const ALL: [Impl; 6] = [
+        Impl::SotaCpu,
+        Impl::SotaGpu,
+        Impl::Opt,
+        Impl::OptAt,
+        Impl::OptAtFma,
+        Impl::OptAtFmaReo,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Impl::SotaCpu => "SOTA-CPU",
+            Impl::SotaGpu => "SOTA-GPU",
+            Impl::Opt => "OPT",
+            Impl::OptAt => "OPT+AT",
+            Impl::OptAtFma => "OPT+AT+FMA",
+            Impl::OptAtFmaReo => "OPT+AT+FMA+REO",
+        }
+    }
+}
+
+/// Per-kernel memory-efficiency profile of one implementation.
+#[derive(Clone, Copy, Debug)]
+pub struct ImplProfile {
+    pub gpk_eff: f64,
+    pub lpk_eff: f64,
+    pub ipk_eff: f64,
+    /// copy / apply passes
+    pub aux_eff: f64,
+    /// extra whole-data passes per level vs. the canonical count
+    /// (unfused intermediates in the baseline)
+    pub extra_passes: f64,
+    /// multiplicative launch/sync overhead (CUDA streams, kernel launches)
+    pub overhead: f64,
+}
+
+/// Canonical per-level pass weights (paper §4.4): 1 coefficient pass,
+/// 1 copy-to-workspace, 5.25 correction passes (split LPK 3.25 / IPK 2.0),
+/// 0.125 apply.
+pub const PASS_COEF: f64 = 1.0;
+pub const PASS_COPY: f64 = 1.0;
+pub const PASS_LPK: f64 = 3.25;
+pub const PASS_IPK: f64 = 2.0;
+pub const PASS_APPLY: f64 = 0.125;
+
+pub fn passes_per_level() -> f64 {
+    PASS_COEF + PASS_COPY + PASS_LPK + PASS_IPK + PASS_APPLY
+}
+
+impl Impl {
+    /// Calibrated efficiency profile (see module docs).
+    pub fn profile(&self, _device: &DeviceSpec, _elem_bytes: usize) -> ImplProfile {
+        match self {
+            // SOTA kernel efficiencies = OPT's divided by the paper's
+            // Fig-13 speedups (GPK 4.9x, LPK 6.3x, IPK 3.0x on Volta),
+            // plus 3 unfused intermediate passes and stream overhead.
+            Impl::SotaCpu | Impl::SotaGpu => ImplProfile {
+                gpk_eff: 0.95 / 4.9,
+                lpk_eff: 0.93 / 6.3,
+                ipk_eff: 0.90 / 3.0,
+                aux_eff: 0.90,
+                extra_passes: 3.0,
+                overhead: 0.78,
+            },
+            Impl::Opt => ImplProfile {
+                gpk_eff: 0.80,
+                lpk_eff: 0.78,
+                ipk_eff: 0.62,
+                aux_eff: 0.92,
+                extra_passes: 0.0,
+                overhead: 0.97,
+            },
+            Impl::OptAt => ImplProfile {
+                gpk_eff: 0.90,
+                lpk_eff: 0.88,
+                ipk_eff: 0.78,
+                aux_eff: 0.93,
+                extra_passes: 0.0,
+                overhead: 0.97,
+            },
+            Impl::OptAtFma => ImplProfile {
+                gpk_eff: 0.93,
+                lpk_eff: 0.91,
+                ipk_eff: 0.86,
+                aux_eff: 0.94,
+                extra_passes: 0.0,
+                overhead: 0.98,
+            },
+            Impl::OptAtFmaReo => ImplProfile {
+                gpk_eff: 0.95,
+                lpk_eff: 0.93,
+                ipk_eff: 0.90,
+                aux_eff: 0.95,
+                extra_passes: 0.0,
+                overhead: 0.98,
+            },
+        }
+    }
+
+    /// End-to-end fraction of the theoretical peak this implementation
+    /// achieves (Fig 16's 10.4% vs 92.2% numbers).
+    pub fn end_to_end_efficiency(&self, device: &DeviceSpec, elem_bytes: usize) -> f64 {
+        let p = self.profile(device, elem_bytes);
+        let canonical = passes_per_level();
+        let weighted = PASS_COEF / p.gpk_eff
+            + PASS_COPY / p.aux_eff
+            + PASS_LPK / p.lpk_eff
+            + PASS_IPK / p.ipk_eff
+            + PASS_APPLY / p.aux_eff
+            + p.extra_passes / p.aux_eff;
+        let pre_f64 = canonical / weighted * p.overhead;
+        // consumer-GPU fp64 wall applies to non-FMA variants (§3.5 / §4.3)
+        let f64_wall = if elem_bytes == 8
+            && device.fp64_flops < 1e12
+            && matches!(self, Impl::SotaGpu | Impl::SotaCpu | Impl::Opt | Impl::OptAt)
+        {
+            0.62
+        } else {
+            1.0
+        };
+        pre_f64 * f64_wall
+    }
+}
+
+/// Throughput model for a device / hierarchy combination.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    pub device: DeviceSpec,
+    /// Dimensionality of the refactored data (2^-d level shrink factor).
+    pub ndim: usize,
+    pub nlevels: usize,
+    pub elem_bytes: usize,
+}
+
+/// Multi-GPU execution strategy (§3.6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Independent partitions, no communication.
+    Embarrassing,
+    /// One refactoring shared by a GPU group (halo exchange + round-robin
+    /// solver partitions).
+    Cooperative {
+        group_size: usize,
+    },
+}
+
+impl ClusterModel {
+    pub fn new(device: DeviceSpec, ndim: usize, nlevels: usize, elem_bytes: usize) -> Self {
+        ClusterModel {
+            device,
+            ndim,
+            nlevels,
+            elem_bytes,
+        }
+    }
+
+    /// Accumulated whole-data passes over all levels:
+    /// `passes_per_level × Σ_{l=0..levels-1} 2^{-l·d}`.
+    pub fn total_passes(&self) -> f64 {
+        let shrink = 2f64.powi(-(self.ndim as i32));
+        let geo: f64 = (0..self.nlevels).map(|l| shrink.powi(l as i32)).sum();
+        passes_per_level() * geo
+    }
+
+    /// Theoretical peak refactoring throughput (bytes of input per second)
+    /// — the paper's 49.8 GB/s (V100) / 32.0 GB/s (2080 Ti) numbers.
+    pub fn theoretical_peak(&self) -> f64 {
+        self.device.single_pass_bw() / self.total_passes()
+    }
+
+    /// Input-size occupancy factor: small inputs cannot fill the device
+    /// (visible in Fig 16's ramp across 65³..513³).
+    pub fn size_factor(&self, n_elems: usize) -> f64 {
+        let full = 64.0 * 1024.0 * 1024.0; // ~256³ f32 saturates
+        (n_elems as f64 / full).powf(0.25).min(1.0).max(0.35)
+    }
+
+    /// Single-device refactoring throughput for an implementation.
+    pub fn single_device_throughput(&self, im: Impl, n_elems: usize) -> f64 {
+        let eff = im.end_to_end_efficiency(&self.device, self.elem_bytes);
+        self.theoretical_peak() * eff * self.size_factor(n_elems)
+    }
+
+    /// Cooperative-group throughput for `s` GPUs sharing one refactoring
+    /// of `bytes_total` input (per §3.6: halo exchange overlapped for
+    /// GPK/LPK, shifted round-robin for IPK).
+    pub fn coop_group_throughput(
+        &self,
+        im: Impl,
+        s: usize,
+        bytes_total: f64,
+        intra: Interconnect,
+        needs_xbus: bool,
+    ) -> f64 {
+        assert!(s >= 1);
+        let per_gpu_bytes = bytes_total / s as f64;
+        let n_elems = (per_gpu_bytes / self.elem_bytes as f64) as usize;
+        let single = self.single_device_throughput(im, n_elems);
+        if s == 1 {
+            return single;
+        }
+        let compute_time = per_gpu_bytes / single;
+
+        // halo exchange per level: each partition surface is
+        // (per-GPU volume)^(2/3) elements thick-1 per neighbor; two
+        // exchanges per level (GPK + LPK), partially overlapped (we charge
+        // the non-overlapped 30%).
+        let elems_per_gpu = per_gpu_bytes / self.elem_bytes as f64;
+        let surface = elems_per_gpu.powf(2.0 / 3.0) * self.elem_bytes as f64;
+        let link = if needs_xbus {
+            // X-Bus is shared by the two islands: effective per-GPU share
+            Interconnect {
+                bw: Interconnect::xbus().bw / s as f64,
+                ..Interconnect::xbus()
+            }
+        } else {
+            intra
+        };
+        // GPK/LPK halos overlap with core-region compute; only ~30% of
+        // the transfer is exposed (§3.6.1). Over X-Bus nothing overlaps
+        // well — the link is shared with CPU traffic.
+        let overlap = if needs_xbus { 1.0 } else { 0.3 };
+        let halo_time: f64 = (0..self.nlevels)
+            .map(|l| {
+                let lvl_surface = surface * 4f64.powi(-(l as i32)); // surface shrinks 4x/level (3D)
+                2.0 * overlap * link.transfer_time(lvl_surface)
+            })
+            .sum::<f64>();
+
+        // The correction sweeps redistribute partition state along the
+        // solve dimension each level (~15% of the level's volume moves).
+        let redistribution: f64 = (0..self.nlevels)
+            .map(|l| {
+                let lvl_bytes = 0.15 * per_gpu_bytes * 8f64.powi(-(l as i32));
+                link.transfer_time(lvl_bytes)
+            })
+            .sum::<f64>();
+
+        // IPK shifted round-robin keeps all GPUs busy but pays a pipeline
+        // fill/drain bubble of (s-1)/segments; with ~16 segments:
+        let ipk_fraction = PASS_IPK / passes_per_level();
+        let bubble = 1.0 + ipk_fraction * (s as f64 - 1.0) / 16.0;
+
+        let total_time = compute_time * bubble + halo_time + redistribution;
+        bytes_total / total_time
+    }
+
+    /// Aggregate weak-scaling throughput (Fig 17): `nodes` Summit nodes,
+    /// 6 GPUs or 42 CPU cores per node, 1 GB per device/core.
+    pub fn weak_scaling(&self, im: Impl, nodes: usize, parallelism: Parallelism) -> f64 {
+        let gb = 1e9f64;
+        match im {
+            Impl::SotaCpu => {
+                // 42 POWER9 cores per node, embarrassingly parallel MPI
+                let core = ClusterModel::new(
+                    DeviceSpec::power9_core(),
+                    self.ndim,
+                    self.nlevels,
+                    self.elem_bytes,
+                );
+                let per_core =
+                    core.theoretical_peak() * 0.10 * core.size_factor((gb / 8.0) as usize);
+                per_core * 42.0 * nodes as f64
+            }
+            _ => match parallelism {
+                Parallelism::Embarrassing => {
+                    let per_gpu = self.single_device_throughput(im, (gb / 8.0) as usize);
+                    per_gpu * 6.0 * nodes as f64
+                }
+                Parallelism::Cooperative { group_size } => {
+                    let groups_per_node = 6 / group_size;
+                    let per_group = self.coop_group_throughput(
+                        im,
+                        group_size,
+                        gb * group_size as f64,
+                        Interconnect::nvlink(),
+                        group_size > 3,
+                    );
+                    per_group * groups_per_node as f64 * nodes as f64
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn volta_model() -> ClusterModel {
+        // 3D data, 9 levels (513^3-like), double precision (Fig 17 setup)
+        ClusterModel::new(DeviceSpec::volta_v100(), 3, 9, 8)
+    }
+
+    #[test]
+    fn theoretical_peak_matches_paper() {
+        // paper: 49.8 GB/s on Summit V100
+        let peak = volta_model().theoretical_peak();
+        assert!(
+            (peak / 1e9 - 49.8).abs() < 5.0,
+            "V100 peak {:.1} GB/s, paper says 49.8",
+            peak / 1e9
+        );
+        // 2080 Ti: 32.0 GB/s
+        let t = ClusterModel::new(DeviceSpec::turing_2080ti(), 3, 9, 4);
+        assert!((t.theoretical_peak() / 1e9 - 32.0).abs() < 4.0);
+    }
+
+    #[test]
+    fn efficiency_ends_match_paper() {
+        let v = DeviceSpec::volta_v100();
+        let sota = Impl::SotaGpu.end_to_end_efficiency(&v, 4);
+        let opt = Impl::OptAtFmaReo.end_to_end_efficiency(&v, 4);
+        assert!(sota < 0.15, "SOTA eff {sota} should be ~0.104");
+        assert!(sota > 0.06);
+        assert!(opt > 0.88, "OPT eff {opt} should be ~0.922");
+        assert!(opt <= 1.0);
+    }
+
+    #[test]
+    fn efficiency_monotone_across_variants() {
+        let v = DeviceSpec::volta_v100();
+        let effs: Vec<f64> = [Impl::SotaGpu, Impl::Opt, Impl::OptAt, Impl::OptAtFma, Impl::OptAtFmaReo]
+            .iter()
+            .map(|i| i.end_to_end_efficiency(&v, 4))
+            .collect();
+        for w in effs.windows(2) {
+            assert!(w[1] > w[0], "each optimization must add: {effs:?}");
+        }
+    }
+
+    #[test]
+    fn weak_scaling_shape_fig17() {
+        let m = volta_model();
+        // 1024 nodes embarrassing: paper reports 264 TB/s
+        let agg = m.weak_scaling(Impl::OptAtFmaReo, 1024, Parallelism::Embarrassing);
+        assert!(
+            (150e12..400e12).contains(&agg),
+            "1024-node aggregate {:.0} TB/s out of band",
+            agg / 1e12
+        );
+        // cooperative is slower but same order (paper: 130 TB/s)
+        let coop = m.weak_scaling(
+            Impl::OptAtFmaReo,
+            1024,
+            Parallelism::Cooperative { group_size: 6 },
+        );
+        assert!(coop < agg);
+        assert!(coop > agg * 0.25);
+        // node counts to reach 1 TB/s: OPT few, SOTA-GPU more, CPU many
+        let need = |im: Impl| -> usize {
+            for nodes in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048] {
+                if m.weak_scaling(im, nodes, Parallelism::Embarrassing) >= 1e12 {
+                    return nodes;
+                }
+            }
+            usize::MAX
+        };
+        let opt_nodes = need(Impl::OptAtFmaReo);
+        let sota_nodes = need(Impl::SotaGpu);
+        let cpu_nodes = need(Impl::SotaCpu);
+        assert!(opt_nodes <= 8, "OPT needs {opt_nodes} nodes (paper: 4)");
+        assert!(sota_nodes > opt_nodes && sota_nodes <= 128, "SOTA-GPU {sota_nodes} (paper: 64)");
+        assert!(cpu_nodes > sota_nodes, "CPU {cpu_nodes} (paper: 512)");
+    }
+
+    #[test]
+    fn coop_throughput_ordering_fig14() {
+        // 6x1 >= 3x2 >= 2x3 > 1x6 (X-Bus hurts the full-node group)
+        let m = ClusterModel::new(DeviceSpec::volta_v100(), 3, 5, 8);
+        let total = 16e9 / 6.0;
+        let t = |s: usize| {
+            let groups = 6 / s;
+            m.coop_group_throughput(
+                Impl::OptAtFmaReo,
+                s,
+                total * s as f64,
+                Interconnect::nvlink(),
+                s > 3,
+            ) * groups as f64
+        };
+        let (t1, t2, t3, t6) = (t(1), t(2), t(3), t(6));
+        assert!(t1 >= t2 && t2 >= t3 && t3 > t6, "{t1} {t2} {t3} {t6}");
+        assert!(t6 > t1 * 0.3, "1x6 should degrade, not collapse");
+    }
+
+    #[test]
+    fn total_passes_3d() {
+        let m = ClusterModel::new(DeviceSpec::volta_v100(), 3, 9, 8);
+        let p = m.total_passes();
+        // 7.375 / (1 - 1/8) = 8.43 for infinite levels; 9 levels ~ same
+        assert!((p - 8.43).abs() < 0.05, "{p}");
+    }
+}

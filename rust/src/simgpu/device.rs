@@ -1,0 +1,147 @@
+//! Device and interconnect specifications (published vendor numbers).
+
+/// One accelerator (or CPU-core) specification.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// HBM/DRAM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Bytes per memory transaction (the paper's `S`).
+    pub transaction_bytes: usize,
+    /// Streaming multiprocessors (occupancy modeling).
+    pub sm_count: usize,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: usize,
+    /// Shared memory per thread block, bytes (VMEM analog: tile budget).
+    pub shared_mem_per_block: usize,
+    /// FP32 throughput, FLOP/s.
+    pub fp32_flops: f64,
+    /// FP64 throughput, FLOP/s (1:2 on V100, 1:32 on consumer Turing —
+    /// the §3.5 motivation for the FMA optimization).
+    pub fp64_flops: f64,
+    /// Device memory capacity, bytes.
+    pub mem_capacity: usize,
+}
+
+impl DeviceSpec {
+    /// NVIDIA Volta GV100 as deployed in Summit (16 GB HBM2).
+    pub fn volta_v100() -> Self {
+        DeviceSpec {
+            name: "V100",
+            mem_bw: 900e9,
+            transaction_bytes: 32,
+            sm_count: 80,
+            max_threads_per_sm: 2048,
+            shared_mem_per_block: 48 * 1024,
+            fp32_flops: 15.7e12,
+            fp64_flops: 7.8e12,
+            mem_capacity: 16 << 30,
+        }
+    }
+
+    /// NVIDIA RTX 2080 Ti (the paper's "Turing" consumer desktop).
+    pub fn turing_2080ti() -> Self {
+        DeviceSpec {
+            name: "RTX2080Ti",
+            mem_bw: 616e9,
+            transaction_bytes: 32,
+            sm_count: 68,
+            max_threads_per_sm: 1024,
+            shared_mem_per_block: 48 * 1024,
+            fp32_flops: 13.4e12,
+            fp64_flops: 0.42e12, // 1:32 ratio — compute-bound risk on f64
+            mem_capacity: 11 << 30,
+        }
+    }
+
+    /// One IBM POWER9 core (Summit has 2×22, 42 usable for compute).
+    pub fn power9_core() -> Self {
+        DeviceSpec {
+            name: "POWER9-core",
+            mem_bw: 8e9, // per-core share of the 340 GB/s socket bandwidth
+            transaction_bytes: 128,
+            sm_count: 1,
+            max_threads_per_sm: 4,
+            shared_mem_per_block: 512 * 1024,
+            fp32_flops: 50e9,
+            fp64_flops: 25e9,
+            mem_capacity: 512 << 30,
+        }
+    }
+
+    /// Peak achievable single-pass (read+write) refactoring throughput:
+    /// the paper measures this with a simultaneous read+write benchmark.
+    /// Analytically it is `mem_bw / 2` scaled by the ~88% of nominal DRAM
+    /// bandwidth such a stream actually sustains (what the paper's
+    /// "achievable single pass throughput" kernel measures).
+    pub fn single_pass_bw(&self) -> f64 {
+        0.88 * self.mem_bw / 2.0
+    }
+}
+
+/// Point-to-point interconnect between devices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interconnect {
+    pub name: &'static str,
+    /// Uni-directional bandwidth, bytes/s.
+    pub bw: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl Interconnect {
+    /// NVLink 2.0 (Summit: 50 GB/s per direction between GPU pairs).
+    pub fn nvlink() -> Self {
+        Interconnect {
+            name: "NVLink2",
+            bw: 50e9,
+            latency: 5e-6,
+        }
+    }
+
+    /// POWER9 X-Bus between the two sockets (64 GB/s, shared by 3+3 GPUs).
+    pub fn xbus() -> Self {
+        Interconnect {
+            name: "X-Bus",
+            bw: 64e9,
+            latency: 8e-6,
+        }
+    }
+
+    /// Node-to-node EDR InfiniBand (2×12.5 GB/s on Summit).
+    pub fn infiniband_edr() -> Self {
+        Interconnect {
+            name: "EDR-IB",
+            bw: 25e9,
+            latency: 1.5e-6,
+        }
+    }
+
+    /// Transfer time for `bytes`.
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_sane() {
+        let v = DeviceSpec::volta_v100();
+        assert!(v.mem_bw > 8e11);
+        assert!(v.fp64_flops / v.fp32_flops > 0.4); // 1:2
+        let t = DeviceSpec::turing_2080ti();
+        assert!(t.fp64_flops / t.fp32_flops < 0.05); // 1:32 — §3.5 story
+        assert_eq!(v.single_pass_bw(), 0.88 * 450e9);
+    }
+
+    #[test]
+    fn interconnect_times() {
+        let nv = Interconnect::nvlink();
+        let t = nv.transfer_time(50e9);
+        assert!((t - 1.000005).abs() < 1e-6);
+        assert!(Interconnect::xbus().bw > nv.bw); // aggregate, but shared
+    }
+}

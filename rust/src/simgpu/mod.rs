@@ -1,0 +1,30 @@
+//! GPU performance substrate: analytic device + cluster models.
+//!
+//! The paper's evaluation hardware (Summit nodes with 6×V100, an RTX 2080
+//! Ti desktop, NVLink/X-Bus interconnects) is not available here, so —
+//! per the substitution rule recorded in `DESIGN.md` — we model it
+//! analytically. The paper itself argues (§3.2) that refactoring is
+//! memory-bound and models kernel time purely from memory transactions;
+//! the same models, parameterized by published bandwidths, reproduce the
+//! *shape* of Figs 13–17. Correctness always runs on real compute (the
+//! native core or the PJRT artifacts); only *wall-clock at Summit scale*
+//! is simulated.
+//!
+//! * [`device`] — device specs (V100, RTX 2080 Ti, POWER9 core) and
+//!   interconnects (NVLink, X-Bus, EDR InfiniBand).
+//! * [`perfmodel`] — §3.2 transaction-count models for GPK/LPK/IPK and the
+//!   second-order "measured" simulator behind Table 2.
+//! * [`autotune`] — heuristic auto-tuning: model-rank, prune to top-3,
+//!   measure, pick (§3.2).
+//! * [`cluster`] — single-GPU / node / multi-node throughput roll-ups
+//!   (Figs 14, 16, 17) including cooperative-parallel communication.
+
+pub mod autotune;
+pub mod cluster;
+pub mod device;
+pub mod perfmodel;
+
+pub use autotune::{autotune, AutotuneResult};
+pub use cluster::{ClusterModel, Parallelism};
+pub use device::{DeviceSpec, Interconnect};
+pub use perfmodel::{BlockConfig, Kernel, PerfModel};

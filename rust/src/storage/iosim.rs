@@ -1,0 +1,80 @@
+//! Parallel-filesystem I/O cost model (the §5.1 ADIOS workflow, Fig 18).
+//!
+//! Models an N-rank collective write/read to GPFS: per-rank streaming
+//! bandwidth aggregates until the filesystem ceiling, plus a
+//! metadata/open cost that grows slowly with rank count. Calibrated so a
+//! 4 TB write at 4096 ranks costs tens of seconds — the scale of Fig 18's
+//! bars.
+
+/// A parallel filesystem shared by `ranks` MPI writers/readers.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelFs {
+    /// Per-rank sustained stream bandwidth, bytes/s.
+    pub per_rank_bw: f64,
+    /// Filesystem aggregate ceiling, bytes/s.
+    pub aggregate_bw: f64,
+    /// Collective-open metadata cost, seconds per 1024 ranks.
+    pub meta_cost: f64,
+}
+
+impl ParallelFs {
+    /// Alpine-like GPFS defaults.
+    pub fn alpine() -> Self {
+        ParallelFs {
+            per_rank_bw: 80e6,
+            aggregate_bw: 240e9,
+            meta_cost: 0.4,
+        }
+    }
+
+    fn effective_bw(&self, ranks: usize) -> f64 {
+        (self.per_rank_bw * ranks as f64).min(self.aggregate_bw)
+    }
+
+    fn meta(&self, ranks: usize) -> f64 {
+        self.meta_cost * (1.0 + (ranks as f64 / 1024.0).ln().max(0.0))
+    }
+
+    /// Time for `ranks` processes to collectively write `bytes`.
+    pub fn write_time(&self, ranks: usize, bytes: f64) -> f64 {
+        self.meta(ranks) + bytes / self.effective_bw(ranks)
+    }
+
+    /// Time for `ranks` processes to collectively read `bytes`.
+    pub fn read_time(&self, ranks: usize, bytes: f64) -> f64 {
+        self.meta(ranks) + bytes / (self.effective_bw(ranks) * 1.25)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_tb_write_is_tens_of_seconds() {
+        // Fig 18 scale: 4 TB at 4096 ranks
+        let fs = ParallelFs::alpine();
+        let t = fs.write_time(4096, 4e12);
+        assert!((10.0..120.0).contains(&t), "write {t} s");
+        // 512-rank read of the same data is slower per byte
+        let r = fs.read_time(512, 4e12);
+        assert!(r > t * 0.5);
+    }
+
+    #[test]
+    fn fewer_bytes_less_time() {
+        let fs = ParallelFs::alpine();
+        let full = fs.write_time(4096, 4e12);
+        let third = fs.write_time(4096, 4e12 * 0.34);
+        assert!(third < full * 0.5, "I/O saving must track byte saving");
+    }
+
+    #[test]
+    fn aggregate_ceiling_binds() {
+        let fs = ParallelFs::alpine();
+        // 16384 ranks would exceed the ceiling -> same bw as 4096
+        let a = fs.write_time(4096, 1e12) - fs.meta(4096);
+        let b = fs.write_time(16384, 1e12) - fs.meta(16384);
+        assert!((a - b).abs() / a < 0.3);
+    }
+}

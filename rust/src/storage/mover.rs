@@ -1,0 +1,101 @@
+//! Coefficient-class placement across storage tiers (Fig 1).
+//!
+//! Classes are ordered coarse → fine; coarse classes are tiny and carry
+//! the most reconstruction value per byte, so they belong on the fastest
+//! tier. The mover packs classes greedily by that value density subject
+//! to tier capacities — the "intelligent movement" of the paper's Fig 1.
+
+use crate::storage::tier::{StorageTier, TierSpec};
+
+/// Where each class landed, plus expected access times.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// per class: tier it was placed on
+    pub assignment: Vec<StorageTier>,
+    /// per class: bytes
+    pub bytes: Vec<u64>,
+}
+
+impl Placement {
+    /// Time to retrieve classes `0..keep` (reads can overlap across tiers;
+    /// we charge the max per tier + per-tier sums).
+    pub fn retrieval_time(&self, tiers: &[TierSpec], keep: usize) -> f64 {
+        let mut per_tier = std::collections::BTreeMap::new();
+        for (k, tier) in self.assignment.iter().enumerate().take(keep) {
+            *per_tier.entry(format!("{tier:?}")).or_insert(0.0f64) += self.bytes[k] as f64;
+        }
+        per_tier
+            .iter()
+            .map(|(name, &bytes)| {
+                let spec = tiers
+                    .iter()
+                    .find(|t| format!("{:?}", t.tier) == *name)
+                    .expect("tier spec missing");
+                spec.read_time(bytes)
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Greedy placement: iterate classes coarse→fine (decreasing value
+/// density), filling the fastest tier with remaining capacity.
+pub fn place_classes(class_bytes: &[u64], tiers: &[TierSpec]) -> Placement {
+    let mut remaining: Vec<u64> = tiers.iter().map(|t| t.capacity).collect();
+    let mut assignment = Vec::with_capacity(class_bytes.len());
+    for &b in class_bytes {
+        let mut placed = None;
+        for (i, t) in tiers.iter().enumerate() {
+            if remaining[i] >= b {
+                remaining[i] -= b;
+                placed = Some(t.tier);
+                break;
+            }
+        }
+        // nothing fits anywhere but the (unbounded) last tier
+        assignment.push(placed.unwrap_or(tiers.last().unwrap().tier));
+    }
+    Placement {
+        assignment,
+        bytes: class_bytes.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiers() -> Vec<TierSpec> {
+        vec![
+            TierSpec {
+                capacity: 1 << 20, // 1 MiB burst buffer for the test
+                ..TierSpec::burst_buffer()
+            },
+            TierSpec::parallel_fs(),
+            TierSpec::archive(),
+        ]
+    }
+
+    #[test]
+    fn coarse_classes_go_fast() {
+        // geometric class sizes: 1 KB, 7 KB, 56 KB, 448 KB, 3.5 MB
+        let sizes = [1u64 << 10, 7 << 10, 56 << 10, 448 << 10, 3584 << 10];
+        let p = place_classes(&sizes, &tiers());
+        assert_eq!(p.assignment[0], StorageTier::BurstBuffer);
+        assert_eq!(p.assignment[1], StorageTier::BurstBuffer);
+        // the 3.5 MB class overflows the 1 MiB buffer
+        assert_eq!(p.assignment[4], StorageTier::ParallelFs);
+    }
+
+    #[test]
+    fn retrieval_grows_with_classes() {
+        let sizes = [1u64 << 10, 7 << 10, 56 << 10, 448 << 10, 3584 << 10];
+        let t = tiers();
+        let p = place_classes(&sizes, &t);
+        let mut last = 0.0;
+        for keep in 1..=sizes.len() {
+            let rt = p.retrieval_time(&t, keep);
+            assert!(rt >= last - 1e-12);
+            last = rt;
+        }
+    }
+}

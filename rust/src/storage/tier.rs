@@ -1,0 +1,89 @@
+//! Storage-tier specifications (Summit-era published figures).
+
+/// Identity of a storage tier in the Fig-1 workflow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StorageTier {
+    /// Node-local NVMe burst buffer.
+    BurstBuffer,
+    /// Center-wide parallel filesystem (Alpine/GPFS).
+    ParallelFs,
+    /// Tape archive (HPSS).
+    Archive,
+}
+
+/// Bandwidth/latency/capacity description of one tier.
+#[derive(Clone, Copy, Debug)]
+pub struct TierSpec {
+    pub tier: StorageTier,
+    /// Aggregate write bandwidth available to this job, bytes/s.
+    pub write_bw: f64,
+    /// Aggregate read bandwidth, bytes/s.
+    pub read_bw: f64,
+    /// Access latency (metadata + seek/mount), seconds.
+    pub latency: f64,
+    /// Capacity available to the workflow, bytes.
+    pub capacity: u64,
+}
+
+impl TierSpec {
+    /// Summit node-local NVMe (1.6 TB, ~2.1/5.5 GB/s per node; modeled
+    /// for one node).
+    pub fn burst_buffer() -> Self {
+        TierSpec {
+            tier: StorageTier::BurstBuffer,
+            write_bw: 2.1e9,
+            read_bw: 5.5e9,
+            latency: 50e-6,
+            capacity: 1600 << 30,
+        }
+    }
+
+    /// Alpine GPFS: 2.5 TB/s aggregate peak; a 4096-rank job realistically
+    /// sustains a fraction of it.
+    pub fn parallel_fs() -> Self {
+        TierSpec {
+            tier: StorageTier::ParallelFs,
+            write_bw: 240e9,
+            read_bw: 300e9,
+            latency: 2e-3,
+            capacity: 250u64 << 40,
+        }
+    }
+
+    /// HPSS tape: high capacity, mount latency in the tens of seconds.
+    pub fn archive() -> Self {
+        TierSpec {
+            tier: StorageTier::Archive,
+            write_bw: 3e9,
+            read_bw: 1.5e9,
+            latency: 30.0,
+            capacity: u64::MAX,
+        }
+    }
+
+    pub fn write_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.write_bw
+    }
+
+    pub fn read_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.read_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiers_ordered_by_speed() {
+        let bb = TierSpec::burst_buffer();
+        let fs = TierSpec::parallel_fs();
+        let ar = TierSpec::archive();
+        // archive is the slow/deep end
+        assert!(ar.latency > fs.latency && fs.latency > bb.latency);
+        assert!(ar.read_bw < fs.read_bw);
+        // writing 1 GB: burst buffer ~0.5 s, archive >30 s
+        assert!(bb.write_time(1e9) < 1.0);
+        assert!(ar.write_time(1e9) > 30.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmed, repeated measurement with median/MAD reporting and a
+//! stable text output format shared by every `cargo bench` target:
+//!
+//! ```text
+//! bench <name> ... median 12.345 ms  (n=20, mad 1.2%)  [optional throughput]
+//! ```
+
+use std::time::Instant;
+
+use crate::util::stats::median;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// median seconds per iteration
+    pub median_s: f64,
+    /// median absolute deviation, relative
+    pub mad_rel: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Throughput in GB/s given bytes moved per iteration.
+    pub fn gbps(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.median_s / 1e9
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs, then `iters` timed runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let med = median(&times);
+    let devs: Vec<f64> = times.iter().map(|t| (t - med).abs()).collect();
+    let mad = median(&devs);
+    Measurement {
+        name: name.to_string(),
+        median_s: med,
+        mad_rel: if med > 0.0 { mad / med } else { 0.0 },
+        iters,
+    }
+}
+
+/// Auto-tuned iteration count: keep each benchmark around `budget_s`.
+pub fn bench_auto(name: &str, budget_s: f64, mut f: impl FnMut()) -> Measurement {
+    let t0 = Instant::now();
+    f(); // warmup + calibration
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / once).ceil() as usize).clamp(3, 1000);
+    bench(name, 1, iters, f)
+}
+
+/// Print a measurement in the standard format, with optional GB/s.
+pub fn report(m: &Measurement, bytes: Option<usize>) {
+    let time = if m.median_s >= 1.0 {
+        format!("{:.3} s ", m.median_s)
+    } else if m.median_s >= 1e-3 {
+        format!("{:.3} ms", m.median_s * 1e3)
+    } else {
+        format!("{:.1} µs", m.median_s * 1e6)
+    };
+    let tp = bytes
+        .map(|b| format!("  {:.2} GB/s", m.gbps(b)))
+        .unwrap_or_default();
+    println!(
+        "bench {:<44} median {}  (n={}, mad {:.1}%){}",
+        m.name,
+        time,
+        m.iters,
+        m.mad_rel * 100.0,
+        tp
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let m = bench("spin", 1, 5, || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(m.median_s > 0.0);
+        assert_eq!(m.iters, 5);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn gbps_math() {
+        let m = Measurement {
+            name: "x".into(),
+            median_s: 0.5,
+            mad_rel: 0.0,
+            iters: 1,
+        };
+        assert!((m.gbps(1_000_000_000) - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal command-line parsing (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [--flag value] [--switch] [positional]`,
+//! which covers the `mgr` CLI and every example binary.
+//!
+//! Grammar note: `--flag token` is ambiguous without a schema; a flag
+//! followed by a non-flag token consumes it as its value, so boolean
+//! switches must appear **after** positional arguments or use `--flag=`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed arguments: a subcommand, `--key value` options, bare switches,
+/// and positional arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the binary name).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Parse `--shape 65x65x65` style dimension lists.
+    pub fn get_shape(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(['x', ','])
+                .map(|p| {
+                    p.parse()
+                        .map_err(|_| anyhow!("--{key} expects NxNxN, got '{v}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("refactor --shape 65x65x65 --eb 1e-3 input.bin --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("refactor"));
+        assert_eq!(a.get("shape"), Some("65x65x65"));
+        assert_eq!(a.get_f64("eb", 0.0).unwrap(), 1e-3);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn eq_form_and_shape() {
+        let a = parse("x --shape=9,17 --n 4");
+        assert_eq!(a.get_shape("shape", &[]).unwrap(), vec![9, 17]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 4);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n foo");
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

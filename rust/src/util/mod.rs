@@ -1,0 +1,122 @@
+//! Small shared utilities: scalar abstraction, deterministic RNG, stats.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Floating-point scalar the refactoring core is generic over.
+///
+/// Only `f32` and `f64` implement it (the two precisions the paper
+/// evaluates). Methods are the minimal set the kernels need; everything is
+/// expressible as fused multiply-adds per the paper's Table 3.
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Bytes per element (the paper's `L`: 4 single, 8 double).
+    const BYTES: usize;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// Fused multiply-add `a * b + c` — the paper's core instruction (§3.5).
+    fn mul_add(self, b: Self, c: Self) -> Self;
+    fn abs(self) -> Self;
+    fn recip(self) -> Self;
+    fn round(self) -> Self;
+    fn sqrt(self) -> Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 4;
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        f32::mul_add(self, b, c)
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn recip(self) -> Self {
+        1.0 / self
+    }
+    #[inline(always)]
+    fn round(self) -> Self {
+        f32::round(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 8;
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn mul_add(self, b: Self, c: Self) -> Self {
+        f64::mul_add(self, b, c)
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn recip(self) -> Self {
+        1.0 / self
+    }
+    #[inline(always)]
+    fn round(self) -> Self {
+        f64::round(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(f32::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(<f64 as Scalar>::BYTES, 8);
+        assert_eq!(2.0f32.mul_add(3.0, 1.0), 7.0);
+    }
+}

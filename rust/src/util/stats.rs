@@ -1,0 +1,85 @@
+//! Error norms and small summary statistics used across the evaluation.
+
+use crate::util::Scalar;
+
+/// Maximum absolute difference (L∞ error).
+pub fn linf<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x.to_f64() - y.to_f64()).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Root-mean-square error.
+pub fn rmse<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = x.to_f64() - y.to_f64();
+            d * d
+        })
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+/// Value range (max - min) of a slice, used to normalize error bounds.
+pub fn value_range<T: Scalar>(a: &[T]) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in a {
+        let v = v.to_f64();
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if lo.is_finite() {
+        hi - lo
+    } else {
+        0.0
+    }
+}
+
+/// Simple wall-clock timer returning seconds.
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = std::time::Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Median of a sample (copies + sorts; fine for bench-sized inputs).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms() {
+        let a = [1.0f64, 2.0, 3.0];
+        let b = [1.5f64, 2.0, 2.0];
+        assert_eq!(linf(&a, &b), 1.0);
+        assert!((rmse(&a, &b) - ((0.25 + 1.0) / 3.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn range_and_median() {
+        assert_eq!(value_range(&[1.0f32, -2.0, 5.0]), 7.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Visualization analysis metrics (paper §5.1).
+//!
+//! The showcase workflow judges reduced-fidelity data by a derived
+//! visualization quantity: the total area of an iso-surface. [`isosurface`]
+//! computes it by marching tetrahedra over the scalar field.
+
+pub mod isosurface;
+
+pub use isosurface::iso_surface_area;

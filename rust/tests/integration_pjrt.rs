@@ -1,0 +1,157 @@
+//! Cross-layer integration: the AOT-compiled HLO artifacts (L1 Pallas +
+//! L2 JAX) executed through PJRT must agree with the native Rust core on
+//! every operation, and PJRT decompose/recompose must round-trip.
+//!
+//! Requires `make artifacts` to have run (the Makefile test target
+//! guarantees it).
+
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::refactor::Refactorer;
+use mgr::runtime::EngineHandle;
+use mgr::util::rng::Rng;
+use mgr::util::stats::linf;
+
+fn engine() -> EngineHandle {
+    EngineHandle::spawn("artifacts".into()).expect(
+        "artifacts/ missing or invalid — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn random_f32(shape: &[usize], seed: u64) -> Tensor<f32> {
+    let mut rng = Rng::new(seed);
+    Tensor::from_fn(shape, |_| rng.normal() as f32)
+}
+
+#[test]
+fn decompose_artifacts_match_native_core() {
+    let engine = engine();
+    for v in engine.variants().unwrap() {
+        if v.op != "decompose" || v.dtype != "float32" {
+            continue;
+        }
+        // keep the test fast: skip the largest variants here (the
+        // pjrt-check CLI covers all of them)
+        if v.shape.iter().product::<usize>() > 40_000 {
+            continue;
+        }
+        let h = Hierarchy::uniform(&v.shape);
+        let t = random_f32(&v.shape, 1);
+        let got = engine.run(&v.name, &t, &h.coords().to_vec()).unwrap();
+        let mut want = t.clone();
+        Refactorer::new(h).decompose(&mut want);
+        let err = linf(got.data(), want.data());
+        assert!(err < 2e-3, "{}: PJRT vs native L∞ = {err}", v.name);
+    }
+}
+
+#[test]
+fn pjrt_roundtrip_is_identity() {
+    let engine = engine();
+    let shape = [17usize, 17, 17];
+    let h = Hierarchy::uniform(&shape);
+    let coords = h.coords().to_vec();
+    let t = random_f32(&shape, 2);
+    let dec_name = engine
+        .find("decompose", &shape, "float32")
+        .unwrap()
+        .expect("17^3 f32 decompose artifact");
+    let rec_name = engine
+        .find("recompose", &shape, "float32")
+        .unwrap()
+        .expect("17^3 f32 recompose artifact");
+    let dec = engine.run(&dec_name, &t, &coords).unwrap();
+    let back = engine.run(&rec_name, &dec, &coords).unwrap();
+    let err = linf(back.data(), t.data());
+    assert!(err < 1e-4, "PJRT roundtrip L∞ = {err}");
+}
+
+#[test]
+fn pjrt_f64_matches_native_tightly() {
+    let engine = engine();
+    let shape = [33usize, 33, 33];
+    let Some(name) = engine.find("decompose", &shape, "float64").unwrap() else {
+        panic!("33^3 f64 artifact missing");
+    };
+    let h = Hierarchy::uniform(&shape);
+    let mut rng = Rng::new(3);
+    let t = Tensor::from_fn(&shape, |_| rng.normal());
+    let got = engine.run(&name, &t, &h.coords().to_vec()).unwrap();
+    let mut want = t.clone();
+    Refactorer::new(h).decompose(&mut want);
+    let err = linf(got.data(), want.data());
+    assert!(err < 1e-10, "f64 PJRT vs native L∞ = {err}");
+}
+
+#[test]
+fn pjrt_spatiotemporal_roundtrip() {
+    let engine = engine();
+    let shape = [5usize, 17, 17, 17];
+    let h = Hierarchy::uniform(&shape);
+    let coords = h.coords().to_vec();
+    let t = random_f32(&shape, 4);
+    let dec = engine
+        .find("st_decompose", &shape, "float32")
+        .unwrap()
+        .expect("st_decompose artifact");
+    let rec = engine
+        .find("st_recompose", &shape, "float32")
+        .unwrap()
+        .expect("st_recompose artifact");
+    let d = engine.run(&dec, &t, &coords).unwrap();
+    let back = engine.run(&rec, &d, &coords).unwrap();
+    let err = linf(back.data(), t.data());
+    assert!(err < 1e-4, "spatiotemporal PJRT roundtrip L∞ = {err}");
+
+    // and the spatiotemporal artifact must match the native st engine
+    let mut want = t.clone();
+    Refactorer::spatiotemporal(h).decompose(&mut want);
+    let err = linf(d.data(), want.data());
+    assert!(err < 2e-3, "st PJRT vs native L∞ = {err}");
+}
+
+#[test]
+fn pjrt_nonuniform_coords_supported() {
+    // coordinates are runtime inputs: the same artifact must serve a
+    // non-uniform grid
+    let engine = engine();
+    let shape = [17usize, 17, 17];
+    let mut rng = Rng::new(5);
+    let coords: Vec<Vec<f64>> = shape.iter().map(|&m| rng.coords(m)).collect();
+    let h = Hierarchy::new(&shape, coords.clone(), None);
+    let t = random_f32(&shape, 6);
+    let name = engine
+        .find("decompose", &shape, "float32")
+        .unwrap()
+        .unwrap();
+    let got = engine.run(&name, &t, &coords).unwrap();
+    let mut want = t.clone();
+    Refactorer::new(h).decompose(&mut want);
+    let err = linf(got.data(), want.data());
+    assert!(err < 2e-3, "non-uniform PJRT vs native L∞ = {err}");
+}
+
+#[test]
+fn engine_handle_is_send_and_shared() {
+    // the coordinator uses the handle from multiple worker threads
+    let engine = engine();
+    let shape = [17usize, 17, 17];
+    let h = Hierarchy::uniform(&shape);
+    let name = engine
+        .find("decompose", &shape, "float32")
+        .unwrap()
+        .unwrap();
+    engine.warm(&name).unwrap();
+    crossbeam_utils::thread::scope(|s| {
+        for seed in 0..4u64 {
+            let engine = engine.clone();
+            let name = name.clone();
+            let coords = h.coords().to_vec();
+            s.spawn(move |_| {
+                let t = random_f32(&shape, 10 + seed);
+                let out = engine.run(&name, &t, &coords).unwrap();
+                assert_eq!(out.shape(), &shape);
+            });
+        }
+    })
+    .unwrap();
+}

@@ -1,0 +1,230 @@
+//! Whole-system integration: Gray-Scott data through the coordinator,
+//! coefficient classes through the storage mover, progressive fidelity
+//! against the visualization metric, and the compression pipeline —
+//! the paper's Fig-1 workflow end to end on real simulated data.
+
+use mgr::compress::{Codec, MgardCompressor};
+use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec, ParallelRefactorer};
+use mgr::grid::{pad, Hierarchy, Tensor};
+use mgr::refactor::{
+    class_norms, recompose_with_classes, select_classes, split_classes, Refactorer,
+};
+use mgr::sim::GrayScott;
+use mgr::storage::{place_classes, ParallelFs, TierSpec};
+use mgr::util::stats::{linf, rmse, value_range};
+use mgr::vis::iso_surface_area;
+
+fn grayscott_field(n: usize) -> Tensor<f64> {
+    let mut sim = GrayScott::new(n, 7);
+    sim.step(250);
+    sim.v_field()
+}
+
+#[test]
+fn fig1_workflow_end_to_end() {
+    // simulate -> refactor -> split classes -> place on tiers ->
+    // progressive retrieval -> accuracy vs bytes
+    let n = 33;
+    let field = grayscott_field(n);
+    let h = Hierarchy::uniform(field.shape());
+    let mut dec = field.clone();
+    Refactorer::new(h.clone()).decompose(&mut dec);
+
+    let classes = split_classes(&dec, &h);
+    let class_bytes: Vec<u64> = classes.iter().map(|c| (c.len() * 8) as u64).collect();
+    let tiers = vec![
+        TierSpec::burst_buffer(),
+        TierSpec::parallel_fs(),
+        TierSpec::archive(),
+    ];
+    let placement = place_classes(&class_bytes, &tiers);
+    // coarse classes must land on the fastest tier
+    assert_eq!(
+        placement.assignment[0],
+        mgr::storage::StorageTier::BurstBuffer
+    );
+
+    // progressive retrieval: more classes -> more bytes, less error
+    let mut last_err = f64::INFINITY;
+    for keep in 1..=h.nclasses() {
+        let approx = recompose_with_classes(&dec, &h, keep);
+        let err = rmse(approx.data(), field.data());
+        assert!(err <= last_err + 1e-12, "keep={keep}");
+        last_err = err;
+    }
+    assert!(last_err < 1e-12, "full retrieval must be lossless");
+}
+
+#[test]
+fn error_control_selects_enough_classes() {
+    let n = 33;
+    let field = grayscott_field(n);
+    let h = Hierarchy::uniform(field.shape());
+    let mut dec = field.clone();
+    Refactorer::new(h.clone()).decompose(&mut dec);
+    let norms = class_norms(&dec, &h);
+    let range = value_range(field.data());
+    for rel in [1e-1, 1e-2, 1e-3] {
+        let target = rel * range;
+        let keep = select_classes(&norms, target);
+        let approx = recompose_with_classes(&dec, &h, keep);
+        let err = linf(approx.data(), field.data());
+        assert!(
+            err <= target,
+            "rel={rel}: kept {keep} classes, err {err} > {target}"
+        );
+    }
+}
+
+#[test]
+fn iso_surface_accuracy_with_few_classes() {
+    // §5.1: high iso-surface-area accuracy from a prefix of the classes
+    let n = 33;
+    let field = grayscott_field(n);
+    let h = Hierarchy::uniform(field.shape());
+    let mut dec = field.clone();
+    Refactorer::new(h.clone()).decompose(&mut dec);
+
+    let iso = 0.25;
+    let full_area = iso_surface_area(&field, iso);
+    assert!(full_area > 0.0, "iso-surface must exist on this workload");
+
+    let nc = h.nclasses();
+    let approx = recompose_with_classes(&dec, &h, nc - 2);
+    let area = iso_surface_area(&approx, iso);
+    let accuracy = 1.0 - (area - full_area).abs() / full_area;
+    assert!(
+        accuracy > 0.9,
+        "dropping 2 finest classes kept only {:.1}% area accuracy",
+        accuracy * 100.0
+    );
+}
+
+#[test]
+fn compression_on_real_simulation_data() {
+    let n = 33;
+    let field = grayscott_field(n);
+    let range = value_range(field.data());
+    let eb = 1e-3 * range; // the paper's 1e-3 error bound
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        let mut c = MgardCompressor::new(Hierarchy::uniform(field.shape()), codec);
+        let blob = c.compress(&field, eb).unwrap();
+        let back = c.decompress(&blob).unwrap();
+        assert!(linf(back.data(), field.data()) <= eb);
+        assert!(
+            blob.ratio() > 3.0,
+            "{codec:?}: Gray-Scott at 1e-3 should compress >3x, got {:.2}",
+            blob.ratio()
+        );
+    }
+}
+
+#[test]
+fn padded_non_refactorable_shapes() {
+    // a 30^3 field (not 2^k+1) goes through pad -> refactor -> crop
+    let mut sim = GrayScott::new(30, 9);
+    sim.step(100);
+    let field = sim.v_field();
+    let padded = pad::pad_to_refactorable(&field);
+    assert_eq!(padded.tensor.shape(), &[33, 33, 33]);
+    let h = Hierarchy::uniform(padded.tensor.shape());
+    let mut t = padded.tensor.clone();
+    let mut r = Refactorer::new(h);
+    r.decompose(&mut t);
+    r.recompose(&mut t);
+    let back = pad::crop(&t, &padded.original_shape);
+    assert!(linf(back.data(), field.data()) < 1e-10);
+}
+
+#[test]
+fn coordinator_batch_over_grayscott_snapshots() {
+    // several timesteps flow through the worker pool with mixed modes
+    let snaps = GrayScott::snapshots(17, 11, 50, 4, 25);
+    let jobs: Vec<JobSpec> = snaps
+        .into_iter()
+        .enumerate()
+        .map(|(i, data)| JobSpec {
+            name: format!("t{i}"),
+            data,
+            mode: if i % 2 == 0 {
+                JobMode::Serial
+            } else {
+                JobMode::Cooperative { workers: 2 }
+            },
+            error_bound: if i == 3 { Some(1e-3) } else { None },
+            codec: Codec::Zlib,
+        })
+        .collect();
+    let coord = Coordinator::new(Backend::Native, 3);
+    let results = coord.run_batch(jobs);
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert!(r.is_ok());
+    }
+}
+
+#[test]
+fn spatiotemporal_vs_spatial_compression_tradeoff() {
+    // §4.6 / Fig 15: batching time steps into a 3+1-D hierarchy improves
+    // compression over per-step spatial refactoring
+    let nt = 5;
+    let n = 17;
+    let snaps = GrayScott::snapshots(n, 13, 100, nt, 2);
+    let mut st_data = Vec::new();
+    for s in &snaps {
+        st_data.extend_from_slice(s.data());
+    }
+    let st = Tensor::from_vec(&[nt, n, n, n], st_data);
+
+    let range = value_range(st.data());
+    let eb = 1e-3 * range;
+    let quant = mgr::compress::QuantMeta::for_bound(eb, 5);
+
+    // spatial-only: decompose each step, quantize, count zlib bytes
+    let mut spatial_bytes = 0usize;
+    for s in &snaps {
+        let mut d = s.clone();
+        Refactorer::new(Hierarchy::uniform(s.shape())).decompose(&mut d);
+        let q = mgr::compress::quantize(d.data(), &quant);
+        spatial_bytes += zlib_len(&q);
+    }
+
+    // spatiotemporal: one 4-D hierarchy over the batch
+    let mut d4 = st.clone();
+    Refactorer::spatiotemporal(Hierarchy::uniform(st.shape())).decompose(&mut d4);
+    let q4 = mgr::compress::quantize(d4.data(), &quant);
+    let st_bytes = zlib_len(&q4);
+
+    assert!(
+        (st_bytes as f64) < spatial_bytes as f64 * 1.05,
+        "spatiotemporal ({st_bytes}) should not exceed spatial ({spatial_bytes})"
+    );
+}
+
+fn zlib_len(q: &[i64]) -> usize {
+    use std::io::Write;
+    let raw: Vec<u8> = q.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let mut enc = flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
+    enc.write_all(&raw).unwrap();
+    enc.finish().unwrap().len()
+}
+
+#[test]
+fn parallel_fs_model_consistency() {
+    let fs = ParallelFs::alpine();
+    // reading a third of the bytes must cut I/O substantially (Fig 18)
+    let full = fs.read_time(512, 4e12);
+    let third = fs.read_time(512, 4e12 / 3.0);
+    assert!(third < 0.55 * full);
+}
+
+#[test]
+fn cooperative_refactorer_scales_without_changing_results() {
+    let field = grayscott_field(33);
+    let h = Hierarchy::uniform(field.shape());
+    let mut one = field.clone();
+    ParallelRefactorer::new(h.clone(), 1).decompose(&mut one);
+    let mut six = field.clone();
+    ParallelRefactorer::new(h, 6).decompose(&mut six);
+    assert_eq!(one.data(), six.data());
+}
