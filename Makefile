@@ -1,0 +1,27 @@
+# Build/test entry points referenced throughout the docs.
+#
+#   make artifacts   lower the JAX model variants to HLO text (runs once;
+#                    needed by the `pjrt` feature and the AOT sanity tests)
+#   make test        tier-1 verify: release build + Rust tests + Python tests
+#   make bench       kernel throughput report -> BENCH_kernels.json
+#   make doc         rustdoc for the crate (no deps)
+
+.PHONY: artifacts test test-rust test-python bench doc
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+test: test-rust test-python
+
+test-rust:
+	cargo build --release
+	cargo test -q
+
+test-python:
+	python3 -m pytest python/tests -q
+
+bench:
+	cargo bench --bench fig13_kernels
+
+doc:
+	cargo doc --no-deps

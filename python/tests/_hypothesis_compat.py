@@ -1,0 +1,80 @@
+"""Minimal stand-ins for the ``hypothesis`` API (offline fallback).
+
+``test_kernels.py`` prefers the real hypothesis package; when it is not
+installed (offline environments), these shims keep the sweep tests
+running by drawing a deterministic pseudo-random sample of examples per
+test instead of hypothesis' adaptive search. Reduced adversarial power,
+same coverage shape — and fully reproducible (fixed seed).
+
+Only the surface used by the test-suite is implemented:
+``given``, ``settings(max_examples=..., deadline=...)`` and the
+``sampled_from`` / ``lists`` / ``booleans`` / ``integers`` strategies.
+"""
+
+from __future__ import annotations
+
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def settings(max_examples=10, **_ignored):
+    """Record ``max_examples`` on the decorated (already-``given``) test."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies):
+    """Call the test once per drawn example, deterministically seeded.
+
+    The wrapper deliberately exposes a bare ``(self)`` signature (no
+    ``functools.wraps``): pytest must not see the strategy parameters,
+    or it would try to resolve them as fixtures.
+    """
+
+    def deco(fn):
+        def wrapper(self):
+            rng = random.Random(0xC0FFEE)
+            for _ in range(getattr(wrapper, "_max_examples", 10)):
+                kwargs = {k: s.sample(rng) for k, s in named_strategies.items()}
+                fn(self, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -5,4 +5,6 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
+# python/ for `compile.*`, tests/ for the offline hypothesis shim
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,19 +1,163 @@
-//! Fig 13 bench: per-kernel timings, optimized vs SOTA-style baseline.
+//! Fig 13 bench: per-kernel timings — serial vs parallel, plus the
+//! optimized-vs-SOTA-baseline context measurement.
 //!
-//! Measures the three processing kernels in isolation on this host:
-//! * GPK — vectorized upsample+subtract vs per-node branching interp;
-//! * LPK — fused mass-trans stencil vs unfused mass-then-restrict with a
-//!   materialized intermediate;
-//! * IPK — lane-batched Thomas vs gathered per-vector Thomas.
+//! Two sections:
 //!
-//! Run with `cargo bench --bench fig13_kernels`.
+//! 1. **serial vs parallel** — each kernel family (GPK `upsample`, LPK
+//!    `masstrans`, IPK `thomas`) along every axis of a cubic grid, per
+//!    dtype and grid size, serial (`workers = 1`) against the intra-kernel
+//!    parallel path (`workers = util::par::threads()`). Chunking is
+//!    bit-identical by construction, so this isolates pure scaling.
+//! 2. **optimized vs baseline** — the paper's Fig-13 kernel-design
+//!    comparison (vectorized/fused/batched vs per-node branching /
+//!    unfused / gathered), both sides serial to isolate design effects.
+//!
+//! Every measurement is appended to a machine-readable report
+//! (`BENCH_kernels.json`, override with `MGR_BENCH_OUT`) so later PRs
+//! have a regression baseline — see `docs/performance.md`.
+//!
+//! Run with `cargo bench --bench fig13_kernels`. The IPK closure solves
+//! in place and reuses its buffer across iterations; magnitudes drift but
+//! per-iteration arithmetic is identical, so timings are unaffected.
 
 use mgr::refactor::{axis, DimOps};
-use mgr::util::bench::{bench_auto, report};
+use mgr::util::bench::{bench_auto, report, BenchReport, Measurement, ReportRow};
+use mgr::util::par;
 use mgr::util::rng::Rng;
+use mgr::util::Scalar;
 
-fn main() {
-    let n = 129usize;
+const BUDGET_S: f64 = 0.2;
+
+fn push_row(
+    rep: &mut BenchReport,
+    kernel: &str,
+    variant: &str,
+    dtype: &str,
+    shape: &[usize],
+    ax: Option<usize>,
+    m: &Measurement,
+    bytes: usize,
+    speedup: Option<f64>,
+) {
+    rep.push(ReportRow {
+        kernel: kernel.to_string(),
+        variant: variant.to_string(),
+        dtype: dtype.to_string(),
+        shape: shape.to_vec(),
+        axis: ax,
+        median_s: m.median_s,
+        mad_rel: m.mad_rel,
+        gbps: m.gbps(bytes),
+        speedup,
+    });
+}
+
+/// Serial-vs-parallel sweep for one dtype and grid size: every kernel
+/// family along every axis of an `n³` grid, aggregated per family.
+fn serial_vs_parallel<T: Scalar>(n: usize, dtype: &str, rep: &mut BenchReport) {
+    let es = T::BYTES;
+    let shape = [n, n, n];
+    let vol = n * n * n;
+    let c = (n + 1) / 2;
+    let threads = par::threads();
+    let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+    let ops: DimOps<T> = DimOps::new(&xs);
+    let mut rng = Rng::new(1);
+    let data: Vec<T> = (0..vol).map(|_| T::from_f64(rng.normal())).collect();
+
+    println!("-- {n}^3 {dtype} ({threads} threads) --");
+    for (kernel, label) in [("GPK", "upsample"), ("LPK", "masstrans"), ("IPK", "thomas")] {
+        let mut totals = [0.0f64; 2]; // [serial, parallel]
+        let mut total_bytes = 0usize;
+        for ax in 0..3 {
+            let mut cshape = shape;
+            cshape[ax] = c;
+            let cvol: usize = cshape.iter().product();
+            let opsr = &ops;
+            let (bytes, measure): (usize, Box<dyn FnMut(usize) -> Measurement + '_>) = match kernel {
+                "GPK" => {
+                    let src = data[..cvol].to_vec();
+                    let mut dst = vec![T::ZERO; vol];
+                    (
+                        (cvol + vol) * es,
+                        Box::new(move |w| {
+                            bench_auto(&format!("{label} ax{ax} w{w}"), BUDGET_S, || {
+                                axis::upsample_with(&src, &cshape, ax, &opsr.r, &mut dst, w)
+                            })
+                        }),
+                    )
+                }
+                "LPK" => {
+                    let src = data.clone();
+                    let mut dst = vec![T::ZERO; cvol];
+                    (
+                        (vol + cvol) * es,
+                        Box::new(move |w| {
+                            bench_auto(&format!("{label} ax{ax} w{w}"), BUDGET_S, || {
+                                axis::masstrans_with(&src, &shape, ax, opsr, &mut dst, w)
+                            })
+                        }),
+                    )
+                }
+                _ => {
+                    let mut buf = data[..cvol].to_vec();
+                    (
+                        2 * cvol * es,
+                        Box::new(move |w| {
+                            bench_auto(&format!("{label} ax{ax} w{w}"), BUDGET_S, || {
+                                axis::thomas_with(&mut buf, &cshape, ax, opsr, w)
+                            })
+                        }),
+                    )
+                }
+            };
+            let mut measure = measure;
+            let serial = measure(1);
+            let parallel = measure(threads);
+            let speedup = serial.median_s / parallel.median_s;
+            report(&serial, Some(bytes));
+            report(&parallel, Some(bytes));
+            push_row(rep, kernel, "serial", dtype, &shape, Some(ax), &serial, bytes, None);
+            push_row(
+                rep,
+                kernel,
+                "parallel",
+                dtype,
+                &shape,
+                Some(ax),
+                &parallel,
+                bytes,
+                Some(speedup),
+            );
+            totals[0] += serial.median_s;
+            totals[1] += parallel.median_s;
+            total_bytes += bytes;
+        }
+        let family = totals[0] / totals[1];
+        println!("  {kernel} family (all axes): serial {:.3} ms, parallel {:.3} ms — speedup {family:.2}x\n",
+                 totals[0] * 1e3, totals[1] * 1e3);
+        for (variant, t, speedup) in [
+            ("serial-total", totals[0], None),
+            ("parallel-total", totals[1], Some(family)),
+        ] {
+            rep.push(ReportRow {
+                kernel: kernel.to_string(),
+                variant: variant.to_string(),
+                dtype: dtype.to_string(),
+                shape: shape.to_vec(),
+                axis: None,
+                median_s: t,
+                mad_rel: 0.0,
+                gbps: total_bytes as f64 / t / 1e9,
+                speedup,
+            });
+        }
+    }
+}
+
+/// The paper's Fig-13 comparison: optimized kernel design vs the SOTA
+/// baseline design, both serial (axis 0, `n³` f64).
+fn optimized_vs_baseline(n: usize, rep: &mut BenchReport) {
     let shape = [n, n, n];
     let total = n * n * n;
     let xs: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
@@ -22,14 +166,14 @@ fn main() {
     let data: Vec<f64> = (0..total).map(|_| rng.normal()).collect();
     let bytes = total * 8;
 
-    println!("== Fig 13 (host): kernel-level optimized vs baseline, {n}^3 f64 ==");
+    println!("== Fig 13 context: kernel-level optimized vs baseline, {n}^3 f64, serial ==");
 
     // ---- GPK ----------------------------------------------------------
     let c = (n + 1) / 2;
     let coarse: Vec<f64> = data.iter().take(c * n * n).copied().collect();
     let mut out = vec![0.0f64; n * n * n];
     let opt = bench_auto("GPK optimized (vectorized upsample)", 0.4, || {
-        axis::upsample(&coarse, &[c, n, n], 0, &ops.r, &mut out);
+        axis::upsample_with(&coarse, &[c, n, n], 0, &ops.r, &mut out, 1);
     });
     report(&opt, Some(bytes));
     // baseline: per-node type-branched interpolation through strides
@@ -40,11 +184,14 @@ fn main() {
                 for k in 0..n {
                     let idx = (i * n + j) * n + k;
                     let interp = if i % 2 == 1 {
-                        0.5 * (data[((i - 1) * n + j) * n + k] + data[((i + 1).min(n - 1) * n + j) * n + k])
+                        0.5 * (data[((i - 1) * n + j) * n + k]
+                            + data[((i + 1).min(n - 1) * n + j) * n + k])
                     } else if j % 2 == 1 {
-                        0.5 * (data[(i * n + j - 1) * n + k] + data[(i * n + (j + 1).min(n - 1)) * n + k])
+                        0.5 * (data[(i * n + j - 1) * n + k]
+                            + data[(i * n + (j + 1).min(n - 1)) * n + k])
                     } else if k % 2 == 1 {
-                        0.5 * (data[(i * n + j) * n + k - 1] + data[(i * n + j) * n + (k + 1).min(n - 1)])
+                        0.5 * (data[(i * n + j) * n + k - 1]
+                            + data[(i * n + j) * n + (k + 1).min(n - 1)])
                     } else {
                         0.0
                     };
@@ -54,25 +201,25 @@ fn main() {
         }
     });
     report(&base, Some(bytes));
-    println!("  GPK speedup: {:.1}x (paper Volta: 4.9x)\n", base.median_s / opt.median_s);
+    println!(
+        "  GPK speedup: {:.1}x (paper Volta: 4.9x)\n",
+        base.median_s / opt.median_s
+    );
+    push_row(rep, "GPK", "baseline", "f64", &shape, Some(0), &base, bytes, Some(base.median_s / opt.median_s));
 
     // ---- LPK ----------------------------------------------------------
     let mut f = vec![0.0f64; c * n * n];
     let opt = bench_auto("LPK optimized (fused mass-trans)", 0.4, || {
-        axis::masstrans(&data, &shape, 0, &ops, &mut f);
+        axis::masstrans_with(&data, &shape, 0, &ops, &mut f, 1);
     });
     report(&opt, Some(bytes));
     let mut mass = vec![0.0f64; total];
     let mut rest = vec![0.0f64; c * n * n];
     let base = bench_auto("LPK baseline (unfused + intermediate)", 0.4, || {
-        // pass 1: mass multiply, materialized
+        // pass 1: mass multiply, materialized; vector-wise stride n*n access
         let h = &ops.h;
         for o in 0..n * n {
-            for i in 0..n {
-                let v = |ii: usize| data[ii * n * n % total + o % (n * n)]; // gathered line
-                let _ = v;
-            }
-            let base_off = o; // vector-wise: stride n*n access
+            let base_off = o;
             let at = |ii: usize| data[ii * n * n + base_off];
             mass[base_off] = h[0] / 3.0 * at(0) + h[0] / 6.0 * at(1);
             for i in 1..n - 1 {
@@ -98,17 +245,21 @@ fn main() {
         }
     });
     report(&base, Some(bytes));
-    println!("  LPK speedup: {:.1}x (paper Volta: 6.3x)\n", base.median_s / opt.median_s);
+    println!(
+        "  LPK speedup: {:.1}x (paper Volta: 6.3x)\n",
+        base.median_s / opt.median_s
+    );
+    push_row(rep, "LPK", "baseline", "f64", &shape, Some(0), &base, bytes, Some(base.median_s / opt.median_s));
 
     // ---- IPK ----------------------------------------------------------
     let cshape = [c, n, n];
+    let oc = ops_c(&xs);
     let mut z = vec![0.0f64; c * n * n];
     z.copy_from_slice(&data[..c * n * n]);
     let opt = bench_auto("IPK optimized (lane-batched Thomas)", 0.4, || {
-        axis::thomas(&mut z, &cshape, 0, &ops_c(&xs));
+        axis::thomas_with(&mut z, &cshape, 0, &oc, 1);
     });
     report(&opt, Some(c * n * n * 8));
-    let oc = ops_c(&xs);
     let mut z2 = vec![0.0f64; c * n * n];
     z2.copy_from_slice(&data[..c * n * n]);
     let base = bench_auto("IPK baseline (gathered per-vector)", 0.4, || {
@@ -130,7 +281,11 @@ fn main() {
         }
     });
     report(&base, Some(c * n * n * 8));
-    println!("  IPK speedup: {:.1}x (paper Volta: 3.0x)", base.median_s / opt.median_s);
+    println!(
+        "  IPK speedup: {:.1}x (paper Volta: 3.0x)",
+        base.median_s / opt.median_s
+    );
+    push_row(rep, "IPK", "baseline", "f64", &shape, Some(0), &base, c * n * n * 8, Some(base.median_s / opt.median_s));
 }
 
 fn ops_c(xs: &[f64]) -> DimOps<f64> {
@@ -148,4 +303,21 @@ fn ops_c(xs: &[f64]) -> DimOps<f64> {
         f
     };
     DimOps::new(&fine)
+}
+
+fn main() {
+    let mut rep = BenchReport::new("fig13_kernels");
+    println!(
+        "== Fig 13 (host): serial vs parallel kernels, {} threads available ==",
+        par::threads()
+    );
+    for &n in &[33usize, 65, 129, 193] {
+        serial_vs_parallel::<f64>(n, "f64", &mut rep);
+    }
+    serial_vs_parallel::<f32>(193, "f32", &mut rep);
+    optimized_vs_baseline(129, &mut rep);
+
+    let path = std::env::var("MGR_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
+    rep.write(&path).expect("write bench report");
+    println!("\nwrote {path} ({} rows)", rep.rows.len());
 }

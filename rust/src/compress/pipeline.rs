@@ -1,4 +1,10 @@
 //! The MGARD compression pipeline with per-stage timing (Fig 19).
+//!
+//! The decompose/recompose and quantize/dequantize stages inherit the
+//! intra-kernel parallelism of [`crate::refactor::axis`] and the
+//! `compress::quantize` module (knobs in [`crate::util::par`]); the
+//! entropy-coding stages are sequential by construction (zlib's and the
+//! canonical Huffman coder's bitstreams carry cross-symbol state).
 
 use std::io::{Read, Write};
 

@@ -6,6 +6,7 @@
 //! field's L∞ error is at most `(nlevels+1) · δ/2 = eb` — the same
 //! triangle-inequality argument MGARD uses for its uniform mode.
 
+use crate::util::par;
 use crate::util::Scalar;
 
 /// Quantization parameters stored with the compressed stream.
@@ -30,18 +31,40 @@ impl QuantMeta {
 }
 
 /// Quantize coefficients to signed integers (round-to-nearest).
+/// Element-wise and order-preserving, so the chunk-parallel path (large
+/// inputs, see [`crate::util::par`]) is bit-identical to the serial one.
 pub fn quantize<T: Scalar>(data: &[T], meta: &QuantMeta) -> Vec<i64> {
     let inv = 1.0 / meta.bin;
-    data.iter()
-        .map(|v| (v.to_f64() * inv).round() as i64)
-        .collect()
+    let workers = par::workers_for(data.len());
+    if workers <= 1 {
+        return data
+            .iter()
+            .map(|v| (v.to_f64() * inv).round() as i64)
+            .collect();
+    }
+    let mut out = vec![0i64; data.len()];
+    par::for_slab_chunks(data, &mut out, data.len(), 1, 1, workers, |_, _, src, dst| {
+        for (o, v) in dst.iter_mut().zip(src) {
+            *o = (v.to_f64() * inv).round() as i64;
+        }
+    });
+    out
 }
 
-/// Invert [`quantize`].
+/// Invert [`quantize`] (chunk-parallel like it).
 pub fn dequantize<T: Scalar>(q: &[i64], meta: &QuantMeta) -> Vec<T> {
-    q.iter()
-        .map(|&k| T::from_f64(k as f64 * meta.bin))
-        .collect()
+    let workers = par::workers_for(q.len());
+    if workers <= 1 {
+        return q.iter().map(|&k| T::from_f64(k as f64 * meta.bin)).collect();
+    }
+    let mut out = vec![T::ZERO; q.len()];
+    let bin = meta.bin;
+    par::for_slab_chunks(q, &mut out, q.len(), 1, 1, workers, |_, _, src, dst| {
+        for (o, &k) in dst.iter_mut().zip(src) {
+            *o = T::from_f64(k as f64 * bin);
+        }
+    });
+    out
 }
 
 #[cfg(test)]
@@ -62,6 +85,20 @@ mod tests {
         for (a, b) in data.iter().zip(&back) {
             assert!((a - b).abs() <= meta.bin / 2.0 + 1e-15);
         }
+    }
+
+    #[test]
+    fn quantize_path_independent_of_parallelism() {
+        // whatever path workers_for picks must match the plain serial map
+        let meta = QuantMeta::for_bound(1e-3, 3);
+        let mut rng = Rng::new(9);
+        let data: Vec<f64> = (0..200_000).map(|_| rng.normal()).collect();
+        let inv = 1.0 / meta.bin;
+        let want: Vec<i64> = data.iter().map(|v| (v * inv).round() as i64).collect();
+        assert_eq!(quantize(&data, &meta), want);
+        let back_serial: Vec<f64> = crate::util::par::with_serial(|| dequantize(&want, &meta));
+        let back: Vec<f64> = dequantize(&want, &meta);
+        assert_eq!(back, back_serial);
     }
 
     #[test]

@@ -99,9 +99,15 @@ impl Coordinator {
 
     /// Process a batch of jobs across the worker pool (jobs are
     /// independent — this is the inter-job embarrassing parallelism; the
-    /// intra-job mode is each job's own).
+    /// intra-job mode is each job's own). Multi-worker pools run each job
+    /// under [`crate::util::par::with_serial`] so per-kernel forking does
+    /// not multiply with pool-level parallelism.
     pub fn run_batch(&self, jobs: Vec<JobSpec>) -> Vec<Result<JobResult>> {
         let n = jobs.len();
+        // suppress per-kernel forking only when >1 pool worker actually
+        // spawns — a small batch on a large pool keeps intra-kernel
+        // parallelism
+        let pooled = self.pool_workers.min(n.max(1)) > 1;
         let jobs = Mutex::new(
             jobs.into_iter()
                 .enumerate()
@@ -117,7 +123,11 @@ impl Coordinator {
                     let next = jobs.lock().unwrap().pop();
                     let Some((idx, job)) = next else { break };
                     active.fetch_add(1, Ordering::SeqCst);
-                    let r = self.run_job(job);
+                    let r = if pooled {
+                        crate::util::par::with_serial(|| self.run_job(job))
+                    } else {
+                        self.run_job(job)
+                    };
                     results.lock().unwrap()[idx] = Some(r);
                     active.fetch_sub(1, Ordering::SeqCst);
                 });

@@ -26,6 +26,11 @@
 //! | [`compress`] | quantizer + lossless coders + MGARD compression pipeline |
 //! | [`sim`] | Gray-Scott reaction-diffusion workload generator |
 //! | [`vis`] | iso-surface area metric for the visualization showcase |
+//! | [`util`] | scalar abstraction, intra-kernel parallelism ([`util::par`]), RNG, bench/CLI/JSON helpers |
+//!
+//! The native kernels are multi-threaded on the host (`util::par`,
+//! bit-identical to serial execution); the PJRT artifact path is gated
+//! behind the `pjrt` cargo feature (see [`runtime`]).
 
 pub mod baseline;
 pub mod compress;

@@ -56,6 +56,7 @@ fn load_field(args: &Args) -> Result<Tensor<f64>> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    args.apply_parallelism()?;
     match args.subcommand.as_deref() {
         Some("info") => info(args),
         Some("refactor") => refactor(args),
@@ -71,7 +72,11 @@ fn run(args: &Args) -> Result<()> {
                  \x20 refactor   [--shape NxNxN --input grayscott|random]\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle]\n\
                  \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
-                 \x20 pjrt-check [--artifacts DIR]\n"
+                 \x20 pjrt-check [--artifacts DIR]\n\n\
+                 global options (any subcommand):\n\
+                 \x20 --threads N        intra-kernel worker count (0 = all cores)\n\
+                 \x20 --par-threshold N  min elements before kernels fork\n\
+                 \x20                    (0 = restore default, 1 = always fork)\n"
             );
             Ok(())
         }

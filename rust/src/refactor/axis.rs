@@ -7,8 +7,22 @@
 //!
 //! Naming follows the paper: `upsample` is the GPK interpolation engine,
 //! `masstrans` the LPK fused stencil, `thomas` the IPK solver.
+//!
+//! ## Parallelism
+//!
+//! The three hot kernels (`upsample`, `masstrans`, `thomas`) fork over
+//! their independent output lines when the buffer exceeds the
+//! [`crate::util::par`] threshold: GPK/LPK split the flattened
+//! `(outer, coarse-row)` work-unit space into contiguous output chunks,
+//! IPK splits whole slabs when `outer` is large and independent inner
+//! lanes otherwise. Chunking never reorders per-element arithmetic, so
+//! results are **bit-identical for every worker count** (asserted by the
+//! tests below). The `*_with` variants take an explicit worker count for
+//! benches and tests; the plain entry points consult
+//! [`crate::util::par::workers_for`].
 
 use crate::refactor::DimOps;
+use crate::util::par::{self, SendPtr, Task};
 use crate::util::Scalar;
 
 /// Decompose `shape` relative to `axis` into `(outer, m, inner)` loop bounds.
@@ -30,28 +44,83 @@ pub fn upsample<T: Scalar>(
     r: &[T],
     dst: &mut [T],
 ) {
+    let workers = par::workers_for(dst.len());
+    upsample_with(src, src_shape, axis, r, dst, workers);
+}
+
+/// [`upsample`] with an explicit worker count (`<= 1` forces the serial
+/// path). Work units are the flattened `(outer, coarse-interval)` pairs;
+/// a contiguous unit range maps to a contiguous `dst` range, so workers
+/// receive disjoint `split_at_mut` chunks.
+pub fn upsample_with<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    axis: usize,
+    r: &[T],
+    dst: &mut [T],
+    workers: usize,
+) {
     let (outer, mc, inner) = axis_split(src_shape, axis);
     let a = mc - 1;
     debug_assert_eq!(r.len(), a);
     let mf = 2 * a + 1;
     debug_assert_eq!(dst.len(), outer * mf * inner);
-    for o in 0..outer {
+    // unit g = o*(a+1) + i: interval i < a emits an even+odd row pair
+    // (2·inner elements), the closing unit i == a copies the final row.
+    let units = outer * (a + 1);
+    let workers = workers.clamp(1, units.max(1));
+    if workers <= 1 {
+        upsample_units(src, mc, inner, r, 0, units, dst);
+        return;
+    }
+    let closing_before = |g: usize| g / (a + 1); // closing units in [0, g)
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(workers);
+    let mut rest = dst;
+    for (g0, len) in par::chunks(units, workers) {
+        let closing = closing_before(g0 + len) - closing_before(g0);
+        let span = (len - closing) * 2 * inner + closing * inner;
+        let (mine, tail) = rest.split_at_mut(span);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            upsample_units(src, mc, inner, r, g0, g0 + len, mine)
+        }));
+    }
+    par::run_tasks(tasks);
+}
+
+/// Emit upsample output for work units `[g0, g1)` into the contiguous
+/// chunk `dst_chunk` that starts at unit `g0`'s output offset.
+fn upsample_units<T: Scalar>(
+    src: &[T],
+    mc: usize,
+    inner: usize,
+    r: &[T],
+    g0: usize,
+    g1: usize,
+    dst_chunk: &mut [T],
+) {
+    let a = mc - 1;
+    let mut off = 0usize;
+    for g in g0..g1 {
+        let o = g / (a + 1);
+        let i = g % (a + 1);
         let sb = o * mc * inner;
-        let db = o * mf * inner;
-        for i in 0..a {
+        if i < a {
             let lo = &src[sb + i * inner..sb + (i + 1) * inner];
             let hi = &src[sb + (i + 1) * inner..sb + (i + 2) * inner];
-            let (even_row, rest) = dst[db + 2 * i * inner..].split_at_mut(inner);
+            let (even_row, rest) = dst_chunk[off..off + 2 * inner].split_at_mut(inner);
             even_row.copy_from_slice(lo);
-            let odd_row = &mut rest[..inner];
+            let odd_row = rest;
             let ri = r[i];
             for e in 0..inner {
                 // fma(r, hi, fma(-r, lo, lo))
                 odd_row[e] = ri.mul_add(hi[e], (-ri).mul_add(lo[e], lo[e]));
             }
+            off += 2 * inner;
+        } else {
+            dst_chunk[off..off + inner].copy_from_slice(&src[sb + a * inner..sb + mc * inner]);
+            off += inner;
         }
-        dst[db + 2 * a * inner..db + mf * inner]
-            .copy_from_slice(&src[sb + a * inner..sb + mc * inner]);
     }
 }
 
@@ -73,37 +142,81 @@ pub fn masstrans<T: Scalar>(
     ops: &DimOps<T>,
     dst: &mut [T],
 ) {
+    let workers = par::workers_for(src.len());
+    masstrans_with(src, src_shape, axis, ops, dst, workers);
+}
+
+/// [`masstrans`] with an explicit worker count (`<= 1` forces the serial
+/// path). Output rows (flattened over `(outer, coarse-row)`) are
+/// independent and uniformly `inner`-sized, so workers receive disjoint
+/// contiguous `dst` chunks.
+pub fn masstrans_with<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    axis: usize,
+    ops: &DimOps<T>,
+    dst: &mut [T],
+    workers: usize,
+) {
     let (outer, m, inner) = axis_split(src_shape, axis);
     debug_assert_eq!(m, ops.fine_len());
     let a = (m - 1) / 2;
     debug_assert_eq!(dst.len(), outer * (a + 1) * inner);
-    let k = &ops.k;
+    let rows = outer * (a + 1);
+    let workers = workers.clamp(1, rows.max(1));
+    if workers <= 1 {
+        masstrans_rows(src, m, inner, ops, 0, rows, dst);
+        return;
+    }
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(workers);
+    let mut rest = dst;
+    for (g0, len) in par::chunks(rows, workers) {
+        let (mine, tail) = rest.split_at_mut(len * inner);
+        rest = tail;
+        tasks.push(Box::new(move || {
+            masstrans_rows(src, m, inner, ops, g0, g0 + len, mine)
+        }));
+    }
+    par::run_tasks(tasks);
+}
 
-    for o in 0..outer {
+/// Emit mass-trans output rows `[g0, g1)` (flattened `(outer, i)` index)
+/// into the contiguous chunk `dst_chunk` starting at row `g0`.
+fn masstrans_rows<T: Scalar>(
+    src: &[T],
+    m: usize,
+    inner: usize,
+    ops: &DimOps<T>,
+    g0: usize,
+    g1: usize,
+    dst_chunk: &mut [T],
+) {
+    let a = (m - 1) / 2;
+    let k = &ops.k;
+    for (row_idx, g) in (g0..g1).enumerate() {
+        let o = g / (a + 1);
+        let i = g % (a + 1);
         let sb = o * m * inner;
-        let db = o * (a + 1) * inner;
-        for i in 0..=a {
-            let j = 2 * i;
-            let row = &mut dst[db + i * inner..db + (i + 1) * inner];
-            // five precomputed taps centred at source row 2i (the fused
-            // mass-trans "K matrix"); boundary taps carry zero weight but
-            // would index out of bounds, so clamp the row range instead
-            let t0 = if j >= 2 { k[0][i] } else { T::ZERO };
-            let t1 = if j >= 1 { k[1][i] } else { T::ZERO };
-            let t2 = k[2][i];
-            let t3 = if j + 1 < m { k[3][i] } else { T::ZERO };
-            let t4 = if j + 2 < m { k[4][i] } else { T::ZERO };
-            let r0 = &src[sb + j.saturating_sub(2) * inner..][..inner];
-            let r1 = &src[sb + j.saturating_sub(1) * inner..][..inner];
-            let r2 = &src[sb + j * inner..][..inner];
-            let r3 = &src[sb + (j + 1).min(m - 1) * inner..][..inner];
-            let r4 = &src[sb + (j + 2).min(m - 1) * inner..][..inner];
-            for e in 0..inner {
-                let acc = t0.mul_add(r0[e], t1 * r1[e]);
-                let acc = t2.mul_add(r2[e], acc);
-                let acc = t3.mul_add(r3[e], acc);
-                row[e] = t4.mul_add(r4[e], acc);
-            }
+        let j = 2 * i;
+        let row = &mut dst_chunk[row_idx * inner..(row_idx + 1) * inner];
+        // five precomputed taps centred at source row 2i (the fused
+        // mass-trans "K matrix"); boundary taps carry zero weight but
+        // would index out of bounds, so clamp the row range instead
+        let t0 = if j >= 2 { k[0][i] } else { T::ZERO };
+        let t1 = if j >= 1 { k[1][i] } else { T::ZERO };
+        let t2 = k[2][i];
+        let t3 = if j + 1 < m { k[3][i] } else { T::ZERO };
+        let t4 = if j + 2 < m { k[4][i] } else { T::ZERO };
+        let r0 = &src[sb + j.saturating_sub(2) * inner..][..inner];
+        let r1 = &src[sb + j.saturating_sub(1) * inner..][..inner];
+        let r2 = &src[sb + j * inner..][..inner];
+        let r3 = &src[sb + (j + 1).min(m - 1) * inner..][..inner];
+        let r4 = &src[sb + (j + 2).min(m - 1) * inner..][..inner];
+        for e in 0..inner {
+            let acc = t0.mul_add(r0[e], t1 * r1[e]);
+            let acc = t2.mul_add(r2[e], acc);
+            let acc = t3.mul_add(r3[e], acc);
+            row[e] = t4.mul_add(r4[e], acc);
         }
     }
 }
@@ -115,8 +228,60 @@ pub fn masstrans<T: Scalar>(
 /// with every `inner` lane carrying an independent load vector — the
 /// paper's `O(n²)` batched-vector concurrency maps to SIMD lanes here.
 pub fn thomas<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, ops: &DimOps<T>) {
+    let workers = par::workers_for(buf.len());
+    thomas_with(buf, shape, axis, ops, workers);
+}
+
+/// [`thomas`] with an explicit worker count (`<= 1` forces the serial
+/// path). The solve is sequential along `axis` but every `(outer, inner)`
+/// line is independent: large `outer` splits into contiguous slabs; small
+/// `outer` (e.g. axis 0, where `outer == 1`) splits the interleaved inner
+/// lanes into disjoint column tiles instead.
+pub fn thomas_with<T: Scalar>(
+    buf: &mut [T],
+    shape: &[usize],
+    axis: usize,
+    ops: &DimOps<T>,
+    workers: usize,
+) {
     let (outer, m, inner) = axis_split(shape, axis);
     debug_assert_eq!(m, ops.coarse_len());
+    let workers = workers.clamp(1, (outer * inner).max(1));
+    if workers <= 1 {
+        thomas_serial(buf, outer, m, inner, ops);
+        return;
+    }
+    if outer >= workers {
+        par::for_slab_chunks_mut(buf, outer, m * inner, workers, |_, len, chunk| {
+            thomas_serial(chunk, len, m, inner, ops)
+        });
+        return;
+    }
+    // Few slabs: additionally split the independent inner lanes. Column
+    // tiles of one slab interleave in memory (stride `inner`), so they are
+    // handed out as raw-pointer tiles under par::SendPtr's disjointness
+    // contract: every (slab, column-range) pair below is unique. The
+    // `workers` budget is distributed across slabs so the total tile
+    // count never exceeds the configured fork width.
+    let tiles_base = workers / outer;
+    let tiles_extra = workers % outer;
+    let base = SendPtr(buf.as_mut_ptr());
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(workers);
+    for o in 0..outer {
+        let tiles = (tiles_base + usize::from(o < tiles_extra)).clamp(1, inner.max(1));
+        for (e0, elen) in par::chunks(inner, tiles) {
+            let p = base;
+            tasks.push(Box::new(move || {
+                // SAFETY: tasks cover disjoint (slab o, columns [e0, e0+elen))
+                // tiles of `buf`, which outlives run_tasks' scoped join.
+                unsafe { thomas_cols(p.0.add(o * m * inner), m, inner, e0, elen, ops) }
+            }));
+        }
+    }
+    par::run_tasks(tasks);
+}
+
+fn thomas_serial<T: Scalar>(buf: &mut [T], outer: usize, m: usize, inner: usize, ops: &DimOps<T>) {
     for o in 0..outer {
         let b = o * m * inner;
         // forward
@@ -144,11 +309,52 @@ pub fn thomas<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, ops: &DimO
     }
 }
 
+/// Thomas solve restricted to columns `[e0, e0+elen)` of one `m × inner`
+/// slab based at `base`. Arithmetic per lane is identical to
+/// [`thomas_serial`], so tiling keeps results bit-identical.
+///
+/// # Safety
+/// `base` must point to a live `m * inner` element slab, and no other
+/// thread may touch columns `[e0, e0+elen)` of it concurrently.
+unsafe fn thomas_cols<T: Scalar>(
+    base: *mut T,
+    m: usize,
+    inner: usize,
+    e0: usize,
+    elen: usize,
+    ops: &DimOps<T>,
+) {
+    // forward
+    for e in e0..e0 + elen {
+        let v = base.add(e);
+        *v = *v * ops.denom[0];
+    }
+    for i in 1..m {
+        let s = ops.sub[i];
+        let d = ops.denom[i];
+        for e in e0..e0 + elen {
+            let prev = *base.add((i - 1) * inner + e);
+            let cur = base.add(i * inner + e);
+            *cur = ((-s).mul_add(prev, *cur)) * d;
+        }
+    }
+    // backward
+    for i in (0..m - 1).rev() {
+        let c = ops.cp[i];
+        for e in e0..e0 + elen {
+            let next = *base.add((i + 1) * inner + e);
+            let cur = base.add(i * inner + e);
+            *cur = (-c).mul_add(next, *cur);
+        }
+    }
+}
+
 /// Fused final-dimension upsample + apply: `buf[..] += sign · interp`
 /// where the interpolant's last dimension is expanded on the fly from
 /// `src` (fine in all dims but the last, coarse in the last). Saves a
 /// full materialize-then-subtract pass over the fine array (GPK fusion;
-/// see EXPERIMENTS.md §Perf).
+/// see `docs/performance.md`). Slab-parallel over the leading dims like
+/// [`upsample`].
 pub fn upsample_apply_last<T: Scalar>(
     src: &[T],
     src_shape: &[usize],
@@ -156,22 +362,38 @@ pub fn upsample_apply_last<T: Scalar>(
     buf: &mut [T],
     sign: T,
 ) {
+    let workers = par::workers_for(buf.len());
+    upsample_apply_last_with(src, src_shape, r, buf, sign, workers);
+}
+
+/// [`upsample_apply_last`] with an explicit worker count (`<= 1` forces
+/// the serial path).
+pub fn upsample_apply_last_with<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    r: &[T],
+    buf: &mut [T],
+    sign: T,
+    workers: usize,
+) {
     let d = src_shape.len();
     let mc = src_shape[d - 1];
     let a = mc - 1;
     let mf = 2 * a + 1;
     let outer: usize = src_shape[..d - 1].iter().product();
     debug_assert_eq!(buf.len(), outer * mf);
-    for o in 0..outer {
-        let s = &src[o * mc..(o + 1) * mc];
-        let b = &mut buf[o * mf..(o + 1) * mf];
-        for i in 0..a {
-            b[2 * i] = sign.mul_add(s[i], b[2 * i]);
-            let interp = r[i].mul_add(s[i + 1], (-r[i]).mul_add(s[i], s[i]));
-            b[2 * i + 1] = sign.mul_add(interp, b[2 * i + 1]);
+    par::for_slab_chunks(src, buf, outer, mc, mf, workers, |_, len, src_chunk, chunk| {
+        for o in 0..len {
+            let s = &src_chunk[o * mc..(o + 1) * mc];
+            let b = &mut chunk[o * mf..(o + 1) * mf];
+            for i in 0..a {
+                b[2 * i] = sign.mul_add(s[i], b[2 * i]);
+                let interp = r[i].mul_add(s[i + 1], (-r[i]).mul_add(s[i], s[i]));
+                b[2 * i + 1] = sign.mul_add(interp, b[2 * i + 1]);
+            }
+            b[2 * a] = sign.mul_add(s[a], b[2 * a]);
         }
-        b[2 * a] = sign.mul_add(s[a], b[2 * a]);
-    }
+    });
 }
 
 /// Single-axis GPK coefficients (temporal phase of spatiotemporal
@@ -367,6 +589,83 @@ mod tests {
         interpolate_axis(&mut buf, &[5, 3], 0, &ops.r);
         for (a, b) in buf.iter().zip(&orig) {
             assert!((a - b).abs() < 1e-14);
+        }
+    }
+
+    /// Every worker count must produce bit-identical results to the
+    /// serial path — the invariant the parallel layer is built on.
+    #[test]
+    fn parallel_kernels_bit_identical_to_serial() {
+        let mut rng = Rng::new(40);
+        // shapes chosen to exercise both split strategies: big outer
+        // (slab split), outer == 1 (unit/column split), odd remainders
+        for shape in [vec![9usize, 7, 5], vec![17, 4], vec![33], vec![5, 64]] {
+            for axis in 0..shape.len() {
+                if shape[axis] < 3 || shape[axis] % 2 == 0 {
+                    continue;
+                }
+                let xs = rng.coords(shape[axis]);
+                let ops: DimOps<f64> = DimOps::new(&xs);
+                let n: usize = shape.iter().product();
+                let data: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+                // masstrans
+                let (outer, m, inner) = axis_split(&shape, axis);
+                let clen = outer * ((m + 1) / 2) * inner;
+                let mut serial = vec![0.0; clen];
+                masstrans_with(&data, &shape, axis, &ops, &mut serial, 1);
+                for w in [2usize, 3, 7, 64] {
+                    let mut parallel = vec![0.0; clen];
+                    masstrans_with(&data, &shape, axis, &ops, &mut parallel, w);
+                    assert_eq!(serial, parallel, "masstrans {shape:?} ax{axis} w{w}");
+                }
+
+                // upsample (coarse input along `axis`)
+                let mut cshape = shape.clone();
+                cshape[axis] = (shape[axis] + 1) / 2;
+                let cn: usize = cshape.iter().product();
+                let csrc = &data[..cn];
+                let mut serial = vec![0.0; n];
+                upsample_with(csrc, &cshape, axis, &ops.r, &mut serial, 1);
+                for w in [2usize, 5, 64] {
+                    let mut parallel = vec![0.0; n];
+                    upsample_with(csrc, &cshape, axis, &ops.r, &mut parallel, w);
+                    assert_eq!(serial, parallel, "upsample {shape:?} ax{axis} w{w}");
+                }
+
+                // thomas (on the coarse-along-axis grid, solved with the
+                // fine level's ops — its Thomas factors are the coarse
+                // mass system, exactly as step::build_correction uses it)
+                let mut serial = data[..cn].to_vec();
+                thomas_with(&mut serial, &cshape, axis, &ops, 1);
+                for w in [2usize, 3, 64] {
+                    let mut parallel = data[..cn].to_vec();
+                    thomas_with(&mut parallel, &cshape, axis, &ops, w);
+                    assert_eq!(serial, parallel, "thomas {cshape:?} ax{axis} w{w}");
+                }
+
+                // fused last-dim upsample+apply (partial array coarse in
+                // the trailing dim only)
+                if axis == shape.len() - 1 {
+                    let mut pshape = shape.clone();
+                    pshape[axis] = (shape[axis] + 1) / 2;
+                    let plen: usize = pshape.iter().product();
+                    let mut serial = data.clone();
+                    upsample_apply_last_with(&data[..plen], &pshape, &ops.r, &mut serial, -1.0, 1);
+                    for w in [2usize, 5, 64] {
+                        let mut parallel = data.clone();
+                        upsample_apply_last_with(
+                            &data[..plen],
+                            &pshape,
+                            &ops.r,
+                            &mut parallel,
+                            -1.0,
+                            w,
+                        );
+                        assert_eq!(serial, parallel, "apply_last {shape:?} w{w}");
+                    }
+                }
+            }
         }
     }
 

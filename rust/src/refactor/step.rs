@@ -4,6 +4,12 @@
 //! (mass-trans per dimension) → IPK (Thomas per dimension) → apply
 //! correction; `recompose_step` runs it in reverse. All scratch comes from
 //! a caller-owned [`Workspace`] so the hot path never allocates.
+//!
+//! Parallelism is inherited from the [`axis`] kernels: every upsample /
+//! mass-trans / Thomas call inside a step forks over its batch dimension
+//! when the level buffer is large enough (see [`crate::util::par`]), and
+//! chunking is bit-identical to serial execution, so step results do not
+//! depend on the worker count.
 
 use crate::grid::{gather_view, scatter_add_view, scatter_view, zero_view};
 use crate::refactor::axis;

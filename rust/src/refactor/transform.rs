@@ -22,6 +22,11 @@ pub enum Mode {
 /// the step workspaces once; `decompose`/`recompose` then run
 /// allocation-free (§3.3 reordered layout: each level view is gathered to
 /// stride 1, processed, and scattered back).
+///
+/// Large levels execute their kernels multi-threaded (bit-identically to
+/// serial; see [`crate::util::par`] for the `--threads`/threshold knobs);
+/// deep, small levels fall back to serial automatically, so the whole
+/// multi-level cascade composes without oversubscription.
 pub struct Refactorer<T> {
     hierarchy: Hierarchy,
     mode: Mode,

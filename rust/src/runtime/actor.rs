@@ -90,7 +90,7 @@ impl EngineHandle {
                             let _ = reply.send(engine.manifest().variants.clone());
                         }
                         Request::Warm { name, reply } => {
-                            let _ = reply.send(engine.executable(&name).map(|_| ()));
+                            let _ = reply.send(engine.warm(&name));
                         }
                     }
                 }

@@ -11,6 +11,13 @@
 //! * [`actor`] — a dedicated executor thread exposing a `Send` handle
 //!   (PJRT handles are not `Send`, so the coordinator talks to the engine
 //!   through a channel).
+//!
+//! The PJRT path needs the `xla` crate (and its vendored xla_extension
+//! C++ build), which offline environments don't have, so it is gated
+//! behind the `pjrt` cargo feature. Without the feature a stub [`Engine`]
+//! with the same API compiles instead: `Engine::load` fails with a clear
+//! error and every caller (CLI `pjrt-check`, the quickstart example, the
+//! coordinator's `Backend::Pjrt`) degrades gracefully.
 
 pub mod actor;
 pub mod manifest;
@@ -18,19 +25,25 @@ pub mod manifest;
 pub use actor::EngineHandle;
 pub use manifest::{Manifest, VariantMeta};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::grid::Tensor;
 use crate::util::Scalar;
 
 /// Scalars that can cross the PJRT literal boundary.
+#[cfg(feature = "pjrt")]
 pub trait XlaScalar: Scalar + xla::NativeType + xla::ArrayElement {
     /// dtype string used in artifact names/manifest ("float32"/"float64").
     const DTYPE: &'static str;
 }
+
+/// Scalars that can cross the PJRT literal boundary (stub bound — the
+/// `pjrt` feature adds the `xla` literal traits).
+#[cfg(not(feature = "pjrt"))]
+pub trait XlaScalar: Scalar {
+    /// dtype string used in artifact names/manifest ("float32"/"float64").
+    const DTYPE: &'static str;
+}
+
 impl XlaScalar for f32 {
     const DTYPE: &'static str = "float32";
 }
@@ -38,123 +51,223 @@ impl XlaScalar for f64 {
     const DTYPE: &'static str = "float64";
 }
 
-/// PJRT engine: owns the client and a name → compiled-executable cache.
-///
-/// Not `Send` (PJRT handles are raw pointers); wrap in [`EngineHandle`]
-/// for use from async/multi-threaded coordinators.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    dir: PathBuf,
-    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+#[cfg(feature = "pjrt")]
+mod engine_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{Manifest, VariantMeta, XlaScalar};
+    use crate::grid::Tensor;
+
+    /// PJRT engine: owns the client and a name → compiled-executable cache.
+    ///
+    /// Not `Send` (PJRT handles are raw pointers); wrap in
+    /// [`super::EngineHandle`] for use from async/multi-threaded
+    /// coordinators.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        dir: PathBuf,
+        cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    impl Engine {
+        /// Load the artifact registry from a directory containing
+        /// `manifest.json` (default: `artifacts/` next to the binary's cwd).
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest = Manifest::load(dir.join("manifest.json"))
+                .with_context(|| format!("loading manifest from {}", dir.display()))?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Engine {
+                client,
+                manifest,
+                dir,
+                cache: Default::default(),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Find the variant for an op/shape/dtype triple.
+        pub fn find(&self, op: &str, shape: &[usize], dtype: &str) -> Option<&VariantMeta> {
+            self.manifest
+                .variants
+                .iter()
+                .find(|v| v.op == op && v.shape == shape && v.dtype == dtype)
+        }
+
+        /// Compile (or fetch from cache) the named variant.
+        pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+            if let Some(e) = self.cache.borrow().get(name) {
+                return Ok(e.clone());
+            }
+            let meta = self
+                .manifest
+                .variants
+                .iter()
+                .find(|v| v.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact variant {name}"))?;
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let exe = std::rc::Rc::new(exe);
+            self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Pre-compile a variant (amortizes compile latency before serving).
+        pub fn warm(&self, name: &str) -> Result<()> {
+            self.executable(name).map(|_| ())
+        }
+
+        /// Execute a refactoring variant: inputs are the data tensor plus one
+        /// coordinate vector per dimension; output is the same-shape tensor.
+        pub fn run<T: XlaScalar>(
+            &self,
+            name: &str,
+            u: &Tensor<T>,
+            coords: &[Vec<f64>],
+        ) -> Result<Tensor<T>> {
+            let exe = self.executable(name)?;
+            let shape: Vec<i64> = u.shape().iter().map(|&n| n as i64).collect();
+            let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + coords.len());
+            args.push(
+                xla::Literal::vec1(u.data())
+                    .reshape(&shape)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))?,
+            );
+            for c in coords {
+                let cv: Vec<T> = c.iter().map(|&x| T::from_f64(x)).collect();
+                args.push(xla::Literal::vec1(&cv));
+            }
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True -> 1-tuple
+            let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            let data: Vec<T> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            Ok(Tensor::from_vec(u.shape(), data))
+        }
+
+        /// Convenience: run decompose for a shape/dtype if an artifact exists.
+        pub fn decompose<T: XlaScalar>(
+            &self,
+            u: &Tensor<T>,
+            coords: &[Vec<f64>],
+        ) -> Result<Tensor<T>> {
+            let op = if u.ndim() == 4 { "st_decompose" } else { "decompose" };
+            let meta = self
+                .find(op, u.shape(), T::DTYPE)
+                .ok_or_else(|| anyhow!("no {op} artifact for shape {:?} {}", u.shape(), T::DTYPE))?;
+            self.run(&meta.name.clone(), u, coords)
+        }
+
+        /// Convenience: run recompose for a shape/dtype if an artifact exists.
+        pub fn recompose<T: XlaScalar>(
+            &self,
+            u: &Tensor<T>,
+            coords: &[Vec<f64>],
+        ) -> Result<Tensor<T>> {
+            let op = if u.ndim() == 4 { "st_recompose" } else { "recompose" };
+            let meta = self
+                .find(op, u.shape(), T::DTYPE)
+                .ok_or_else(|| anyhow!("no {op} artifact for shape {:?} {}", u.shape(), T::DTYPE))?;
+            self.run(&meta.name.clone(), u, coords)
+        }
+    }
 }
 
-impl Engine {
-    /// Load the artifact registry from a directory containing
-    /// `manifest.json` (default: `artifacts/` next to the binary's cwd).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine {
-            client,
-            manifest,
-            dir,
-            cache: Default::default(),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod engine_impl {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::{Manifest, VariantMeta, XlaScalar};
+    use crate::grid::Tensor;
+
+    /// Stub engine compiled when the `pjrt` feature is off: same API as
+    /// the real one, but [`Engine::load`] always fails, so no other
+    /// method is reachable at runtime.
+    pub struct Engine {
+        manifest: Manifest,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
+    const DISABLED: &str = "PJRT runtime unavailable: this binary was built without the `pjrt` \
+                            cargo feature (it needs the `xla` crate and a vendored xla_extension). \
+                            The native core covers every operation; rebuild with `--features pjrt` \
+                            for artifact execution.";
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Find the variant for an op/shape/dtype triple.
-    pub fn find(&self, op: &str, shape: &[usize], dtype: &str) -> Option<&VariantMeta> {
-        self.manifest
-            .variants
-            .iter()
-            .find(|v| v.op == op && v.shape == shape && v.dtype == dtype)
-    }
-
-    /// Compile (or fetch from cache) the named variant.
-    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+    impl Engine {
+        pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+            let _ = dir;
+            bail!(DISABLED)
         }
-        let meta = self
-            .manifest
-            .variants
-            .iter()
-            .find(|v| v.name == name)
-            .ok_or_else(|| anyhow!("unknown artifact variant {name}"))?;
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = std::rc::Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
 
-    /// Execute a refactoring variant: inputs are the data tensor plus one
-    /// coordinate vector per dimension; output is the same-shape tensor.
-    pub fn run<T: XlaScalar>(
-        &self,
-        name: &str,
-        u: &Tensor<T>,
-        coords: &[Vec<f64>],
-    ) -> Result<Tensor<T>> {
-        let exe = self.executable(name)?;
-        let shape: Vec<i64> = u.shape().iter().map(|&n| n as i64).collect();
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(1 + coords.len());
-        args.push(
-            xla::Literal::vec1(u.data())
-                .reshape(&shape)
-                .map_err(|e| anyhow!("reshape input: {e:?}"))?,
-        );
-        for c in coords {
-            let cv: Vec<T> = c.iter().map(|&x| T::from_f64(x)).collect();
-            args.push(xla::Literal::vec1(&cv));
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let result = exe
-            .execute::<xla::Literal>(&args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True -> 1-tuple
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let data: Vec<T> = out.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        Ok(Tensor::from_vec(u.shape(), data))
-    }
 
-    /// Convenience: run decompose for a shape/dtype if an artifact exists.
-    pub fn decompose<T: XlaScalar>(&self, u: &Tensor<T>, coords: &[Vec<f64>]) -> Result<Tensor<T>> {
-        let op = if u.ndim() == 4 { "st_decompose" } else { "decompose" };
-        let meta = self
-            .find(op, u.shape(), T::DTYPE)
-            .ok_or_else(|| anyhow!("no {op} artifact for shape {:?} {}", u.shape(), T::DTYPE))?;
-        self.run(&meta.name.clone(), u, coords)
-    }
+        pub fn platform(&self) -> String {
+            "disabled".into()
+        }
 
-    /// Convenience: run recompose for a shape/dtype if an artifact exists.
-    pub fn recompose<T: XlaScalar>(&self, u: &Tensor<T>, coords: &[Vec<f64>]) -> Result<Tensor<T>> {
-        let op = if u.ndim() == 4 { "st_recompose" } else { "recompose" };
-        let meta = self
-            .find(op, u.shape(), T::DTYPE)
-            .ok_or_else(|| anyhow!("no {op} artifact for shape {:?} {}", u.shape(), T::DTYPE))?;
-        self.run(&meta.name.clone(), u, coords)
+        pub fn find(&self, op: &str, shape: &[usize], dtype: &str) -> Option<&VariantMeta> {
+            self.manifest
+                .variants
+                .iter()
+                .find(|v| v.op == op && v.shape == shape && v.dtype == dtype)
+        }
+
+        pub fn warm(&self, _name: &str) -> Result<()> {
+            bail!(DISABLED)
+        }
+
+        pub fn run<T: XlaScalar>(
+            &self,
+            _name: &str,
+            _u: &Tensor<T>,
+            _coords: &[Vec<f64>],
+        ) -> Result<Tensor<T>> {
+            bail!(DISABLED)
+        }
+
+        pub fn decompose<T: XlaScalar>(
+            &self,
+            _u: &Tensor<T>,
+            _coords: &[Vec<f64>],
+        ) -> Result<Tensor<T>> {
+            bail!(DISABLED)
+        }
+
+        pub fn recompose<T: XlaScalar>(
+            &self,
+            _u: &Tensor<T>,
+            _coords: &[Vec<f64>],
+        ) -> Result<Tensor<T>> {
+            bail!(DISABLED)
+        }
     }
 }
+
+pub use engine_impl::Engine;
 
 /// Default artifact directory: `$MGR_ARTIFACTS` or `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {

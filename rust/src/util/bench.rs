@@ -6,6 +6,11 @@
 //! ```text
 //! bench <name> ... median 12.345 ms  (n=20, mad 1.2%)  [optional throughput]
 //! ```
+//!
+//! [`BenchReport`] additionally collects rows into a machine-readable
+//! JSON file (e.g. `BENCH_kernels.json` from the `fig13_kernels` bench)
+//! so successive PRs have a throughput-regression baseline; see
+//! `docs/performance.md` for the tracked numbers.
 
 use std::time::Instant;
 
@@ -82,6 +87,111 @@ pub fn report(m: &Measurement, bytes: Option<usize>) {
     );
 }
 
+/// One row of a machine-readable kernel report: a `(kernel, variant,
+/// dtype, shape, axis)` cell with its timing and throughput.
+#[derive(Clone, Debug)]
+pub struct ReportRow {
+    /// Kernel family: "GPK", "LPK", "IPK", ...
+    pub kernel: String,
+    /// Measurement variant: "serial", "parallel", "baseline",
+    /// "serial-total", "parallel-total", ...
+    pub variant: String,
+    /// Element type: "f32" / "f64".
+    pub dtype: String,
+    /// Buffer shape the kernel ran on.
+    pub shape: Vec<usize>,
+    /// Processed axis, or `None` for per-family aggregate rows.
+    pub axis: Option<usize>,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Relative median absolute deviation.
+    pub mad_rel: f64,
+    /// Throughput in GB/s over the row's nominal byte volume.
+    pub gbps: f64,
+    /// Speedup vs the serial variant of the same cell, when applicable.
+    pub speedup: Option<f64>,
+}
+
+/// Collected bench rows plus run metadata, serializable to JSON.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    /// Worker count the parallel variants ran with.
+    pub threads: usize,
+    pub rows: Vec<ReportRow>,
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        BenchReport {
+            name: name.to_string(),
+            threads: crate::util::par::threads(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: ReportRow) {
+        self.rows.push(row);
+    }
+
+    /// Serialize to a stable, diff-friendly JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
+        out.push_str(&format!("  \"threads\": {},\n", self.threads));
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            let shape: Vec<String> = r.shape.iter().map(|n| n.to_string()).collect();
+            out.push_str(&format!(
+                "    {{\"kernel\": {}, \"variant\": {}, \"dtype\": {}, \"shape\": [{}], \
+                 \"axis\": {}, \"median_s\": {}, \"mad_rel\": {}, \"gbps\": {}, \"speedup\": {}}}{}\n",
+                json_str(&r.kernel),
+                json_str(&r.variant),
+                json_str(&r.dtype),
+                shape.join(", "),
+                r.axis.map_or("null".to_string(), |a| a.to_string()),
+                json_f64(r.median_s),
+                json_f64(r.mad_rel),
+                json_f64(r.gbps),
+                r.speedup.map_or("null".to_string(), json_f64),
+                if i + 1 < self.rows.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,6 +207,40 @@ mod tests {
         assert!(m.median_s > 0.0);
         assert_eq!(m.iters, 5);
         std::hint::black_box(x);
+    }
+
+    #[test]
+    fn report_json_parses_back() {
+        let mut rep = BenchReport::new("unit \"test\"");
+        rep.push(ReportRow {
+            kernel: "LPK".into(),
+            variant: "parallel".into(),
+            dtype: "f64".into(),
+            shape: vec![129, 129, 129],
+            axis: Some(0),
+            median_s: 1.25e-3,
+            mad_rel: 0.01,
+            gbps: 13.7,
+            speedup: Some(1.9),
+        });
+        rep.push(ReportRow {
+            kernel: "LPK".into(),
+            variant: "serial-total".into(),
+            dtype: "f64".into(),
+            shape: vec![129, 129, 129],
+            axis: None,
+            median_s: 4.0e-3,
+            mad_rel: 0.0,
+            gbps: 4.2,
+            speedup: None,
+        });
+        let doc = crate::util::json::parse(&rep.to_json()).expect("valid JSON");
+        assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "unit \"test\"");
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("axis").unwrap().as_usize(), Some(0));
+        assert!(rows[1].get("speedup").unwrap().as_f64().is_none());
+        assert!((rows[0].get("speedup").unwrap().as_f64().unwrap() - 1.9).abs() < 1e-9);
     }
 
     #[test]

@@ -84,6 +84,20 @@ impl Args {
         }
     }
 
+    /// Apply the global parallelism knobs: `--threads N` (0 = auto) and
+    /// `--par-threshold N` (minimum element count before kernels fork).
+    /// Also settable via `MGR_THREADS` / `MGR_PAR_THRESHOLD`; see
+    /// [`crate::util::par`].
+    pub fn apply_parallelism(&self) -> Result<()> {
+        if self.get("threads").is_some() {
+            crate::util::par::set_threads(self.get_usize("threads", 0)?);
+        }
+        if self.get("par-threshold").is_some() {
+            crate::util::par::set_par_threshold(self.get_usize("par-threshold", 0)?);
+        }
+        Ok(())
+    }
+
     /// Parse `--shape 65x65x65` style dimension lists.
     pub fn get_shape(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.get(key) {

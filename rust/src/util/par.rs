@@ -1,0 +1,342 @@
+//! Intra-kernel parallel execution layer (the paper's §3.5 thread-level
+//! parallelism, mapped to host cores).
+//!
+//! The axis kernels fan out over independent `outer × inner` lines: the
+//! §3.3 reordered-gather layout makes every line contiguous, so a
+//! contiguous chunk of the batch dimension *is itself a valid smaller
+//! tensor* and chunking never changes per-element arithmetic — parallel
+//! results are bit-identical to serial ones for every worker count.
+//!
+//! Policy lives here so every layer (refactor, baseline, compress) shares
+//! one knob set:
+//!
+//! * worker count — [`set_threads`] / `MGR_THREADS`, default = core count;
+//! * fork threshold — [`set_par_threshold`] / `MGR_PAR_THRESHOLD`:
+//!   buffers smaller than this many elements stay serial so shallow
+//!   hierarchy levels don't pay fork/join overhead;
+//! * nesting guard — [`with_serial`]: code already running inside a
+//!   parallel region (a [`run_tasks`] worker, or a cooperative
+//!   [`crate::coordinator::ParallelRefactorer`] worker) sees
+//!   [`workers_for`]` == 1`, so coordinator-level and kernel-level
+//!   parallelism compose instead of oversubscribing.
+//!
+//! The execution backend is `std::thread::scope` by default, or rayon's
+//! work-stealing pool when the crate is built with `--features rayon`
+//! (same task semantics, lower fork/join overhead).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Default minimum element count before a kernel forks (≈1 MiB of f64):
+/// below this, fork/join overhead dominates the work.
+pub const DEFAULT_PAR_THRESHOLD: usize = 1 << 17;
+
+/// Sentinel meaning "no override set".
+const UNSET: usize = usize::MAX;
+
+static THREADS_OVERRIDE: AtomicUsize = AtomicUsize::new(UNSET);
+static THRESHOLD_OVERRIDE: AtomicUsize = AtomicUsize::new(UNSET);
+static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+static ENV_THRESHOLD: OnceLock<Option<usize>> = OnceLock::new();
+
+thread_local! {
+    static IN_PARALLEL: Cell<bool> = Cell::new(false);
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Worker count used when a kernel decides to fork: the programmatic
+/// override, else `MGR_THREADS`, else the machine's core count.
+pub fn threads() -> usize {
+    let o = THREADS_OVERRIDE.load(Ordering::Relaxed);
+    if o != UNSET {
+        return o.max(1);
+    }
+    if let Some(n) = *ENV_THREADS.get_or_init(|| env_usize("MGR_THREADS")) {
+        return n.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Override the worker count (`0` restores the default resolution order).
+pub fn set_threads(n: usize) {
+    THREADS_OVERRIDE.store(if n == 0 { UNSET } else { n }, Ordering::Relaxed);
+}
+
+/// Minimum buffer element count before kernels fork.
+pub fn par_threshold() -> usize {
+    let o = THRESHOLD_OVERRIDE.load(Ordering::Relaxed);
+    if o != UNSET {
+        return o;
+    }
+    (*ENV_THRESHOLD.get_or_init(|| env_usize("MGR_PAR_THRESHOLD")))
+        .unwrap_or(DEFAULT_PAR_THRESHOLD)
+}
+
+/// Override the fork threshold (`0` restores the default).
+pub fn set_par_threshold(n: usize) {
+    THRESHOLD_OVERRIDE.store(if n == 0 { UNSET } else { n }, Ordering::Relaxed);
+}
+
+/// True while the current thread is executing inside a parallel region.
+pub fn in_parallel_region() -> bool {
+    IN_PARALLEL.with(|c| c.get())
+}
+
+/// Run `f` with intra-kernel parallelism suppressed on this thread:
+/// every [`workers_for`] call inside returns 1. Used by outer
+/// orchestration layers (cooperative workers, job pools) that already own
+/// the machine's cores.
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    IN_PARALLEL.with(|c| {
+        let prev = c.replace(true);
+        let _guard = ResetGuard(prev);
+        f()
+    })
+}
+
+struct ResetGuard(bool);
+
+impl Drop for ResetGuard {
+    fn drop(&mut self) {
+        IN_PARALLEL.with(|c| c.set(self.0));
+    }
+}
+
+/// Worker count a kernel should use for a buffer of `elems` elements:
+/// 1 (serial) below the fork threshold or inside a parallel region,
+/// [`threads`] otherwise.
+pub fn workers_for(elems: usize) -> usize {
+    if in_parallel_region() || elems < par_threshold() {
+        return 1;
+    }
+    threads()
+}
+
+/// Split `n` items into at most `workers` contiguous `(start, len)`
+/// chunks, balanced to within one item, in ascending order.
+pub fn chunks(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    let w = workers.min(n).max(1);
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        if len > 0 {
+            out.push((start, len));
+        }
+        start += len;
+    }
+    out
+}
+
+/// A unit of parallel work. Boxed so heterogeneous closures (different
+/// chunk captures) can share one spawn loop.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Execute `tasks` concurrently and wait for all of them. A single task
+/// runs inline on the caller; workers run under the [`with_serial`] guard
+/// so nested kernels never re-fork.
+pub fn run_tasks(mut tasks: Vec<Task<'_>>) {
+    if tasks.len() <= 1 {
+        if let Some(t) = tasks.pop() {
+            t();
+        }
+        return;
+    }
+    #[cfg(feature = "rayon")]
+    rayon::scope(|s| {
+        for t in tasks {
+            s.spawn(move |_| with_serial(|| t()));
+        }
+    });
+    #[cfg(not(feature = "rayon"))]
+    std::thread::scope(|s| {
+        for t in tasks {
+            s.spawn(move || with_serial(|| t()));
+        }
+    });
+}
+
+/// Slab-parallel map: split `src`/`dst` (block sizes `src_block` /
+/// `dst_block` per slab) into matching contiguous chunks over `outer`
+/// slabs and run `f(first_slab, slab_count, src_chunk, dst_chunk)` on up
+/// to `workers` tasks. With `workers <= 1` this is one inline call over
+/// the whole range.
+pub fn for_slab_chunks<S, D, F>(
+    src: &[S],
+    dst: &mut [D],
+    outer: usize,
+    src_block: usize,
+    dst_block: usize,
+    workers: usize,
+    f: F,
+) where
+    S: Sync,
+    D: Send,
+    F: Fn(usize, usize, &[S], &mut [D]) + Sync,
+{
+    debug_assert_eq!(src.len(), outer * src_block);
+    debug_assert_eq!(dst.len(), outer * dst_block);
+    let w = workers.clamp(1, outer.max(1));
+    if w <= 1 {
+        f(0, outer, src, dst);
+        return;
+    }
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(w);
+    let mut rest = dst;
+    for (ou0, len) in chunks(outer, w) {
+        let (mine, tail) = rest.split_at_mut(len * dst_block);
+        rest = tail;
+        let s = &src[ou0 * src_block..(ou0 + len) * src_block];
+        tasks.push(Box::new(move || fr(ou0, len, s, mine)));
+    }
+    run_tasks(tasks);
+}
+
+/// In-place variant of [`for_slab_chunks`]: `f(first_slab, slab_count,
+/// chunk)` over contiguous `block`-sized slabs of `buf`.
+pub fn for_slab_chunks_mut<D, F>(buf: &mut [D], outer: usize, block: usize, workers: usize, f: F)
+where
+    D: Send,
+    F: Fn(usize, usize, &mut [D]) + Sync,
+{
+    debug_assert_eq!(buf.len(), outer * block);
+    let w = workers.clamp(1, outer.max(1));
+    if w <= 1 {
+        f(0, outer, buf);
+        return;
+    }
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(w);
+    let mut rest = buf;
+    for (ou0, len) in chunks(outer, w) {
+        let (mine, tail) = rest.split_at_mut(len * block);
+        rest = tail;
+        tasks.push(Box::new(move || fr(ou0, len, mine)));
+    }
+    run_tasks(tasks);
+}
+
+/// Raw-pointer wrapper for handing disjoint *strided* tiles of one buffer
+/// to scoped workers (used where tiles interleave in memory and cannot be
+/// expressed as `split_at_mut` chunks, e.g. the batched Thomas solve's
+/// inner-lane split).
+///
+/// # Safety contract
+/// The code spawning tasks with a `SendPtr` must guarantee that no two
+/// concurrent tasks touch the same element and that the underlying
+/// allocation outlives every task (both hold for `run_tasks` over
+/// disjoint column ranges of one borrowed slice).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: sending the pointer is safe; dereferencing it is the unsafe
+// act, governed by the disjointness contract above.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    /// Serializes tests that mutate the process-global knobs.
+    static CONFIG_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn chunking_covers_range() {
+        for (n, w) in [(10usize, 3usize), (1, 8), (7, 7), (100, 6), (0, 4)] {
+            let cs = chunks(n, w);
+            let total: usize = cs.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, n, "n={n} w={w}");
+            for win in cs.windows(2) {
+                assert_eq!(win[0].0 + win[0].1, win[1].0);
+            }
+            if n > 0 {
+                assert_eq!(cs[0].0, 0);
+                assert!(cs.len() <= w);
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_executes_everything() {
+        let sum = AtomicUsize::new(0);
+        let tasks: Vec<Task<'_>> = (1..=10)
+            .map(|i| {
+                let sum = &sum;
+                Box::new(move || {
+                    sum.fetch_add(i, Ordering::Relaxed);
+                    // nested kernels must see a serial region
+                    assert!(in_parallel_region());
+                }) as Task
+            })
+            .collect();
+        run_tasks(tasks);
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn serial_guard_nests_and_restores() {
+        assert!(!in_parallel_region());
+        with_serial(|| {
+            assert!(in_parallel_region());
+            assert_eq!(workers_for(usize::MAX / 2), 1);
+            with_serial(|| assert!(in_parallel_region()));
+            assert!(in_parallel_region());
+        });
+        assert!(!in_parallel_region());
+    }
+
+    #[test]
+    fn knobs_control_workers_for() {
+        let _lock = CONFIG_LOCK.lock().unwrap();
+        set_threads(4);
+        set_par_threshold(100);
+        assert_eq!(workers_for(99), 1);
+        assert_eq!(workers_for(100), 4);
+        set_threads(1);
+        assert_eq!(workers_for(1_000_000), 1);
+        set_threads(0);
+        set_par_threshold(0);
+        assert_eq!(par_threshold(), DEFAULT_PAR_THRESHOLD);
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn slab_chunks_match_inline() {
+        let outer = 13;
+        let block = 7;
+        let src: Vec<u64> = (0..outer as u64 * block as u64).collect();
+        let mut par_dst = vec![0u64; outer * block];
+        let mut ser_dst = vec![0u64; outer * block];
+        let body = |ou0: usize, len: usize, s: &[u64], d: &mut [u64]| {
+            for (i, (sv, dv)) in s.iter().zip(d.iter_mut()).enumerate() {
+                *dv = sv * 2 + (ou0 * block + i) as u64;
+            }
+            assert_eq!(s.len(), len * block);
+        };
+        for_slab_chunks(&src, &mut ser_dst, outer, block, block, 1, body);
+        for_slab_chunks(&src, &mut par_dst, outer, block, block, 5, body);
+        assert_eq!(par_dst, ser_dst);
+
+        let mut a = src.clone();
+        let mut b = src.clone();
+        let bump = |ou0: usize, _len: usize, chunk: &mut [u64]| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += (ou0 * block + i) as u64;
+            }
+        };
+        for_slab_chunks_mut(&mut a, outer, block, 1, bump);
+        for_slab_chunks_mut(&mut b, outer, block, 6, bump);
+        assert_eq!(a, b);
+    }
+}
