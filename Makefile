@@ -4,9 +4,12 @@
 #                    needed by the `pjrt` feature and the AOT sanity tests)
 #   make test        tier-1 verify: release build + Rust tests + Python tests
 #   make bench       kernel throughput report -> BENCH_kernels.json
+#   make bench-container  per-class container report -> BENCH_container.json
+#   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
+#   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
 
-.PHONY: artifacts test test-rust test-python bench doc
+.PHONY: artifacts test test-rust test-python bench bench-container container-demo lint doc
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -22,6 +25,21 @@ test-python:
 
 bench:
 	cargo bench --bench fig13_kernels
+
+bench-container:
+	cargo bench --bench container_progressive
+
+# Exercise the progressive-container CLI round trip: write a .mgr
+# container, retrieve a class prefix by count and by error target.
+container-demo:
+	cargo run --release -- refactor --shape 33x33x33 --eb 1e-4 --out /tmp/mgr-demo.mgr
+	cargo run --release -- retrieve --in /tmp/mgr-demo.mgr --keep 3
+	cargo run --release -- retrieve --in /tmp/mgr-demo.mgr --error 1e-2
+	rm -f /tmp/mgr-demo.mgr
+
+lint:
+	cargo clippy --all-targets -- -D warnings
+	cargo fmt --check
 
 doc:
 	cargo doc --no-deps

@@ -254,7 +254,7 @@ fn fig15() {
             let mut r = Refactorer::spatiotemporal(h.clone());
             let (_, secs) = time(|| r.decompose(&mut dec));
             let quant = mgr::compress::QuantMeta::for_bound(eb, h.nlevels());
-            let q = mgr::compress::quantize(dec.data(), &quant);
+            let q = mgr::compress::quantize(dec.data(), &quant).expect("finite field");
             let payload = {
                 use std::io::Write;
                 let raw = mgr::compress::rle::encode(&q);
@@ -455,6 +455,7 @@ fn fig19() {
     let (_, cpu_decompose) = time(|| base.decompose(&mut t));
     let quant = mgr::compress::QuantMeta::for_bound(eb, h.nlevels());
     let (q, cpu_quant) = time(|| mgr::compress::quantize(t.data(), &quant));
+    let q = q.expect("finite field");
     let (_payload, cpu_zlib) = time(|| {
         use std::io::Write;
         let raw = mgr::compress::rle::encode(&q);

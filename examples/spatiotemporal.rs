@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
 
     // ratio: spatiotemporal vs per-step spatial
     let quant = mgr::compress::QuantMeta::for_bound(eb, h4.nlevels());
-    let q4 = mgr::compress::quantize(dec.data(), &quant);
+    let q4 = mgr::compress::quantize(dec.data(), &quant)?;
     let st_bytes = zlib_len(&q4);
 
     let mut spatial_bytes = 0usize;
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         let mut r = Refactorer::new(Hierarchy::uniform(s.shape()));
         let (_, secs) = time(|| r.decompose(&mut d));
         spatial_secs += secs;
-        let q = mgr::compress::quantize(d.data(), &quant);
+        let q = mgr::compress::quantize(d.data(), &quant)?;
         spatial_bytes += zlib_len(&q);
     }
     println!(

@@ -1,19 +1,22 @@
 //! Showcase 1 (§5.1): the visualization workflow.
 //!
-//! A Gray-Scott simulation writes refactored data; a visualization
-//! consumer reads only as many coefficient classes as its iso-surface
-//! analysis needs. Reports bytes moved, modeled parallel-I/O time (the
-//! paper's 4 TB ADIOS write) and the measured iso-surface-area accuracy.
+//! A Gray-Scott simulation writes a progressive container; the mover
+//! places the **real entropy-coded segment sizes** across storage tiers;
+//! a visualization consumer then retrieves only as many coefficient
+//! classes from the container as its iso-surface analysis needs. Reports
+//! bytes moved, modeled parallel-I/O time (the paper's 4 TB ADIOS write)
+//! and the measured iso-surface-area accuracy.
 //!
 //! ```text
 //! cargo run --release --example vis_workflow -- [--n 65] [--target-acc 0.95]
 //! ```
 
-use mgr::grid::{Hierarchy, Tensor};
-use mgr::refactor::{recompose_with_classes, split_classes, Refactorer};
+use mgr::compress::Codec;
+use mgr::grid::Hierarchy;
 use mgr::sim::GrayScott;
-use mgr::storage::{place_classes, ParallelFs, TierSpec};
+use mgr::storage::{place_classes, ParallelFs, ProgressiveReader, ProgressiveWriter, TierSpec};
 use mgr::util::cli::Args;
+use mgr::util::stats::value_range;
 use mgr::vis::iso_surface_area;
 
 fn main() -> anyhow::Result<()> {
@@ -25,14 +28,19 @@ fn main() -> anyhow::Result<()> {
     let mut sim = GrayScott::new(n, 5);
     sim.step(150);
     let field = sim.v_field();
+    let eb = 1e-4 * value_range(field.data());
 
     let h = Hierarchy::uniform(field.shape());
-    let mut dec = field.clone();
-    Refactorer::new(h.clone()).decompose(&mut dec);
-    let classes = split_classes(&dec, &h);
-    let class_bytes: Vec<u64> = classes.iter().map(|c| (c.len() * 8) as u64).collect();
+    let mut writer = ProgressiveWriter::<f64>::new(h, Codec::Zlib);
+    let (container, header) = writer.write(&field, eb)?;
+    println!(
+        "wrote {}-byte container (eb {eb:.2e}, {:.1}x over raw)",
+        container.len(),
+        field.nbytes() as f64 / container.len() as f64
+    );
 
-    println!("== storage: placing {} classes across tiers ==", classes.len());
+    println!("== storage: placing {} class segments across tiers ==", header.nclasses());
+    let class_bytes: Vec<u64> = header.segments.iter().map(|s| s.bytes).collect();
     let tiers = vec![
         TierSpec::burst_buffer(),
         TierSpec::parallel_fs(),
@@ -40,7 +48,12 @@ fn main() -> anyhow::Result<()> {
     ];
     let placement = place_classes(&class_bytes, &tiers);
     for (k, tier) in placement.assignment.iter().enumerate() {
-        println!("  class {k}: {:>9} B -> {tier:?}", class_bytes[k]);
+        let flag = if placement.is_over_capacity(k) {
+            "  (OVER CAPACITY)"
+        } else {
+            ""
+        };
+        println!("  class {k}: {:>9} B -> {tier:?}{flag}", class_bytes[k]);
     }
 
     println!("== consumer: iso-surface analysis ==");
@@ -48,37 +61,37 @@ fn main() -> anyhow::Result<()> {
     let full_area = iso_surface_area(&field, iso);
     let fs = ParallelFs::alpine();
     let modeled_total = 4e12; // the paper's 4 TB file
-    let total_values: usize = classes.iter().map(|c| c.len()).sum();
+    let total_bytes = header.payload_bytes();
+    let mut reader = ProgressiveReader::<f64>::open(&container)?;
 
-    let mut chosen = h.nclasses();
+    let mut chosen = header.nclasses();
     println!(
         "{:<8} {:>12} {:>12} {:>14} {:>12}",
         "classes", "% bytes", "acc %", "read(512) s", "retrieve s"
     );
-    for keep in 1..=h.nclasses() {
-        let approx = recompose_with_classes(&dec, &h, keep);
+    for keep in 1..=header.nclasses() {
+        let approx = reader.retrieve(keep)?;
         let area = iso_surface_area(&approx, iso);
         let acc = (1.0 - (area - full_area).abs() / full_area).max(0.0);
-        let kept: usize = classes[..keep].iter().map(|c| c.len()).sum();
-        let frac = kept as f64 / total_values as f64;
+        let frac = header.prefix_bytes(keep) as f64 / total_bytes as f64;
+        let tier_time = placement.retrieval_time(&tiers, keep)?;
         println!(
             "{:<8} {:>11.2}% {:>11.1}% {:>14.1} {:>12.3}",
             keep,
             frac * 100.0,
             acc * 100.0,
             fs.read_time(512, modeled_total * frac),
-            placement.retrieval_time(&tiers, keep)
+            tier_time
         );
         if acc >= target_acc && keep < chosen {
             chosen = keep;
         }
     }
-    let kept: usize = classes[..chosen].iter().map(|c| c.len()).sum();
-    let frac = kept as f64 / total_values as f64;
+    let frac = header.prefix_bytes(chosen) as f64 / total_bytes as f64;
     println!(
         "\n=> {:.0}% iso-area accuracy reached with {chosen}/{} classes = {:.2}% of bytes;",
         target_acc * 100.0,
-        h.nclasses(),
+        header.nclasses(),
         frac * 100.0
     );
     println!(

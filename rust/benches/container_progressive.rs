@@ -1,0 +1,143 @@
+//! Progressive-container bench: per-class encode/decode throughput and
+//! the entropy-coded size breakdown, plus whole-container write/read
+//! timings. Writes a machine-readable report to `BENCH_container.json`
+//! (see `docs/performance.md`).
+
+use mgr::compress::{decode_stream, encode_stream, quantize, Codec, QuantMeta};
+use mgr::grid::Hierarchy;
+use mgr::refactor::{split_classes, Refactorer};
+use mgr::sim::GrayScott;
+use mgr::storage::{ProgressiveReader, ProgressiveWriter};
+use mgr::util::bench::{bench_auto, report, BenchReport, ReportRow};
+use mgr::util::stats::value_range;
+
+fn main() {
+    println!("== progressive container: per-class encode/decode + size breakdown ==");
+    let n = 33;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let field = sim.v_field();
+    let eb = 1e-3 * value_range(field.data());
+    let h = Hierarchy::uniform(field.shape());
+
+    let mut dec = field.clone();
+    Refactorer::new(h.clone()).decompose(&mut dec);
+    let classes = split_classes(&dec, &h);
+    let quant = QuantMeta::for_bound(eb, h.nlevels());
+
+    let mut rep = BenchReport::new("container_progressive");
+    let shape = field.shape().to_vec();
+
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        println!("-- codec {} --", codec.name());
+        println!(
+            "{:<8} {:>10} {:>12} {:>12}",
+            "class", "values", "raw bytes", "seg bytes"
+        );
+        for (k, class) in classes.iter().enumerate() {
+            let q = quantize(class, &quant).unwrap();
+            let raw_bytes = class.len() * 8;
+            let payload = encode_stream(codec, &q).unwrap();
+            println!(
+                "{:<8} {:>10} {:>12} {:>12}",
+                k,
+                class.len(),
+                raw_bytes,
+                payload.len()
+            );
+
+            let m = bench_auto(
+                &format!("encode class {k} ({})", codec.name()),
+                0.15,
+                || {
+                    std::hint::black_box(encode_stream(codec, &q).unwrap());
+                },
+            );
+            report(&m, Some(raw_bytes));
+            rep.push(ReportRow {
+                kernel: "container".into(),
+                variant: format!("encode-{}", codec.name()),
+                dtype: "f64".into(),
+                shape: shape.clone(),
+                axis: Some(k),
+                median_s: m.median_s,
+                mad_rel: m.mad_rel,
+                gbps: m.gbps(raw_bytes),
+                speedup: None,
+                bytes: Some(payload.len() as u64),
+            });
+
+            let m = bench_auto(
+                &format!("decode class {k} ({})", codec.name()),
+                0.15,
+                || {
+                    std::hint::black_box(decode_stream(codec, &payload, class.len()).unwrap());
+                },
+            );
+            report(&m, Some(raw_bytes));
+            rep.push(ReportRow {
+                kernel: "container".into(),
+                variant: format!("decode-{}", codec.name()),
+                dtype: "f64".into(),
+                shape: shape.clone(),
+                axis: Some(k),
+                median_s: m.median_s,
+                mad_rel: m.mad_rel,
+                gbps: m.gbps(raw_bytes),
+                speedup: None,
+                bytes: Some(payload.len() as u64),
+            });
+        }
+
+        // whole-container write (decompose + per-class quantize/encode +
+        // per-prefix error measurement) and full-fidelity read
+        let mut writer = ProgressiveWriter::<f64>::new(h.clone(), codec);
+        let (container, header) = writer.write(&field, eb).unwrap();
+        let m = bench_auto(&format!("container write ({})", codec.name()), 0.3, || {
+            std::hint::black_box(writer.write(&field, eb).unwrap());
+        });
+        report(&m, Some(field.nbytes()));
+        rep.push(ReportRow {
+            kernel: "container".into(),
+            variant: format!("write-total-{}", codec.name()),
+            dtype: "f64".into(),
+            shape: shape.clone(),
+            axis: None,
+            median_s: m.median_s,
+            mad_rel: m.mad_rel,
+            gbps: m.gbps(field.nbytes()),
+            speedup: None,
+            bytes: Some(container.len() as u64),
+        });
+
+        let m = bench_auto(&format!("container read ({})", codec.name()), 0.3, || {
+            let mut reader = ProgressiveReader::<f64>::open(&container).unwrap();
+            std::hint::black_box(reader.retrieve(reader.nclasses()).unwrap());
+        });
+        report(&m, Some(field.nbytes()));
+        rep.push(ReportRow {
+            kernel: "container".into(),
+            variant: format!("read-total-{}", codec.name()),
+            dtype: "f64".into(),
+            shape: shape.clone(),
+            axis: None,
+            median_s: m.median_s,
+            mad_rel: m.mad_rel,
+            gbps: m.gbps(field.nbytes()),
+            speedup: None,
+            bytes: Some(container.len() as u64),
+        });
+        println!(
+            "container total: {} bytes over {} raw ({:.1}x); header {} B\n",
+            container.len(),
+            field.nbytes(),
+            field.nbytes() as f64 / container.len() as f64,
+            header.header_bytes()
+        );
+    }
+
+    match rep.write("BENCH_container.json") {
+        Ok(()) => println!("wrote BENCH_container.json ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write BENCH_container.json: {e}"),
+    }
+}

@@ -49,6 +49,7 @@ fn push_row(
         mad_rel: m.mad_rel,
         gbps: m.gbps(bytes),
         speedup,
+        bytes: None,
     });
 }
 
@@ -150,6 +151,7 @@ fn serial_vs_parallel<T: Scalar>(n: usize, dtype: &str, rep: &mut BenchReport) {
                 mad_rel: 0.0,
                 gbps: total_bytes as f64 / t / 1e9,
                 speedup,
+                bytes: None,
             });
         }
     }

@@ -115,13 +115,29 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
 /// Invert [`encode`].
 pub fn decode(buf: &[u8]) -> Result<Vec<u8>> {
     ensure!(buf.len() >= 8 + 128, "huffman header truncated");
-    let n = u64::from_le_bytes(buf[..8].try_into().unwrap()) as usize;
+    let declared = u64::from_le_bytes(buf[..8].try_into().unwrap());
+    // every symbol consumes at least one bit, so the bitstream bounds the
+    // output size — corrupt headers cannot force a huge allocation
+    let max_symbols = (buf.len() as u64 - 136) * 8;
+    ensure!(
+        declared <= max_symbols,
+        "huffman header declares {declared} symbols but the bitstream holds at most {max_symbols}"
+    );
+    let n = declared as usize;
     let mut lengths = [0u8; 256];
     for i in 0..128 {
         let b = buf[8 + i];
         lengths[2 * i] = b & 0x0f;
         lengths[2 * i + 1] = b >> 4;
     }
+    // a corrupt table violating the Kraft inequality would overflow the
+    // canonical code assignment; reject it up front
+    let kraft: u64 = lengths
+        .iter()
+        .filter(|&&l| l > 0)
+        .map(|&l| 1u64 << (MAX_BITS - l as usize))
+        .sum();
+    ensure!(kraft <= 1 << MAX_BITS, "invalid huffman code-length table");
     let codes = canonical_codes(&lengths);
     // decoding table: (code, len) -> symbol, via per-length first-code
     let mut by_len: Vec<Vec<(u16, u8)>> = vec![Vec::new(); MAX_BITS + 1];
@@ -217,5 +233,23 @@ mod tests {
     fn rejects_truncated() {
         let enc = encode(b"hello world hello world");
         assert!(decode(&enc[..10]).is_err());
+    }
+
+    #[test]
+    fn rejects_implausible_symbol_count() {
+        // header claims u64::MAX symbols over a one-byte bitstream
+        let mut enc = encode(b"abcabc");
+        enc[..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_oversubscribed_length_table() {
+        // force every symbol to code length 1: Kraft sum far above 1
+        let mut enc = encode(b"abcabcabc");
+        for b in enc[8..136].iter_mut() {
+            *b = 0x11;
+        }
+        assert!(decode(&enc).is_err());
     }
 }

@@ -8,8 +8,11 @@
 //! * `Codec::HuffRle` — in-tree zero-RLE + canonical Huffman (a faster,
 //!   lighter coder used for ablations).
 //!
-//! The [`pipeline::Compressor`] records per-stage timings so Fig 19's
-//! breakdown can be regenerated directly.
+//! The [`pipeline::MgardCompressor`] records per-stage timings so Fig
+//! 19's breakdown can be regenerated directly. Besides the monolithic
+//! blob it offers a per-class mode ([`MgardCompressor::compress_classes`])
+//! that codes every coefficient class independently — the basis of the
+//! progressive container in [`crate::storage::container`].
 
 pub mod huffman;
 pub mod pipeline;
@@ -17,5 +20,8 @@ pub mod quantize;
 pub mod rle;
 pub mod varint;
 
-pub use pipeline::{Codec, Compressed, CompressorStats, MgardCompressor};
+pub use pipeline::{
+    decode_stream, encode_stream, ClassSegment, Codec, Compressed, CompressedClasses,
+    CompressorStats, MgardCompressor,
+};
 pub use quantize::{dequantize, quantize, QuantMeta};

@@ -5,15 +5,26 @@
 //! `compress::quantize` module (knobs in [`crate::util::par`]); the
 //! entropy-coding stages are sequential by construction (zlib's and the
 //! canonical Huffman coder's bitstreams carry cross-symbol state).
+//!
+//! Two compressed forms are produced:
+//!
+//! * [`Compressed`] — the whole quantized stream entropy-coded as one
+//!   monolithic blob (the classic MGARD output);
+//! * [`CompressedClasses`] — one independently decodable segment per
+//!   coefficient class, the progressive form consumed by the
+//!   [`crate::storage::container`] byte format. A prefix of the segments
+//!   reconstructs a reduced-fidelity tensor bit-identical to in-memory
+//!   [`crate::refactor::assemble_classes`] truncation of the dequantized
+//!   classes.
 
 use std::io::{Read, Write};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::compress::quantize::{dequantize, quantize, QuantMeta};
 use crate::compress::{huffman, rle, varint};
 use crate::grid::{Hierarchy, Tensor};
-use crate::refactor::Refactorer;
+use crate::refactor::{assemble_classes, class_len, split_classes, Refactorer};
 use crate::util::stats::time;
 use crate::util::Scalar;
 
@@ -35,6 +46,48 @@ impl Codec {
     }
 }
 
+/// Entropy-code one quantized stream with `codec` (the exact coder the
+/// compressor and the progressive container use — benches and tools
+/// should call this rather than re-wiring the codecs).
+pub fn encode_stream(codec: Codec, q: &[i64]) -> Result<Vec<u8>> {
+    match codec {
+        Codec::HuffRle => Ok(huffman::encode(&rle::encode(q))),
+        Codec::Zlib => {
+            let raw = varint::encode(q);
+            let mut enc =
+                flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
+            enc.write_all(&raw).context("zlib write")?;
+            enc.finish().context("zlib finish")
+        }
+    }
+}
+
+/// Invert [`encode_stream`] for a payload expected to hold exactly
+/// `expect` quantized values. The expectation bounds every intermediate
+/// allocation, so corrupt payloads (including decompression bombs) error
+/// out instead of exhausting memory.
+pub fn decode_stream(codec: Codec, payload: &[u8], expect: usize) -> Result<Vec<i64>> {
+    let q = match codec {
+        Codec::HuffRle => rle::decode_with_limit(&huffman::decode(payload)?, expect)?,
+        Codec::Zlib => {
+            // a legitimate varint stream of `expect` i64 is at most
+            // 10 bytes per value + a 10-byte length header
+            let limit = 10 * expect as u64 + 10;
+            let mut dec = flate2::read::ZlibDecoder::new(payload).take(limit + 1);
+            let mut raw = Vec::new();
+            dec.read_to_end(&mut raw).context("zlib read")?;
+            ensure!(raw.len() as u64 <= limit, "zlib payload expands past the plausible size");
+            varint::decode(&raw)?
+        }
+    };
+    ensure!(
+        q.len() == expect,
+        "payload holds {} quantized values, expected {expect}",
+        q.len()
+    );
+    Ok(q)
+}
+
 /// Compressed payload + metadata needed to invert it.
 #[derive(Clone, Debug)]
 pub struct Compressed {
@@ -46,8 +99,51 @@ pub struct Compressed {
 }
 
 impl Compressed {
+    /// Compression ratio (original bytes / payload bytes); `0.0` for a
+    /// degenerate empty payload rather than a division by zero.
     pub fn ratio(&self) -> f64 {
+        if self.payload.is_empty() {
+            return 0.0;
+        }
         self.original_bytes as f64 / self.payload.len() as f64
+    }
+}
+
+/// One independently decodable coefficient-class segment.
+#[derive(Clone, Debug)]
+pub struct ClassSegment {
+    /// Entropy-coded quantized coefficients of this class.
+    pub payload: Vec<u8>,
+    /// Number of quantized values the payload decodes to
+    /// (`class_len` of the hierarchy).
+    pub nvalues: usize,
+}
+
+/// Per-class compressed representation: the progressive counterpart of
+/// [`Compressed`]. Segment `k` holds coefficient class `k` (coarsest
+/// first); any prefix of the segments is independently decodable.
+#[derive(Clone, Debug)]
+pub struct CompressedClasses {
+    pub segments: Vec<ClassSegment>,
+    pub codec: Codec,
+    pub quant: QuantMeta,
+    pub shape: Vec<usize>,
+    pub original_bytes: usize,
+}
+
+impl CompressedClasses {
+    /// Total entropy-coded bytes across all segments.
+    pub fn payload_bytes(&self) -> usize {
+        self.segments.iter().map(|s| s.payload.len()).sum()
+    }
+
+    /// Compression ratio over all segments; `0.0` if there is no payload.
+    pub fn ratio(&self) -> f64 {
+        let bytes = self.payload_bytes();
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.original_bytes as f64 / bytes as f64
     }
 }
 
@@ -94,10 +190,11 @@ impl<T: Scalar> MgardCompressor<T> {
 
     /// Compress with absolute error bound `eb` (clears previous stats).
     pub fn compress(&mut self, data: &Tensor<T>, eb: f64) -> Result<Compressed> {
-        anyhow::ensure!(
+        ensure!(
             data.shape() == self.refactorer.hierarchy().shape(),
             "shape mismatch"
         );
+        ensure!(eb.is_finite() && eb > 0.0, "error bound must be positive and finite");
         self.stats = CompressorStats::default();
 
         let mut work = data.clone();
@@ -107,19 +204,9 @@ impl<T: Scalar> MgardCompressor<T> {
         let quant = QuantMeta::for_bound(eb, self.refactorer.hierarchy().nlevels());
         let (q, t) = time(|| quantize(work.data(), &quant));
         self.stats.quantize_s = t;
+        let q = q?;
 
-        let (payload, t) = time(|| -> Result<Vec<u8>> {
-            match self.codec {
-                Codec::HuffRle => Ok(huffman::encode(&rle::encode(&q))),
-                Codec::Zlib => {
-                    let raw = varint::encode(&q);
-                    let mut enc =
-                        flate2::write::ZlibEncoder::new(Vec::new(), flate2::Compression::default());
-                    enc.write_all(&raw).context("zlib write")?;
-                    Ok(enc.finish().context("zlib finish")?)
-                }
-            }
-        });
+        let (payload, t) = time(|| encode_stream(self.codec, &q));
         self.stats.encode_s = t;
 
         Ok(Compressed {
@@ -137,17 +224,14 @@ impl<T: Scalar> MgardCompressor<T> {
         if c.codec != self.codec {
             bail!("codec mismatch: payload {:?}, compressor {:?}", c.codec, self.codec);
         }
-        let (q, t) = time(|| -> Result<Vec<i64>> {
-            match c.codec {
-                Codec::HuffRle => rle::decode(&huffman::decode(&c.payload)?),
-                Codec::Zlib => {
-                    let mut dec = flate2::read::ZlibDecoder::new(&c.payload[..]);
-                    let mut raw = Vec::new();
-                    dec.read_to_end(&mut raw).context("zlib read")?;
-                    varint::decode(&raw)
-                }
-            }
-        });
+        ensure!(
+            c.shape == self.refactorer.hierarchy().shape(),
+            "shape mismatch: payload {:?}, compressor hierarchy {:?}",
+            c.shape,
+            self.refactorer.hierarchy().shape()
+        );
+        let expect = self.refactorer.hierarchy().nnodes();
+        let (q, t) = time(|| decode_stream(c.codec, &c.payload, expect));
         self.stats.decode_s = t;
         let q = q?;
 
@@ -155,6 +239,95 @@ impl<T: Scalar> MgardCompressor<T> {
         self.stats.dequantize_s = t;
 
         let mut tensor = Tensor::from_vec(&c.shape, vals);
+        let (_, t) = time(|| self.refactorer.recompose(&mut tensor));
+        self.stats.recompose_s = t;
+        Ok(tensor)
+    }
+
+    /// Per-class mode: decompose, split into coefficient classes, then
+    /// quantize and entropy-code every class independently (clears
+    /// previous stats; quantize/encode stats accumulate over classes).
+    pub fn compress_classes(&mut self, data: &Tensor<T>, eb: f64) -> Result<CompressedClasses> {
+        ensure!(
+            data.shape() == self.refactorer.hierarchy().shape(),
+            "shape mismatch"
+        );
+        ensure!(eb.is_finite() && eb > 0.0, "error bound must be positive and finite");
+        self.stats = CompressorStats::default();
+
+        let mut work = data.clone();
+        let (_, t) = time(|| self.refactorer.decompose(&mut work));
+        self.stats.decompose_s = t;
+
+        let h = self.refactorer.hierarchy().clone();
+        let quant = QuantMeta::for_bound(eb, h.nlevels());
+        let classes = split_classes(&work, &h);
+        let mut segments = Vec::with_capacity(classes.len());
+        for class in &classes {
+            let (q, t) = time(|| quantize(class, &quant));
+            self.stats.quantize_s += t;
+            let q = q?;
+            let (payload, t) = time(|| encode_stream(self.codec, &q));
+            self.stats.encode_s += t;
+            segments.push(ClassSegment {
+                payload: payload?,
+                nvalues: class.len(),
+            });
+        }
+        Ok(CompressedClasses {
+            segments,
+            codec: self.codec,
+            quant,
+            shape: data.shape().to_vec(),
+            original_bytes: data.nbytes(),
+        })
+    }
+
+    /// Reconstruct the reduced-fidelity tensor carried by segments
+    /// `0..keep` (omitted classes are zero). Bit-identical to assembling
+    /// the same prefix of dequantized classes in memory and recomposing.
+    pub fn decompress_classes(&mut self, c: &CompressedClasses, keep: usize) -> Result<Tensor<T>> {
+        if c.codec != self.codec {
+            bail!("codec mismatch: payload {:?}, compressor {:?}", c.codec, self.codec);
+        }
+        let h = self.refactorer.hierarchy().clone();
+        ensure!(
+            c.shape == h.shape(),
+            "shape mismatch: payload {:?}, compressor hierarchy {:?}",
+            c.shape,
+            h.shape()
+        );
+        ensure!(
+            c.segments.len() == h.nclasses(),
+            "payload has {} class segments, hierarchy has {} classes",
+            c.segments.len(),
+            h.nclasses()
+        );
+        ensure!(
+            keep >= 1 && keep <= c.segments.len(),
+            "keep must be in 1..={}, got {keep}",
+            c.segments.len()
+        );
+        self.stats.decode_s = 0.0;
+        self.stats.dequantize_s = 0.0;
+
+        let mut vals: Vec<Vec<T>> = Vec::with_capacity(keep);
+        for (k, seg) in c.segments.iter().take(keep).enumerate() {
+            let expect = class_len(&h, k);
+            ensure!(
+                seg.nvalues == expect,
+                "class {k}: segment declares {} values, hierarchy expects {expect}",
+                seg.nvalues
+            );
+            let (q, t) = time(|| decode_stream(c.codec, &seg.payload, expect));
+            self.stats.decode_s += t;
+            let q = q?;
+            let (v, t) = time(|| dequantize::<T>(&q, &c.quant));
+            self.stats.dequantize_s += t;
+            vals.push(v);
+        }
+        let refs: Vec<&[T]> = vals.iter().map(|v| v.as_slice()).collect();
+        let mut tensor = assemble_classes(&refs, &h);
         let (_, t) = time(|| self.refactorer.recompose(&mut tensor));
         self.stats.recompose_s = t;
         Ok(tensor)
@@ -245,5 +418,95 @@ mod tests {
         let blob = a.compress(&orig, 1e-3).unwrap();
         let mut b = MgardCompressor::<f64>::new(Hierarchy::uniform(&[n, n, n]), Codec::HuffRle);
         assert!(b.decompress(&blob).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        // regression: a Compressed whose shape disagrees with the
+        // compressor's hierarchy used to feed Tensor::from_vec/recompose
+        // garbage (panic or silently wrong output)
+        let n = 17;
+        let orig = smooth(n);
+        let mut a = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::Zlib);
+        let blob = a.compress(&orig, 1e-3).unwrap();
+        let mut b = MgardCompressor::<f64>::new(Hierarchy::uniform(&[9, 9, 9]), Codec::Zlib);
+        let err = b.decompress(&blob);
+        assert!(err.is_err(), "shape mismatch must be rejected, not panic");
+        assert!(err.unwrap_err().to_string().contains("shape mismatch"));
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let n = 9;
+        let orig = smooth(n);
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), codec);
+            let mut blob = c.compress(&orig, 1e-3).unwrap();
+            blob.payload.truncate(blob.payload.len() / 2);
+            assert!(c.decompress(&blob).is_err(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn ratio_guards_empty_payload() {
+        let blob = Compressed {
+            payload: Vec::new(),
+            codec: Codec::Zlib,
+            quant: QuantMeta::for_bound(1e-3, 2),
+            shape: vec![9, 9],
+            original_bytes: 648,
+        };
+        assert_eq!(blob.ratio(), 0.0);
+    }
+
+    #[test]
+    fn non_finite_input_rejected_end_to_end() {
+        let n = 9;
+        let mut orig = smooth(n);
+        orig.data_mut()[100] = f64::NAN;
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::Zlib);
+        assert!(c.compress(&orig, 1e-3).is_err());
+        assert!(c.compress_classes(&orig, 1e-3).is_err());
+    }
+
+    #[test]
+    fn per_class_mode_matches_monolithic_at_full_fidelity() {
+        let n = 17;
+        let orig = smooth(n);
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), codec);
+            let blob = c.compress(&orig, 1e-3).unwrap();
+            let mono = c.decompress(&blob).unwrap();
+            let cc = c.compress_classes(&orig, 1e-3).unwrap();
+            let full = c.decompress_classes(&cc, cc.segments.len()).unwrap();
+            // same quantizer, same coefficients: reconstructions agree bitwise
+            assert_eq!(full.data(), mono.data(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn per_class_prefix_error_decreases() {
+        let n = 17;
+        let orig = smooth(n);
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::HuffRle);
+        let cc = c.compress_classes(&orig, 1e-4).unwrap();
+        let mut last = f64::INFINITY;
+        for keep in 1..=cc.segments.len() {
+            let approx = c.decompress_classes(&cc, keep).unwrap();
+            let err = linf(approx.data(), orig.data());
+            assert!(err <= last + 1e-12, "keep={keep}: {err} > {last}");
+            last = err;
+        }
+        assert!(last <= 1e-4, "full prefix must satisfy the bound, got {last}");
+    }
+
+    #[test]
+    fn per_class_keep_out_of_range_rejected() {
+        let n = 9;
+        let orig = smooth(n);
+        let mut c = MgardCompressor::new(Hierarchy::uniform(&[n, n, n]), Codec::HuffRle);
+        let cc = c.compress_classes(&orig, 1e-3).unwrap();
+        assert!(c.decompress_classes(&cc, 0).is_err());
+        assert!(c.decompress_classes(&cc, cc.segments.len() + 1).is_err());
     }
 }

@@ -6,6 +6,10 @@
 //! field's L∞ error is at most `(nlevels+1) · δ/2 = eb` — the same
 //! triangle-inequality argument MGARD uses for its uniform mode.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
 use crate::util::par;
 use crate::util::Scalar;
 
@@ -33,22 +37,35 @@ impl QuantMeta {
 /// Quantize coefficients to signed integers (round-to-nearest).
 /// Element-wise and order-preserving, so the chunk-parallel path (large
 /// inputs, see [`crate::util::par`]) is bit-identical to the serial one.
-pub fn quantize<T: Scalar>(data: &[T], meta: &QuantMeta) -> Vec<i64> {
+///
+/// Non-finite coefficients are rejected: a NaN or ±Inf would otherwise
+/// saturate through the `as i64` cast into a huge finite value and come
+/// back from [`dequantize`] silently violating the advertised error
+/// bound. The check is fused into the quantization pass itself (no extra
+/// traversal); the first offending index is reported.
+pub fn quantize<T: Scalar>(data: &[T], meta: &QuantMeta) -> Result<Vec<i64>> {
     let inv = 1.0 / meta.bin;
     let workers = par::workers_for(data.len());
-    if workers <= 1 {
-        return data
-            .iter()
-            .map(|v| (v.to_f64() * inv).round() as i64)
-            .collect();
-    }
+    let bad = AtomicUsize::new(usize::MAX);
     let mut out = vec![0i64; data.len()];
-    par::for_slab_chunks(data, &mut out, data.len(), 1, 1, workers, |_, _, src, dst| {
-        for (o, v) in dst.iter_mut().zip(src) {
-            *o = (v.to_f64() * inv).round() as i64;
+    par::for_slab_chunks(data, &mut out, data.len(), 1, 1, workers, |i0, _, src, dst| {
+        for (j, (o, v)) in dst.iter_mut().zip(src).enumerate() {
+            let x = v.to_f64();
+            if x.is_finite() {
+                *o = (x * inv).round() as i64;
+            } else {
+                bad.fetch_min(i0 + j, Ordering::Relaxed);
+            }
         }
     });
-    out
+    let i = bad.load(Ordering::Relaxed);
+    if i != usize::MAX {
+        bail!(
+            "non-finite coefficient {} at index {i}: cannot quantize under an absolute error bound",
+            data[i].to_f64()
+        );
+    }
+    Ok(out)
 }
 
 /// Invert [`quantize`] (chunk-parallel like it).
@@ -80,7 +97,7 @@ mod tests {
         let meta = QuantMeta::for_bound(1e-3, 4);
         let mut rng = Rng::new(1);
         let data: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
-        let q = quantize(&data, &meta);
+        let q = quantize(&data, &meta).unwrap();
         let back: Vec<f64> = dequantize(&q, &meta);
         for (a, b) in data.iter().zip(&back) {
             assert!((a - b).abs() <= meta.bin / 2.0 + 1e-15);
@@ -95,7 +112,7 @@ mod tests {
         let data: Vec<f64> = (0..200_000).map(|_| rng.normal()).collect();
         let inv = 1.0 / meta.bin;
         let want: Vec<i64> = data.iter().map(|v| (v * inv).round() as i64).collect();
-        assert_eq!(quantize(&data, &meta), want);
+        assert_eq!(quantize(&data, &meta).unwrap(), want);
         let back_serial: Vec<f64> = crate::util::par::with_serial(|| dequantize(&want, &meta));
         let back: Vec<f64> = dequantize(&want, &meta);
         assert_eq!(back, back_serial);
@@ -113,13 +130,33 @@ mod tests {
             let mut r = Refactorer::new(h.clone());
             r.decompose(&mut dec);
             let meta = QuantMeta::for_bound(eb, h.nlevels());
-            let q = quantize(dec.data(), &meta);
+            let q = quantize(dec.data(), &meta).unwrap();
             let back: Vec<f64> = dequantize(&q, &meta);
             let mut rec = Tensor::from_vec(&shape, back);
             r.recompose(&mut rec);
             let err = linf(rec.data(), orig.data());
             assert!(err <= eb * 1.0001, "eb={eb}: L∞={err}");
         }
+    }
+
+    #[test]
+    fn rejects_non_finite_input() {
+        // regression: NaN/Inf used to saturate through the `as i64` cast
+        // and dequantize back as huge finite values, silently violating
+        // the error bound
+        let meta = QuantMeta::for_bound(1e-3, 3);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let data = [0.5, bad, -0.25];
+            let err = quantize(&data, &meta);
+            assert!(err.is_err(), "{bad} must be rejected");
+            assert!(
+                err.unwrap_err().to_string().contains("index 1"),
+                "error should name the offending index"
+            );
+        }
+        // f32 path too
+        assert!(quantize(&[1.0f32, f32::NAN], &meta).is_err());
+        assert!(quantize(&[1.0f32, 2.0], &meta).is_ok());
     }
 
     #[test]
@@ -136,7 +173,7 @@ mod tests {
         let mut dec = orig.clone();
         Refactorer::new(h.clone()).decompose(&mut dec);
         let meta = QuantMeta::for_bound(1e-2, h.nlevels());
-        let q = quantize(dec.data(), &meta);
+        let q = quantize(dec.data(), &meta).unwrap();
         let zeros = q.iter().filter(|&&v| v == 0).count();
         assert!(
             zeros as f64 > 0.5 * q.len() as f64,

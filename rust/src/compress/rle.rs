@@ -6,9 +6,16 @@
 //! `zero_run` counts zeros preceding a nonzero `value`, plus a trailing
 //! zero-run.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::compress::varint::{push_uvarint, read_uvarint, unzigzag, zigzag};
+
+/// Largest element count [`decode`] will reconstruct (2^28 ≈ 268 M values,
+/// 2 GiB of i64 — comfortably above any tensor in this crate). Zero runs
+/// let a few bytes legitimately expand to enormous outputs, so unlike the
+/// other coders no bound can be derived from the input size; callers that
+/// know the exact expected length should use [`decode_with_limit`].
+pub const MAX_DECODE_LEN: usize = 1 << 28;
 
 /// Encode a signed stream with zero-run collapsing.
 pub fn encode(values: &[i64]) -> Vec<u8> {
@@ -28,21 +35,37 @@ pub fn encode(values: &[i64]) -> Vec<u8> {
     out
 }
 
-/// Invert [`encode`].
+/// Invert [`encode`] (declared length capped at [`MAX_DECODE_LEN`]).
 pub fn decode(buf: &[u8]) -> Result<Vec<i64>> {
+    decode_with_limit(buf, MAX_DECODE_LEN)
+}
+
+/// Invert [`encode`], rejecting streams that declare more than `max_len`
+/// output values. Every allocation is bounded by the declared (validated)
+/// length, so malformed streams error out instead of aborting on a huge
+/// reserve.
+pub fn decode_with_limit(buf: &[u8], max_len: usize) -> Result<Vec<i64>> {
     let mut pos = 0usize;
-    let n = read_uvarint(buf, &mut pos)? as usize;
-    let mut out = Vec::with_capacity(n);
+    let declared = read_uvarint(buf, &mut pos)?;
+    ensure!(
+        declared <= max_len as u64,
+        "RLE stream declares {declared} values (limit {max_len})"
+    );
+    let n = declared as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 16));
     while out.len() < n {
-        let run = read_uvarint(buf, &mut pos)? as usize;
-        out.resize(out.len() + run, 0);
+        let run = read_uvarint(buf, &mut pos)?;
+        ensure!(
+            run <= (n - out.len()) as u64,
+            "RLE zero run of {run} overflows declared length {n}"
+        );
+        out.resize(out.len() + run as usize, 0);
         if out.len() == n {
             break;
         }
         let v = unzigzag(read_uvarint(buf, &mut pos)?);
         out.push(v);
     }
-    anyhow::ensure!(out.len() == n, "RLE stream shorter than declared");
     Ok(out)
 }
 
@@ -82,5 +105,29 @@ mod tests {
     fn trailing_zero_run() {
         let v = vec![5i64, 0, 0, 0, 0];
         assert_eq!(decode(&encode(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_implausible_declared_length() {
+        let mut buf = Vec::new();
+        push_uvarint(&mut buf, 1u64 << 40); // declared length
+        push_uvarint(&mut buf, 1u64 << 40); // zero run
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_run_past_declared_length() {
+        let mut buf = Vec::new();
+        push_uvarint(&mut buf, 4); // four values ...
+        push_uvarint(&mut buf, 9); // ... but a nine-zero run
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn limit_enforced() {
+        let v = vec![0i64; 100];
+        let enc = encode(&v);
+        assert_eq!(decode_with_limit(&enc, 100).unwrap(), v);
+        assert!(decode_with_limit(&enc, 99).is_err());
     }
 }

@@ -4,7 +4,7 @@
 //! zigzag map sends them to small unsigned ones, and LEB128 packs those
 //! into 1 byte each in the common case.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 #[inline]
 pub fn zigzag(v: i64) -> u64 {
@@ -63,7 +63,15 @@ pub fn encode(values: &[i64]) -> Vec<u8> {
 /// Decode a signed stream.
 pub fn decode(buf: &[u8]) -> Result<Vec<i64>> {
     let mut pos = 0usize;
-    let n = read_uvarint(buf, &mut pos)? as usize;
+    let declared = read_uvarint(buf, &mut pos)?;
+    // every encoded value occupies at least one byte, so a corrupt header
+    // cannot make us allocate more than the buffer could possibly hold
+    ensure!(
+        declared <= (buf.len() - pos) as u64,
+        "varint stream declares {declared} values but only {} bytes follow",
+        buf.len() - pos
+    );
+    let n = declared as usize;
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         out.push(unzigzag(read_uvarint(buf, &mut pos)?));
@@ -111,5 +119,15 @@ mod tests {
     #[test]
     fn empty_stream() {
         assert_eq!(decode(&encode(&[])).unwrap(), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn rejects_implausible_declared_length() {
+        // a header claiming 2^40 values over a 3-byte body must error out
+        // instead of attempting a huge allocation
+        let mut buf = Vec::new();
+        push_uvarint(&mut buf, 1u64 << 40);
+        buf.extend_from_slice(&[0, 0, 0]);
+        assert!(decode(&buf).is_err());
     }
 }

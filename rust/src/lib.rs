@@ -22,8 +22,8 @@
 //! | [`runtime`] | PJRT artifact registry + executor (the `xla` crate) |
 //! | [`coordinator`] | jobs, partitioning, cooperative-parallel orchestration |
 //! | [`simgpu`] | device/interconnect performance model, Table-2 auto-tuner, Summit cluster sim |
-//! | [`storage`] | multi-tier storage + parallel-I/O cost model |
-//! | [`compress`] | quantizer + lossless coders + MGARD compression pipeline |
+//! | [`storage`] | multi-tier storage + parallel-I/O cost model, progressive `.mgr` container |
+//! | [`compress`] | quantizer + lossless coders + MGARD compression pipeline (monolithic and per-class) |
 //! | [`sim`] | Gray-Scott reaction-diffusion workload generator |
 //! | [`vis`] | iso-surface area metric for the visualization showcase |
 //! | [`util`] | scalar abstraction, intra-kernel parallelism ([`util::par`]), RNG, bench/CLI/JSON helpers |

@@ -4,13 +4,17 @@
 //!
 //! * `info` — artifact registry + device model summary.
 //! * `refactor` — decompose a Gray-Scott (or random) field, report class
-//!   sizes and error-control norms.
+//!   sizes and error-control norms; `--out f.mgr` additionally writes a
+//!   progressive container with per-class segments.
+//! * `retrieve` — reconstruct a fidelity prefix from a container
+//!   (`--keep K` classes, or `--error E` for the smallest prefix whose
+//!   recorded L∞ annotation meets `E`).
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
 //! * `serve` — run a batch of jobs through the coordinator worker pool.
 //! * `pjrt-check` — execute the AOT artifacts and verify them against the
 //!   native core (the cross-layer integration check).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use mgr::compress::{Codec, MgardCompressor};
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
@@ -19,6 +23,7 @@ use mgr::refactor::{class_norms, split_classes, Refactorer};
 use mgr::runtime::EngineHandle;
 use mgr::sim::GrayScott;
 use mgr::simgpu::{ClusterModel, DeviceSpec};
+use mgr::storage::{ProgressiveReader, ProgressiveWriter};
 use mgr::util::cli::Args;
 use mgr::util::rng::Rng;
 use mgr::util::stats::{linf, time};
@@ -60,6 +65,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => info(args),
         Some("refactor") => refactor(args),
+        Some("retrieve") => retrieve(args),
         Some("compress") | Some("roundtrip") => compress(args),
         Some("serve") => serve(args),
         Some("pjrt-check") => pjrt_check(args),
@@ -70,6 +76,8 @@ fn run(args: &Args) -> Result<()> {
                  subcommands:\n\
                  \x20 info                      artifact + device summary\n\
                  \x20 refactor   [--shape NxNxN --input grayscott|random]\n\
+                 \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
+                 \x20 retrieve   --in f.mgr [--keep K | --error E] [--dump raw.bin]\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle]\n\
                  \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
                  \x20 pjrt-check [--artifacts DIR]\n\n\
@@ -134,17 +142,134 @@ fn refactor(args: &Args) -> Result<()> {
             norms.linf[k]
         );
     }
+
+    if let Some(out) = args.get("out") {
+        let eb = args.get_f64("eb", 1e-3)?;
+        let codec = parse_codec(args)?;
+        let mut writer = ProgressiveWriter::<f64>::new(h.clone(), codec);
+        let (header, secs) = time(|| writer.write_file(&data, eb, out));
+        let header = header?;
+        println!(
+            "\nwrote container {out} ({} codec, eb {eb:.1e}) in {:.1} ms",
+            codec.name(),
+            secs * 1e3
+        );
+        println!(
+            "{:<8} {:>12} {:>14} {:>14} {:>14}",
+            "class", "values", "seg bytes", "L∞ after", "RMSE after"
+        );
+        for (k, s) in header.segments.iter().enumerate() {
+            println!(
+                "{:<8} {:>12} {:>14} {:>14.3e} {:>14.3e}",
+                k, s.nvalues, s.bytes, s.linf, s.rmse
+            );
+        }
+        let total = header.header_bytes() as u64 + header.payload_bytes();
+        println!(
+            "total {total} bytes ({:.2}x over raw {})",
+            data.nbytes() as f64 / total as f64,
+            data.nbytes()
+        );
+    }
+    Ok(())
+}
+
+fn parse_codec(args: &Args) -> Result<Codec> {
+    match args.get_or("codec", "zlib").as_str() {
+        "zlib" => Ok(Codec::Zlib),
+        "huff-rle" => Ok(Codec::HuffRle),
+        other => bail!("unknown codec '{other}'"),
+    }
+}
+
+fn retrieve(args: &Args) -> Result<()> {
+    let path = args
+        .get("in")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("retrieve needs --in FILE (or a positional path)"))?;
+    let buf = std::fs::read(&path).with_context(|| format!("reading container {path}"))?;
+    // dispatch on the container's scalar width (f32 and f64 containers
+    // are both readable)
+    match mgr::storage::container::peek_dtype(&buf)? {
+        4 => retrieve_typed::<f32>(args, &buf, &path),
+        _ => retrieve_typed::<f64>(args, &buf, &path),
+    }
+}
+
+fn retrieve_typed<T: mgr::util::Scalar>(args: &Args, buf: &[u8], path: &str) -> Result<()> {
+    let mut reader = ProgressiveReader::<T>::open(buf)?;
+    let header = reader.header().clone();
+    println!(
+        "container {path}: shape {:?}, {} levels, {} classes, {} codec, eb {:.1e}",
+        header.shape,
+        header.nlevels,
+        header.nclasses(),
+        header.codec.name(),
+        header.quant.error_bound
+    );
+    println!("{:<8} {:>14} {:>14} {:>14}", "class", "seg bytes", "L∞ after", "RMSE after");
+    for (k, s) in header.segments.iter().enumerate() {
+        println!("{:<8} {:>14} {:>14.3e} {:>14.3e}", k, s.bytes, s.linf, s.rmse);
+    }
+
+    let keep = if let Some(e) = args.get("error") {
+        let target: f64 = e
+            .parse()
+            .map_err(|_| anyhow!("--error expects a number, got '{e}'"))?;
+        ensure!(
+            target.is_finite() && target > 0.0,
+            "--error must be positive and finite, got {target}"
+        );
+        let keep = header.select_keep(target);
+        println!(
+            "--error {target:.1e}: smallest satisfying prefix is {keep}/{} classes{}",
+            header.nclasses(),
+            if header.segments[keep - 1].linf > target {
+                " (target unsatisfiable; keeping everything)"
+            } else {
+                ""
+            }
+        );
+        keep
+    } else {
+        let keep = args.get_usize("keep", header.nclasses())?;
+        if keep < 1 || keep > header.nclasses() {
+            bail!("--keep must be in 1..={}, got {keep}", header.nclasses());
+        }
+        keep
+    };
+
+    let (tensor, secs) = time(|| reader.retrieve(keep));
+    let tensor = tensor?;
+    let read = header.prefix_bytes(keep);
+    println!(
+        "retrieved {keep}/{} classes ({read} of {} payload bytes, {:.1}%) in {:.1} ms \
+         — recorded L∞ {:.3e}, RMSE {:.3e}",
+        header.nclasses(),
+        header.payload_bytes(),
+        100.0 * read as f64 / header.payload_bytes() as f64,
+        secs * 1e3,
+        header.segments[keep - 1].linf,
+        header.segments[keep - 1].rmse
+    );
+
+    if let Some(dump) = args.get("dump") {
+        // always dumps f64 LE (f32 containers are widened)
+        let mut raw = Vec::with_capacity(tensor.len() * 8);
+        for v in tensor.data() {
+            raw.extend_from_slice(&v.to_f64().to_le_bytes());
+        }
+        std::fs::write(dump, raw)?;
+        println!("dumped {} little-endian f64 values to {dump}", tensor.len());
+    }
     Ok(())
 }
 
 fn compress(args: &Args) -> Result<()> {
     let data = load_field(args)?;
     let eb = args.get_f64("eb", 1e-3)?;
-    let codec = match args.get_or("codec", "zlib").as_str() {
-        "zlib" => Codec::Zlib,
-        "huff-rle" => Codec::HuffRle,
-        other => bail!("unknown codec '{other}'"),
-    };
+    let codec = parse_codec(args)?;
     let h = Hierarchy::uniform(data.shape());
     let mut c = MgardCompressor::new(h, codec);
     let blob = c.compress(&data, eb)?;

@@ -1,0 +1,699 @@
+//! The progressive refactored-data container (`.mgr`): the byte-level
+//! representation of the paper's Fig-1 "create at high fidelity, store /
+//! transfer at lower fidelity" workflow.
+//!
+//! A container is a fixed header followed by one **independently
+//! entropy-coded segment per coefficient class** (coarsest first). A
+//! reader that stops after `k` segments reconstructs exactly the tensor
+//! that in-memory [`crate::refactor::assemble_classes`] truncation would
+//! produce from the same dequantized classes — storage tiers, networks,
+//! and readers can therefore trade fidelity for bytes at segment
+//! granularity, the way MDR-style systems consume MGARD output.
+//!
+//! # Format (version 1, little-endian)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 4 | magic `"MGRC"` |
+//! | 4  | 2 | version (`1`) |
+//! | 6  | 1 | scalar width in bytes (4 = f32, 8 = f64) |
+//! | 7  | 1 | codec (0 = zlib, 1 = huff-rle) |
+//! | 8  | 1 | ndim |
+//! | 9  | 1 | nlevels |
+//! | 10 | 1 | nclasses (= nlevels + 1) |
+//! | 11 | 1 | reserved (0) |
+//! | 12 | 8 | quantizer error bound `eb` (f64) |
+//! | 20 | 8 | quantizer bin width `δ` (f64) |
+//! | 28 | 8·ndim | shape, one u64 per dimension |
+//! | …  | 32·nclasses | segment table |
+//! | …  | Σ bytes | segment payloads, concatenated in class order |
+//!
+//! Each segment-table entry is `{ bytes: u64, nvalues: u64, linf: f64,
+//! rmse: f64 }` where `linf`/`rmse` are the **measured** reconstruction
+//! errors against the original data when retrieval stops after this
+//! class — a reader picks the smallest prefix meeting its accuracy
+//! requirement straight from the header, before decoding anything.
+//!
+//! Version-1 containers describe uniform grids only (the hierarchy is
+//! rebuilt from `shape` + `nlevels`; per-dimension coordinate tables are
+//! a reserved extension). Parsing is total: malformed or truncated bytes
+//! yield an `Err`, never a panic, and every allocation is bounded by
+//! validated header fields (dimensions ≤ 2^24, total nodes ≤ 2^32).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::compress::pipeline::{ClassSegment, CompressedClasses};
+use crate::compress::{Codec, MgardCompressor, QuantMeta};
+use crate::grid::{max_levels, Hierarchy, Tensor};
+use crate::refactor::class_len;
+use crate::util::stats;
+use crate::util::Scalar;
+
+/// Container magic bytes.
+pub const MAGIC: [u8; 4] = *b"MGRC";
+/// Current container format version.
+pub const VERSION: u16 = 1;
+/// Largest dimension count a container may declare.
+pub const MAX_NDIM: usize = 8;
+/// Largest single dimension a container may declare.
+pub const MAX_DIM: u64 = 1 << 24;
+/// Largest total node count a container may declare.
+pub const MAX_NODES: u64 = 1 << 32;
+
+fn codec_tag(codec: Codec) -> u8 {
+    match codec {
+        Codec::Zlib => 0,
+        Codec::HuffRle => 1,
+    }
+}
+
+fn codec_from_tag(tag: u8) -> Result<Codec> {
+    match tag {
+        0 => Ok(Codec::Zlib),
+        1 => Ok(Codec::HuffRle),
+        other => bail!("unknown codec tag {other}"),
+    }
+}
+
+/// Segment-table entry: one per coefficient class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentMeta {
+    /// Entropy-coded payload size in bytes.
+    pub bytes: u64,
+    /// Quantized values in the segment (`class_len` of the hierarchy).
+    pub nvalues: u64,
+    /// Measured L∞ error of the reconstruction that stops after this
+    /// class, against the original data.
+    pub linf: f64,
+    /// Measured RMSE of the same reconstruction.
+    pub rmse: f64,
+}
+
+/// Parsed (or to-be-written) container header.
+#[derive(Clone, Debug)]
+pub struct ContainerHeader {
+    pub codec: Codec,
+    /// Scalar width in bytes (4 = f32, 8 = f64).
+    pub dtype_bytes: u8,
+    pub shape: Vec<usize>,
+    pub nlevels: usize,
+    pub quant: QuantMeta,
+    /// One entry per coefficient class, coarsest first.
+    pub segments: Vec<SegmentMeta>,
+}
+
+/// Bounds-checked little-endian reader over a byte buffer.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("container truncated at offset {}", self.pos))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl ContainerHeader {
+    pub fn nclasses(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Serialized header size in bytes.
+    pub fn header_bytes(&self) -> usize {
+        28 + 8 * self.shape.len() + 32 * self.segments.len()
+    }
+
+    /// Total entropy-coded payload bytes across all segments.
+    pub fn payload_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Payload bytes of the first `keep` segments.
+    pub fn prefix_bytes(&self, keep: usize) -> u64 {
+        self.segments.iter().take(keep).map(|s| s.bytes).sum()
+    }
+
+    /// Smallest class prefix whose recorded L∞ error meets `target`;
+    /// all classes when even the full reconstruction does not.
+    pub fn select_keep(&self, target_linf: f64) -> usize {
+        for (k, s) in self.segments.iter().enumerate() {
+            if s.linf <= target_linf {
+                return k + 1;
+            }
+        }
+        self.segments.len()
+    }
+
+    /// Rebuild the (uniform-grid) hierarchy the container describes.
+    pub fn hierarchy(&self) -> Result<Hierarchy> {
+        let max = max_levels(&self.shape).ok_or_else(|| {
+            anyhow!("container shape {:?} is not refactorable (dims must be 2^k+1)", self.shape)
+        })?;
+        ensure!(
+            self.nlevels >= 1 && self.nlevels <= max,
+            "container nlevels {} outside 1..={max} for shape {:?}",
+            self.nlevels,
+            self.shape
+        );
+        let coords = self
+            .shape
+            .iter()
+            .map(|&n| (0..n).map(|i| i as f64 / (n - 1) as f64).collect())
+            .collect();
+        Ok(Hierarchy::new(&self.shape, coords, Some(self.nlevels)))
+    }
+
+    /// Serialize (header only — segment payloads follow separately).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.header_bytes());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.dtype_bytes);
+        out.push(codec_tag(self.codec));
+        out.push(self.shape.len() as u8);
+        out.push(self.nlevels as u8);
+        out.push(self.segments.len() as u8);
+        out.push(0); // reserved
+        out.extend_from_slice(&self.quant.error_bound.to_le_bytes());
+        out.extend_from_slice(&self.quant.bin.to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for s in &self.segments {
+            out.extend_from_slice(&s.bytes.to_le_bytes());
+            out.extend_from_slice(&s.nvalues.to_le_bytes());
+            out.extend_from_slice(&s.linf.to_le_bytes());
+            out.extend_from_slice(&s.rmse.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse and fully validate a container buffer (header fields,
+    /// hierarchy consistency, per-class value counts, exact payload
+    /// length). Returns the header and its serialized size.
+    pub fn parse(buf: &[u8]) -> Result<(ContainerHeader, usize)> {
+        let mut cur = Cursor::new(buf);
+        let magic = cur.take(4)?;
+        ensure!(magic == MAGIC, "not an MGRC container (bad magic)");
+        let version = cur.u16()?;
+        ensure!(version == VERSION, "unsupported container version {version}");
+        let dtype_bytes = cur.u8()?;
+        ensure!(
+            dtype_bytes == 4 || dtype_bytes == 8,
+            "unsupported scalar width {dtype_bytes}"
+        );
+        let codec = codec_from_tag(cur.u8()?)?;
+        let ndim = cur.u8()? as usize;
+        ensure!(ndim >= 1 && ndim <= MAX_NDIM, "ndim {ndim} outside 1..={MAX_NDIM}");
+        let nlevels = cur.u8()? as usize;
+        let nclasses = cur.u8()? as usize;
+        ensure!(
+            nclasses == nlevels + 1,
+            "nclasses {nclasses} must equal nlevels {nlevels} + 1"
+        );
+        let reserved = cur.u8()?;
+        ensure!(reserved == 0, "reserved header byte must be 0, got {reserved}");
+        let error_bound = cur.f64()?;
+        let bin = cur.f64()?;
+        ensure!(
+            error_bound.is_finite() && error_bound > 0.0,
+            "corrupt error bound {error_bound}"
+        );
+        ensure!(bin.is_finite() && bin > 0.0, "corrupt quantizer bin {bin}");
+
+        let mut shape = Vec::with_capacity(ndim);
+        let mut nodes: u64 = 1;
+        for _ in 0..ndim {
+            let d = cur.u64()?;
+            ensure!(d >= 3 && d <= MAX_DIM, "dimension {d} outside 3..={MAX_DIM}");
+            nodes = nodes
+                .checked_mul(d)
+                .filter(|&n| n <= MAX_NODES)
+                .ok_or_else(|| anyhow!("container tensor exceeds {MAX_NODES} nodes"))?;
+            shape.push(d as usize);
+        }
+
+        let mut segments = Vec::with_capacity(nclasses);
+        for k in 0..nclasses {
+            let bytes = cur.u64()?;
+            let nvalues = cur.u64()?;
+            let linf = cur.f64()?;
+            let rmse = cur.f64()?;
+            ensure!(
+                linf.is_finite() && linf >= 0.0 && rmse.is_finite() && rmse >= 0.0,
+                "corrupt error annotation on class {k}"
+            );
+            segments.push(SegmentMeta {
+                bytes,
+                nvalues,
+                linf,
+                rmse,
+            });
+        }
+        let header_len = cur.pos;
+
+        let header = ContainerHeader {
+            codec,
+            dtype_bytes,
+            shape,
+            nlevels,
+            quant: QuantMeta {
+                bin,
+                error_bound,
+                nlevels,
+            },
+            segments,
+        };
+
+        // hierarchy-level consistency: the shape must support nlevels and
+        // every segment must declare exactly its class's value count
+        let h = header.hierarchy()?;
+        for (k, s) in header.segments.iter().enumerate() {
+            let expect = class_len(&h, k) as u64;
+            ensure!(
+                s.nvalues == expect,
+                "class {k} declares {} values, hierarchy expects {expect}",
+                s.nvalues
+            );
+        }
+
+        // exact payload accounting: the segment table must describe the
+        // remaining bytes completely
+        let mut total: u64 = 0;
+        for s in &header.segments {
+            total = total
+                .checked_add(s.bytes)
+                .ok_or_else(|| anyhow!("segment sizes overflow"))?;
+        }
+        let remaining = (buf.len() - header_len) as u64;
+        ensure!(
+            total == remaining,
+            "segment table declares {total} payload bytes, buffer holds {remaining}"
+        );
+
+        Ok((header, header_len))
+    }
+}
+
+fn is_uniform(h: &Hierarchy) -> bool {
+    h.shape().iter().zip(h.coords()).all(|(&n, c)| {
+        c.iter()
+            .enumerate()
+            .all(|(i, &x)| (x - i as f64 / (n - 1) as f64).abs() < 1e-12)
+    })
+}
+
+/// Writes progressive containers: per-class quantization + entropy
+/// coding via [`MgardCompressor::compress_classes`], then measures the
+/// exact reconstruction error of every class prefix for the header's
+/// error annotations.
+pub struct ProgressiveWriter<T> {
+    compressor: MgardCompressor<T>,
+}
+
+impl<T: Scalar> ProgressiveWriter<T> {
+    pub fn new(hierarchy: Hierarchy, codec: Codec) -> Self {
+        ProgressiveWriter {
+            compressor: MgardCompressor::new(hierarchy, codec),
+        }
+    }
+
+    /// Per-stage timings of the last `write` (see [`CompressorStats`]).
+    ///
+    /// [`CompressorStats`]: crate::compress::CompressorStats
+    pub fn stats(&self) -> &crate::compress::CompressorStats {
+        &self.compressor.stats
+    }
+
+    /// Compress `data` under absolute error bound `eb` and serialize the
+    /// container. Returns the bytes and the header (whose per-class
+    /// `linf`/`rmse` annotations are measured, not estimated: each prefix
+    /// is actually decoded and compared against `data`).
+    pub fn write(&mut self, data: &Tensor<T>, eb: f64) -> Result<(Vec<u8>, ContainerHeader)> {
+        ensure!(
+            is_uniform(self.compressor.hierarchy()),
+            "container v1 serializes uniform grids only (coordinate tables are a reserved extension)"
+        );
+        let nlevels = self.compressor.hierarchy().nlevels();
+        let cc = self.compressor.compress_classes(data, eb)?;
+
+        let mut segments = Vec::with_capacity(cc.segments.len());
+        for keep in 1..=cc.segments.len() {
+            let approx = self.compressor.decompress_classes(&cc, keep)?;
+            let seg = &cc.segments[keep - 1];
+            segments.push(SegmentMeta {
+                bytes: seg.payload.len() as u64,
+                nvalues: seg.nvalues as u64,
+                linf: stats::linf(approx.data(), data.data()),
+                rmse: stats::rmse(approx.data(), data.data()),
+            });
+        }
+
+        let header = ContainerHeader {
+            codec: cc.codec,
+            dtype_bytes: T::BYTES as u8,
+            shape: cc.shape.clone(),
+            nlevels,
+            quant: cc.quant.clone(),
+            segments,
+        };
+        let mut out = header.to_bytes();
+        for s in &cc.segments {
+            out.extend_from_slice(&s.payload);
+        }
+        Ok((out, header))
+    }
+
+    /// [`ProgressiveWriter::write`] straight to a file.
+    pub fn write_file(
+        &mut self,
+        data: &Tensor<T>,
+        eb: f64,
+        path: impl AsRef<Path>,
+    ) -> Result<ContainerHeader> {
+        let (bytes, header) = self.write(data, eb)?;
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("writing container {}", path.as_ref().display()))?;
+        Ok(header)
+    }
+}
+
+/// Reads progressive containers: parse + validate once, then retrieve
+/// any class prefix (or the smallest prefix meeting an error target)
+/// without touching the segments beyond it.
+pub struct ProgressiveReader<T> {
+    header: ContainerHeader,
+    classes: CompressedClasses,
+    compressor: MgardCompressor<T>,
+}
+
+impl<T: Scalar> ProgressiveReader<T> {
+    /// Parse and validate a container buffer.
+    pub fn open(buf: &[u8]) -> Result<Self> {
+        let (header, header_len) = ContainerHeader::parse(buf)?;
+        ensure!(
+            header.dtype_bytes as usize == T::BYTES,
+            "container holds {}-byte scalars, reader expects {}-byte",
+            header.dtype_bytes,
+            T::BYTES
+        );
+        let hierarchy = header.hierarchy()?;
+
+        let mut segments = Vec::with_capacity(header.segments.len());
+        let mut pos = header_len;
+        for s in &header.segments {
+            let end = pos + s.bytes as usize; // parse() proved the sum fits
+            segments.push(ClassSegment {
+                payload: buf[pos..end].to_vec(),
+                nvalues: s.nvalues as usize,
+            });
+            pos = end;
+        }
+        let classes = CompressedClasses {
+            segments,
+            codec: header.codec,
+            quant: header.quant.clone(),
+            shape: header.shape.clone(),
+            original_bytes: hierarchy.nnodes() * T::BYTES,
+        };
+        let compressor = MgardCompressor::new(hierarchy, header.codec);
+        Ok(ProgressiveReader {
+            header,
+            classes,
+            compressor,
+        })
+    }
+
+    /// [`ProgressiveReader::open`] from a file.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        let buf = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading container {}", path.as_ref().display()))?;
+        Self::open(&buf)
+    }
+
+    pub fn header(&self) -> &ContainerHeader {
+        &self.header
+    }
+
+    pub fn nclasses(&self) -> usize {
+        self.header.nclasses()
+    }
+
+    /// Per-stage timings of the last retrieval.
+    pub fn stats(&self) -> &crate::compress::CompressorStats {
+        &self.compressor.stats
+    }
+
+    /// Reconstruct the reduced-fidelity tensor carried by classes
+    /// `0..keep` — bit-identical to in-memory `assemble_classes`
+    /// truncation of the same dequantized classes.
+    pub fn retrieve(&mut self, keep: usize) -> Result<Tensor<T>> {
+        self.compressor.decompress_classes(&self.classes, keep)
+    }
+
+    /// Retrieve the smallest class prefix whose recorded L∞ annotation
+    /// meets `target_linf` (all classes if none does). Returns the prefix
+    /// length alongside the reconstruction.
+    pub fn retrieve_error(&mut self, target_linf: f64) -> Result<(usize, Tensor<T>)> {
+        ensure!(
+            target_linf.is_finite() && target_linf > 0.0,
+            "error target must be positive and finite"
+        );
+        let keep = self.header.select_keep(target_linf);
+        let t = self.retrieve(keep)?;
+        Ok((keep, t))
+    }
+}
+
+/// Peek at a container's scalar width without full validation (lets a
+/// CLI dispatch to the right `ProgressiveReader<T>`).
+pub fn peek_dtype(buf: &[u8]) -> Result<u8> {
+    ensure!(buf.len() >= 7, "container truncated");
+    ensure!(buf[..4] == MAGIC, "not an MGRC container (bad magic)");
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported container version {version}");
+    Ok(buf[6])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{dequantize, quantize};
+    use crate::refactor::{assemble_classes, split_classes, Refactorer};
+    use crate::util::rng::Rng;
+
+    fn smooth(n: usize) -> Tensor<f64> {
+        Tensor::from_fn(&[n, n], |idx| {
+            let x = idx[0] as f64 / (n - 1) as f64;
+            let y = idx[1] as f64 / (n - 1) as f64;
+            (3.0 * x).sin() * (2.0 * y).cos() + 0.5 * x * y
+        })
+    }
+
+    fn write_container(n: usize, codec: Codec, eb: f64) -> (Tensor<f64>, Vec<u8>, ContainerHeader) {
+        let field = smooth(n);
+        let h = Hierarchy::uniform(field.shape());
+        let mut w = ProgressiveWriter::<f64>::new(h, codec);
+        let (bytes, header) = w.write(&field, eb).unwrap();
+        (field, bytes, header)
+    }
+
+    #[test]
+    fn prefix_retrieval_bit_identical_to_in_memory_truncation() {
+        // the acceptance property: container prefix retrieval of k
+        // classes equals assemble_classes truncation of the dequantized
+        // classes, bitwise, for every k and both codecs
+        let n = 17;
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let (field, bytes, _) = write_container(n, codec, 1e-3);
+            let mut r = ProgressiveReader::<f64>::open(&bytes).unwrap();
+
+            let h = Hierarchy::uniform(field.shape());
+            let mut dec = field.clone();
+            Refactorer::new(h.clone()).decompose(&mut dec);
+            let quant = QuantMeta::for_bound(1e-3, h.nlevels());
+            let qd: Vec<Vec<f64>> = split_classes(&dec, &h)
+                .iter()
+                .map(|c| dequantize(&quantize(c, &quant).unwrap(), &quant))
+                .collect();
+
+            for keep in 1..=h.nclasses() {
+                let refs: Vec<&[f64]> = qd[..keep].iter().map(|c| c.as_slice()).collect();
+                let mut want = assemble_classes(&refs, &h);
+                Refactorer::new(h.clone()).recompose(&mut want);
+                let got = r.retrieve(keep).unwrap();
+                assert_eq!(got.data(), want.data(), "{codec:?} keep={keep}");
+            }
+        }
+    }
+
+    #[test]
+    fn header_error_annotations_match_measured_errors() {
+        let (field, bytes, header) = write_container(33, Codec::HuffRle, 1e-3);
+        let mut r = ProgressiveReader::<f64>::open(&bytes).unwrap();
+        let mut last = f64::INFINITY;
+        for (k, seg) in header.segments.iter().enumerate() {
+            let approx = r.retrieve(k + 1).unwrap();
+            let linf = stats::linf(approx.data(), field.data());
+            let rmse = stats::rmse(approx.data(), field.data());
+            assert_eq!(seg.linf, linf, "class {k} L∞ annotation");
+            assert_eq!(seg.rmse, rmse, "class {k} RMSE annotation");
+            assert!(seg.linf <= last + 1e-15, "annotations must be non-increasing");
+            last = seg.linf;
+        }
+        // full retrieval satisfies the requested bound
+        assert!(header.segments.last().unwrap().linf <= 1e-3);
+    }
+
+    #[test]
+    fn select_keep_and_retrieve_error() {
+        let (field, bytes, header) = write_container(33, Codec::Zlib, 1e-4);
+        let mut r = ProgressiveReader::<f64>::open(&bytes).unwrap();
+        for target in [1e-1, 1e-2, 1e-3] {
+            let keep = header.select_keep(target);
+            // smallest prefix: the one before it (if any) must miss the target
+            if keep > 1 {
+                assert!(header.segments[keep - 2].linf > target);
+            }
+            let (got_keep, approx) = r.retrieve_error(target).unwrap();
+            assert_eq!(got_keep, keep);
+            assert!(stats::linf(approx.data(), field.data()) <= target);
+        }
+        // unsatisfiable target falls back to every class
+        assert_eq!(header.select_keep(1e-300), header.nclasses());
+        assert!(r.retrieve_error(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn header_roundtrips_through_bytes() {
+        let (_, bytes, header) = write_container(17, Codec::HuffRle, 1e-2);
+        let (parsed, header_len) = ContainerHeader::parse(&bytes).unwrap();
+        assert_eq!(header_len, header.header_bytes());
+        assert_eq!(parsed.shape, header.shape);
+        assert_eq!(parsed.nlevels, header.nlevels);
+        assert_eq!(parsed.codec, header.codec);
+        assert_eq!(parsed.dtype_bytes, 8);
+        assert_eq!(parsed.segments, header.segments);
+        assert_eq!(parsed.quant, header.quant);
+        assert_eq!(
+            header.payload_bytes() as usize + header_len,
+            bytes.len(),
+            "payload accounting"
+        );
+    }
+
+    #[test]
+    fn f32_container_roundtrip_and_dtype_check() {
+        let n = 17;
+        let field = Tensor::<f32>::from_fn(&[n, n], |idx| {
+            ((idx[0] as f32) * 0.3).sin() + (idx[1] as f32) * 0.01
+        });
+        let h = Hierarchy::uniform(field.shape());
+        let mut w = ProgressiveWriter::<f32>::new(h.clone(), Codec::Zlib);
+        let (bytes, header) = w.write(&field, 1e-2).unwrap();
+        assert_eq!(header.dtype_bytes, 4);
+        assert_eq!(peek_dtype(&bytes).unwrap(), 4);
+        let mut r = ProgressiveReader::<f32>::open(&bytes).unwrap();
+        let full = r.retrieve(r.nclasses()).unwrap();
+        assert!(stats::linf(full.data(), field.data()) <= 1e-2);
+        // opening with the wrong scalar type must fail cleanly
+        assert!(ProgressiveReader::<f64>::open(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_anywhere_is_an_error_never_a_panic() {
+        let (_, bytes, _) = write_container(9, Codec::HuffRle, 1e-2);
+        for len in 0..bytes.len() {
+            assert!(
+                ProgressiveReader::<f64>::open(&bytes[..len]).is_err(),
+                "truncation to {len} bytes must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn header_corruption_is_an_error_never_a_panic() {
+        let (_, bytes, header) = write_container(9, Codec::Zlib, 1e-2);
+        // flip every byte of the header (and a few payload bytes) in turn;
+        // opening may succeed only for payload flips — it must never panic
+        let probe = header.header_bytes() + 16.min(bytes.len() - header.header_bytes());
+        for i in 0..probe {
+            for bit in [0x01u8, 0x80] {
+                let mut corrupt = bytes.clone();
+                corrupt[i] ^= bit;
+                if let Ok(mut r) = ProgressiveReader::<f64>::open(&corrupt) {
+                    let _ = r.retrieve(r.nclasses());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_garbage_rejected() {
+        let mut rng = Rng::new(77);
+        for len in [0usize, 1, 7, 28, 64, 200, 1000] {
+            let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            assert!(ProgressiveReader::<f64>::open(&garbage).is_err());
+        }
+        // right magic, garbage tail
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        let tail: Vec<u8> = (0..100).map(|_| rng.below(256) as u8).collect();
+        buf.extend(tail);
+        assert!(ProgressiveReader::<f64>::open(&buf).is_err());
+    }
+
+    #[test]
+    fn non_uniform_hierarchy_rejected_by_writer() {
+        let shape = [9usize];
+        let coords = vec![vec![0.0, 0.05, 0.1, 0.2, 0.4, 0.6, 0.8, 0.9, 1.0]];
+        let h = Hierarchy::new(&shape, coords, None);
+        let field = Tensor::<f64>::from_fn(&shape, |idx| idx[0] as f64);
+        let mut w = ProgressiveWriter::<f64>::new(h, Codec::Zlib);
+        assert!(w.write(&field, 1e-3).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (field, _, header) = write_container(17, Codec::Zlib, 1e-3);
+        let path = std::env::temp_dir().join("mgr_container_unit_test.mgr");
+        let h = Hierarchy::uniform(field.shape());
+        let mut w = ProgressiveWriter::<f64>::new(h, Codec::Zlib);
+        let on_disk = w.write_file(&field, 1e-3, &path).unwrap();
+        assert_eq!(on_disk.segments, header.segments);
+        let mut r = ProgressiveReader::<f64>::open_file(&path).unwrap();
+        let full = r.retrieve(r.nclasses()).unwrap();
+        assert!(stats::linf(full.data(), field.data()) <= 1e-3);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,15 +1,22 @@
-//! Multi-tier storage and parallel-I/O cost models (paper Fig 1, §5.1).
+//! Multi-tier storage, parallel-I/O cost models, and the progressive
+//! refactored-data container (paper Fig 1, §5.1).
 //!
 //! The showcase workflows move coefficient classes through storage tiers
 //! (NVM burst buffer → parallel filesystem → archive) and over parallel
 //! I/O (the paper's ADIOS-on-GPFS runs at 4096/512 ranks). We model both
 //! with published Summit bandwidth figures; class *placement* is a real
 //! optimization problem this module solves greedily by value density.
+//! The [`container`] module gives the classes a byte-level form: a
+//! versioned header plus independently decodable per-class segments, so
+//! the placement operates on real entropy-coded sizes and readers
+//! retrieve fidelity prefixes without decoding the rest.
 
+pub mod container;
 pub mod iosim;
 pub mod mover;
 pub mod tier;
 
+pub use container::{ContainerHeader, ProgressiveReader, ProgressiveWriter, SegmentMeta};
 pub use iosim::ParallelFs;
 pub use mover::{place_classes, Placement};
 pub use tier::{StorageTier, TierSpec};

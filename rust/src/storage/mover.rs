@@ -4,6 +4,10 @@
 //! the most reconstruction value per byte, so they belong on the fastest
 //! tier. The mover packs classes greedily by that value density subject
 //! to tier capacities — the "intelligent movement" of the paper's Fig 1.
+//! Class byte sizes come from the real entropy-coded container segments
+//! (see [`crate::storage::container`]), not from raw value counts.
+
+use anyhow::{anyhow, Result};
 
 use crate::storage::tier::{StorageTier, TierSpec};
 
@@ -14,49 +18,72 @@ pub struct Placement {
     pub assignment: Vec<StorageTier>,
     /// per class: bytes
     pub bytes: Vec<u64>,
+    /// Classes that fit no tier and were force-placed on the last
+    /// (deepest) tier past its remaining capacity. Empty when every class
+    /// was placed within capacity.
+    pub over_capacity: Vec<usize>,
 }
 
 impl Placement {
+    /// Whether class `k` was force-placed past the deepest tier's capacity.
+    pub fn is_over_capacity(&self, k: usize) -> bool {
+        self.over_capacity.contains(&k)
+    }
+
     /// Time to retrieve classes `0..keep` (reads can overlap across tiers;
-    /// we charge the max per tier + per-tier sums).
-    pub fn retrieval_time(&self, tiers: &[TierSpec], keep: usize) -> f64 {
-        let mut per_tier = std::collections::BTreeMap::new();
+    /// we charge the max per tier + per-tier sums). Errors if a placed
+    /// tier has no spec in `tiers` instead of panicking.
+    pub fn retrieval_time(&self, tiers: &[TierSpec], keep: usize) -> Result<f64> {
+        let mut per_tier: Vec<(StorageTier, f64)> = Vec::new();
         for (k, tier) in self.assignment.iter().enumerate().take(keep) {
-            *per_tier.entry(format!("{tier:?}")).or_insert(0.0f64) += self.bytes[k] as f64;
+            match per_tier.iter_mut().find(|(t, _)| t == tier) {
+                Some((_, bytes)) => *bytes += self.bytes[k] as f64,
+                None => per_tier.push((*tier, self.bytes[k] as f64)),
+            }
         }
-        per_tier
-            .iter()
-            .map(|(name, &bytes)| {
-                let spec = tiers
-                    .iter()
-                    .find(|t| format!("{:?}", t.tier) == *name)
-                    .expect("tier spec missing");
-                spec.read_time(bytes)
-            })
-            .fold(0.0, f64::max)
+        let mut worst = 0.0f64;
+        for (tier, bytes) in per_tier {
+            let spec = tiers
+                .iter()
+                .find(|t| t.tier == tier)
+                .ok_or_else(|| anyhow!("no TierSpec provided for placed tier {tier:?}"))?;
+            worst = worst.max(spec.read_time(bytes));
+        }
+        Ok(worst)
     }
 }
 
 /// Greedy placement: iterate classes coarse→fine (decreasing value
-/// density), filling the fastest tier with remaining capacity.
+/// density), filling the fastest tier with remaining capacity. A class
+/// that fits no tier is force-placed on the last tier, its capacity is
+/// still deducted (saturating), and the class is recorded in
+/// [`Placement::over_capacity`] so callers see the over-commitment.
 pub fn place_classes(class_bytes: &[u64], tiers: &[TierSpec]) -> Placement {
+    assert!(!tiers.is_empty(), "at least one storage tier is required");
     let mut remaining: Vec<u64> = tiers.iter().map(|t| t.capacity).collect();
     let mut assignment = Vec::with_capacity(class_bytes.len());
-    for &b in class_bytes {
-        let mut placed = None;
-        for (i, t) in tiers.iter().enumerate() {
-            if remaining[i] >= b {
+    let mut over_capacity = Vec::new();
+    for (k, &b) in class_bytes.iter().enumerate() {
+        match remaining.iter().position(|&r| r >= b) {
+            Some(i) => {
                 remaining[i] -= b;
-                placed = Some(t.tier);
-                break;
+                assignment.push(tiers[i].tier);
+            }
+            None => {
+                // nothing fits: force onto the deepest tier, but keep the
+                // accounting honest so later classes do not reuse the
+                // capacity this one consumed
+                let last = tiers.len() - 1;
+                remaining[last] = remaining[last].saturating_sub(b);
+                assignment.push(tiers[last].tier);
+                over_capacity.push(k);
             }
         }
-        // nothing fits anywhere but the (unbounded) last tier
-        assignment.push(placed.unwrap_or(tiers.last().unwrap().tier));
     }
     Placement {
         assignment,
         bytes: class_bytes.to_vec(),
+        over_capacity,
     }
 }
 
@@ -84,6 +111,7 @@ mod tests {
         assert_eq!(p.assignment[1], StorageTier::BurstBuffer);
         // the 3.5 MB class overflows the 1 MiB buffer
         assert_eq!(p.assignment[4], StorageTier::ParallelFs);
+        assert!(p.over_capacity.is_empty());
     }
 
     #[test]
@@ -93,9 +121,59 @@ mod tests {
         let p = place_classes(&sizes, &t);
         let mut last = 0.0;
         for keep in 1..=sizes.len() {
-            let rt = p.retrieval_time(&t, keep);
+            let rt = p.retrieval_time(&t, keep).unwrap();
             assert!(rt >= last - 1e-12);
             last = rt;
         }
+    }
+
+    #[test]
+    fn overflow_deducts_capacity_and_is_surfaced() {
+        // regression: a class that fit no tier used to fall back to the
+        // last tier WITHOUT deducting its capacity, so later classes were
+        // placed against stale accounting and a finite deep tier could be
+        // silently over-committed
+        let finite = vec![TierSpec {
+            capacity: 100,
+            ..TierSpec::archive()
+        }];
+        let p = place_classes(&[150, 80], &finite);
+        assert_eq!(p.assignment, vec![StorageTier::Archive, StorageTier::Archive]);
+        // class 0 over-commits the tier (150 > 100) and exhausts it, so
+        // class 1 (80 bytes) must ALSO be flagged: stale accounting would
+        // have claimed it still fits
+        assert_eq!(p.over_capacity, vec![0, 1]);
+        assert!(p.is_over_capacity(0) && p.is_over_capacity(1));
+    }
+
+    #[test]
+    fn overflow_class_does_not_block_smaller_following_classes() {
+        let two = vec![
+            TierSpec {
+                capacity: 100,
+                ..TierSpec::burst_buffer()
+            },
+            TierSpec {
+                capacity: 100,
+                ..TierSpec::archive()
+            },
+        ];
+        let p = place_classes(&[150, 80], &two);
+        // class 0 fits neither tier -> archive, over capacity; class 1
+        // still fits the untouched burst buffer
+        assert_eq!(
+            p.assignment,
+            vec![StorageTier::Archive, StorageTier::BurstBuffer]
+        );
+        assert_eq!(p.over_capacity, vec![0]);
+    }
+
+    #[test]
+    fn retrieval_time_missing_spec_is_an_error() {
+        // regression: a placed tier absent from the spec list used to
+        // panic via expect("tier spec missing")
+        let p = place_classes(&[10], &[TierSpec::archive()]);
+        assert!(p.retrieval_time(&[TierSpec::burst_buffer()], 1).is_err());
+        assert!(p.retrieval_time(&[TierSpec::archive()], 1).is_ok());
     }
 }

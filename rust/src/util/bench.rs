@@ -110,6 +110,9 @@ pub struct ReportRow {
     pub gbps: f64,
     /// Speedup vs the serial variant of the same cell, when applicable.
     pub speedup: Option<f64>,
+    /// Output size in bytes, when the row describes an encoder (the
+    /// container bench's per-class size breakdown).
+    pub bytes: Option<u64>,
 }
 
 /// Collected bench rows plus run metadata, serializable to JSON.
@@ -169,7 +172,8 @@ impl BenchReport {
             let shape: Vec<String> = r.shape.iter().map(|n| n.to_string()).collect();
             out.push_str(&format!(
                 "    {{\"kernel\": {}, \"variant\": {}, \"dtype\": {}, \"shape\": [{}], \
-                 \"axis\": {}, \"median_s\": {}, \"mad_rel\": {}, \"gbps\": {}, \"speedup\": {}}}{}\n",
+                 \"axis\": {}, \"median_s\": {}, \"mad_rel\": {}, \"gbps\": {}, \"speedup\": {}, \
+                 \"bytes\": {}}}{}\n",
                 json_str(&r.kernel),
                 json_str(&r.variant),
                 json_str(&r.dtype),
@@ -179,6 +183,7 @@ impl BenchReport {
                 json_f64(r.mad_rel),
                 json_f64(r.gbps),
                 r.speedup.map_or("null".to_string(), json_f64),
+                r.bytes.map_or("null".to_string(), |b| b.to_string()),
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
         }
@@ -222,6 +227,7 @@ mod tests {
             mad_rel: 0.01,
             gbps: 13.7,
             speedup: Some(1.9),
+            bytes: Some(4096),
         });
         rep.push(ReportRow {
             kernel: "LPK".into(),
@@ -233,13 +239,16 @@ mod tests {
             mad_rel: 0.0,
             gbps: 4.2,
             speedup: None,
+            bytes: None,
         });
         let doc = crate::util::json::parse(&rep.to_json()).expect("valid JSON");
         assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "unit \"test\"");
         let rows = doc.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("axis").unwrap().as_usize(), Some(0));
+        assert_eq!(rows[0].get("bytes").unwrap().as_usize(), Some(4096));
         assert!(rows[1].get("speedup").unwrap().as_f64().is_none());
+        assert!(rows[1].get("bytes").unwrap().as_usize().is_none());
         assert!((rows[0].get("speedup").unwrap().as_f64().unwrap() - 1.9).abs() < 1e-9);
     }
 

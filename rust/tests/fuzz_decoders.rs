@@ -1,0 +1,173 @@
+//! Deterministic corrupt/truncated-input fuzzing of every byte-stream
+//! decoder: `huffman::decode`, `rle::decode`, `varint::decode`, and the
+//! progressive-container reader. The contract under test: a malformed
+//! byte stream returns `Err` (or, where a truncation happens to leave a
+//! self-consistent stream, the original data) — it must **never** panic,
+//! abort on a huge allocation, or overflow.
+
+use mgr::compress::{huffman, rle, varint, Codec};
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::storage::{ProgressiveReader, ProgressiveWriter};
+use mgr::util::rng::Rng;
+
+/// Representative quantized-coefficient streams: sparse (long zero runs),
+/// dense, adversarial magnitudes, and empty.
+fn sample_streams() -> Vec<Vec<i64>> {
+    let mut rng = Rng::new(42);
+    let mut sparse = vec![0i64; 4000];
+    for _ in 0..40 {
+        let i = rng.below(4000);
+        sparse[i] = (rng.normal() * 100.0) as i64;
+    }
+    let dense: Vec<i64> = (0..2000).map(|_| (rng.normal() * 1000.0) as i64).collect();
+    vec![
+        sparse,
+        dense,
+        vec![i64::MIN, i64::MAX, 0, -1, 1],
+        vec![7],
+        Vec::new(),
+    ]
+}
+
+fn mutations(buf: &[u8], rng: &mut Rng, n: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut m = buf.to_vec();
+        if m.is_empty() {
+            continue;
+        }
+        match rng.below(3) {
+            0 => {
+                // flip a random bit
+                let i = rng.below(m.len());
+                m[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                // overwrite a random byte
+                let i = rng.below(m.len());
+                m[i] = rng.below(256) as u8;
+            }
+            _ => {
+                // splice a random chunk out of the middle
+                let i = rng.below(m.len());
+                let l = 1 + rng.below(8).min(m.len() - i - 1);
+                m.drain(i..i + l);
+            }
+        }
+        out.push(m);
+    }
+    out
+}
+
+#[test]
+fn varint_decoder_never_panics() {
+    let mut rng = Rng::new(1);
+    for vals in sample_streams() {
+        let enc = varint::encode(&vals);
+        assert_eq!(varint::decode(&enc).unwrap(), vals);
+        // every truncation of a varint stream is malformed
+        for len in 0..enc.len() {
+            assert!(varint::decode(&enc[..len]).is_err(), "truncated to {len}");
+        }
+        for m in mutations(&enc, &mut rng, 200) {
+            let _ = varint::decode(&m); // must not panic
+        }
+    }
+}
+
+#[test]
+fn rle_decoder_never_panics() {
+    let mut rng = Rng::new(2);
+    for vals in sample_streams() {
+        let enc = rle::encode(&vals);
+        assert_eq!(rle::decode(&enc).unwrap(), vals);
+        for len in 0..enc.len() {
+            // a truncation either fails or (when only the trailing
+            // zero-run token is cut after the stream is already complete)
+            // still decodes to exactly the original values
+            if let Ok(got) = rle::decode(&enc[..len]) {
+                assert_eq!(got, vals, "truncated to {len}");
+            }
+        }
+        for m in mutations(&enc, &mut rng, 200) {
+            let _ = rle::decode(&m); // must not panic or huge-alloc
+        }
+    }
+}
+
+#[test]
+fn huffman_decoder_never_panics() {
+    let mut rng = Rng::new(3);
+    let mut payloads: Vec<Vec<u8>> = sample_streams()
+        .iter()
+        .map(|v| rle::encode(v))
+        .collect();
+    payloads.push((0..4096).map(|_| rng.below(256) as u8).collect());
+    for data in payloads {
+        let enc = huffman::encode(&data);
+        assert_eq!(huffman::decode(&enc).unwrap(), data);
+        // dense sweep for small buffers, strided for large ones (each
+        // truncated decode is O(len), so the full sweep is quadratic)
+        let step = (enc.len() / 512).max(1);
+        for len in (0..enc.len()).step_by(step) {
+            if let Ok(got) = huffman::decode(&enc[..len]) {
+                assert_eq!(got, data, "truncated to {len}");
+            }
+        }
+        for m in mutations(&enc, &mut rng, 300) {
+            let _ = huffman::decode(&m); // must not panic
+        }
+    }
+}
+
+#[test]
+fn decoders_reject_random_garbage() {
+    let mut rng = Rng::new(4);
+    for len in [1usize, 8, 64, 137, 512, 4096] {
+        for _ in 0..50 {
+            let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = varint::decode(&garbage);
+            let _ = rle::decode(&garbage);
+            let _ = huffman::decode(&garbage);
+            assert!(ProgressiveReader::<f64>::open(&garbage).is_err());
+        }
+    }
+}
+
+#[test]
+fn container_reader_never_panics() {
+    let field = Tensor::<f64>::from_fn(&[17, 17], |idx| {
+        ((idx[0] as f64) * 0.37).sin() + ((idx[1] as f64) * 0.21).cos()
+    });
+    let h = Hierarchy::uniform(field.shape());
+    let mut rng = Rng::new(5);
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        let mut w = ProgressiveWriter::<f64>::new(h.clone(), codec);
+        let (container, _) = w.write(&field, 1e-3).unwrap();
+
+        // full open + retrieve works
+        let mut r = ProgressiveReader::<f64>::open(&container).unwrap();
+        for keep in 1..=r.nclasses() {
+            r.retrieve(keep).unwrap();
+        }
+
+        // every truncation is rejected (the segment table pins the exact
+        // payload length)
+        for len in 0..container.len() {
+            assert!(
+                ProgressiveReader::<f64>::open(&container[..len]).is_err(),
+                "{codec:?} truncated to {len}"
+            );
+        }
+
+        // random corruption: open may fail, or succeed with a payload
+        // whose retrieval fails — neither path may panic
+        for m in mutations(&container, &mut rng, 500) {
+            if let Ok(mut r) = ProgressiveReader::<f64>::open(&m) {
+                for keep in 1..=r.nclasses() {
+                    let _ = r.retrieve(keep);
+                }
+            }
+        }
+    }
+}

@@ -6,11 +6,9 @@
 use mgr::compress::{Codec, MgardCompressor};
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec, ParallelRefactorer};
 use mgr::grid::{pad, Hierarchy, Tensor};
-use mgr::refactor::{
-    class_norms, recompose_with_classes, select_classes, split_classes, Refactorer,
-};
+use mgr::refactor::{class_norms, recompose_with_classes, select_classes, Refactorer};
 use mgr::sim::GrayScott;
-use mgr::storage::{place_classes, ParallelFs, TierSpec};
+use mgr::storage::{place_classes, ParallelFs, ProgressiveReader, ProgressiveWriter, TierSpec};
 use mgr::util::stats::{linf, rmse, value_range};
 use mgr::vis::iso_surface_area;
 
@@ -22,16 +20,23 @@ fn grayscott_field(n: usize) -> Tensor<f64> {
 
 #[test]
 fn fig1_workflow_end_to_end() {
-    // simulate -> refactor -> split classes -> place on tiers ->
-    // progressive retrieval -> accuracy vs bytes
+    // simulate -> refactor -> container (per-class segments) -> place the
+    // REAL entropy-coded byte sizes on tiers -> progressive retrieval ->
+    // accuracy vs bytes
     let n = 33;
     let field = grayscott_field(n);
     let h = Hierarchy::uniform(field.shape());
-    let mut dec = field.clone();
-    Refactorer::new(h.clone()).decompose(&mut dec);
+    let eb = 1e-6 * value_range(field.data());
+    let mut writer = ProgressiveWriter::<f64>::new(h.clone(), Codec::Zlib);
+    let (container, header) = writer.write(&field, eb).unwrap();
 
-    let classes = split_classes(&dec, &h);
-    let class_bytes: Vec<u64> = classes.iter().map(|c| (c.len() * 8) as u64).collect();
+    // real compressed segment sizes, not synthetic value counts
+    let class_bytes: Vec<u64> = header.segments.iter().map(|s| s.bytes).collect();
+    assert!(class_bytes.iter().all(|&b| b > 0));
+    assert!(
+        class_bytes.iter().sum::<u64>() < field.nbytes() as u64,
+        "entropy-coded classes must beat raw bytes on smooth data"
+    );
     let tiers = vec![
         TierSpec::burst_buffer(),
         TierSpec::parallel_fs(),
@@ -43,16 +48,57 @@ fn fig1_workflow_end_to_end() {
         placement.assignment[0],
         mgr::storage::StorageTier::BurstBuffer
     );
+    assert!(placement.over_capacity.is_empty());
 
-    // progressive retrieval: more classes -> more bytes, less error
+    // progressive retrieval from the container: more classes -> more
+    // bytes, less error
+    let mut reader = ProgressiveReader::<f64>::open(&container).unwrap();
     let mut last_err = f64::INFINITY;
     for keep in 1..=h.nclasses() {
-        let approx = recompose_with_classes(&dec, &h, keep);
+        let approx = reader.retrieve(keep).unwrap();
         let err = rmse(approx.data(), field.data());
         assert!(err <= last_err + 1e-12, "keep={keep}");
         last_err = err;
     }
-    assert!(last_err < 1e-12, "full retrieval must be lossless");
+    assert!(last_err <= eb, "full retrieval must satisfy the error bound");
+
+    // the in-memory path must agree with the container path on exact data
+    let mut dec = field.clone();
+    Refactorer::new(h.clone()).decompose(&mut dec);
+    let exact = recompose_with_classes(&dec, &h, h.nclasses());
+    assert!(linf(exact.data(), field.data()) < 1e-12);
+}
+
+#[test]
+fn container_file_roundtrip_with_error_selection() {
+    let n = 33;
+    let field = grayscott_field(n);
+    let h = Hierarchy::uniform(field.shape());
+    let range = value_range(field.data());
+    let eb = 1e-4 * range;
+    let path = std::env::temp_dir().join("mgr_integration_container.mgr");
+
+    let mut writer = ProgressiveWriter::<f64>::new(h.clone(), Codec::HuffRle);
+    let header = writer.write_file(&field, eb, &path).unwrap();
+    let mut reader = ProgressiveReader::<f64>::open_file(&path).unwrap();
+    assert_eq!(reader.nclasses(), h.nclasses());
+
+    // recorded annotations equal measured errors, and --error semantics
+    // pick the smallest satisfying prefix
+    for (k, seg) in header.segments.iter().enumerate() {
+        let approx = reader.retrieve(k + 1).unwrap();
+        assert_eq!(seg.linf, linf(approx.data(), field.data()), "class {k}");
+    }
+    let target = 1e-2 * range;
+    let (keep, approx) = reader.retrieve_error(target).unwrap();
+    assert!(linf(approx.data(), field.data()) <= target);
+    if keep > 1 {
+        assert!(
+            header.segments[keep - 2].linf > target,
+            "a smaller prefix would also have satisfied the target"
+        );
+    }
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
@@ -185,14 +231,14 @@ fn spatiotemporal_vs_spatial_compression_tradeoff() {
     for s in &snaps {
         let mut d = s.clone();
         Refactorer::new(Hierarchy::uniform(s.shape())).decompose(&mut d);
-        let q = mgr::compress::quantize(d.data(), &quant);
+        let q = mgr::compress::quantize(d.data(), &quant).unwrap();
         spatial_bytes += zlib_len(&q);
     }
 
     // spatiotemporal: one 4-D hierarchy over the batch
     let mut d4 = st.clone();
     Refactorer::spatiotemporal(Hierarchy::uniform(st.shape())).decompose(&mut d4);
-    let q4 = mgr::compress::quantize(d4.data(), &quant);
+    let q4 = mgr::compress::quantize(d4.data(), &quant).unwrap();
     let st_bytes = zlib_len(&q4);
 
     assert!(
