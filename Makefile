@@ -30,11 +30,14 @@ bench-container:
 	cargo bench --bench container_progressive
 
 # Exercise the progressive-container CLI round trip: write a .mgr
-# container, retrieve a class prefix by count and by error target.
+# container, retrieve a class prefix by count, by error target, and by
+# byte budget, then show the tier placement plan.
 container-demo:
 	cargo run --release -- refactor --shape 33x33x33 --eb 1e-4 --out /tmp/mgr-demo.mgr
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgr --keep 3
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgr --error 1e-2
+	cargo run --release -- retrieve --in /tmp/mgr-demo.mgr --bytes 65536
+	cargo run --release -- plan --in /tmp/mgr-demo.mgr
 	rm -f /tmp/mgr-demo.mgr
 
 lint:
@@ -42,4 +45,5 @@ lint:
 	cargo fmt --check
 
 doc:
-	cargo doc --no-deps
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo test --doc -q

@@ -9,8 +9,9 @@
 //! device models in `mgr::simgpu` (see DESIGN.md §Substitutions); measured
 //! quantities run real compute on this host.
 
+use mgr::api::{AnyTensor, Session};
 use mgr::baseline::BaselineRefactorer;
-use mgr::compress::{Codec, MgardCompressor};
+use mgr::compress::Codec;
 use mgr::grid::{Hierarchy, Tensor};
 use mgr::refactor::{recompose_with_classes, split_classes, Refactorer};
 use mgr::sim::GrayScott;
@@ -199,9 +200,15 @@ fn fig14() {
         // per-GPU slab: 8+1 nodes thick; a group's joint slab is ~8s+1
         let thickness = (8 * s).next_power_of_two().min(64);
         let slab_shape = [thickness + 1, n, n];
-        let slab = Tensor::from_fn(&slab_shape, |idx| field.get(&[idx[0], idx[1], idx[2]]));
-        let mut c = MgardCompressor::new(Hierarchy::uniform(&slab_shape), Codec::Zlib);
-        let blob = c.compress(&slab, eb).unwrap();
+        let slab: AnyTensor =
+            Tensor::from_fn(&slab_shape, |idx| field.get(&[idx[0], idx[1], idx[2]])).into();
+        let session = Session::builder()
+            .shape(&slab_shape)
+            .codec(Codec::Zlib)
+            .error_bound(eb)
+            .build()
+            .unwrap();
+        let blob = session.compress(&slab).unwrap();
         println!("{:<6} {:>18.1} {:>22.2}", format!("{k}x{s}"), tp / 1e9, blob.ratio());
     }
 }
@@ -230,11 +237,16 @@ fn fig15() {
             let mut total_bytes = 0usize;
             let mut secs = 0.0;
             for s in snaps.iter().take(4) {
-                let mut c = MgardCompressor::new(Hierarchy::uniform(s.shape()), Codec::Zlib);
-                let blob = c.compress(s, eb).unwrap();
+                let session = Session::builder()
+                    .shape(s.shape())
+                    .codec(Codec::Zlib)
+                    .error_bound(eb)
+                    .build()
+                    .unwrap();
+                let blob = session.compress(&s.clone().into()).unwrap();
                 total_payload += blob.payload.len();
                 total_bytes += blob.original_bytes;
-                secs += c.stats.decompose_s;
+                secs += session.stats().decompose_s;
             }
             (
                 total_bytes as f64 / total_payload as f64,
@@ -464,11 +476,20 @@ fn fig19() {
         enc.finish().unwrap()
     });
 
-    // "GPU" path: optimized native core (+ the same zlib on "CPU")
-    let mut c = MgardCompressor::new(h, Codec::Zlib);
-    let blob = c.compress(&field, eb).unwrap();
-    let back = c.decompress(&blob).unwrap();
-    assert!(linf(back.data(), field.data()) <= eb);
+    // "GPU" path: optimized native core (+ the same zlib on "CPU"),
+    // through the facade
+    let session = Session::builder()
+        .shape(field.shape())
+        .codec(Codec::Zlib)
+        .error_bound(eb)
+        .build()
+        .unwrap();
+    let any_field: AnyTensor = field.clone().into();
+    let blob = session.compress(&any_field).unwrap();
+    let compress = session.stats();
+    let back = session.decompress(&blob).unwrap();
+    assert!(back.linf_to(&any_field).unwrap() <= eb);
+    let stats = session.stats();
 
     println!("  compression ({}^3 f64, eb 1e-3·range, ratio {:.1}x):", n, blob.ratio());
     println!("    {:<22} {:>12} {:>12}", "stage", "CPU path ms", "GPU path ms");
@@ -476,30 +497,30 @@ fn fig19() {
         "    {:<22} {:>12.1} {:>12.1}",
         "data decomposition",
         cpu_decompose * 1e3,
-        c.stats.decompose_s * 1e3
+        compress.decompose_s * 1e3
     );
     println!(
         "    {:<22} {:>12.1} {:>12.1}",
         "quantization",
         cpu_quant * 1e3,
-        c.stats.quantize_s * 1e3
+        compress.quantize_s * 1e3
     );
     println!(
         "    {:<22} {:>12.1} {:>12.1}",
         "zlib (stays on CPU)",
         cpu_zlib * 1e3,
-        c.stats.encode_s * 1e3
+        compress.encode_s * 1e3
     );
     println!(
         "    {:<22} {:>12.1} {:>12.1}",
         "TOTAL",
         (cpu_decompose + cpu_quant + cpu_zlib) * 1e3,
-        c.stats.compress_total() * 1e3
+        compress.compress_total() * 1e3
     );
     println!(
         "  decompression (GPU path): decode {:.1} ms, dequantize {:.1} ms, recompose {:.1} ms",
-        c.stats.decode_s * 1e3,
-        c.stats.dequantize_s * 1e3,
-        c.stats.recompose_s * 1e3
+        stats.decode_s * 1e3,
+        stats.dequantize_s * 1e3,
+        stats.recompose_s * 1e3
     );
 }

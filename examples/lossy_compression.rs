@@ -1,19 +1,20 @@
 //! Showcase 2 (§5.2): MGARD-style error-bounded lossy compression.
 //!
 //! Compresses Gray-Scott data at several error bounds with both lossless
-//! back-ends, verifies the bound, and prints the Fig-19-style stage
-//! breakdown for the baseline-CPU vs optimized ("GPU-offloaded") paths.
+//! back-ends through the unified facade (`mgr::api::Session`), verifies
+//! the bound, and prints the Fig-19-style stage breakdown for the
+//! baseline-CPU vs optimized ("GPU-offloaded") paths.
 //!
 //! ```text
 //! cargo run --release --example lossy_compression -- [--n 65] [--eb 1e-3]
 //! ```
 
+use mgr::api::{AnyTensor, Codec, Session};
 use mgr::baseline::BaselineRefactorer;
-use mgr::compress::{Codec, MgardCompressor};
 use mgr::grid::Hierarchy;
 use mgr::sim::GrayScott;
 use mgr::util::cli::Args;
-use mgr::util::stats::{linf, time, value_range};
+use mgr::util::stats::{time, value_range};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -21,9 +22,9 @@ fn main() -> anyhow::Result<()> {
     println!("Gray-Scott {n}^3 f64, classic parameters, 120 steps");
     let mut sim = GrayScott::new(n, 5);
     sim.step(120);
-    let field = sim.v_field();
-    let range = value_range(field.data());
-    let h = Hierarchy::uniform(field.shape());
+    let raw = sim.v_field();
+    let range = value_range(raw.data());
+    let field: AnyTensor = raw.clone().into();
 
     println!(
         "\n{:<10} {:<10} {:>10} {:>12} {:>12} {:>12}",
@@ -31,19 +32,24 @@ fn main() -> anyhow::Result<()> {
     );
     for rel in [1e-2, 1e-3, 1e-4, 1e-5] {
         let eb = rel * range;
-        for codec in [Codec::Zlib, Codec::HuffRle] {
-            let mut c = MgardCompressor::new(h.clone(), codec);
-            let blob = c.compress(&field, eb)?;
-            let back = c.decompress(&blob)?;
-            let err = linf(back.data(), field.data());
+        for codec in Codec::ALL {
+            let session = Session::builder()
+                .shape(field.shape())
+                .codec(codec)
+                .error_bound(eb)
+                .build()?;
+            let blob = session.compress(&field)?;
+            let compress = session.stats();
+            let back = session.decompress(&blob)?;
+            let err = back.linf_to(&field)?;
             assert!(err <= eb, "error bound violated");
             println!(
                 "{:<10.0e} {:<10} {:>9.1}x {:>12.1} {:>12.1} {:>12.2e}",
                 rel,
                 codec.name(),
                 blob.ratio(),
-                c.stats.compress_total() * 1e3,
-                c.stats.decompress_total() * 1e3,
+                compress.compress_total() * 1e3,
+                session.stats().decompress_total() * 1e3,
                 err / range
             );
         }
@@ -52,14 +58,26 @@ fn main() -> anyhow::Result<()> {
     // Fig 19 stage view: where does the time go, CPU vs optimized path?
     let eb = args.get_f64("eb", 1e-3)? * range;
     println!("\nstage breakdown at eb = 1e-3·range (paper Fig 19):");
-    let base = BaselineRefactorer::new(h.clone());
-    let mut t = field.clone();
+    let base = BaselineRefactorer::new(Hierarchy::uniform(field.shape()));
+    let mut t = raw;
     let (_, base_s) = time(|| base.decompose(&mut t));
-    let mut c = MgardCompressor::new(h, Codec::Zlib);
-    let _ = c.compress(&field, eb)?;
-    println!("  decomposition: baseline {:.1} ms -> optimized {:.1} ms ({:.1}x)",
-        base_s * 1e3, c.stats.decompose_s * 1e3, base_s / c.stats.decompose_s);
-    println!("  quantization:  {:.1} ms   zlib: {:.1} ms",
-        c.stats.quantize_s * 1e3, c.stats.encode_s * 1e3);
+    let session = Session::builder()
+        .shape(field.shape())
+        .codec(Codec::Zlib)
+        .error_bound(eb)
+        .build()?;
+    let _ = session.compress(&field)?;
+    let stats = session.stats();
+    println!(
+        "  decomposition: baseline {:.1} ms -> optimized {:.1} ms ({:.1}x)",
+        base_s * 1e3,
+        stats.decompose_s * 1e3,
+        base_s / stats.decompose_s
+    );
+    println!(
+        "  quantization:  {:.1} ms   zlib: {:.1} ms",
+        stats.quantize_s * 1e3,
+        stats.encode_s * 1e3
+    );
     Ok(())
 }

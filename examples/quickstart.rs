@@ -68,6 +68,27 @@ fn main() -> anyhow::Result<()> {
     engine.recompose(&mut back);
     println!("\nlossless roundtrip L∞ = {:.3e}", linf(back.data(), u.data()));
 
+    // --- the same workflow through the unified facade ------------------
+    // mgr::api::Session wraps refactor/store/plan/retrieve (and the
+    // dtype dispatch) behind one dtype-erased entry point
+    use mgr::api::{AnyTensor, Fidelity, Session};
+    let session = Session::builder().shape(&shape).error_bound(1e-6).build()?;
+    let field: AnyTensor = u.clone().into();
+    let container = session.refactor(&field)?;
+    println!(
+        "\nmgr::api: refactored into a {}-byte container ({} classes)",
+        container.nbytes(),
+        container.nclasses()
+    );
+    for keep in 1..=container.nclasses() {
+        let approx = session.retrieve(&container, Fidelity::Classes(keep))?;
+        println!(
+            "  retrieve {keep} classes: L∞ {:.3e} (recorded {:.3e})",
+            approx.linf_to(&field)?,
+            container.header().segments[keep - 1].linf
+        );
+    }
+
     // --- the same decompose through the AOT-compiled PJRT artifact -----
     match EngineHandle::spawn("artifacts".into()) {
         Ok(pjrt) => {

@@ -1,20 +1,19 @@
 //! Showcase 1 (§5.1): the visualization workflow.
 //!
-//! A Gray-Scott simulation writes a progressive container; the mover
-//! places the **real entropy-coded segment sizes** across storage tiers;
-//! a visualization consumer then retrieves only as many coefficient
-//! classes from the container as its iso-surface analysis needs. Reports
-//! bytes moved, modeled parallel-I/O time (the paper's 4 TB ADIOS write)
-//! and the measured iso-surface-area accuracy.
+//! A Gray-Scott simulation is refactored through `mgr::api::Session`;
+//! `plan` places the **real entropy-coded segment sizes** across storage
+//! tiers; a visualization consumer then retrieves only as many
+//! coefficient classes as its iso-surface analysis needs. Reports bytes
+//! moved, modeled parallel-I/O time (the paper's 4 TB ADIOS write) and
+//! the measured iso-surface-area accuracy.
 //!
 //! ```text
 //! cargo run --release --example vis_workflow -- [--n 65] [--target-acc 0.95]
 //! ```
 
-use mgr::compress::Codec;
-use mgr::grid::Hierarchy;
+use mgr::api::{AnyTensor, Fidelity, Session};
 use mgr::sim::GrayScott;
-use mgr::storage::{place_classes, ParallelFs, ProgressiveReader, ProgressiveWriter, TierSpec};
+use mgr::storage::ParallelFs;
 use mgr::util::cli::Args;
 use mgr::util::stats::value_range;
 use mgr::vis::iso_surface_area;
@@ -27,54 +26,54 @@ fn main() -> anyhow::Result<()> {
     println!("== producer: Gray-Scott simulation ({n}^3) ==");
     let mut sim = GrayScott::new(n, 5);
     sim.step(150);
-    let field = sim.v_field();
-    let eb = 1e-4 * value_range(field.data());
+    let raw = sim.v_field();
+    let eb = 1e-4 * value_range(raw.data());
+    let field: AnyTensor = raw.clone().into();
 
-    let h = Hierarchy::uniform(field.shape());
-    let mut writer = ProgressiveWriter::<f64>::new(h, Codec::Zlib);
-    let (container, header) = writer.write(&field, eb)?;
+    let session = Session::builder()
+        .shape(field.shape())
+        .error_bound(eb)
+        .build()?;
+    let refactored = session.refactor(&field)?;
+    let header = refactored.header().clone();
     println!(
         "wrote {}-byte container (eb {eb:.2e}, {:.1}x over raw)",
-        container.len(),
-        field.nbytes() as f64 / container.len() as f64
+        refactored.nbytes(),
+        field.nbytes() as f64 / refactored.nbytes() as f64
     );
 
-    println!("== storage: placing {} class segments across tiers ==", header.nclasses());
-    let class_bytes: Vec<u64> = header.segments.iter().map(|s| s.bytes).collect();
-    let tiers = vec![
-        TierSpec::burst_buffer(),
-        TierSpec::parallel_fs(),
-        TierSpec::archive(),
-    ];
-    let placement = place_classes(&class_bytes, &tiers);
+    println!(
+        "== storage: placing {} class segments across tiers ==",
+        refactored.nclasses()
+    );
+    let placement = session.plan(&refactored)?;
     for (k, tier) in placement.assignment.iter().enumerate() {
         let flag = if placement.is_over_capacity(k) {
             "  (OVER CAPACITY)"
         } else {
             ""
         };
-        println!("  class {k}: {:>9} B -> {tier:?}{flag}", class_bytes[k]);
+        println!("  class {k}: {:>9} B -> {tier:?}{flag}", placement.bytes[k]);
     }
 
     println!("== consumer: iso-surface analysis ==");
     let iso = 0.25;
-    let full_area = iso_surface_area(&field, iso);
+    let full_area = iso_surface_area(&raw, iso);
     let fs = ParallelFs::alpine();
     let modeled_total = 4e12; // the paper's 4 TB file
     let total_bytes = header.payload_bytes();
-    let mut reader = ProgressiveReader::<f64>::open(&container)?;
 
-    let mut chosen = header.nclasses();
+    let mut chosen = refactored.nclasses();
     println!(
         "{:<8} {:>12} {:>12} {:>14} {:>12}",
         "classes", "% bytes", "acc %", "read(512) s", "retrieve s"
     );
-    for keep in 1..=header.nclasses() {
-        let approx = reader.retrieve(keep)?;
-        let area = iso_surface_area(&approx, iso);
+    for keep in 1..=refactored.nclasses() {
+        let approx = session.retrieve(&refactored, Fidelity::Classes(keep))?;
+        let area = iso_surface_area(approx.as_f64().expect("f64 container"), iso);
         let acc = (1.0 - (area - full_area).abs() / full_area).max(0.0);
         let frac = header.prefix_bytes(keep) as f64 / total_bytes as f64;
-        let tier_time = placement.retrieval_time(&tiers, keep)?;
+        let tier_time = placement.retrieval_time(session.tiers(), keep)?;
         println!(
             "{:<8} {:>11.2}% {:>11.1}% {:>14.1} {:>12.3}",
             keep,
@@ -91,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\n=> {:.0}% iso-area accuracy reached with {chosen}/{} classes = {:.2}% of bytes;",
         target_acc * 100.0,
-        header.nclasses(),
+        refactored.nclasses(),
         frac * 100.0
     );
     println!(

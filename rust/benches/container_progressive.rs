@@ -1,13 +1,14 @@
 //! Progressive-container bench: per-class encode/decode throughput and
 //! the entropy-coded size breakdown, plus whole-container write/read
-//! timings. Writes a machine-readable report to `BENCH_container.json`
-//! (see `docs/performance.md`).
+//! timings through the unified facade (`mgr::api::Session`). Writes a
+//! machine-readable report to `BENCH_container.json` (see
+//! `docs/performance.md`).
 
+use mgr::api::{AnyTensor, Fidelity, Session};
 use mgr::compress::{decode_stream, encode_stream, quantize, Codec, QuantMeta};
 use mgr::grid::Hierarchy;
 use mgr::refactor::{split_classes, Refactorer};
 use mgr::sim::GrayScott;
-use mgr::storage::{ProgressiveReader, ProgressiveWriter};
 use mgr::util::bench::{bench_auto, report, BenchReport, ReportRow};
 use mgr::util::stats::value_range;
 
@@ -16,15 +17,16 @@ fn main() {
     let n = 33;
     let mut sim = GrayScott::new(n, 5);
     sim.step(150);
-    let field = sim.v_field();
-    let eb = 1e-3 * value_range(field.data());
-    let h = Hierarchy::uniform(field.shape());
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let h = Hierarchy::uniform(raw.shape());
 
-    let mut dec = field.clone();
+    let mut dec = raw.clone();
     Refactorer::new(h.clone()).decompose(&mut dec);
     let classes = split_classes(&dec, &h);
     let quant = QuantMeta::for_bound(eb, h.nlevels());
 
+    let field: AnyTensor = raw.into();
     let mut rep = BenchReport::new("container_progressive");
     let shape = field.shape().to_vec();
 
@@ -90,11 +92,19 @@ fn main() {
         }
 
         // whole-container write (decompose + per-class quantize/encode +
-        // per-prefix error measurement) and full-fidelity read
-        let mut writer = ProgressiveWriter::<f64>::new(h.clone(), codec);
-        let (container, header) = writer.write(&field, eb).unwrap();
+        // per-prefix error measurement) and full-fidelity read, through
+        // the facade (the session reuses one per-dtype machine, so the
+        // loop measures steady-state writes)
+        let session = Session::builder()
+            .shape(&shape)
+            .codec(codec)
+            .error_bound(eb)
+            .build()
+            .unwrap();
+        let container = session.refactor(&field).unwrap();
+        let header = container.header().clone();
         let m = bench_auto(&format!("container write ({})", codec.name()), 0.3, || {
-            std::hint::black_box(writer.write(&field, eb).unwrap());
+            std::hint::black_box(session.refactor(&field).unwrap());
         });
         report(&m, Some(field.nbytes()));
         rep.push(ReportRow {
@@ -107,12 +117,11 @@ fn main() {
             mad_rel: m.mad_rel,
             gbps: m.gbps(field.nbytes()),
             speedup: None,
-            bytes: Some(container.len() as u64),
+            bytes: Some(container.nbytes() as u64),
         });
 
         let m = bench_auto(&format!("container read ({})", codec.name()), 0.3, || {
-            let mut reader = ProgressiveReader::<f64>::open(&container).unwrap();
-            std::hint::black_box(reader.retrieve(reader.nclasses()).unwrap());
+            std::hint::black_box(session.retrieve(&container, Fidelity::All).unwrap());
         });
         report(&m, Some(field.nbytes()));
         rep.push(ReportRow {
@@ -125,13 +134,13 @@ fn main() {
             mad_rel: m.mad_rel,
             gbps: m.gbps(field.nbytes()),
             speedup: None,
-            bytes: Some(container.len() as u64),
+            bytes: Some(container.nbytes() as u64),
         });
         println!(
             "container total: {} bytes over {} raw ({:.1}x); header {} B\n",
-            container.len(),
+            container.nbytes(),
             field.nbytes(),
-            field.nbytes() as f64 / container.len() as f64,
+            field.nbytes() as f64 / container.nbytes() as f64,
             header.header_bytes()
         );
     }

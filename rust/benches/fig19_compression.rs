@@ -1,8 +1,8 @@
 //! Fig 19 bench: MGARD compression stage timings (CPU vs optimized path)
-//! across error bounds, on real Gray-Scott data.
+//! across error bounds, on real Gray-Scott data, through the unified
+//! facade (`mgr::api::Session`).
 
-use mgr::compress::{Codec, MgardCompressor};
-use mgr::grid::Hierarchy;
+use mgr::api::{AnyTensor, Codec, Session};
 use mgr::sim::GrayScott;
 use mgr::util::bench::{bench_auto, report};
 use mgr::util::stats::value_range;
@@ -12,36 +12,42 @@ fn main() {
     let n = 65;
     let mut sim = GrayScott::new(n, 5);
     sim.step(120);
-    let field = sim.v_field();
-    let range = value_range(field.data());
-    let h = Hierarchy::uniform(field.shape());
+    let raw = sim.v_field();
+    let range = value_range(raw.data());
+    let field: AnyTensor = raw.into();
 
-    for codec in [Codec::Zlib, Codec::HuffRle] {
+    for codec in Codec::ALL {
         for rel in [1e-2, 1e-3, 1e-4] {
             let eb = rel * range;
-            let mut c = MgardCompressor::new(h.clone(), codec);
+            let session = Session::builder()
+                .shape(field.shape())
+                .codec(codec)
+                .error_bound(eb)
+                .build()
+                .unwrap();
             let mut blob = None;
             let m = bench_auto(
                 &format!("compress {n}^3 eb={rel:.0e} {}", codec.name()),
                 0.6,
                 || {
-                    blob = Some(c.compress(&field, eb).unwrap());
+                    blob = Some(session.compress(&field).unwrap());
                 },
             );
             report(&m, Some(field.nbytes()));
             let blob = blob.unwrap();
+            let stats = session.stats();
             println!(
                 "    ratio {:>6.1}x | decompose {:>6.1} ms, quantize {:>5.1} ms, encode {:>6.1} ms",
                 blob.ratio(),
-                c.stats.decompose_s * 1e3,
-                c.stats.quantize_s * 1e3,
-                c.stats.encode_s * 1e3
+                stats.decompose_s * 1e3,
+                stats.quantize_s * 1e3,
+                stats.encode_s * 1e3
             );
             let m = bench_auto(
                 &format!("decompress {n}^3 eb={rel:.0e} {}", codec.name()),
                 0.6,
                 || {
-                    let _ = c.decompress(&blob).unwrap();
+                    let _ = session.decompress(&blob).unwrap();
                 },
             );
             report(&m, Some(field.nbytes()));

@@ -1,0 +1,119 @@
+//! The unified error type of the facade.
+//!
+//! Before `mgr::api`, every subsystem surfaced its own `anyhow::Error`
+//! chain and callers could not distinguish "you passed the wrong shape"
+//! from "the container is corrupt" without string matching. The facade
+//! consolidates those module-local failures into one enum so CLI and
+//! service callers can branch on the *kind* of failure while the full
+//! underlying chain stays attached for diagnostics.
+
+use crate::api::tensor::Dtype;
+
+/// Result alias used across the facade.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Every way a [`crate::api::Session`] operation can fail.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum Error {
+    /// Builder misconfiguration: unsupported shape, missing field,
+    /// non-positive error bound, empty tier list, …
+    Build(String),
+    /// The caller combined options that contradict each other (for
+    /// example `--keep` together with `--error` on the CLI).
+    Usage(String),
+    /// A tensor's shape disagrees with the session's grid.
+    Shape {
+        /// Shape the session was built for.
+        expected: Vec<usize>,
+        /// Shape the caller handed in.
+        got: Vec<usize>,
+    },
+    /// A tensor's scalar type disagrees with the session's dtype.
+    Dtype {
+        /// Dtype the session was built for.
+        expected: Dtype,
+        /// Dtype the caller handed in.
+        got: Dtype,
+    },
+    /// A fidelity request the source cannot satisfy: class index out of
+    /// range, or a byte budget smaller than the coarsest class.
+    Fidelity(String),
+    /// Parsing or validating a progressive container failed (truncated,
+    /// foreign, or corrupt bytes — see [`crate::storage::container`]).
+    Container(anyhow::Error),
+    /// The compression pipeline failed (non-finite input, codec
+    /// mismatch, malformed payload, …).
+    Compress(anyhow::Error),
+    /// An I/O operation on a source or sink failed.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Build(msg) => write!(f, "session configuration: {msg}"),
+            Error::Usage(msg) => write!(f, "usage: {msg}"),
+            Error::Shape { expected, got } => write!(
+                f,
+                "shape mismatch: session built for {expected:?}, tensor has {got:?}"
+            ),
+            Error::Dtype { expected, got } => write!(
+                f,
+                "dtype mismatch: session built for {expected}, tensor holds {got}"
+            ),
+            Error::Fidelity(msg) => write!(f, "fidelity: {msg}"),
+            Error::Container(e) => write!(f, "container: {e:#}"),
+            Error::Compress(e) => write!(f, "compression: {e:#}"),
+            Error::Io(e) => write!(f, "i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Container(e) | Error::Compress(e) => Some(e.as_ref()),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_kind() {
+        let e = Error::Shape {
+            expected: vec![9, 9],
+            got: vec![17],
+        };
+        let s = e.to_string();
+        assert!(s.contains("[9, 9]") && s.contains("[17]"), "{s}");
+        assert!(Error::Usage("x".into()).to_string().starts_with("usage"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        // the CLI keeps using anyhow::Result — `?` must keep working
+        fn f() -> anyhow::Result<()> {
+            Err(Error::Build("bad".into()))?
+        }
+        assert!(f().unwrap_err().to_string().contains("bad"));
+    }
+
+    #[test]
+    fn source_chain_preserved() {
+        let e = Error::Container(anyhow::anyhow!("bad magic"));
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("bad magic"));
+    }
+}

@@ -1,0 +1,118 @@
+//! Fidelity selection: how much of a refactored representation to read.
+//!
+//! The paper's retrieval knobs are "how many classes" and "what error";
+//! MDR-style consumers add "how many bytes". [`Fidelity`] carries all
+//! three, and resolution against a container header happens in one place
+//! ([`crate::api::Refactored::resolve`]) instead of being re-derived by
+//! every caller.
+
+use crate::api::error::{Error, Result};
+
+/// How much fidelity to retrieve from a refactored representation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fidelity {
+    /// Everything: the full-fidelity reconstruction (error ≤ the
+    /// session's error bound).
+    All,
+    /// The first `k` coefficient classes, coarsest first (`1..=nclasses`).
+    Classes(usize),
+    /// The smallest class prefix whose **measured** L∞ annotation meets
+    /// this absolute bound; falls back to all classes when even the full
+    /// reconstruction misses it.
+    ErrorBound(f64),
+    /// The longest class prefix whose recorded segment payload fits this
+    /// many bytes. Errors when even the coarsest class does not fit.
+    ByteBudget(u64),
+}
+
+impl Fidelity {
+    /// Build a fidelity from mutually exclusive CLI-style flags
+    /// (`--keep K`, `--error E`, `--bytes B`). More than one set flag is
+    /// a [`Error::Usage`]; none means [`Fidelity::All`].
+    pub fn from_flags(
+        keep: Option<usize>,
+        error: Option<f64>,
+        bytes: Option<u64>,
+    ) -> Result<Fidelity> {
+        let set = [keep.is_some(), error.is_some(), bytes.is_some()]
+            .iter()
+            .filter(|&&b| b)
+            .count();
+        if set > 1 {
+            let mut names = Vec::new();
+            if keep.is_some() {
+                names.push("--keep");
+            }
+            if error.is_some() {
+                names.push("--error");
+            }
+            if bytes.is_some() {
+                names.push("--bytes");
+            }
+            return Err(Error::Usage(format!(
+                "{} are mutually exclusive — pick one fidelity selector",
+                names.join(" and ")
+            )));
+        }
+        if let Some(k) = keep {
+            if k == 0 {
+                return Err(Error::Usage("--keep must be at least 1".into()));
+            }
+            return Ok(Fidelity::Classes(k));
+        }
+        if let Some(e) = error {
+            if !(e.is_finite() && e > 0.0) {
+                return Err(Error::Usage(format!(
+                    "--error must be positive and finite, got {e}"
+                )));
+            }
+            return Ok(Fidelity::ErrorBound(e));
+        }
+        if let Some(b) = bytes {
+            return Ok(Fidelity::ByteBudget(b));
+        }
+        Ok(Fidelity::All)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flags_map_to_variants() {
+        assert_eq!(Fidelity::from_flags(None, None, None).unwrap(), Fidelity::All);
+        assert_eq!(
+            Fidelity::from_flags(Some(3), None, None).unwrap(),
+            Fidelity::Classes(3)
+        );
+        assert_eq!(
+            Fidelity::from_flags(None, Some(1e-3), None).unwrap(),
+            Fidelity::ErrorBound(1e-3)
+        );
+        assert_eq!(
+            Fidelity::from_flags(None, None, Some(4096)).unwrap(),
+            Fidelity::ByteBudget(4096)
+        );
+    }
+
+    #[test]
+    fn conflicting_flags_are_a_usage_error() {
+        // the regression this guards: `retrieve --keep K --error E` used
+        // to silently prefer --error and ignore --keep
+        let err = Fidelity::from_flags(Some(2), Some(1e-3), None).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Usage(_)), "{msg}");
+        assert!(msg.contains("--keep") && msg.contains("--error"), "{msg}");
+        assert!(Fidelity::from_flags(Some(2), None, Some(10)).is_err());
+        assert!(Fidelity::from_flags(None, Some(1e-3), Some(10)).is_err());
+        assert!(Fidelity::from_flags(Some(2), Some(1e-3), Some(10)).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Fidelity::from_flags(Some(0), None, None).is_err());
+        assert!(Fidelity::from_flags(None, Some(f64::NAN), None).is_err());
+        assert!(Fidelity::from_flags(None, Some(-1.0), None).is_err());
+    }
+}

@@ -1,0 +1,89 @@
+//! # `mgr::api` — the unified refactoring facade
+//!
+//! The paper's value proposition is a *single* logical operation: create
+//! data at high fidelity, then store, transfer, and retrieve it at any
+//! lower fidelity. This module is that operation's front door. A
+//! [`Session`] owns the hierarchy/compressor/container wiring that the
+//! per-module entry points (`refactor`, `compress`, `storage::container`,
+//! `storage::mover`, `coordinator`) expose individually, and erases the
+//! `f32`/`f64` generics behind [`AnyTensor`] so callers never
+//! monomorphize dispatch by hand.
+//!
+//! The four paper verbs:
+//!
+//! | verb | method | result |
+//! |---|---|---|
+//! | create  | [`Session::refactor`] (batch: [`Session::refactor_batch`]) | [`Refactored`] |
+//! | retrieve | [`Session::retrieve`] with a [`Fidelity`] | [`AnyTensor`] |
+//! | store | [`Session::store`] / [`Session::store_file`] | bytes written |
+//! | place | [`Session::plan`] | [`Placement`](crate::storage::Placement) |
+//!
+//! [`Fidelity`] carries the three retrieval knobs: a class prefix
+//! ([`Fidelity::Classes`]), an absolute error target resolved against the
+//! container's **measured** per-class annotations
+//! ([`Fidelity::ErrorBound`]), and a byte budget resolved against the
+//! recorded segment sizes ([`Fidelity::ByteBudget`]). Failures are one
+//! [`enum@Error`] with typed variants instead of five per-module error
+//! vocabularies.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use mgr::api::{AnyTensor, Dtype, Fidelity, Session};
+//! use mgr::grid::Tensor;
+//!
+//! # fn main() -> mgr::api::Result<()> {
+//! let session = Session::builder()
+//!     .shape(&[9, 9])
+//!     .dtype(Dtype::F64)
+//!     .error_bound(1e-3)
+//!     .build()?;
+//!
+//! // create at high fidelity
+//! let field: AnyTensor = Tensor::<f64>::from_fn(&[9, 9], |idx| {
+//!     (idx[0] as f64 * 0.4).sin() + idx[1] as f64 * 0.1
+//! })
+//! .into();
+//! let refactored = session.refactor(&field)?;
+//!
+//! // retrieve at lower fidelity: 2 classes, an error target, a byte budget
+//! let coarse = session.retrieve(&refactored, Fidelity::Classes(2))?;
+//! assert_eq!(coarse.shape(), field.shape());
+//! let bounded = session.retrieve(&refactored, Fidelity::ErrorBound(1e-2))?;
+//! assert!(bounded.linf_to(&field)? <= 1e-2);
+//! let budget = refactored.header().prefix_bytes(1);
+//! let cheap = session.retrieve(&refactored, Fidelity::ByteBudget(budget))?;
+//! assert_eq!(cheap, session.retrieve(&refactored, Fidelity::Classes(1))?);
+//!
+//! // store anywhere bytes go; plan placement across storage tiers
+//! let mut sink = Vec::new();
+//! session.store(&refactored, &mut sink)?;
+//! let placement = session.plan(&refactored)?;
+//! assert_eq!(placement.assignment.len(), refactored.nclasses());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Consumers that only *read* containers need no session at all:
+//! [`Refactored::from_file`] + [`Refactored::retrieve`] are
+//! self-contained (retrieval dispatches on the container's own dtype —
+//! an `f64` session retrieves `f32` containers and vice versa), and
+//! [`SessionBuilder::for_container`] rebuilds a matching producer
+//! session from the container's header when one is needed.
+
+#![warn(missing_docs)]
+
+mod error;
+mod fidelity;
+mod session;
+mod tensor;
+
+pub use error::{Error, Result};
+pub use fidelity::Fidelity;
+pub use session::{Refactored, Session, SessionBuilder};
+pub use tensor::{AnyTensor, Dtype};
+
+// One-stop imports for facade callers: the codec knob and the types the
+// verbs return.
+pub use crate::compress::{Codec, Compressed, CompressorStats};
+pub use crate::storage::{Placement, TierSpec};

@@ -1,0 +1,675 @@
+//! The refactoring session: builder, facade verbs, and the dtype-erased
+//! refactored representation.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::api::error::{Error, Result};
+use crate::api::fidelity::Fidelity;
+use crate::api::tensor::{AnyTensor, Dtype};
+use crate::compress::{Codec, Compressed, CompressorStats};
+use crate::coordinator::run_pooled;
+use crate::grid::{max_levels, Hierarchy, Tensor};
+use crate::storage::container::peek_dtype;
+use crate::storage::{
+    place_classes, ContainerHeader, Placement, ProgressiveReader, ProgressiveWriter, TierSpec,
+};
+use crate::util::Scalar;
+
+/// A refactored field: the dtype-erased, serialized progressive
+/// representation ([`crate::storage::container`] bytes plus its parsed
+/// header). This is what sessions produce, what sinks store, and what
+/// retrieval consumes — at any fidelity, without knowing the dtype.
+#[derive(Clone, Debug)]
+pub struct Refactored {
+    bytes: Vec<u8>,
+    header: ContainerHeader,
+}
+
+impl Refactored {
+    /// Wrap (and fully validate) serialized container bytes.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        // peek first so truncated/foreign files get the descriptive
+        // magic/header error rather than a generic parse failure
+        peek_dtype(&bytes).map_err(Error::Container)?;
+        let (header, _) = ContainerHeader::parse(&bytes).map_err(Error::Container)?;
+        Ok(Refactored { bytes, header })
+    }
+
+    /// Read and validate a container file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::from_bytes(std::fs::read(path.as_ref())?)
+    }
+
+    /// The parsed container header (shape, codec, quantizer, per-class
+    /// measured error annotations and segment sizes).
+    pub fn header(&self) -> &ContainerHeader {
+        &self.header
+    }
+
+    /// Scalar precision of the refactored field.
+    pub fn dtype(&self) -> Dtype {
+        // parse() validated the width, so this cannot fail
+        Dtype::from_bytes(self.header.dtype_bytes).expect("validated header")
+    }
+
+    /// Grid shape of the refactored field.
+    pub fn shape(&self) -> &[usize] {
+        &self.header.shape
+    }
+
+    /// Number of coefficient classes.
+    pub fn nclasses(&self) -> usize {
+        self.header.nclasses()
+    }
+
+    /// The serialized container (header + segment payloads).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Total serialized size in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Reconstruct a reduced-fidelity tensor from this representation,
+    /// dispatching on the container's own dtype. Self-contained: a
+    /// read-only consumer needs no [`Session`] at all
+    /// ([`Session::retrieve`] delegates here).
+    ///
+    /// Cost note: each call re-validates the container and buffers all
+    /// segment payloads before decoding the requested prefix — fine for
+    /// CLI/workflow use; a decode-time-dominated loop over many prefixes
+    /// of a huge container would want a cached reader (future work,
+    /// tracked in ROADMAP).
+    pub fn retrieve(&self, fidelity: Fidelity) -> Result<AnyTensor> {
+        let keep = self.resolve(fidelity)?;
+        match self.dtype() {
+            Dtype::F32 => retrieve_typed::<f32>(self, keep).map(AnyTensor::F32),
+            Dtype::F64 => retrieve_typed::<f64>(self, keep).map(AnyTensor::F64),
+        }
+    }
+
+    /// Resolve a fidelity request to a class-prefix length against this
+    /// container's measured per-class annotations.
+    pub fn resolve(&self, fidelity: Fidelity) -> Result<usize> {
+        let n = self.nclasses();
+        match fidelity {
+            Fidelity::All => Ok(n),
+            Fidelity::Classes(k) => {
+                if !(1..=n).contains(&k) {
+                    Err(Error::Fidelity(format!("class prefix {k} outside 1..={n}")))
+                } else {
+                    Ok(k)
+                }
+            }
+            Fidelity::ErrorBound(e) => {
+                if !(e.is_finite() && e > 0.0) {
+                    return Err(Error::Fidelity(format!(
+                        "error target must be positive and finite, got {e}"
+                    )));
+                }
+                Ok(self.header.select_keep(e))
+            }
+            Fidelity::ByteBudget(b) => self.header.select_keep_bytes(b).ok_or_else(|| {
+                Error::Fidelity(format!(
+                    "byte budget {b} is smaller than the coarsest class ({} bytes)",
+                    self.header.segments[0].bytes
+                ))
+            }),
+        }
+    }
+}
+
+/// Per-dtype compression machinery. One machine per session: the
+/// monolithic and per-class paths share its hierarchy workspaces, and a
+/// `Mutex` keeps `&self` entry points thread-safe.
+enum Machinery {
+    F32(Mutex<ProgressiveWriter<f32>>),
+    F64(Mutex<ProgressiveWriter<f64>>),
+}
+
+/// Builder for [`Session`] — see the [module docs](crate::api) for the
+/// full walkthrough.
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    shape: Option<Vec<usize>>,
+    dtype: Dtype,
+    codec: Codec,
+    error_bound: f64,
+    nlevels: Option<usize>,
+    tiers: Vec<TierSpec>,
+    workers: usize,
+    threads: Option<usize>,
+    par_threshold: Option<usize>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            shape: None,
+            dtype: Dtype::F64,
+            codec: Codec::Zlib,
+            error_bound: 1e-3,
+            nlevels: None,
+            tiers: vec![
+                TierSpec::burst_buffer(),
+                TierSpec::parallel_fs(),
+                TierSpec::archive(),
+            ],
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            threads: None,
+            par_threshold: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Grid shape of the fields this session will refactor (required;
+    /// every dimension must be `2^k + 1`).
+    pub fn shape(mut self, shape: &[usize]) -> Self {
+        self.shape = Some(shape.to_vec());
+        self
+    }
+
+    /// Scalar precision of created fields (default [`Dtype::F64`]).
+    pub fn dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Lossless back-end for the quantized classes (default zlib).
+    pub fn codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// Absolute L∞ error bound of the full-fidelity representation
+    /// (default `1e-3`).
+    pub fn error_bound(mut self, eb: f64) -> Self {
+        self.error_bound = eb;
+        self
+    }
+
+    /// Decompose level count (default: the maximum the shape supports).
+    pub fn nlevels(mut self, nlevels: usize) -> Self {
+        self.nlevels = Some(nlevels);
+        self
+    }
+
+    /// Storage tiers [`Session::plan`] places class segments across
+    /// (default: burst buffer → parallel fs → archive, Summit figures).
+    pub fn tiers(mut self, tiers: Vec<TierSpec>) -> Self {
+        self.tiers = tiers;
+        self
+    }
+
+    /// Worker-pool width for [`Session::refactor_batch`] (default: all
+    /// cores).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Intra-kernel worker count (0 = all cores). **Process-global**:
+    /// applies to every session and kernel in the process, exactly like
+    /// the CLI `--threads` flag (see [`crate::util::par`]).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Minimum element count before kernels fork (0 = restore default).
+    /// Process-global, like [`SessionBuilder::threads`].
+    pub fn par_threshold(mut self, threshold: usize) -> Self {
+        self.par_threshold = Some(threshold);
+        self
+    }
+
+    /// Preset shape/dtype/codec/error-bound from an existing container,
+    /// so a consumer can build a matching session without re-stating the
+    /// producer's configuration.
+    pub fn for_container(mut self, r: &Refactored) -> Self {
+        self.shape = Some(r.shape().to_vec());
+        self.dtype = r.dtype();
+        self.codec = r.header().codec;
+        self.error_bound = r.header().quant.error_bound;
+        self.nlevels = Some(r.header().nlevels);
+        self
+    }
+
+    /// Validate the configuration and wire up the session.
+    pub fn build(self) -> Result<Session> {
+        let shape = self
+            .shape
+            .ok_or_else(|| Error::Build("shape is required (SessionBuilder::shape)".into()))?;
+        let max = max_levels(&shape).ok_or_else(|| {
+            Error::Build(format!(
+                "shape {shape:?} is not refactorable: every dimension must be 2^k + 1, k >= 1"
+            ))
+        })?;
+        let nlevels = self.nlevels.unwrap_or(max);
+        if !(1..=max).contains(&nlevels) {
+            return Err(Error::Build(format!(
+                "nlevels {nlevels} outside 1..={max} for shape {shape:?}"
+            )));
+        }
+        if !(self.error_bound.is_finite() && self.error_bound > 0.0) {
+            return Err(Error::Build(format!(
+                "error bound must be positive and finite, got {}",
+                self.error_bound
+            )));
+        }
+        if self.tiers.is_empty() {
+            return Err(Error::Build("at least one storage tier is required".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Build("workers must be at least 1".into()));
+        }
+        if let Some(t) = self.threads {
+            crate::util::par::set_threads(t);
+        }
+        if let Some(t) = self.par_threshold {
+            crate::util::par::set_par_threshold(t);
+        }
+
+        let hierarchy = Hierarchy::uniform_with_levels(&shape, Some(nlevels));
+        let machinery = match self.dtype {
+            Dtype::F32 => Machinery::F32(Mutex::new(ProgressiveWriter::new(
+                hierarchy.clone(),
+                self.codec,
+            ))),
+            Dtype::F64 => Machinery::F64(Mutex::new(ProgressiveWriter::new(
+                hierarchy.clone(),
+                self.codec,
+            ))),
+        };
+        Ok(Session {
+            hierarchy,
+            dtype: self.dtype,
+            codec: self.codec,
+            error_bound: self.error_bound,
+            tiers: self.tiers,
+            workers: self.workers,
+            machinery,
+        })
+    }
+}
+
+/// The unified refactoring facade: one logical operation — *create at
+/// high fidelity, store/transfer/retrieve at any lower fidelity* —
+/// behind the four paper verbs [`refactor`](Session::refactor),
+/// [`retrieve`](Session::retrieve), [`store`](Session::store), and
+/// [`plan`](Session::plan), with the monolithic compression path
+/// ([`compress`](Session::compress)/[`decompress`](Session::decompress))
+/// riding on the same machinery.
+pub struct Session {
+    hierarchy: Hierarchy,
+    dtype: Dtype,
+    codec: Codec,
+    error_bound: f64,
+    tiers: Vec<TierSpec>,
+    workers: usize,
+    machinery: Machinery,
+}
+
+impl Session {
+    /// Start configuring a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Grid shape this session refactors.
+    pub fn shape(&self) -> &[usize] {
+        self.hierarchy.shape()
+    }
+
+    /// The multigrid hierarchy the session owns.
+    pub fn hierarchy(&self) -> &Hierarchy {
+        &self.hierarchy
+    }
+
+    /// Scalar precision of created fields.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Lossless back-end in use.
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Absolute error bound of the full-fidelity representation.
+    pub fn error_bound(&self) -> f64 {
+        self.error_bound
+    }
+
+    /// Storage tiers [`Session::plan`] places against.
+    pub fn tiers(&self) -> &[TierSpec] {
+        &self.tiers
+    }
+
+    fn check_input(&self, data: &AnyTensor) -> Result<()> {
+        if data.dtype() != self.dtype {
+            return Err(Error::Dtype {
+                expected: self.dtype,
+                got: data.dtype(),
+            });
+        }
+        if data.shape() != self.shape() {
+            return Err(Error::Shape {
+                expected: self.shape().to_vec(),
+                got: data.shape().to_vec(),
+            });
+        }
+        Ok(())
+    }
+
+    /// **Refactor** (the paper's create verb): decompose `data`, quantize
+    /// and entropy-code every coefficient class independently, and
+    /// measure the exact per-prefix error annotations. The result can be
+    /// stored, transferred, or retrieved at any fidelity.
+    pub fn refactor(&self, data: &AnyTensor) -> Result<Refactored> {
+        self.check_input(data)?;
+        let (bytes, header) = match (&self.machinery, data) {
+            (Machinery::F32(w), AnyTensor::F32(t)) => w
+                .lock()
+                .unwrap()
+                .write(t, self.error_bound)
+                .map_err(Error::Compress)?,
+            (Machinery::F64(w), AnyTensor::F64(t)) => w
+                .lock()
+                .unwrap()
+                .write(t, self.error_bound)
+                .map_err(Error::Compress)?,
+            _ => unreachable!("check_input verified the dtype"),
+        };
+        Ok(Refactored { bytes, header })
+    }
+
+    /// Refactor many fields on the coordinator's worker pool
+    /// ([`crate::coordinator::run_pooled`]): inter-field embarrassing
+    /// parallelism, with intra-kernel forking automatically suppressed
+    /// while more than one pool worker runs. Results keep input order.
+    pub fn refactor_batch(&self, fields: Vec<AnyTensor>) -> Vec<Result<Refactored>> {
+        run_pooled(self.workers, fields, |data| {
+            self.check_input(&data)?;
+            // each job gets its own transient writer (the pool hands out
+            // jobs, not worker identities): construction is cheap relative
+            // to a field refactor, and it keeps jobs from serializing on
+            // the session's shared machine
+            let (bytes, header) = match &data {
+                AnyTensor::F32(t) => {
+                    ProgressiveWriter::<f32>::new(self.hierarchy.clone(), self.codec)
+                        .write(t, self.error_bound)
+                        .map_err(Error::Compress)?
+                }
+                AnyTensor::F64(t) => {
+                    ProgressiveWriter::<f64>::new(self.hierarchy.clone(), self.codec)
+                        .write(t, self.error_bound)
+                        .map_err(Error::Compress)?
+                }
+            };
+            Ok(Refactored { bytes, header })
+        })
+    }
+
+    /// **Retrieve**: reconstruct a reduced-fidelity tensor from a
+    /// refactored representation. Dispatches on the *container's* dtype,
+    /// so any valid container is retrievable — including ones produced
+    /// by other sessions or read from disk — regardless of this
+    /// session's configuration (delegates to [`Refactored::retrieve`]).
+    pub fn retrieve(&self, src: &Refactored, fidelity: Fidelity) -> Result<AnyTensor> {
+        src.retrieve(fidelity)
+    }
+
+    /// **Store**: write the serialized container to any byte sink.
+    /// Returns the bytes written.
+    pub fn store<W: Write>(&self, r: &Refactored, mut sink: W) -> Result<u64> {
+        sink.write_all(r.as_bytes())?;
+        Ok(r.nbytes() as u64)
+    }
+
+    /// [`Session::store`] straight to a file path.
+    pub fn store_file(&self, r: &Refactored, path: impl AsRef<Path>) -> Result<u64> {
+        std::fs::write(path.as_ref(), r.as_bytes())?;
+        Ok(r.nbytes() as u64)
+    }
+
+    /// **Plan**: place the representation's class segments (their real
+    /// entropy-coded sizes) across the session's storage tiers, greedily
+    /// by value density — the "intelligent movement" of the paper's
+    /// Fig 1.
+    pub fn plan(&self, r: &Refactored) -> Result<Placement> {
+        let class_bytes: Vec<u64> = r.header().segments.iter().map(|s| s.bytes).collect();
+        Ok(place_classes(&class_bytes, &self.tiers))
+    }
+
+    /// Monolithic MGARD compression (classic single-blob output) on the
+    /// session's machinery — same hierarchy, quantizer, and codec as the
+    /// progressive path.
+    pub fn compress(&self, data: &AnyTensor) -> Result<Compressed> {
+        self.check_input(data)?;
+        match (&self.machinery, data) {
+            (Machinery::F32(w), AnyTensor::F32(t)) => w
+                .lock()
+                .unwrap()
+                .compressor_mut()
+                .compress(t, self.error_bound)
+                .map_err(Error::Compress),
+            (Machinery::F64(w), AnyTensor::F64(t)) => w
+                .lock()
+                .unwrap()
+                .compressor_mut()
+                .compress(t, self.error_bound)
+                .map_err(Error::Compress),
+            _ => unreachable!("check_input verified the dtype"),
+        }
+    }
+
+    /// Invert [`Session::compress`]; the result satisfies the session's
+    /// error bound.
+    pub fn decompress(&self, blob: &Compressed) -> Result<AnyTensor> {
+        match &self.machinery {
+            Machinery::F32(w) => w
+                .lock()
+                .unwrap()
+                .compressor_mut()
+                .decompress(blob)
+                .map(AnyTensor::F32)
+                .map_err(Error::Compress),
+            Machinery::F64(w) => w
+                .lock()
+                .unwrap()
+                .compressor_mut()
+                .decompress(blob)
+                .map(AnyTensor::F64)
+                .map_err(Error::Compress),
+        }
+    }
+
+    /// Per-stage wall-clock breakdown of the session machinery's most
+    /// recent operation (the Fig-19 stages).
+    pub fn stats(&self) -> CompressorStats {
+        match &self.machinery {
+            Machinery::F32(w) => w.lock().unwrap().stats().clone(),
+            Machinery::F64(w) => w.lock().unwrap().stats().clone(),
+        }
+    }
+}
+
+fn retrieve_typed<T: Scalar>(src: &Refactored, keep: usize) -> Result<Tensor<T>> {
+    let mut reader = ProgressiveReader::<T>::open(src.as_bytes()).map_err(Error::Container)?;
+    reader.retrieve(keep).map_err(Error::Compress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smooth(shape: &[usize]) -> AnyTensor {
+        Tensor::<f64>::from_fn(shape, |idx| {
+            idx.iter()
+                .enumerate()
+                .map(|(d, &i)| ((d + 2) as f64 * i as f64 * 0.17).sin())
+                .sum()
+        })
+        .into()
+    }
+
+    fn session(shape: &[usize]) -> Session {
+        Session::builder().shape(shape).build().unwrap()
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(matches!(Session::builder().build(), Err(Error::Build(_))));
+        assert!(Session::builder().shape(&[10, 10]).build().is_err());
+        assert!(Session::builder().shape(&[9, 9]).error_bound(0.0).build().is_err());
+        assert!(Session::builder().shape(&[9, 9]).nlevels(7).build().is_err());
+        assert!(Session::builder().shape(&[9, 9]).tiers(vec![]).build().is_err());
+        assert!(Session::builder().shape(&[9, 9]).workers(0).build().is_err());
+        assert!(Session::builder().shape(&[9, 9]).nlevels(2).build().is_ok());
+    }
+
+    #[test]
+    fn refactor_retrieve_store_plan_roundtrip() {
+        let s = session(&[17, 17]);
+        let data = smooth(&[17, 17]);
+        let r = s.refactor(&data).unwrap();
+        assert_eq!(r.dtype(), Dtype::F64);
+        assert_eq!(r.shape(), &[17, 17]);
+
+        // full retrieval honors the session error bound
+        let full = s.retrieve(&r, Fidelity::All).unwrap();
+        assert!(full.linf_to(&data).unwrap() <= s.error_bound());
+
+        // store -> reload -> identical representation
+        let mut sink = Vec::new();
+        let n = s.store(&r, &mut sink).unwrap();
+        assert_eq!(n as usize, sink.len());
+        let reloaded = Refactored::from_bytes(sink).unwrap();
+        assert_eq!(reloaded.as_bytes(), r.as_bytes());
+
+        // plan covers every class
+        let placement = s.plan(&r).unwrap();
+        assert_eq!(placement.assignment.len(), r.nclasses());
+    }
+
+    #[test]
+    fn input_checks_are_typed_errors() {
+        let s = session(&[9, 9]);
+        let wrong_shape = smooth(&[17]);
+        assert!(matches!(s.refactor(&wrong_shape), Err(Error::Shape { .. })));
+        let wrong_dtype = smooth(&[9, 9]).cast(Dtype::F32);
+        assert!(matches!(s.refactor(&wrong_dtype), Err(Error::Dtype { .. })));
+    }
+
+    #[test]
+    fn retrieve_dispatches_on_container_dtype_not_session_dtype() {
+        // an f32 producer's container is retrievable by an f64-configured
+        // session: the container itself carries the dtype
+        let producer = Session::builder()
+            .shape(&[9, 9])
+            .dtype(Dtype::F32)
+            .error_bound(1e-2)
+            .build()
+            .unwrap();
+        let field = smooth(&[9, 9]).cast(Dtype::F32);
+        let r = producer.refactor(&field).unwrap();
+
+        let consumer = session(&[33, 33]); // different shape AND dtype
+        let back = consumer.retrieve(&r, Fidelity::All).unwrap();
+        assert_eq!(back.dtype(), Dtype::F32);
+        assert!(back.linf_to(&field).unwrap() <= 1e-2);
+        // the session-free path is the same operation
+        assert_eq!(r.retrieve(Fidelity::All).unwrap(), back);
+    }
+
+    #[test]
+    fn byte_budget_resolves_longest_fitting_prefix() {
+        let s = session(&[33, 33]);
+        let r = s.refactor(&smooth(&[33, 33])).unwrap();
+        let header = r.header();
+        for keep in 1..=r.nclasses() {
+            let budget = header.prefix_bytes(keep);
+            assert_eq!(r.resolve(Fidelity::ByteBudget(budget)).unwrap(), keep);
+            let got = s.retrieve(&r, Fidelity::ByteBudget(budget)).unwrap();
+            // the retrieved tensor is exactly the keep-class reconstruction
+            assert_eq!(got, s.retrieve(&r, Fidelity::Classes(keep)).unwrap());
+        }
+        // a budget below the coarsest class is a typed fidelity error
+        let too_small = header.segments[0].bytes - 1;
+        let err = s.retrieve(&r, Fidelity::ByteBudget(too_small));
+        assert!(matches!(err, Err(Error::Fidelity(_))));
+    }
+
+    #[test]
+    fn refactor_batch_matches_serial_bytes() {
+        let s = Session::builder().shape(&[17, 17]).workers(3).build().unwrap();
+        let fields: Vec<AnyTensor> = (0..5)
+            .map(|i| {
+                Tensor::<f64>::from_fn(&[17, 17], |idx| {
+                    ((idx[0] * 17 + idx[1]) as f64 * 0.07 + i as f64).cos()
+                })
+                .into()
+            })
+            .collect();
+        let batch = s.refactor_batch(fields.clone());
+        assert_eq!(batch.len(), fields.len());
+        for (field, got) in fields.iter().zip(batch) {
+            let got = got.unwrap();
+            let want = s.refactor(field).unwrap();
+            // pool execution is bit-identical to the serial facade path
+            assert_eq!(got.as_bytes(), want.as_bytes());
+        }
+    }
+
+    #[test]
+    fn batch_surfaces_per_field_errors() {
+        let s = session(&[9, 9]);
+        let good = smooth(&[9, 9]);
+        let bad = smooth(&[17]);
+        let results = s.refactor_batch(vec![good, bad]);
+        assert!(results[0].is_ok());
+        assert!(matches!(results[1], Err(Error::Shape { .. })));
+    }
+
+    #[test]
+    fn monolithic_compress_shares_the_machinery() {
+        let s = session(&[17, 17]);
+        let data = smooth(&[17, 17]);
+        let blob = s.compress(&data).unwrap();
+        assert!(s.stats().compress_total() > 0.0);
+        let back = s.decompress(&blob).unwrap();
+        assert!(back.linf_to(&data).unwrap() <= s.error_bound());
+    }
+
+    #[test]
+    fn for_container_presets_match_the_producer() {
+        let producer = Session::builder()
+            .shape(&[17, 17])
+            .codec(Codec::HuffRle)
+            .error_bound(1e-2)
+            .build()
+            .unwrap();
+        let r = producer.refactor(&smooth(&[17, 17])).unwrap();
+        let consumer = Session::builder().for_container(&r).build().unwrap();
+        assert_eq!(consumer.shape(), producer.shape());
+        assert_eq!(consumer.dtype(), producer.dtype());
+        assert_eq!(consumer.codec(), Codec::HuffRle);
+        assert_eq!(consumer.error_bound(), 1e-2);
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage_with_container_error() {
+        assert!(matches!(
+            Refactored::from_bytes(b"PK\x03\x04 not a container".to_vec()),
+            Err(Error::Container(_))
+        ));
+    }
+}

@@ -1,0 +1,219 @@
+//! Dtype-erased tensors: the facade's currency.
+//!
+//! The compute core is generic over [`crate::util::Scalar`] and stays
+//! that way; the *boundary* of the system should not be. [`AnyTensor`]
+//! wraps the two supported precisions behind one concrete type so
+//! callers (CLI, services, batch producers) hold heterogeneous fields in
+//! one collection and never monomorphize dispatch by hand — the session
+//! dispatches internally.
+
+use crate::api::error::{Error, Result};
+use crate::grid::Tensor;
+
+/// Scalar precision of a field (the paper evaluates exactly these two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// 32-bit IEEE float (`L = 4` in the paper's cost models).
+    F32,
+    /// 64-bit IEEE float (`L = 8`).
+    F64,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    /// Dtype for a container-declared scalar width (4 or 8).
+    pub fn from_bytes(width: u8) -> Result<Self> {
+        match width {
+            4 => Ok(Dtype::F32),
+            8 => Ok(Dtype::F64),
+            other => Err(Error::Container(anyhow::anyhow!(
+                "unsupported scalar width {other} (4 = f32, 8 = f64)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        })
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" | "float32" => Ok(Dtype::F32),
+            "f64" | "float64" => Ok(Dtype::F64),
+            other => Err(Error::Usage(format!("unknown dtype '{other}' (f32|f64)"))),
+        }
+    }
+}
+
+/// A dense tensor of either supported precision.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnyTensor {
+    /// Single-precision payload.
+    F32(Tensor<f32>),
+    /// Double-precision payload.
+    F64(Tensor<f64>),
+}
+
+impl AnyTensor {
+    /// Scalar precision of the payload.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            AnyTensor::F32(_) => Dtype::F32,
+            AnyTensor::F64(_) => Dtype::F64,
+        }
+    }
+
+    /// Grid shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(t) => t.shape(),
+            AnyTensor::F64(t) => t.shape(),
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            AnyTensor::F32(t) => t.len(),
+            AnyTensor::F64(t) => t.len(),
+        }
+    }
+
+    /// Whether the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes.
+    pub fn nbytes(&self) -> usize {
+        match self {
+            AnyTensor::F32(t) => t.nbytes(),
+            AnyTensor::F64(t) => t.nbytes(),
+        }
+    }
+
+    /// Borrow the `f32` payload; `None` when the tensor is `f64`.
+    pub fn as_f32(&self) -> Option<&Tensor<f32>> {
+        match self {
+            AnyTensor::F32(t) => Some(t),
+            AnyTensor::F64(_) => None,
+        }
+    }
+
+    /// Borrow the `f64` payload; `None` when the tensor is `f32`.
+    pub fn as_f64(&self) -> Option<&Tensor<f64>> {
+        match self {
+            AnyTensor::F32(_) => None,
+            AnyTensor::F64(t) => Some(t),
+        }
+    }
+
+    /// Copy the values out as `f64` (widening for `f32` payloads) —
+    /// dtype-blind consumers (metrics, dumps) read through this.
+    pub fn data_f64(&self) -> Vec<f64> {
+        match self {
+            AnyTensor::F32(t) => t.data().iter().map(|&v| v as f64).collect(),
+            AnyTensor::F64(t) => t.data().to_vec(),
+        }
+    }
+
+    /// Convert to the requested precision (no-op when it already
+    /// matches; `f64 -> f32` rounds).
+    pub fn cast(self, dtype: Dtype) -> AnyTensor {
+        match (self, dtype) {
+            (t @ AnyTensor::F32(_), Dtype::F32) | (t @ AnyTensor::F64(_), Dtype::F64) => t,
+            (AnyTensor::F32(t), Dtype::F64) => {
+                let shape = t.shape().to_vec();
+                let data = t.into_vec().into_iter().map(|v| v as f64).collect();
+                AnyTensor::F64(Tensor::from_vec(&shape, data))
+            }
+            (AnyTensor::F64(t), Dtype::F32) => {
+                let shape = t.shape().to_vec();
+                let data = t.into_vec().into_iter().map(|v| v as f32).collect();
+                AnyTensor::F32(Tensor::from_vec(&shape, data))
+            }
+        }
+    }
+
+    /// L∞ distance to `other`, computed in `f64` space so mixed-precision
+    /// comparisons (retrieved `f32` vs original `f64`) just work.
+    /// Same-dtype pairs compare in place without widening copies.
+    pub fn linf_to(&self, other: &AnyTensor) -> Result<f64> {
+        if self.shape() != other.shape() {
+            return Err(Error::Shape {
+                expected: self.shape().to_vec(),
+                got: other.shape().to_vec(),
+            });
+        }
+        Ok(match (self, other) {
+            (AnyTensor::F32(a), AnyTensor::F32(b)) => crate::util::stats::linf(a.data(), b.data()),
+            (AnyTensor::F64(a), AnyTensor::F64(b)) => crate::util::stats::linf(a.data(), b.data()),
+            _ => crate::util::stats::linf(&self.data_f64(), &other.data_f64()),
+        })
+    }
+}
+
+impl From<Tensor<f32>> for AnyTensor {
+    fn from(t: Tensor<f32>) -> Self {
+        AnyTensor::F32(t)
+    }
+}
+
+impl From<Tensor<f64>> for AnyTensor {
+    fn from(t: Tensor<f64>) -> Self {
+        AnyTensor::F64(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cast_roundtrip_and_metadata() {
+        let t: AnyTensor = Tensor::<f64>::from_fn(&[3, 3], |i| i[0] as f64 + 0.5).into();
+        assert_eq!(t.dtype(), Dtype::F64);
+        assert_eq!(t.shape(), &[3, 3]);
+        assert_eq!(t.nbytes(), 9 * 8);
+        let narrow = t.clone().cast(Dtype::F32);
+        assert_eq!(narrow.dtype(), Dtype::F32);
+        assert_eq!(narrow.nbytes(), 9 * 4);
+        let wide = narrow.cast(Dtype::F64);
+        // values survive the f64 -> f32 -> f64 trip exactly (they are
+        // small halves, representable in f32)
+        assert_eq!(wide.data_f64(), t.data_f64());
+        assert_eq!(t.linf_to(&wide).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn linf_rejects_shape_mismatch() {
+        let a: AnyTensor = Tensor::<f64>::zeros(&[3, 3]).into();
+        let b: AnyTensor = Tensor::<f64>::zeros(&[9]).into();
+        assert!(matches!(a.linf_to(&b), Err(Error::Shape { .. })));
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!("f32".parse::<Dtype>().unwrap(), Dtype::F32);
+        assert_eq!("float64".parse::<Dtype>().unwrap(), Dtype::F64);
+        assert!("f16".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::from_bytes(4).unwrap(), Dtype::F32);
+        assert!(Dtype::from_bytes(2).is_err());
+    }
+}

@@ -44,6 +44,21 @@ impl Codec {
             Codec::HuffRle => "huff-rle",
         }
     }
+
+    /// Every supported codec (CLI help, test matrices).
+    pub const ALL: [Codec; 2] = [Codec::Zlib, Codec::HuffRle];
+}
+
+impl std::str::FromStr for Codec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "zlib" => Ok(Codec::Zlib),
+            "huff-rle" => Ok(Codec::HuffRle),
+            other => bail!("unknown codec '{other}' (zlib|huff-rle)"),
+        }
+    }
 }
 
 /// Entropy-code one quantized stream with `codec` (the exact coder the

@@ -21,4 +21,4 @@ pub mod pipeline;
 
 pub use parallel::ParallelRefactorer;
 pub use partition::{partition_slabs, round_robin_owner, Slab};
-pub use pipeline::{Backend, Coordinator, JobResult, JobSpec, Mode as JobMode};
+pub use pipeline::{run_pooled, Backend, Coordinator, JobResult, JobSpec, Mode as JobMode};

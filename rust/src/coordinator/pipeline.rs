@@ -8,7 +8,6 @@
 //! coefficient classes (optionally quantized + encoded) go out to the
 //! storage mover.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
@@ -82,6 +81,52 @@ impl JobResult {
     }
 }
 
+/// Run `f` over `jobs` on a pool of `workers` scoped threads, returning
+/// results in input order. This is the coordinator's inter-job
+/// embarrassing parallelism, reusable by any batch entry point (the
+/// [`Coordinator`] job queue and [`crate::api::Session::refactor_batch`]
+/// both run on it). When more than one pool worker actually spawns, each
+/// job runs under [`crate::util::par::with_serial`] so per-kernel forking
+/// does not multiply with pool-level parallelism.
+pub fn run_pooled<J, R, F>(workers: usize, jobs: Vec<J>, f: F) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+    F: Fn(J) -> R + Sync,
+{
+    let n = jobs.len();
+    // suppress per-kernel forking only when >1 pool worker actually
+    // spawns — a small batch on a large pool keeps intra-kernel
+    // parallelism
+    let spawned = workers.clamp(1, n.max(1));
+    let pooled = spawned > 1;
+    let queue = Mutex::new(jobs.into_iter().enumerate().collect::<Vec<(usize, J)>>());
+    let results: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+
+    crossbeam_utils::thread::scope(|s| {
+        for _ in 0..spawned {
+            s.spawn(|_| loop {
+                let next = queue.lock().unwrap().pop();
+                let Some((idx, job)) = next else { break };
+                let r = if pooled {
+                    crate::util::par::with_serial(|| f(job))
+                } else {
+                    f(job)
+                };
+                results.lock().unwrap()[idx] = Some(r);
+            });
+        }
+    })
+    .unwrap();
+
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("pool drained the whole queue"))
+        .collect()
+}
+
 /// The Layer-3 coordinator: a queue + worker pool.
 pub struct Coordinator {
     backend: Backend,
@@ -99,48 +144,11 @@ impl Coordinator {
 
     /// Process a batch of jobs across the worker pool (jobs are
     /// independent — this is the inter-job embarrassing parallelism; the
-    /// intra-job mode is each job's own). Multi-worker pools run each job
-    /// under [`crate::util::par::with_serial`] so per-kernel forking does
-    /// not multiply with pool-level parallelism.
+    /// intra-job mode is each job's own). Runs on [`run_pooled`], which
+    /// suppresses per-kernel forking whenever more than one pool worker
+    /// spawns.
     pub fn run_batch(&self, jobs: Vec<JobSpec>) -> Vec<Result<JobResult>> {
-        let n = jobs.len();
-        // suppress per-kernel forking only when >1 pool worker actually
-        // spawns — a small batch on a large pool keeps intra-kernel
-        // parallelism
-        let pooled = self.pool_workers.min(n.max(1)) > 1;
-        let jobs = Mutex::new(
-            jobs.into_iter()
-                .enumerate()
-                .collect::<Vec<(usize, JobSpec)>>(),
-        );
-        let results: Mutex<Vec<Option<Result<JobResult>>>> =
-            Mutex::new((0..n).map(|_| None).collect());
-        let active = AtomicUsize::new(0);
-
-        crossbeam_utils::thread::scope(|s| {
-            for _ in 0..self.pool_workers.min(n.max(1)) {
-                s.spawn(|_| loop {
-                    let next = jobs.lock().unwrap().pop();
-                    let Some((idx, job)) = next else { break };
-                    active.fetch_add(1, Ordering::SeqCst);
-                    let r = if pooled {
-                        crate::util::par::with_serial(|| self.run_job(job))
-                    } else {
-                        self.run_job(job)
-                    };
-                    results.lock().unwrap()[idx] = Some(r);
-                    active.fetch_sub(1, Ordering::SeqCst);
-                });
-            }
-        })
-        .unwrap();
-
-        results
-            .into_inner()
-            .unwrap()
-            .into_iter()
-            .map(|r| r.unwrap_or_else(|| Err(anyhow!("job was not executed"))))
-            .collect()
+        run_pooled(self.pool_workers, jobs, |job| self.run_job(job))
     }
 
     /// Execute one job synchronously.

@@ -127,11 +127,20 @@ pub struct Hierarchy {
 impl Hierarchy {
     /// Uniform grid on `[0, 1]^d` with the maximum level count.
     pub fn uniform(shape: &[usize]) -> Self {
+        Self::uniform_with_levels(shape, None)
+    }
+
+    /// Uniform grid on `[0, 1]^d` with an explicit decompose level count
+    /// (`None` = maximal). The single source of the uniform coordinate
+    /// formula — the container format and the `api` facade both rebuild
+    /// hierarchies through this, and the container writer's uniformity
+    /// check assumes exactly these coordinates.
+    pub fn uniform_with_levels(shape: &[usize], nlevels: Option<usize>) -> Self {
         let coords = shape
             .iter()
             .map(|&n| (0..n).map(|i| i as f64 / (n - 1) as f64).collect())
             .collect();
-        Self::new(shape, coords, None)
+        Self::new(shape, coords, nlevels)
     }
 
     /// Grid with explicit coordinates. `nlevels = None` means maximal.

@@ -16,6 +16,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`api`] | **the unified facade**: dtype-erased `Session` over refactor/compress/store/plan |
 //! | [`grid`] | grid hierarchy, strided level views, padding |
 //! | [`refactor`] | decompose/recompose (GPK/LPK/IPK native kernels), coefficient classes, error control |
 //! | [`baseline`] | state-of-the-art (pre-paper) refactoring used as comparison baseline |
@@ -32,6 +33,7 @@
 //! bit-identical to serial execution); the PJRT artifact path is gated
 //! behind the `pjrt` cargo feature (see [`runtime`]).
 
+pub mod api;
 pub mod baseline;
 pub mod compress;
 pub mod coordinator;

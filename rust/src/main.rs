@@ -1,29 +1,34 @@
 //! `mgr` — the data-refactoring coordinator CLI.
 //!
+//! Every data-path subcommand flows through the unified facade
+//! ([`mgr::api::Session`]); the CLI itself performs no dtype dispatch
+//! and never touches the per-module compressor/container machinery.
+//!
 //! Subcommands:
 //!
 //! * `info` — artifact registry + device model summary.
-//! * `refactor` — decompose a Gray-Scott (or random) field, report class
-//!   sizes and error-control norms; `--out f.mgr` additionally writes a
-//!   progressive container with per-class segments.
-//! * `retrieve` — reconstruct a fidelity prefix from a container
-//!   (`--keep K` classes, or `--error E` for the smallest prefix whose
-//!   recorded L∞ annotation meets `E`).
+//! * `refactor` — decompose a Gray-Scott (or random) field into a
+//!   progressive representation, report per-class sizes and measured
+//!   error annotations; `--out f.mgr` stores the container.
+//! * `retrieve` — reconstruct a fidelity prefix from a container:
+//!   `--keep K` classes, `--error E` (smallest prefix whose recorded L∞
+//!   annotation meets `E`), or `--bytes B` (longest prefix fitting the
+//!   byte budget). The selectors are mutually exclusive.
+//! * `plan` — place a container's class segments across storage tiers.
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
 //! * `serve` — run a batch of jobs through the coordinator worker pool.
 //! * `pjrt-check` — execute the AOT artifacts and verify them against the
 //!   native core (the cross-layer integration check).
 
-use anyhow::{anyhow, bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use mgr::compress::{Codec, MgardCompressor};
+use mgr::api::{AnyTensor, Dtype, Fidelity, Refactored, Session};
+use mgr::compress::Codec;
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
-use mgr::grid::{Hierarchy, Tensor};
-use mgr::refactor::{class_norms, split_classes, Refactorer};
+use mgr::grid::Tensor;
 use mgr::runtime::EngineHandle;
 use mgr::sim::GrayScott;
 use mgr::simgpu::{ClusterModel, DeviceSpec};
-use mgr::storage::{ProgressiveReader, ProgressiveWriter};
 use mgr::util::cli::Args;
 use mgr::util::rng::Rng;
 use mgr::util::stats::{linf, time};
@@ -40,9 +45,9 @@ fn main() {
     std::process::exit(code);
 }
 
-fn load_field(args: &Args) -> Result<Tensor<f64>> {
+fn load_field(args: &Args) -> Result<AnyTensor> {
     let shape = args.get_shape("shape", &[33, 33, 33])?;
-    match args.get_or("input", "grayscott").as_str() {
+    let field: AnyTensor = match args.get_or("input", "grayscott").as_str() {
         "grayscott" => {
             if shape.len() != 3 || shape.iter().any(|&n| n != shape[0]) {
                 bail!("grayscott input needs a cubic --shape NxNxN");
@@ -50,14 +55,64 @@ fn load_field(args: &Args) -> Result<Tensor<f64>> {
             let steps = args.get_usize("steps", 200)?;
             let mut sim = GrayScott::new(shape[0], args.get_usize("seed", 7)? as u64);
             sim.step(steps);
-            Ok(sim.v_field())
+            sim.v_field().into()
         }
         "random" => {
             let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
-            Ok(Tensor::from_fn(&shape, |_| rng.normal()))
+            Tensor::<f64>::from_fn(&shape, |_| rng.normal()).into()
         }
         other => bail!("unknown --input '{other}' (grayscott|random)"),
-    }
+    };
+    let dtype: Dtype = args.get_or("dtype", "f64").parse()?;
+    Ok(field.cast(dtype))
+}
+
+/// Build a session matching the CLI knobs for a field of `shape`.
+fn session_for(args: &Args, shape: &[usize], dtype: Dtype) -> Result<Session> {
+    let codec: Codec = args.get_or("codec", "zlib").parse()?;
+    Ok(Session::builder()
+        .shape(shape)
+        .dtype(dtype)
+        .codec(codec)
+        .error_bound(args.get_f64("eb", 1e-3)?)
+        .build()?)
+}
+
+/// Map the mutually exclusive `--keep` / `--error` / `--bytes` flags to a
+/// [`Fidelity`]. Combining them is an explicit usage error (they used to
+/// be silently prioritized).
+fn parse_fidelity(args: &Args) -> Result<Fidelity> {
+    let keep = args
+        .get("keep")
+        .map(|v| {
+            v.parse::<usize>()
+                .map_err(|_| anyhow!("--keep expects an integer, got '{v}'"))
+        })
+        .transpose()?;
+    let error = args
+        .get("error")
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| anyhow!("--error expects a number, got '{v}'"))
+        })
+        .transpose()?;
+    let bytes = args
+        .get("bytes")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("--bytes expects a byte count, got '{v}'"))
+        })
+        .transpose()?;
+    Ok(Fidelity::from_flags(keep, error, bytes)?)
+}
+
+fn container_arg(args: &Args) -> Result<Refactored> {
+    let path = args
+        .get("in")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("expected --in FILE (or a positional path)"))?;
+    Refactored::from_file(&path).with_context(|| format!("opening container {path}"))
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -66,6 +121,7 @@ fn run(args: &Args) -> Result<()> {
         Some("info") => info(args),
         Some("refactor") => refactor(args),
         Some("retrieve") => retrieve(args),
+        Some("plan") => plan(args),
         Some("compress") | Some("roundtrip") => compress(args),
         Some("serve") => serve(args),
         Some("pjrt-check") => pjrt_check(args),
@@ -75,10 +131,11 @@ fn run(args: &Args) -> Result<()> {
                  usage: mgr <subcommand> [options]\n\n\
                  subcommands:\n\
                  \x20 info                      artifact + device summary\n\
-                 \x20 refactor   [--shape NxNxN --input grayscott|random]\n\
+                 \x20 refactor   [--shape NxNxN --input grayscott|random --dtype f32|f64]\n\
                  \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
-                 \x20 retrieve   --in f.mgr [--keep K | --error E] [--dump raw.bin]\n\
-                 \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle]\n\
+                 \x20 retrieve   --in f.mgr [--keep K | --error E | --bytes B] [--dump raw.bin]\n\
+                 \x20 plan       --in f.mgr\n\
+                 \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
                  \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
                  \x20 pjrt-check [--artifacts DIR]\n\n\
                  global options (any subcommand):\n\
@@ -120,133 +177,92 @@ fn info(args: &Args) -> Result<()> {
 
 fn refactor(args: &Args) -> Result<()> {
     let data = load_field(args)?;
-    let h = Hierarchy::uniform(data.shape());
-    let mut t = data.clone();
-    let (_, secs) = time(|| Refactorer::new(h.clone()).decompose(&mut t));
-    let classes = split_classes(&t, &h);
-    let norms = class_norms(&t, &h);
+    let session = session_for(args, data.shape(), data.dtype())?;
+    let (refactored, secs) = time(|| session.refactor(&data));
+    let refactored = refactored?;
+    let header = refactored.header();
     println!(
-        "decomposed {:?} ({} levels) in {:.1} ms — {:.2} GB/s",
+        "refactored {:?} {} ({} levels, {} codec, eb {:.1e}) in {:.1} ms — {:.2} GB/s",
         data.shape(),
-        h.nlevels(),
+        data.dtype(),
+        header.nlevels,
+        header.codec.name(),
+        session.error_bound(),
         secs * 1e3,
         data.nbytes() as f64 / secs / 1e9
     );
-    println!("{:<8} {:>12} {:>14} {:>14}", "class", "values", "bytes", "max|coef|");
-    for (k, c) in classes.iter().enumerate() {
+    println!(
+        "{:<8} {:>12} {:>14} {:>14} {:>14}",
+        "class", "values", "seg bytes", "L∞ after", "RMSE after"
+    );
+    for (k, s) in header.segments.iter().enumerate() {
         println!(
-            "{:<8} {:>12} {:>14} {:>14.3e}",
-            k,
-            c.len(),
-            c.len() * 8,
-            norms.linf[k]
+            "{:<8} {:>12} {:>14} {:>14.3e} {:>14.3e}",
+            k, s.nvalues, s.bytes, s.linf, s.rmse
         );
     }
+    let total = refactored.nbytes();
+    println!(
+        "total {total} bytes ({:.2}x over raw {})",
+        data.nbytes() as f64 / total as f64,
+        data.nbytes()
+    );
 
     if let Some(out) = args.get("out") {
-        let eb = args.get_f64("eb", 1e-3)?;
-        let codec = parse_codec(args)?;
-        let mut writer = ProgressiveWriter::<f64>::new(h.clone(), codec);
-        let (header, secs) = time(|| writer.write_file(&data, eb, out));
-        let header = header?;
-        println!(
-            "\nwrote container {out} ({} codec, eb {eb:.1e}) in {:.1} ms",
-            codec.name(),
-            secs * 1e3
-        );
-        println!(
-            "{:<8} {:>12} {:>14} {:>14} {:>14}",
-            "class", "values", "seg bytes", "L∞ after", "RMSE after"
-        );
-        for (k, s) in header.segments.iter().enumerate() {
-            println!(
-                "{:<8} {:>12} {:>14} {:>14.3e} {:>14.3e}",
-                k, s.nvalues, s.bytes, s.linf, s.rmse
-            );
-        }
-        let total = header.header_bytes() as u64 + header.payload_bytes();
-        println!(
-            "total {total} bytes ({:.2}x over raw {})",
-            data.nbytes() as f64 / total as f64,
-            data.nbytes()
-        );
+        let written = session.store_file(&refactored, out)?;
+        println!("stored container {out} ({written} bytes)");
     }
     Ok(())
 }
 
-fn parse_codec(args: &Args) -> Result<Codec> {
-    match args.get_or("codec", "zlib").as_str() {
-        "zlib" => Ok(Codec::Zlib),
-        "huff-rle" => Ok(Codec::HuffRle),
-        other => bail!("unknown codec '{other}'"),
-    }
-}
-
 fn retrieve(args: &Args) -> Result<()> {
-    let path = args
-        .get("in")
-        .map(str::to_string)
-        .or_else(|| args.positional.first().cloned())
-        .ok_or_else(|| anyhow!("retrieve needs --in FILE (or a positional path)"))?;
-    let buf = std::fs::read(&path).with_context(|| format!("reading container {path}"))?;
-    // dispatch on the container's scalar width (f32 and f64 containers
-    // are both readable)
-    match mgr::storage::container::peek_dtype(&buf)? {
-        4 => retrieve_typed::<f32>(args, &buf, &path),
-        _ => retrieve_typed::<f64>(args, &buf, &path),
-    }
-}
-
-fn retrieve_typed<T: mgr::util::Scalar>(args: &Args, buf: &[u8], path: &str) -> Result<()> {
-    let mut reader = ProgressiveReader::<T>::open(buf)?;
-    let header = reader.header().clone();
+    let refactored = container_arg(args)?;
+    let header = refactored.header();
     println!(
-        "container {path}: shape {:?}, {} levels, {} classes, {} codec, eb {:.1e}",
-        header.shape,
+        "container: shape {:?} {}, {} levels, {} classes, {} codec, eb {:.1e}",
+        refactored.shape(),
+        refactored.dtype(),
         header.nlevels,
-        header.nclasses(),
+        refactored.nclasses(),
         header.codec.name(),
         header.quant.error_bound
     );
-    println!("{:<8} {:>14} {:>14} {:>14}", "class", "seg bytes", "L∞ after", "RMSE after");
+    println!(
+        "{:<8} {:>14} {:>14} {:>14}",
+        "class", "seg bytes", "L∞ after", "RMSE after"
+    );
     for (k, s) in header.segments.iter().enumerate() {
         println!("{:<8} {:>14} {:>14.3e} {:>14.3e}", k, s.bytes, s.linf, s.rmse);
     }
 
-    let keep = if let Some(e) = args.get("error") {
-        let target: f64 = e
-            .parse()
-            .map_err(|_| anyhow!("--error expects a number, got '{e}'"))?;
-        ensure!(
-            target.is_finite() && target > 0.0,
-            "--error must be positive and finite, got {target}"
-        );
-        let keep = header.select_keep(target);
-        println!(
+    let fidelity = parse_fidelity(args)?;
+    let keep = refactored.resolve(fidelity)?;
+    match fidelity {
+        Fidelity::ErrorBound(target) => println!(
             "--error {target:.1e}: smallest satisfying prefix is {keep}/{} classes{}",
-            header.nclasses(),
+            refactored.nclasses(),
             if header.segments[keep - 1].linf > target {
                 " (target unsatisfiable; keeping everything)"
             } else {
                 ""
             }
-        );
-        keep
-    } else {
-        let keep = args.get_usize("keep", header.nclasses())?;
-        if keep < 1 || keep > header.nclasses() {
-            bail!("--keep must be in 1..={}, got {keep}", header.nclasses());
-        }
-        keep
-    };
+        ),
+        Fidelity::ByteBudget(budget) => println!(
+            "--bytes {budget}: longest fitting prefix is {keep}/{} classes ({} payload bytes)",
+            refactored.nclasses(),
+            header.prefix_bytes(keep)
+        ),
+        _ => {}
+    }
 
-    let (tensor, secs) = time(|| reader.retrieve(keep));
+    // retrieval is self-contained on the container — no session needed
+    let (tensor, secs) = time(|| refactored.retrieve(Fidelity::Classes(keep)));
     let tensor = tensor?;
     let read = header.prefix_bytes(keep);
     println!(
         "retrieved {keep}/{} classes ({read} of {} payload bytes, {:.1}%) in {:.1} ms \
          — recorded L∞ {:.3e}, RMSE {:.3e}",
-        header.nclasses(),
+        refactored.nclasses(),
         header.payload_bytes(),
         100.0 * read as f64 / header.payload_bytes() as f64,
         secs * 1e3,
@@ -257,8 +273,8 @@ fn retrieve_typed<T: mgr::util::Scalar>(args: &Args, buf: &[u8], path: &str) -> 
     if let Some(dump) = args.get("dump") {
         // always dumps f64 LE (f32 containers are widened)
         let mut raw = Vec::with_capacity(tensor.len() * 8);
-        for v in tensor.data() {
-            raw.extend_from_slice(&v.to_f64().to_le_bytes());
+        for v in tensor.data_f64() {
+            raw.extend_from_slice(&v.to_le_bytes());
         }
         std::fs::write(dump, raw)?;
         println!("dumped {} little-endian f64 values to {dump}", tensor.len());
@@ -266,33 +282,63 @@ fn retrieve_typed<T: mgr::util::Scalar>(args: &Args, buf: &[u8], path: &str) -> 
     Ok(())
 }
 
+fn plan(args: &Args) -> Result<()> {
+    let refactored = container_arg(args)?;
+    let session = Session::builder().for_container(&refactored).build()?;
+    let placement = session.plan(&refactored)?;
+    println!(
+        "placement of {} class segments ({} payload bytes) across {} tiers:",
+        refactored.nclasses(),
+        refactored.header().payload_bytes(),
+        session.tiers().len()
+    );
+    for (k, tier) in placement.assignment.iter().enumerate() {
+        println!(
+            "  class {k}: {:>12} B -> {tier:?}{}",
+            placement.bytes[k],
+            if placement.is_over_capacity(k) {
+                "  (OVER CAPACITY)"
+            } else {
+                ""
+            }
+        );
+    }
+    for keep in 1..=refactored.nclasses() {
+        println!(
+            "  retrieve {keep} classes: {:.3} s",
+            placement.retrieval_time(session.tiers(), keep)?
+        );
+    }
+    Ok(())
+}
+
 fn compress(args: &Args) -> Result<()> {
     let data = load_field(args)?;
-    let eb = args.get_f64("eb", 1e-3)?;
-    let codec = parse_codec(args)?;
-    let h = Hierarchy::uniform(data.shape());
-    let mut c = MgardCompressor::new(h, codec);
-    let blob = c.compress(&data, eb)?;
+    let session = session_for(args, data.shape(), data.dtype())?;
+    let eb = session.error_bound();
+    let blob = session.compress(&data)?;
+    let stats = session.stats();
     println!(
-        "compressed {:?}: {} -> {} bytes (ratio {:.2}x) in {:.1} ms",
+        "compressed {:?} {}: {} -> {} bytes (ratio {:.2}x) in {:.1} ms",
         data.shape(),
+        data.dtype(),
         blob.original_bytes,
         blob.payload.len(),
         blob.ratio(),
-        c.stats.compress_total() * 1e3
+        stats.compress_total() * 1e3
     );
     println!(
         "  breakdown: decompose {:.1} ms, quantize {:.1} ms, {} {:.1} ms",
-        c.stats.decompose_s * 1e3,
-        c.stats.quantize_s * 1e3,
-        codec.name(),
-        c.stats.encode_s * 1e3
+        stats.decompose_s * 1e3,
+        stats.quantize_s * 1e3,
+        session.codec().name(),
+        stats.encode_s * 1e3
     );
-    let back = c.decompress(&blob)?;
-    let err = linf(back.data(), data.data());
+    let back = session.decompress(&blob)?;
+    let err = linf(&back.data_f64(), &data.data_f64());
     println!(
         "  decompressed in {:.1} ms; L∞ error {:.3e} (bound {eb:.1e}) — {}",
-        c.stats.decompress_total() * 1e3,
+        session.stats().decompress_total() * 1e3,
         err,
         if err <= eb { "OK" } else { "VIOLATED" }
     );
@@ -351,6 +397,8 @@ fn pjrt_check(args: &Args) -> Result<()> {
     println!("checking {} artifacts against the native core", variants.len());
     let mut checked = 0;
     for v in variants.iter().filter(|v| v.op == "decompose") {
+        use mgr::grid::Hierarchy;
+        use mgr::refactor::Refactorer;
         let shape = v.shape.clone();
         let h = Hierarchy::uniform(&shape);
         let mut rng = Rng::new(42);
@@ -376,4 +424,46 @@ fn pjrt_check(args: &Args) -> Result<()> {
     }
     println!("pjrt-check OK ({checked} decompose artifacts verified)");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn keep_and_error_together_is_a_usage_error() {
+        // regression: `retrieve --keep K --error E` used to silently
+        // prefer --error and ignore --keep
+        let a = args("retrieve --in f.mgr --keep 2 --error 1e-3");
+        let err = parse_fidelity(&a).unwrap_err().to_string();
+        assert!(err.contains("--keep") && err.contains("--error"), "{err}");
+        assert!(err.contains("mutually exclusive"), "{err}");
+        // all other pairings are rejected too
+        assert!(parse_fidelity(&args("retrieve --keep 2 --bytes 100")).is_err());
+        assert!(parse_fidelity(&args("retrieve --error 1e-3 --bytes 100")).is_err());
+    }
+
+    #[test]
+    fn single_selectors_parse() {
+        let keep = parse_fidelity(&args("retrieve --keep 3")).unwrap();
+        assert_eq!(keep, Fidelity::Classes(3));
+        let error = parse_fidelity(&args("retrieve --error 1e-2")).unwrap();
+        assert_eq!(error, Fidelity::ErrorBound(1e-2));
+        let bytes = parse_fidelity(&args("retrieve --bytes 4096")).unwrap();
+        assert_eq!(bytes, Fidelity::ByteBudget(4096));
+        assert_eq!(parse_fidelity(&args("retrieve")).unwrap(), Fidelity::All);
+    }
+
+    #[test]
+    fn malformed_selector_values_error() {
+        assert!(parse_fidelity(&args("retrieve --keep x")).is_err());
+        assert!(parse_fidelity(&args("retrieve --error x")).is_err());
+        assert!(parse_fidelity(&args("retrieve --bytes -4")).is_err());
+        assert!(parse_fidelity(&args("retrieve --keep 0")).is_err());
+        assert!(parse_fidelity(&args("retrieve --error -1")).is_err());
+    }
 }

@@ -174,6 +174,24 @@ impl ContainerHeader {
         self.segments.len()
     }
 
+    /// Longest class prefix whose recorded payload bytes fit within
+    /// `budget`, or `None` when even the coarsest class does not fit.
+    /// The budget covers segment payloads only (the fidelity-dependent
+    /// bytes a reader actually fetches), not the fixed header.
+    pub fn select_keep_bytes(&self, budget: u64) -> Option<usize> {
+        let mut keep = None;
+        let mut total: u64 = 0;
+        for (k, s) in self.segments.iter().enumerate() {
+            total = total.saturating_add(s.bytes);
+            if total <= budget {
+                keep = Some(k + 1);
+            } else {
+                break;
+            }
+        }
+        keep
+    }
+
     /// Rebuild the (uniform-grid) hierarchy the container describes.
     pub fn hierarchy(&self) -> Result<Hierarchy> {
         let max = max_levels(&self.shape).ok_or_else(|| {
@@ -185,12 +203,7 @@ impl ContainerHeader {
             self.nlevels,
             self.shape
         );
-        let coords = self
-            .shape
-            .iter()
-            .map(|&n| (0..n).map(|i| i as f64 / (n - 1) as f64).collect())
-            .collect();
-        Ok(Hierarchy::new(&self.shape, coords, Some(self.nlevels)))
+        Ok(Hierarchy::uniform_with_levels(&self.shape, Some(self.nlevels)))
     }
 
     /// Serialize (header only — segment payloads follow separately).
@@ -355,6 +368,14 @@ impl<T: Scalar> ProgressiveWriter<T> {
         &self.compressor.stats
     }
 
+    /// The underlying compressor (the monolithic compress/decompress
+    /// entry points share one hierarchy + workspace with the per-class
+    /// container path — [`crate::api::Session`] relies on this to own a
+    /// single machine per dtype).
+    pub fn compressor_mut(&mut self) -> &mut MgardCompressor<T> {
+        &mut self.compressor
+    }
+
     /// Compress `data` under absolute error bound `eb` and serialize the
     /// container. Returns the bytes and the header (whose per-class
     /// `linf`/`rmse` annotations are measured, not estimated: each prefix
@@ -497,11 +518,33 @@ impl<T: Scalar> ProgressiveReader<T> {
 
 /// Peek at a container's scalar width without full validation (lets a
 /// CLI dispatch to the right `ProgressiveReader<T>`).
+///
+/// Truncated or foreign buffers get descriptive errors naming the bytes
+/// found and the expected `MGRC` header, so a user who points the CLI at
+/// the wrong file sees *what* the file is rather than raw byte values.
 pub fn peek_dtype(buf: &[u8]) -> Result<u8> {
-    ensure!(buf.len() >= 7, "container truncated");
-    ensure!(buf[..4] == MAGIC, "not an MGRC container (bad magic)");
+    ensure!(
+        buf.len() >= 7,
+        "file too short to be an MGRC container: {} byte(s), the header needs at least 7 \
+         (magic \"MGRC\" + version + scalar width)",
+        buf.len()
+    );
+    if buf[..4] != MAGIC {
+        bail!(
+            "not an MGRC container: file starts with bytes {:02x} {:02x} {:02x} {:02x} \
+             ({:?}) where the magic \"MGRC\" was expected",
+            buf[0],
+            buf[1],
+            buf[2],
+            buf[3],
+            String::from_utf8_lossy(&buf[..4])
+        );
+    }
     let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
-    ensure!(version == VERSION, "unsupported container version {version}");
+    ensure!(
+        version == VERSION,
+        "MGRC container declares version {version}, this reader supports version {VERSION}"
+    );
     Ok(buf[6])
 }
 
@@ -592,6 +635,43 @@ mod tests {
         // unsatisfiable target falls back to every class
         assert_eq!(header.select_keep(1e-300), header.nclasses());
         assert!(r.retrieve_error(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn select_keep_bytes_longest_fitting_prefix() {
+        let (_, _, header) = write_container(33, Codec::Zlib, 1e-4);
+        // exactly the prefix sum -> that prefix; one byte less -> one fewer
+        for keep in 1..=header.nclasses() {
+            let budget = header.prefix_bytes(keep);
+            assert_eq!(header.select_keep_bytes(budget), Some(keep), "budget {budget}");
+            if keep < header.nclasses() {
+                // a budget strictly between prefix k and k+1 still yields k
+                assert_eq!(header.select_keep_bytes(budget + 1), Some(keep));
+            }
+        }
+        // anything >= the whole payload keeps everything
+        assert_eq!(header.select_keep_bytes(u64::MAX), Some(header.nclasses()));
+        // smaller than the coarsest class: nothing fits
+        assert_eq!(header.select_keep_bytes(header.segments[0].bytes - 1), None);
+        assert_eq!(header.select_keep_bytes(0), None);
+    }
+
+    #[test]
+    fn peek_dtype_errors_are_descriptive() {
+        // truncated: names the length and the MGRC header requirement
+        let err = peek_dtype(&[0x4d, 0x47]).unwrap_err().to_string();
+        assert!(err.contains("2 byte(s)"), "{err}");
+        assert!(err.contains("MGRC"), "{err}");
+        // foreign file (a zip): names the found magic and the expected one
+        let err = peek_dtype(b"PK\x03\x04 rest of a zip file").unwrap_err().to_string();
+        assert!(err.contains("50 4b 03 04"), "{err}");
+        assert!(err.contains("MGRC"), "{err}");
+        // wrong version: names both versions
+        let mut buf = MAGIC.to_vec();
+        buf.extend_from_slice(&9u16.to_le_bytes());
+        buf.push(8);
+        let err = peek_dtype(&buf).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
     }
 
     #[test]

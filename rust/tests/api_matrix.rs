@@ -1,0 +1,184 @@
+//! Property-style round-trip matrix over the `mgr::api` facade:
+//! dims 1D/2D/3D × f32/f64 × every codec × every `Fidelity` variant,
+//! asserting that retrieved error never exceeds the requested bound and
+//! that byte budgets resolve to the longest fitting class prefix.
+
+use mgr::api::{AnyTensor, Codec, Dtype, Fidelity, Session};
+use mgr::grid::Tensor;
+
+/// Smooth deterministic field with O(1) values on any shape.
+fn field(shape: &[usize], dtype: Dtype) -> AnyTensor {
+    let f64_field: AnyTensor = Tensor::<f64>::from_fn(shape, |idx| {
+        idx.iter()
+            .enumerate()
+            .map(|(d, &i)| ((d as f64 + 1.3) * i as f64 * 0.21).sin())
+            .product::<f64>()
+            + 0.25
+    })
+    .into();
+    f64_field.cast(dtype)
+}
+
+/// Measured-annotation slack: errors are recorded in the container's
+/// scalar type while the test compares in widened f64 space, so allow a
+/// relative half-ulp-of-f32 margin.
+fn within(err: f64, bound: f64) -> bool {
+    err <= bound * (1.0 + 1e-6) + 1e-12
+}
+
+#[test]
+fn roundtrip_matrix_honors_every_fidelity_request() {
+    let shapes: [&[usize]; 3] = [&[33], &[17, 17], &[9, 9, 9]];
+    for shape in shapes {
+        for dtype in [Dtype::F32, Dtype::F64] {
+            // f32 quantization can't honor bounds below its precision at
+            // O(1) values, so the bound scales with the dtype
+            let eb = match dtype {
+                Dtype::F32 => 1e-2,
+                Dtype::F64 => 1e-4,
+            };
+            for codec in Codec::ALL {
+                let label = format!("{shape:?} {dtype} {}", codec.name());
+                let session = Session::builder()
+                    .shape(shape)
+                    .dtype(dtype)
+                    .codec(codec)
+                    .error_bound(eb)
+                    .build()
+                    .unwrap();
+                let data = field(shape, dtype);
+                let refactored = session.refactor(&data).unwrap();
+                assert_eq!(refactored.dtype(), dtype, "{label}");
+                assert_eq!(refactored.shape(), shape, "{label}");
+                let header = refactored.header().clone();
+                let nclasses = refactored.nclasses();
+
+                // Fidelity::All — the full reconstruction meets the
+                // session's error bound
+                let full = session.retrieve(&refactored, Fidelity::All).unwrap();
+                assert_eq!(full.dtype(), dtype, "{label}");
+                let full_err = full.linf_to(&data).unwrap();
+                assert!(within(full_err, eb), "{label}: full err {full_err} > eb {eb}");
+
+                // Fidelity::Classes(k) — error matches the measured
+                // annotation and is non-increasing in k
+                let mut last = f64::INFINITY;
+                for keep in 1..=nclasses {
+                    let approx = session.retrieve(&refactored, Fidelity::Classes(keep)).unwrap();
+                    let err = approx.linf_to(&data).unwrap();
+                    let recorded = header.segments[keep - 1].linf;
+                    assert!(
+                        within(err, recorded),
+                        "{label} keep={keep}: err {err} > recorded {recorded}"
+                    );
+                    assert!(
+                        err <= last * (1.0 + 1e-6) + 1e-12,
+                        "{label} keep={keep}: error increased {last} -> {err}"
+                    );
+                    last = err;
+                }
+
+                // Fidelity::ErrorBound(target) — retrieved error meets
+                // every satisfiable target
+                for factor in [2.0, 10.0, 100.0] {
+                    let target = eb * factor;
+                    let fid = Fidelity::ErrorBound(target);
+                    let approx = session.retrieve(&refactored, fid).unwrap();
+                    let err = approx.linf_to(&data).unwrap();
+                    assert!(
+                        within(err, target),
+                        "{label} target={target}: err {err} exceeds the requested bound"
+                    );
+                }
+
+                // Fidelity::ByteBudget(b) — the longest class prefix whose
+                // container-recorded size fits b, for every prefix boundary
+                for keep in 1..=nclasses {
+                    let budget = header.prefix_bytes(keep);
+                    assert_eq!(
+                        refactored.resolve(Fidelity::ByteBudget(budget)).unwrap(),
+                        keep,
+                        "{label} budget={budget}"
+                    );
+                    let got = session.retrieve(&refactored, Fidelity::ByteBudget(budget)).unwrap();
+                    let want = session.retrieve(&refactored, Fidelity::Classes(keep)).unwrap();
+                    assert_eq!(got, want, "{label} budget={budget}");
+                }
+                // over-generous budgets keep everything; an impossible
+                // budget is an error, not a silent coarsest-class fallback
+                let all = refactored.resolve(Fidelity::ByteBudget(u64::MAX)).unwrap();
+                assert_eq!(all, nclasses, "{label}");
+                let tiny = header.segments[0].bytes - 1;
+                assert!(
+                    session.retrieve(&refactored, Fidelity::ByteBudget(tiny)).is_err(),
+                    "{label}: sub-coarsest budget must be rejected"
+                );
+
+                // out-of-range class prefixes are rejected
+                assert!(session.retrieve(&refactored, Fidelity::Classes(0)).is_err());
+                let over = Fidelity::Classes(nclasses + 1);
+                assert!(session.retrieve(&refactored, over).is_err());
+            }
+        }
+    }
+}
+
+#[test]
+fn store_then_reload_preserves_every_fidelity() {
+    let shape = [17usize, 17];
+    let session = Session::builder()
+        .shape(&shape)
+        .codec(Codec::HuffRle)
+        .error_bound(1e-3)
+        .build()
+        .unwrap();
+    let data = field(&shape, Dtype::F64);
+    let refactored = session.refactor(&data).unwrap();
+
+    let path = std::env::temp_dir().join("mgr_api_matrix_roundtrip.mgr");
+    session.store_file(&refactored, &path).unwrap();
+    let reloaded = mgr::api::Refactored::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(reloaded.as_bytes(), refactored.as_bytes());
+
+    // a consumer session rebuilt from the container alone retrieves
+    // identically at every class prefix
+    let consumer = Session::builder().for_container(&reloaded).build().unwrap();
+    for keep in 1..=reloaded.nclasses() {
+        assert_eq!(
+            consumer.retrieve(&reloaded, Fidelity::Classes(keep)).unwrap(),
+            session.retrieve(&refactored, Fidelity::Classes(keep)).unwrap(),
+            "keep={keep}"
+        );
+    }
+}
+
+#[test]
+fn batch_refactor_matches_serial_across_dtypes() {
+    for dtype in [Dtype::F32, Dtype::F64] {
+        let shape = [9usize, 9];
+        let session = Session::builder()
+            .shape(&shape)
+            .dtype(dtype)
+            .error_bound(1e-2)
+            .workers(3)
+            .build()
+            .unwrap();
+        let fields: Vec<AnyTensor> = (0..6)
+            .map(|i| {
+                let f64_field: AnyTensor = Tensor::<f64>::from_fn(&shape, |idx| {
+                    ((idx[0] * 9 + idx[1]) as f64 * 0.13 + i as f64 * 0.7).cos()
+                })
+                .into();
+                f64_field.cast(dtype)
+            })
+            .collect();
+        let batch = session.refactor_batch(fields.clone());
+        assert_eq!(batch.len(), fields.len());
+        for (f, got) in fields.iter().zip(batch) {
+            let got = got.unwrap();
+            let want = session.refactor(f).unwrap();
+            assert_eq!(got.as_bytes(), want.as_bytes(), "{dtype}");
+        }
+    }
+}
