@@ -5,11 +5,14 @@
 #   make test        tier-1 verify: release build + Rust tests + Python tests
 #   make bench       kernel throughput report -> BENCH_kernels.json
 #   make bench-container  per-class container report -> BENCH_container.json
+#   make bench-reader     lazy vs buffered reader report -> BENCH_reader.json
 #   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
 #   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
+#   make check-docs  dead-link check over the markdown docs book
 
-.PHONY: artifacts test test-rust test-python bench bench-container container-demo lint doc
+.PHONY: artifacts test test-rust test-python bench bench-container bench-reader \
+        container-demo lint doc check-docs
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -29,6 +32,9 @@ bench:
 bench-container:
 	cargo bench --bench container_progressive
 
+bench-reader:
+	cargo bench --bench reader_lazy
+
 # Exercise the progressive-container CLI round trip: write a .mgr
 # container, retrieve a class prefix by count, by error target, and by
 # byte budget, then show the tier placement plan.
@@ -47,3 +53,8 @@ lint:
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	cargo test --doc -q
+
+# Verify every relative markdown link in the docs book (README, DESIGN,
+# docs/*.md) points at a file that exists.
+check-docs:
+	python3 tools/check_links.py

@@ -1,0 +1,126 @@
+//! Lazy-reader bench: full read vs prefix read vs staged upgrade on the
+//! standard Gray-Scott 33³ fixture, reporting both wall-clock GB/s and
+//! the **container bytes actually read** by each strategy. Doubles as
+//! the acceptance check for the lazy path (a one-class retrieval must
+//! touch well under half the container; the staged upgrade must read
+//! each byte exactly once). Writes `BENCH_reader.json` (see
+//! `docs/performance.md`).
+
+use std::io::Cursor;
+
+use mgr::api::{AnyTensor, Fidelity, OpenContainer, Session};
+use mgr::sim::GrayScott;
+use mgr::storage::ProgressiveReader;
+use mgr::util::bench::{bench_auto, report, BenchReport, Measurement, ReportRow};
+use mgr::util::stats::value_range;
+
+/// One report row: reconstruction throughput over the raw field bytes,
+/// plus the container bytes the strategy actually read.
+fn row(
+    shape: &[usize],
+    variant: &str,
+    axis: Option<usize>,
+    m: &Measurement,
+    raw_bytes: usize,
+    bytes_read: u64,
+) -> ReportRow {
+    ReportRow {
+        kernel: "reader".into(),
+        variant: variant.into(),
+        dtype: "f64".into(),
+        shape: shape.to_vec(),
+        axis,
+        median_s: m.median_s,
+        mad_rel: m.mad_rel,
+        gbps: m.gbps(raw_bytes),
+        speedup: None,
+        bytes: Some(bytes_read),
+    }
+}
+
+fn main() {
+    println!("== lazy container reader: full vs prefix vs staged upgrade ==");
+    let n = 33;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let shape = raw.shape().to_vec();
+    let field: AnyTensor = raw.into();
+    let session = Session::builder().shape(&shape).error_bound(eb).build().unwrap();
+    let container = session.refactor(&field).unwrap();
+    let bytes = container.as_bytes().to_vec();
+    let nclasses = container.nclasses();
+    let raw_bytes = field.nbytes();
+
+    // -- byte accounting (printed and asserted: this bench is also the
+    // acceptance check for the lazy path) --
+    let probe = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+    let total = probe.total_bytes();
+    let header_bytes = probe.bytes_read();
+    probe.retrieve(Fidelity::Classes(1)).unwrap();
+    let prefix1 = probe.bytes_read();
+    assert!(
+        prefix1 * 2 < total,
+        "Classes(1) read {prefix1} of {total} container bytes — must be under 50%"
+    );
+    probe.retrieve(Fidelity::All).unwrap();
+    assert_eq!(
+        probe.bytes_read(),
+        total,
+        "the upgrade path must read every payload byte exactly once"
+    );
+    println!(
+        "bytes read: header {header_bytes}, Classes(1) {prefix1} of {total} ({:.1}%), \
+         upgrade delta {}",
+        100.0 * prefix1 as f64 / total as f64,
+        total - prefix1
+    );
+
+    let mut rep = BenchReport::new("reader_lazy");
+
+    // old path: buffer + validate the whole container, decode everything
+    let m = bench_auto("buffered full read (ProgressiveReader)", 0.3, || {
+        let mut r = ProgressiveReader::<f64>::open(&bytes).unwrap();
+        std::hint::black_box(r.retrieve(r.nclasses()).unwrap());
+    });
+    report(&m, Some(raw_bytes));
+    rep.push(row(&shape, "buffered-full", None, &m, raw_bytes, total));
+
+    // lazy full read: same bytes, fetched segment by segment
+    let m = bench_auto("lazy full read (open + retrieve all)", 0.3, || {
+        let c = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+        std::hint::black_box(c.retrieve(Fidelity::All).unwrap());
+    });
+    report(&m, Some(raw_bytes));
+    rep.push(row(&shape, "lazy-full", None, &m, raw_bytes, total));
+
+    // lazy prefix read: the coarsest class only
+    let m = bench_auto("lazy prefix read (open + retrieve 1 class)", 0.3, || {
+        let c = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+        std::hint::black_box(c.retrieve(Fidelity::Classes(1)).unwrap());
+    });
+    report(&m, Some(raw_bytes));
+    rep.push(row(&shape, "lazy-prefix1", Some(1), &m, raw_bytes, prefix1));
+
+    // staged: coarse first, then upgrade to full — decodes every
+    // segment exactly once, so it should track the lazy full read
+    let m = bench_auto("staged read (retrieve 1, upgrade to all)", 0.3, || {
+        let c = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+        let coarse = c.retrieve(Fidelity::Classes(1)).unwrap();
+        std::hint::black_box(coarse.upgrade(Fidelity::All).unwrap());
+    });
+    report(&m, Some(raw_bytes));
+    rep.push(row(&shape, "staged-upgrade", None, &m, raw_bytes, total));
+
+    println!(
+        "container: {total} bytes over {raw_bytes} raw ({nclasses} classes); \
+         prefix-1 reads {:.1}% of the container",
+        100.0 * prefix1 as f64 / total as f64
+    );
+
+    match rep.write("BENCH_reader.json") {
+        Ok(()) => println!("wrote BENCH_reader.json ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write BENCH_reader.json: {e}"),
+    }
+}

@@ -9,14 +9,15 @@
 //! `f32`/`f64` generics behind [`AnyTensor`] so callers never
 //! monomorphize dispatch by hand.
 //!
-//! The four paper verbs:
+//! The paper verbs:
 //!
 //! | verb | method | result |
 //! |---|---|---|
 //! | create  | [`Session::refactor`] (batch: [`Session::refactor_batch`]) | [`Refactored`] |
 //! | retrieve | [`Session::retrieve`] with a [`Fidelity`] | [`AnyTensor`] |
 //! | store | [`Session::store`] / [`Session::store_file`] | bytes written |
-//! | place | [`Session::plan`] | [`Placement`](crate::storage::Placement) |
+//! | place | [`Session::plan`] / [`Session::plan_header`] | [`Placement`](crate::storage::Placement) |
+//! | open (lazy) | [`Session::open`] / [`Session::open_file`] | [`OpenContainer`] → [`Retrieved`] |
 //!
 //! [`Fidelity`] carries the three retrieval knobs: a class prefix
 //! ([`Fidelity::Classes`]), an absolute error target resolved against the
@@ -64,12 +65,48 @@
 //! # }
 //! ```
 //!
+//! ## Lazy opening and incremental upgrade
+//!
+//! Retrieval from disk (or any seekable source) does not need the whole
+//! container in memory: [`OpenContainer::open_file`] (or
+//! [`Session::open_file`]) parses the header once and then fetches +
+//! decodes **only the class segments a fidelity request needs**. The
+//! result is a [`Retrieved`], which remembers its source:
+//! [`Retrieved::upgrade`] re-retrieves at a higher fidelity by decoding
+//! only the *additional* segments — decoded classes stay cached on the
+//! shared reader.
+//!
+//! ```
+//! use std::io::Cursor;
+//! use mgr::api::{AnyTensor, Fidelity, OpenContainer, Session};
+//! use mgr::grid::Tensor;
+//!
+//! # fn main() -> mgr::api::Result<()> {
+//! let session = Session::builder().shape(&[9, 9]).build()?;
+//! let field: AnyTensor =
+//!     Tensor::<f64>::from_fn(&[9, 9], |idx| (idx[0] as f64 * 0.4).sin()).into();
+//! let refactored = session.refactor(&field)?;
+//!
+//! // lazily open the serialized form (a file works the same way)
+//! let container = OpenContainer::open(Cursor::new(refactored.as_bytes().to_vec()))?;
+//! let coarse = container.retrieve(Fidelity::Classes(1))?; // fetches class 0 only
+//! assert!(container.bytes_read() < container.total_bytes());
+//!
+//! // later: upgrade in place — only the missing segments are decoded
+//! let finer = coarse.upgrade(Fidelity::All)?;
+//! assert_eq!(finer.tensor(), &session.retrieve(&refactored, Fidelity::All)?);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! Consumers that only *read* containers need no session at all:
-//! [`Refactored::from_file`] + [`Refactored::retrieve`] are
-//! self-contained (retrieval dispatches on the container's own dtype —
-//! an `f64` session retrieves `f32` containers and vice versa), and
-//! [`SessionBuilder::for_container`] rebuilds a matching producer
-//! session from the container's header when one is needed.
+//! [`Refactored::from_file`] + [`Refactored::retrieve`] (fully
+//! buffered) and [`OpenContainer::open_file`] + [`Retrieved::upgrade`]
+//! (lazy) are self-contained — retrieval dispatches on the container's
+//! own dtype, so an `f64` session retrieves `f32` containers and vice
+//! versa — and [`SessionBuilder::for_container`] /
+//! [`SessionBuilder::for_header`] rebuild a matching producer session
+//! from a container when one is needed.
 
 #![warn(missing_docs)]
 
@@ -80,10 +117,10 @@ mod tensor;
 
 pub use error::{Error, Result};
 pub use fidelity::Fidelity;
-pub use session::{Refactored, Session, SessionBuilder};
+pub use session::{OpenContainer, Refactored, Retrieved, Session, SessionBuilder};
 pub use tensor::{AnyTensor, Dtype};
 
 // One-stop imports for facade callers: the codec knob and the types the
-// verbs return.
+// verbs return or resolve against.
 pub use crate::compress::{Codec, Compressed, CompressorStats};
-pub use crate::storage::{Placement, TierSpec};
+pub use crate::storage::{ContainerHeader, Placement, TierSpec};

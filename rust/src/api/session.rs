@@ -1,40 +1,164 @@
-//! The refactoring session: builder, facade verbs, and the dtype-erased
-//! refactored representation.
+//! The refactoring session: builder, facade verbs, the dtype-erased
+//! refactored representation, and the lazy open/retrieve/upgrade path.
 
-use std::io::Write;
+use std::fmt;
+use std::fs::File;
+use std::io::{BufReader, Cursor, Read, Seek, Write};
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::api::error::{Error, Result};
 use crate::api::fidelity::Fidelity;
 use crate::api::tensor::{AnyTensor, Dtype};
 use crate::compress::{Codec, Compressed, CompressorStats};
 use crate::coordinator::run_pooled;
-use crate::grid::{max_levels, Hierarchy, Tensor};
+use crate::grid::{max_levels, Hierarchy};
 use crate::storage::container::peek_dtype;
 use crate::storage::{
-    place_classes, ContainerHeader, Placement, ProgressiveReader, ProgressiveWriter, TierSpec,
+    place_classes, ContainerHeader, ContainerReader, LazyReader, Placement, ProgressiveWriter,
+    ReadSeek, TierSpec,
 };
-use crate::util::Scalar;
+
+/// Container bytes behind an `Arc`: clones of a [`Refactored`] (and the
+/// in-memory cursors its cached reader reads through) share one
+/// allocation instead of copying the container.
+#[derive(Clone, Debug)]
+struct SharedBytes(Arc<Vec<u8>>);
+
+impl AsRef<[u8]> for SharedBytes {
+    fn as_ref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+/// Boxed seekable source feeding a dtype-erased lazy reader (files and
+/// in-memory cursors flow through the same reader type).
+type BoxSource = Box<dyn ReadSeek + Send>;
+
+/// Per-dtype lazy reader with its decoded-class cache (see
+/// [`crate::storage::reader::LazyReader`]), erased behind one enum so
+/// [`Refactored`], [`OpenContainer`], and [`Retrieved`] need no type
+/// parameter.
+enum TypedReader {
+    F32(LazyReader<f32, BoxSource>),
+    F64(LazyReader<f64, BoxSource>),
+}
+
+impl TypedReader {
+    /// Open + validate once; dispatches on the *container's* dtype.
+    fn open(src: BoxSource) -> Result<Self> {
+        let raw = ContainerReader::open(src).map_err(Error::Container)?;
+        match raw.header().dtype_bytes {
+            4 => Ok(TypedReader::F32(LazyReader::new(raw).map_err(Error::Container)?)),
+            8 => Ok(TypedReader::F64(LazyReader::new(raw).map_err(Error::Container)?)),
+            _ => unreachable!("parse_prefix validated the scalar width"),
+        }
+    }
+
+    fn header(&self) -> &ContainerHeader {
+        match self {
+            TypedReader::F32(r) => r.header(),
+            TypedReader::F64(r) => r.header(),
+        }
+    }
+
+    fn bytes_read(&self) -> u64 {
+        match self {
+            TypedReader::F32(r) => r.bytes_read(),
+            TypedReader::F64(r) => r.bytes_read(),
+        }
+    }
+
+    fn total_bytes(&self) -> u64 {
+        match self {
+            TypedReader::F32(r) => r.total_bytes(),
+            TypedReader::F64(r) => r.total_bytes(),
+        }
+    }
+
+    fn retrieve(&mut self, keep: usize) -> Result<AnyTensor> {
+        match self {
+            TypedReader::F32(r) => Ok(AnyTensor::F32(r.retrieve(keep).map_err(Error::Compress)?)),
+            TypedReader::F64(r) => Ok(AnyTensor::F64(r.retrieve(keep).map_err(Error::Compress)?)),
+        }
+    }
+}
+
+/// Resolve a fidelity request to a class-prefix length against a
+/// container's measured per-class annotations (shared by every
+/// retrieval front door: [`Refactored`], [`OpenContainer`],
+/// [`Retrieved::upgrade`]).
+fn resolve_fidelity(header: &ContainerHeader, fidelity: Fidelity) -> Result<usize> {
+    let n = header.nclasses();
+    match fidelity {
+        Fidelity::All => Ok(n),
+        Fidelity::Classes(k) => {
+            if !(1..=n).contains(&k) {
+                Err(Error::Fidelity(format!("class prefix {k} outside 1..={n}")))
+            } else {
+                Ok(k)
+            }
+        }
+        Fidelity::ErrorBound(e) => {
+            if !(e.is_finite() && e > 0.0) {
+                return Err(Error::Fidelity(format!(
+                    "error target must be positive and finite, got {e}"
+                )));
+            }
+            Ok(header.select_keep(e))
+        }
+        Fidelity::ByteBudget(b) => header.select_keep_bytes(b).ok_or_else(|| {
+            Error::Fidelity(format!(
+                "byte budget {b} is smaller than the coarsest class ({} bytes)",
+                header.segments[0].bytes
+            ))
+        }),
+    }
+}
 
 /// A refactored field: the dtype-erased, serialized progressive
 /// representation ([`crate::storage::container`] bytes plus its parsed
 /// header). This is what sessions produce, what sinks store, and what
 /// retrieval consumes — at any fidelity, without knowing the dtype.
-#[derive(Clone, Debug)]
+///
+/// Retrieval caches a lazy reader internally (validated once, decoded
+/// classes kept), so repeated and widening retrieves decode each class
+/// segment at most once. Clones share the bytes *and* the cache.
+#[derive(Clone)]
 pub struct Refactored {
-    bytes: Vec<u8>,
+    bytes: SharedBytes,
     header: ContainerHeader,
+    reader: Arc<Mutex<Option<TypedReader>>>,
+}
+
+impl fmt::Debug for Refactored {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Refactored")
+            .field("dtype", &self.dtype())
+            .field("shape", &self.shape())
+            .field("nclasses", &self.nclasses())
+            .field("nbytes", &self.nbytes())
+            .finish_non_exhaustive()
+    }
 }
 
 impl Refactored {
+    /// Wrap already-validated parts (the facade's refactor verbs).
+    fn from_parts(bytes: Vec<u8>, header: ContainerHeader) -> Self {
+        Refactored {
+            bytes: SharedBytes(Arc::new(bytes)),
+            header,
+            reader: Arc::new(Mutex::new(None)),
+        }
+    }
+
     /// Wrap (and fully validate) serialized container bytes.
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
         // peek first so truncated/foreign files get the descriptive
         // magic/header error rather than a generic parse failure
         peek_dtype(&bytes).map_err(Error::Container)?;
         let (header, _) = ContainerHeader::parse(&bytes).map_err(Error::Container)?;
-        Ok(Refactored { bytes, header })
+        Ok(Refactored::from_parts(bytes, header))
     }
 
     /// Read and validate a container file.
@@ -66,12 +190,12 @@ impl Refactored {
 
     /// The serialized container (header + segment payloads).
     pub fn as_bytes(&self) -> &[u8] {
-        &self.bytes
+        &self.bytes.0
     }
 
     /// Total serialized size in bytes.
     pub fn nbytes(&self) -> usize {
-        self.bytes.len()
+        self.bytes.0.len()
     }
 
     /// Reconstruct a reduced-fidelity tensor from this representation,
@@ -79,47 +203,200 @@ impl Refactored {
     /// read-only consumer needs no [`Session`] at all
     /// ([`Session::retrieve`] delegates here).
     ///
-    /// Cost note: each call re-validates the container and buffers all
-    /// segment payloads before decoding the requested prefix — fine for
-    /// CLI/workflow use; a decode-time-dominated loop over many prefixes
-    /// of a huge container would want a cached reader (future work,
-    /// tracked in ROADMAP).
+    /// The first call constructs a cached lazy reader over the shared
+    /// bytes (validation happens exactly once); subsequent calls — any
+    /// fidelity, any clone of this value — reuse its decoded-class
+    /// cache, so each class segment is entropy-decoded at most once per
+    /// `Refactored` lineage.
     pub fn retrieve(&self, fidelity: Fidelity) -> Result<AnyTensor> {
         let keep = self.resolve(fidelity)?;
-        match self.dtype() {
-            Dtype::F32 => retrieve_typed::<f32>(self, keep).map(AnyTensor::F32),
-            Dtype::F64 => retrieve_typed::<f64>(self, keep).map(AnyTensor::F64),
+        let mut guard = self.reader.lock().unwrap();
+        if guard.is_none() {
+            let src: BoxSource = Box::new(Cursor::new(self.bytes.clone()));
+            *guard = Some(TypedReader::open(src)?);
         }
+        guard.as_mut().expect("initialized above").retrieve(keep)
+    }
+
+    /// Open this representation for explicitly progressive consumption:
+    /// an [`OpenContainer`] whose [`Retrieved`] results can be
+    /// [`upgrade`](Retrieved::upgrade)d class-by-class. Shares the
+    /// underlying bytes (no copy), but starts a decode cache of its own.
+    pub fn open(&self) -> Result<OpenContainer> {
+        OpenContainer::open(Cursor::new(self.bytes.clone()))
+    }
+
+    /// Drop the cached reader and its decoded classes, reclaiming the
+    /// memory retrievals accumulate (up to roughly one decoded copy of
+    /// the full tensor after a `Fidelity::All` retrieve). The container
+    /// bytes are untouched; the next retrieve re-validates and starts a
+    /// fresh cache. Affects every clone sharing this cache.
+    pub fn drop_cache(&self) {
+        *self.reader.lock().unwrap() = None;
     }
 
     /// Resolve a fidelity request to a class-prefix length against this
     /// container's measured per-class annotations.
     pub fn resolve(&self, fidelity: Fidelity) -> Result<usize> {
-        let n = self.nclasses();
-        match fidelity {
-            Fidelity::All => Ok(n),
-            Fidelity::Classes(k) => {
-                if !(1..=n).contains(&k) {
-                    Err(Error::Fidelity(format!("class prefix {k} outside 1..={n}")))
-                } else {
-                    Ok(k)
-                }
-            }
-            Fidelity::ErrorBound(e) => {
-                if !(e.is_finite() && e > 0.0) {
-                    return Err(Error::Fidelity(format!(
-                        "error target must be positive and finite, got {e}"
-                    )));
-                }
-                Ok(self.header.select_keep(e))
-            }
-            Fidelity::ByteBudget(b) => self.header.select_keep_bytes(b).ok_or_else(|| {
-                Error::Fidelity(format!(
-                    "byte budget {b} is smaller than the coarsest class ({} bytes)",
-                    self.header.segments[0].bytes
-                ))
-            }),
-        }
+        resolve_fidelity(&self.header, fidelity)
+    }
+}
+
+/// A progressive container opened for **lazy** retrieval from any
+/// seekable source (a file, an in-memory cursor): the header is fetched
+/// and validated once at open, and each class segment's bytes are
+/// fetched and decoded only when a retrieval first needs them. Decoded
+/// classes stay cached, which is what makes
+/// [`Retrieved::upgrade`] an *incremental* operation.
+///
+/// This is the disk-friendly counterpart of [`Refactored`]: a
+/// `Refactored` owns the full container bytes in memory; an
+/// `OpenContainer` owns only the header plus whatever prefix retrievals
+/// have materialized. [`OpenContainer::bytes_read`] exposes exactly how
+/// much of the source has been touched.
+pub struct OpenContainer {
+    header: ContainerHeader,
+    reader: Arc<Mutex<TypedReader>>,
+}
+
+impl fmt::Debug for OpenContainer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("OpenContainer")
+            .field("dtype", &self.dtype())
+            .field("shape", &self.shape())
+            .field("nclasses", &self.nclasses())
+            .finish_non_exhaustive()
+    }
+}
+
+impl OpenContainer {
+    /// Open (and validate, once) a container from any seekable source.
+    /// Reads the header bytes only; dispatches on the *container's*
+    /// dtype, so no session or type parameter is needed.
+    pub fn open(src: impl Read + Seek + Send + 'static) -> Result<Self> {
+        let reader = TypedReader::open(Box::new(src))?;
+        let header = reader.header().clone();
+        Ok(OpenContainer {
+            header,
+            reader: Arc::new(Mutex::new(reader)),
+        })
+    }
+
+    /// [`OpenContainer::open`] on a file, without reading the whole
+    /// file — retrieval fetches only the segments a fidelity needs.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open(BufReader::new(File::open(path.as_ref())?))
+    }
+
+    /// The parsed container header (shape, codec, quantizer, per-class
+    /// measured error annotations and segment sizes).
+    pub fn header(&self) -> &ContainerHeader {
+        &self.header
+    }
+
+    /// Scalar precision of the refactored field.
+    pub fn dtype(&self) -> Dtype {
+        Dtype::from_bytes(self.header.dtype_bytes).expect("validated header")
+    }
+
+    /// Grid shape of the refactored field.
+    pub fn shape(&self) -> &[usize] {
+        &self.header.shape
+    }
+
+    /// Number of coefficient classes.
+    pub fn nclasses(&self) -> usize {
+        self.header.nclasses()
+    }
+
+    /// Resolve a fidelity request to a class-prefix length against the
+    /// container's measured per-class annotations.
+    pub fn resolve(&self, fidelity: Fidelity) -> Result<usize> {
+        resolve_fidelity(&self.header, fidelity)
+    }
+
+    /// Cumulative bytes fetched from the source (header included) —
+    /// after a prefix retrieval this sits far below
+    /// [`OpenContainer::total_bytes`].
+    pub fn bytes_read(&self) -> u64 {
+        self.reader.lock().unwrap().bytes_read()
+    }
+
+    /// Total container size in bytes (header plus every payload).
+    pub fn total_bytes(&self) -> u64 {
+        self.reader.lock().unwrap().total_bytes()
+    }
+
+    /// Reconstruct a reduced-fidelity tensor, fetching and decoding only
+    /// the class segments of the winning prefix that are not cached yet.
+    /// The result remembers its source, so it can be
+    /// [`upgrade`](Retrieved::upgrade)d later.
+    pub fn retrieve(&self, fidelity: Fidelity) -> Result<Retrieved> {
+        let keep = self.resolve(fidelity)?;
+        let tensor = self.reader.lock().unwrap().retrieve(keep)?;
+        Ok(Retrieved {
+            tensor,
+            keep,
+            reader: Arc::clone(&self.reader),
+        })
+    }
+}
+
+/// A retrieval that remembers where it came from: the reconstruction
+/// plus a handle on the (shared, caching) reader that produced it.
+/// [`Retrieved::upgrade`] re-resolves a fidelity against the same
+/// container and decodes **only the additional class segments** beyond
+/// what any prior retrieval on this container already materialized —
+/// the paper's "transfer at low fidelity, refine later" loop without
+/// re-reading or re-decoding the prefix.
+#[derive(Clone)]
+pub struct Retrieved {
+    tensor: AnyTensor,
+    keep: usize,
+    reader: Arc<Mutex<TypedReader>>,
+}
+
+impl fmt::Debug for Retrieved {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Retrieved")
+            .field("dtype", &self.tensor.dtype())
+            .field("shape", &self.tensor.shape())
+            .field("keep", &self.keep)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Retrieved {
+    /// The reconstructed tensor.
+    pub fn tensor(&self) -> &AnyTensor {
+        &self.tensor
+    }
+
+    /// Consume into the reconstructed tensor.
+    pub fn into_tensor(self) -> AnyTensor {
+        self.tensor
+    }
+
+    /// How many coefficient classes the reconstruction carries.
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
+    /// Retrieve again at a (typically higher) fidelity, reusing every
+    /// class the shared reader has already decoded: upgrading from `k`
+    /// to `k'` classes fetches and decodes exactly the `k' - k` new
+    /// segments, and `upgrade(Classes(k'))` is bit-identical to a fresh
+    /// retrieve of `Classes(k')` from the same container. A fidelity at
+    /// or below the current one touches no new bytes at all.
+    pub fn upgrade(&self, fidelity: Fidelity) -> Result<Retrieved> {
+        let mut reader = self.reader.lock().unwrap();
+        let keep = resolve_fidelity(reader.header(), fidelity)?;
+        let tensor = reader.retrieve(keep)?;
+        Ok(Retrieved {
+            tensor,
+            keep,
+            reader: Arc::clone(&self.reader),
+        })
     }
 }
 
@@ -144,6 +421,9 @@ pub struct SessionBuilder {
     workers: usize,
     threads: Option<usize>,
     par_threshold: Option<usize>,
+    /// Deferred configuration error (builder methods cannot fail in
+    /// place); surfaced as [`enum@Error::Build`] by `build()`.
+    poisoned: Option<String>,
 }
 
 impl Default for SessionBuilder {
@@ -164,6 +444,7 @@ impl Default for SessionBuilder {
                 .unwrap_or(4),
             threads: None,
             par_threshold: None,
+            poisoned: None,
         }
     }
 }
@@ -233,17 +514,31 @@ impl SessionBuilder {
     /// Preset shape/dtype/codec/error-bound from an existing container,
     /// so a consumer can build a matching session without re-stating the
     /// producer's configuration.
-    pub fn for_container(mut self, r: &Refactored) -> Self {
-        self.shape = Some(r.shape().to_vec());
-        self.dtype = r.dtype();
-        self.codec = r.header().codec;
-        self.error_bound = r.header().quant.error_bound;
-        self.nlevels = Some(r.header().nlevels);
+    pub fn for_container(self, r: &Refactored) -> Self {
+        self.for_header(r.header())
+    }
+
+    /// [`SessionBuilder::for_container`] against a bare container header
+    /// — what a lazily opened [`OpenContainer`] carries. A hand-built
+    /// header with an unsupported scalar width poisons the builder, so
+    /// `build()` fails loudly instead of presetting the wrong dtype.
+    pub fn for_header(mut self, h: &ContainerHeader) -> Self {
+        self.shape = Some(h.shape.clone());
+        match Dtype::from_bytes(h.dtype_bytes) {
+            Ok(dtype) => self.dtype = dtype,
+            Err(e) => self.poisoned = Some(format!("for_header: {e}")),
+        }
+        self.codec = h.codec;
+        self.error_bound = h.quant.error_bound;
+        self.nlevels = Some(h.nlevels);
         self
     }
 
     /// Validate the configuration and wire up the session.
     pub fn build(self) -> Result<Session> {
+        if let Some(msg) = self.poisoned {
+            return Err(Error::Build(msg));
+        }
         let shape = self
             .shape
             .ok_or_else(|| Error::Build("shape is required (SessionBuilder::shape)".into()))?;
@@ -388,7 +683,7 @@ impl Session {
                 .map_err(Error::Compress)?,
             _ => unreachable!("check_input verified the dtype"),
         };
-        Ok(Refactored { bytes, header })
+        Ok(Refactored::from_parts(bytes, header))
     }
 
     /// Refactor many fields on the coordinator's worker pool
@@ -414,7 +709,7 @@ impl Session {
                         .map_err(Error::Compress)?
                 }
             };
-            Ok(Refactored { bytes, header })
+            Ok(Refactored::from_parts(bytes, header))
         })
     }
 
@@ -425,6 +720,21 @@ impl Session {
     /// session's configuration (delegates to [`Refactored::retrieve`]).
     pub fn retrieve(&self, src: &Refactored, fidelity: Fidelity) -> Result<AnyTensor> {
         src.retrieve(fidelity)
+    }
+
+    /// **Open**: lazily open a container from any seekable source for
+    /// progressive retrieval — header fetched once, segments fetched and
+    /// decoded on demand, [`Retrieved::upgrade`] incremental. Like
+    /// retrieval it is container-dtype-dispatched and session-free
+    /// (delegates to [`OpenContainer::open`]).
+    pub fn open(&self, src: impl Read + Seek + Send + 'static) -> Result<OpenContainer> {
+        OpenContainer::open(src)
+    }
+
+    /// [`Session::open`] on a container file, without reading the whole
+    /// file into memory (delegates to [`OpenContainer::open_file`]).
+    pub fn open_file(&self, path: impl AsRef<Path>) -> Result<OpenContainer> {
+        OpenContainer::open_file(path)
     }
 
     /// **Store**: write the serialized container to any byte sink.
@@ -445,7 +755,14 @@ impl Session {
     /// by value density — the "intelligent movement" of the paper's
     /// Fig 1.
     pub fn plan(&self, r: &Refactored) -> Result<Placement> {
-        let class_bytes: Vec<u64> = r.header().segments.iter().map(|s| s.bytes).collect();
+        self.plan_header(r.header())
+    }
+
+    /// [`Session::plan`] against a bare container header — placement
+    /// needs only the recorded per-class segment sizes, so a lazily
+    /// opened [`OpenContainer`] plans without touching any payload.
+    pub fn plan_header(&self, header: &ContainerHeader) -> Result<Placement> {
+        let class_bytes: Vec<u64> = header.segments.iter().map(|s| s.bytes).collect();
         Ok(place_classes(&class_bytes, &self.tiers))
     }
 
@@ -502,14 +819,10 @@ impl Session {
     }
 }
 
-fn retrieve_typed<T: Scalar>(src: &Refactored, keep: usize) -> Result<Tensor<T>> {
-    let mut reader = ProgressiveReader::<T>::open(src.as_bytes()).map_err(Error::Container)?;
-    reader.retrieve(keep).map_err(Error::Compress)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grid::Tensor;
 
     fn smooth(shape: &[usize]) -> AnyTensor {
         Tensor::<f64>::from_fn(shape, |idx| {
@@ -663,6 +976,109 @@ mod tests {
         assert_eq!(consumer.dtype(), producer.dtype());
         assert_eq!(consumer.codec(), Codec::HuffRle);
         assert_eq!(consumer.error_bound(), 1e-2);
+    }
+
+    #[test]
+    fn open_container_lazy_retrieve_and_upgrade() {
+        let s = session(&[17, 17]);
+        let data = smooth(&[17, 17]);
+        let r = s.refactor(&data).unwrap();
+        let oc = r.open().unwrap();
+        assert_eq!(oc.dtype(), r.dtype());
+        assert_eq!(oc.shape(), r.shape());
+        // open touched the header only
+        assert_eq!(oc.bytes_read(), r.header().header_bytes() as u64);
+        assert_eq!(oc.total_bytes() as usize, r.nbytes());
+
+        let coarse = oc.retrieve(Fidelity::Classes(1)).unwrap();
+        assert_eq!(coarse.keep(), 1);
+        assert_eq!(coarse.tensor(), &r.retrieve(Fidelity::Classes(1)).unwrap());
+        let after_coarse = oc.bytes_read();
+        assert!(after_coarse < oc.total_bytes());
+
+        // upgrade decodes only the delta and matches a fresh retrieval
+        let full = coarse.upgrade(Fidelity::All).unwrap();
+        assert_eq!(full.keep(), r.nclasses());
+        assert_eq!(full.tensor(), &r.retrieve(Fidelity::All).unwrap());
+        assert_eq!(oc.bytes_read(), oc.total_bytes());
+        // downgrading reuses the cache: no new bytes, same coarse tensor
+        let again = full.upgrade(Fidelity::Classes(1)).unwrap();
+        assert_eq!(again.tensor(), coarse.tensor());
+        assert_eq!(oc.bytes_read(), oc.total_bytes());
+    }
+
+    #[test]
+    fn session_open_file_reads_lazily() {
+        let s = session(&[17, 17]);
+        let r = s.refactor(&smooth(&[17, 17])).unwrap();
+        let path = std::env::temp_dir().join("mgr_api_open_file_test.mgr");
+        s.store_file(&r, &path).unwrap();
+        let oc = s.open_file(&path).unwrap();
+        let got = oc.retrieve(Fidelity::Classes(2)).unwrap();
+        assert_eq!(got.tensor(), &r.retrieve(Fidelity::Classes(2)).unwrap());
+        // only the header + the two coarsest segments came off disk
+        let expect = r.header().header_bytes() as u64 + r.header().prefix_bytes(2);
+        assert_eq!(oc.bytes_read(), expect);
+        // planning against the lazy handle needs no payload at all
+        let placement = s.plan_header(oc.header()).unwrap();
+        assert_eq!(placement.assignment.len(), r.nclasses());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn repeated_retrieves_share_the_cached_reader() {
+        // the PR-3 review item: retrieval used to re-validate and
+        // re-buffer every segment payload per call — now widening and
+        // narrowing retrieves reuse one cached reader and stay
+        // bit-identical to each other
+        let s = session(&[17, 17]);
+        let r = s.refactor(&smooth(&[17, 17])).unwrap();
+        let one_a = r.retrieve(Fidelity::Classes(1)).unwrap();
+        let all = r.retrieve(Fidelity::All).unwrap();
+        let one_b = r.retrieve(Fidelity::Classes(1)).unwrap();
+        assert_eq!(one_a, one_b);
+        // clones share bytes and cache; results stay identical
+        let clone = r.clone();
+        assert_eq!(clone.retrieve(Fidelity::All).unwrap(), all);
+        assert!(format!("{clone:?}").contains("Refactored"));
+    }
+
+    #[test]
+    fn drop_cache_keeps_retrievals_identical() {
+        let s = session(&[9, 9]);
+        let r = s.refactor(&smooth(&[9, 9])).unwrap();
+        let before = r.retrieve(Fidelity::All).unwrap();
+        r.drop_cache();
+        // the next retrieve re-validates from the (untouched) bytes and
+        // rebuilds the cache — bit-identical result
+        assert_eq!(r.retrieve(Fidelity::All).unwrap(), before);
+    }
+
+    #[test]
+    fn for_header_with_invalid_scalar_width_fails_at_build() {
+        let s = session(&[9, 9]);
+        let mut header = s.refactor(&smooth(&[9, 9])).unwrap().header().clone();
+        header.dtype_bytes = 2; // hand-built header with an unsupported width
+        let err = Session::builder().for_header(&header).build().err().expect("must fail");
+        assert!(matches!(err, Error::Build(_)));
+        assert!(err.to_string().contains("scalar width"), "{err}");
+    }
+
+    #[test]
+    fn for_header_presets_match_for_container() {
+        let producer = Session::builder()
+            .shape(&[17, 17])
+            .codec(Codec::HuffRle)
+            .error_bound(1e-2)
+            .build()
+            .unwrap();
+        let r = producer.refactor(&smooth(&[17, 17])).unwrap();
+        let via_header = Session::builder().for_header(r.header()).build().unwrap();
+        let via_container = Session::builder().for_container(&r).build().unwrap();
+        assert_eq!(via_header.shape(), via_container.shape());
+        assert_eq!(via_header.dtype(), via_container.dtype());
+        assert_eq!(via_header.codec(), via_container.codec());
+        assert_eq!(via_header.error_bound(), via_container.error_bound());
     }
 
     #[test]

@@ -13,16 +13,21 @@
 //! * `retrieve` — reconstruct a fidelity prefix from a container:
 //!   `--keep K` classes, `--error E` (smallest prefix whose recorded L∞
 //!   annotation meets `E`), or `--bytes B` (longest prefix fitting the
-//!   byte budget). The selectors are mutually exclusive.
-//! * `plan` — place a container's class segments across storage tiers.
+//!   byte budget). The selectors are mutually exclusive. The container
+//!   is opened **lazily**: only the header and the winning prefix's
+//!   segments are read off disk. `--upgrade-from K` demonstrates the
+//!   incremental path — retrieve `K` classes first, then upgrade to the
+//!   requested fidelity decoding only the delta segments.
+//! * `plan` — place a container's class segments across storage tiers
+//!   (reads the header only; no payload is touched).
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
 //! * `serve` — run a batch of jobs through the coordinator worker pool.
 //! * `pjrt-check` — execute the AOT artifacts and verify them against the
 //!   native core (the cross-layer integration check).
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use mgr::api::{AnyTensor, Dtype, Fidelity, Refactored, Session};
+use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, Session};
 use mgr::compress::Codec;
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
 use mgr::grid::Tensor;
@@ -106,13 +111,28 @@ fn parse_fidelity(args: &Args) -> Result<Fidelity> {
     Ok(Fidelity::from_flags(keep, error, bytes)?)
 }
 
-fn container_arg(args: &Args) -> Result<Refactored> {
+/// Lazily open the `--in FILE` container: header bytes only — segment
+/// payloads stay on disk until a retrieval needs them.
+fn open_arg(args: &Args) -> Result<OpenContainer> {
     let path = args
         .get("in")
         .map(str::to_string)
         .or_else(|| args.positional.first().cloned())
         .ok_or_else(|| anyhow!("expected --in FILE (or a positional path)"))?;
-    Refactored::from_file(&path).with_context(|| format!("opening container {path}"))
+    OpenContainer::open_file(&path).with_context(|| format!("opening container {path}"))
+}
+
+/// Parse the optional `--upgrade-from K` staging knob of `retrieve`.
+fn parse_upgrade_from(args: &Args) -> Result<Option<usize>> {
+    args.get("upgrade-from")
+        .map(|v| {
+            let k = v
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--upgrade-from expects an integer, got '{v}'"))?;
+            ensure!(k >= 1, "--upgrade-from must be at least 1");
+            Ok(k)
+        })
+        .transpose()
 }
 
 fn run(args: &Args) -> Result<()> {
@@ -133,7 +153,8 @@ fn run(args: &Args) -> Result<()> {
                  \x20 info                      artifact + device summary\n\
                  \x20 refactor   [--shape NxNxN --input grayscott|random --dtype f32|f64]\n\
                  \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
-                 \x20 retrieve   --in f.mgr [--keep K | --error E | --bytes B] [--dump raw.bin]\n\
+                 \x20 retrieve   --in f.mgr [--keep K | --error E | --bytes B]\n\
+                 \x20            [--upgrade-from K] [--dump raw.bin]\n\
                  \x20 plan       --in f.mgr\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
                  \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
@@ -216,14 +237,14 @@ fn refactor(args: &Args) -> Result<()> {
 }
 
 fn retrieve(args: &Args) -> Result<()> {
-    let refactored = container_arg(args)?;
-    let header = refactored.header();
+    let container = open_arg(args)?;
+    let header = container.header().clone();
     println!(
         "container: shape {:?} {}, {} levels, {} classes, {} codec, eb {:.1e}",
-        refactored.shape(),
-        refactored.dtype(),
+        container.shape(),
+        container.dtype(),
         header.nlevels,
-        refactored.nclasses(),
+        container.nclasses(),
         header.codec.name(),
         header.quant.error_bound
     );
@@ -236,11 +257,11 @@ fn retrieve(args: &Args) -> Result<()> {
     }
 
     let fidelity = parse_fidelity(args)?;
-    let keep = refactored.resolve(fidelity)?;
+    let keep = container.resolve(fidelity)?;
     match fidelity {
         Fidelity::ErrorBound(target) => println!(
             "--error {target:.1e}: smallest satisfying prefix is {keep}/{} classes{}",
-            refactored.nclasses(),
+            container.nclasses(),
             if header.segments[keep - 1].linf > target {
                 " (target unsatisfiable; keeping everything)"
             } else {
@@ -249,23 +270,49 @@ fn retrieve(args: &Args) -> Result<()> {
         ),
         Fidelity::ByteBudget(budget) => println!(
             "--bytes {budget}: longest fitting prefix is {keep}/{} classes ({} payload bytes)",
-            refactored.nclasses(),
+            container.nclasses(),
             header.prefix_bytes(keep)
         ),
         _ => {}
     }
 
-    // retrieval is self-contained on the container — no session needed
-    let (tensor, secs) = time(|| refactored.retrieve(Fidelity::Classes(keep)));
-    let tensor = tensor?;
-    let read = header.prefix_bytes(keep);
+    // retrieval is lazy and self-contained on the container — no session
+    // needed, and only the winning prefix's segments leave the disk
+    let tensor = if let Some(k0) = parse_upgrade_from(args)? {
+        container.resolve(Fidelity::Classes(k0))?;
+        ensure!(
+            k0 <= keep,
+            "--upgrade-from {k0} exceeds the requested fidelity's {keep} classes"
+        );
+        let (coarse, secs) = time(|| container.retrieve(Fidelity::Classes(k0)));
+        let coarse = coarse?;
+        let staged = container.bytes_read();
+        println!(
+            "stage 1: retrieved {k0}/{} classes in {:.1} ms ({staged} container bytes read)",
+            container.nclasses(),
+            secs * 1e3
+        );
+        let (upgraded, secs) = time(|| coarse.upgrade(fidelity));
+        let upgraded = upgraded?;
+        println!(
+            "stage 2: upgraded to {keep} classes in {:.1} ms — only {} new bytes read",
+            secs * 1e3,
+            container.bytes_read() - staged
+        );
+        upgraded.into_tensor()
+    } else {
+        let (retrieved, secs) = time(|| container.retrieve(fidelity));
+        let retrieved = retrieved?;
+        println!("retrieved in {:.1} ms", secs * 1e3);
+        retrieved.into_tensor()
+    };
     println!(
-        "retrieved {keep}/{} classes ({read} of {} payload bytes, {:.1}%) in {:.1} ms \
+        "kept {keep}/{} classes — read {} of {} container bytes ({:.1}%) \
          — recorded L∞ {:.3e}, RMSE {:.3e}",
-        refactored.nclasses(),
-        header.payload_bytes(),
-        100.0 * read as f64 / header.payload_bytes() as f64,
-        secs * 1e3,
+        container.nclasses(),
+        container.bytes_read(),
+        container.total_bytes(),
+        100.0 * container.bytes_read() as f64 / container.total_bytes() as f64,
         header.segments[keep - 1].linf,
         header.segments[keep - 1].rmse
     );
@@ -283,14 +330,16 @@ fn retrieve(args: &Args) -> Result<()> {
 }
 
 fn plan(args: &Args) -> Result<()> {
-    let refactored = container_arg(args)?;
-    let session = Session::builder().for_container(&refactored).build()?;
-    let placement = session.plan(&refactored)?;
+    let container = open_arg(args)?;
+    let session = Session::builder().for_header(container.header()).build()?;
+    let placement = session.plan_header(container.header())?;
     println!(
-        "placement of {} class segments ({} payload bytes) across {} tiers:",
-        refactored.nclasses(),
-        refactored.header().payload_bytes(),
-        session.tiers().len()
+        "placement of {} class segments ({} payload bytes) across {} tiers \
+         (planned from the {}-byte header alone):",
+        container.nclasses(),
+        container.header().payload_bytes(),
+        session.tiers().len(),
+        container.bytes_read()
     );
     for (k, tier) in placement.assignment.iter().enumerate() {
         println!(
@@ -303,7 +352,7 @@ fn plan(args: &Args) -> Result<()> {
             }
         );
     }
-    for keep in 1..=refactored.nclasses() {
+    for keep in 1..=container.nclasses() {
         println!(
             "  retrieve {keep} classes: {:.3} s",
             placement.retrieval_time(session.tiers(), keep)?
@@ -456,6 +505,15 @@ mod tests {
         let bytes = parse_fidelity(&args("retrieve --bytes 4096")).unwrap();
         assert_eq!(bytes, Fidelity::ByteBudget(4096));
         assert_eq!(parse_fidelity(&args("retrieve")).unwrap(), Fidelity::All);
+    }
+
+    #[test]
+    fn upgrade_from_parses_and_validates() {
+        assert_eq!(parse_upgrade_from(&args("retrieve")).unwrap(), None);
+        let staged = parse_upgrade_from(&args("retrieve --upgrade-from 2")).unwrap();
+        assert_eq!(staged, Some(2));
+        assert!(parse_upgrade_from(&args("retrieve --upgrade-from 0")).is_err());
+        assert!(parse_upgrade_from(&args("retrieve --upgrade-from x")).is_err());
     }
 
     #[test]

@@ -39,6 +39,12 @@
 //! a reserved extension). Parsing is total: malformed or truncated bytes
 //! yield an `Err`, never a panic, and every allocation is bounded by
 //! validated header fields (dimensions ≤ 2^24, total nodes ≤ 2^32).
+//!
+//! The normative byte-level specification (with a worked hex dump) lives
+//! in `docs/format.md`; this module is its implementation. Buffered
+//! whole-container access lives here ([`ProgressiveReader`]); lazy,
+//! seekable access that touches only a fidelity prefix's bytes lives in
+//! [`crate::storage::reader`].
 
 use std::path::Path;
 
@@ -61,6 +67,32 @@ pub const MAX_NDIM: usize = 8;
 pub const MAX_DIM: u64 = 1 << 24;
 /// Largest total node count a container may declare.
 pub const MAX_NODES: u64 = 1 << 32;
+/// Size of the fixed header prelude (magic through quantizer bin) that
+/// precedes the variable shape + segment-table part. A streaming reader
+/// fetches exactly this many bytes, calls [`var_header_len`] to learn
+/// how long the rest of the header is, and never over-reads.
+pub const FIXED_HEADER_LEN: usize = 28;
+
+/// Byte length of the variable header part (shape + segment table)
+/// declared by a [`FIXED_HEADER_LEN`]-byte prelude. Validates only what
+/// sizing needs — magic, version, and the dimension/class counts — so a
+/// seekable reader can finish fetching the header before running the
+/// full [`ContainerHeader::parse_prefix`] validation over it.
+pub fn var_header_len(prelude: &[u8]) -> Result<usize> {
+    ensure!(
+        prelude.len() >= FIXED_HEADER_LEN,
+        "header prelude needs {FIXED_HEADER_LEN} bytes, got {}",
+        prelude.len()
+    );
+    ensure!(prelude[..4] == MAGIC, "not an MGRC container (bad magic)");
+    let version = u16::from_le_bytes(prelude[4..6].try_into().unwrap());
+    ensure!(version == VERSION, "unsupported container version {version}");
+    let ndim = prelude[8] as usize;
+    ensure!(ndim >= 1 && ndim <= MAX_NDIM, "ndim {ndim} outside 1..={MAX_NDIM}");
+    let nclasses = prelude[10] as usize;
+    ensure!(nclasses >= 1, "container declares zero classes");
+    Ok(8 * ndim + 32 * nclasses)
+}
 
 fn codec_tag(codec: Codec) -> u8 {
     match codec {
@@ -94,11 +126,15 @@ pub struct SegmentMeta {
 /// Parsed (or to-be-written) container header.
 #[derive(Clone, Debug)]
 pub struct ContainerHeader {
+    /// Lossless back-end the segments were entropy-coded with.
     pub codec: Codec,
     /// Scalar width in bytes (4 = f32, 8 = f64).
     pub dtype_bytes: u8,
+    /// Grid shape of the refactored field.
     pub shape: Vec<usize>,
+    /// Decompose level count the hierarchy is rebuilt with.
     pub nlevels: usize,
+    /// Quantizer parameters (error bound and bin width).
     pub quant: QuantMeta,
     /// One entry per coefficient class, coarsest first.
     pub segments: Vec<SegmentMeta>,
@@ -144,13 +180,14 @@ impl<'a> Cursor<'a> {
 }
 
 impl ContainerHeader {
+    /// Number of coefficient classes (= segment-table entries).
     pub fn nclasses(&self) -> usize {
         self.segments.len()
     }
 
     /// Serialized header size in bytes.
     pub fn header_bytes(&self) -> usize {
-        28 + 8 * self.shape.len() + 32 * self.segments.len()
+        FIXED_HEADER_LEN + 8 * self.shape.len() + 32 * self.segments.len()
     }
 
     /// Total entropy-coded payload bytes across all segments.
@@ -235,6 +272,29 @@ impl ContainerHeader {
     /// hierarchy consistency, per-class value counts, exact payload
     /// length). Returns the header and its serialized size.
     pub fn parse(buf: &[u8]) -> Result<(ContainerHeader, usize)> {
+        let (header, header_len) = Self::parse_prefix(buf)?;
+
+        // exact payload accounting: the segment table must describe the
+        // remaining bytes completely (parse_prefix proved the sum fits)
+        let total = header.payload_bytes();
+        let remaining = (buf.len() - header_len) as u64;
+        ensure!(
+            total == remaining,
+            "segment table declares {total} payload bytes, buffer holds {remaining}"
+        );
+
+        Ok((header, header_len))
+    }
+
+    /// Parse and validate a buffer that holds (at least) the container
+    /// header: every header field plus hierarchy consistency, but **no
+    /// payload accounting** — the buffer may end right after the segment
+    /// table. This is the open path of seekable readers
+    /// ([`crate::storage::reader::ContainerReader`]), which fetch the
+    /// header bytes alone and check the payload length against the
+    /// stream's total size instead of a fully buffered container.
+    /// Returns the header and its serialized size.
+    pub fn parse_prefix(buf: &[u8]) -> Result<(ContainerHeader, usize)> {
         let mut cur = Cursor::new(buf);
         let magic = cur.take(4)?;
         ensure!(magic == MAGIC, "not an MGRC container (bad magic)");
@@ -295,6 +355,13 @@ impl ContainerHeader {
         }
         let header_len = cur.pos;
 
+        // the declared payload sizes must at least sum without overflow,
+        // so every consumer (buffered or streaming) can do arithmetic on
+        // prefix byte counts safely
+        segments.iter().try_fold(0u64, |acc, s| {
+            acc.checked_add(s.bytes).ok_or_else(|| anyhow!("segment sizes overflow"))
+        })?;
+
         let header = ContainerHeader {
             codec,
             dtype_bytes,
@@ -320,20 +387,6 @@ impl ContainerHeader {
             );
         }
 
-        // exact payload accounting: the segment table must describe the
-        // remaining bytes completely
-        let mut total: u64 = 0;
-        for s in &header.segments {
-            total = total
-                .checked_add(s.bytes)
-                .ok_or_else(|| anyhow!("segment sizes overflow"))?;
-        }
-        let remaining = (buf.len() - header_len) as u64;
-        ensure!(
-            total == remaining,
-            "segment table declares {total} payload bytes, buffer holds {remaining}"
-        );
-
         Ok((header, header_len))
     }
 }
@@ -355,6 +408,7 @@ pub struct ProgressiveWriter<T> {
 }
 
 impl<T: Scalar> ProgressiveWriter<T> {
+    /// Writer for containers over `hierarchy`, entropy-coded with `codec`.
     pub fn new(hierarchy: Hierarchy, codec: Codec) -> Self {
         ProgressiveWriter {
             compressor: MgardCompressor::new(hierarchy, codec),
@@ -429,9 +483,31 @@ impl<T: Scalar> ProgressiveWriter<T> {
     }
 }
 
-/// Reads progressive containers: parse + validate once, then retrieve
-/// any class prefix (or the smallest prefix meeting an error target)
-/// without touching the segments beyond it.
+/// Reads fully buffered progressive containers: parse + validate once,
+/// then retrieve any class prefix (or the smallest prefix meeting an
+/// error target) without *decoding* the segments beyond it. All segment
+/// payloads are buffered up front; use
+/// [`crate::storage::reader::ContainerReader`] when even the *bytes* of
+/// unselected segments must stay untouched (disk/network sources).
+///
+/// ```
+/// use mgr::compress::Codec;
+/// use mgr::grid::{Hierarchy, Tensor};
+/// use mgr::storage::{ProgressiveReader, ProgressiveWriter};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let field = Tensor::<f64>::from_fn(&[9, 9], |idx| (idx[0] as f64 * 0.3).sin());
+/// let mut writer = ProgressiveWriter::<f64>::new(Hierarchy::uniform(field.shape()), Codec::Zlib);
+/// let (bytes, header) = writer.write(&field, 1e-3)?;
+///
+/// let mut reader = ProgressiveReader::<f64>::open(&bytes)?;
+/// let coarse = reader.retrieve(1)?; // coarsest class only
+/// assert_eq!(coarse.shape(), field.shape());
+/// let (keep, _full) = reader.retrieve_error(1e-3)?; // smallest satisfying prefix
+/// assert!(keep <= header.nclasses());
+/// # Ok(())
+/// # }
+/// ```
 pub struct ProgressiveReader<T> {
     header: ContainerHeader,
     classes: CompressedClasses,
@@ -482,10 +558,12 @@ impl<T: Scalar> ProgressiveReader<T> {
         Self::open(&buf)
     }
 
+    /// The parsed and validated container header.
     pub fn header(&self) -> &ContainerHeader {
         &self.header
     }
 
+    /// Number of coefficient classes in the container.
     pub fn nclasses(&self) -> usize {
         self.header.nclasses()
     }
@@ -690,6 +768,23 @@ mod tests {
             bytes.len(),
             "payload accounting"
         );
+    }
+
+    #[test]
+    fn parse_prefix_accepts_header_only_buffers() {
+        let (_, bytes, header) = write_container(17, Codec::Zlib, 1e-3);
+        let hlen = header.header_bytes();
+        // a buffer cut right after the segment table parses as a prefix...
+        let (p, n) = ContainerHeader::parse_prefix(&bytes[..hlen]).unwrap();
+        assert_eq!(n, hlen);
+        assert_eq!(p.segments, header.segments);
+        // ...while the full parse demands exact payload accounting
+        assert!(ContainerHeader::parse(&bytes[..hlen]).is_err());
+        // var_header_len sizes the variable part from the fixed prelude
+        let var = var_header_len(&bytes[..FIXED_HEADER_LEN]).unwrap();
+        assert_eq!(FIXED_HEADER_LEN + var, hlen);
+        assert!(var_header_len(&bytes[..10]).is_err());
+        assert!(var_header_len(b"PK\x03\x04 not a container header......").is_err());
     }
 
     #[test]

@@ -6,17 +6,23 @@
 //! I/O (the paper's ADIOS-on-GPFS runs at 4096/512 ranks). We model both
 //! with published Summit bandwidth figures; class *placement* is a real
 //! optimization problem this module solves greedily by value density.
-//! The [`container`] module gives the classes a byte-level form: a
-//! versioned header plus independently decodable per-class segments, so
-//! the placement operates on real entropy-coded sizes and readers
-//! retrieve fidelity prefixes without decoding the rest.
+//! The [`container`] module gives the classes a byte-level form — a
+//! versioned header plus independently decodable per-class segments
+//! (normative spec: `docs/format.md`) — and [`reader`] adds lazy,
+//! seekable access, so the placement operates on real entropy-coded
+//! sizes and readers fetch *and decode* fidelity prefixes without
+//! touching the bytes beyond them.
+
+#![warn(missing_docs)]
 
 pub mod container;
 pub mod iosim;
 pub mod mover;
+pub mod reader;
 pub mod tier;
 
 pub use container::{ContainerHeader, ProgressiveReader, ProgressiveWriter, SegmentMeta};
 pub use iosim::ParallelFs;
 pub use mover::{place_classes, Placement};
+pub use reader::{ContainerReader, LazyReader, ReadSeek};
 pub use tier::{StorageTier, TierSpec};

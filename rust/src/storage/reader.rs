@@ -1,0 +1,447 @@
+//! Lazy, seekable container reading: the bytes a fidelity request does
+//! **not** need are never fetched.
+//!
+//! The buffered path ([`crate::storage::container::ProgressiveReader`])
+//! validates and copies every segment payload up front — fine for small
+//! in-memory containers, wasteful when the container sits on disk or
+//! behind a network and the caller wants two coarse classes out of ten.
+//! This module is the random-access counterpart:
+//!
+//! * [`ContainerReader`] wraps any `Read + Seek` source, parses the MGRC
+//!   header **once** (prefix-only: header bytes plus one seek to learn
+//!   the stream length — see
+//!   [`ContainerHeader::parse_prefix`]), records the absolute byte
+//!   offset of every class segment, and serves exact per-segment reads
+//!   on demand. A running [`ContainerReader::bytes_read`] counter makes
+//!   the I/O savings observable (and testable).
+//! * [`LazyReader`] adds the typed decode layer with a **per-class
+//!   cache** of dequantized values: [`LazyReader::retrieve`] fetches and
+//!   decodes only the classes of the requested prefix that are not
+//!   cached yet, so upgrading a retrieval from `k` to `k+1` classes
+//!   costs one segment of I/O and decode — the paper's "transfer at
+//!   lower fidelity, refine later" loop at byte granularity.
+//!
+//! Validation happens once, at open: header fields, hierarchy
+//! consistency, and payload accounting against the stream size. Segment
+//! *payloads* are validated by the hardened entropy decoders at first
+//! decode (a corrupt segment fails the retrieval that first touches it,
+//! and only that one).
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::compress::{decode_stream, dequantize};
+use crate::grid::Tensor;
+use crate::refactor::{assemble_classes, Refactorer};
+use crate::storage::container::{var_header_len, ContainerHeader, FIXED_HEADER_LEN};
+use crate::util::Scalar;
+
+/// Object-safe `Read + Seek` bundle, implemented for every type that is
+/// both. Dtype-erased callers (the `mgr::api` facade) box sources as
+/// `Box<dyn ReadSeek + Send>` so files and in-memory cursors flow
+/// through one reader type.
+pub trait ReadSeek: Read + Seek {}
+
+impl<T: Read + Seek> ReadSeek for T {}
+
+/// Random-access view of a progressive container behind any
+/// `Read + Seek` source: header parsed once, per-segment byte offsets
+/// recorded, segments fetched on demand.
+///
+/// ```
+/// use std::io::Cursor;
+/// use mgr::compress::Codec;
+/// use mgr::grid::{Hierarchy, Tensor};
+/// use mgr::storage::{ContainerReader, ProgressiveWriter};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let field = Tensor::<f64>::from_fn(&[9, 9], |idx| idx[0] as f64 * 0.1);
+/// let mut writer = ProgressiveWriter::<f64>::new(Hierarchy::uniform(field.shape()), Codec::Zlib);
+/// let (bytes, _) = writer.write(&field, 1e-3)?;
+/// let total = bytes.len() as u64;
+///
+/// let mut reader = ContainerReader::open(Cursor::new(bytes))?;
+/// assert_eq!(reader.total_bytes(), total);
+/// // opening fetched the header only
+/// assert_eq!(reader.bytes_read(), reader.header_len() as u64);
+/// // fetching the coarsest segment reads exactly its recorded bytes
+/// let seg0 = reader.read_segment(0)?;
+/// assert_eq!(seg0.len() as u64, reader.header().segments[0].bytes);
+/// # Ok(())
+/// # }
+/// ```
+pub struct ContainerReader<R> {
+    src: R,
+    header: ContainerHeader,
+    header_len: usize,
+    /// Absolute stream offset of every segment payload, coarsest first.
+    offsets: Vec<u64>,
+    bytes_read: u64,
+}
+
+impl<R: Read + Seek> ContainerReader<R> {
+    /// Parse and validate the container header at the start of `src`
+    /// (the source is rewound first; the container must span the whole
+    /// stream). Reads exactly the header bytes plus one seek-to-end for
+    /// payload accounting — no segment payload is touched.
+    pub fn open(mut src: R) -> Result<Self> {
+        src.rewind().context("rewinding container source")?;
+        let mut buf = vec![0u8; FIXED_HEADER_LEN];
+        src.read_exact(&mut buf)
+            .context("reading container header prelude")?;
+        let var = var_header_len(&buf)?;
+        buf.resize(FIXED_HEADER_LEN + var, 0);
+        src.read_exact(&mut buf[FIXED_HEADER_LEN..])
+            .context("reading container header")?;
+        let (header, header_len) = ContainerHeader::parse_prefix(&buf)?;
+
+        // payload accounting against the stream's total size — the one
+        // validation a header prefix alone cannot do
+        let end = src.seek(SeekFrom::End(0)).context("sizing container stream")?;
+        let declared = header.payload_bytes();
+        let expected_end = (header_len as u64)
+            .checked_add(declared)
+            .ok_or_else(|| anyhow!("segment sizes overflow"))?;
+        ensure!(
+            end == expected_end,
+            "segment table declares {declared} payload bytes, stream holds {} past the header",
+            end.saturating_sub(header_len as u64)
+        );
+
+        let mut offsets = Vec::with_capacity(header.nclasses());
+        let mut pos = header_len as u64;
+        for s in &header.segments {
+            offsets.push(pos);
+            pos += s.bytes;
+        }
+        Ok(ContainerReader {
+            src,
+            header,
+            header_len,
+            offsets,
+            bytes_read: header_len as u64,
+        })
+    }
+
+    /// The parsed and validated container header.
+    pub fn header(&self) -> &ContainerHeader {
+        &self.header
+    }
+
+    /// Number of coefficient classes.
+    pub fn nclasses(&self) -> usize {
+        self.header.nclasses()
+    }
+
+    /// Serialized header size in bytes (= the stream offset of the
+    /// coarsest segment).
+    pub fn header_len(&self) -> usize {
+        self.header_len
+    }
+
+    /// Total container size in bytes (header plus every payload).
+    pub fn total_bytes(&self) -> u64 {
+        self.header_len as u64 + self.header.payload_bytes()
+    }
+
+    /// Absolute stream offset of class `k`'s payload. Panics if `k` is
+    /// not a valid class index.
+    pub fn segment_offset(&self, k: usize) -> u64 {
+        self.offsets[k]
+    }
+
+    /// Cumulative bytes fetched from the source so far, header included.
+    /// After a prefix retrieval this sits far below
+    /// [`ContainerReader::total_bytes`] — the observable I/O saving of
+    /// the lazy path.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    /// Fetch the entropy-coded payload of class `k`: one seek plus one
+    /// exact read of the segment's recorded byte length.
+    pub fn read_segment(&mut self, k: usize) -> Result<Vec<u8>> {
+        ensure!(k < self.nclasses(), "class {k} outside 0..{}", self.nclasses());
+        let len = self.header.segments[k].bytes as usize;
+        self.src
+            .seek(SeekFrom::Start(self.offsets[k]))
+            .with_context(|| format!("seeking to class {k}"))?;
+        let mut payload = vec![0u8; len];
+        self.src
+            .read_exact(&mut payload)
+            .with_context(|| format!("reading class {k} payload"))?;
+        self.bytes_read += len as u64;
+        Ok(payload)
+    }
+}
+
+impl ContainerReader<BufReader<File>> {
+    /// Open a container file lazily: header bytes and file size only;
+    /// segment payloads stay on disk until read.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        let file = File::open(path.as_ref())
+            .with_context(|| format!("opening container {}", path.as_ref().display()))?;
+        Self::open(BufReader::new(file))
+    }
+}
+
+/// Typed lazy retrieval over a [`ContainerReader`]: segments are fetched
+/// and decoded on first use, and the dequantized per-class values are
+/// cached, so retrieving `Classes(k)` and then upgrading to
+/// `Classes(k + 1)` fetches and decodes exactly one additional segment.
+///
+/// Reconstructions are bit-identical to the buffered
+/// [`crate::storage::container::ProgressiveReader`] path for every
+/// prefix length (asserted by `rust/tests/reader_equivalence.rs`).
+///
+/// ```
+/// use std::io::Cursor;
+/// use mgr::compress::Codec;
+/// use mgr::grid::{Hierarchy, Tensor};
+/// use mgr::storage::{LazyReader, ProgressiveWriter};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let field = Tensor::<f64>::from_fn(&[9, 9], |idx| (idx[0] as f64 * 0.4).sin());
+/// let mut writer = ProgressiveWriter::<f64>::new(Hierarchy::uniform(field.shape()), Codec::Zlib);
+/// let (bytes, _) = writer.write(&field, 1e-3)?;
+///
+/// let mut reader = LazyReader::<f64, _>::open(Cursor::new(bytes))?;
+/// let coarse = reader.retrieve(1)?; // fetches + decodes class 0 only
+/// assert_eq!(coarse.shape(), field.shape());
+/// let before = reader.bytes_read();
+/// let finer = reader.retrieve(2)?; // class 0 is cached: fetches class 1 only
+/// assert_eq!(reader.bytes_read() - before, reader.header().segments[1].bytes);
+/// assert_eq!(finer.shape(), field.shape());
+/// # Ok(())
+/// # }
+/// ```
+pub struct LazyReader<T, R> {
+    raw: ContainerReader<R>,
+    refactorer: Refactorer<T>,
+    /// Dequantized values of every class fetched so far (`None` = the
+    /// segment's bytes have not been touched).
+    decoded: Vec<Option<Vec<T>>>,
+}
+
+impl<T: Scalar, R: Read + Seek> LazyReader<T, R> {
+    /// Wrap an opened [`ContainerReader`], checking the container's
+    /// scalar width against `T`.
+    pub fn new(raw: ContainerReader<R>) -> Result<Self> {
+        ensure!(
+            raw.header().dtype_bytes as usize == T::BYTES,
+            "container holds {}-byte scalars, reader expects {}-byte",
+            raw.header().dtype_bytes,
+            T::BYTES
+        );
+        let hierarchy = raw.header().hierarchy()?;
+        let n = raw.nclasses();
+        Ok(LazyReader {
+            raw,
+            refactorer: Refactorer::new(hierarchy),
+            decoded: vec![None; n],
+        })
+    }
+
+    /// [`ContainerReader::open`] + [`LazyReader::new`] in one step.
+    pub fn open(src: R) -> Result<Self> {
+        Self::new(ContainerReader::open(src)?)
+    }
+
+    /// The parsed container header.
+    pub fn header(&self) -> &ContainerHeader {
+        self.raw.header()
+    }
+
+    /// Number of coefficient classes.
+    pub fn nclasses(&self) -> usize {
+        self.raw.nclasses()
+    }
+
+    /// Cumulative bytes fetched from the source, header included.
+    pub fn bytes_read(&self) -> u64 {
+        self.raw.bytes_read()
+    }
+
+    /// Total container size in bytes (header plus every payload).
+    pub fn total_bytes(&self) -> u64 {
+        self.raw.total_bytes()
+    }
+
+    /// Number of classes whose decoded values are cached.
+    pub fn decoded_classes(&self) -> usize {
+        self.decoded.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Fetch, decode, and cache every not-yet-materialized class in
+    /// `0..keep`.
+    fn materialize(&mut self, keep: usize) -> Result<()> {
+        for k in 0..keep {
+            if self.decoded[k].is_some() {
+                continue;
+            }
+            let codec = self.header().codec;
+            let quant = self.header().quant.clone();
+            let expect = self.header().segments[k].nvalues as usize;
+            let payload = self.raw.read_segment(k)?;
+            let q = decode_stream(codec, &payload, expect)
+                .with_context(|| format!("decoding class {k} segment"))?;
+            self.decoded[k] = Some(dequantize::<T>(&q, &quant));
+        }
+        Ok(())
+    }
+
+    /// Reconstruct the reduced-fidelity tensor carried by classes
+    /// `0..keep`, touching only the payload bytes of classes that are
+    /// not cached yet. Bit-identical to the buffered
+    /// [`crate::storage::container::ProgressiveReader::retrieve`] for
+    /// the same prefix.
+    pub fn retrieve(&mut self, keep: usize) -> Result<Tensor<T>> {
+        let n = self.nclasses();
+        ensure!(keep >= 1 && keep <= n, "keep must be in 1..={n}, got {keep}");
+        self.materialize(keep)?;
+        let refs: Vec<&[T]> = self.decoded[..keep]
+            .iter()
+            .map(|c| c.as_deref().expect("materialized above"))
+            .collect();
+        let mut tensor = assemble_classes(&refs, self.refactorer.hierarchy());
+        self.refactorer.recompose(&mut tensor);
+        Ok(tensor)
+    }
+
+    /// Retrieve the smallest class prefix whose recorded L∞ annotation
+    /// meets `target_linf` (all classes if none does). Returns the
+    /// prefix length alongside the reconstruction.
+    pub fn retrieve_error(&mut self, target_linf: f64) -> Result<(usize, Tensor<T>)> {
+        ensure!(
+            target_linf.is_finite() && target_linf > 0.0,
+            "error target must be positive and finite"
+        );
+        let keep = self.header().select_keep(target_linf);
+        let t = self.retrieve(keep)?;
+        Ok((keep, t))
+    }
+}
+
+impl<T: Scalar> LazyReader<T, BufReader<File>> {
+    /// [`ContainerReader::open_file`] + [`LazyReader::new`]: retrieval
+    /// from disk that reads only the header and the requested prefix's
+    /// segments.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        Self::new(ContainerReader::open_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor;
+
+    use super::*;
+    use crate::compress::Codec;
+    use crate::grid::Hierarchy;
+    use crate::storage::container::{ProgressiveReader, ProgressiveWriter};
+
+    fn container(n: usize, codec: Codec) -> (Tensor<f64>, Vec<u8>) {
+        let field = Tensor::<f64>::from_fn(&[n, n], |idx| {
+            let x = idx[0] as f64 / (n - 1) as f64;
+            let y = idx[1] as f64 / (n - 1) as f64;
+            (3.0 * x).sin() * (2.0 * y).cos() + 0.5 * x * y
+        });
+        let h = Hierarchy::uniform(field.shape());
+        let mut w = ProgressiveWriter::<f64>::new(h, codec);
+        let (bytes, _) = w.write(&field, 1e-3).unwrap();
+        (field, bytes)
+    }
+
+    #[test]
+    fn open_reads_header_only_and_offsets_match() {
+        let (_, bytes) = container(17, Codec::Zlib);
+        let r = ContainerReader::open(Cursor::new(bytes.clone())).unwrap();
+        let header = r.header();
+        assert_eq!(r.header_len(), header.header_bytes());
+        assert_eq!(r.bytes_read(), r.header_len() as u64);
+        assert_eq!(r.total_bytes() as usize, bytes.len());
+        let mut pos = r.header_len() as u64;
+        for (k, s) in header.segments.iter().enumerate() {
+            assert_eq!(r.segment_offset(k), pos);
+            pos += s.bytes;
+        }
+    }
+
+    #[test]
+    fn read_segment_matches_buffered_slices_any_order() {
+        let (_, bytes) = container(17, Codec::HuffRle);
+        let mut r = ContainerReader::open(Cursor::new(bytes.clone())).unwrap();
+        let n = r.nclasses();
+        // out-of-order access must still return the exact payload bytes
+        for k in (0..n).rev() {
+            let start = r.segment_offset(k) as usize;
+            let len = r.header().segments[k].bytes as usize;
+            let want = &bytes[start..start + len];
+            assert_eq!(r.read_segment(k).unwrap(), want, "class {k}");
+        }
+        assert_eq!(r.bytes_read(), r.total_bytes());
+        assert!(r.read_segment(n).is_err());
+    }
+
+    #[test]
+    fn truncated_or_padded_streams_rejected_at_open() {
+        let (_, bytes) = container(9, Codec::Zlib);
+        // truncation anywhere fails open (header read or accounting)
+        for len in [0, 5, FIXED_HEADER_LEN - 1, FIXED_HEADER_LEN, bytes.len() - 1] {
+            assert!(
+                ContainerReader::open(Cursor::new(bytes[..len].to_vec())).is_err(),
+                "truncation to {len} bytes must fail at open"
+            );
+        }
+        // trailing garbage breaks the exact payload accounting
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(ContainerReader::open(Cursor::new(padded)).is_err());
+    }
+
+    #[test]
+    fn lazy_retrieve_matches_buffered_reader_and_caches() {
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let (_, bytes) = container(17, codec);
+            let mut buffered = ProgressiveReader::<f64>::open(&bytes).unwrap();
+            let mut lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
+            let n = lazy.nclasses();
+            for keep in 1..=n {
+                let want = buffered.retrieve(keep).unwrap();
+                let got = lazy.retrieve(keep).unwrap();
+                assert_eq!(got.data(), want.data(), "{codec:?} keep={keep}");
+                assert_eq!(lazy.decoded_classes(), keep);
+                // bytes: header + exactly the prefix payloads
+                let expect =
+                    lazy.header().header_bytes() as u64 + lazy.header().prefix_bytes(keep);
+                assert_eq!(lazy.bytes_read(), expect, "{codec:?} keep={keep}");
+            }
+            // re-retrieving a smaller prefix touches no new bytes
+            let before = lazy.bytes_read();
+            lazy.retrieve(1).unwrap();
+            assert_eq!(lazy.bytes_read(), before);
+        }
+    }
+
+    #[test]
+    fn retrieve_error_and_bounds() {
+        let (field, bytes) = container(17, Codec::Zlib);
+        let mut lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
+        let n = lazy.nclasses();
+        assert!(lazy.retrieve(0).is_err());
+        assert!(lazy.retrieve(n + 1).is_err());
+        let (keep, t) = lazy.retrieve_error(1e-3).unwrap();
+        assert!(keep <= n);
+        assert!(crate::util::stats::linf(t.data(), field.data()) <= 1e-3);
+        assert!(lazy.retrieve_error(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let (_, bytes) = container(9, Codec::Zlib);
+        assert!(LazyReader::<f32, _>::open(Cursor::new(bytes)).is_err());
+    }
+}

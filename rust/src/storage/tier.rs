@@ -14,6 +14,7 @@ pub enum StorageTier {
 /// Bandwidth/latency/capacity description of one tier.
 #[derive(Clone, Copy, Debug)]
 pub struct TierSpec {
+    /// Which tier this spec describes.
     pub tier: StorageTier,
     /// Aggregate write bandwidth available to this job, bytes/s.
     pub write_bw: f64,
@@ -61,10 +62,12 @@ impl TierSpec {
         }
     }
 
+    /// Modeled time to write `bytes` to this tier (latency + transfer).
     pub fn write_time(&self, bytes: f64) -> f64 {
         self.latency + bytes / self.write_bw
     }
 
+    /// Modeled time to read `bytes` from this tier (latency + transfer).
     pub fn read_time(&self, bytes: f64) -> f64 {
         self.latency + bytes / self.read_bw
     }

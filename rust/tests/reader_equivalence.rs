@@ -1,0 +1,210 @@
+//! Reader equivalence suite: the lazy, seekable retrieval path
+//! (`storage::reader` + `api::OpenContainer`) must be **bit-identical**
+//! to the existing full-buffer path (`storage::container::
+//! ProgressiveReader`) for every `Fidelity` variant and both dtypes, and
+//! `Retrieved::upgrade` must equal a fresh retrieval while reading only
+//! the delta segments. Also holds the acceptance byte-accounting checks
+//! (a one-class retrieval touches well under half the container) and the
+//! bit-flip regression: validation happens once at open, yet a corrupt
+//! segment still fails at its first decode.
+
+use std::io::Cursor;
+
+use mgr::api::{AnyTensor, Codec, Dtype, Fidelity, OpenContainer, Refactored, Session};
+use mgr::grid::Tensor;
+use mgr::sim::GrayScott;
+use mgr::storage::ProgressiveReader;
+use mgr::util::stats::value_range;
+
+/// Smooth deterministic field with O(1) values on any shape.
+fn field(shape: &[usize], dtype: Dtype) -> AnyTensor {
+    let f64_field: AnyTensor = Tensor::<f64>::from_fn(shape, |idx| {
+        idx.iter()
+            .enumerate()
+            .map(|(d, &i)| ((d as f64 + 1.3) * i as f64 * 0.21).sin())
+            .product::<f64>()
+            + 0.25
+    })
+    .into();
+    f64_field.cast(dtype)
+}
+
+/// Serialize a container for the given dtype/codec.
+fn container(shape: &[usize], dtype: Dtype, codec: Codec) -> Vec<u8> {
+    let eb = match dtype {
+        Dtype::F32 => 1e-2,
+        Dtype::F64 => 1e-4,
+    };
+    let session = Session::builder()
+        .shape(shape)
+        .dtype(dtype)
+        .codec(codec)
+        .error_bound(eb)
+        .build()
+        .unwrap();
+    let refactored = session.refactor(&field(shape, dtype)).unwrap();
+    refactored.as_bytes().to_vec()
+}
+
+/// The pre-existing full-buffer retrieval: `ProgressiveReader` parses
+/// and buffers every segment payload up front, then decodes a prefix.
+fn buffered_retrieve(bytes: &[u8], keep: usize) -> AnyTensor {
+    match mgr::storage::container::peek_dtype(bytes).unwrap() {
+        4 => {
+            let mut r = ProgressiveReader::<f32>::open(bytes).unwrap();
+            AnyTensor::F32(r.retrieve(keep).unwrap())
+        }
+        8 => {
+            let mut r = ProgressiveReader::<f64>::open(bytes).unwrap();
+            AnyTensor::F64(r.retrieve(keep).unwrap())
+        }
+        other => panic!("unexpected scalar width {other}"),
+    }
+}
+
+#[test]
+fn lazy_retrieval_bit_identical_to_full_buffer_path() {
+    let shape: &[usize] = &[17, 17];
+    for dtype in [Dtype::F32, Dtype::F64] {
+        for codec in Codec::ALL {
+            let label = format!("{dtype} {}", codec.name());
+            let bytes = container(shape, dtype, codec);
+            let lazy = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+            let nclasses = lazy.nclasses();
+            let header = lazy.header().clone();
+
+            // every Fidelity variant resolves + retrieves identically to
+            // the buffered path
+            let mut fidelities = vec![Fidelity::All];
+            for keep in 1..=nclasses {
+                fidelities.push(Fidelity::Classes(keep));
+                fidelities.push(Fidelity::ByteBudget(header.prefix_bytes(keep)));
+                // resolve rejects a non-positive error target, so only a
+                // strictly positive recorded annotation is a valid request
+                let recorded = header.segments[keep - 1].linf;
+                if recorded > 0.0 {
+                    fidelities.push(Fidelity::ErrorBound(recorded));
+                }
+            }
+            for fidelity in fidelities {
+                let keep = lazy.resolve(fidelity).unwrap();
+                let want = buffered_retrieve(&bytes, keep);
+                let got = lazy.retrieve(fidelity).unwrap();
+                assert_eq!(got.keep(), keep, "{label} {fidelity:?}");
+                assert_eq!(got.tensor(), &want, "{label} {fidelity:?}");
+                // the buffered Refactored facade agrees too
+                let refactored = Refactored::from_bytes(bytes.clone()).unwrap();
+                assert_eq!(refactored.retrieve(fidelity).unwrap(), want, "{label} {fidelity:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn upgrade_equals_fresh_retrieval_for_every_step() {
+    let shape: &[usize] = &[17, 17];
+    for dtype in [Dtype::F32, Dtype::F64] {
+        for codec in Codec::ALL {
+            let label = format!("{dtype} {}", codec.name());
+            let bytes = container(shape, dtype, codec);
+            let nclasses = OpenContainer::open(Cursor::new(bytes.clone())).unwrap().nclasses();
+
+            // single-step upgrades: retrieve(k) then upgrade(k+1) equals
+            // a fresh retrieve(k+1) from an untouched reader, bitwise
+            for keep in 1..nclasses {
+                let lazy = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+                let coarse = lazy.retrieve(Fidelity::Classes(keep)).unwrap();
+                let upgraded = coarse.upgrade(Fidelity::Classes(keep + 1)).unwrap();
+                assert_eq!(upgraded.keep(), keep + 1, "{label} keep={keep}");
+                let fresh = OpenContainer::open(Cursor::new(bytes.clone()))
+                    .unwrap()
+                    .retrieve(Fidelity::Classes(keep + 1))
+                    .unwrap();
+                assert_eq!(upgraded.tensor(), fresh.tensor(), "{label} keep={keep}");
+            }
+
+            // a chained 1 -> 2 -> ... -> n ladder stays identical to
+            // fresh retrievals at every rung
+            let lazy = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+            let mut rung = lazy.retrieve(Fidelity::Classes(1)).unwrap();
+            for keep in 2..=nclasses {
+                rung = rung.upgrade(Fidelity::Classes(keep)).unwrap();
+                assert_eq!(rung.tensor(), &buffered_retrieve(&bytes, keep), "{label} keep={keep}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_retrieval_reads_less_than_half_and_upgrade_reads_only_delta() {
+    // the standard fixture of the container/reader benches: a simulated
+    // Gray-Scott field at 33^3
+    let mut sim = GrayScott::new(33, 5);
+    sim.step(150);
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let session = Session::builder()
+        .shape(raw.shape())
+        .error_bound(eb)
+        .build()
+        .unwrap();
+    let data: AnyTensor = raw.into();
+    let bytes = session.refactor(&data).unwrap().as_bytes().to_vec();
+
+    let lazy = OpenContainer::open(Cursor::new(bytes.clone())).unwrap();
+    let header = lazy.header().clone();
+    let total = lazy.total_bytes();
+    assert_eq!(total as usize, bytes.len());
+    // the acceptance bound: one class costs under half the container
+    let coarse = lazy.retrieve(Fidelity::Classes(1)).unwrap();
+    let after_one = lazy.bytes_read();
+    assert!(
+        after_one * 2 < total,
+        "Classes(1) read {after_one} of {total} bytes — not under 50%"
+    );
+    // every further step reads exactly that segment's recorded bytes
+    let mut rung = coarse;
+    for keep in 2..=lazy.nclasses() {
+        let before = lazy.bytes_read();
+        rung = rung.upgrade(Fidelity::Classes(keep)).unwrap();
+        let delta = lazy.bytes_read() - before;
+        assert_eq!(delta, header.segments[keep - 1].bytes, "keep={keep}");
+    }
+    // the ladder ends at full fidelity having read the container exactly
+    // once
+    assert_eq!(rung.keep(), lazy.nclasses());
+    assert_eq!(lazy.bytes_read(), total);
+    // re-retrieving anything reads nothing new
+    lazy.retrieve(Fidelity::All).unwrap();
+    assert_eq!(lazy.bytes_read(), total);
+}
+
+#[test]
+fn bit_flipped_segment_fails_at_first_decode_not_at_open() {
+    // zlib segments start with the fixed CMF byte 0x78; flipping it
+    // makes the very first decode of that segment fail deterministically
+    let bytes = container(&[17, 17], Dtype::F64, Codec::Zlib);
+    let (header, header_len) = mgr::storage::ContainerHeader::parse(&bytes).unwrap();
+    let nclasses = header.nclasses();
+
+    // flip the first byte of the COARSEST segment: open still succeeds
+    // (structural validation only), every retrieval fails at decode
+    let mut corrupt = bytes.clone();
+    corrupt[header_len] ^= 0xFF;
+    let refactored = Refactored::from_bytes(corrupt.clone()).unwrap();
+    assert!(refactored.retrieve(Fidelity::Classes(1)).is_err());
+    assert!(refactored.retrieve(Fidelity::All).is_err());
+    let lazy = OpenContainer::open(Cursor::new(corrupt)).unwrap();
+    assert!(lazy.retrieve(Fidelity::Classes(1)).is_err());
+
+    // flip the first byte of the LAST segment: prefixes that never touch
+    // it still decode, and the corruption surfaces exactly when the
+    // segment is first needed
+    let last_offset = header_len as u64 + header.prefix_bytes(nclasses - 1);
+    let mut corrupt = bytes.clone();
+    corrupt[last_offset as usize] ^= 0xFF;
+    let lazy = OpenContainer::open(Cursor::new(corrupt)).unwrap();
+    let coarse = lazy.retrieve(Fidelity::Classes(nclasses - 1)).unwrap();
+    assert_eq!(coarse.tensor(), &buffered_retrieve(&bytes, nclasses - 1));
+    assert!(coarse.upgrade(Fidelity::All).is_err());
+}

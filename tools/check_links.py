@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Dead-link check for the markdown docs book.
+
+Scans the repo's top-level markdown files and everything under docs/ for
+inline markdown links ``[text](target)`` and verifies that every
+*relative* target resolves to an existing file or directory (anchors are
+stripped; external http(s)/mailto links are skipped). Exits non-zero
+listing every dead link, so CI can gate on it. Stdlib only.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — target must not itself contain parentheses or spaces,
+# which covers every link the docs use and avoids matching rust code
+# snippets like `retrieve(Fidelity::Classes(k))`.
+LINK = re.compile(r"\[[^\]]+\]\(([^()\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path):
+    yield from sorted(root.glob("*.md"))
+    yield from sorted((root / "docs").glob("*.md"))
+
+
+def check(root: Path):
+    dead = []
+    checked = 0
+    for md in doc_files(root):
+        for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+            for target in LINK.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:  # pure in-page anchor like (#section)
+                    continue
+                checked += 1
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    rel = md.relative_to(root)
+                    dead.append(f"{rel}:{lineno}: broken link '{target}'")
+    return checked, dead
+
+
+def main():
+    root = Path(__file__).resolve().parent.parent
+    checked, dead = check(root)
+    for entry in dead:
+        print(entry, file=sys.stderr)
+    if dead:
+        print(f"check_links: {len(dead)} dead of {checked} relative links", file=sys.stderr)
+        return 1
+    print(f"check_links: all {checked} relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
