@@ -6,13 +6,15 @@
 #   make bench       kernel throughput report -> BENCH_kernels.json
 #   make bench-container  per-class container report -> BENCH_container.json
 #   make bench-reader     lazy vs buffered reader report -> BENCH_reader.json
+#   make bench-shard      sharded refactor + ROI report -> BENCH_shard.json
 #   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
+#   make shard-demo       CLI shard round trip: refactor --blocks -> .mgrs -> --region
 #   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
 #   make check-docs  dead-link check over the markdown docs book
 
 .PHONY: artifacts test test-rust test-python bench bench-container bench-reader \
-        container-demo lint doc check-docs
+        bench-shard container-demo shard-demo lint doc check-docs
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -35,6 +37,9 @@ bench-container:
 bench-reader:
 	cargo bench --bench reader_lazy
 
+bench-shard:
+	cargo bench --bench shard_throughput
+
 # Exercise the progressive-container CLI round trip: write a .mgr
 # container, retrieve a class prefix by count, by error target, and by
 # byte budget, then show the tier placement plan.
@@ -45,6 +50,15 @@ container-demo:
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgr --bytes 65536
 	cargo run --release -- plan --in /tmp/mgr-demo.mgr
 	rm -f /tmp/mgr-demo.mgr
+
+# Exercise the sharded CLI round trip: refactor a decomposed domain into
+# one .mgrs artifact, reassemble it whole, then retrieve a region of
+# interest that opens only the intersecting blocks.
+shard-demo:
+	cargo run --release -- refactor --shape 33x33x33 --eb 1e-4 --blocks 4 --out /tmp/mgr-demo.mgrs
+	cargo run --release -- retrieve --in /tmp/mgr-demo.mgrs --keep 2
+	cargo run --release -- retrieve --in /tmp/mgr-demo.mgrs --region 10..15,0..33,0..33
+	rm -f /tmp/mgr-demo.mgrs
 
 lint:
 	cargo clippy --all-targets -- -D warnings

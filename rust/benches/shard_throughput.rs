@@ -1,0 +1,123 @@
+//! Sharded refactoring throughput (Fig 16-style): aggregate GB/s of the
+//! embarrassingly-parallel per-block refactor versus block count on the
+//! standard Gray-Scott 33³ fixture, plus the region-of-interest
+//! bytes-read fraction — the two numbers the shard layer exists for.
+//! Doubles as the acceptance check for ROI laziness (a one-block region
+//! must read well under half the shard). Writes `BENCH_shard.json`
+//! (see `docs/performance.md`).
+
+use mgr::api::{AnyTensor, Fidelity, Session, Sharded};
+use mgr::sim::GrayScott;
+use mgr::util::bench::{bench_auto, report, BenchReport, Measurement, ReportRow};
+use mgr::util::stats::value_range;
+
+fn row(
+    shape: &[usize],
+    variant: &str,
+    axis: Option<usize>,
+    m: &Measurement,
+    raw_bytes: usize,
+    bytes: u64,
+) -> ReportRow {
+    ReportRow {
+        kernel: "shard".into(),
+        variant: variant.into(),
+        dtype: "f64".into(),
+        shape: shape.to_vec(),
+        axis,
+        median_s: m.median_s,
+        mad_rel: m.mad_rel,
+        gbps: m.gbps(raw_bytes),
+        speedup: None,
+        bytes: Some(bytes),
+    }
+}
+
+fn main() {
+    println!("== sharded refactor throughput vs block count + ROI bytes read ==");
+    let n = 33;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let shape = raw.shape().to_vec();
+    let field: AnyTensor = raw.into();
+    let raw_bytes = field.nbytes();
+    let session = Session::builder().shape(&shape).error_bound(eb).build().unwrap();
+
+    let mut rep = BenchReport::new("shard_throughput");
+
+    // -- aggregate refactor throughput vs block count (Fig 16 shape:
+    // more independent blocks -> more pool parallelism, smaller
+    // hierarchies) --
+    let mut serial_median = 0.0;
+    for blocks in [1usize, 2, 4, 8] {
+        let m = bench_auto(&format!("refactor_sharded blocks={blocks}"), 0.3, || {
+            std::hint::black_box(session.refactor_sharded(&field, blocks).unwrap());
+        });
+        report(&m, Some(raw_bytes));
+        if blocks == 1 {
+            serial_median = m.median_s;
+        } else {
+            println!("    vs 1 block: {:.2}x", serial_median / m.median_s);
+        }
+        let artifact = session.refactor_sharded(&field, blocks).unwrap();
+        rep.push(row(
+            &shape,
+            &format!("refactor-b{blocks}"),
+            Some(0),
+            &m,
+            raw_bytes,
+            artifact.total_bytes(),
+        ));
+    }
+
+    // -- ROI retrieval: bytes-read fraction for a single-block region
+    // of a 4-block shard (the acceptance property) --
+    let sharded = session.refactor_sharded(&field, 4).unwrap();
+    let path = std::env::temp_dir().join("mgr_bench_shard.mgrs");
+    sharded.store_file(&path).unwrap();
+    // slabs of 33 into 4: [0..9) [8..17) [16..25) [24..33); this region
+    // sits strictly inside block 1
+    let roi = [10usize..15, 0..33, 0..33];
+
+    let probe = Sharded::open_file(&path).unwrap();
+    probe.retrieve_region(&roi, Fidelity::All).unwrap();
+    let roi_bytes = probe.bytes_read();
+    let total = probe.total_bytes();
+    assert_eq!(
+        roi_bytes,
+        probe.index_bytes() + probe.header().blocks[1].bytes,
+        "a one-block region must read exactly the index + that block"
+    );
+    assert!(
+        roi_bytes * 2 < total,
+        "one-block ROI read {roi_bytes} of {total} shard bytes — must be under 50%"
+    );
+    println!(
+        "ROI bytes read: {roi_bytes} of {total} ({:.1}%) — index {} + block 1 only",
+        100.0 * roi_bytes as f64 / total as f64,
+        probe.index_bytes()
+    );
+
+    let roi_raw: usize = roi.iter().map(|r| r.end - r.start).product::<usize>() * 8;
+    let m = bench_auto("retrieve_region (1 of 4 blocks, lazy file)", 0.3, || {
+        let s = Sharded::open_file(&path).unwrap();
+        std::hint::black_box(s.retrieve_region(&roi, Fidelity::All).unwrap());
+    });
+    report(&m, Some(roi_raw));
+    rep.push(row(&shape, "roi-1of4", Some(0), &m, roi_raw, roi_bytes));
+
+    let m = bench_auto("retrieve full (all 4 blocks, lazy file)", 0.3, || {
+        let s = Sharded::open_file(&path).unwrap();
+        std::hint::black_box(s.retrieve(Fidelity::All).unwrap());
+    });
+    report(&m, Some(raw_bytes));
+    rep.push(row(&shape, "full-4blocks", Some(0), &m, raw_bytes, total));
+
+    std::fs::remove_file(&path).ok();
+    match rep.write("BENCH_shard.json") {
+        Ok(()) => println!("wrote BENCH_shard.json ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
+    }
+}

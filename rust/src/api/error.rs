@@ -39,6 +39,10 @@ pub enum Error {
     /// A fidelity request the source cannot satisfy: class index out of
     /// range, or a byte budget smaller than the coarsest class.
     Fidelity(String),
+    /// A region-of-interest request that does not fit the sharded
+    /// domain: wrong rank, an empty range, or bounds outside the global
+    /// shape (see [`crate::api::Sharded::retrieve_region`]).
+    Region(String),
     /// Parsing or validating a progressive container failed (truncated,
     /// foreign, or corrupt bytes — see [`crate::storage::container`]).
     Container(anyhow::Error),
@@ -63,6 +67,7 @@ impl std::fmt::Display for Error {
                 "dtype mismatch: session built for {expected}, tensor holds {got}"
             ),
             Error::Fidelity(msg) => write!(f, "fidelity: {msg}"),
+            Error::Region(msg) => write!(f, "region: {msg}"),
             Error::Container(e) => write!(f, "container: {e:#}"),
             Error::Compress(e) => write!(f, "compression: {e:#}"),
             Error::Io(e) => write!(f, "i/o: {e}"),

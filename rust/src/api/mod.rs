@@ -18,6 +18,8 @@
 //! | store | [`Session::store`] / [`Session::store_file`] | bytes written |
 //! | place | [`Session::plan`] / [`Session::plan_header`] | [`Placement`](crate::storage::Placement) |
 //! | open (lazy) | [`Session::open`] / [`Session::open_file`] | [`OpenContainer`] → [`Retrieved`] |
+//! | create, sharded | [`Session::refactor_sharded`] (axis: [`Session::refactor_sharded_on`]) | [`Sharded`] |
+//! | retrieve a region | [`Sharded::retrieve_region`] (opens only intersecting blocks) | [`AnyTensor`] |
 //!
 //! [`Fidelity`] carries the three retrieval knobs: a class prefix
 //! ([`Fidelity::Classes`]), an absolute error target resolved against the
@@ -113,14 +115,16 @@
 mod error;
 mod fidelity;
 mod session;
+mod sharded;
 mod tensor;
 
 pub use error::{Error, Result};
 pub use fidelity::Fidelity;
 pub use session::{OpenContainer, Refactored, Retrieved, Session, SessionBuilder};
+pub use sharded::Sharded;
 pub use tensor::{AnyTensor, Dtype};
 
 // One-stop imports for facade callers: the codec knob and the types the
 // verbs return or resolve against.
 pub use crate::compress::{Codec, Compressed, CompressorStats};
-pub use crate::storage::{ContainerHeader, Placement, TierSpec};
+pub use crate::storage::{ContainerHeader, Placement, ShardHeader, TierSpec};

@@ -9,21 +9,23 @@ use std::sync::{Arc, Mutex};
 
 use crate::api::error::{Error, Result};
 use crate::api::fidelity::Fidelity;
+use crate::api::sharded::Sharded;
 use crate::api::tensor::{AnyTensor, Dtype};
 use crate::compress::{Codec, Compressed, CompressorStats};
-use crate::coordinator::run_pooled;
+use crate::coordinator::{partition_slabs, run_pooled};
 use crate::grid::{max_levels, Hierarchy};
 use crate::storage::container::peek_dtype;
 use crate::storage::{
     place_classes, ContainerHeader, ContainerReader, LazyReader, Placement, ProgressiveWriter,
-    ReadSeek, TierSpec,
+    ReadSeek, ShardWriter, TierSpec,
 };
 
-/// Container bytes behind an `Arc`: clones of a [`Refactored`] (and the
-/// in-memory cursors its cached reader reads through) share one
-/// allocation instead of copying the container.
+/// Container bytes behind an `Arc`: clones of a [`Refactored`] or
+/// [`crate::api::Sharded`] (and the in-memory cursors their cached
+/// readers read through) share one allocation instead of copying the
+/// container.
 #[derive(Clone, Debug)]
-struct SharedBytes(Arc<Vec<u8>>);
+pub(crate) struct SharedBytes(pub(crate) Arc<Vec<u8>>);
 
 impl AsRef<[u8]> for SharedBytes {
     fn as_ref(&self) -> &[u8] {
@@ -33,7 +35,7 @@ impl AsRef<[u8]> for SharedBytes {
 
 /// Boxed seekable source feeding a dtype-erased lazy reader (files and
 /// in-memory cursors flow through the same reader type).
-type BoxSource = Box<dyn ReadSeek + Send>;
+pub(crate) type BoxSource = Box<dyn ReadSeek + Send>;
 
 /// Per-dtype lazy reader with its decoded-class cache (see
 /// [`crate::storage::reader::LazyReader`]), erased behind one enum so
@@ -87,8 +89,8 @@ impl TypedReader {
 /// Resolve a fidelity request to a class-prefix length against a
 /// container's measured per-class annotations (shared by every
 /// retrieval front door: [`Refactored`], [`OpenContainer`],
-/// [`Retrieved::upgrade`]).
-fn resolve_fidelity(header: &ContainerHeader, fidelity: Fidelity) -> Result<usize> {
+/// [`Retrieved::upgrade`], and — per block — [`crate::api::Sharded`]).
+pub(crate) fn resolve_fidelity(header: &ContainerHeader, fidelity: Fidelity) -> Result<usize> {
     let n = header.nclasses();
     match fidelity {
         Fidelity::All => Ok(n),
@@ -711,6 +713,51 @@ impl Session {
             };
             Ok(Refactored::from_parts(bytes, header))
         })
+    }
+
+    /// **Refactor, sharded** (the paper's §3.6 create verb at scale):
+    /// partition `data` along axis 0 into `blocks` node-sharing slabs,
+    /// refactor every slab independently and in parallel on the
+    /// session's worker pool, and wrap the per-block containers behind
+    /// one MGRS index. The result retrieves at any fidelity —
+    /// full-domain ([`Sharded::retrieve`]) or region-of-interest
+    /// ([`Sharded::retrieve_region`], which opens only the blocks the
+    /// region intersects).
+    pub fn refactor_sharded(&self, data: &AnyTensor, blocks: usize) -> Result<Sharded> {
+        self.refactor_sharded_on(data, blocks, 0)
+    }
+
+    /// [`Session::refactor_sharded`] along an explicit partition axis.
+    /// `blocks` must divide `shape[axis] - 1` with a power-of-two
+    /// quotient `2^j`, `j >= 1` (each slab must itself be refactorable);
+    /// violations are typed [`enum@Error::Usage`] errors.
+    pub fn refactor_sharded_on(
+        &self,
+        data: &AnyTensor,
+        blocks: usize,
+        axis: usize,
+    ) -> Result<Sharded> {
+        self.check_input(data)?;
+        // surface partition misuse (bad axis/block count) as a usage
+        // error before any refactoring work starts
+        partition_slabs(self.shape(), axis, blocks).map_err(|e| Error::Usage(e.to_string()))?;
+        // blocks honor the session's level cap (clamped to what each
+        // slab shape supports — for one block, the slab IS the domain,
+        // so the cap applies verbatim)
+        let nlevels = self.hierarchy.nlevels();
+        let bytes = match data {
+            AnyTensor::F32(t) => ShardWriter::<f32>::new(self.codec, self.workers)
+                .with_nlevels(nlevels)
+                .write(t, axis, blocks, self.error_bound)
+                .map_err(Error::Compress)?
+                .0,
+            AnyTensor::F64(t) => ShardWriter::<f64>::new(self.codec, self.workers)
+                .with_nlevels(nlevels)
+                .write(t, axis, blocks, self.error_bound)
+                .map_err(Error::Compress)?
+                .0,
+        };
+        Sharded::from_bytes(bytes)
     }
 
     /// **Retrieve**: reconstruct a reduced-fidelity tensor from a

@@ -1,0 +1,578 @@
+//! The dtype-erased sharded representation: one MGRS artifact holding a
+//! §3.6 domain decomposition, retrievable whole or by region.
+//!
+//! [`crate::api::Session::refactor_sharded`] produces a [`Sharded`];
+//! [`Sharded::retrieve`] reassembles the full domain at any fidelity
+//! (bit-identical to refactoring and retrieving each slab with a plain
+//! session), and [`Sharded::retrieve_region`] — the new verb — opens
+//! **only the blocks a region of interest intersects**, leaving every
+//! other block's bytes untouched. [`Sharded::bytes_read`] makes the
+//! saving observable.
+
+use std::fmt;
+use std::fs::File;
+use std::io::{BufReader, Cursor};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::api::error::{Error, Result};
+use crate::api::fidelity::Fidelity;
+use crate::api::session::{resolve_fidelity, BoxSource, SharedBytes};
+use crate::api::tensor::{AnyTensor, Dtype};
+use crate::coordinator::partition::assemble_slabs;
+use crate::grid::{row_major_strides, Tensor};
+use crate::storage::shard::{Section, ShardHeader, ShardReader};
+use crate::storage::LazyReader;
+use crate::util::Scalar;
+
+/// Per-dtype block set: the shard reader plus one lazily opened
+/// [`LazyReader`] per block (opened on first touch, decoded classes
+/// cached — an upgrade or repeat retrieval re-decodes nothing).
+struct BlockSet<T: Scalar> {
+    shard: ShardReader<BoxSource>,
+    open: Vec<Option<LazyReader<T, Section<BoxSource>>>>,
+}
+
+impl<T: Scalar> BlockSet<T> {
+    fn new(shard: ShardReader<BoxSource>) -> Self {
+        let n = shard.nblocks();
+        BlockSet {
+            shard,
+            open: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    /// Open block `k`'s lazy reader on first use (header fetch +
+    /// index-consistency check); corrupt blocks fail here without
+    /// touching any other block.
+    fn open(&mut self, k: usize) -> Result<&mut LazyReader<T, Section<BoxSource>>> {
+        if self.open[k].is_none() {
+            let reader = self.shard.lazy_block::<T>(k).map_err(Error::Container)?;
+            self.open[k] = Some(reader);
+        }
+        Ok(self.open[k].as_mut().expect("opened above"))
+    }
+
+    fn retrieve(&mut self, header: &ShardHeader, fidelity: Fidelity) -> Result<Tensor<T>> {
+        let mut parts = Vec::with_capacity(header.nblocks());
+        for k in 0..header.nblocks() {
+            let reader = self.open(k)?;
+            let keep = resolve_fidelity(reader.header(), fidelity)
+                .map_err(|e| block_fidelity_error(k, e))?;
+            let t = reader.retrieve(keep).map_err(Error::Compress)?;
+            parts.push((header.slab(k), t));
+        }
+        Ok(assemble_slabs(&header.shape, &parts))
+    }
+
+    fn retrieve_region(
+        &mut self,
+        header: &ShardHeader,
+        roi: &[Range<usize>],
+        fidelity: Fidelity,
+    ) -> Result<Tensor<T>> {
+        let out_shape: Vec<usize> = roi.iter().map(|r| r.end - r.start).collect();
+        let mut out = Tensor::zeros(&out_shape);
+        // touch only the intersecting blocks, in slab order — the shared
+        // boundary node takes the upper neighbour's value, exactly like
+        // assemble_slabs, so a full-domain region equals a full retrieve
+        for k in header.blocks_intersecting(&roi[header.axis]) {
+            let slab = header.slab(k);
+            let reader = self.open(k)?;
+            let keep = resolve_fidelity(reader.header(), fidelity)
+                .map_err(|e| block_fidelity_error(k, e))?;
+            let t = reader.retrieve(keep).map_err(Error::Compress)?;
+            copy_block_region(&mut out, &t, header.axis, slab.start, roi);
+        }
+        Ok(out)
+    }
+}
+
+/// Prefix a per-block fidelity-resolution failure with the block index
+/// (a shard surfaces which block could not satisfy the request).
+fn block_fidelity_error(k: usize, e: Error) -> Error {
+    match e {
+        Error::Fidelity(msg) => Error::Fidelity(format!("block {k}: {msg}")),
+        other => other,
+    }
+}
+
+/// Copy the part of `block` (slab starting at global node `slab_start`
+/// along `axis`) that falls inside `roi` into `out` (whose shape is the
+/// roi's extent per dimension).
+fn copy_block_region<T: Scalar>(
+    out: &mut Tensor<T>,
+    block: &Tensor<T>,
+    axis: usize,
+    slab_start: usize,
+    roi: &[Range<usize>],
+) {
+    let d = roi.len();
+    let oshape = out.shape().to_vec();
+    let slab_end = slab_start + block.shape()[axis];
+    let lo_axis = roi[axis].start.max(slab_start);
+    let hi_axis = roi[axis].end.min(slab_end);
+    if lo_axis >= hi_axis {
+        return;
+    }
+    // the sub-box of `out` this block covers, in out coordinates
+    let lo: Vec<usize> = (0..d)
+        .map(|dd| if dd == axis { lo_axis - roi[axis].start } else { 0 })
+        .collect();
+    let hi: Vec<usize> = (0..d)
+        .map(|dd| if dd == axis { hi_axis - roi[axis].start } else { oshape[dd] })
+        .collect();
+    let ostrides = row_major_strides(&oshape);
+    let bstrides = row_major_strides(block.shape());
+    let mut idx = lo.clone();
+    loop {
+        let mut op = 0usize;
+        let mut bp = 0usize;
+        for dd in 0..d {
+            let g = roi[dd].start + idx[dd];
+            op += idx[dd] * ostrides[dd];
+            bp += (if dd == axis { g - slab_start } else { g }) * bstrides[dd];
+        }
+        out.data_mut()[op] = block.data()[bp];
+        // bump the odometer within [lo, hi)
+        let mut dd = d;
+        loop {
+            if dd == 0 {
+                return;
+            }
+            dd -= 1;
+            idx[dd] += 1;
+            if idx[dd] < hi[dd] {
+                break;
+            }
+            idx[dd] = lo[dd];
+        }
+    }
+}
+
+/// Dtype-erased block sets (mirrors the `TypedReader` pattern of
+/// [`crate::api::Refactored`]).
+enum TypedBlocks {
+    F32(BlockSet<f32>),
+    F64(BlockSet<f64>),
+}
+
+impl TypedBlocks {
+    fn bytes_read(&self) -> u64 {
+        match self {
+            TypedBlocks::F32(s) => s.shard.bytes_read(),
+            TypedBlocks::F64(s) => s.shard.bytes_read(),
+        }
+    }
+}
+
+/// A sharded refactored field: a validated MGRS index over N
+/// independent per-slab containers, retrievable at any [`Fidelity`] —
+/// whole-domain or by region of interest — without knowing the dtype.
+///
+/// Like [`crate::api::OpenContainer`], retrieval is lazy: each block's
+/// container header is fetched when the block is first touched, each
+/// class segment when a retrieval first needs it, and decoded classes
+/// stay cached per block. [`Sharded::bytes_read`] /
+/// [`Sharded::total_bytes`] expose exactly how much of the artifact has
+/// been read — after a single-block [`Sharded::retrieve_region`], far
+/// less than the whole.
+pub struct Sharded {
+    header: ShardHeader,
+    blocks: Mutex<TypedBlocks>,
+    /// The serialized shard when this value was produced in memory
+    /// (`refactor_sharded` / `from_bytes`); `None` when opened lazily
+    /// from a file — the bytes are already on disk.
+    bytes: Option<SharedBytes>,
+}
+
+impl fmt::Debug for Sharded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Sharded")
+            .field("dtype", &self.dtype())
+            .field("shape", &self.shape())
+            .field("axis", &self.axis())
+            .field("nblocks", &self.nblocks())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Sharded {
+    fn from_reader(reader: ShardReader<BoxSource>, bytes: Option<SharedBytes>) -> Result<Self> {
+        let header = reader.header().clone();
+        let blocks = match header.dtype_bytes {
+            4 => TypedBlocks::F32(BlockSet::new(reader)),
+            8 => TypedBlocks::F64(BlockSet::new(reader)),
+            _ => unreachable!("parse_prefix validated the scalar width"),
+        };
+        Ok(Sharded {
+            header,
+            blocks: Mutex::new(blocks),
+            bytes,
+        })
+    }
+
+    /// Wrap (and validate the index of) serialized shard bytes. Block
+    /// payloads are validated lazily, each at its first use.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        let shared = SharedBytes(Arc::new(bytes));
+        let src: BoxSource = Box::new(Cursor::new(shared.clone()));
+        let reader = ShardReader::open(src).map_err(Error::Container)?;
+        Self::from_reader(reader, Some(shared))
+    }
+
+    /// Open a shard file lazily: the index and the file size only; block
+    /// payloads stay on disk until a retrieval needs them.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        let file = BufReader::new(File::open(path.as_ref())?);
+        let src: BoxSource = Box::new(file);
+        let reader = ShardReader::open(src).map_err(Error::Container)?;
+        Self::from_reader(reader, None)
+    }
+
+    /// The parsed and validated shard index (global shape, partition
+    /// axis, per-block slab extents and byte offsets).
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    /// Scalar precision of the sharded field.
+    pub fn dtype(&self) -> Dtype {
+        Dtype::from_bytes(self.header.dtype_bytes).expect("validated header")
+    }
+
+    /// Global grid shape of the sharded field.
+    pub fn shape(&self) -> &[usize] {
+        &self.header.shape
+    }
+
+    /// The axis the domain was partitioned along.
+    pub fn axis(&self) -> usize {
+        self.header.axis
+    }
+
+    /// Number of blocks.
+    pub fn nblocks(&self) -> usize {
+        self.header.nblocks()
+    }
+
+    /// The serialized shard, when this value holds it in memory
+    /// (produced by [`crate::api::Session::refactor_sharded`] or
+    /// [`Sharded::from_bytes`]); `None` for lazily opened files.
+    pub fn as_bytes(&self) -> Option<&[u8]> {
+        self.bytes.as_ref().map(|b| b.0.as_slice())
+    }
+
+    /// Total artifact size in bytes (index plus every block container).
+    /// Derived from the validated index — no lock taken, so size polling
+    /// never waits behind an in-flight retrieval.
+    pub fn total_bytes(&self) -> u64 {
+        self.header.header_bytes() as u64 + self.header.payload_bytes()
+    }
+
+    /// Serialized index size in bytes (what opening alone reads).
+    pub fn index_bytes(&self) -> u64 {
+        self.header.header_bytes() as u64
+    }
+
+    /// Cumulative bytes fetched from the source: the index plus the
+    /// headers and class segments of every block a retrieval has
+    /// touched. A region retrieval leaves this far below
+    /// [`Sharded::total_bytes`].
+    pub fn bytes_read(&self) -> u64 {
+        self.blocks.lock().unwrap().bytes_read()
+    }
+
+    /// Write the serialized shard to a file. Only in-memory shards carry
+    /// their bytes; calling this on a lazily opened file is a usage
+    /// error (the artifact already lives on disk).
+    pub fn store_file(&self, path: impl AsRef<Path>) -> Result<u64> {
+        let bytes = self.bytes.as_ref().ok_or_else(|| {
+            Error::Usage(
+                "this shard was opened lazily from a file; its bytes are already stored".into(),
+            )
+        })?;
+        std::fs::write(path.as_ref(), bytes.0.as_slice())?;
+        Ok(bytes.0.len() as u64)
+    }
+
+    /// Reconstruct the full domain at `fidelity`: every block retrieves
+    /// its class prefix independently (fidelity resolved against each
+    /// block's own measured annotations) and the slabs reassemble into
+    /// the global tensor. At [`Fidelity::All`] the result is bitwise
+    /// identical to refactoring and retrieving each slab with a plain
+    /// [`crate::api::Session`] and reassembling.
+    ///
+    /// [`Fidelity::ByteBudget`] is rejected with a typed error: a byte
+    /// budget resolves against a *single* container's segment table, and
+    /// silently splitting it across blocks would misreport what was
+    /// spent. Budget-driven consumers retrieve blocks individually.
+    pub fn retrieve(&self, fidelity: Fidelity) -> Result<AnyTensor> {
+        self.reject_byte_budget(fidelity)?;
+        let mut guard = self.blocks.lock().unwrap();
+        match &mut *guard {
+            TypedBlocks::F32(set) => Ok(AnyTensor::F32(set.retrieve(&self.header, fidelity)?)),
+            TypedBlocks::F64(set) => Ok(AnyTensor::F64(set.retrieve(&self.header, fidelity)?)),
+        }
+    }
+
+    /// Reconstruct only `roi` (one half-open global index range per
+    /// dimension) at `fidelity`, opening **only the blocks whose slab
+    /// intersects the region** — every other block's bytes stay
+    /// untouched, which [`Sharded::bytes_read`] makes observable. The
+    /// result tensor has the roi's extents as its shape and equals the
+    /// same region sliced out of a full [`Sharded::retrieve`].
+    pub fn retrieve_region(&self, roi: &[Range<usize>], fidelity: Fidelity) -> Result<AnyTensor> {
+        self.reject_byte_budget(fidelity)?;
+        self.validate_roi(roi)?;
+        let mut guard = self.blocks.lock().unwrap();
+        match &mut *guard {
+            TypedBlocks::F32(set) => Ok(AnyTensor::F32(
+                set.retrieve_region(&self.header, roi, fidelity)?,
+            )),
+            TypedBlocks::F64(set) => Ok(AnyTensor::F64(
+                set.retrieve_region(&self.header, roi, fidelity)?,
+            )),
+        }
+    }
+
+    fn reject_byte_budget(&self, fidelity: Fidelity) -> Result<()> {
+        if let Fidelity::ByteBudget(b) = fidelity {
+            return Err(Error::Fidelity(format!(
+                "byte budget {b} cannot resolve against a shard: budgets are per-container — \
+                 retrieve with All/Classes/ErrorBound, or open blocks individually"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The one ROI validation both [`Sharded::retrieve_region`] and
+    /// [`Sharded::blocks_for_region`] apply: full rank, and every
+    /// dimension's range non-empty and within the global shape.
+    fn validate_roi(&self, roi: &[Range<usize>]) -> Result<()> {
+        if roi.len() != self.header.shape.len() {
+            return Err(Error::Region(format!(
+                "region has {} range(s), the sharded domain has {} dimension(s)",
+                roi.len(),
+                self.header.shape.len()
+            )));
+        }
+        for (d, r) in roi.iter().enumerate() {
+            if r.start >= r.end || r.end > self.header.shape[d] {
+                return Err(Error::Region(format!(
+                    "dimension {d}: range {}..{} is empty or outside 0..{}",
+                    r.start,
+                    r.end,
+                    self.header.shape[d]
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Indices of the blocks a region of interest would open (the ones
+    /// whose slab intersects `roi` along the partition axis), without
+    /// opening anything. Errors on a malformed region exactly as
+    /// [`Sharded::retrieve_region`] would (same validation).
+    pub fn blocks_for_region(&self, roi: &[Range<usize>]) -> Result<Vec<usize>> {
+        self.validate_roi(roi)?;
+        Ok(self.header.blocks_intersecting(&roi[self.header.axis]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Session;
+
+    fn smooth(shape: &[usize]) -> AnyTensor {
+        Tensor::<f64>::from_fn(shape, |idx| {
+            idx.iter()
+                .enumerate()
+                .map(|(d, &i)| ((d + 2) as f64 * i as f64 * 0.17).sin())
+                .sum()
+        })
+        .into()
+    }
+
+    fn session(shape: &[usize]) -> Session {
+        Session::builder().shape(shape).build().unwrap()
+    }
+
+    #[test]
+    fn one_block_shard_is_bitwise_the_unsharded_path() {
+        // with a single block the slab IS the domain: same hierarchy,
+        // same quantizer, same codec — the shard must reproduce the
+        // plain refactor+retrieve bitwise, at every fidelity
+        let s = session(&[17, 17]);
+        let data = smooth(&[17, 17]);
+        let sharded = s.refactor_sharded(&data, 1).unwrap();
+        let plain = s.refactor(&data).unwrap();
+        assert_eq!(
+            sharded.retrieve(Fidelity::All).unwrap(),
+            plain.retrieve(Fidelity::All).unwrap()
+        );
+        assert_eq!(
+            sharded.retrieve(Fidelity::Classes(1)).unwrap(),
+            plain.retrieve(Fidelity::Classes(1)).unwrap()
+        );
+    }
+
+    #[test]
+    fn sharding_honors_the_session_level_cap() {
+        // regression: refactor_sharded used to decompose every block to
+        // its maximum depth, silently ignoring SessionBuilder::nlevels
+        let s = Session::builder().shape(&[17, 17]).nlevels(2).build().unwrap();
+        let data = smooth(&[17, 17]);
+        // one block: the slab is the domain, the cap applies verbatim —
+        // bitwise identical to the capped unsharded path
+        let sharded = s.refactor_sharded(&data, 1).unwrap();
+        let plain = s.refactor(&data).unwrap();
+        assert_eq!(plain.nclasses(), 3, "nlevels(2) => 3 classes");
+        assert_eq!(
+            sharded.retrieve(Fidelity::All).unwrap(),
+            plain.retrieve(Fidelity::All).unwrap()
+        );
+        // multi-block: each [5, 17] slab supports 2 levels, so the cap
+        // lands exactly; a deeper cap clamps per block instead of failing
+        let sharded = s.refactor_sharded(&data, 4).unwrap();
+        assert!(matches!(
+            sharded.retrieve(Fidelity::Classes(4)),
+            Err(Error::Fidelity(_))
+        ));
+        sharded.retrieve(Fidelity::Classes(3)).unwrap();
+    }
+
+    #[test]
+    fn sharded_retrieve_meets_the_error_bound() {
+        let s = Session::builder().shape(&[17, 17]).error_bound(1e-3).build().unwrap();
+        let data = smooth(&[17, 17]);
+        let sharded = s.refactor_sharded(&data, 4).unwrap();
+        assert_eq!(sharded.nblocks(), 4);
+        assert_eq!(sharded.axis(), 0);
+        let full = sharded.retrieve(Fidelity::All).unwrap();
+        assert!(full.linf_to(&data).unwrap() <= 1e-3);
+        assert!(format!("{sharded:?}").contains("Sharded"));
+    }
+
+    #[test]
+    fn region_equals_the_full_retrieve_sliced() {
+        for axis in [0usize, 1] {
+            let s = session(&[17, 9]);
+            let data = smooth(&[17, 9]);
+            let sharded = s.refactor_sharded_on(&data, 2, axis).unwrap();
+            let full = sharded.retrieve(Fidelity::All).unwrap();
+            let roi = [3..14, 2..7];
+            let region = sharded.retrieve_region(&roi, Fidelity::All).unwrap();
+            assert_eq!(region.shape(), &[11, 5]);
+            let full = full.as_f64().unwrap();
+            let region = region.as_f64().unwrap();
+            for i in 0..11 {
+                for j in 0..5 {
+                    assert_eq!(
+                        region.get(&[i, j]),
+                        full.get(&[i + 3, j + 2]),
+                        "axis {axis} at ({i},{j})"
+                    );
+                }
+            }
+            // the full-domain region is exactly the full retrieve
+            let whole = sharded
+                .retrieve_region(&[0..17, 0..9], Fidelity::All)
+                .unwrap();
+            assert_eq!(whole.as_f64().unwrap().data(), full.data());
+        }
+    }
+
+    #[test]
+    fn region_requests_are_validated() {
+        let s = session(&[17, 9]);
+        let sharded = s.refactor_sharded(&smooth(&[17, 9]), 2).unwrap();
+        // wrong rank
+        assert!(matches!(
+            sharded.retrieve_region(&[0..5], Fidelity::All),
+            Err(Error::Region(_))
+        ));
+        // empty range
+        assert!(matches!(
+            sharded.retrieve_region(&[4..4, 0..9], Fidelity::All),
+            Err(Error::Region(_))
+        ));
+        // out of bounds
+        assert!(matches!(
+            sharded.retrieve_region(&[0..18, 0..9], Fidelity::All),
+            Err(Error::Region(_))
+        ));
+        assert!(matches!(
+            sharded.blocks_for_region(&[0..5]),
+            Err(Error::Region(_))
+        ));
+        // regression: blocks_for_region validates every dimension, not
+        // just the partition axis — same contract as retrieve_region
+        assert!(matches!(
+            sharded.blocks_for_region(&[0..5, 0..99]),
+            Err(Error::Region(_))
+        ));
+        assert_eq!(sharded.blocks_for_region(&[0..5, 0..9]).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn byte_budgets_are_rejected_on_shards() {
+        let s = session(&[17, 9]);
+        let sharded = s.refactor_sharded(&smooth(&[17, 9]), 2).unwrap();
+        assert!(matches!(
+            sharded.retrieve(Fidelity::ByteBudget(1 << 20)),
+            Err(Error::Fidelity(_))
+        ));
+        assert!(matches!(
+            sharded.retrieve_region(&[0..5, 0..9], Fidelity::ByteBudget(1 << 20)),
+            Err(Error::Fidelity(_))
+        ));
+        // a class prefix beyond a block's class count names the block
+        let err = sharded.retrieve(Fidelity::Classes(99)).unwrap_err();
+        assert!(matches!(err, Error::Fidelity(_)));
+        assert!(err.to_string().contains("block 0"), "{err}");
+    }
+
+    #[test]
+    fn refactor_sharded_validates_inputs() {
+        let s = session(&[17, 9]);
+        let wrong_shape = smooth(&[9, 9]);
+        assert!(matches!(
+            s.refactor_sharded(&wrong_shape, 2),
+            Err(Error::Shape { .. })
+        ));
+        // 3 does not divide 16
+        assert!(matches!(
+            s.refactor_sharded(&smooth(&[17, 9]), 3),
+            Err(Error::Usage(_))
+        ));
+        // axis out of range
+        assert!(matches!(
+            s.refactor_sharded_on(&smooth(&[17, 9]), 2, 2),
+            Err(Error::Usage(_))
+        ));
+    }
+
+    #[test]
+    fn store_and_reopen_roundtrip() {
+        let s = session(&[17, 9]);
+        let data = smooth(&[17, 9]);
+        let sharded = s.refactor_sharded(&data, 2).unwrap();
+        let want = sharded.retrieve(Fidelity::All).unwrap();
+
+        let path = std::env::temp_dir().join("mgr_api_shard_roundtrip.mgrs");
+        let written = sharded.store_file(&path).unwrap();
+        assert_eq!(written as usize, sharded.as_bytes().unwrap().len());
+
+        let reopened = Sharded::open_file(&path).unwrap();
+        assert!(reopened.as_bytes().is_none(), "lazy open holds no bytes");
+        assert!(reopened.store_file(&path).is_err(), "nothing to store");
+        // opening read the index only
+        assert_eq!(reopened.bytes_read(), reopened.index_bytes());
+        assert_eq!(reopened.retrieve(Fidelity::All).unwrap(), want);
+        assert_eq!(reopened.bytes_read(), reopened.total_bytes());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -20,5 +20,7 @@ pub mod partition;
 pub mod pipeline;
 
 pub use parallel::ParallelRefactorer;
-pub use partition::{partition_slabs, round_robin_owner, Slab};
+pub use partition::{
+    assemble_slabs, extract_slab, partition_slabs, round_robin_owner, sweep_utilization, Slab,
+};
 pub use pipeline::{run_pooled, Backend, Coordinator, JobResult, JobSpec, Mode as JobMode};

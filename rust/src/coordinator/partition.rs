@@ -1,10 +1,15 @@
 //! Domain decomposition for multi-device refactoring (§3.6).
 //!
 //! Node-centered slab partitioning: a `2^k+1`-node dimension splits into
-//! `P = 2^m` slabs of `(n-1)/P + 1` nodes each, neighbouring slabs
-//! *sharing* their boundary node — each slab is itself a refactorable
-//! `2^j+1` grid, which is what makes embarrassing-parallel refactoring
-//! possible without any communication.
+//! `P` slabs of `(n-1)/P + 1` nodes each, neighbouring slabs *sharing*
+//! their boundary node — each slab is itself a refactorable `2^j+1`
+//! grid, which is what makes embarrassing-parallel refactoring
+//! possible without any communication. (`P` need not be a power of two:
+//! any divisor of `n-1` whose quotient is `2^j`, `j >= 1`, works — so a
+//! sharded domain's axis can be e.g. `3·4 + 1 = 13` nodes even though
+//! `13` itself is not `2^k + 1`.)
+
+use anyhow::{ensure, Result};
 
 use crate::grid::{row_major_strides, Tensor};
 use crate::util::Scalar;
@@ -25,23 +30,39 @@ pub struct Slab {
 /// Split axis `axis` of `shape` into `parts` refactorable slabs.
 ///
 /// `parts` must divide `shape[axis] - 1` with a power-of-two quotient
-/// remaining `2^j` with `j >= 1`.
-pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Vec<Slab> {
+/// `2^j`, `j >= 1`. Degenerate inputs (an out-of-range axis, an axis too
+/// short to refactor — including the `shape[axis] == 0` underflow this
+/// used to panic on — or `parts == 0`) are typed errors, never panics.
+pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Result<Vec<Slab>> {
+    ensure!(
+        axis < shape.len(),
+        "partition axis {axis} outside 0..{} for shape {shape:?}",
+        shape.len()
+    );
     let n = shape[axis];
-    assert!(parts >= 1 && (n - 1) % parts == 0, "parts must divide n-1");
+    ensure!(
+        n >= 3,
+        "axis {axis} has {n} node(s); a refactorable axis needs at least 3 (2^j + 1)"
+    );
+    ensure!(parts >= 1, "parts must be at least 1, got 0");
+    ensure!(
+        (n - 1) % parts == 0,
+        "parts {parts} must divide n-1 = {} (axis {axis} has {n} nodes)",
+        n - 1
+    );
     let seg = (n - 1) / parts;
-    assert!(
+    ensure!(
         seg >= 2 && seg.is_power_of_two(),
         "slab interior must be 2^j (j>=1), got {seg}"
     );
-    (0..parts)
+    Ok((0..parts)
         .map(|p| Slab {
             axis,
             start: p * seg,
             len: seg + 1,
             device: p,
         })
-        .collect()
+        .collect())
 }
 
 /// Extract a slab's tensor (copying; boundary nodes are duplicated into
@@ -60,10 +81,13 @@ pub fn extract_slab<T: Scalar>(t: &Tensor<T>, slab: &Slab) -> Tensor<T> {
     })
 }
 
-/// Reassemble slabs into the full tensor (interior boundary nodes are
-/// taken from the lower slab; for refactored data both copies agree only
-/// on the *original* data, so reassembly is only meaningful for
-/// recomposed output — tests assert that case).
+/// Reassemble slabs into the full tensor. Slabs are written in order,
+/// so a shared interior boundary node takes the **upper** (later)
+/// slab's value; both copies agree only on the *original* data, so
+/// reassembly is only meaningful for recomposed output — tests assert
+/// that case, and region retrieval
+/// ([`crate::api::Sharded::retrieve_region`]) matches this
+/// upper-neighbour-wins rule.
 pub fn assemble_slabs<T: Scalar>(shape: &[usize], slabs: &[(Slab, Tensor<T>)]) -> Tensor<T> {
     let mut out = Tensor::zeros(shape);
     let strides = row_major_strides(shape);
@@ -106,7 +130,15 @@ pub fn round_robin_owner(row: usize, col: usize, devices: usize) -> usize {
 /// Utilization of a sweep along `axis` under an ownership function:
 /// fraction of (step, device) slots doing useful work when the sweep
 /// processes block-columns in dependency order.
+///
+/// An empty sweep (`blocks == 0` or `devices == 0`) has no slots to
+/// utilize and reports `0.0` — never `NaN` and never a divide/modulo
+/// panic (callers sweep over configuration grids that may include the
+/// degenerate corners).
 pub fn sweep_utilization(blocks: usize, devices: usize, owner: impl Fn(usize, usize) -> usize) -> f64 {
+    if blocks == 0 || devices == 0 {
+        return 0.0;
+    }
     // a sweep has `blocks` sequential stages; at stage s, every row's
     // block (row, s) is processed — devices owning at least one such
     // block are busy
@@ -131,7 +163,7 @@ mod tests {
 
     #[test]
     fn slab_sizes_refactorable() {
-        let slabs = partition_slabs(&[65, 65, 65], 0, 4);
+        let slabs = partition_slabs(&[65, 65, 65], 0, 4).unwrap();
         assert_eq!(slabs.len(), 4);
         for s in &slabs {
             assert_eq!(s.len, 17);
@@ -142,16 +174,58 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "2^j")]
-    fn rejects_slabs_too_thin() {
-        // 64/64 leaves a 1-node interior -> not refactorable
-        partition_slabs(&[65], 0, 64);
+    fn non_power_of_two_part_counts_work() {
+        // 3 parts of interior 4: the axis is 13 = 3·4 + 1 nodes — not
+        // itself 2^k+1, but every slab is
+        let slabs = partition_slabs(&[13], 0, 3).unwrap();
+        assert_eq!(slabs.len(), 3);
+        for s in &slabs {
+            assert_eq!(s.len, 5);
+        }
+        assert_eq!(slabs[2].start + slabs[2].len, 13);
     }
 
     #[test]
-    #[should_panic(expected = "divide")]
+    fn rejects_slabs_too_thin() {
+        // 64/64 leaves a 1-node interior -> not refactorable
+        let err = partition_slabs(&[65], 0, 64).unwrap_err().to_string();
+        assert!(err.contains("2^j"), "{err}");
+    }
+
+    #[test]
     fn rejects_non_dividing_parts() {
-        partition_slabs(&[65], 0, 3);
+        let err = partition_slabs(&[65], 0, 3).unwrap_err().to_string();
+        assert!(err.contains("divide"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_inputs_are_errors_not_panics() {
+        // regression: shape[axis] == 0 used to underflow `n - 1` and
+        // panic in debug (wrap in release); now a typed error
+        let err = partition_slabs(&[0], 0, 1).unwrap_err().to_string();
+        assert!(err.contains("at least 3"), "{err}");
+        assert!(partition_slabs(&[1], 0, 1).is_err());
+        assert!(partition_slabs(&[2], 0, 1).is_err());
+        // out-of-range axis used to index past the shape slice
+        let err = partition_slabs(&[65], 1, 2).unwrap_err().to_string();
+        assert!(err.contains("axis 1"), "{err}");
+        assert!(partition_slabs(&[], 0, 1).is_err());
+        // zero parts used to divide by zero
+        let err = partition_slabs(&[65], 0, 0).unwrap_err().to_string();
+        assert!(err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn sweep_utilization_empty_sweeps_are_zero_not_nan() {
+        // regression: blocks == 0 divided 0/0 into NaN; devices == 0
+        // panicked on `% 0`
+        let u = sweep_utilization(0, 3, |r, c| round_robin_owner(r, c, 3));
+        assert_eq!(u, 0.0);
+        let u = sweep_utilization(6, 0, |r, c| r + c);
+        assert_eq!(u, 0.0);
+        let u = sweep_utilization(0, 0, |r, c| r + c);
+        assert_eq!(u, 0.0);
+        assert!(u.is_finite());
     }
 
     #[test]
@@ -159,7 +233,7 @@ mod tests {
         let shape = [17usize, 9];
         let mut rng = Rng::new(1);
         let t = Tensor::from_fn(&shape, |_| rng.normal());
-        let slabs = partition_slabs(&shape, 0, 2);
+        let slabs = partition_slabs(&shape, 0, 2).unwrap();
         let parts: Vec<(Slab, Tensor<f64>)> = slabs
             .iter()
             .map(|s| (s.clone(), extract_slab(&t, s)))
@@ -174,7 +248,7 @@ mod tests {
         let shape = [33usize, 17];
         let mut rng = Rng::new(2);
         let t = Tensor::from_fn(&shape, |_| rng.normal());
-        let slabs = partition_slabs(&shape, 0, 2);
+        let slabs = partition_slabs(&shape, 0, 2).unwrap();
         let mut parts = Vec::new();
         for s in &slabs {
             let mut block = extract_slab(&t, s);

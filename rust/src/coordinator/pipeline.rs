@@ -236,7 +236,7 @@ impl Coordinator {
         devices: usize,
     ) -> Result<Vec<(crate::coordinator::partition::Slab, Tensor<f64>)>> {
         let shape = job.data.shape().to_vec();
-        let slabs = partition_slabs(&shape, 0, devices);
+        let slabs = partition_slabs(&shape, 0, devices)?;
         let parts: Vec<_> = crossbeam_utils::thread::scope(|s| {
             let handles: Vec<_> = slabs
                 .iter()

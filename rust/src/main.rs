@@ -27,7 +27,7 @@
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, Session};
+use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, Session, Sharded};
 use mgr::compress::Codec;
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
 use mgr::grid::Tensor;
@@ -111,15 +111,56 @@ fn parse_fidelity(args: &Args) -> Result<Fidelity> {
     Ok(Fidelity::from_flags(keep, error, bytes)?)
 }
 
+/// The `--in FILE` (or positional) path of container subcommands.
+fn container_path(args: &Args) -> Result<String> {
+    args.get("in")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| anyhow!("expected --in FILE (or a positional path)"))
+}
+
 /// Lazily open the `--in FILE` container: header bytes only — segment
 /// payloads stay on disk until a retrieval needs them.
 fn open_arg(args: &Args) -> Result<OpenContainer> {
-    let path = args
-        .get("in")
-        .map(str::to_string)
-        .or_else(|| args.positional.first().cloned())
-        .ok_or_else(|| anyhow!("expected --in FILE (or a positional path)"))?;
+    let path = container_path(args)?;
     OpenContainer::open_file(&path).with_context(|| format!("opening container {path}"))
+}
+
+/// Whether `path` starts with the MGRS shard magic (dispatches
+/// `retrieve`/`plan`-style subcommands between `.mgr` and `.mgrs`).
+/// Short or unreadable files report `false` — the single-container path
+/// then produces its descriptive open error.
+fn path_is_shard(path: &str) -> bool {
+    use std::io::Read;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic).is_ok() && mgr::storage::shard::is_shard(&magic)
+}
+
+/// Parse the optional `--region i0..i1,j0..j1,…` knob of `retrieve`:
+/// one half-open global index range per dimension.
+fn parse_region(args: &Args) -> Result<Option<Vec<std::ops::Range<usize>>>> {
+    let Some(spec) = args.get("region") else {
+        return Ok(None);
+    };
+    let mut roi = Vec::new();
+    for part in spec.split(',') {
+        let (a, b) = part.split_once("..").ok_or_else(|| {
+            anyhow!("--region expects comma-separated ranges like 0..17,4..9 — got '{part}'")
+        })?;
+        let start: usize = a
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--region: bad range start '{a}' in '{part}'"))?;
+        let end: usize = b
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--region: bad range end '{b}' in '{part}'"))?;
+        roi.push(start..end);
+    }
+    Ok(Some(roi))
 }
 
 /// Parse the optional `--upgrade-from K` staging knob of `retrieve`.
@@ -153,8 +194,10 @@ fn run(args: &Args) -> Result<()> {
                  \x20 info                      artifact + device summary\n\
                  \x20 refactor   [--shape NxNxN --input grayscott|random --dtype f32|f64]\n\
                  \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
+                 \x20            [--blocks P --axis A --out f.mgrs]   sharded (one container per slab)\n\
                  \x20 retrieve   --in f.mgr [--keep K | --error E | --bytes B]\n\
                  \x20            [--upgrade-from K] [--dump raw.bin]\n\
+                 \x20 retrieve   --in f.mgrs [--region i0..i1,j0..j1,...]  region-of-interest\n\
                  \x20 plan       --in f.mgr\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
                  \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
@@ -199,6 +242,9 @@ fn info(args: &Args) -> Result<()> {
 fn refactor(args: &Args) -> Result<()> {
     let data = load_field(args)?;
     let session = session_for(args, data.shape(), data.dtype())?;
+    if args.get("blocks").is_some() {
+        return refactor_sharded(args, &session, &data);
+    }
     let (refactored, secs) = time(|| session.refactor(&data));
     let refactored = refactored?;
     let header = refactored.header();
@@ -236,7 +282,54 @@ fn refactor(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `refactor --blocks P [--axis A]`: the §3.6 sharded create path —
+/// partition, refactor every slab in parallel, one MGRS artifact out.
+fn refactor_sharded(args: &Args, session: &Session, data: &AnyTensor) -> Result<()> {
+    let blocks = args.get_usize("blocks", 2)?;
+    let axis = args.get_usize("axis", 0)?;
+    let (sharded, secs) = time(|| session.refactor_sharded_on(data, blocks, axis));
+    let sharded = sharded?;
+    let header = sharded.header();
+    println!(
+        "refactored {:?} {} into {} block(s) along axis {axis} \
+         ({} codec, eb {:.1e}) in {:.1} ms — {:.2} GB/s aggregate",
+        data.shape(),
+        data.dtype(),
+        sharded.nblocks(),
+        session.codec().name(),
+        session.error_bound(),
+        secs * 1e3,
+        data.nbytes() as f64 / secs / 1e9
+    );
+    println!("{:<8} {:>10} {:>10} {:>14}", "block", "start", "nodes", "bytes");
+    for (k, b) in header.blocks.iter().enumerate() {
+        println!("{:<8} {:>10} {:>10} {:>14}", k, b.start, b.len, b.bytes);
+    }
+    let total = sharded.total_bytes();
+    println!(
+        "total {total} bytes ({}-byte index + {} payload; {:.2}x over raw {})",
+        sharded.index_bytes(),
+        header.payload_bytes(),
+        data.nbytes() as f64 / total as f64,
+        data.nbytes()
+    );
+    if let Some(out) = args.get("out") {
+        let written = sharded.store_file(out)?;
+        println!("stored sharded container {out} ({written} bytes)");
+    }
+    Ok(())
+}
+
 fn retrieve(args: &Args) -> Result<()> {
+    let path = container_path(args)?;
+    if path_is_shard(&path) {
+        return retrieve_sharded(args, &path);
+    }
+    ensure!(
+        args.get("region").is_none(),
+        "--region needs a sharded (.mgrs) container; {path} is a single-block MGRC container \
+         — refactor with --blocks to shard the domain"
+    );
     let container = open_arg(args)?;
     let header = container.header().clone();
     println!(
@@ -317,8 +410,63 @@ fn retrieve(args: &Args) -> Result<()> {
         header.segments[keep - 1].rmse
     );
 
+    dump_tensor(args, &tensor)
+}
+
+/// `retrieve` on a sharded (`.mgrs`) artifact: whole-domain reassembly,
+/// or `--region` for region-of-interest retrieval that opens only the
+/// intersecting blocks (the bytes-read report shows the saving).
+fn retrieve_sharded(args: &Args, path: &str) -> Result<()> {
+    ensure!(
+        args.get("upgrade-from").is_none(),
+        "--upgrade-from applies to single containers; sharded retrieval caches per-block \
+         decodes instead (just retrieve again at the higher fidelity)"
+    );
+    let sharded = Sharded::open_file(path).with_context(|| format!("opening shard {path}"))?;
+    let header = sharded.header();
+    println!(
+        "shard: shape {:?} {}, {} block(s) along axis {}, {}-byte index",
+        sharded.shape(),
+        sharded.dtype(),
+        sharded.nblocks(),
+        sharded.axis(),
+        sharded.index_bytes()
+    );
+    println!("{:<8} {:>10} {:>10} {:>14}", "block", "start", "nodes", "bytes");
+    for (k, b) in header.blocks.iter().enumerate() {
+        println!("{:<8} {:>10} {:>10} {:>14}", k, b.start, b.len, b.bytes);
+    }
+
+    let fidelity = parse_fidelity(args)?;
+    let tensor = if let Some(roi) = parse_region(args)? {
+        let hit = sharded.blocks_for_region(&roi)?;
+        println!(
+            "region {:?} intersects block(s) {hit:?} — the other {} block(s) stay untouched",
+            roi,
+            sharded.nblocks() - hit.len()
+        );
+        let (t, secs) = time(|| sharded.retrieve_region(&roi, fidelity));
+        let t = t?;
+        println!("retrieved region {:?} in {:.1} ms", t.shape(), secs * 1e3);
+        t
+    } else {
+        let (t, secs) = time(|| sharded.retrieve(fidelity));
+        let t = t?;
+        println!("retrieved full domain in {:.1} ms", secs * 1e3);
+        t
+    };
+    println!(
+        "read {} of {} shard bytes ({:.1}%)",
+        sharded.bytes_read(),
+        sharded.total_bytes(),
+        100.0 * sharded.bytes_read() as f64 / sharded.total_bytes() as f64
+    );
+    dump_tensor(args, &tensor)
+}
+
+/// Honor `--dump raw.bin`: always dumps f64 LE (f32 data is widened).
+fn dump_tensor(args: &Args, tensor: &AnyTensor) -> Result<()> {
     if let Some(dump) = args.get("dump") {
-        // always dumps f64 LE (f32 containers are widened)
         let mut raw = Vec::with_capacity(tensor.len() * 8);
         for v in tensor.data_f64() {
             raw.extend_from_slice(&v.to_le_bytes());
@@ -514,6 +662,18 @@ mod tests {
         assert_eq!(staged, Some(2));
         assert!(parse_upgrade_from(&args("retrieve --upgrade-from 0")).is_err());
         assert!(parse_upgrade_from(&args("retrieve --upgrade-from x")).is_err());
+    }
+
+    #[test]
+    fn region_specs_parse() {
+        assert_eq!(parse_region(&args("retrieve")).unwrap(), None);
+        let roi = parse_region(&args("retrieve --region 0..17,4..9")).unwrap().unwrap();
+        assert_eq!(roi, vec![0..17, 4..9]);
+        let roi = parse_region(&args("retrieve --region 10..15")).unwrap().unwrap();
+        assert_eq!(roi, vec![10..15]);
+        assert!(parse_region(&args("retrieve --region 0-17")).is_err());
+        assert!(parse_region(&args("retrieve --region x..9")).is_err());
+        assert!(parse_region(&args("retrieve --region 0..y")).is_err());
     }
 
     #[test]

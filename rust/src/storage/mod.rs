@@ -11,7 +11,11 @@
 //! (normative spec: `docs/format.md`) — and [`reader`] adds lazy,
 //! seekable access, so the placement operates on real entropy-coded
 //! sizes and readers fetch *and decode* fidelity prefixes without
-//! touching the bytes beyond them.
+//! touching the bytes beyond them. The [`shard`] module scales the
+//! container across a §3.6 domain decomposition: one `MGRS` index over
+//! N independent per-slab containers, written in parallel and read
+//! block-by-block (region-of-interest retrieval opens only the blocks
+//! a request intersects).
 
 #![warn(missing_docs)]
 
@@ -19,10 +23,12 @@ pub mod container;
 pub mod iosim;
 pub mod mover;
 pub mod reader;
+pub mod shard;
 pub mod tier;
 
 pub use container::{ContainerHeader, ProgressiveReader, ProgressiveWriter, SegmentMeta};
 pub use iosim::ParallelFs;
 pub use mover::{place_classes, Placement};
 pub use reader::{ContainerReader, LazyReader, ReadSeek};
+pub use shard::{BlockMeta, Section, ShardHeader, ShardReader, ShardWriter};
 pub use tier::{StorageTier, TierSpec};

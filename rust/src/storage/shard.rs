@@ -1,0 +1,916 @@
+//! Sharded multi-block containers (`.mgrs`): the byte-level form of the
+//! paper's §3.6 node-centered domain decomposition.
+//!
+//! The headline scaling result (264 TB/s aggregate on 1024 Summit nodes)
+//! comes from *embarrassingly parallel per-block refactoring*: the
+//! domain splits into node-sharing slabs, each slab gets its own
+//! hierarchy, and no block ever talks to another. An `MGRS` shard is
+//! exactly that decomposition as one artifact: a small **index** (global
+//! shape, partition axis, per-block slab extents and byte offsets)
+//! followed by N complete, independent [`MGRC`](crate::storage::container)
+//! containers — one per slab.
+//!
+//! Because every block is a self-contained progressive container, the
+//! retrieval side inherits everything MGRC already provides — per-class
+//! laziness, measured error annotations, hardened decoding — and adds
+//! the HP-MDR-style capability this module exists for: **region-of-
+//! interest retrieval** that opens only the blocks intersecting the
+//! request, leaving the others' bytes untouched on disk.
+//!
+//! # Index format (version 1, little-endian)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 4 | magic `"MGRS"` |
+//! | 4  | 2 | version (`1`) |
+//! | 6  | 1 | scalar width in bytes (4 = f32, 8 = f64) |
+//! | 7  | 1 | partition axis |
+//! | 8  | 1 | ndim |
+//! | 9  | 1 | reserved (0) |
+//! | 10 | 2 | nblocks (u16) |
+//! | 12 | 8·ndim | global shape, one u64 per dimension |
+//! | …  | 32·nblocks | block table |
+//! | …  | Σ bytes | block payloads: complete MGRC containers, in order |
+//!
+//! Each block-table entry is `{ start: u64, len: u64, offset: u64,
+//! bytes: u64 }`: the slab's first global node index and node count
+//! along the partition axis, and the absolute byte offset/length of its
+//! MGRC container. Neighbouring slabs share their boundary node
+//! (`start[k+1] = start[k] + len[k] - 1`) and the payloads are laid out
+//! contiguously after the index — both properties are *validated*, so a
+//! corrupt offset table (pointing past EOF, overlapping, or leaving
+//! gaps) is a typed parse error, never an out-of-bounds read. Parsing is
+//! total: malformed or truncated bytes yield `Err`, never a panic, and
+//! every allocation is bounded by validated header fields.
+//!
+//! The normative spec (with a worked hex dump) lives in
+//! `docs/format.md`; this module is its implementation.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::compress::Codec;
+use crate::coordinator::partition::{extract_slab, partition_slabs, Slab};
+use crate::coordinator::run_pooled;
+use crate::grid::{max_levels, Hierarchy, Tensor};
+use crate::storage::container::{self, Cursor, ProgressiveWriter};
+use crate::storage::reader::{ContainerReader, LazyReader};
+use crate::util::Scalar;
+
+/// Shard index magic bytes.
+pub const SHARD_MAGIC: [u8; 4] = *b"MGRS";
+/// Current shard index format version.
+pub const SHARD_VERSION: u16 = 1;
+/// Largest block count a shard index may declare.
+pub const MAX_BLOCKS: usize = 1 << 12;
+/// Size of the fixed index prelude (magic through nblocks) that precedes
+/// the variable shape + block-table part. A streaming reader fetches
+/// exactly this many bytes, calls [`shard_var_len`] to learn how long
+/// the rest of the index is, and never over-reads.
+pub const SHARD_FIXED_LEN: usize = 12;
+
+/// Byte length of the variable index part (shape + block table) declared
+/// by a [`SHARD_FIXED_LEN`]-byte prelude. Validates only what sizing
+/// needs — magic, version, and the dimension/block counts.
+pub fn shard_var_len(prelude: &[u8]) -> Result<usize> {
+    ensure!(
+        prelude.len() >= SHARD_FIXED_LEN,
+        "shard index prelude needs {SHARD_FIXED_LEN} bytes, got {}",
+        prelude.len()
+    );
+    ensure!(prelude[..4] == SHARD_MAGIC, "not an MGRS shard index (bad magic)");
+    let version = u16::from_le_bytes(prelude[4..6].try_into().unwrap());
+    ensure!(
+        version == SHARD_VERSION,
+        "unsupported shard index version {version}"
+    );
+    let ndim = prelude[8] as usize;
+    ensure!(
+        ndim >= 1 && ndim <= container::MAX_NDIM,
+        "ndim {ndim} outside 1..={}",
+        container::MAX_NDIM
+    );
+    let nblocks = u16::from_le_bytes(prelude[10..12].try_into().unwrap()) as usize;
+    ensure!(
+        nblocks >= 1 && nblocks <= MAX_BLOCKS,
+        "block count {nblocks} outside 1..={MAX_BLOCKS}"
+    );
+    Ok(8 * ndim + 32 * nblocks)
+}
+
+/// Whether a byte buffer starts with the MGRS shard magic (lets a CLI
+/// dispatch between single-block `.mgr` and sharded `.mgrs` files).
+pub fn is_shard(buf: &[u8]) -> bool {
+    buf.len() >= 4 && buf[..4] == SHARD_MAGIC
+}
+
+/// Block-table entry: one per slab, in axis order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockMeta {
+    /// First global node index of the slab along the partition axis.
+    pub start: usize,
+    /// Node count of the slab along the partition axis (a `2^j + 1`).
+    pub len: usize,
+    /// Absolute byte offset of the block's MGRC container in the shard.
+    pub offset: u64,
+    /// Byte length of the block's MGRC container.
+    pub bytes: u64,
+}
+
+/// Parsed (or to-be-written) shard index.
+#[derive(Clone, Debug)]
+pub struct ShardHeader {
+    /// Scalar width in bytes (4 = f32, 8 = f64) — every block agrees.
+    pub dtype_bytes: u8,
+    /// The axis the domain was partitioned along.
+    pub axis: usize,
+    /// Global grid shape of the sharded field.
+    pub shape: Vec<usize>,
+    /// One entry per block, in slab order along the axis.
+    pub blocks: Vec<BlockMeta>,
+}
+
+impl ShardHeader {
+    /// Number of blocks.
+    pub fn nblocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Serialized index size in bytes.
+    pub fn header_bytes(&self) -> usize {
+        SHARD_FIXED_LEN + 8 * self.shape.len() + 32 * self.blocks.len()
+    }
+
+    /// Total block-payload bytes (the MGRC containers, index excluded).
+    pub fn payload_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+
+    /// Grid shape of block `k` (the global shape with the axis extent
+    /// replaced by the slab's node count).
+    pub fn block_shape(&self, k: usize) -> Vec<usize> {
+        let mut s = self.shape.clone();
+        s[self.axis] = self.blocks[k].len;
+        s
+    }
+
+    /// The slab descriptor of block `k` (feeds
+    /// [`crate::coordinator::partition::assemble_slabs`]).
+    pub fn slab(&self, k: usize) -> Slab {
+        Slab {
+            axis: self.axis,
+            start: self.blocks[k].start,
+            len: self.blocks[k].len,
+            device: k,
+        }
+    }
+
+    /// Indices of the blocks whose slab `[start, start + len)` intersects
+    /// `range` along the partition axis. The shared boundary node belongs
+    /// to *both* of its neighbours, so a range covering only that node
+    /// selects both.
+    pub fn blocks_intersecting(&self, range: &Range<usize>) -> Vec<usize> {
+        self.blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.start < range.end && b.start + b.len > range.start)
+            .map(|(k, _)| k)
+            .collect()
+    }
+
+    /// Serialize (index only — block payloads follow separately).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.header_bytes());
+        out.extend_from_slice(&SHARD_MAGIC);
+        out.extend_from_slice(&SHARD_VERSION.to_le_bytes());
+        out.push(self.dtype_bytes);
+        out.push(self.axis as u8);
+        out.push(self.shape.len() as u8);
+        out.push(0); // reserved
+        out.extend_from_slice(&(self.blocks.len() as u16).to_le_bytes());
+        for &d in &self.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for b in &self.blocks {
+            out.extend_from_slice(&(b.start as u64).to_le_bytes());
+            out.extend_from_slice(&(b.len as u64).to_le_bytes());
+            out.extend_from_slice(&b.offset.to_le_bytes());
+            out.extend_from_slice(&b.bytes.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse and validate a buffer that holds (at least) the shard
+    /// index: every field, slab tiling, and byte-layout contiguity, but
+    /// **no payload accounting** — the buffer may end right after the
+    /// block table. Returns the header and its serialized size.
+    pub fn parse_prefix(buf: &[u8]) -> Result<(ShardHeader, usize)> {
+        let mut cur = Cursor::new(buf);
+        let magic = cur.take(4)?;
+        ensure!(magic == SHARD_MAGIC, "not an MGRS shard index (bad magic)");
+        let version = cur.u16()?;
+        ensure!(
+            version == SHARD_VERSION,
+            "unsupported shard index version {version}"
+        );
+        let dtype_bytes = cur.u8()?;
+        ensure!(
+            dtype_bytes == 4 || dtype_bytes == 8,
+            "unsupported scalar width {dtype_bytes}"
+        );
+        let axis = cur.u8()? as usize;
+        let ndim = cur.u8()? as usize;
+        ensure!(
+            ndim >= 1 && ndim <= container::MAX_NDIM,
+            "ndim {ndim} outside 1..={}",
+            container::MAX_NDIM
+        );
+        ensure!(axis < ndim, "partition axis {axis} outside 0..{ndim}");
+        let reserved = cur.u8()?;
+        ensure!(reserved == 0, "reserved shard index byte must be 0, got {reserved}");
+        let nblocks = cur.u16()? as usize;
+        ensure!(
+            nblocks >= 1 && nblocks <= MAX_BLOCKS,
+            "block count {nblocks} outside 1..={MAX_BLOCKS}"
+        );
+
+        let mut shape = Vec::with_capacity(ndim);
+        let mut nodes: u64 = 1;
+        for _ in 0..ndim {
+            let d = cur.u64()?;
+            ensure!(
+                d >= 3 && d <= container::MAX_DIM,
+                "dimension {d} outside 3..={}",
+                container::MAX_DIM
+            );
+            nodes = nodes
+                .checked_mul(d)
+                .filter(|&n| n <= container::MAX_NODES)
+                .ok_or_else(|| anyhow!("sharded tensor exceeds {} nodes", container::MAX_NODES))?;
+            shape.push(d as usize);
+        }
+
+        let axis_nodes = shape[axis] as u64;
+        let mut blocks = Vec::with_capacity(nblocks);
+        for k in 0..nblocks {
+            let start = cur.u64()?;
+            let len = cur.u64()?;
+            let offset = cur.u64()?;
+            let bytes = cur.u64()?;
+            ensure!(
+                start < axis_nodes,
+                "block {k} starts at node {start}, the axis has {axis_nodes}"
+            );
+            ensure!(
+                len >= 3 && len <= axis_nodes,
+                "block {k} slab length {len} outside 3..={axis_nodes}"
+            );
+            ensure!(
+                max_levels(&[len as usize]).is_some(),
+                "block {k} slab length {len} is not refactorable (must be 2^j + 1)"
+            );
+            ensure!(
+                bytes >= container::FIXED_HEADER_LEN as u64,
+                "block {k} declares {bytes} byte(s) — too small to hold an MGRC container"
+            );
+            blocks.push(BlockMeta {
+                start: start as usize,
+                len: len as usize,
+                offset,
+                bytes,
+            });
+        }
+        let header_len = cur.pos();
+
+        // slab tiling: blocks share boundary nodes and cover the axis
+        ensure!(
+            blocks[0].start == 0,
+            "block 0 must start at node 0, starts at {}",
+            blocks[0].start
+        );
+        for k in 1..nblocks {
+            let expect = blocks[k - 1].start + blocks[k - 1].len - 1;
+            ensure!(
+                blocks[k].start == expect,
+                "block {k} starts at node {}, expected {expect} (neighbouring slabs share their boundary node)",
+                blocks[k].start
+            );
+        }
+        let last = blocks.last().expect("nblocks >= 1");
+        ensure!(
+            last.start + last.len == shape[axis],
+            "blocks cover nodes 0..{} but the axis has {}",
+            last.start + last.len,
+            shape[axis]
+        );
+
+        // byte layout: payloads contiguous right after the index, sizes
+        // summing without overflow — a corrupt offset (past EOF, a gap,
+        // an overlap) dies here, not in a seek
+        let mut expect_offset = header_len as u64;
+        for (k, b) in blocks.iter().enumerate() {
+            ensure!(
+                b.offset == expect_offset,
+                "block {k} payload offset {} disagrees with the contiguous layout (expected {expect_offset})",
+                b.offset
+            );
+            expect_offset = expect_offset
+                .checked_add(b.bytes)
+                .ok_or_else(|| anyhow!("shard block sizes overflow"))?;
+        }
+
+        Ok((
+            ShardHeader {
+                dtype_bytes,
+                axis,
+                shape,
+                blocks,
+            },
+            header_len,
+        ))
+    }
+
+    /// Parse and fully validate a shard buffer: [`ShardHeader::parse_prefix`]
+    /// plus exact payload accounting against the buffer length.
+    pub fn parse(buf: &[u8]) -> Result<(ShardHeader, usize)> {
+        let (header, header_len) = Self::parse_prefix(buf)?;
+        let total = header.payload_bytes();
+        let remaining = (buf.len() - header_len) as u64;
+        ensure!(
+            total == remaining,
+            "block table declares {total} payload bytes, buffer holds {remaining}"
+        );
+        Ok((header, header_len))
+    }
+}
+
+/// Writes sharded containers: partition the domain into node-sharing
+/// slabs ([`partition_slabs`]), refactor every slab **in parallel** on
+/// the coordinator worker pool ([`run_pooled`] — one independent
+/// hierarchy and [`ProgressiveWriter`] per block, intra-kernel forking
+/// auto-suppressed while the pool runs), then lay the per-block MGRC
+/// containers out behind one MGRS index.
+pub struct ShardWriter<T> {
+    codec: Codec,
+    workers: usize,
+    nlevels: Option<usize>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Scalar> ShardWriter<T> {
+    /// Writer entropy-coding block segments with `codec`, refactoring up
+    /// to `workers` blocks concurrently. Blocks decompose to the deepest
+    /// level their shape supports unless [`ShardWriter::with_nlevels`]
+    /// caps it.
+    pub fn new(codec: Codec, workers: usize) -> Self {
+        ShardWriter {
+            codec,
+            workers: workers.max(1),
+            nlevels: None,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Cap every block's decompose level count at `nlevels` (each block
+    /// still clamps to the maximum its own slab shape supports — a
+    /// producer's global level cap carries to the blocks it can apply
+    /// to). This is how [`crate::api::Session::refactor_sharded`] honors
+    /// the session's `nlevels` knob.
+    pub fn with_nlevels(mut self, nlevels: usize) -> Self {
+        self.nlevels = Some(nlevels);
+        self
+    }
+
+    /// Partition `data` along `axis` into `blocks` slabs, refactor each
+    /// under absolute error bound `eb`, and serialize the shard. Returns
+    /// the bytes and the index header. Every block satisfies `eb`
+    /// independently, so the assembled full-fidelity retrieval does too.
+    pub fn write(
+        &self,
+        data: &Tensor<T>,
+        axis: usize,
+        blocks: usize,
+        eb: f64,
+    ) -> Result<(Vec<u8>, ShardHeader)> {
+        let slabs = partition_slabs(data.shape(), axis, blocks)?;
+        let mut bshape = data.shape().to_vec();
+        bshape[axis] = slabs[0].len;
+        let block_max = max_levels(&bshape).ok_or_else(|| {
+            anyhow!("shard block shape {bshape:?} is not refactorable (every dimension must be 2^k + 1)")
+        })?;
+        // every slab has the same shape, so one clamped level count
+        // serves them all (None = the block's own maximum)
+        let levels = self.nlevels.map(|n| n.clamp(1, block_max));
+
+        let codec = self.codec;
+        let results = run_pooled(self.workers, slabs.clone(), |slab: Slab| -> Result<Vec<u8>> {
+            let block = extract_slab(data, &slab);
+            let hierarchy = Hierarchy::uniform_with_levels(block.shape(), levels);
+            let mut w = ProgressiveWriter::<T>::new(hierarchy, codec);
+            let (bytes, _) = w.write(&block, eb)?;
+            Ok(bytes)
+        });
+        let mut payloads = Vec::with_capacity(results.len());
+        for (k, r) in results.into_iter().enumerate() {
+            payloads.push(r.with_context(|| format!("refactoring shard block {k}"))?);
+        }
+
+        let header_len = SHARD_FIXED_LEN + 8 * data.shape().len() + 32 * slabs.len();
+        let mut offset = header_len as u64;
+        let metas = slabs
+            .iter()
+            .zip(&payloads)
+            .map(|(s, p)| {
+                let m = BlockMeta {
+                    start: s.start,
+                    len: s.len,
+                    offset,
+                    bytes: p.len() as u64,
+                };
+                offset += p.len() as u64;
+                m
+            })
+            .collect();
+        let header = ShardHeader {
+            dtype_bytes: T::BYTES as u8,
+            axis,
+            shape: data.shape().to_vec(),
+            blocks: metas,
+        };
+        let mut out = header.to_bytes();
+        for p in &payloads {
+            out.extend_from_slice(p);
+        }
+        Ok((out, header))
+    }
+
+    /// [`ShardWriter::write`] straight to a file.
+    pub fn write_file(
+        &self,
+        data: &Tensor<T>,
+        axis: usize,
+        blocks: usize,
+        eb: f64,
+        path: impl AsRef<Path>,
+    ) -> Result<ShardHeader> {
+        let (bytes, header) = self.write(data, axis, blocks, eb)?;
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("writing shard {}", path.as_ref().display()))?;
+        Ok(header)
+    }
+}
+
+/// A seekable source shared by every block section of one shard, with a
+/// running byte counter: each [`Section`] seeks-and-reads under one
+/// lock, so the per-shard `bytes_read` total stays exact no matter how
+/// many blocks are open or in what order they fetch.
+struct SourceState<R> {
+    src: R,
+    bytes_read: u64,
+}
+
+/// Cloneable handle on the shared source state (an `Arc<Mutex<…>>`):
+/// every clone reads through the same underlying stream and charges the
+/// same byte counter.
+pub struct SharedSource<R> {
+    inner: Arc<Mutex<SourceState<R>>>,
+}
+
+impl<R> Clone for SharedSource<R> {
+    fn clone(&self) -> Self {
+        SharedSource {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<R: Read + Seek> SharedSource<R> {
+    fn new(src: R) -> Self {
+        SharedSource {
+            inner: Arc::new(Mutex::new(SourceState { src, bytes_read: 0 })),
+        }
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.inner.lock().unwrap().bytes_read
+    }
+
+    fn read_at(&self, pos: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut s = self.inner.lock().unwrap();
+        s.src.seek(SeekFrom::Start(pos))?;
+        let n = s.src.read(buf)?;
+        s.bytes_read += n as u64;
+        Ok(n)
+    }
+
+    fn read_exact_at(&self, pos: u64, buf: &mut [u8]) -> std::io::Result<()> {
+        let mut s = self.inner.lock().unwrap();
+        s.src.seek(SeekFrom::Start(pos))?;
+        s.src.read_exact(buf)?;
+        s.bytes_read += buf.len() as u64;
+        Ok(())
+    }
+
+    fn end(&self) -> std::io::Result<u64> {
+        self.inner.lock().unwrap().src.seek(SeekFrom::End(0))
+    }
+}
+
+/// A `Read + Seek` view of one block's byte range inside a shared shard
+/// source: what [`ContainerReader`]/[`LazyReader`] open to read a block
+/// as if it were a standalone `.mgr` file. Reads never cross the
+/// section's bounds, and every byte fetched is charged to the shard's
+/// common [`ShardReader::bytes_read`] counter.
+pub struct Section<R> {
+    src: SharedSource<R>,
+    start: u64,
+    len: u64,
+    pos: u64,
+}
+
+fn seek_offset(base: u64, off: i64) -> Option<u64> {
+    if off >= 0 {
+        base.checked_add(off as u64)
+    } else {
+        base.checked_sub(off.unsigned_abs())
+    }
+}
+
+impl<R: Read + Seek> Read for Section<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let remaining = self.len.saturating_sub(self.pos);
+        if remaining == 0 || buf.is_empty() {
+            return Ok(0);
+        }
+        let n = (buf.len() as u64).min(remaining) as usize;
+        let got = self.src.read_at(self.start + self.pos, &mut buf[..n])?;
+        self.pos += got as u64;
+        Ok(got)
+    }
+}
+
+impl<R: Read + Seek> Seek for Section<R> {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        let new = match pos {
+            SeekFrom::Start(p) => Some(p),
+            SeekFrom::End(o) => seek_offset(self.len, o),
+            SeekFrom::Current(o) => seek_offset(self.pos, o),
+        };
+        match new {
+            Some(p) => {
+                self.pos = p;
+                Ok(p)
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "seek outside a shard block section",
+            )),
+        }
+    }
+}
+
+/// Seek-only view of a sharded container behind any `Read + Seek`
+/// source: the MGRS index is parsed and validated **once** at open
+/// (index bytes plus one seek-to-end for payload accounting — no block
+/// payload is touched), and each block is then openable as an
+/// independent lazy MGRC reader over its byte [`Section`].
+///
+/// ```
+/// use std::io::Cursor;
+/// use mgr::compress::Codec;
+/// use mgr::grid::Tensor;
+/// use mgr::storage::{ShardReader, ShardWriter};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let field = Tensor::<f64>::from_fn(&[17, 9], |idx| (idx[0] as f64 * 0.3).sin());
+/// let writer = ShardWriter::<f64>::new(Codec::Zlib, 2);
+/// let (bytes, header) = writer.write(&field, 0, 2, 1e-3)?;
+///
+/// let reader = ShardReader::open(Cursor::new(bytes))?;
+/// // opening fetched the index only
+/// assert_eq!(reader.bytes_read(), reader.header_len() as u64);
+/// assert_eq!(reader.nblocks(), 2);
+/// // a block opens as a standalone lazy MGRC reader over its section
+/// let block0 = reader.open_block(0)?;
+/// assert_eq!(block0.header().shape, header.block_shape(0));
+/// # Ok(())
+/// # }
+/// ```
+pub struct ShardReader<R> {
+    src: SharedSource<R>,
+    header: ShardHeader,
+    header_len: usize,
+}
+
+impl<R: Read + Seek> ShardReader<R> {
+    /// Parse and validate the shard index at the start of `src` (the
+    /// shard must span the whole stream). Reads exactly the index bytes
+    /// plus one seek-to-end — no block payload is touched.
+    pub fn open(src: R) -> Result<Self> {
+        let src = SharedSource::new(src);
+        let mut buf = vec![0u8; SHARD_FIXED_LEN];
+        src.read_exact_at(0, &mut buf)
+            .context("reading shard index prelude")?;
+        let var = shard_var_len(&buf)?;
+        buf.resize(SHARD_FIXED_LEN + var, 0);
+        src.read_exact_at(SHARD_FIXED_LEN as u64, &mut buf[SHARD_FIXED_LEN..])
+            .context("reading shard index")?;
+        let (header, header_len) = ShardHeader::parse_prefix(&buf)?;
+
+        // payload accounting against the stream's total size — the one
+        // validation the index alone cannot do
+        let end = src.end().context("sizing shard stream")?;
+        let declared = header.payload_bytes();
+        let expected_end = header_len as u64 + declared; // parse_prefix proved no overflow
+        ensure!(
+            end == expected_end,
+            "block table declares {declared} payload bytes, stream holds {} past the index",
+            end.saturating_sub(header_len as u64)
+        );
+        Ok(ShardReader {
+            src,
+            header,
+            header_len,
+        })
+    }
+
+    /// The parsed and validated shard index.
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    /// Serialized index size in bytes (= the stream offset of block 0).
+    pub fn header_len(&self) -> usize {
+        self.header_len
+    }
+
+    /// Number of blocks.
+    pub fn nblocks(&self) -> usize {
+        self.header.nblocks()
+    }
+
+    /// Total shard size in bytes (index plus every block container).
+    pub fn total_bytes(&self) -> u64 {
+        self.header_len as u64 + self.header.payload_bytes()
+    }
+
+    /// Cumulative bytes fetched from the source so far — the index plus
+    /// whatever block sections have actually been read. After a
+    /// region-of-interest retrieval this sits far below
+    /// [`ShardReader::total_bytes`]: the observable I/O saving.
+    pub fn bytes_read(&self) -> u64 {
+        self.src.bytes_read()
+    }
+
+    /// A `Read + Seek` view of block `k`'s byte range. Creating a
+    /// section reads nothing; consumers charge their reads to the
+    /// shard's common [`ShardReader::bytes_read`] counter.
+    pub fn block_section(&self, k: usize) -> Result<Section<R>> {
+        ensure!(k < self.nblocks(), "block {k} outside 0..{}", self.nblocks());
+        let b = &self.header.blocks[k];
+        Ok(Section {
+            src: self.src.clone(),
+            start: b.offset,
+            len: b.bytes,
+            pos: 0,
+        })
+    }
+
+    /// Open block `k` as a standalone (untyped) MGRC container reader:
+    /// fetches and validates the block's header only, and checks the
+    /// block's shape and dtype against the index — a block whose
+    /// container disagrees with the index (or is corrupt) errors here
+    /// without poisoning any other block.
+    pub fn open_block(&self, k: usize) -> Result<ContainerReader<Section<R>>> {
+        let raw = ContainerReader::open(self.block_section(k)?)
+            .with_context(|| format!("opening shard block {k}"))?;
+        let expect = self.header.block_shape(k);
+        ensure!(
+            raw.header().shape == expect,
+            "shard block {k} declares shape {:?}, index expects {expect:?}",
+            raw.header().shape
+        );
+        ensure!(
+            raw.header().dtype_bytes == self.header.dtype_bytes,
+            "shard block {k} holds {}-byte scalars, index declares {}-byte",
+            raw.header().dtype_bytes,
+            self.header.dtype_bytes
+        );
+        Ok(raw)
+    }
+
+    /// [`ShardReader::open_block`] plus the typed lazy decode layer:
+    /// per-class fetch + decode with a decoded-class cache, exactly like
+    /// a standalone [`LazyReader`] on a `.mgr` file.
+    pub fn lazy_block<T: Scalar>(&self, k: usize) -> Result<LazyReader<T, Section<R>>> {
+        LazyReader::new(self.open_block(k)?)
+    }
+}
+
+impl ShardReader<BufReader<File>> {
+    /// Open a shard file lazily: index bytes and file size only; block
+    /// payloads stay on disk until a block is opened and read.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        let file = File::open(path.as_ref())
+            .with_context(|| format!("opening shard {}", path.as_ref().display()))?;
+        Self::open(BufReader::new(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Cursor as IoCursor;
+
+    use super::*;
+    use crate::storage::container::ProgressiveReader;
+    use crate::util::stats::linf;
+
+    fn field2d() -> Tensor<f64> {
+        Tensor::from_fn(&[17, 9], |idx| {
+            let x = idx[0] as f64 / 16.0;
+            let y = idx[1] as f64 / 8.0;
+            (3.0 * x).sin() * (2.0 * y).cos() + 0.5 * x * y
+        })
+    }
+
+    fn shard2d(codec: Codec, blocks: usize) -> (Tensor<f64>, Vec<u8>, ShardHeader) {
+        let t = field2d();
+        let w = ShardWriter::<f64>::new(codec, 2);
+        let (bytes, header) = w.write(&t, 0, blocks, 1e-3).unwrap();
+        (t, bytes, header)
+    }
+
+    #[test]
+    fn write_parse_roundtrip() {
+        let (_, bytes, header) = shard2d(Codec::Zlib, 2);
+        let (parsed, header_len) = ShardHeader::parse(&bytes).unwrap();
+        assert_eq!(header_len, header.header_bytes());
+        assert_eq!(parsed.shape, vec![17, 9]);
+        assert_eq!(parsed.axis, 0);
+        assert_eq!(parsed.dtype_bytes, 8);
+        assert_eq!(parsed.blocks, header.blocks);
+        assert_eq!(parsed.blocks[0].start, 0);
+        assert_eq!(parsed.blocks[0].len, 9);
+        assert_eq!(parsed.blocks[1].start, 8, "slabs share node 8");
+        assert_eq!(
+            header.header_bytes() as u64 + header.payload_bytes(),
+            bytes.len() as u64
+        );
+    }
+
+    #[test]
+    fn open_reads_index_only_and_blocks_decode() {
+        let (t, bytes, header) = shard2d(Codec::HuffRle, 2);
+        let r = ShardReader::open(IoCursor::new(bytes.clone())).unwrap();
+        assert_eq!(r.header_len(), header.header_bytes());
+        assert_eq!(r.bytes_read(), r.header_len() as u64);
+        assert_eq!(r.total_bytes(), bytes.len() as u64);
+
+        // each block's section carries exactly its MGRC container, and
+        // the lazy typed reader decodes it within the error bound
+        for k in 0..r.nblocks() {
+            let mut lazy = r.lazy_block::<f64>(k).unwrap();
+            let n = lazy.nclasses();
+            let got = lazy.retrieve(n).unwrap();
+            let slab = header.slab(k);
+            let want = extract_slab(&t, &slab);
+            assert!(linf(got.data(), want.data()) <= 1e-3, "block {k}");
+        }
+        assert_eq!(r.bytes_read(), r.total_bytes());
+        assert!(r.block_section(2).is_err());
+        assert!(r.open_block(9).is_err());
+    }
+
+    #[test]
+    fn block_bytes_match_a_standalone_container() {
+        let (_, bytes, header) = shard2d(Codec::Zlib, 4);
+        // each block's byte range is a complete, standalone MGRC
+        // container — the buffered reader accepts it as-is
+        for b in &header.blocks {
+            let seg = &bytes[b.offset as usize..(b.offset + b.bytes) as usize];
+            let mut pr = ProgressiveReader::<f64>::open(seg).unwrap();
+            let n = pr.nclasses();
+            pr.retrieve(n).unwrap();
+        }
+    }
+
+    #[test]
+    fn truncated_or_padded_streams_rejected_at_open() {
+        let (_, bytes, _) = shard2d(Codec::Zlib, 2);
+        for len in [0, 4, SHARD_FIXED_LEN - 1, SHARD_FIXED_LEN, 40, bytes.len() - 1] {
+            assert!(
+                ShardReader::open(IoCursor::new(bytes[..len].to_vec())).is_err(),
+                "truncation to {len} bytes must fail at open"
+            );
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(ShardReader::open(IoCursor::new(padded)).is_err());
+    }
+
+    #[test]
+    fn corrupt_offset_tables_are_typed_errors() {
+        let (_, bytes, header) = shard2d(Codec::Zlib, 2);
+        let table = SHARD_FIXED_LEN + 8 * header.shape.len();
+
+        // block 1's offset pointing past EOF breaks contiguity
+        let mut m = bytes.clone();
+        let off_pos = table + 32 + 16;
+        m[off_pos..off_pos + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(ShardHeader::parse(&m).is_err());
+        assert!(ShardReader::open(IoCursor::new(m)).is_err());
+
+        // block 0's byte length inflated past EOF fails accounting
+        let mut m = bytes.clone();
+        let len_pos = table + 24;
+        m[len_pos..len_pos + 8].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        assert!(ShardReader::open(IoCursor::new(m)).is_err());
+
+        // a slab-tiling gap (block 1 start bumped) is rejected
+        let mut m = bytes.clone();
+        let start_pos = table + 32;
+        m[start_pos..start_pos + 8].copy_from_slice(&9u64.to_le_bytes());
+        assert!(ShardHeader::parse(&m).is_err());
+    }
+
+    #[test]
+    fn corrupt_block_does_not_poison_the_others() {
+        let (_, bytes, header) = shard2d(Codec::Zlib, 2);
+        // clobber block 0's MGRC magic: the index still parses, block 0
+        // fails at its own open, block 1 retrieves bit-identically
+        let mut m = bytes.clone();
+        m[header.blocks[0].offset as usize] ^= 0xff;
+        let r = ShardReader::open(IoCursor::new(m)).unwrap();
+        assert!(r.open_block(0).is_err());
+        let mut lazy = r.lazy_block::<f64>(1).unwrap();
+        let n = lazy.nclasses();
+        let got = lazy.retrieve(n).unwrap();
+
+        let clean = ShardReader::open(IoCursor::new(bytes)).unwrap();
+        let mut lazy = clean.lazy_block::<f64>(1).unwrap();
+        let want = lazy.retrieve(n).unwrap();
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn writer_rejects_bad_partitions() {
+        let t = field2d();
+        let w = ShardWriter::<f64>::new(Codec::Zlib, 2);
+        assert!(w.write(&t, 2, 2, 1e-3).is_err(), "axis out of range");
+        assert!(w.write(&t, 0, 5, 1e-3).is_err(), "parts must divide n-1");
+        assert!(w.write(&t, 0, 16, 1e-3).is_err(), "slabs too thin");
+        assert!(w.write(&t, 0, 0, 1e-3).is_err(), "zero parts");
+    }
+
+    #[test]
+    fn blocks_intersecting_shares_boundary_nodes() {
+        let (_, _, header) = shard2d(Codec::Zlib, 2);
+        // slabs: [0..9) and [8..17), sharing node 8
+        assert_eq!(header.blocks_intersecting(&(0..3)), vec![0]);
+        assert_eq!(header.blocks_intersecting(&(10..17)), vec![1]);
+        assert_eq!(header.blocks_intersecting(&(8..9)), vec![0, 1]);
+        assert_eq!(header.blocks_intersecting(&(0..17)), vec![0, 1]);
+        assert!(header.blocks_intersecting(&(17..17)).is_empty());
+    }
+
+    #[test]
+    fn foreign_and_garbage_buffers_rejected() {
+        // an MGRC container is not a shard, and vice versa
+        let t = field2d();
+        let mut w = ProgressiveWriter::<f64>::new(Hierarchy::uniform(t.shape()), Codec::Zlib);
+        let (mgrc, _) = w.write(&t, 1e-3).unwrap();
+        assert!(ShardReader::open(IoCursor::new(mgrc)).is_err());
+
+        let (_, mgrs, _) = shard2d(Codec::Zlib, 2);
+        assert!(ProgressiveReader::<f64>::open(&mgrs).is_err());
+        assert!(!is_shard(&[0x4d, 0x47]));
+        assert!(is_shard(&mgrs));
+
+        assert!(shard_var_len(&mgrs[..SHARD_FIXED_LEN]).is_ok());
+        assert!(shard_var_len(&mgrs[..4]).is_err());
+        assert!(shard_var_len(b"PK\x03\x04 not a shard index....").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_is_lazy() {
+        let t = field2d();
+        let w = ShardWriter::<f64>::new(Codec::Zlib, 2);
+        let path = std::env::temp_dir().join("mgr_shard_unit_test.mgrs");
+        let header = w.write_file(&t, 0, 2, 1e-3, &path).unwrap();
+        let r = ShardReader::open_file(&path).unwrap();
+        assert_eq!(r.bytes_read(), r.header_len() as u64, "index bytes only");
+        assert_eq!(r.header().blocks, header.blocks);
+        let before = r.bytes_read();
+        let mut lazy = r.lazy_block::<f64>(0).unwrap();
+        lazy.retrieve(1).unwrap();
+        // block 0's header + first segment came off disk; block 1 untouched
+        assert!(r.bytes_read() > before);
+        assert!(r.bytes_read() < r.total_bytes());
+        std::fs::remove_file(&path).ok();
+    }
+}

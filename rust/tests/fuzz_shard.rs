@@ -1,0 +1,155 @@
+//! Deterministic corrupt/truncated-input fuzzing of the MGRS shard
+//! index parser, in the style of `tests/fuzz_decoders.rs`. The contract
+//! under test: a malformed shard yields a typed `Err` — it must
+//! **never** panic, abort on a huge allocation, or read out of bounds —
+//! and a corrupt *block* must not poison retrieval of any other block.
+
+use std::io::Cursor;
+
+use mgr::compress::Codec;
+use mgr::grid::Tensor;
+use mgr::storage::shard::{shard_var_len, SHARD_FIXED_LEN};
+use mgr::storage::{ShardHeader, ShardReader, ShardWriter};
+use mgr::util::rng::Rng;
+
+fn sample_shard(codec: Codec, blocks: usize) -> (Vec<u8>, ShardHeader) {
+    let field = Tensor::<f64>::from_fn(&[17, 9], |idx| {
+        ((idx[0] as f64) * 0.37).sin() + ((idx[1] as f64) * 0.21).cos()
+    });
+    let w = ShardWriter::<f64>::new(codec, 2);
+    w.write(&field, 0, blocks, 1e-3).unwrap()
+}
+
+/// Open + exhaustively exercise a (possibly corrupt) shard buffer: the
+/// index parse, every block open, and every retrieval prefix. Nothing
+/// here may panic; errors are fine.
+fn exercise(buf: &[u8]) {
+    let _ = ShardHeader::parse(buf);
+    let _ = shard_var_len(buf);
+    if let Ok(r) = ShardReader::open(Cursor::new(buf.to_vec())) {
+        for k in 0..r.nblocks() {
+            if let Ok(mut lazy) = r.lazy_block::<f64>(k) {
+                for keep in 1..=lazy.nclasses() {
+                    let _ = lazy.retrieve(keep);
+                }
+            }
+            // the wrong-dtype path must also stay total
+            let _ = r.lazy_block::<f32>(k).is_err();
+        }
+    }
+}
+
+#[test]
+fn truncation_sweep_over_every_prefix_length() {
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        let (bytes, _) = sample_shard(codec, 2);
+        // a shard truncated anywhere — mid-prelude, mid-table, mid-block
+        // — is rejected at open (the index pins the exact payload size)
+        for len in 0..bytes.len() {
+            assert!(
+                ShardReader::open(Cursor::new(bytes[..len].to_vec())).is_err(),
+                "{codec:?} truncated to {len} bytes must be rejected"
+            );
+            assert!(ShardHeader::parse(&bytes[..len]).is_err(), "{codec:?} len {len}");
+        }
+        exercise(&bytes); // the intact shard must fully retrieve
+    }
+}
+
+#[test]
+fn bit_flips_across_the_index_never_panic() {
+    let (bytes, header) = sample_shard(Codec::Zlib, 2);
+    // every bit of the index region, plus a tail of payload bytes
+    let probe = header.header_bytes() + 64.min(bytes.len() - header.header_bytes());
+    for i in 0..probe {
+        for bit in 0..8 {
+            let mut m = bytes.clone();
+            m[i] ^= 1 << bit;
+            exercise(&m);
+        }
+    }
+}
+
+#[test]
+fn random_mutations_never_panic() {
+    let (bytes, _) = sample_shard(Codec::HuffRle, 4);
+    let mut rng = Rng::new(42);
+    for _ in 0..500 {
+        let mut m = bytes.clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(m.len());
+                m[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                let i = rng.below(m.len());
+                m[i] = rng.below(256) as u8;
+            }
+            _ => {
+                let i = rng.below(m.len());
+                let l = 1 + rng.below(16).min(m.len() - i - 1);
+                m.drain(i..i + l);
+            }
+        }
+        exercise(&m);
+    }
+}
+
+#[test]
+fn foreign_magic_and_garbage_rejected() {
+    let mut rng = Rng::new(7);
+    for len in [0usize, 1, 4, SHARD_FIXED_LEN, 64, 200, 1000] {
+        let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        assert!(ShardReader::open(Cursor::new(garbage.clone())).is_err());
+        assert!(ShardHeader::parse(&garbage).is_err());
+    }
+    // right magic, garbage tail
+    let mut buf = b"MGRS".to_vec();
+    buf.extend((0..200).map(|_| rng.below(256) as u8));
+    assert!(ShardReader::open(Cursor::new(buf)).is_err());
+    // a zip is not a shard
+    assert!(ShardHeader::parse(b"PK\x03\x04 the rest of a zip file").is_err());
+}
+
+#[test]
+fn offset_tables_pointing_past_eof_are_rejected() {
+    let (bytes, header) = sample_shard(Codec::Zlib, 2);
+    let table = SHARD_FIXED_LEN + 8 * header.shape.len();
+    // per-block entry layout: start(0..8) len(8..16) offset(16..24) bytes(24..32)
+    for k in 0..header.nblocks() {
+        for field in [16usize, 24] {
+            for huge in [u64::MAX, bytes.len() as u64 + 1, 1 << 40] {
+                let mut m = bytes.clone();
+                let pos = table + 32 * k + field;
+                m[pos..pos + 8].copy_from_slice(&huge.to_le_bytes());
+                assert!(
+                    ShardHeader::parse(&m).is_err() || ShardReader::open(Cursor::new(m.clone())).is_err(),
+                    "block {k} field +{field} = {huge} must not open"
+                );
+                exercise(&m);
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_block_is_isolated_from_the_others() {
+    let (bytes, header) = sample_shard(Codec::Zlib, 4);
+    let clean = ShardReader::open(Cursor::new(bytes.clone())).unwrap();
+    for victim in 0..header.nblocks() {
+        // clobber the victim's MGRC magic: the index still parses, the
+        // victim fails at its own open, everyone else is bit-identical
+        let mut m = bytes.clone();
+        m[header.blocks[victim].offset as usize] ^= 0xff;
+        let r = ShardReader::open(Cursor::new(m)).unwrap();
+        assert!(r.open_block(victim).is_err(), "victim {victim} must fail");
+        for k in (0..header.nblocks()).filter(|&k| k != victim) {
+            let mut lazy = r.lazy_block::<f64>(k).unwrap();
+            let n = lazy.nclasses();
+            let got = lazy.retrieve(n).unwrap();
+            let mut lazy = clean.lazy_block::<f64>(k).unwrap();
+            let want = lazy.retrieve(n).unwrap();
+            assert_eq!(got.data(), want.data(), "victim {victim}, block {k}");
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Property-style matrix over the §3.6 slab partitioning: for every
+//! axis × 1D/2D/3D shape × f32/f64 × valid part count (including the
+//! 2-part and max-part boundaries), extraction followed by reassembly
+//! reproduces the original tensor **bitwise**, and every slab is itself
+//! refactorable (`max_levels` is `Some` — the property that makes
+//! embarrassing-parallel refactoring possible at all).
+
+use mgr::coordinator::{assemble_slabs, extract_slab, partition_slabs, Slab};
+use mgr::grid::{max_levels, Tensor};
+use mgr::util::rng::Rng;
+use mgr::util::Scalar;
+
+/// Every part count the axis supports: divisors of `n - 1` whose
+/// quotient is `2^j`, `j >= 1`.
+fn valid_parts(n: usize) -> Vec<usize> {
+    (1..n)
+        .filter(|&p| {
+            let interior = n - 1;
+            interior % p == 0 && {
+                let seg = interior / p;
+                seg >= 2 && seg.is_power_of_two()
+            }
+        })
+        .collect()
+}
+
+fn roundtrip_case<T: Scalar>(shape: &[usize], axis: usize, parts: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let t = Tensor::<T>::from_fn(shape, |_| T::from_f64(rng.normal()));
+    let slabs = partition_slabs(shape, axis, parts)
+        .unwrap_or_else(|e| panic!("{shape:?} axis {axis} parts {parts}: {e}"));
+    assert_eq!(slabs.len(), parts, "{shape:?} axis {axis}");
+
+    // coverage: slabs tile the axis sharing boundary nodes
+    assert_eq!(slabs[0].start, 0);
+    for w in slabs.windows(2) {
+        assert_eq!(w[1].start, w[0].start + w[0].len - 1, "shared boundary node");
+    }
+    let last = slabs.last().unwrap();
+    assert_eq!(last.start + last.len, shape[axis]);
+
+    let mut parts_data: Vec<(Slab, Tensor<T>)> = Vec::new();
+    for s in &slabs {
+        let block = extract_slab(&t, s);
+        // per-slab refactorability: every dimension of every slab is 2^k+1
+        assert!(
+            max_levels(block.shape()).is_some(),
+            "slab {s:?} of {shape:?} has unrefactorable shape {:?}",
+            block.shape()
+        );
+        assert_eq!(block.shape()[axis], s.len);
+        parts_data.push((s.clone(), block));
+    }
+
+    // bitwise roundtrip (exact equality, not an epsilon)
+    let back = assemble_slabs(shape, &parts_data);
+    assert_eq!(back, t, "{shape:?} axis {axis} parts {parts}");
+}
+
+#[test]
+fn matrix_roundtrips_bitwise_for_every_axis_shape_dtype_and_parts() {
+    let shapes: &[&[usize]] = &[
+        &[17],
+        &[33],
+        &[17, 9],
+        &[9, 33],
+        &[9, 9, 17],
+        &[17, 5, 9],
+    ];
+    let mut seed = 1;
+    for shape in shapes {
+        for axis in 0..shape.len() {
+            let parts = valid_parts(shape[axis]);
+            assert!(!parts.is_empty(), "{shape:?} axis {axis} supports no partition");
+            // the interesting boundaries plus everything in between
+            assert!(parts.contains(&2) || shape[axis] == 5, "{shape:?} axis {axis}");
+            for &p in &parts {
+                seed += 1;
+                roundtrip_case::<f64>(shape, axis, p, seed);
+                roundtrip_case::<f32>(shape, axis, p, seed + 1000);
+            }
+        }
+    }
+}
+
+#[test]
+fn two_part_and_max_part_boundaries() {
+    // n = 33: 2 parts of interior 16, and the maximum 16 parts of
+    // interior 2 — the thinnest legal slab (3 nodes)
+    let shape = [33usize, 9];
+    for parts in [2usize, 16] {
+        let slabs = partition_slabs(&shape, 0, parts).unwrap();
+        assert_eq!(slabs.len(), parts);
+        let seg = 32 / parts;
+        for s in &slabs {
+            assert_eq!(s.len, seg + 1);
+            assert!(max_levels(&[s.len]).is_some());
+        }
+    }
+    // one past the maximum is rejected (interior would be 1 node)
+    assert!(partition_slabs(&shape, 0, 32).is_err());
+}
+
+#[test]
+fn single_part_is_the_identity_partition() {
+    let shape = [17usize, 9];
+    let mut rng = Rng::new(7);
+    let t = Tensor::<f64>::from_fn(&shape, |_| rng.normal());
+    let slabs = partition_slabs(&shape, 0, 1).unwrap();
+    assert_eq!(slabs.len(), 1);
+    assert_eq!(slabs[0].len, 17);
+    let block = extract_slab(&t, &slabs[0]);
+    assert_eq!(block, t, "one slab is the whole domain, bitwise");
+}

@@ -1,0 +1,202 @@
+//! Sharded-vs-unsharded equivalence and the region-of-interest I/O
+//! acceptance property.
+//!
+//! Per-block refactoring uses a *different* hierarchy than a
+//! whole-domain refactor (each slab decomposes independently), so the
+//! meaningful bit-identity contract is against the **per-slab unsharded
+//! baseline**: for every dtype × codec, `Sharded::retrieve` must equal
+//! — bitwise — refactoring and retrieving every slab with a plain
+//! `Session` and reassembling with `assemble_slabs`. (For a one-block
+//! shard the slab *is* the domain, and the shard is bitwise identical
+//! to the plain `Session::refactor` + `retrieve` path — asserted in
+//! `rust/src/api/sharded.rs` unit tests.)
+//!
+//! The I/O side: on a GrayScott-sized 33³ volume split into 4 blocks,
+//! `retrieve_region` must read **only the intersecting blocks' bytes**,
+//! asserted exactly via the `bytes_read` counters.
+
+use mgr::api::{AnyTensor, Dtype, Fidelity, Session, Sharded};
+use mgr::compress::Codec;
+use mgr::coordinator::{assemble_slabs, extract_slab, partition_slabs, Slab};
+use mgr::grid::Tensor;
+use mgr::sim::GrayScott;
+use mgr::util::stats::value_range;
+
+fn smooth(shape: &[usize]) -> AnyTensor {
+    Tensor::<f64>::from_fn(shape, |idx| {
+        idx.iter()
+            .enumerate()
+            .map(|(d, &i)| ((d + 2) as f64 * i as f64 * 0.17).sin())
+            .sum()
+    })
+    .into()
+}
+
+/// The unsharded baseline: refactor + retrieve every slab with a plain
+/// per-block [`Session`], reassemble with [`assemble_slabs`].
+fn per_slab_baseline(
+    data: &AnyTensor,
+    axis: usize,
+    blocks: usize,
+    codec: Codec,
+    eb: f64,
+    fidelity: Fidelity,
+) -> AnyTensor {
+    let shape = data.shape().to_vec();
+    let slabs = partition_slabs(&shape, axis, blocks).unwrap();
+    let block_session = |bshape: &[usize], dtype: Dtype| {
+        Session::builder()
+            .shape(bshape)
+            .dtype(dtype)
+            .codec(codec)
+            .error_bound(eb)
+            .build()
+            .unwrap()
+    };
+    match data {
+        AnyTensor::F64(t) => {
+            let parts: Vec<(Slab, Tensor<f64>)> = slabs
+                .iter()
+                .map(|s| {
+                    let block = extract_slab(t, s);
+                    let sess = block_session(block.shape(), Dtype::F64);
+                    let r = sess.refactor(&block.clone().into()).unwrap();
+                    let back = r.retrieve(fidelity).unwrap();
+                    (s.clone(), back.as_f64().unwrap().clone())
+                })
+                .collect();
+            AnyTensor::F64(assemble_slabs(&shape, &parts))
+        }
+        AnyTensor::F32(t) => {
+            let parts: Vec<(Slab, Tensor<f32>)> = slabs
+                .iter()
+                .map(|s| {
+                    let block = extract_slab(t, s);
+                    let sess = block_session(block.shape(), Dtype::F32);
+                    let r = sess.refactor(&block.clone().into()).unwrap();
+                    let back = r.retrieve(fidelity).unwrap();
+                    (s.clone(), back.as_f32().unwrap().clone())
+                })
+                .collect();
+            AnyTensor::F32(assemble_slabs(&shape, &parts))
+        }
+    }
+}
+
+#[test]
+fn sharded_retrieve_is_bitwise_the_per_slab_baseline_for_every_dtype_and_codec() {
+    let shape = [17usize, 17];
+    let eb = 1e-3;
+    for dtype in [Dtype::F64, Dtype::F32] {
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let data = smooth(&shape).cast(dtype);
+            let session = Session::builder()
+                .shape(&shape)
+                .dtype(dtype)
+                .codec(codec)
+                .error_bound(eb)
+                .build()
+                .unwrap();
+            let sharded = session.refactor_sharded(&data, 4).unwrap();
+
+            for fidelity in [Fidelity::All, Fidelity::Classes(1), Fidelity::Classes(2)] {
+                let got = sharded.retrieve(fidelity).unwrap();
+                let want = per_slab_baseline(&data, 0, 4, codec, eb, fidelity);
+                assert_eq!(got, want, "{dtype:?} {codec:?} {fidelity:?}");
+            }
+            // full fidelity preserves the producer's error bound globally
+            let full = sharded.retrieve(Fidelity::All).unwrap();
+            assert!(
+                full.linf_to(&data).unwrap() <= eb,
+                "{dtype:?} {codec:?} violates eb"
+            );
+        }
+    }
+}
+
+#[test]
+fn grayscott_region_reads_only_the_intersecting_blocks_bytes() {
+    let n = 33;
+    let mut sim = GrayScott::new(n, 7);
+    sim.step(100);
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let shape = raw.shape().to_vec();
+    let field: AnyTensor = raw.into();
+
+    let session = Session::builder().shape(&shape).error_bound(eb).build().unwrap();
+    // 4 blocks along axis 0: slabs [0..9), [8..17), [16..25), [24..33)
+    let sharded = session.refactor_sharded(&field, 4).unwrap();
+    let path = std::env::temp_dir().join("mgr_shard_acceptance.mgrs");
+    sharded.store_file(&path).unwrap();
+
+    // lazy open fetches the index alone
+    let lazy = Sharded::open_file(&path).unwrap();
+    assert_eq!(lazy.bytes_read(), lazy.index_bytes());
+
+    // a region strictly inside block 2 opens block 2 and nothing else
+    let roi = [18..23, 4..29, 0..33];
+    assert_eq!(lazy.blocks_for_region(&roi).unwrap(), vec![2]);
+    let region = lazy.retrieve_region(&roi, Fidelity::All).unwrap();
+    assert_eq!(region.shape(), &[5, 25, 33]);
+    let after_region = lazy.bytes_read();
+    // exact accounting: the index plus block 2's whole container —
+    // no other block's bytes (not even their headers) left the disk
+    assert_eq!(
+        after_region,
+        lazy.index_bytes() + lazy.header().blocks[2].bytes,
+        "region read must touch exactly the intersecting block"
+    );
+    assert!(after_region < lazy.total_bytes());
+
+    // a full retrieve on a fresh open reads strictly more
+    let full_open = Sharded::open_file(&path).unwrap();
+    let full = full_open.retrieve(Fidelity::All).unwrap();
+    assert_eq!(full_open.bytes_read(), full_open.total_bytes());
+    assert!(after_region < full_open.bytes_read());
+
+    // the region equals the full retrieve, sliced — bitwise
+    let f = full.as_f64().unwrap();
+    let r = region.as_f64().unwrap();
+    for i in 0..5 {
+        for j in 0..25 {
+            for k in 0..n {
+                assert_eq!(
+                    r.get(&[i, j, k]),
+                    f.get(&[18 + i, 4 + j, k]),
+                    "({i},{j},{k})"
+                );
+            }
+        }
+    }
+    // and the full-fidelity reconstruction honors the bound
+    assert!(full.linf_to(&field).unwrap() <= eb);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn boundary_node_region_opens_both_neighbours_and_coarse_regions_read_less() {
+    let shape = [17usize, 9];
+    let session = Session::builder().shape(&shape).build().unwrap();
+    let sharded = session.refactor_sharded(&smooth(&shape), 2).unwrap();
+    let path = std::env::temp_dir().join("mgr_shard_boundary.mgrs");
+    sharded.store_file(&path).unwrap();
+
+    // node 8 is shared: a region covering only it must open both blocks
+    let lazy = Sharded::open_file(&path).unwrap();
+    assert_eq!(lazy.blocks_for_region(&[8..9, 0..9]).unwrap(), vec![0, 1]);
+    lazy.retrieve_region(&[8..9, 0..9], Fidelity::All).unwrap();
+    assert_eq!(lazy.bytes_read(), lazy.total_bytes());
+
+    // a coarse (1-class) region on one block reads less than that
+    // block's full container: per-class laziness composes with sharding
+    let coarse = Sharded::open_file(&path).unwrap();
+    coarse
+        .retrieve_region(&[0..5, 0..9], Fidelity::Classes(1))
+        .unwrap();
+    assert!(
+        coarse.bytes_read() < coarse.index_bytes() + coarse.header().blocks[0].bytes,
+        "1-class region must not read block 0 whole"
+    );
+    std::fs::remove_file(&path).ok();
+}
