@@ -7,14 +7,18 @@
 #   make bench-container  per-class container report -> BENCH_container.json
 #   make bench-reader     lazy vs buffered reader report -> BENCH_reader.json
 #   make bench-shard      sharded refactor + ROI report -> BENCH_shard.json
+#   make bench-serve      daemon under 1->64 concurrent clients -> BENCH_serve.json
+#   make test-concurrency concurrency battery + the #[ignore]d stress variants
 #   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
 #   make shard-demo       CLI shard round trip: refactor --blocks -> .mgrs -> --region
+#   make serve-demo       CLI daemon round trip: serve -> --stats -> --shutdown
 #   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
 #   make check-docs  dead-link check over the markdown docs book
 
 .PHONY: artifacts test test-rust test-python bench bench-container bench-reader \
-        bench-shard container-demo shard-demo lint doc check-docs
+        bench-shard bench-serve test-concurrency serve-demo container-demo \
+        shard-demo lint doc check-docs
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -40,6 +44,15 @@ bench-reader:
 bench-shard:
 	cargo bench --bench shard_throughput
 
+bench-serve:
+	cargo bench --bench serve_concurrency
+
+# The concurrency battery on its own (CI runs this as a dedicated matrix
+# entry, then the #[ignore]d long-loop stress variants in release mode).
+test-concurrency:
+	RUST_BACKTRACE=1 cargo test --test concurrent_readers --test fuzz_serve
+	cargo test --release -q --test concurrent_readers --test fuzz_serve -- --ignored
+
 # Exercise the progressive-container CLI round trip: write a .mgr
 # container, retrieve a class prefix by count, by error target, and by
 # byte budget, then show the tier placement plan.
@@ -59,6 +72,17 @@ shard-demo:
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgrs --keep 2
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgrs --region 10..15,0..33,0..33
 	rm -f /tmp/mgr-demo.mgrs
+
+# Exercise the serving front end to end: refactor a container, start the
+# daemon on it, query telemetry over the wire, then stop it over the wire.
+serve-demo:
+	cargo build --release
+	cargo run --release -- refactor --shape 33x33x33 --eb 1e-4 --out /tmp/mgr-serve-demo.mgr
+	./target/release/mgr serve --in /tmp/mgr-serve-demo.mgr --addr 127.0.0.1:4861 & \
+	sleep 1 && \
+	./target/release/mgr serve --addr 127.0.0.1:4861 --stats && \
+	./target/release/mgr serve --addr 127.0.0.1:4861 --shutdown
+	rm -f /tmp/mgr-serve-demo.mgr
 
 lint:
 	cargo clippy --all-targets -- -D warnings

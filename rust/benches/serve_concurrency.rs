@@ -1,0 +1,185 @@
+//! `mgr serve` concurrency bench: one daemon over the standard
+//! Gray-Scott 33³ fixture, hammered by 1→64 concurrent clients doing
+//! full-fidelity retrievals. Reports aggregate GB/s and client-observed
+//! p50/p99 latency per client count, and doubles as the acceptance
+//! check for the serving front: **every** response must be bit-identical
+//! to the serial baseline and **zero** requests may fail at any
+//! concurrency level. Writes `BENCH_serve.json` (see
+//! `docs/performance.md`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use mgr::api::{AnyTensor, Fidelity, Session};
+use mgr::serve::{Client, ServeConfig, ServeTarget, Server};
+use mgr::sim::GrayScott;
+use mgr::util::bench::{BenchReport, ReportRow};
+use mgr::util::stats::value_range;
+
+/// Requests each client issues at every concurrency level.
+const REQUESTS_PER_CLIENT: usize = 8;
+
+/// Nearest-rank percentile over an ascending-sorted latency slice.
+fn percentile(sorted: &[f64], p: u64) -> f64 {
+    let n = sorted.len() as u64;
+    let rank = (p * n + 99) / 100; // ceil(p * n / 100)
+    let idx = rank.saturating_sub(1) as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct Level {
+    clients: usize,
+    wall_s: f64,
+    p50_s: f64,
+    p99_s: f64,
+    total_bytes: u64,
+    source_bytes: u64,
+}
+
+/// Run one concurrency level: `clients` threads × REQUESTS_PER_CLIENT
+/// full retrievals, every response compared bit-for-bit against `want`.
+/// Panics on any failed or corrupt response — the level's numbers are
+/// only reported for an all-green run.
+fn run_level(server: &Server, want: &AnyTensor, clients: usize) -> Level {
+    let failed = AtomicU64::new(0);
+    let source_bytes = AtomicU64::new(0);
+    let started = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(clients * REQUESTS_PER_CLIENT);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let failed = &failed;
+                let source_bytes = &source_bytes;
+                scope.spawn(move || {
+                    let mut times = Vec::with_capacity(REQUESTS_PER_CLIENT);
+                    let mut client = match Client::connect(server.addr()) {
+                        Ok(c) => c,
+                        Err(_) => {
+                            failed.fetch_add(REQUESTS_PER_CLIENT as u64, Ordering::Relaxed);
+                            return times;
+                        }
+                    };
+                    for _ in 0..REQUESTS_PER_CLIENT {
+                        let t0 = Instant::now();
+                        match client.retrieve(Fidelity::All) {
+                            Ok(remote) if &remote.tensor == want => {
+                                times.push(t0.elapsed().as_secs_f64());
+                                source_bytes.fetch_add(remote.bytes_read_delta, Ordering::Relaxed);
+                            }
+                            _ => {
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    times
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().unwrap());
+        }
+    });
+    let wall_s = started.elapsed().as_secs_f64();
+    assert_eq!(
+        failed.load(Ordering::Relaxed),
+        0,
+        "{clients} clients: every request must succeed bit-identically"
+    );
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Level {
+        clients,
+        wall_s,
+        p50_s: percentile(&latencies, 50),
+        p99_s: percentile(&latencies, 99),
+        total_bytes: (latencies.len() * want.nbytes()) as u64,
+        source_bytes: source_bytes.load(Ordering::Relaxed),
+    }
+}
+
+fn main() {
+    println!("== mgr serve: concurrent clients vs one shared daemon ==");
+    let n = 33;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let shape = raw.shape().to_vec();
+    let field: AnyTensor = raw.into();
+    let session = Session::builder().shape(&shape).error_bound(eb).build().unwrap();
+    let refactored = session.refactor(&field).unwrap();
+    let want = refactored.retrieve(Fidelity::All).unwrap();
+
+    let server = Server::start(
+        ServeTarget::Container(refactored.open().unwrap()),
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .unwrap();
+    println!(
+        "daemon on {} serving {:?} f64 ({} KiB per response), {} requests per client",
+        server.addr(),
+        shape,
+        want.nbytes() / 1024,
+        REQUESTS_PER_CLIENT
+    );
+
+    let mut rep = BenchReport::new("serve_concurrency");
+    let mut baseline_gbps = None;
+    for clients in [1usize, 2, 4, 8, 16, 32, 64] {
+        let level = run_level(&server, &want, clients);
+        let gbps = level.total_bytes as f64 / level.wall_s / 1e9;
+        let scale = baseline_gbps.map(|b: f64| gbps / b);
+        baseline_gbps.get_or_insert(gbps);
+        println!(
+            "bench serve {:>2} clients   {:>7.2} MB/s   p50 {:>8.1} µs   p99 {:>8.1} µs   \
+             source bytes {:>8}{}",
+            level.clients,
+            gbps * 1e3,
+            level.p50_s * 1e6,
+            level.p99_s * 1e6,
+            level.source_bytes,
+            scale
+                .map(|s| format!("   {s:.2}x vs 1 client"))
+                .unwrap_or_default()
+        );
+        for (variant, latency_s) in [("p50", level.p50_s), ("p99", level.p99_s)] {
+            rep.push(ReportRow {
+                kernel: "serve".into(),
+                variant: variant.into(),
+                dtype: "f64".into(),
+                shape: shape.clone(),
+                axis: Some(clients),
+                median_s: latency_s,
+                mad_rel: 0.0,
+                gbps,
+                speedup: scale,
+                bytes: Some(level.total_bytes),
+            });
+        }
+    }
+
+    // the daemon's own telemetry must agree that nothing failed
+    let stats = server.stats();
+    assert_eq!(stats.errors, 0, "daemon saw request errors: {stats:?}");
+    assert_eq!(stats.framing_errors, 0, "daemon saw framing errors: {stats:?}");
+    println!("daemon telemetry: {}", stats.to_json());
+
+    // stop through the wire, like a real operator would
+    let mut client = Client::connect(server.addr()).unwrap();
+    client.shutdown_server().unwrap();
+    let stats = server.wait();
+    let total: u64 = [1u64, 2, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|c| c * REQUESTS_PER_CLIENT as u64)
+        .sum();
+    assert!(
+        stats.ok >= total,
+        "daemon answered {} of {total} bench requests: {stats:?}",
+        stats.ok
+    );
+
+    match rep.write("BENCH_serve.json") {
+        Ok(()) => println!("wrote BENCH_serve.json ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

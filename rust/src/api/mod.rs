@@ -109,6 +109,18 @@
 //! versa — and [`SessionBuilder::for_container`] /
 //! [`SessionBuilder::for_header`] rebuild a matching producer session
 //! from a container when one is needed.
+//!
+//! ## Concurrent use
+//!
+//! Every retrieval verb takes `&self`: [`Refactored`],
+//! [`OpenContainer`], [`Retrieved`], [`Sharded`], and [`Session`] are
+//! all `Send + Sync`, so one instance behind an `Arc` serves any number
+//! of threads with bit-identical results. Decoded classes live in a
+//! shared byte-budgeted LRU ([`CacheStats`] reports residency);
+//! `drop_cache` / `set_cache_budget` are eviction *policies* — they
+//! bound memory, never change results. See `docs/api.md` for the full
+//! contract and `mgr serve` (the [`crate::serve`] module) for the
+//! network front built on this path.
 
 #![warn(missing_docs)]
 
@@ -127,4 +139,4 @@ pub use tensor::{AnyTensor, Dtype};
 // One-stop imports for facade callers: the codec knob and the types the
 // verbs return or resolve against.
 pub use crate::compress::{Codec, Compressed, CompressorStats};
-pub use crate::storage::{ContainerHeader, Placement, ShardHeader, TierSpec};
+pub use crate::storage::{CacheStats, ContainerHeader, Placement, ShardHeader, TierSpec};

@@ -5,7 +5,7 @@ use std::fmt;
 use std::fs::File;
 use std::io::{BufReader, Cursor, Read, Seek, Write};
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::api::error::{Error, Result};
 use crate::api::fidelity::Fidelity;
@@ -16,8 +16,8 @@ use crate::coordinator::{partition_slabs, run_pooled};
 use crate::grid::{max_levels, Hierarchy};
 use crate::storage::container::peek_dtype;
 use crate::storage::{
-    place_classes, ContainerHeader, ContainerReader, LazyReader, Placement, ProgressiveWriter,
-    ReadSeek, ShardWriter, TierSpec,
+    place_classes, CacheStats, ContainerHeader, ContainerReader, LazyReader, Placement,
+    ProgressiveWriter, ReadSeek, ShardWriter, TierSpec,
 };
 
 /// Container bytes behind an `Arc`: clones of a [`Refactored`] or
@@ -40,8 +40,9 @@ pub(crate) type BoxSource = Box<dyn ReadSeek + Send>;
 /// Per-dtype lazy reader with its decoded-class cache (see
 /// [`crate::storage::reader::LazyReader`]), erased behind one enum so
 /// [`Refactored`], [`OpenContainer`], and [`Retrieved`] need no type
-/// parameter.
-enum TypedReader {
+/// parameter. Every method takes `&self` — a `TypedReader` behind an
+/// `Arc` is shared across threads as-is.
+pub(crate) enum TypedReader {
     F32(LazyReader<f32, BoxSource>),
     F64(LazyReader<f64, BoxSource>),
 }
@@ -78,10 +79,31 @@ impl TypedReader {
         }
     }
 
-    fn retrieve(&mut self, keep: usize) -> Result<AnyTensor> {
+    fn retrieve(&self, keep: usize) -> Result<AnyTensor> {
         match self {
             TypedReader::F32(r) => Ok(AnyTensor::F32(r.retrieve(keep).map_err(Error::Compress)?)),
             TypedReader::F64(r) => Ok(AnyTensor::F64(r.retrieve(keep).map_err(Error::Compress)?)),
+        }
+    }
+
+    fn drop_cache(&self) {
+        match self {
+            TypedReader::F32(r) => r.drop_cache(),
+            TypedReader::F64(r) => r.drop_cache(),
+        }
+    }
+
+    fn set_cache_budget(&self, budget: Option<u64>) {
+        match self {
+            TypedReader::F32(r) => r.set_cache_budget(budget),
+            TypedReader::F64(r) => r.set_cache_budget(budget),
+        }
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        match self {
+            TypedReader::F32(r) => r.cache_stats(),
+            TypedReader::F64(r) => r.cache_stats(),
         }
     }
 }
@@ -125,12 +147,18 @@ pub(crate) fn resolve_fidelity(header: &ContainerHeader, fidelity: Fidelity) -> 
 ///
 /// Retrieval caches a lazy reader internally (validated once, decoded
 /// classes kept), so repeated and widening retrieves decode each class
-/// segment at most once. Clones share the bytes *and* the cache.
+/// segment at most once. Clones share the bytes *and* the cache, and
+/// every method takes `&self`: a `Refactored` behind an `Arc` (or its
+/// clones) retrieves from any number of threads concurrently, with
+/// results bit-identical to the serial path.
 #[derive(Clone)]
 pub struct Refactored {
     bytes: SharedBytes,
     header: ContainerHeader,
-    reader: Arc<Mutex<Option<TypedReader>>>,
+    /// Lazily initialized shared reader. `OnceLock` (not a mutex):
+    /// after the first retrieval, access is lock-free, and the reader's
+    /// own internals are concurrency-safe.
+    reader: Arc<OnceLock<TypedReader>>,
 }
 
 impl fmt::Debug for Refactored {
@@ -150,7 +178,7 @@ impl Refactored {
         Refactored {
             bytes: SharedBytes(Arc::new(bytes)),
             header,
-            reader: Arc::new(Mutex::new(None)),
+            reader: Arc::new(OnceLock::new()),
         }
     }
 
@@ -207,17 +235,26 @@ impl Refactored {
     ///
     /// The first call constructs a cached lazy reader over the shared
     /// bytes (validation happens exactly once); subsequent calls — any
-    /// fidelity, any clone of this value — reuse its decoded-class
-    /// cache, so each class segment is entropy-decoded at most once per
-    /// `Refactored` lineage.
+    /// fidelity, any clone of this value, any thread — reuse its
+    /// decoded-class cache, so each class segment is entropy-decoded at
+    /// most once per `Refactored` lineage.
     pub fn retrieve(&self, fidelity: Fidelity) -> Result<AnyTensor> {
         let keep = self.resolve(fidelity)?;
-        let mut guard = self.reader.lock().unwrap();
-        if guard.is_none() {
-            let src: BoxSource = Box::new(Cursor::new(self.bytes.clone()));
-            *guard = Some(TypedReader::open(src)?);
+        self.reader()?.retrieve(keep)
+    }
+
+    /// The shared lazy reader, constructed on first use. Two threads
+    /// racing the first retrieval may both construct; `OnceLock` keeps
+    /// one and the loser's transient is dropped — the in-memory open
+    /// reads only the header bytes, so the race costs nothing
+    /// observable.
+    fn reader(&self) -> Result<&TypedReader> {
+        if let Some(r) = self.reader.get() {
+            return Ok(r);
         }
-        guard.as_mut().expect("initialized above").retrieve(keep)
+        let src: BoxSource = Box::new(Cursor::new(self.bytes.clone()));
+        let constructed = TypedReader::open(src)?;
+        Ok(self.reader.get_or_init(|| constructed))
     }
 
     /// Open this representation for explicitly progressive consumption:
@@ -228,13 +265,32 @@ impl Refactored {
         OpenContainer::open(Cursor::new(self.bytes.clone()))
     }
 
-    /// Drop the cached reader and its decoded classes, reclaiming the
+    /// Evict every decoded class from the cached reader, reclaiming the
     /// memory retrievals accumulate (up to roughly one decoded copy of
     /// the full tensor after a `Fidelity::All` retrieve). The container
-    /// bytes are untouched; the next retrieve re-validates and starts a
-    /// fresh cache. Affects every clone sharing this cache.
+    /// bytes are untouched; the next retrieve re-fetches and re-decodes
+    /// what it needs, bit-identically. Affects every clone sharing this
+    /// cache, and is safe to call while other threads retrieve — they
+    /// hold their pinned classes through `Arc`s.
     pub fn drop_cache(&self) {
-        *self.reader.lock().unwrap() = None;
+        if let Some(r) = self.reader.get() {
+            r.drop_cache();
+        }
+    }
+
+    /// Bound the decoded-class cache to `budget` bytes (`None` lifts the
+    /// bound): least-recently-used classes are evicted first and the
+    /// resident total never exceeds the budget. Purely a memory policy —
+    /// retrieval results are unchanged. Shared by every clone.
+    pub fn set_cache_budget(&self, budget: Option<u64>) -> Result<()> {
+        self.reader()?.set_cache_budget(budget);
+        Ok(())
+    }
+
+    /// Hit/miss/eviction counters and residency of the decoded-class
+    /// cache (zeros before the first retrieval constructs the reader).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.reader.get().map(|r| r.cache_stats()).unwrap_or_default()
     }
 
     /// Resolve a fidelity request to a class-prefix length against this
@@ -256,9 +312,16 @@ impl Refactored {
 /// `OpenContainer` owns only the header plus whatever prefix retrievals
 /// have materialized. [`OpenContainer::bytes_read`] exposes exactly how
 /// much of the source has been touched.
+///
+/// Every method takes `&self` and the type is `Sync`: one
+/// `OpenContainer` (or clone — clones share the reader and its cache)
+/// serves concurrent retrievals from many threads, bit-identical to the
+/// serial path. This is exactly what the `mgr serve` daemon shares
+/// across its worker pool.
+#[derive(Clone)]
 pub struct OpenContainer {
     header: ContainerHeader,
-    reader: Arc<Mutex<TypedReader>>,
+    reader: Arc<TypedReader>,
 }
 
 impl fmt::Debug for OpenContainer {
@@ -280,7 +343,7 @@ impl OpenContainer {
         let header = reader.header().clone();
         Ok(OpenContainer {
             header,
-            reader: Arc::new(Mutex::new(reader)),
+            reader: Arc::new(reader),
         })
     }
 
@@ -319,14 +382,34 @@ impl OpenContainer {
 
     /// Cumulative bytes fetched from the source (header included) —
     /// after a prefix retrieval this sits far below
-    /// [`OpenContainer::total_bytes`].
+    /// [`OpenContainer::total_bytes`]. Lock-free and exact under
+    /// concurrent retrievals.
     pub fn bytes_read(&self) -> u64 {
-        self.reader.lock().unwrap().bytes_read()
+        self.reader.bytes_read()
     }
 
     /// Total container size in bytes (header plus every payload).
     pub fn total_bytes(&self) -> u64 {
-        self.reader.lock().unwrap().total_bytes()
+        self.reader.total_bytes()
+    }
+
+    /// Evict every cached decoded class (shared with every clone and
+    /// outstanding [`Retrieved`]); later retrievals re-fetch and
+    /// re-decode bit-identically.
+    pub fn drop_cache(&self) {
+        self.reader.drop_cache();
+    }
+
+    /// Bound the decoded-class cache to `budget` bytes (`None` lifts the
+    /// bound) — see [`Refactored::set_cache_budget`].
+    pub fn set_cache_budget(&self, budget: Option<u64>) {
+        self.reader.set_cache_budget(budget);
+    }
+
+    /// Hit/miss/eviction counters and residency of the decoded-class
+    /// cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.reader.cache_stats()
     }
 
     /// Reconstruct a reduced-fidelity tensor, fetching and decoding only
@@ -335,7 +418,7 @@ impl OpenContainer {
     /// [`upgrade`](Retrieved::upgrade)d later.
     pub fn retrieve(&self, fidelity: Fidelity) -> Result<Retrieved> {
         let keep = self.resolve(fidelity)?;
-        let tensor = self.reader.lock().unwrap().retrieve(keep)?;
+        let tensor = self.reader.retrieve(keep)?;
         Ok(Retrieved {
             tensor,
             keep,
@@ -355,7 +438,7 @@ impl OpenContainer {
 pub struct Retrieved {
     tensor: AnyTensor,
     keep: usize,
-    reader: Arc<Mutex<TypedReader>>,
+    reader: Arc<TypedReader>,
 }
 
 impl fmt::Debug for Retrieved {
@@ -391,9 +474,8 @@ impl Retrieved {
     /// retrieve of `Classes(k')` from the same container. A fidelity at
     /// or below the current one touches no new bytes at all.
     pub fn upgrade(&self, fidelity: Fidelity) -> Result<Retrieved> {
-        let mut reader = self.reader.lock().unwrap();
-        let keep = resolve_fidelity(reader.header(), fidelity)?;
-        let tensor = reader.retrieve(keep)?;
+        let keep = resolve_fidelity(self.reader.header(), fidelity)?;
+        let tensor = self.reader.retrieve(keep)?;
         Ok(Retrieved {
             tensor,
             keep,
@@ -404,7 +486,10 @@ impl Retrieved {
 
 /// Per-dtype compression machinery. One machine per session: the
 /// monolithic and per-class paths share its hierarchy workspaces, and a
-/// `Mutex` keeps `&self` entry points thread-safe.
+/// `Mutex` keeps `&self` entry points thread-safe. **Only the create
+/// verbs (refactor, compress, decompress) take this lock** — read-only
+/// verbs (retrieve, open, plan, stats) never touch it, so a long
+/// refactor on one thread cannot stall retrievals on another.
 enum Machinery {
     F32(Mutex<ProgressiveWriter<f32>>),
     F64(Mutex<ProgressiveWriter<f64>>),
@@ -593,6 +678,7 @@ impl SessionBuilder {
             tiers: self.tiers,
             workers: self.workers,
             machinery,
+            last_stats: RwLock::new(CompressorStats::default()),
         })
     }
 }
@@ -612,6 +698,11 @@ pub struct Session {
     tiers: Vec<TierSpec>,
     workers: usize,
     machinery: Machinery,
+    /// Stats snapshot of the machinery's most recent operation, copied
+    /// out while the machinery lock is still held. [`Session::stats`]
+    /// reads this instead of the machinery, so it never blocks behind an
+    /// in-flight refactor/compress.
+    last_stats: RwLock<CompressorStats>,
 }
 
 impl Session {
@@ -673,16 +764,18 @@ impl Session {
     pub fn refactor(&self, data: &AnyTensor) -> Result<Refactored> {
         self.check_input(data)?;
         let (bytes, header) = match (&self.machinery, data) {
-            (Machinery::F32(w), AnyTensor::F32(t)) => w
-                .lock()
-                .unwrap()
-                .write(t, self.error_bound)
-                .map_err(Error::Compress)?,
-            (Machinery::F64(w), AnyTensor::F64(t)) => w
-                .lock()
-                .unwrap()
-                .write(t, self.error_bound)
-                .map_err(Error::Compress)?,
+            (Machinery::F32(w), AnyTensor::F32(t)) => {
+                let mut w = w.lock().unwrap();
+                let out = w.write(t, self.error_bound).map_err(Error::Compress)?;
+                self.snapshot_stats(w.stats());
+                out
+            }
+            (Machinery::F64(w), AnyTensor::F64(t)) => {
+                let mut w = w.lock().unwrap();
+                let out = w.write(t, self.error_bound).map_err(Error::Compress)?;
+                self.snapshot_stats(w.stats());
+                out
+            }
             _ => unreachable!("check_input verified the dtype"),
         };
         Ok(Refactored::from_parts(bytes, header))
@@ -819,18 +912,24 @@ impl Session {
     pub fn compress(&self, data: &AnyTensor) -> Result<Compressed> {
         self.check_input(data)?;
         match (&self.machinery, data) {
-            (Machinery::F32(w), AnyTensor::F32(t)) => w
-                .lock()
-                .unwrap()
-                .compressor_mut()
-                .compress(t, self.error_bound)
-                .map_err(Error::Compress),
-            (Machinery::F64(w), AnyTensor::F64(t)) => w
-                .lock()
-                .unwrap()
-                .compressor_mut()
-                .compress(t, self.error_bound)
-                .map_err(Error::Compress),
+            (Machinery::F32(w), AnyTensor::F32(t)) => {
+                let mut w = w.lock().unwrap();
+                let out = w
+                    .compressor_mut()
+                    .compress(t, self.error_bound)
+                    .map_err(Error::Compress);
+                self.snapshot_stats(w.stats());
+                out
+            }
+            (Machinery::F64(w), AnyTensor::F64(t)) => {
+                let mut w = w.lock().unwrap();
+                let out = w
+                    .compressor_mut()
+                    .compress(t, self.error_bound)
+                    .map_err(Error::Compress);
+                self.snapshot_stats(w.stats());
+                out
+            }
             _ => unreachable!("check_input verified the dtype"),
         }
     }
@@ -839,30 +938,42 @@ impl Session {
     /// error bound.
     pub fn decompress(&self, blob: &Compressed) -> Result<AnyTensor> {
         match &self.machinery {
-            Machinery::F32(w) => w
-                .lock()
-                .unwrap()
-                .compressor_mut()
-                .decompress(blob)
-                .map(AnyTensor::F32)
-                .map_err(Error::Compress),
-            Machinery::F64(w) => w
-                .lock()
-                .unwrap()
-                .compressor_mut()
-                .decompress(blob)
-                .map(AnyTensor::F64)
-                .map_err(Error::Compress),
+            Machinery::F32(w) => {
+                let mut w = w.lock().unwrap();
+                let out = w
+                    .compressor_mut()
+                    .decompress(blob)
+                    .map(AnyTensor::F32)
+                    .map_err(Error::Compress);
+                self.snapshot_stats(w.stats());
+                out
+            }
+            Machinery::F64(w) => {
+                let mut w = w.lock().unwrap();
+                let out = w
+                    .compressor_mut()
+                    .decompress(blob)
+                    .map(AnyTensor::F64)
+                    .map_err(Error::Compress);
+                self.snapshot_stats(w.stats());
+                out
+            }
         }
     }
 
+    /// Copy the machinery's stats into the read-side snapshot (called
+    /// with the machinery lock held, so the copy is consistent).
+    fn snapshot_stats(&self, stats: &CompressorStats) {
+        *self.last_stats.write().unwrap() = stats.clone();
+    }
+
     /// Per-stage wall-clock breakdown of the session machinery's most
-    /// recent operation (the Fig-19 stages).
+    /// recent operation (the Fig-19 stages). Reads a snapshot taken when
+    /// that operation finished — it never contends with the machinery
+    /// lock, so telemetry polling cannot stall (or be stalled by) an
+    /// in-flight refactor.
     pub fn stats(&self) -> CompressorStats {
-        match &self.machinery {
-            Machinery::F32(w) => w.lock().unwrap().stats().clone(),
-            Machinery::F64(w) => w.lock().unwrap().stats().clone(),
-        }
+        self.last_stats.read().unwrap().clone()
     }
 }
 
@@ -1126,6 +1237,60 @@ mod tests {
         assert_eq!(via_header.dtype(), via_container.dtype());
         assert_eq!(via_header.codec(), via_container.codec());
         assert_eq!(via_header.error_bound(), via_container.error_bound());
+    }
+
+    #[test]
+    fn two_threads_retrieve_concurrently_through_one_session() {
+        // regression for the coarse machinery lock: retrieve and stats
+        // are read-only verbs and must complete while another thread
+        // holds the machinery busy with create verbs
+        let s = session(&[17, 17]);
+        let data = smooth(&[17, 17]);
+        let r = s.refactor(&data).unwrap();
+        let want = r.retrieve(Fidelity::All).unwrap();
+        std::thread::scope(|scope| {
+            let writer = scope.spawn(|| {
+                for _ in 0..8 {
+                    s.refactor(&data).unwrap();
+                    s.compress(&data).unwrap();
+                }
+            });
+            let readers: Vec<_> = (0..2)
+                .map(|_| {
+                    scope.spawn(|| {
+                        for _ in 0..8 {
+                            let got = s.retrieve(&r, Fidelity::All).unwrap();
+                            assert_eq!(got, want);
+                            s.plan(&r).unwrap();
+                            s.stats(); // must never block on the machinery
+                        }
+                    })
+                })
+                .collect();
+            writer.join().unwrap();
+            for h in readers {
+                h.join().unwrap();
+            }
+        });
+        assert!(s.stats().compress_total() > 0.0, "snapshot reflects the last op");
+    }
+
+    #[test]
+    fn cache_budget_on_refactored_bounds_memory_not_results() {
+        let s = session(&[17, 17]);
+        let r = s.refactor(&smooth(&[17, 17])).unwrap();
+        let want = r.retrieve(Fidelity::All).unwrap();
+        r.set_cache_budget(Some(64)).unwrap(); // far too small for any class
+        for keep in 1..=r.nclasses() {
+            assert_eq!(
+                r.retrieve(Fidelity::Classes(keep)).unwrap(),
+                r.clone().retrieve(Fidelity::Classes(keep)).unwrap()
+            );
+        }
+        assert_eq!(r.retrieve(Fidelity::All).unwrap(), want);
+        let stats = r.cache_stats();
+        assert!(stats.cached_bytes <= 64);
+        assert_eq!(stats.budget, Some(64));
     }
 
     #[test]

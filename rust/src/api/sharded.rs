@@ -14,7 +14,7 @@ use std::fs::File;
 use std::io::{BufReader, Cursor};
 use std::ops::Range;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::api::error::{Error, Result};
 use crate::api::fidelity::Fidelity;
@@ -26,12 +26,23 @@ use crate::storage::shard::{Section, ShardHeader, ShardReader};
 use crate::storage::LazyReader;
 use crate::util::Scalar;
 
+/// One lazily opened block slot: the open guard serializes the first
+/// open of each block (so the block's header bytes are fetched exactly
+/// once, keeping [`Sharded::bytes_read`] exact even when many threads
+/// race the same block), the `OnceLock` makes reads lock-free after.
+struct Slot<T: Scalar> {
+    guard: Mutex<()>,
+    cell: OnceLock<LazyReader<T, Section<BoxSource>>>,
+}
+
 /// Per-dtype block set: the shard reader plus one lazily opened
 /// [`LazyReader`] per block (opened on first touch, decoded classes
-/// cached — an upgrade or repeat retrieval re-decodes nothing).
+/// cached — an upgrade or repeat retrieval re-decodes nothing). All
+/// methods take `&self`: block opens are slot-guarded, and the per-block
+/// readers are concurrency-safe themselves.
 struct BlockSet<T: Scalar> {
     shard: ShardReader<BoxSource>,
-    open: Vec<Option<LazyReader<T, Section<BoxSource>>>>,
+    open: Vec<Slot<T>>,
 }
 
 impl<T: Scalar> BlockSet<T> {
@@ -39,22 +50,41 @@ impl<T: Scalar> BlockSet<T> {
         let n = shard.nblocks();
         BlockSet {
             shard,
-            open: (0..n).map(|_| None).collect(),
+            open: (0..n)
+                .map(|_| Slot {
+                    guard: Mutex::new(()),
+                    cell: OnceLock::new(),
+                })
+                .collect(),
         }
     }
 
     /// Open block `k`'s lazy reader on first use (header fetch +
-    /// index-consistency check); corrupt blocks fail here without
-    /// touching any other block.
-    fn open(&mut self, k: usize) -> Result<&mut LazyReader<T, Section<BoxSource>>> {
-        if self.open[k].is_none() {
-            let reader = self.shard.lazy_block::<T>(k).map_err(Error::Container)?;
-            self.open[k] = Some(reader);
+    /// index-consistency check); corrupt blocks fail here — retriable,
+    /// and without touching any other block.
+    fn open(&self, k: usize) -> Result<&LazyReader<T, Section<BoxSource>>> {
+        if let Some(r) = self.open[k].cell.get() {
+            return Ok(r);
         }
-        Ok(self.open[k].as_mut().expect("opened above"))
+        let _g = self.open[k].guard.lock().unwrap();
+        if let Some(r) = self.open[k].cell.get() {
+            return Ok(r); // a peer opened it while we waited
+        }
+        let reader = self.shard.lazy_block::<T>(k).map_err(Error::Container)?;
+        let _ = self.open[k].cell.set(reader);
+        Ok(self.open[k].cell.get().expect("just set under the guard"))
     }
 
-    fn retrieve(&mut self, header: &ShardHeader, fidelity: Fidelity) -> Result<Tensor<T>> {
+    /// Evict every open block's decoded-class cache.
+    fn drop_cache(&self) {
+        for slot in &self.open {
+            if let Some(r) = slot.cell.get() {
+                r.drop_cache();
+            }
+        }
+    }
+
+    fn retrieve(&self, header: &ShardHeader, fidelity: Fidelity) -> Result<Tensor<T>> {
         let mut parts = Vec::with_capacity(header.nblocks());
         for k in 0..header.nblocks() {
             let reader = self.open(k)?;
@@ -67,7 +97,7 @@ impl<T: Scalar> BlockSet<T> {
     }
 
     fn retrieve_region(
-        &mut self,
+        &self,
         header: &ShardHeader,
         roi: &[Range<usize>],
         fidelity: Fidelity,
@@ -165,7 +195,20 @@ impl TypedBlocks {
             TypedBlocks::F64(s) => s.shard.bytes_read(),
         }
     }
+
+    fn drop_cache(&self) {
+        match self {
+            TypedBlocks::F32(s) => s.drop_cache(),
+            TypedBlocks::F64(s) => s.drop_cache(),
+        }
+    }
 }
+
+/// Independent source handles a shard opens for concurrent block reads
+/// (file descriptors for [`Sharded::open_file`], cheap shared-`Arc`
+/// cursor clones for [`Sharded::from_bytes`]): enough that a handful of
+/// concurrent block fetches don't serialize, small enough to be free.
+const SHARD_SOURCE_HANDLES: usize = 4;
 
 /// A sharded refactored field: a validated MGRS index over N
 /// independent per-slab containers, retrievable at any [`Fidelity`] —
@@ -178,9 +221,15 @@ impl TypedBlocks {
 /// [`Sharded::total_bytes`] expose exactly how much of the artifact has
 /// been read — after a single-block [`Sharded::retrieve_region`], far
 /// less than the whole.
+///
+/// Every method takes `&self` and the type is `Sync`: one `Sharded`
+/// behind an `Arc` serves whole-domain and region retrievals from many
+/// threads at once — block reads draw on a small pool of independent
+/// source handles instead of serializing on one stream, and results are
+/// bit-identical to the serial path.
 pub struct Sharded {
     header: ShardHeader,
-    blocks: Mutex<TypedBlocks>,
+    blocks: TypedBlocks,
     /// The serialized shard when this value was produced in memory
     /// (`refactor_sharded` / `from_bytes`); `None` when opened lazily
     /// from a file — the bytes are already on disk.
@@ -208,26 +257,37 @@ impl Sharded {
         };
         Ok(Sharded {
             header,
-            blocks: Mutex::new(blocks),
+            blocks,
             bytes,
         })
     }
 
     /// Wrap (and validate the index of) serialized shard bytes. Block
-    /// payloads are validated lazily, each at its first use.
+    /// payloads are validated lazily, each at its first use. The source
+    /// pool holds cheap cursor clones over one shared allocation, so
+    /// concurrent block reads never serialize.
     pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
         let shared = SharedBytes(Arc::new(bytes));
-        let src: BoxSource = Box::new(Cursor::new(shared.clone()));
-        let reader = ShardReader::open(src).map_err(Error::Container)?;
+        let srcs: Vec<BoxSource> = (0..SHARD_SOURCE_HANDLES)
+            .map(|_| Box::new(Cursor::new(shared.clone())) as BoxSource)
+            .collect();
+        let reader = ShardReader::open_pooled(srcs).map_err(Error::Container)?;
         Self::from_reader(reader, Some(shared))
     }
 
     /// Open a shard file lazily: the index and the file size only; block
-    /// payloads stay on disk until a retrieval needs them.
+    /// payloads stay on disk until a retrieval needs them. Opens a small
+    /// pool of independent descriptors so concurrent block reads don't
+    /// serialize on one file position.
     pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
-        let file = BufReader::new(File::open(path.as_ref())?);
-        let src: BoxSource = Box::new(file);
-        let reader = ShardReader::open(src).map_err(Error::Container)?;
+        let srcs = (0..SHARD_SOURCE_HANDLES)
+            .map(|_| {
+                File::open(path.as_ref())
+                    .map(|f| Box::new(BufReader::new(f)) as BoxSource)
+                    .map_err(Error::Io)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let reader = ShardReader::open_pooled(srcs).map_err(Error::Container)?;
         Self::from_reader(reader, None)
     }
 
@@ -279,9 +339,18 @@ impl Sharded {
     /// Cumulative bytes fetched from the source: the index plus the
     /// headers and class segments of every block a retrieval has
     /// touched. A region retrieval leaves this far below
-    /// [`Sharded::total_bytes`].
+    /// [`Sharded::total_bytes`]. The counter is atomic and shared by
+    /// every source handle, so it stays exact under concurrent reads.
     pub fn bytes_read(&self) -> u64 {
-        self.blocks.lock().unwrap().bytes_read()
+        self.blocks.bytes_read()
+    }
+
+    /// Evict every open block's decoded-class cache (the bytes and the
+    /// index stay; later retrievals re-fetch and re-decode what they
+    /// need, bit-identically). Safe to call while other threads
+    /// retrieve — they hold their pinned classes through `Arc`s.
+    pub fn drop_cache(&self) {
+        self.blocks.drop_cache();
     }
 
     /// Write the serialized shard to a file. Only in-memory shards carry
@@ -310,8 +379,7 @@ impl Sharded {
     /// spent. Budget-driven consumers retrieve blocks individually.
     pub fn retrieve(&self, fidelity: Fidelity) -> Result<AnyTensor> {
         self.reject_byte_budget(fidelity)?;
-        let mut guard = self.blocks.lock().unwrap();
-        match &mut *guard {
+        match &self.blocks {
             TypedBlocks::F32(set) => Ok(AnyTensor::F32(set.retrieve(&self.header, fidelity)?)),
             TypedBlocks::F64(set) => Ok(AnyTensor::F64(set.retrieve(&self.header, fidelity)?)),
         }
@@ -326,8 +394,7 @@ impl Sharded {
     pub fn retrieve_region(&self, roi: &[Range<usize>], fidelity: Fidelity) -> Result<AnyTensor> {
         self.reject_byte_budget(fidelity)?;
         self.validate_roi(roi)?;
-        let mut guard = self.blocks.lock().unwrap();
-        match &mut *guard {
+        match &self.blocks {
             TypedBlocks::F32(set) => Ok(AnyTensor::F32(
                 set.retrieve_region(&self.header, roi, fidelity)?,
             )),

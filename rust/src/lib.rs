@@ -17,6 +17,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`api`] | **the unified facade**: dtype-erased `Session` over refactor/compress/store/plan |
+//! | [`serve`] | TCP daemon + blocking client over the shared read path (`mgr serve`) |
 //! | [`grid`] | grid hierarchy, strided level views, padding |
 //! | [`refactor`] | decompose/recompose (GPK/LPK/IPK native kernels), coefficient classes, error control |
 //! | [`baseline`] | state-of-the-art (pre-paper) refactoring used as comparison baseline |
@@ -40,6 +41,7 @@ pub mod coordinator;
 pub mod grid;
 pub mod refactor;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod simgpu;
 pub mod storage;

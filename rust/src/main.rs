@@ -21,7 +21,13 @@
 //! * `plan` — place a container's class segments across storage tiers
 //!   (reads the header only; no payload is touched).
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
-//! * `serve` — run a batch of jobs through the coordinator worker pool.
+//! * `serve` — long-lived TCP daemon answering `retrieve` /
+//!   `retrieve_region` / `upgrade` over the wire protocol in
+//!   `docs/serve.md`, sharing one lazily opened container or shard
+//!   across all connections; `--stats` / `--shutdown` run the client
+//!   side against a running daemon.
+//! * `pool` — run a batch of jobs through the coordinator worker pool
+//!   (formerly `serve`).
 //! * `pjrt-check` — execute the AOT artifacts and verify them against the
 //!   native core (the cross-layer integration check).
 
@@ -32,6 +38,7 @@ use mgr::compress::Codec;
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
 use mgr::grid::Tensor;
 use mgr::runtime::EngineHandle;
+use mgr::serve::{Client, ServeConfig, ServeTarget, Server};
 use mgr::sim::GrayScott;
 use mgr::simgpu::{ClusterModel, DeviceSpec};
 use mgr::util::cli::Args;
@@ -185,6 +192,7 @@ fn run(args: &Args) -> Result<()> {
         Some("plan") => plan(args),
         Some("compress") | Some("roundtrip") => compress(args),
         Some("serve") => serve(args),
+        Some("pool") => pool(args),
         Some("pjrt-check") => pjrt_check(args),
         _ => {
             println!(
@@ -200,7 +208,10 @@ fn run(args: &Args) -> Result<()> {
                  \x20 retrieve   --in f.mgrs [--region i0..i1,j0..j1,...]  region-of-interest\n\
                  \x20 plan       --in f.mgr\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
-                 \x20 serve      [--jobs N --workers N --mode serial|coop|emb]\n\
+                 \x20 serve      --in f.mgr|f.mgrs [--addr 127.0.0.1:4860]\n\
+                 \x20            [--workers N --max-inflight-mb M]   retrieval daemon\n\
+                 \x20 serve      --addr HOST:PORT --stats|--shutdown  client side\n\
+                 \x20 pool       [--jobs N --workers N --mode serial|coop|emb]\n\
                  \x20 pjrt-check [--artifacts DIR]\n\n\
                  global options (any subcommand):\n\
                  \x20 --threads N        intra-kernel worker count (0 = all cores)\n\
@@ -545,7 +556,52 @@ fn compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mgr serve`: share one lazily opened container/shard behind a TCP
+/// front (daemon mode), or talk to a running daemon (`--stats`,
+/// `--shutdown`).
 fn serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:4860");
+    if args.has("stats") {
+        let mut client = Client::connect(&addr).with_context(|| format!("connecting to {addr}"))?;
+        println!("{}", client.stats().map_err(|e| anyhow!("{e}"))?);
+        return Ok(());
+    }
+    if args.has("shutdown") {
+        let mut client = Client::connect(&addr).with_context(|| format!("connecting to {addr}"))?;
+        client.shutdown_server().map_err(|e| anyhow!("{e}"))?;
+        println!("daemon at {addr} acknowledged shutdown");
+        return Ok(());
+    }
+
+    let path = container_path(args)?;
+    let target = ServeTarget::open_file(&path).with_context(|| format!("opening {path}"))?;
+    let kind = match &target {
+        ServeTarget::Container(_) => "container",
+        ServeTarget::Shard(_) => "shard",
+    };
+    let config = ServeConfig {
+        workers: args.get_usize("workers", ServeConfig::default().workers)?,
+        max_inflight_bytes: args.get_usize("max-inflight-mb", 256)? as u64 * 1024 * 1024,
+    };
+    let server = Server::start(target, addr.as_str(), config.clone())
+        .with_context(|| format!("binding {addr}"))?;
+    println!(
+        "serving {kind} {path} on {} ({} workers, {} MiB in-flight budget) — \
+         stop with `mgr serve --addr {} --shutdown`",
+        server.addr(),
+        config.workers,
+        config.max_inflight_bytes / (1024 * 1024),
+        server.addr()
+    );
+    let stats = server.wait();
+    println!("daemon stopped; final telemetry: {}", stats.to_json());
+    Ok(())
+}
+
+/// `mgr pool`: run a batch of refactor jobs through the coordinator
+/// worker pool (this subcommand was called `serve` before the TCP
+/// daemon took that name).
+fn pool(args: &Args) -> Result<()> {
     let njobs = args.get_usize("jobs", 8)?;
     let workers = args.get_usize("workers", 4)?;
     let shape = args.get_shape("shape", &[33, 33, 33])?;

@@ -1,0 +1,202 @@
+//! Blocking client for the `mgr serve` wire protocol.
+//!
+//! One [`Client`] wraps one TCP connection and issues requests in
+//! order (the protocol is strictly request/response per connection —
+//! open more clients for parallelism; the daemon serves connections
+//! independently). Used by the CLI, the concurrency test battery, and
+//! the `serve_concurrency` bench.
+
+use std::io::{self, BufReader};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::ops::Range;
+
+use crate::api::{AnyTensor, Fidelity};
+use crate::grid::Tensor;
+use crate::serve::protocol::{
+    decode_response, encode_request, read_frame, write_frame, Request, Response, ResponseKind,
+    WireError, WireTensor, MAX_RESPONSE_LEN,
+};
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// The connection or framing broke (I/O failure, malformed frame).
+    Wire(WireError),
+    /// The server answered with a typed error status.
+    Remote {
+        /// The non-OK status byte (see [`crate::serve::protocol::status`]).
+        code: u8,
+        /// The server's diagnostic message.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Wire(e) => write!(f, "{e}"),
+            ClientError::Remote { code, message } => {
+                write!(f, "server error (status {code}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Wire(e) => Some(e),
+            ClientError::Remote { .. } => None,
+        }
+    }
+}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> Self {
+        ClientError::Wire(e)
+    }
+}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Wire(WireError::Io(e))
+    }
+}
+
+/// Result alias for client calls.
+pub type ClientResult<T> = std::result::Result<T, ClientError>;
+
+/// A tensor retrieved over the wire, decoded back into an
+/// [`AnyTensor`], plus the per-request telemetry the server measured.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteTensor {
+    /// The reconstruction — bit-identical to a local retrieve at the
+    /// same fidelity.
+    pub tensor: AnyTensor,
+    /// Source bytes the server fetched while serving this request.
+    pub bytes_read_delta: u64,
+    /// Server-side reconstruction time in microseconds.
+    pub decode_micros: u64,
+}
+
+fn materialize(wire: WireTensor) -> Result<RemoteTensor, WireError> {
+    let shape: Vec<usize> = wire.shape.iter().map(|&d| d as usize).collect();
+    let tensor = match wire.dtype_bytes {
+        4 => {
+            let values: Vec<f32> = wire
+                .values
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            AnyTensor::F32(Tensor::from_vec(&shape, values))
+        }
+        8 => {
+            let values: Vec<f64> = wire
+                .values
+                .chunks_exact(8)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                })
+                .collect();
+            AnyTensor::F64(Tensor::from_vec(&shape, values))
+        }
+        other => {
+            return Err(WireError::Malformed(format!(
+                "unsupported scalar width {other}"
+            )))
+        }
+    };
+    Ok(RemoteTensor {
+        tensor,
+        bytes_read_delta: wire.bytes_read_delta,
+        decode_micros: wire.decode_micros,
+    })
+}
+
+/// A blocking connection to an `mgr serve` daemon.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
+        Client::from_stream(TcpStream::connect(addr)?)
+    }
+
+    /// Wrap an existing stream (lets tests drive half-open sockets).
+    pub fn from_stream(stream: TcpStream) -> io::Result<Client> {
+        let writer = stream.try_clone()?;
+        Ok(Client {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Issue one request and decode its response.
+    fn roundtrip(&mut self, req: &Request, kind: ResponseKind) -> ClientResult<Response> {
+        write_frame(&mut self.writer, &encode_request(req))?;
+        let body = read_frame(&mut self.reader, MAX_RESPONSE_LEN)?.ok_or_else(|| {
+            ClientError::Wire(WireError::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection before responding",
+            )))
+        })?;
+        match decode_response(&body, kind)? {
+            Response::Error { code, message } => Err(ClientError::Remote { code, message }),
+            resp => Ok(resp),
+        }
+    }
+
+    fn tensor_roundtrip(&mut self, req: &Request) -> ClientResult<RemoteTensor> {
+        match self.roundtrip(req, ResponseKind::Tensor)? {
+            Response::Tensor(wire) => Ok(materialize(wire)?),
+            other => Err(ClientError::Wire(WireError::Malformed(format!(
+                "expected a tensor response, got {other:?}"
+            )))),
+        }
+    }
+
+    /// Retrieve the full domain at a fidelity.
+    pub fn retrieve(&mut self, fidelity: Fidelity) -> ClientResult<RemoteTensor> {
+        self.tensor_roundtrip(&Request::Retrieve(fidelity))
+    }
+
+    /// Retrieve a region of interest (sharded sources only); ranges are
+    /// half-open in global coordinates.
+    pub fn retrieve_region(
+        &mut self,
+        roi: &[Range<u64>],
+        fidelity: Fidelity,
+    ) -> ClientResult<RemoteTensor> {
+        self.tensor_roundtrip(&Request::RetrieveRegion(roi.to_vec(), fidelity))
+    }
+
+    /// Retrieve at `from`, then upgrade to `to` on the server's shared
+    /// reader; returns the `to` reconstruction (the telemetry shows the
+    /// incremental fetch).
+    pub fn upgrade(&mut self, from: Fidelity, to: Fidelity) -> ClientResult<RemoteTensor> {
+        self.tensor_roundtrip(&Request::Upgrade(from, to))
+    }
+
+    /// Fetch the daemon's telemetry snapshot as JSON.
+    pub fn stats(&mut self) -> ClientResult<String> {
+        match self.roundtrip(&Request::Stats, ResponseKind::Stats)? {
+            Response::Stats(json) => Ok(json),
+            other => Err(ClientError::Wire(WireError::Malformed(format!(
+                "expected a stats response, got {other:?}"
+            )))),
+        }
+    }
+
+    /// Ask the daemon to shut down; returns once it acknowledges.
+    pub fn shutdown_server(&mut self) -> ClientResult<()> {
+        match self.roundtrip(&Request::Shutdown, ResponseKind::Done)? {
+            Response::Done => Ok(()),
+            other => Err(ClientError::Wire(WireError::Malformed(format!(
+                "expected an acknowledgement, got {other:?}"
+            )))),
+        }
+    }
+}

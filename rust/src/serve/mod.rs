@@ -1,0 +1,44 @@
+//! `mgr serve` — a long-lived TCP daemon over the shared concurrent
+//! read path.
+//!
+//! The paper's workflow separates *producing* refactored data from
+//! *consuming* it at whatever fidelity a reader can afford. The [`api`]
+//! facade already makes every retrieval verb `&self` over shared
+//! readers; this module puts a network front on exactly that path: one
+//! [`ServeTarget`] (a lazily opened `.mgr` container or `.mgrs` shard)
+//! is shared by every connection of a [`Server`], and each request is
+//! answered bit-identically to a local retrieval.
+//!
+//! The pieces:
+//!
+//! * [`protocol`] — the length-prefixed wire format (normative spec:
+//!   `docs/serve.md`): request verbs `retrieve`, `retrieve_region`,
+//!   `upgrade`, `stats`, `shutdown`; typed response statuses.
+//! * [`server`] — the daemon: accept loop, one I/O thread per
+//!   connection, a worker-permit semaphore bounding concurrent decodes,
+//!   and an admission byte-gate bounding estimated response bytes in
+//!   flight.
+//! * [`telemetry`] — per-request accounting (bytes read, decode time)
+//!   and a bounded latency reservoir yielding deterministic p50/p99,
+//!   served as JSON by the `stats` verb.
+//! * [`client`] — the blocking [`Client`] used by the CLI, the
+//!   concurrency battery, and the `serve_concurrency` bench.
+//!
+//! Failure containment: a framing violation (oversized declared length,
+//! truncated frame, mid-request disconnect) closes *that* connection
+//! only; a well-framed but undecodable body gets a typed `PROTOCOL`
+//! error response and the connection keeps serving. The daemon survives
+//! both — `rust/tests/fuzz_serve.rs` hammers exactly these paths.
+//!
+//! [`api`]: crate::api
+
+#![warn(missing_docs)]
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod telemetry;
+
+pub use client::{Client, ClientError, ClientResult, RemoteTensor};
+pub use server::{ServeConfig, ServeTarget, Server};
+pub use telemetry::ServeStats;

@@ -1,0 +1,604 @@
+//! The `mgr serve` wire protocol: length-prefixed frames over a byte
+//! stream.
+//!
+//! The layout is normative and documented in `docs/serve.md`; this
+//! module is its single implementation — the daemon and the blocking
+//! [`crate::serve::Client`] both encode and decode through these
+//! functions, and the protocol tests round-trip every shape through
+//! them.
+//!
+//! ## Frame layout
+//!
+//! Every message (both directions) is one *frame*:
+//!
+//! ```text
+//! | u32 LE body length | body (that many bytes) |
+//! ```
+//!
+//! A request body starts with a verb byte; a response body starts with
+//! a status byte. Multi-byte integers are little-endian throughout;
+//! floating-point values travel as the LE bytes of their IEEE-754
+//! representation. Request bodies are small by construction and capped
+//! at [`MAX_REQUEST_LEN`]; a declared length beyond the cap is a
+//! framing violation and the server closes that connection (other
+//! connections are unaffected).
+
+use std::io::{self, Read, Write};
+use std::ops::Range;
+
+use crate::api::Fidelity;
+
+/// Hard cap on a request body's declared length. Requests carry a verb
+/// plus a few fidelity/region scalars — kilobytes, never more — so
+/// anything larger is a framing violation, not a big request.
+pub const MAX_REQUEST_LEN: u32 = 64 * 1024;
+
+/// Sanity cap on a response body's declared length (tensors dominate;
+/// this admits any tensor the library can build while rejecting
+/// obviously corrupt length prefixes on the client side).
+pub const MAX_RESPONSE_LEN: u32 = u32::MAX - 8;
+
+/// Request verbs (the first body byte of a request frame).
+pub mod verb {
+    /// Reconstruct the full domain at a fidelity.
+    pub const RETRIEVE: u8 = 1;
+    /// Reconstruct a region of interest at a fidelity (sharded sources).
+    pub const RETRIEVE_REGION: u8 = 2;
+    /// Retrieve at a coarse fidelity, then upgrade to a finer one on the
+    /// shared reader — the response carries the finer tensor and the
+    /// telemetry shows the incremental fetch.
+    pub const UPGRADE: u8 = 3;
+    /// Fetch the daemon's telemetry snapshot as JSON.
+    pub const STATS: u8 = 4;
+    /// Ask the daemon to stop accepting connections and exit.
+    pub const SHUTDOWN: u8 = 5;
+}
+
+/// Response status codes (the first body byte of a response frame).
+pub mod status {
+    /// Success; the payload depends on the verb.
+    pub const OK: u8 = 0;
+    /// The request frame was well-formed but its body was not decodable
+    /// (unknown verb, truncated body, bad fidelity tag, …).
+    pub const PROTOCOL: u8 = 1;
+    /// The fidelity cannot be satisfied by the served source.
+    pub const FIDELITY: u8 = 2;
+    /// The region of interest does not fit the served domain.
+    pub const REGION: u8 = 3;
+    /// The verb does not apply to the served source (for example a
+    /// region retrieve against a single container).
+    pub const USAGE: u8 = 4;
+    /// The server failed internally (corrupt source, I/O failure, …).
+    pub const INTERNAL: u8 = 5;
+}
+
+/// Fidelity wire tags (first byte of a 9-byte fidelity encoding).
+mod fid_tag {
+    pub const ALL: u8 = 0;
+    pub const CLASSES: u8 = 1;
+    pub const ERROR_BOUND: u8 = 2;
+    pub const BYTE_BUDGET: u8 = 3;
+}
+
+/// A decoded request body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Full-domain retrieval at a fidelity.
+    Retrieve(Fidelity),
+    /// Region-of-interest retrieval (half-open per-axis ranges).
+    RetrieveRegion(Vec<Range<u64>>, Fidelity),
+    /// Coarse retrieval followed by an incremental upgrade.
+    Upgrade(Fidelity, Fidelity),
+    /// Telemetry snapshot.
+    Stats,
+    /// Daemon shutdown.
+    Shutdown,
+}
+
+/// A decoded response body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// A reconstructed tensor plus its per-request telemetry.
+    Tensor(WireTensor),
+    /// The daemon's telemetry snapshot (JSON text).
+    Stats(String),
+    /// Acknowledgement with no payload (shutdown).
+    Done,
+    /// A typed failure: one of the non-zero [`status`] codes and a
+    /// human-readable message.
+    Error {
+        /// The non-zero status byte.
+        code: u8,
+        /// UTF-8 diagnostic from the server.
+        message: String,
+    },
+}
+
+/// A tensor as it travels on the wire: dtype width, shape, raw LE
+/// values, and the per-request telemetry the server measured while
+/// producing it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireTensor {
+    /// Scalar width in bytes (4 = f32, 8 = f64).
+    pub dtype_bytes: u8,
+    /// Grid shape.
+    pub shape: Vec<u64>,
+    /// Source bytes fetched while serving this request (counter delta;
+    /// exact when requests do not overlap, see `docs/serve.md`).
+    pub bytes_read_delta: u64,
+    /// Wall-clock microseconds the server spent reconstructing.
+    pub decode_micros: u64,
+    /// Raw scalar values, little-endian, row-major.
+    pub values: Vec<u8>,
+}
+
+impl WireTensor {
+    /// Element count implied by the shape.
+    pub fn nelements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+}
+
+/// A wire-level failure: the peer broke framing or sent an undecodable
+/// body. Distinct from an in-protocol [`Response::Error`], which is a
+/// well-formed response.
+#[derive(Debug)]
+pub enum WireError {
+    /// The underlying stream failed (includes disconnects).
+    Io(io::Error),
+    /// The peer violated the frame or body layout.
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            WireError::Malformed(_) => None,
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// Result alias for wire operations.
+pub type WireResult<T> = std::result::Result<T, WireError>;
+
+// ---------------------------------------------------------------------------
+// frame transport
+
+/// Write one frame: `u32 LE length` + body.
+pub fn write_frame<W: Write>(w: &mut W, body: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(body.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "frame body exceeds u32"))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one frame body, enforcing `max_len` on the declared length.
+///
+/// Returns `Ok(None)` on a clean EOF *before any length byte* (the
+/// peer hung up between requests); a disconnect mid-frame is an
+/// [`WireError::Io`] with `UnexpectedEof`.
+pub fn read_frame<R: Read>(r: &mut R, max_len: u32) -> WireResult<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // distinguish "no more requests" from "died mid-length"
+    match r.read(&mut len_buf) {
+        Ok(0) => return Ok(None),
+        Ok(n) => r.read_exact(&mut len_buf[n..])?,
+        Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {
+            r.read_exact(&mut len_buf)?;
+        }
+        Err(e) => return Err(WireError::Io(e)),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 {
+        return Err(WireError::Malformed("zero-length frame body".into()));
+    }
+    if len > max_len {
+        return Err(WireError::Malformed(format!(
+            "declared body length {len} exceeds the {max_len}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+// ---------------------------------------------------------------------------
+// body encoding
+
+fn put_fidelity(out: &mut Vec<u8>, f: Fidelity) {
+    match f {
+        Fidelity::All => {
+            out.push(fid_tag::ALL);
+            out.extend_from_slice(&0u64.to_le_bytes());
+        }
+        Fidelity::Classes(k) => {
+            out.push(fid_tag::CLASSES);
+            out.extend_from_slice(&(k as u64).to_le_bytes());
+        }
+        Fidelity::ErrorBound(e) => {
+            out.push(fid_tag::ERROR_BOUND);
+            out.extend_from_slice(&e.to_bits().to_le_bytes());
+        }
+        Fidelity::ByteBudget(b) => {
+            out.push(fid_tag::BYTE_BUDGET);
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+}
+
+/// Encode a request into a frame body.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Retrieve(f) => {
+            out.push(verb::RETRIEVE);
+            put_fidelity(&mut out, *f);
+        }
+        Request::RetrieveRegion(roi, f) => {
+            out.push(verb::RETRIEVE_REGION);
+            put_fidelity(&mut out, *f);
+            out.push(roi.len() as u8);
+            for r in roi {
+                out.extend_from_slice(&r.start.to_le_bytes());
+                out.extend_from_slice(&r.end.to_le_bytes());
+            }
+        }
+        Request::Upgrade(from, to) => {
+            out.push(verb::UPGRADE);
+            put_fidelity(&mut out, *from);
+            put_fidelity(&mut out, *to);
+        }
+        Request::Stats => out.push(verb::STATS),
+        Request::Shutdown => out.push(verb::SHUTDOWN),
+    }
+    out
+}
+
+/// Encode a response into a frame body.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Response::Tensor(t) => {
+            out.push(status::OK);
+            out.push(t.dtype_bytes);
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&d.to_le_bytes());
+            }
+            out.extend_from_slice(&t.bytes_read_delta.to_le_bytes());
+            out.extend_from_slice(&t.decode_micros.to_le_bytes());
+            out.extend_from_slice(&t.values);
+        }
+        Response::Stats(json) => {
+            out.push(status::OK);
+            out.extend_from_slice(json.as_bytes());
+        }
+        Response::Done => out.push(status::OK),
+        Response::Error { code, message } => {
+            out.push(*code);
+            out.extend_from_slice(message.as_bytes());
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// body decoding
+
+/// Forward-only reader over a frame body with typed underrun errors.
+struct BodyCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BodyCursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        BodyCursor { buf, pos: 0 }
+    }
+
+    fn u8(&mut self, what: &str) -> WireResult<u8> {
+        if self.pos >= self.buf.len() {
+            return Err(WireError::Malformed(format!("body truncated reading {what}")));
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u64(&mut self, what: &str) -> WireResult<u64> {
+        if self.pos + 8 > self.buf.len() {
+            return Err(WireError::Malformed(format!("body truncated reading {what}")));
+        }
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn rest(self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    fn done(&self, what: &str) -> WireResult<()> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn take_fidelity(c: &mut BodyCursor<'_>) -> WireResult<Fidelity> {
+    let tag = c.u8("fidelity tag")?;
+    let arg = c.u64("fidelity argument")?;
+    match tag {
+        fid_tag::ALL => Ok(Fidelity::All),
+        fid_tag::CLASSES => Ok(Fidelity::Classes(arg as usize)),
+        fid_tag::ERROR_BOUND => Ok(Fidelity::ErrorBound(f64::from_bits(arg))),
+        fid_tag::BYTE_BUDGET => Ok(Fidelity::ByteBudget(arg)),
+        other => Err(WireError::Malformed(format!("unknown fidelity tag {other}"))),
+    }
+}
+
+/// Decode a request frame body.
+pub fn decode_request(body: &[u8]) -> WireResult<Request> {
+    let mut c = BodyCursor::new(body);
+    let verb = c.u8("verb")?;
+    match verb {
+        verb::RETRIEVE => {
+            let f = take_fidelity(&mut c)?;
+            c.done("retrieve request")?;
+            Ok(Request::Retrieve(f))
+        }
+        verb::RETRIEVE_REGION => {
+            let f = take_fidelity(&mut c)?;
+            let ndim = c.u8("region rank")? as usize;
+            if ndim == 0 {
+                return Err(WireError::Malformed("region rank must be at least 1".into()));
+            }
+            let mut roi = Vec::with_capacity(ndim);
+            for d in 0..ndim {
+                let start = c.u64("region start")?;
+                let end = c.u64("region end")?;
+                if start >= end {
+                    return Err(WireError::Malformed(format!(
+                        "region axis {d} is empty or inverted ({start}..{end})"
+                    )));
+                }
+                roi.push(start..end);
+            }
+            c.done("region request")?;
+            Ok(Request::RetrieveRegion(roi, f))
+        }
+        verb::UPGRADE => {
+            let from = take_fidelity(&mut c)?;
+            let to = take_fidelity(&mut c)?;
+            c.done("upgrade request")?;
+            Ok(Request::Upgrade(from, to))
+        }
+        verb::STATS => {
+            c.done("stats request")?;
+            Ok(Request::Stats)
+        }
+        verb::SHUTDOWN => {
+            c.done("shutdown request")?;
+            Ok(Request::Shutdown)
+        }
+        other => Err(WireError::Malformed(format!("unknown verb {other}"))),
+    }
+}
+
+/// Decode a response frame body. `expect_tensor` disambiguates the OK
+/// payloads: the response layout is verb-dependent, so the client passes
+/// what it asked for.
+pub fn decode_response(body: &[u8], expect: ResponseKind) -> WireResult<Response> {
+    let mut c = BodyCursor::new(body);
+    let code = c.u8("status")?;
+    if code != status::OK {
+        let message = String::from_utf8_lossy(c.rest()).into_owned();
+        return Ok(Response::Error { code, message });
+    }
+    match expect {
+        ResponseKind::Tensor => {
+            let dtype_bytes = c.u8("dtype width")?;
+            if dtype_bytes != 4 && dtype_bytes != 8 {
+                return Err(WireError::Malformed(format!(
+                    "unsupported scalar width {dtype_bytes} on the wire"
+                )));
+            }
+            let ndim = c.u8("rank")? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(c.u64("dimension")?);
+            }
+            let bytes_read_delta = c.u64("bytes-read delta")?;
+            let decode_micros = c.u64("decode micros")?;
+            let values = c.rest().to_vec();
+            let want = shape.iter().product::<u64>() * dtype_bytes as u64;
+            if values.len() as u64 != want {
+                return Err(WireError::Malformed(format!(
+                    "tensor payload is {} bytes, shape dictates {want}",
+                    values.len()
+                )));
+            }
+            Ok(Response::Tensor(WireTensor {
+                dtype_bytes,
+                shape,
+                bytes_read_delta,
+                decode_micros,
+                values,
+            }))
+        }
+        ResponseKind::Stats => match String::from_utf8(c.rest().to_vec()) {
+            Ok(json) => Ok(Response::Stats(json)),
+            Err(_) => Err(WireError::Malformed("stats payload is not UTF-8".into())),
+        },
+        ResponseKind::Done => {
+            c.done("acknowledgement")?;
+            Ok(Response::Done)
+        }
+    }
+}
+
+/// What OK payload a response should carry, given the request verb.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseKind {
+    /// Tensor payload (retrieve / retrieve-region / upgrade).
+    Tensor,
+    /// JSON text (stats).
+    Stats,
+    /// Empty acknowledgement (shutdown).
+    Done,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip_req(req: Request) {
+        let body = encode_request(&req);
+        assert_eq!(decode_request(&body).unwrap(), req);
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Retrieve(Fidelity::All));
+        roundtrip_req(Request::Retrieve(Fidelity::Classes(3)));
+        roundtrip_req(Request::Retrieve(Fidelity::ErrorBound(1e-3)));
+        roundtrip_req(Request::Retrieve(Fidelity::ByteBudget(4096)));
+        roundtrip_req(Request::RetrieveRegion(
+            vec![0..5, 2..9],
+            Fidelity::Classes(2),
+        ));
+        roundtrip_req(Request::Upgrade(Fidelity::Classes(1), Fidelity::All));
+        roundtrip_req(Request::Stats);
+        roundtrip_req(Request::Shutdown);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let t = WireTensor {
+            dtype_bytes: 8,
+            shape: vec![3, 2],
+            bytes_read_delta: 123,
+            decode_micros: 456,
+            values: vec![0u8; 48],
+        };
+        let body = encode_response(&Response::Tensor(t.clone()));
+        assert_eq!(
+            decode_response(&body, ResponseKind::Tensor).unwrap(),
+            Response::Tensor(t)
+        );
+
+        let s = Response::Stats("{\"requests\":1}".into());
+        let body = encode_response(&s);
+        assert_eq!(decode_response(&body, ResponseKind::Stats).unwrap(), s);
+
+        let body = encode_response(&Response::Done);
+        assert_eq!(
+            decode_response(&body, ResponseKind::Done).unwrap(),
+            Response::Done
+        );
+
+        let e = Response::Error {
+            code: status::FIDELITY,
+            message: "class prefix 9 outside 1..=4".into(),
+        };
+        let body = encode_response(&e);
+        // errors decode regardless of what payload was expected
+        assert_eq!(decode_response(&body, ResponseKind::Tensor).unwrap(), e);
+        assert_eq!(decode_response(&body, ResponseKind::Done).unwrap(), e);
+    }
+
+    #[test]
+    fn frames_roundtrip_and_eof_is_clean() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, &[7u8]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, MAX_REQUEST_LEN).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, MAX_REQUEST_LEN).unwrap().unwrap(), vec![7u8]);
+        // clean EOF between frames is None, not an error
+        assert!(read_frame(&mut r, MAX_REQUEST_LEN).unwrap().is_none());
+    }
+
+    #[test]
+    fn framing_violations_are_typed() {
+        // zero-length body
+        let mut r = Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(matches!(
+            read_frame(&mut r, MAX_REQUEST_LEN),
+            Err(WireError::Malformed(_))
+        ));
+        // declared length over the cap — rejected before any allocation
+        let mut r = Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        assert!(matches!(
+            read_frame(&mut r, MAX_REQUEST_LEN),
+            Err(WireError::Malformed(_))
+        ));
+        // truncated mid-body is an I/O error, not a hang
+        let mut buf = 10u32.to_le_bytes().to_vec();
+        buf.extend_from_slice(b"abc");
+        let mut r = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut r, MAX_REQUEST_LEN),
+            Err(WireError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[99]).is_err(), "unknown verb");
+        assert!(decode_request(&[verb::RETRIEVE]).is_err(), "missing fidelity");
+        assert!(
+            decode_request(&[verb::RETRIEVE, 9, 0, 0, 0, 0, 0, 0, 0, 0]).is_err(),
+            "unknown fidelity tag"
+        );
+        // trailing garbage after a well-formed request
+        let mut body = encode_request(&Request::Stats);
+        body.push(0);
+        assert!(decode_request(&body).is_err());
+        // empty region and inverted region
+        let mut body = encode_request(&Request::Retrieve(Fidelity::All));
+        body[0] = verb::RETRIEVE_REGION;
+        body.push(1);
+        body.extend_from_slice(&5u64.to_le_bytes());
+        body.extend_from_slice(&5u64.to_le_bytes());
+        assert!(decode_request(&body).is_err());
+    }
+
+    #[test]
+    fn tensor_payload_length_is_checked() {
+        let t = WireTensor {
+            dtype_bytes: 8,
+            shape: vec![4],
+            bytes_read_delta: 0,
+            decode_micros: 0,
+            values: vec![0u8; 32],
+        };
+        let mut body = encode_response(&Response::Tensor(t));
+        body.pop();
+        assert!(decode_response(&body, ResponseKind::Tensor).is_err());
+    }
+}

@@ -1,0 +1,764 @@
+//! The `mgr serve` daemon: a long-lived TCP front over the shared
+//! concurrent read path.
+//!
+//! One [`ServeTarget`] — a lazily opened container or shard — is shared
+//! by every connection. Concurrency control is two-level:
+//!
+//! * a **worker-permit semaphore** bounds how many requests decode at
+//!   once (the CPU-heavy stage), and
+//! * an **admission byte-gate** bounds the total estimated response
+//!   bytes in flight, so a burst of full-fidelity retrievals cannot
+//!   balloon resident memory — oversized single responses are admitted
+//!   alone rather than deadlocking.
+//!
+//! Each connection gets its own I/O thread (requests on one connection
+//! are served in order; connections are independent). Framing
+//! violations close the offending connection only; well-framed but
+//! undecodable requests get a typed `PROTOCOL` error response and the
+//! connection keeps serving. Every completed request is recorded in the
+//! shared [`Telemetry`] (latency reservoir, counters), which the
+//! `stats` verb serves as JSON.
+
+use std::fs::File;
+use std::io::{self, BufReader, Read};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use crate::api::{AnyTensor, Error, OpenContainer, Result as ApiResult, Sharded};
+use crate::serve::protocol::{
+    decode_request, encode_response, read_frame, status, write_frame, Request, Response, WireError,
+    WireTensor, MAX_REQUEST_LEN,
+};
+use crate::serve::telemetry::{ServeStats, Telemetry};
+use crate::storage::shard::SHARD_MAGIC;
+
+/// What a daemon serves: one progressive container or one shard, opened
+/// lazily and shared (`&self` retrieval) across every connection.
+pub enum ServeTarget {
+    /// A single `.mgr` progressive container.
+    Container(OpenContainer),
+    /// A multi-block `.mgrs` shard (region retrieval available).
+    Shard(Sharded),
+}
+
+impl ServeTarget {
+    /// Open a file as a serve target, dispatching on its magic bytes:
+    /// `MGRS` opens as a shard, anything else is handed to the container
+    /// path (which produces the descriptive bad-magic error for foreign
+    /// files).
+    pub fn open_file(path: impl AsRef<Path>) -> ApiResult<Self> {
+        let mut magic = [0u8; 4];
+        let mut f = File::open(path.as_ref())?;
+        let n = f.read(&mut magic)?;
+        drop(f);
+        if n == 4 && magic == SHARD_MAGIC {
+            Sharded::open_file(path).map(ServeTarget::Shard)
+        } else {
+            OpenContainer::open_file(path).map(ServeTarget::Container)
+        }
+    }
+
+    /// Global shape of the served domain.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ServeTarget::Container(c) => c.shape(),
+            ServeTarget::Shard(s) => s.shape(),
+        }
+    }
+
+    /// Scalar width in bytes of the served field.
+    pub fn dtype_bytes(&self) -> u8 {
+        match self {
+            ServeTarget::Container(c) => c.dtype().bytes() as u8,
+            ServeTarget::Shard(s) => s.dtype().bytes() as u8,
+        }
+    }
+
+    /// Cumulative source bytes fetched (exact, atomic — see the reader
+    /// docs).
+    pub fn bytes_read(&self) -> u64 {
+        match self {
+            ServeTarget::Container(c) => c.bytes_read(),
+            ServeTarget::Shard(s) => s.bytes_read(),
+        }
+    }
+
+    /// Execute a tensor-producing request against the shared reader.
+    fn execute(&self, req: &Request) -> ApiResult<AnyTensor> {
+        match (self, req) {
+            (ServeTarget::Container(c), Request::Retrieve(f)) => {
+                c.retrieve(*f).map(|r| r.into_tensor())
+            }
+            (ServeTarget::Shard(s), Request::Retrieve(f)) => s.retrieve(*f),
+            (ServeTarget::Container(_), Request::RetrieveRegion(..)) => Err(Error::Usage(
+                "region retrieval requires a sharded (MGRS) source".into(),
+            )),
+            (ServeTarget::Shard(s), Request::RetrieveRegion(roi, f)) => {
+                let roi = convert_roi(roi)?;
+                s.retrieve_region(&roi, *f)
+            }
+            (ServeTarget::Container(c), Request::Upgrade(from, to)) => {
+                // the genuine incremental path: the coarse retrieval
+                // warms the shared cache, the upgrade decodes the delta
+                let coarse = c.retrieve(*from)?;
+                coarse.upgrade(*to).map(|r| r.into_tensor())
+            }
+            (ServeTarget::Shard(s), Request::Upgrade(from, to)) => {
+                // per-block caches make the second retrieve incremental
+                s.retrieve(*from)?;
+                s.retrieve(*to)
+            }
+            _ => unreachable!("stats/shutdown are handled before execute"),
+        }
+    }
+}
+
+/// Wire-range (`u64`) to in-process range (`usize`) conversion; bounds
+/// violations become typed region errors before the shard sees them.
+fn convert_roi(roi: &[Range<u64>]) -> ApiResult<Vec<Range<usize>>> {
+    roi.iter()
+        .map(|r| {
+            let start = usize::try_from(r.start)
+                .map_err(|_| Error::Region(format!("region start {} overflows", r.start)))?;
+            let end = usize::try_from(r.end)
+                .map_err(|_| Error::Region(format!("region end {} overflows", r.end)))?;
+            Ok(start..end)
+        })
+        .collect()
+}
+
+/// Map a facade error onto its wire status byte.
+fn status_for(e: &Error) -> u8 {
+    match e {
+        Error::Fidelity(_) => status::FIDELITY,
+        Error::Region(_) => status::REGION,
+        Error::Usage(_) => status::USAGE,
+        _ => status::INTERNAL,
+    }
+}
+
+/// Serialize a tensor's values as little-endian bytes, row-major.
+fn tensor_values(t: &AnyTensor) -> Vec<u8> {
+    match t {
+        AnyTensor::F32(t) => {
+            let mut out = Vec::with_capacity(t.len() * 4);
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+        AnyTensor::F64(t) => {
+            let mut out = Vec::with_capacity(t.len() * 8);
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// concurrency primitives (std-only: Mutex + Condvar)
+
+/// Counting semaphore handing out worker permits; RAII release.
+struct Semaphore {
+    permits: Mutex<usize>,
+    available: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Self {
+        Semaphore {
+            permits: Mutex::new(n.max(1)),
+            available: Condvar::new(),
+        }
+    }
+
+    fn acquire(&self) -> SemaphorePermit<'_> {
+        let mut n = self.permits.lock().unwrap();
+        while *n == 0 {
+            n = self.available.wait(n).unwrap();
+        }
+        *n -= 1;
+        SemaphorePermit { sem: self }
+    }
+}
+
+struct SemaphorePermit<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemaphorePermit<'_> {
+    fn drop(&mut self) {
+        *self.sem.permits.lock().unwrap() += 1;
+        self.sem.available.notify_one();
+    }
+}
+
+/// Admission gate: total estimated response bytes in flight never
+/// exceeds `max` — except that an oversized single response (estimate
+/// larger than the whole budget) is admitted alone, so big tensors are
+/// serialized rather than rejected or deadlocked.
+struct ByteGate {
+    max: u64,
+    inflight: Mutex<u64>,
+    drained: Condvar,
+}
+
+impl ByteGate {
+    fn new(max: u64) -> Self {
+        ByteGate {
+            max: max.max(1),
+            inflight: Mutex::new(0),
+            drained: Condvar::new(),
+        }
+    }
+
+    fn admit(&self, bytes: u64) -> GatePass<'_> {
+        let mut inflight = self.inflight.lock().unwrap();
+        while !(*inflight == 0 || *inflight + bytes <= self.max) {
+            inflight = self.drained.wait(inflight).unwrap();
+        }
+        *inflight += bytes;
+        GatePass { gate: self, bytes }
+    }
+}
+
+struct GatePass<'a> {
+    gate: &'a ByteGate,
+    bytes: u64,
+}
+
+impl Drop for GatePass<'_> {
+    fn drop(&mut self) {
+        let mut inflight = self.gate.inflight.lock().unwrap();
+        *inflight = inflight.saturating_sub(self.bytes);
+        self.gate.drained.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the server
+
+/// Daemon tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Concurrent decode permits (default: available parallelism).
+    pub workers: usize,
+    /// Admission budget: max estimated response bytes in flight
+    /// (default 256 MiB).
+    pub max_inflight_bytes: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            max_inflight_bytes: 256 * 1024 * 1024,
+        }
+    }
+}
+
+/// Everything the accept loop and connection handlers share.
+struct Shared {
+    target: ServeTarget,
+    addr: SocketAddr,
+    permits: Semaphore,
+    gate: ByteGate,
+    telemetry: Telemetry,
+    shutting_down: AtomicBool,
+}
+
+impl Shared {
+    fn snapshot(&self) -> ServeStats {
+        self.telemetry.snapshot(self.target.bytes_read())
+    }
+
+    /// Flip the shutdown flag and wake the accept loop with a throwaway
+    /// connection so it observes the flag promptly.
+    fn request_shutdown(&self) {
+        self.shutting_down.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A running `mgr serve` daemon. Dropping the handle shuts it down;
+/// [`Server::wait`] blocks until a client sends the shutdown verb.
+pub struct Server {
+    shared: Arc<Shared>,
+    /// try_clone'd handles of live connections, closed on shutdown so
+    /// handler threads unblock from their reads.
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving `target`.
+    pub fn start(
+        target: ServeTarget,
+        addr: impl ToSocketAddrs,
+        config: ServeConfig,
+    ) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            target,
+            addr: local,
+            permits: Semaphore::new(config.workers),
+            gate: ByteGate::new(config.max_inflight_bytes),
+            telemetry: Telemetry::default(),
+            shutting_down: AtomicBool::new(false),
+        });
+        let conns = Arc::new(Mutex::new(Vec::new()));
+        let handlers = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            let handlers = Arc::clone(&handlers);
+            thread::spawn(move || accept_loop(listener, shared, conns, handlers))
+        };
+        Ok(Server {
+            shared,
+            conns,
+            handlers,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Telemetry snapshot: counters, reservoir percentiles, and the
+    /// served reader's cumulative source bytes.
+    pub fn stats(&self) -> ServeStats {
+        self.shared.snapshot()
+    }
+
+    /// Block until shutdown is requested (by a client's shutdown verb or
+    /// another thread's [`Server::shutdown`]), then drain and return the
+    /// final stats.
+    pub fn wait(mut self) -> ServeStats {
+        self.join_everything();
+        self.shared.snapshot()
+    }
+
+    /// Stop accepting, close every live connection, join every thread,
+    /// and return the final stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.shared.request_shutdown();
+        self.join_everything();
+        self.shared.snapshot()
+    }
+
+    fn join_everything(&mut self) {
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        // after the accept loop exits no new connections appear; close
+        // live ones so blocked reads observe EOF
+        for conn in self.conns.lock().unwrap().drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        let drained: Vec<_> = self.handlers.lock().unwrap().drain(..).collect();
+        for h in drained {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shared.request_shutdown();
+            self.join_everything();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    for stream in listener.incoming() {
+        if shared.shutting_down.load(Ordering::Acquire) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue, // transient accept failure
+        };
+        if let Ok(clone) = stream.try_clone() {
+            conns.lock().unwrap().push(clone);
+        }
+        let shared = Arc::clone(&shared);
+        let handle = thread::spawn(move || handle_connection(stream, shared));
+        handlers.lock().unwrap().push(handle);
+    }
+}
+
+/// Estimated response-body bytes for admission control: the reply
+/// header is negligible, the tensor payload dominates.
+fn estimate_response_bytes(target: &ServeTarget, req: &Request) -> u64 {
+    let width = target.dtype_bytes() as u64;
+    let elements: u64 = match req {
+        Request::RetrieveRegion(roi, _) => roi.iter().map(|r| r.end.saturating_sub(r.start)).product(),
+        _ => target.shape().iter().map(|&d| d as u64).product(),
+    };
+    elements.saturating_mul(width).saturating_add(64)
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        if shared.shutting_down.load(Ordering::Acquire) {
+            break;
+        }
+        let body = match read_frame(&mut reader, MAX_REQUEST_LEN) {
+            Ok(Some(body)) => body,
+            // clean disconnect between requests
+            Ok(None) => break,
+            Err(WireError::Malformed(msg)) => {
+                // framing is broken — the stream position cannot be
+                // trusted, so answer (best effort) and close this
+                // connection; the daemon keeps serving the others
+                shared.telemetry.record_framing_error();
+                let resp = Response::Error {
+                    code: status::PROTOCOL,
+                    message: msg,
+                };
+                let _ = write_frame(&mut writer, &encode_response(&resp));
+                break;
+            }
+            Err(WireError::Io(_)) => {
+                // died mid-frame: nothing to answer
+                shared.telemetry.record_framing_error();
+                break;
+            }
+        };
+
+        let started = Instant::now();
+        let req = match decode_request(&body) {
+            Ok(req) => req,
+            Err(e) => {
+                // the frame boundary is intact, so a typed error reply
+                // is safe and the connection keeps serving
+                let resp = Response::Error {
+                    code: status::PROTOCOL,
+                    message: e.to_string(),
+                };
+                let body = encode_response(&resp);
+                if write_frame(&mut writer, &body).is_err() {
+                    shared.telemetry.record_framing_error();
+                    break;
+                }
+                shared
+                    .telemetry
+                    .record(false, body.len() as u64, started.elapsed().as_micros() as u64);
+                continue;
+            }
+        };
+
+        // `_pass` holds admitted bytes until the response hits the wire
+        let (resp, _pass, close_after) = match &req {
+            Request::Stats => (Response::Stats(shared.snapshot().to_json()), None, false),
+            Request::Shutdown => (Response::Done, None, true),
+            _ => {
+                let estimate = estimate_response_bytes(&shared.target, &req);
+                let pass = shared.gate.admit(estimate);
+                let before = shared.target.bytes_read();
+                let decode_started = Instant::now();
+                let outcome = {
+                    let _permit = shared.permits.acquire();
+                    shared.target.execute(&req)
+                };
+                let resp = match outcome {
+                    Ok(tensor) => {
+                        let decode_micros = decode_started.elapsed().as_micros() as u64;
+                        let delta = shared.target.bytes_read().saturating_sub(before);
+                        Response::Tensor(WireTensor {
+                            dtype_bytes: tensor.dtype().bytes() as u8,
+                            shape: tensor.shape().iter().map(|&d| d as u64).collect(),
+                            bytes_read_delta: delta,
+                            decode_micros,
+                            values: tensor_values(&tensor),
+                        })
+                    }
+                    Err(e) => Response::Error {
+                        code: status_for(&e),
+                        message: e.to_string(),
+                    },
+                };
+                (resp, Some(pass), false)
+            }
+        };
+
+        let ok = !matches!(resp, Response::Error { .. });
+        let body = encode_response(&resp);
+        if write_frame(&mut writer, &body).is_err() {
+            shared.telemetry.record_framing_error();
+            break;
+        }
+        shared
+            .telemetry
+            .record(ok, body.len() as u64, started.elapsed().as_micros() as u64);
+        if close_after {
+            shared.request_shutdown();
+            break;
+        }
+    }
+    // shutdown(2) acts on the connection, not the handle, so the peer
+    // sees EOF even while the registry still holds a try_clone'd fd
+    let _ = writer.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{AnyTensor, Fidelity, Session};
+    use crate::grid::Tensor;
+    use crate::serve::client::{Client, ClientError};
+
+    fn smooth(shape: &[usize]) -> AnyTensor {
+        Tensor::<f64>::from_fn(shape, |idx| {
+            idx.iter()
+                .enumerate()
+                .map(|(d, &i)| ((d + 2) as f64 * i as f64 * 0.13).sin())
+                .sum()
+        })
+        .into()
+    }
+
+    fn container_target(shape: &[usize]) -> (ServeTarget, crate::api::Refactored) {
+        let s = Session::builder().shape(shape).build().unwrap();
+        let r = s.refactor(&smooth(shape)).unwrap();
+        let oc = r.open().unwrap();
+        (ServeTarget::Container(oc), r)
+    }
+
+    fn start(target: ServeTarget) -> Server {
+        Server::start(target, "127.0.0.1:0", ServeConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn served_retrievals_are_bit_identical_to_local() {
+        let (target, r) = container_target(&[17, 17]);
+        let server = start(target);
+        let mut client = Client::connect(server.addr()).unwrap();
+        for fid in [
+            Fidelity::Classes(1),
+            Fidelity::Classes(2),
+            Fidelity::All,
+            Fidelity::ErrorBound(1e-2),
+        ] {
+            let remote = client.retrieve(fid).unwrap();
+            let local = r.retrieve(fid).unwrap();
+            assert_eq!(remote.tensor, local, "{fid:?}");
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.ok, 4);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn upgrade_verb_is_incremental_and_exact() {
+        let (target, r) = container_target(&[17, 17]);
+        let server = start(target);
+        let mut client = Client::connect(server.addr()).unwrap();
+        let got = client.upgrade(Fidelity::Classes(1), Fidelity::All).unwrap();
+        assert_eq!(got.tensor, r.retrieve(Fidelity::All).unwrap());
+        // a second full retrieve is served entirely from cache
+        let again = client.retrieve(Fidelity::All).unwrap();
+        assert_eq!(again.bytes_read_delta, 0, "cache made it free");
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shard_target_serves_regions() {
+        let s = Session::builder().shape(&[17, 9]).build().unwrap();
+        let data = smooth(&[17, 9]);
+        let sharded = s.refactor_sharded(&data, 2).unwrap();
+        let want_full = sharded.retrieve(Fidelity::All).unwrap();
+        let want_region = sharded
+            .retrieve_region(&[3..12, 2..7], Fidelity::All)
+            .unwrap();
+
+        let server = start(ServeTarget::Shard(sharded));
+        let mut client = Client::connect(server.addr()).unwrap();
+        assert_eq!(client.retrieve(Fidelity::All).unwrap().tensor, want_full);
+        let got = client
+            .retrieve_region(&[3..12, 2..7], Fidelity::All)
+            .unwrap();
+        assert_eq!(got.tensor, want_region);
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn errors_map_to_typed_statuses() {
+        let (target, _r) = container_target(&[9, 9]);
+        let server = start(target);
+        let mut client = Client::connect(server.addr()).unwrap();
+
+        // fidelity the container cannot satisfy
+        match client.retrieve(Fidelity::Classes(99)) {
+            Err(ClientError::Remote { code, message }) => {
+                assert_eq!(code, status::FIDELITY);
+                assert!(message.contains("99"), "{message}");
+            }
+            other => panic!("expected remote fidelity error, got {other:?}"),
+        }
+        // region verb against a plain container
+        match client.retrieve_region(&[0..4, 0..4], Fidelity::All) {
+            Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::USAGE),
+            other => panic!("expected remote usage error, got {other:?}"),
+        }
+        // the connection keeps working after typed errors
+        assert!(client.retrieve(Fidelity::Classes(1)).is_ok());
+
+        let stats = server.shutdown();
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.ok, 1);
+    }
+
+    #[test]
+    fn region_errors_on_shard_are_typed() {
+        let s = Session::builder().shape(&[17, 9]).build().unwrap();
+        let sharded = s.refactor_sharded(&smooth(&[17, 9]), 2).unwrap();
+        let server = start(ServeTarget::Shard(sharded));
+        let mut client = Client::connect(server.addr()).unwrap();
+        match client.retrieve_region(&[0..99, 0..4], Fidelity::All) {
+            Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::REGION),
+            other => panic!("expected remote region error, got {other:?}"),
+        }
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_verb_reports_telemetry_json() {
+        let (target, _r) = container_target(&[9, 9]);
+        let server = start(target);
+        let mut client = Client::connect(server.addr()).unwrap();
+        client.retrieve(Fidelity::All).unwrap();
+        let json = client.stats().unwrap();
+        assert!(json.contains("\"requests\":1"), "{json}");
+        assert!(json.contains("\"p99_micros\":"), "{json}");
+        assert!(json.contains("\"source_bytes_read\":"), "{json}");
+        drop(client);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_verb_stops_the_daemon() {
+        let (target, _r) = container_target(&[9, 9]);
+        let server = start(target);
+        let addr = server.addr();
+        let mut client = Client::connect(addr).unwrap();
+        client.shutdown_server().unwrap();
+        // wait() returns because the verb tripped the flag
+        let stats = server.wait();
+        assert_eq!(stats.ok, 1);
+        // the daemon is gone: new connections fail or are not served
+        match Client::connect(addr) {
+            Err(_) => {}
+            Ok(mut c) => assert!(c.retrieve(Fidelity::All).is_err()),
+        }
+    }
+
+    #[test]
+    fn concurrent_clients_get_bit_identical_results() {
+        let (target, r) = container_target(&[17, 17]);
+        let server = start(target);
+        let addr = server.addr();
+        let want: Vec<AnyTensor> = (1..=r.nclasses())
+            .map(|k| r.retrieve(Fidelity::Classes(k)).unwrap())
+            .collect();
+        let nclasses = r.nclasses();
+        thread::scope(|scope| {
+            for t in 0..8 {
+                let want = &want;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    for i in 0..6 {
+                        let k = 1 + (t + i) % nclasses;
+                        let got = client.retrieve(Fidelity::Classes(k)).unwrap();
+                        assert_eq!(got.tensor, want[k - 1]);
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 48);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.p99_micros >= stats.p50_micros);
+    }
+
+    #[test]
+    fn tight_admission_budget_serializes_but_serves() {
+        let (target, r) = container_target(&[17, 17]);
+        // budget far below one response: oversized responses admit alone
+        let server = Server::start(
+            target,
+            "127.0.0.1:0",
+            ServeConfig {
+                workers: 2,
+                max_inflight_bytes: 16,
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        let want = r.retrieve(Fidelity::All).unwrap();
+        thread::scope(|scope| {
+            for _ in 0..4 {
+                let want = &want;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    assert_eq!(client.retrieve(Fidelity::All).unwrap().tensor, *want);
+                });
+            }
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.ok, 4);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn open_file_dispatches_on_magic() {
+        let dir = std::env::temp_dir();
+        let s = Session::builder().shape(&[9, 9]).build().unwrap();
+        let r = s.refactor(&smooth(&[9, 9])).unwrap();
+        let cpath = dir.join("mgr_serve_target_test.mgr");
+        s.store_file(&r, &cpath).unwrap();
+        assert!(matches!(
+            ServeTarget::open_file(&cpath).unwrap(),
+            ServeTarget::Container(_)
+        ));
+
+        let sharded = s.refactor_sharded(&smooth(&[9, 9]), 2).unwrap();
+        let spath = dir.join("mgr_serve_target_test.mgrs");
+        sharded.store_file(&spath).unwrap();
+        assert!(matches!(
+            ServeTarget::open_file(&spath).unwrap(),
+            ServeTarget::Shard(_)
+        ));
+
+        std::fs::remove_file(&cpath).ok();
+        std::fs::remove_file(&spath).ok();
+    }
+}

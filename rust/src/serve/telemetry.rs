@@ -1,0 +1,228 @@
+//! Per-request telemetry for the `mgr serve` daemon: counters plus a
+//! bounded latency reservoir that yields deterministic percentiles.
+//!
+//! The reservoir is a fixed-capacity ring (default 4096 samples): every
+//! completed request records its wall-clock latency, and once the ring
+//! is full the oldest sample is overwritten. Percentiles are computed
+//! over whatever the ring holds by sorting a copy — deterministic for a
+//! given request history, no random sampling involved. Recording is one
+//! short mutex hold; the daemon's request path never blocks behind a
+//! percentile computation because snapshots copy the ring out first.
+
+use std::sync::Mutex;
+
+/// Fixed capacity of the latency ring.
+pub const RESERVOIR_CAPACITY: usize = 4096;
+
+/// A point-in-time copy of the daemon's telemetry.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests that reached the execution stage (well-formed frames).
+    pub requests: u64,
+    /// Requests answered with status OK.
+    pub ok: u64,
+    /// Requests answered with a non-OK status.
+    pub errors: u64,
+    /// Connections dropped for framing violations or mid-request
+    /// disconnects (no response was possible).
+    pub framing_errors: u64,
+    /// Total response-body bytes written.
+    pub bytes_sent: u64,
+    /// Total source bytes the served reader fetched (its cumulative
+    /// `bytes_read` counter at snapshot time).
+    pub source_bytes_read: u64,
+    /// Median request latency in microseconds over the reservoir.
+    pub p50_micros: u64,
+    /// 99th-percentile request latency in microseconds.
+    pub p99_micros: u64,
+    /// Slowest request in the reservoir, microseconds.
+    pub max_micros: u64,
+}
+
+impl ServeStats {
+    /// Render as a single JSON object (hand-rolled: every value is an
+    /// unsigned integer, no escaping needed).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"ok\":{},\"errors\":{},\"framing_errors\":{},\
+             \"bytes_sent\":{},\"source_bytes_read\":{},\
+             \"p50_micros\":{},\"p99_micros\":{},\"max_micros\":{}}}",
+            self.requests,
+            self.ok,
+            self.errors,
+            self.framing_errors,
+            self.bytes_sent,
+            self.source_bytes_read,
+            self.p50_micros,
+            self.p99_micros,
+            self.max_micros,
+        )
+    }
+}
+
+/// Interior state: counters plus the latency ring.
+#[derive(Debug)]
+struct Inner {
+    requests: u64,
+    ok: u64,
+    errors: u64,
+    framing_errors: u64,
+    bytes_sent: u64,
+    /// Latency ring; grows to capacity, then `next` wraps.
+    ring: Vec<u64>,
+    next: usize,
+}
+
+/// Thread-safe telemetry recorder shared by every connection handler.
+#[derive(Debug)]
+pub struct Telemetry {
+    inner: Mutex<Inner>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry {
+            inner: Mutex::new(Inner {
+                requests: 0,
+                ok: 0,
+                errors: 0,
+                framing_errors: 0,
+                bytes_sent: 0,
+                ring: Vec::new(),
+                next: 0,
+            }),
+        }
+    }
+}
+
+impl Telemetry {
+    /// Record one completed request: whether it succeeded, the response
+    /// body size, and its wall-clock latency.
+    pub fn record(&self, ok: bool, bytes_sent: u64, micros: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        if ok {
+            g.ok += 1;
+        } else {
+            g.errors += 1;
+        }
+        g.bytes_sent += bytes_sent;
+        if g.ring.len() < RESERVOIR_CAPACITY {
+            g.ring.push(micros);
+        } else {
+            let at = g.next;
+            g.ring[at] = micros;
+        }
+        g.next = (g.next + 1) % RESERVOIR_CAPACITY;
+    }
+
+    /// Record a connection dropped before a response was possible.
+    pub fn record_framing_error(&self) {
+        self.inner.lock().unwrap().framing_errors += 1;
+    }
+
+    /// Snapshot counters and percentiles. `source_bytes_read` is passed
+    /// in by the caller (the served reader owns that counter).
+    pub fn snapshot(&self, source_bytes_read: u64) -> ServeStats {
+        let (requests, ok, errors, framing_errors, bytes_sent, mut ring) = {
+            let g = self.inner.lock().unwrap();
+            (
+                g.requests,
+                g.ok,
+                g.errors,
+                g.framing_errors,
+                g.bytes_sent,
+                g.ring.clone(),
+            )
+        };
+        ring.sort_unstable();
+        ServeStats {
+            requests,
+            ok,
+            errors,
+            framing_errors,
+            bytes_sent,
+            source_bytes_read,
+            p50_micros: percentile(&ring, 50),
+            p99_micros: percentile(&ring, 99),
+            max_micros: ring.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Nearest-rank percentile over a **sorted** sample; 0 when empty.
+/// Rank = ⌈p/100 · n⌉ (1-based), the textbook nearest-rank definition.
+pub fn percentile(sorted: &[u64], p: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let n = sorted.len() as u64;
+    let rank = (p * n + 99) / 100; // ceil(p * n / 100)
+    let idx = rank.saturating_sub(1) as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_deterministic_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 50), 50);
+        assert_eq!(percentile(&s, 99), 99);
+        assert_eq!(percentile(&s, 100), 100);
+        assert_eq!(percentile(&s, 0), 1);
+        assert_eq!(percentile(&[42], 99), 42);
+        assert_eq!(percentile(&[], 50), 0);
+    }
+
+    #[test]
+    fn counters_and_reservoir_accumulate() {
+        let t = Telemetry::default();
+        for i in 0..10u64 {
+            t.record(i % 2 == 0, 100, i + 1);
+        }
+        t.record_framing_error();
+        let s = t.snapshot(555);
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.ok, 5);
+        assert_eq!(s.errors, 5);
+        assert_eq!(s.framing_errors, 1);
+        assert_eq!(s.bytes_sent, 1000);
+        assert_eq!(s.source_bytes_read, 555);
+        assert_eq!(s.max_micros, 10);
+        assert_eq!(s.p50_micros, 5);
+        // JSON carries every field
+        let json = s.to_json();
+        for key in [
+            "requests",
+            "ok",
+            "errors",
+            "framing_errors",
+            "bytes_sent",
+            "source_bytes_read",
+            "p50_micros",
+            "p99_micros",
+            "max_micros",
+        ] {
+            assert!(json.contains(&format!("\"{key}\":")), "{json}");
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_capacity() {
+        let t = Telemetry::default();
+        // fill with slow samples, then overwrite everything with fast ones
+        for _ in 0..RESERVOIR_CAPACITY {
+            t.record(true, 0, 1_000_000);
+        }
+        for _ in 0..RESERVOIR_CAPACITY {
+            t.record(true, 0, 5);
+        }
+        let s = t.snapshot(0);
+        assert_eq!(s.requests, 2 * RESERVOIR_CAPACITY as u64);
+        assert_eq!(s.max_micros, 5, "old samples fully evicted");
+        assert_eq!(s.p99_micros, 5);
+    }
+}

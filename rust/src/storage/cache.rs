@@ -1,0 +1,365 @@
+//! Concurrent, byte-budgeted LRU cache of decoded coefficient classes.
+//!
+//! [`crate::storage::reader::LazyReader`] used to keep its decoded
+//! classes in a plain `Vec<Option<Vec<T>>>` behind `&mut self`, which
+//! made the whole read path single-caller. [`ClassCache`] is the shared
+//! replacement: every entry point takes `&self`, so one reader behind an
+//! `Arc` serves any number of threads, and an optional **byte budget**
+//! turns the cache from "grow until the container is fully decoded"
+//! into an LRU working set — `drop_cache` becomes just the most
+//! aggressive eviction policy.
+//!
+//! Locking is two-level, in a fixed order that cannot deadlock:
+//!
+//! 1. a **per-class decode guard** (`guards[k]`) serializes decodes of
+//!    the *same* class, so a segment is fetched and entropy-decoded at
+//!    most once per residency no matter how many threads want it, while
+//!    decodes of *different* classes run fully in parallel;
+//! 2. a single **state lock** protects the entry table and the byte
+//!    accounting. It is only ever taken *after* (or without) a decode
+//!    guard, and never the other way around.
+//!
+//! Decoding happens outside the state lock, so a slow entropy decode of
+//! one class never blocks cache hits on another. Values are handed out
+//! as `Arc<Vec<T>>` clones: eviction under a byte budget can drop an
+//! entry while another thread still reads it — the `Arc` keeps the data
+//! alive, the accounting stays exact, and results remain bit-identical
+//! to the single-threaded path (decodes are deterministic).
+//!
+//! # Budget invariant
+//!
+//! With a budget of `B` bytes, [`ClassCache::cached_bytes`]` <= B` holds
+//! at **every instant**: insertion evicts least-recently-used entries
+//! *before* adding the new one (all under the state lock), and a value
+//! larger than the whole budget is returned to the caller but never
+//! cached (pass-through). `rust/tests/concurrent_readers.rs` hammers
+//! this invariant from many threads.
+
+use std::sync::{Arc, Mutex};
+
+/// Point-in-time cache counters (see [`ClassCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups satisfied by a resident entry.
+    pub hits: u64,
+    /// Lookups that had to decode (including budget pass-throughs).
+    pub misses: u64,
+    /// Entries dropped to make room under the byte budget (evictions
+    /// by [`ClassCache::clear`] and [`ClassCache::set_budget`] count
+    /// too).
+    pub evictions: u64,
+    /// Bytes currently resident.
+    pub cached_bytes: u64,
+    /// Entries currently resident.
+    pub cached_classes: usize,
+    /// The byte budget, if any (`None` = unbounded).
+    pub budget: Option<u64>,
+}
+
+struct Entry<T> {
+    values: Arc<Vec<T>>,
+    bytes: u64,
+    /// LRU stamp: larger = more recently used.
+    stamp: u64,
+}
+
+struct State<T> {
+    entries: Vec<Option<Entry<T>>>,
+    clock: u64,
+    bytes: u64,
+    budget: Option<u64>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<T> State<T> {
+    fn touch(&mut self, k: usize) -> Option<Arc<Vec<T>>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries[k].as_mut().map(|e| {
+            e.stamp = clock;
+            Arc::clone(&e.values)
+        })
+    }
+
+    /// Drop the least-recently-used entry. Returns false when empty.
+    fn evict_one(&mut self) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter_map(|(k, e)| e.as_ref().map(|e| (k, e.stamp)))
+            .min_by_key(|&(_, stamp)| stamp)
+            .map(|(k, _)| k);
+        match victim {
+            Some(k) => {
+                let e = self.entries[k].take().expect("victim is resident");
+                self.bytes -= e.bytes;
+                self.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict until `extra` more bytes fit the budget (no-op when
+    /// unbounded). Returns false if `extra` alone exceeds the budget —
+    /// the caller then passes the value through uncached.
+    fn make_room(&mut self, extra: u64) -> bool {
+        let Some(budget) = self.budget else { return true };
+        if extra > budget {
+            return false;
+        }
+        while self.bytes + extra > budget {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        true
+    }
+
+    fn insert(&mut self, k: usize, values: Arc<Vec<T>>, bytes: u64) {
+        // replacing a resident entry first releases its bytes (decode
+        // guards make this rare, but insert stays correct regardless)
+        if let Some(old) = self.entries[k].take() {
+            self.bytes -= old.bytes;
+        }
+        if !self.make_room(bytes) {
+            return; // pass-through: larger than the whole budget
+        }
+        self.clock += 1;
+        self.bytes += bytes;
+        self.entries[k] = Some(Entry {
+            values,
+            bytes,
+            stamp: self.clock,
+        });
+    }
+}
+
+/// Shared decoded-class cache: per-class decode guards plus one state
+/// lock (see the [module docs](self) for the locking discipline and the
+/// budget invariant). All methods take `&self`.
+pub struct ClassCache<T> {
+    guards: Vec<Mutex<()>>,
+    state: Mutex<State<T>>,
+}
+
+impl<T> ClassCache<T> {
+    /// An unbounded cache with one slot per class.
+    pub fn new(nclasses: usize) -> Self {
+        Self::with_budget(nclasses, None)
+    }
+
+    /// A cache holding at most `budget` bytes of decoded values
+    /// (`None` = unbounded).
+    pub fn with_budget(nclasses: usize, budget: Option<u64>) -> Self {
+        ClassCache {
+            guards: (0..nclasses).map(|_| Mutex::new(())).collect(),
+            state: Mutex::new(State {
+                entries: (0..nclasses).map(|_| None).collect(),
+                clock: 0,
+                bytes: 0,
+                budget,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Number of class slots.
+    pub fn nclasses(&self) -> usize {
+        self.guards.len()
+    }
+
+    /// The byte budget (`None` = unbounded).
+    pub fn budget(&self) -> Option<u64> {
+        self.state.lock().unwrap().budget
+    }
+
+    /// Install a new byte budget, evicting least-recently-used entries
+    /// immediately if the resident set exceeds it.
+    pub fn set_budget(&self, budget: Option<u64>) {
+        let mut s = self.state.lock().unwrap();
+        s.budget = budget;
+        if let Some(b) = budget {
+            while s.bytes > b {
+                if !s.evict_one() {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Bytes currently resident (always `<=` the budget, if one is set).
+    pub fn cached_bytes(&self) -> u64 {
+        self.state.lock().unwrap().bytes
+    }
+
+    /// Number of classes currently resident.
+    pub fn cached_classes(&self) -> usize {
+        self.state.lock().unwrap().entries.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> CacheStats {
+        let s = self.state.lock().unwrap();
+        CacheStats {
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            cached_bytes: s.bytes,
+            cached_classes: s.entries.iter().filter(|e| e.is_some()).count(),
+            budget: s.budget,
+        }
+    }
+
+    /// Evict everything (the `drop_cache` policy). Resident bytes drop
+    /// to zero; values still referenced by callers stay alive through
+    /// their `Arc`s.
+    pub fn clear(&self) {
+        let mut s = self.state.lock().unwrap();
+        while s.evict_one() {}
+    }
+
+    /// The resident value of class `k`, if any (touches LRU recency and
+    /// counts a hit/miss). Panics if `k` is out of range.
+    pub fn get(&self, k: usize) -> Option<Arc<Vec<T>>> {
+        let mut s = self.state.lock().unwrap();
+        let hit = s.touch(k);
+        match hit {
+            Some(v) => {
+                s.hits += 1;
+                Some(v)
+            }
+            None => None,
+        }
+    }
+
+    /// Return class `k`'s decoded values, running `decode` (outside
+    /// every lock except `k`'s decode guard) if they are not resident.
+    /// Concurrent requests for the same class decode once; requests for
+    /// different classes never wait on each other's decode. Under a byte
+    /// budget the result may be handed back without being cached (see
+    /// the module docs). Panics if `k` is out of range.
+    pub fn get_or_decode<E>(
+        &self,
+        k: usize,
+        decode: impl FnOnce() -> std::result::Result<Vec<T>, E>,
+    ) -> std::result::Result<Arc<Vec<T>>, E> {
+        // fast path: resident entry, state lock only
+        {
+            let mut s = self.state.lock().unwrap();
+            if let Some(v) = s.touch(k) {
+                s.hits += 1;
+                return Ok(v);
+            }
+        }
+        // slow path: serialize same-class decodes, then re-check — a
+        // peer may have decoded while we waited on the guard
+        let _guard = self.guards[k].lock().unwrap();
+        {
+            let mut s = self.state.lock().unwrap();
+            if let Some(v) = s.touch(k) {
+                s.hits += 1;
+                return Ok(v);
+            }
+            s.misses += 1;
+        }
+        let values = Arc::new(decode()?);
+        let bytes = (values.len() * std::mem::size_of::<T>()) as u64;
+        self.state.lock().unwrap().insert(k, Arc::clone(&values), bytes);
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decode_ok(v: Vec<f64>) -> impl FnOnce() -> Result<Vec<f64>, ()> {
+        move || Ok(v)
+    }
+
+    #[test]
+    fn hit_miss_and_residency_accounting() {
+        let c = ClassCache::<f64>::new(3);
+        assert_eq!(c.cached_classes(), 0);
+        let v = c.get_or_decode(0, decode_ok(vec![1.0, 2.0])).unwrap();
+        assert_eq!(*v, vec![1.0, 2.0]);
+        assert_eq!(c.cached_bytes(), 16);
+        // second lookup hits without invoking the decoder
+        let v2 = c
+            .get_or_decode(0, || -> Result<Vec<f64>, ()> { panic!("must not decode") })
+            .unwrap();
+        assert_eq!(v2, v);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.cached_classes, 1);
+        assert!(c.get(0).is_some());
+        assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn decode_errors_are_not_cached() {
+        let c = ClassCache::<f64>::new(1);
+        assert!(c.get_or_decode(0, || Err::<Vec<f64>, _>("boom")).is_err());
+        assert_eq!(c.cached_classes(), 0);
+        // a later successful decode fills the slot normally
+        c.get_or_decode(0, decode_ok(vec![3.0])).unwrap();
+        assert_eq!(c.cached_classes(), 1);
+    }
+
+    #[test]
+    fn budget_evicts_least_recently_used_first() {
+        // 3 classes x 2 values x 8 bytes = 16 bytes each; budget fits two
+        let c = ClassCache::<f64>::with_budget(3, Some(32));
+        c.get_or_decode(0, decode_ok(vec![0.0; 2])).unwrap();
+        c.get_or_decode(1, decode_ok(vec![1.0; 2])).unwrap();
+        assert_eq!(c.cached_bytes(), 32);
+        // touch 0 so 1 is the LRU victim
+        c.get(0).unwrap();
+        c.get_or_decode(2, decode_ok(vec![2.0; 2])).unwrap();
+        assert_eq!(c.cached_bytes(), 32);
+        assert!(c.get(0).is_some(), "recently used survives");
+        assert!(c.get(1).is_none(), "LRU victim evicted");
+        assert!(c.get(2).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_values_pass_through_uncached() {
+        let c = ClassCache::<f64>::with_budget(2, Some(8));
+        let v = c.get_or_decode(0, decode_ok(vec![1.0; 4])).unwrap();
+        assert_eq!(v.len(), 4, "caller still gets the value");
+        assert_eq!(c.cached_bytes(), 0, "32 bytes > 8-byte budget: not cached");
+        // each request decodes again (misses, never hits)
+        c.get_or_decode(0, decode_ok(vec![1.0; 4])).unwrap();
+        assert_eq!(c.stats().hits, 0);
+        assert_eq!(c.stats().misses, 2);
+        // a small value still caches
+        c.get_or_decode(1, decode_ok(vec![2.0])).unwrap();
+        assert_eq!(c.cached_bytes(), 8);
+    }
+
+    #[test]
+    fn set_budget_shrinks_immediately_and_clear_empties() {
+        let c = ClassCache::<f64>::new(4);
+        for k in 0..4 {
+            c.get_or_decode(k, decode_ok(vec![k as f64; 2])).unwrap();
+        }
+        assert_eq!(c.cached_bytes(), 64);
+        c.set_budget(Some(40));
+        assert!(c.cached_bytes() <= 40);
+        assert_eq!(c.budget(), Some(40));
+        c.clear();
+        assert_eq!(c.cached_bytes(), 0);
+        assert_eq!(c.cached_classes(), 0);
+        // an evicted Arc handed out earlier would still be alive; the
+        // cache itself restarts from empty
+        c.get_or_decode(0, decode_ok(vec![9.0])).unwrap();
+        assert_eq!(c.cached_classes(), 1);
+    }
+}

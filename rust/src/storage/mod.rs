@@ -15,10 +15,15 @@
 //! container across a §3.6 domain decomposition: one `MGRS` index over
 //! N independent per-slab containers, written in parallel and read
 //! block-by-block (region-of-interest retrieval opens only the blocks
-//! a request intersects).
+//! a request intersects). Readers are shared-concurrency-safe: the
+//! decoded-class cache lives in [`cache`] (a byte-budgeted concurrent
+//! LRU with per-class decode guards) and every retrieval method takes
+//! `&self`, so one reader behind an `Arc` serves many threads with
+//! bit-identical results.
 
 #![warn(missing_docs)]
 
+pub mod cache;
 pub mod container;
 pub mod iosim;
 pub mod mover;
@@ -26,6 +31,7 @@ pub mod reader;
 pub mod shard;
 pub mod tier;
 
+pub use cache::{CacheStats, ClassCache};
 pub use container::{ContainerHeader, ProgressiveReader, ProgressiveWriter, SegmentMeta};
 pub use iosim::ParallelFs;
 pub use mover::{place_classes, Placement};

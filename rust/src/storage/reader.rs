@@ -14,12 +14,25 @@
 //!   offset of every class segment, and serves exact per-segment reads
 //!   on demand. A running [`ContainerReader::bytes_read`] counter makes
 //!   the I/O savings observable (and testable).
-//! * [`LazyReader`] adds the typed decode layer with a **per-class
-//!   cache** of dequantized values: [`LazyReader::retrieve`] fetches and
-//!   decodes only the classes of the requested prefix that are not
-//!   cached yet, so upgrading a retrieval from `k` to `k+1` classes
-//!   costs one segment of I/O and decode — the paper's "transfer at
-//!   lower fidelity, refine later" loop at byte granularity.
+//! * [`LazyReader`] adds the typed decode layer with a shared
+//!   **per-class cache** of dequantized values
+//!   ([`crate::storage::cache::ClassCache`]): [`LazyReader::retrieve`]
+//!   fetches and decodes only the classes of the requested prefix that
+//!   are not cached yet, so upgrading a retrieval from `k` to `k+1`
+//!   classes costs one segment of I/O and decode — the paper's
+//!   "transfer at lower fidelity, refine later" loop at byte
+//!   granularity.
+//!
+//! **Every method takes `&self`**: a reader behind an `Arc` is shared
+//! freely across threads. The source sits behind a mutex and the byte
+//! counter is atomic; decoded classes live in the concurrent cache
+//! (per-class decode guards, optional byte budget — see
+//! [`LazyReader::set_cache_budget`]); recomposition checks a
+//! [`Refactorer`] out of a small pool so concurrent retrievals never
+//! serialize on one workspace. Results are bit-identical to the
+//! single-threaded buffered path for every prefix (asserted by
+//! `rust/tests/reader_equivalence.rs` and hammered concurrently by
+//! `rust/tests/concurrent_readers.rs`).
 //!
 //! Validation happens once, at open: header fields, hierarchy
 //! consistency, and payload accounting against the stream size. Segment
@@ -30,12 +43,15 @@
 use std::fs::File;
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::compress::{decode_stream, dequantize};
-use crate::grid::Tensor;
+use crate::grid::{Hierarchy, Tensor};
 use crate::refactor::{assemble_classes, Refactorer};
+use crate::storage::cache::{CacheStats, ClassCache};
 use crate::storage::container::{var_header_len, ContainerHeader, FIXED_HEADER_LEN};
 use crate::util::Scalar;
 
@@ -47,9 +63,17 @@ pub trait ReadSeek: Read + Seek {}
 
 impl<T: Read + Seek> ReadSeek for T {}
 
+/// Most [`Refactorer`]s a [`LazyReader`] keeps pooled for reuse between
+/// retrievals. Concurrent retrievals beyond the pool size construct
+/// transient engines (correct, just unpooled) so nothing ever waits on
+/// a workspace.
+const MAX_POOLED_ENGINES: usize = 8;
+
 /// Random-access view of a progressive container behind any
 /// `Read + Seek` source: header parsed once, per-segment byte offsets
-/// recorded, segments fetched on demand.
+/// recorded, segments fetched on demand. All methods take `&self` — the
+/// source is guarded by an internal mutex and the byte counter is
+/// atomic, so one reader serves many threads.
 ///
 /// ```
 /// use std::io::Cursor;
@@ -63,7 +87,7 @@ impl<T: Read + Seek> ReadSeek for T {}
 /// let (bytes, _) = writer.write(&field, 1e-3)?;
 /// let total = bytes.len() as u64;
 ///
-/// let mut reader = ContainerReader::open(Cursor::new(bytes))?;
+/// let reader = ContainerReader::open(Cursor::new(bytes))?;
 /// assert_eq!(reader.total_bytes(), total);
 /// // opening fetched the header only
 /// assert_eq!(reader.bytes_read(), reader.header_len() as u64);
@@ -74,12 +98,12 @@ impl<T: Read + Seek> ReadSeek for T {}
 /// # }
 /// ```
 pub struct ContainerReader<R> {
-    src: R,
+    src: Mutex<R>,
     header: ContainerHeader,
     header_len: usize,
     /// Absolute stream offset of every segment payload, coarsest first.
     offsets: Vec<u64>,
-    bytes_read: u64,
+    bytes_read: AtomicU64,
 }
 
 impl<R: Read + Seek> ContainerReader<R> {
@@ -118,11 +142,11 @@ impl<R: Read + Seek> ContainerReader<R> {
             pos += s.bytes;
         }
         Ok(ContainerReader {
-            src,
+            src: Mutex::new(src),
             header,
             header_len,
             offsets,
-            bytes_read: header_len as u64,
+            bytes_read: AtomicU64::new(header_len as u64),
         })
     }
 
@@ -156,24 +180,28 @@ impl<R: Read + Seek> ContainerReader<R> {
     /// Cumulative bytes fetched from the source so far, header included.
     /// After a prefix retrieval this sits far below
     /// [`ContainerReader::total_bytes`] — the observable I/O saving of
-    /// the lazy path.
+    /// the lazy path. The counter is atomic, so concurrent readers
+    /// charge it exactly.
     pub fn bytes_read(&self) -> u64 {
-        self.bytes_read
+        self.bytes_read.load(Ordering::Relaxed)
     }
 
     /// Fetch the entropy-coded payload of class `k`: one seek plus one
-    /// exact read of the segment's recorded byte length.
-    pub fn read_segment(&mut self, k: usize) -> Result<Vec<u8>> {
+    /// exact read of the segment's recorded byte length, under the
+    /// source lock (concurrent fetches of different classes serialize
+    /// on the I/O only, never on decode).
+    pub fn read_segment(&self, k: usize) -> Result<Vec<u8>> {
         ensure!(k < self.nclasses(), "class {k} outside 0..{}", self.nclasses());
         let len = self.header.segments[k].bytes as usize;
-        self.src
-            .seek(SeekFrom::Start(self.offsets[k]))
-            .with_context(|| format!("seeking to class {k}"))?;
         let mut payload = vec![0u8; len];
-        self.src
-            .read_exact(&mut payload)
-            .with_context(|| format!("reading class {k} payload"))?;
-        self.bytes_read += len as u64;
+        {
+            let mut src = self.src.lock().unwrap();
+            src.seek(SeekFrom::Start(self.offsets[k]))
+                .with_context(|| format!("seeking to class {k}"))?;
+            src.read_exact(&mut payload)
+                .with_context(|| format!("reading class {k} payload"))?;
+        }
+        self.bytes_read.fetch_add(len as u64, Ordering::Relaxed);
         Ok(payload)
     }
 }
@@ -190,12 +218,17 @@ impl ContainerReader<BufReader<File>> {
 
 /// Typed lazy retrieval over a [`ContainerReader`]: segments are fetched
 /// and decoded on first use, and the dequantized per-class values are
-/// cached, so retrieving `Classes(k)` and then upgrading to
-/// `Classes(k + 1)` fetches and decodes exactly one additional segment.
+/// cached (shared, optionally byte-budgeted — see
+/// [`crate::storage::cache::ClassCache`]), so retrieving `Classes(k)`
+/// and then upgrading to `Classes(k + 1)` fetches and decodes exactly
+/// one additional segment.
 ///
-/// Reconstructions are bit-identical to the buffered
+/// All methods take `&self`: put the reader in an `Arc` and retrieve
+/// from as many threads as you like — concurrent results are
+/// bit-identical to the serial buffered
 /// [`crate::storage::container::ProgressiveReader`] path for every
-/// prefix length (asserted by `rust/tests/reader_equivalence.rs`).
+/// prefix length (asserted by `rust/tests/reader_equivalence.rs` and
+/// `rust/tests/concurrent_readers.rs`).
 ///
 /// ```
 /// use std::io::Cursor;
@@ -208,7 +241,7 @@ impl ContainerReader<BufReader<File>> {
 /// let mut writer = ProgressiveWriter::<f64>::new(Hierarchy::uniform(field.shape()), Codec::Zlib);
 /// let (bytes, _) = writer.write(&field, 1e-3)?;
 ///
-/// let mut reader = LazyReader::<f64, _>::open(Cursor::new(bytes))?;
+/// let reader = LazyReader::<f64, _>::open(Cursor::new(bytes))?;
 /// let coarse = reader.retrieve(1)?; // fetches + decodes class 0 only
 /// assert_eq!(coarse.shape(), field.shape());
 /// let before = reader.bytes_read();
@@ -220,10 +253,12 @@ impl ContainerReader<BufReader<File>> {
 /// ```
 pub struct LazyReader<T, R> {
     raw: ContainerReader<R>,
-    refactorer: Refactorer<T>,
-    /// Dequantized values of every class fetched so far (`None` = the
-    /// segment's bytes have not been touched).
-    decoded: Vec<Option<Vec<T>>>,
+    hierarchy: Hierarchy,
+    /// Pooled recompose engines: checked out per retrieval so the
+    /// workspaces are reused serially but never shared.
+    engines: Mutex<Vec<Refactorer<T>>>,
+    /// Decoded values of every class fetched so far.
+    cache: ClassCache<T>,
 }
 
 impl<T: Scalar, R: Read + Seek> LazyReader<T, R> {
@@ -240,8 +275,9 @@ impl<T: Scalar, R: Read + Seek> LazyReader<T, R> {
         let n = raw.nclasses();
         Ok(LazyReader {
             raw,
-            refactorer: Refactorer::new(hierarchy),
-            decoded: vec![None; n],
+            hierarchy,
+            engines: Mutex::new(Vec::new()),
+            cache: ClassCache::new(n),
         })
     }
 
@@ -272,49 +308,87 @@ impl<T: Scalar, R: Read + Seek> LazyReader<T, R> {
 
     /// Number of classes whose decoded values are cached.
     pub fn decoded_classes(&self) -> usize {
-        self.decoded.iter().filter(|c| c.is_some()).count()
+        self.cache.cached_classes()
     }
 
-    /// Fetch, decode, and cache every not-yet-materialized class in
-    /// `0..keep`.
-    fn materialize(&mut self, keep: usize) -> Result<()> {
-        for k in 0..keep {
-            if self.decoded[k].is_some() {
-                continue;
-            }
-            let codec = self.header().codec;
-            let quant = self.header().quant.clone();
-            let expect = self.header().segments[k].nvalues as usize;
+    /// Bytes of decoded values currently cached.
+    pub fn cached_bytes(&self) -> u64 {
+        self.cache.cached_bytes()
+    }
+
+    /// The cache's byte budget (`None` = unbounded, the default).
+    pub fn cache_budget(&self) -> Option<u64> {
+        self.cache.budget()
+    }
+
+    /// Bound the decoded-class cache to `budget` bytes (`None` lifts
+    /// the bound): the least-recently-used classes are evicted first,
+    /// the resident total never exceeds the budget, and a class larger
+    /// than the whole budget is decoded per request without residency.
+    /// Purely a memory policy — results are unchanged.
+    pub fn set_cache_budget(&self, budget: Option<u64>) {
+        self.cache.set_budget(budget);
+    }
+
+    /// Hit/miss/eviction counters of the decoded-class cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Evict every cached decoded class (the most aggressive eviction
+    /// policy). Retrievals after this re-fetch and re-decode what they
+    /// need; results are bit-identical.
+    pub fn drop_cache(&self) {
+        self.cache.clear();
+    }
+
+    /// Fetch + decode class `k` through the shared cache (at most one
+    /// decode per class per residency, see [`ClassCache`]).
+    fn class(&self, k: usize) -> Result<Arc<Vec<T>>> {
+        self.cache.get_or_decode(k, || {
             let payload = self.raw.read_segment(k)?;
-            let q = decode_stream(codec, &payload, expect)
+            let expect = self.header().segments[k].nvalues as usize;
+            let q = decode_stream(self.header().codec, &payload, expect)
                 .with_context(|| format!("decoding class {k} segment"))?;
-            self.decoded[k] = Some(dequantize::<T>(&q, &quant));
+            Ok(dequantize::<T>(&q, &self.header().quant))
+        })
+    }
+
+    /// Recompose on a pooled engine: reuse a workspace if one is free,
+    /// build a transient one otherwise — never block on a peer.
+    fn recompose(&self, tensor: &mut Tensor<T>) {
+        let pooled = self.engines.lock().unwrap().pop();
+        let mut engine = pooled.unwrap_or_else(|| Refactorer::new(self.hierarchy.clone()));
+        engine.recompose(tensor);
+        let mut pool = self.engines.lock().unwrap();
+        if pool.len() < MAX_POOLED_ENGINES {
+            pool.push(engine);
         }
-        Ok(())
     }
 
     /// Reconstruct the reduced-fidelity tensor carried by classes
     /// `0..keep`, touching only the payload bytes of classes that are
     /// not cached yet. Bit-identical to the buffered
     /// [`crate::storage::container::ProgressiveReader::retrieve`] for
-    /// the same prefix.
-    pub fn retrieve(&mut self, keep: usize) -> Result<Tensor<T>> {
+    /// the same prefix, from any number of threads.
+    pub fn retrieve(&self, keep: usize) -> Result<Tensor<T>> {
         let n = self.nclasses();
         ensure!(keep >= 1 && keep <= n, "keep must be in 1..={n}, got {keep}");
-        self.materialize(keep)?;
-        let refs: Vec<&[T]> = self.decoded[..keep]
-            .iter()
-            .map(|c| c.as_deref().expect("materialized above"))
-            .collect();
-        let mut tensor = assemble_classes(&refs, self.refactorer.hierarchy());
-        self.refactorer.recompose(&mut tensor);
+        // pin the needed classes as Arc clones first: a concurrent
+        // eviction (budget pressure, drop_cache) cannot pull data out
+        // from under the assembly below
+        let classes: Vec<Arc<Vec<T>>> =
+            (0..keep).map(|k| self.class(k)).collect::<Result<_>>()?;
+        let refs: Vec<&[T]> = classes.iter().map(|c| c.as_slice()).collect();
+        let mut tensor = assemble_classes(&refs, &self.hierarchy);
+        self.recompose(&mut tensor);
         Ok(tensor)
     }
 
     /// Retrieve the smallest class prefix whose recorded L∞ annotation
     /// meets `target_linf` (all classes if none does). Returns the
     /// prefix length alongside the reconstruction.
-    pub fn retrieve_error(&mut self, target_linf: f64) -> Result<(usize, Tensor<T>)> {
+    pub fn retrieve_error(&self, target_linf: f64) -> Result<(usize, Tensor<T>)> {
         ensure!(
             target_linf.is_finite() && target_linf > 0.0,
             "error target must be positive and finite"
@@ -340,7 +414,6 @@ mod tests {
 
     use super::*;
     use crate::compress::Codec;
-    use crate::grid::Hierarchy;
     use crate::storage::container::{ProgressiveReader, ProgressiveWriter};
 
     fn container(n: usize, codec: Codec) -> (Tensor<f64>, Vec<u8>) {
@@ -373,7 +446,7 @@ mod tests {
     #[test]
     fn read_segment_matches_buffered_slices_any_order() {
         let (_, bytes) = container(17, Codec::HuffRle);
-        let mut r = ContainerReader::open(Cursor::new(bytes.clone())).unwrap();
+        let r = ContainerReader::open(Cursor::new(bytes.clone())).unwrap();
         let n = r.nclasses();
         // out-of-order access must still return the exact payload bytes
         for k in (0..n).rev() {
@@ -407,7 +480,7 @@ mod tests {
         for codec in [Codec::Zlib, Codec::HuffRle] {
             let (_, bytes) = container(17, codec);
             let mut buffered = ProgressiveReader::<f64>::open(&bytes).unwrap();
-            let mut lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
+            let lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
             let n = lazy.nclasses();
             for keep in 1..=n {
                 let want = buffered.retrieve(keep).unwrap();
@@ -429,7 +502,7 @@ mod tests {
     #[test]
     fn retrieve_error_and_bounds() {
         let (field, bytes) = container(17, Codec::Zlib);
-        let mut lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
+        let lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
         let n = lazy.nclasses();
         assert!(lazy.retrieve(0).is_err());
         assert!(lazy.retrieve(n + 1).is_err());
@@ -443,5 +516,56 @@ mod tests {
     fn dtype_mismatch_rejected() {
         let (_, bytes) = container(9, Codec::Zlib);
         assert!(LazyReader::<f32, _>::open(Cursor::new(bytes)).is_err());
+    }
+
+    #[test]
+    fn cache_budget_bounds_residency_but_not_results() {
+        let (_, bytes) = container(17, Codec::Zlib);
+        let unbounded = LazyReader::<f64, _>::open(Cursor::new(bytes.clone())).unwrap();
+        let lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
+        let n = lazy.nclasses();
+        // a budget that holds roughly half the decoded classes
+        let full_bytes: u64 = lazy
+            .header()
+            .segments
+            .iter()
+            .map(|s| s.nvalues * T_BYTES)
+            .sum();
+        let budget = full_bytes / 2;
+        lazy.set_cache_budget(Some(budget));
+        assert_eq!(lazy.cache_budget(), Some(budget));
+        for keep in (1..=n).chain((1..=n).rev()) {
+            let got = lazy.retrieve(keep).unwrap();
+            let want = unbounded.retrieve(keep).unwrap();
+            assert_eq!(got.data(), want.data(), "keep={keep}");
+            assert!(
+                lazy.cached_bytes() <= budget,
+                "resident {} exceeds budget {budget}",
+                lazy.cached_bytes()
+            );
+        }
+        let stats = lazy.cache_stats();
+        assert!(stats.evictions > 0, "the budget must have forced evictions");
+        // lifting the budget lets the cache grow again
+        lazy.set_cache_budget(None);
+        lazy.retrieve(n).unwrap();
+        assert_eq!(lazy.decoded_classes(), n);
+    }
+
+    const T_BYTES: u64 = 8;
+
+    #[test]
+    fn drop_cache_evicts_and_rebuilds_identically() {
+        let (_, bytes) = container(17, Codec::HuffRle);
+        let lazy = LazyReader::<f64, _>::open(Cursor::new(bytes)).unwrap();
+        let n = lazy.nclasses();
+        let before = lazy.retrieve(n).unwrap();
+        assert_eq!(lazy.decoded_classes(), n);
+        lazy.drop_cache();
+        assert_eq!(lazy.decoded_classes(), 0);
+        assert_eq!(lazy.cached_bytes(), 0);
+        // the next retrieve re-fetches and re-decodes, bit-identically
+        let after = lazy.retrieve(n).unwrap();
+        assert_eq!(before.data(), after.data());
     }
 }

@@ -50,7 +50,8 @@ use std::fs::File;
 use std::io::{BufReader, Read, Seek, SeekFrom};
 use std::ops::Range;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
@@ -465,20 +466,23 @@ impl<T: Scalar> ShardWriter<T> {
     }
 }
 
-/// A seekable source shared by every block section of one shard, with a
-/// running byte counter: each [`Section`] seeks-and-reads under one
-/// lock, so the per-shard `bytes_read` total stays exact no matter how
-/// many blocks are open or in what order they fetch.
-struct SourceState<R> {
-    src: R,
-    bytes_read: u64,
+/// The pooled seekable handles shared by every block section of one
+/// shard, plus the shard-wide atomic byte counter. Each positioned read
+/// **checks a handle out** of the pool (blocking only if every handle is
+/// in use), seeks and reads on it privately, and returns it — so with N
+/// handles, N blocks fetch their segments concurrently instead of
+/// serializing on one stream, while `bytes_read` stays exact because the
+/// counter is atomic and charged per completed read.
+struct SourcePool<R> {
+    handles: Mutex<Vec<R>>,
+    available: Condvar,
+    bytes_read: AtomicU64,
 }
 
-/// Cloneable handle on the shared source state (an `Arc<Mutex<…>>`):
-/// every clone reads through the same underlying stream and charges the
-/// same byte counter.
+/// Cloneable handle on the shared source pool (an `Arc`): every clone
+/// draws from the same handles and charges the same byte counter.
 pub struct SharedSource<R> {
-    inner: Arc<Mutex<SourceState<R>>>,
+    inner: Arc<SourcePool<R>>,
 }
 
 impl<R> Clone for SharedSource<R> {
@@ -490,34 +494,79 @@ impl<R> Clone for SharedSource<R> {
 }
 
 impl<R: Read + Seek> SharedSource<R> {
+    /// A pool of one handle: the degenerate (fully serialized) case,
+    /// byte-for-byte equivalent to reading the stream directly.
     fn new(src: R) -> Self {
+        Self::new_pooled(vec![src])
+    }
+
+    /// A pool over several independent handles onto the *same* stream
+    /// (e.g. separate `File` opens of one shard). `srcs` must be
+    /// non-empty; equality of the underlying bytes is the caller's
+    /// contract ([`ShardReader::open_pooled`] validates the lengths).
+    fn new_pooled(srcs: Vec<R>) -> Self {
+        assert!(!srcs.is_empty(), "source pool needs at least one handle");
         SharedSource {
-            inner: Arc::new(Mutex::new(SourceState { src, bytes_read: 0 })),
+            inner: Arc::new(SourcePool {
+                handles: Mutex::new(srcs),
+                available: Condvar::new(),
+                bytes_read: AtomicU64::new(0),
+            }),
         }
     }
 
     fn bytes_read(&self) -> u64 {
-        self.inner.lock().unwrap().bytes_read
+        self.inner.bytes_read.load(Ordering::Relaxed)
+    }
+
+    fn pool_size(&self) -> usize {
+        self.inner.handles.lock().unwrap().len()
+    }
+
+    fn checkout(&self) -> R {
+        let mut handles = self.inner.handles.lock().unwrap();
+        loop {
+            if let Some(src) = handles.pop() {
+                return src;
+            }
+            handles = self.inner.available.wait(handles).unwrap();
+        }
+    }
+
+    fn give_back(&self, src: R) {
+        self.inner.handles.lock().unwrap().push(src);
+        self.inner.available.notify_one();
     }
 
     fn read_at(&self, pos: u64, buf: &mut [u8]) -> std::io::Result<usize> {
-        let mut s = self.inner.lock().unwrap();
-        s.src.seek(SeekFrom::Start(pos))?;
-        let n = s.src.read(buf)?;
-        s.bytes_read += n as u64;
+        let mut src = self.checkout();
+        let r = src
+            .seek(SeekFrom::Start(pos))
+            .and_then(|_| src.read(buf));
+        self.give_back(src);
+        let n = r?;
+        self.inner.bytes_read.fetch_add(n as u64, Ordering::Relaxed);
         Ok(n)
     }
 
     fn read_exact_at(&self, pos: u64, buf: &mut [u8]) -> std::io::Result<()> {
-        let mut s = self.inner.lock().unwrap();
-        s.src.seek(SeekFrom::Start(pos))?;
-        s.src.read_exact(buf)?;
-        s.bytes_read += buf.len() as u64;
+        let mut src = self.checkout();
+        let r = src
+            .seek(SeekFrom::Start(pos))
+            .and_then(|_| src.read_exact(buf));
+        self.give_back(src);
+        r?;
+        self.inner
+            .bytes_read
+            .fetch_add(buf.len() as u64, Ordering::Relaxed);
         Ok(())
     }
 
     fn end(&self) -> std::io::Result<u64> {
-        self.inner.lock().unwrap().src.seek(SeekFrom::End(0))
+        let mut src = self.checkout();
+        let r = src.seek(SeekFrom::End(0));
+        self.give_back(src);
+        r
     }
 }
 
@@ -612,7 +661,35 @@ impl<R: Read + Seek> ShardReader<R> {
     /// shard must span the whole stream). Reads exactly the index bytes
     /// plus one seek-to-end — no block payload is touched.
     pub fn open(src: R) -> Result<Self> {
-        let src = SharedSource::new(src);
+        Self::open_shared(SharedSource::new(src))
+    }
+
+    /// Like [`ShardReader::open`], but over a **pool** of independent
+    /// handles onto the same stream (e.g. several `File` opens of one
+    /// shard, or cheap clones of an in-memory cursor): concurrent block
+    /// reads each check out their own handle instead of serializing on
+    /// one, and all charge the shared [`ShardReader::bytes_read`]
+    /// counter. Every handle must see a stream of the same length —
+    /// validated here; byte-for-byte equality is the caller's contract.
+    pub fn open_pooled(mut srcs: Vec<R>) -> Result<Self> {
+        ensure!(!srcs.is_empty(), "pooled shard open needs at least one source handle");
+        let mut end0 = None;
+        for (i, src) in srcs.iter_mut().enumerate() {
+            let end = src
+                .seek(SeekFrom::End(0))
+                .with_context(|| format!("sizing shard source handle {i}"))?;
+            match end0 {
+                None => end0 = Some(end),
+                Some(e) => ensure!(
+                    end == e,
+                    "shard source handle {i} is {end} bytes, handle 0 is {e} — not the same stream"
+                ),
+            }
+        }
+        Self::open_shared(SharedSource::new_pooled(srcs))
+    }
+
+    fn open_shared(src: SharedSource<R>) -> Result<Self> {
         let mut buf = vec![0u8; SHARD_FIXED_LEN];
         src.read_exact_at(0, &mut buf)
             .context("reading shard index prelude")?;
@@ -662,9 +739,19 @@ impl<R: Read + Seek> ShardReader<R> {
     /// Cumulative bytes fetched from the source so far — the index plus
     /// whatever block sections have actually been read. After a
     /// region-of-interest retrieval this sits far below
-    /// [`ShardReader::total_bytes`]: the observable I/O saving.
+    /// [`ShardReader::total_bytes`]: the observable I/O saving. The
+    /// counter is atomic and shared by every pooled handle, so it stays
+    /// exact under concurrent block reads.
     pub fn bytes_read(&self) -> u64 {
         self.src.bytes_read()
+    }
+
+    /// Number of source handles currently in the pool (1 for
+    /// [`ShardReader::open`]; the pool size for
+    /// [`ShardReader::open_pooled`], minus any handle momentarily
+    /// checked out by a concurrent read).
+    pub fn pool_size(&self) -> usize {
+        self.src.pool_size()
     }
 
     /// A `Read + Seek` view of block `k`'s byte range. Creating a
@@ -716,9 +803,22 @@ impl ShardReader<BufReader<File>> {
     /// Open a shard file lazily: index bytes and file size only; block
     /// payloads stay on disk until a block is opened and read.
     pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
-        let file = File::open(path.as_ref())
-            .with_context(|| format!("opening shard {}", path.as_ref().display()))?;
-        Self::open(BufReader::new(file))
+        Self::open_file_pooled(path, 1)
+    }
+
+    /// [`ShardReader::open_pooled`] over `handles` independent opens of
+    /// one shard file (clamped to at least 1): concurrent block reads
+    /// stop serializing on a single descriptor.
+    pub fn open_file_pooled(path: impl AsRef<Path>, handles: usize) -> Result<Self> {
+        let path = path.as_ref();
+        let srcs = (0..handles.max(1))
+            .map(|_| {
+                File::open(path)
+                    .map(BufReader::new)
+                    .with_context(|| format!("opening shard {}", path.display()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::open_pooled(srcs)
     }
 }
 
@@ -774,7 +874,7 @@ mod tests {
         // each block's section carries exactly its MGRC container, and
         // the lazy typed reader decodes it within the error bound
         for k in 0..r.nblocks() {
-            let mut lazy = r.lazy_block::<f64>(k).unwrap();
+            let lazy = r.lazy_block::<f64>(k).unwrap();
             let n = lazy.nclasses();
             let got = lazy.retrieve(n).unwrap();
             let slab = header.slab(k);
@@ -847,12 +947,12 @@ mod tests {
         m[header.blocks[0].offset as usize] ^= 0xff;
         let r = ShardReader::open(IoCursor::new(m)).unwrap();
         assert!(r.open_block(0).is_err());
-        let mut lazy = r.lazy_block::<f64>(1).unwrap();
+        let lazy = r.lazy_block::<f64>(1).unwrap();
         let n = lazy.nclasses();
         let got = lazy.retrieve(n).unwrap();
 
         let clean = ShardReader::open(IoCursor::new(bytes)).unwrap();
-        let mut lazy = clean.lazy_block::<f64>(1).unwrap();
+        let lazy = clean.lazy_block::<f64>(1).unwrap();
         let want = lazy.retrieve(n).unwrap();
         assert_eq!(got.data(), want.data());
     }
@@ -897,6 +997,32 @@ mod tests {
     }
 
     #[test]
+    fn pooled_open_matches_single_handle_and_accounts_bytes() {
+        let (_, bytes, header) = shard2d(Codec::Zlib, 4);
+        let single = ShardReader::open(IoCursor::new(bytes.clone())).unwrap();
+        let handles = (0..3).map(|_| IoCursor::new(bytes.clone())).collect();
+        let pooled = ShardReader::open_pooled(handles).unwrap();
+        assert_eq!(pooled.pool_size(), 3);
+        assert_eq!(pooled.bytes_read(), pooled.header_len() as u64, "index only");
+        for k in 0..header.nblocks() {
+            let want = single.lazy_block::<f64>(k).unwrap().retrieve(2).unwrap();
+            let got = pooled.lazy_block::<f64>(k).unwrap().retrieve(2).unwrap();
+            assert_eq!(got.data(), want.data(), "block {k}");
+        }
+        assert_eq!(pooled.bytes_read(), single.bytes_read(), "exact shared accounting");
+
+        // mismatched handle lengths are rejected up front
+        let mut short = bytes.clone();
+        short.pop();
+        assert!(ShardReader::open_pooled(vec![
+            IoCursor::new(bytes.clone()),
+            IoCursor::new(short),
+        ])
+        .is_err());
+        assert!(ShardReader::<IoCursor<Vec<u8>>>::open_pooled(vec![]).is_err());
+    }
+
+    #[test]
     fn file_roundtrip_is_lazy() {
         let t = field2d();
         let w = ShardWriter::<f64>::new(Codec::Zlib, 2);
@@ -906,7 +1032,7 @@ mod tests {
         assert_eq!(r.bytes_read(), r.header_len() as u64, "index bytes only");
         assert_eq!(r.header().blocks, header.blocks);
         let before = r.bytes_read();
-        let mut lazy = r.lazy_block::<f64>(0).unwrap();
+        let lazy = r.lazy_block::<f64>(0).unwrap();
         lazy.retrieve(1).unwrap();
         // block 0's header + first segment came off disk; block 1 untouched
         assert!(r.bytes_read() > before);

@@ -1,0 +1,252 @@
+//! Adversarial fuzzing of the `mgr serve` wire front, in the style of
+//! `tests/fuzz_shard.rs`: truncated frames, oversized declared lengths,
+//! garbage verbs, and mid-request disconnects. The contract under test:
+//! every malformed input yields a **typed** error (a `PROTOCOL` status
+//! response where framing still permits one) or a contained connection
+//! drop — the daemon must never panic, and it must keep serving
+//! well-formed requests on other (and, where framing is intact, the
+//! same) connections throughout.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use mgr::api::{AnyTensor, Fidelity, Session};
+use mgr::grid::Tensor;
+use mgr::serve::protocol::{
+    decode_response, encode_request, read_frame, status, write_frame, Request, Response,
+    ResponseKind, MAX_RESPONSE_LEN,
+};
+use mgr::serve::{Client, ClientError, ServeConfig, ServeTarget, Server};
+use mgr::util::rng::Rng;
+
+fn smooth(shape: &[usize]) -> AnyTensor {
+    Tensor::<f64>::from_fn(shape, |idx| {
+        idx.iter()
+            .enumerate()
+            .map(|(d, &i)| ((d + 2) as f64 * i as f64 * 0.23).sin())
+            .sum()
+    })
+    .into()
+}
+
+/// A server over a small container plus the serial baseline tensor.
+fn serve_container() -> (Server, AnyTensor) {
+    let s = Session::builder().shape(&[17, 17]).build().unwrap();
+    let r = s.refactor(&smooth(&[17, 17])).unwrap();
+    let want = r.retrieve(Fidelity::All).unwrap();
+    let server = Server::start(
+        ServeTarget::Container(r.open().unwrap()),
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .unwrap();
+    (server, want)
+}
+
+/// The health probe every abuse scenario ends with: a fresh well-formed
+/// client must still get the bit-exact reconstruction.
+fn assert_daemon_serves(server: &Server, want: &AnyTensor) {
+    let mut client = Client::connect(server.addr()).unwrap();
+    let got = client.retrieve(Fidelity::All).unwrap();
+    assert_eq!(&got.tensor, want, "daemon must keep serving after abuse");
+}
+
+/// Poll the server's stats until `pred` holds (the daemon notices a
+/// dropped connection asynchronously).
+fn wait_for(server: &Server, pred: impl Fn(&mgr::serve::ServeStats) -> bool) {
+    for _ in 0..200 {
+        if pred(&server.stats()) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("stats never satisfied the predicate: {:?}", server.stats());
+}
+
+#[test]
+fn truncated_frames_drop_the_connection_only() {
+    let (server, want) = serve_container();
+    // declare 100 bytes, send 3, hang up — a classic mid-request death
+    for sent in [0usize, 1, 3] {
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(&100u32.to_le_bytes()).unwrap();
+        raw.write_all(&vec![0x5a; sent]).unwrap();
+        drop(raw);
+        assert_daemon_serves(&server, &want);
+    }
+    // a partial length prefix alone must not wedge anything either
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    raw.write_all(&[7u8, 0]).unwrap();
+    drop(raw);
+    assert_daemon_serves(&server, &want);
+    wait_for(&server, |s| s.framing_errors >= 4);
+    let stats = server.shutdown();
+    assert!(stats.framing_errors >= 4, "{stats:?}");
+    assert_eq!(stats.errors, 0, "typed-error path never fired: {stats:?}");
+}
+
+#[test]
+fn oversized_declared_length_gets_typed_error_then_close() {
+    let (server, want) = serve_container();
+    for len in [u32::MAX, (64 * 1024) + 1, 1 << 30] {
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(&len.to_le_bytes()).unwrap();
+        // the server answers with a PROTOCOL status before closing —
+        // it must NOT try to allocate or read `len` bytes
+        let body = read_frame(&mut raw, MAX_RESPONSE_LEN).unwrap().unwrap();
+        match decode_response(&body, ResponseKind::Tensor).unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, status::PROTOCOL);
+                assert!(message.contains("cap"), "{message}");
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+        // ...and the connection is closed afterwards
+        let mut probe = [0u8; 1];
+        assert_eq!(raw.read(&mut probe).unwrap_or(0), 0, "connection must be closed");
+        assert_daemon_serves(&server, &want);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn garbage_verbs_get_typed_errors_and_the_connection_keeps_serving() {
+    let (server, want) = serve_container();
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    // a parade of well-framed but undecodable bodies on ONE connection
+    let bodies: Vec<Vec<u8>> = vec![
+        vec![99],                                  // unknown verb
+        vec![0],                                   // verb zero
+        vec![1],                                   // retrieve, missing fidelity
+        vec![1, 9, 0, 0, 0, 0, 0, 0, 0, 0],        // unknown fidelity tag
+        vec![2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0],     // region with zero rank
+        {
+            let mut b = encode_request(&Request::Stats);
+            b.push(0xff); // trailing garbage
+            b
+        },
+    ];
+    for body in &bodies {
+        write_frame(&mut raw, body).unwrap();
+        let resp = read_frame(&mut raw, MAX_RESPONSE_LEN).unwrap().unwrap();
+        match decode_response(&resp, ResponseKind::Tensor).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, status::PROTOCOL, "{body:?}"),
+            other => panic!("expected protocol error for {body:?}, got {other:?}"),
+        }
+    }
+    // the SAME connection still serves a well-formed request afterwards
+    write_frame(&mut raw, &encode_request(&Request::Retrieve(Fidelity::All))).unwrap();
+    let resp = read_frame(&mut raw, MAX_RESPONSE_LEN).unwrap().unwrap();
+    assert!(matches!(
+        decode_response(&resp, ResponseKind::Tensor).unwrap(),
+        Response::Tensor(_)
+    ));
+    drop(raw);
+    assert_daemon_serves(&server, &want);
+    let stats = server.shutdown();
+    assert_eq!(stats.errors, bodies.len() as u64, "{stats:?}");
+    assert!(stats.ok >= 2, "{stats:?}");
+}
+
+#[test]
+fn random_mutations_of_valid_requests_never_kill_the_daemon() {
+    let (server, want) = serve_container();
+    let template = encode_request(&Request::Retrieve(Fidelity::Classes(2)));
+    let mut rng = Rng::new(42);
+    for round in 0..60 {
+        let mut body = template.clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(body.len());
+                body[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                let i = rng.below(body.len());
+                body[i] = rng.below(256) as u8;
+            }
+            _ => {
+                let i = rng.below(body.len());
+                let l = 1 + rng.below(4).min(body.len() - i - 1);
+                body.drain(i..i + l);
+            }
+        }
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        write_frame(&mut raw, &body).unwrap();
+        // whatever came back (a tensor for harmless mutations, a typed
+        // error otherwise) must decode as a valid frame — or the server
+        // legitimately closed on us; both are contained outcomes
+        match read_frame(&mut raw, MAX_RESPONSE_LEN) {
+            Ok(Some(resp)) => {
+                decode_response(&resp, ResponseKind::Tensor).unwrap();
+            }
+            Ok(None) => {}
+            Err(e) => panic!("round {round}: daemon sent garbage: {e}"),
+        }
+        drop(raw);
+    }
+    assert_daemon_serves(&server, &want);
+    server.shutdown();
+}
+
+#[test]
+fn fidelity_and_region_errors_are_typed_not_protocol() {
+    // semantic failures travel as FIDELITY/REGION/USAGE — the fuzz
+    // contract is that only *undecodable* bodies map to PROTOCOL
+    let (server, want) = serve_container();
+    let mut client = Client::connect(server.addr()).unwrap();
+    match client.retrieve(Fidelity::Classes(0)) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::FIDELITY),
+        other => panic!("{other:?}"),
+    }
+    match client.retrieve(Fidelity::ByteBudget(1)) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::FIDELITY),
+        other => panic!("{other:?}"),
+    }
+    match client.retrieve_region(&[0..4], Fidelity::All) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::USAGE),
+        other => panic!("{other:?}"),
+    }
+    // the client survives its own rejected requests
+    assert_eq!(client.retrieve(Fidelity::All).unwrap().tensor, want);
+    drop(client);
+    let stats = server.shutdown();
+    assert_eq!(stats.errors, 3);
+    assert_eq!(stats.framing_errors, 0);
+}
+
+#[test]
+fn stats_and_shutdown_survive_interleaved_abuse() {
+    let (server, want) = serve_container();
+    // abuse and legitimate traffic interleaved
+    for i in 0..5 {
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        raw.write_all(&(200u32 + i).to_le_bytes()).unwrap();
+        drop(raw); // truncated frame
+        assert_daemon_serves(&server, &want);
+    }
+    let mut client = Client::connect(server.addr()).unwrap();
+    let json = client.stats().unwrap();
+    assert!(json.contains("\"requests\":"), "{json}");
+    client.shutdown_server().unwrap();
+    let stats = server.wait();
+    assert!(stats.ok >= 6, "{stats:?}"); // 5 probes + stats (+ shutdown ack)
+}
+
+#[test]
+#[ignore = "long-loop stress variant; CI runs it in the dedicated --ignored job"]
+fn stress_random_frame_garbage() {
+    let (server, want) = serve_container();
+    let mut rng = Rng::new(7);
+    for _ in 0..400 {
+        let len = rng.below(48);
+        let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let mut raw = TcpStream::connect(server.addr()).unwrap();
+        // raw bytes straight onto the wire: sometimes a broken length
+        // prefix, sometimes a broken body, sometimes nothing
+        let _ = raw.write_all(&garbage);
+        drop(raw);
+    }
+    assert_daemon_serves(&server, &want);
+    server.shutdown();
+}

@@ -28,7 +28,7 @@ fn exercise(buf: &[u8]) {
     let _ = shard_var_len(buf);
     if let Ok(r) = ShardReader::open(Cursor::new(buf.to_vec())) {
         for k in 0..r.nblocks() {
-            if let Ok(mut lazy) = r.lazy_block::<f64>(k) {
+            if let Ok(lazy) = r.lazy_block::<f64>(k) {
                 for keep in 1..=lazy.nclasses() {
                     let _ = lazy.retrieve(keep);
                 }
@@ -144,10 +144,10 @@ fn corrupt_block_is_isolated_from_the_others() {
         let r = ShardReader::open(Cursor::new(m)).unwrap();
         assert!(r.open_block(victim).is_err(), "victim {victim} must fail");
         for k in (0..header.nblocks()).filter(|&k| k != victim) {
-            let mut lazy = r.lazy_block::<f64>(k).unwrap();
+            let lazy = r.lazy_block::<f64>(k).unwrap();
             let n = lazy.nclasses();
             let got = lazy.retrieve(n).unwrap();
-            let mut lazy = clean.lazy_block::<f64>(k).unwrap();
+            let lazy = clean.lazy_block::<f64>(k).unwrap();
             let want = lazy.retrieve(n).unwrap();
             assert_eq!(got.data(), want.data(), "victim {victim}, block {k}");
         }
