@@ -8,17 +8,19 @@
 #   make bench-reader     lazy vs buffered reader report -> BENCH_reader.json
 #   make bench-shard      sharded refactor + ROI report -> BENCH_shard.json
 #   make bench-serve      daemon under 1->64 concurrent clients -> BENCH_serve.json
+#   make bench-reencode   truncate/recode/re-tile throughput -> BENCH_reencode.json
 #   make test-concurrency concurrency battery + the #[ignore]d stress variants
 #   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
 #   make shard-demo       CLI shard round trip: refactor --blocks -> .mgrs -> --region
 #   make serve-demo       CLI daemon round trip: serve -> --stats -> --shutdown
+#   make reencode-demo    CLI rewrite loop: truncate -> recode -> re-tile a .mgrs
 #   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
 #   make check-docs  dead-link check over the markdown docs book
 
 .PHONY: artifacts test test-rust test-python bench bench-container bench-reader \
-        bench-shard bench-serve test-concurrency serve-demo container-demo \
-        shard-demo lint doc check-docs
+        bench-shard bench-serve bench-reencode test-concurrency serve-demo \
+        container-demo shard-demo reencode-demo lint doc check-docs
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -47,6 +49,9 @@ bench-shard:
 bench-serve:
 	cargo bench --bench serve_concurrency
 
+bench-reencode:
+	cargo bench --bench reencode
+
 # The concurrency battery on its own (CI runs this as a dedicated matrix
 # entry, then the #[ignore]d long-loop stress variants in release mode).
 test-concurrency:
@@ -72,6 +77,18 @@ shard-demo:
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgrs --keep 2
 	cargo run --release -- retrieve --in /tmp/mgr-demo.mgrs --region 10..15,0..33,0..33
 	rm -f /tmp/mgr-demo.mgrs
+
+# Exercise the reencode verb end to end: write an N-D block grid, then
+# rewrite it three ways — a truncated-fidelity prefix (decodes nothing),
+# a codec conversion (entropy stage only), a re-tiling — and retrieve a
+# region from the final artifact to show it still serves.
+reencode-demo:
+	cargo run --release -- refactor --shape 33x33x33 --eb 1e-4 --blocks 2,2,1 --out /tmp/mgr-re-demo.mgrs
+	cargo run --release -- reencode --in /tmp/mgr-re-demo.mgrs --out /tmp/mgr-re-keep2.mgrs --keep 2
+	cargo run --release -- reencode --in /tmp/mgr-re-demo.mgrs --out /tmp/mgr-re-huff.mgrs --codec huff-rle
+	cargo run --release -- reencode --in /tmp/mgr-re-huff.mgrs --out /tmp/mgr-re-tiled.mgrs --blocks 4,1,1
+	cargo run --release -- retrieve --in /tmp/mgr-re-tiled.mgrs --region 10..15,0..33,0..33
+	rm -f /tmp/mgr-re-demo.mgrs /tmp/mgr-re-keep2.mgrs /tmp/mgr-re-huff.mgrs /tmp/mgr-re-tiled.mgrs
 
 # Exercise the serving front end to end: refactor a container, start the
 # daemon on it, query telemetry over the wire, then stop it over the wire.

@@ -1,0 +1,122 @@
+//! Reencode throughput: the three structurally-cheap artifact rewrites
+//! (fidelity truncation, codec conversion, re-tiling) on the standard
+//! Gray-Scott 33³ fixture, with the fraction of payload bytes each one
+//! actually decoded. Doubles as the acceptance check that truncation is
+//! pure byte surgery: its decoded fraction must be exactly zero.
+//! Writes `BENCH_reencode.json` (see `docs/performance.md`).
+
+use mgr::api::reencode::{reencode, ReencodeSpec};
+use mgr::api::Fidelity;
+use mgr::compress::Codec;
+use mgr::grid::Hierarchy;
+use mgr::sim::GrayScott;
+use mgr::storage::{ProgressiveWriter, ShardWriter};
+use mgr::util::bench::{bench_auto, report, BenchReport, Measurement, ReportRow};
+use mgr::util::stats::value_range;
+
+fn row(
+    shape: &[usize],
+    variant: &str,
+    m: &Measurement,
+    in_bytes: usize,
+    out_bytes: u64,
+) -> ReportRow {
+    ReportRow {
+        kernel: "reencode".into(),
+        variant: variant.into(),
+        dtype: "f64".into(),
+        shape: shape.to_vec(),
+        axis: None,
+        median_s: m.median_s,
+        mad_rel: m.mad_rel,
+        gbps: m.gbps(in_bytes),
+        speedup: None,
+        bytes: Some(out_bytes),
+    }
+}
+
+fn main() {
+    println!("== reencode throughput: truncate / recode / re-tile ==");
+    let n = 33;
+    let mut sim = GrayScott::new(n, 5);
+    sim.step(150);
+    let raw = sim.v_field();
+    let eb = 1e-3 * value_range(raw.data());
+    let shape = raw.shape().to_vec();
+
+    let h = Hierarchy::uniform(&shape);
+    let (container, _) = ProgressiveWriter::<f64>::new(h, Codec::Zlib)
+        .write(&raw, eb)
+        .unwrap();
+    let (shard, _) = ShardWriter::<f64>::new(Codec::Zlib, 0)
+        .write_grid(&raw, &[2, 2, 2], eb)
+        .unwrap();
+    println!(
+        "fixture: {shape:?} f64, container {} B, [2,2,2] shard {} B",
+        container.len(),
+        shard.len()
+    );
+
+    let mut rep = BenchReport::new("reencode");
+    let run = |variant: &str, input: &[u8], spec: &ReencodeSpec, rep: &mut BenchReport| {
+        let m = bench_auto(variant, 0.3, || {
+            std::hint::black_box(reencode(input, spec).unwrap());
+        });
+        report(&m, Some(input.len()));
+        let (out, r) = reencode(input, spec).unwrap();
+        println!(
+            "    {} -> {} B, {}/{} blocks copied, decoded fraction {:.1}%",
+            r.bytes_in,
+            r.bytes_out,
+            r.blocks_copied,
+            r.blocks_in,
+            100.0 * r.bytes_decoded as f64 / r.bytes_in as f64
+        );
+        rep.push(row(&shape, variant, &m, input.len(), out.len() as u64));
+        r
+    };
+
+    // -- fidelity truncation: per-class byte-level copy, nothing decoded
+    // (the acceptance property) --
+    let keep2 = ReencodeSpec {
+        fidelity: Fidelity::Classes(2),
+        ..Default::default()
+    };
+    let r = run("truncate-keep2-container", &container, &keep2, &mut rep);
+    assert_eq!(
+        r.bytes_decoded, 0,
+        "container truncation must decode nothing — got {} bytes",
+        r.bytes_decoded
+    );
+    let r = run("truncate-keep2-shard", &shard, &keep2, &mut rep);
+    assert_eq!(
+        r.bytes_decoded, 0,
+        "shard truncation must decode nothing — got {} bytes",
+        r.bytes_decoded
+    );
+    assert_eq!(r.blocks_copied, r.blocks_in, "every block byte-copied");
+
+    // -- codec conversion: entropy stage only, every kept class decoded
+    // once, never dequantized --
+    let recode = ReencodeSpec {
+        codec: Some(Codec::HuffRle),
+        ..Default::default()
+    };
+    let r = run("recode-zlib-to-huff-rle", &shard, &recode, &mut rep);
+    assert!(r.bytes_decoded > 0);
+
+    // -- re-tiling: [2,2,2] -> [2,2,1] shares no extents, so every
+    // output block is cut fresh from decoded neighbours --
+    let retile = ReencodeSpec {
+        blocks_per_axis: Some(vec![2, 2, 1]),
+        ..Default::default()
+    };
+    let r = run("retile-222-to-221", &shard, &retile, &mut rep);
+    assert_eq!(r.blocks_out, 4);
+    assert!(r.bytes_decoded > 0);
+
+    match rep.write("BENCH_reencode.json") {
+        Ok(()) => println!("wrote BENCH_reencode.json ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write BENCH_reencode.json: {e}"),
+    }
+}

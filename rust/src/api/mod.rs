@@ -18,8 +18,9 @@
 //! | store | [`Session::store`] / [`Session::store_file`] | bytes written |
 //! | place | [`Session::plan`] / [`Session::plan_header`] | [`Placement`](crate::storage::Placement) |
 //! | open (lazy) | [`Session::open`] / [`Session::open_file`] | [`OpenContainer`] → [`Retrieved`] |
-//! | create, sharded | [`Session::refactor_sharded`] (axis: [`Session::refactor_sharded_on`]) | [`Sharded`] |
+//! | create, sharded | [`Session::refactor_sharded`] (grid: [`Session::refactor_sharded_grid`]) | [`Sharded`] |
 //! | retrieve a region | [`Sharded::retrieve_region`] (opens only intersecting blocks) | [`AnyTensor`] |
+//! | reencode | [`Session::reencode`] / [`reencode::reencode`] with a [`ReencodeSpec`] | bytes + [`ReencodeReport`] |
 //!
 //! [`Fidelity`] carries the three retrieval knobs: a class prefix
 //! ([`Fidelity::Classes`]), an absolute error target resolved against the
@@ -126,12 +127,14 @@
 
 mod error;
 mod fidelity;
+pub mod reencode;
 mod session;
 mod sharded;
 mod tensor;
 
 pub use error::{Error, Result};
 pub use fidelity::Fidelity;
+pub use reencode::{ReencodeReport, ReencodeSpec};
 pub use session::{OpenContainer, Refactored, Retrieved, Session, SessionBuilder};
 pub use sharded::Sharded;
 pub use tensor::{AnyTensor, Dtype};

@@ -1,0 +1,675 @@
+//! `mgr reencode`: rewrite a refactored artifact (`.mgr` / `.mgrs`)
+//! into a new fidelity, codec, or block layout **without** a full
+//! decode → re-refactor round trip.
+//!
+//! The progressive formats make three conversions structurally cheap,
+//! and this module exploits each:
+//!
+//! * **Fidelity truncation** (`--keep K` / `--error E` / `--bytes B`)
+//!   is a pure byte-level copy: the header's class count is patched and
+//!   the surviving segment-table entries and payloads are copied
+//!   verbatim. Zero entropy decoding, zero dequantization — the
+//!   process-wide [`decode_stream_count`] /
+//!   [`dequantize_count`] counters let tests *prove* it.
+//! * **Codec conversion** (`--codec`) re-runs the entropy stage only:
+//!   each kept class payload is entropy-decoded to its quantized
+//!   integers and re-encoded with the new codec. The measured
+//!   `linf`/`rmse` annotations and value counts carry over unchanged —
+//!   no dequantization, no reconstruction.
+//! * **Re-tiling** (`--blocks`, shards) decodes only the old blocks
+//!   that intersect a changed extent; a new block whose extent exactly
+//!   matches an old block's (same grid requested, full fidelity, same
+//!   codec) is copied byte-for-byte.
+//!
+//! [`decode_stream_count`]: crate::compress::pipeline::decode_stream_count
+//! [`dequantize_count`]: crate::compress::quantize::dequantize_count
+
+use std::collections::BTreeSet;
+use std::ops::Range;
+use std::path::Path;
+
+use crate::api::error::{Error, Result};
+use crate::api::Fidelity;
+use crate::compress::pipeline::{decode_stream, encode_stream};
+use crate::compress::Codec;
+use crate::coordinator::partition::{assemble_blocks, extract_block, partition_grid, BlockExtent};
+use crate::coordinator::run_pooled;
+use crate::grid::{max_levels, Hierarchy};
+use crate::storage::container::{
+    ContainerHeader, ProgressiveReader, ProgressiveWriter, FIXED_HEADER_LEN,
+};
+use crate::storage::shard::{is_shard, BlockMeta, ShardHeader, ShardWriter, MAX_BLOCKS};
+use crate::util::Scalar;
+
+/// What to convert an artifact into. The default spec
+/// (`ReencodeSpec::default()`) is the identity conversion: full
+/// fidelity, same codec, same layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReencodeSpec {
+    /// Fidelity to keep. Anything below [`Fidelity::All`] truncates the
+    /// artifact to a class prefix (resolved per block for shards).
+    pub fidelity: Fidelity,
+    /// Entropy codec of the output; `None` keeps each container's
+    /// current codec.
+    pub codec: Option<Codec>,
+    /// New blocks-per-axis grid. For a `.mgrs` shard this re-tiles the
+    /// domain; for a single `.mgr` container it produces a shard.
+    /// `None` keeps the current layout.
+    pub blocks_per_axis: Option<Vec<usize>>,
+}
+
+impl Default for ReencodeSpec {
+    fn default() -> Self {
+        ReencodeSpec {
+            fidelity: Fidelity::All,
+            codec: None,
+            blocks_per_axis: None,
+        }
+    }
+}
+
+/// What a reencode actually did — enough for a caller (or a test) to
+/// audit that the cheap paths were taken.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReencodeReport {
+    /// Input artifact size.
+    pub bytes_in: u64,
+    /// Output artifact size.
+    pub bytes_out: u64,
+    /// Blocks in the input (1 for a `.mgr` container).
+    pub blocks_in: usize,
+    /// Blocks in the output (1 for a `.mgr` container).
+    pub blocks_out: usize,
+    /// Output blocks produced by pure byte copy (incl. truncated-prefix
+    /// copies) — no entropy decoding touched them.
+    pub blocks_copied: usize,
+    /// Compressed payload bytes that were entropy-decoded. `0` for a
+    /// pure fidelity truncation.
+    pub bytes_decoded: u64,
+}
+
+/// Reencode an in-memory artifact (dispatching on its magic: `MGRS`
+/// shard vs `MGRC` container). Returns the new artifact and a report.
+pub fn reencode(bytes: &[u8], spec: &ReencodeSpec) -> Result<(Vec<u8>, ReencodeReport)> {
+    reencode_with_workers(bytes, spec, 1)
+}
+
+/// [`reencode`] with up to `workers` blocks re-encoded concurrently
+/// (only re-tiling has block-level parallelism to exploit).
+pub fn reencode_with_workers(
+    bytes: &[u8],
+    spec: &ReencodeSpec,
+    workers: usize,
+) -> Result<(Vec<u8>, ReencodeReport)> {
+    if is_shard(bytes) {
+        reencode_shard(bytes, spec, workers)
+    } else {
+        reencode_container(bytes, spec, workers)
+    }
+}
+
+/// [`reencode`] from one file to another.
+pub fn reencode_file(
+    src: impl AsRef<Path>,
+    dst: impl AsRef<Path>,
+    spec: &ReencodeSpec,
+    workers: usize,
+) -> Result<ReencodeReport> {
+    let bytes = std::fs::read(src.as_ref())?;
+    let (out, report) = reencode_with_workers(&bytes, spec, workers)?;
+    std::fs::write(dst.as_ref(), out)?;
+    Ok(report)
+}
+
+/// Resolve a fidelity request to a class-prefix length against one
+/// container's header (mirrors retrieval-side resolution).
+fn resolve_keep(header: &ContainerHeader, fidelity: Fidelity) -> Result<usize> {
+    match fidelity {
+        Fidelity::All => Ok(header.nclasses()),
+        Fidelity::Classes(k) => {
+            if k >= 1 && k <= header.nclasses() {
+                Ok(k)
+            } else {
+                Err(Error::Fidelity(format!(
+                    "class prefix {k} outside 1..={}",
+                    header.nclasses()
+                )))
+            }
+        }
+        Fidelity::ErrorBound(e) => {
+            if e.is_finite() && e > 0.0 {
+                Ok(header.select_keep(e))
+            } else {
+                Err(Error::Usage(format!(
+                    "error target must be positive and finite, got {e}"
+                )))
+            }
+        }
+        Fidelity::ByteBudget(b) => header.select_keep_bytes(b).ok_or_else(|| {
+            Error::Fidelity(format!(
+                "byte budget {b} is smaller than the coarsest class ({} bytes)",
+                header.segments[0].bytes
+            ))
+        }),
+    }
+}
+
+/// Truncate a container to its first `keep` classes by pure byte copy:
+/// the fixed header + shape (with the class count patched), the first
+/// `keep` segment-table entries verbatim, the first `keep` payloads
+/// verbatim. Never decodes anything.
+fn truncate_container(
+    bytes: &[u8],
+    header: &ContainerHeader,
+    header_len: usize,
+    keep: usize,
+) -> Vec<u8> {
+    let table_end = FIXED_HEADER_LEN + 8 * header.shape.len() + 32 * keep;
+    let payload = header.prefix_bytes(keep) as usize;
+    let mut out = Vec::with_capacity(table_end + payload);
+    out.extend_from_slice(&bytes[..table_end]);
+    out[10] = keep as u8; // nclasses
+    out.extend_from_slice(&bytes[header_len..header_len + payload]);
+    out
+}
+
+/// Re-encode the first `keep` classes with a new entropy codec: decode
+/// each payload to its quantized integers, encode with `codec`. Error
+/// annotations and value counts are invariant under the entropy stage
+/// and carry over verbatim. Returns the new container and the payload
+/// bytes that were entropy-decoded.
+fn recode_container(
+    bytes: &[u8],
+    header: &ContainerHeader,
+    header_len: usize,
+    keep: usize,
+    codec: Codec,
+) -> Result<(Vec<u8>, u64)> {
+    let mut out_header = header.clone();
+    out_header.segments.truncate(keep);
+    out_header.codec = codec;
+
+    let mut payloads = Vec::with_capacity(keep);
+    let mut decoded = 0u64;
+    let mut pos = header_len;
+    for s in &header.segments[..keep] {
+        let end = pos + s.bytes as usize;
+        let q = decode_stream(header.codec, &bytes[pos..end], s.nvalues as usize)
+            .map_err(Error::Compress)?;
+        decoded += s.bytes;
+        payloads.push(encode_stream(codec, &q).map_err(Error::Compress)?);
+        pos = end;
+    }
+    for (s, p) in out_header.segments.iter_mut().zip(&payloads) {
+        s.bytes = p.len() as u64;
+    }
+    let mut out = out_header.to_bytes();
+    for p in &payloads {
+        out.extend_from_slice(p);
+    }
+    Ok((out, decoded))
+}
+
+/// Reencode a single `.mgr` container.
+fn reencode_container(
+    bytes: &[u8],
+    spec: &ReencodeSpec,
+    workers: usize,
+) -> Result<(Vec<u8>, ReencodeReport)> {
+    let (header, header_len) = ContainerHeader::parse(bytes).map_err(Error::Container)?;
+    if let Some(grid) = &spec.blocks_per_axis {
+        return match header.dtype_bytes {
+            4 => container_to_shard::<f32>(bytes, &header, grid, spec, workers),
+            _ => container_to_shard::<f64>(bytes, &header, grid, spec, workers),
+        };
+    }
+    let keep = resolve_keep(&header, spec.fidelity)?;
+    let (out, copied, decoded) = match spec.codec {
+        Some(c) if c != header.codec => {
+            let (out, decoded) = recode_container(bytes, &header, header_len, keep, c)?;
+            (out, 0, decoded)
+        }
+        _ => (truncate_container(bytes, &header, header_len, keep), 1, 0),
+    };
+    let report = ReencodeReport {
+        bytes_in: bytes.len() as u64,
+        bytes_out: out.len() as u64,
+        blocks_in: 1,
+        blocks_out: 1,
+        blocks_copied: copied,
+        bytes_decoded: decoded,
+    };
+    Ok((out, report))
+}
+
+/// Layout change for a single container: decode the selected prefix
+/// once, then shard it (the one conversion that cannot avoid a full
+/// decode — the input has no block structure to reuse).
+fn container_to_shard<T: Scalar>(
+    bytes: &[u8],
+    header: &ContainerHeader,
+    grid: &[usize],
+    spec: &ReencodeSpec,
+    workers: usize,
+) -> Result<(Vec<u8>, ReencodeReport)> {
+    partition_grid(&header.shape, grid).map_err(|e| Error::Usage(e.to_string()))?;
+    let keep = resolve_keep(header, spec.fidelity)?;
+    let mut r = ProgressiveReader::<T>::open(bytes).map_err(Error::Container)?;
+    let t = r.retrieve(keep).map_err(Error::Compress)?;
+    let codec = spec.codec.unwrap_or(header.codec);
+    let w = ShardWriter::<T>::new(codec, workers).with_nlevels(header.nlevels);
+    let (out, sh) = w
+        .write_grid(&t, grid, header.quant.error_bound)
+        .map_err(Error::Compress)?;
+    let report = ReencodeReport {
+        bytes_in: bytes.len() as u64,
+        bytes_out: out.len() as u64,
+        blocks_in: 1,
+        blocks_out: sh.nblocks(),
+        blocks_copied: 0,
+        bytes_decoded: header.prefix_bytes(keep),
+    };
+    Ok((out, report))
+}
+
+fn block_slice<'a>(bytes: &'a [u8], b: &BlockMeta) -> &'a [u8] {
+    &bytes[b.offset as usize..(b.offset + b.bytes) as usize]
+}
+
+/// Serialize a shard from extents + finished block payloads (offsets
+/// recomputed for the v2 index `to_bytes` writes — a v1 input upgrades
+/// here).
+fn build_shard(
+    dtype_bytes: u8,
+    shape: &[usize],
+    grid: &[usize],
+    extents: impl Iterator<Item = (Vec<usize>, Vec<usize>)>,
+    payloads: &[Vec<u8>],
+) -> Vec<u8> {
+    let ndim = shape.len();
+    let header_len =
+        crate::storage::shard::SHARD_FIXED_LEN + 16 * ndim + (16 * ndim + 16) * payloads.len();
+    let mut offset = header_len as u64;
+    let blocks = extents
+        .zip(payloads)
+        .map(|((start, len), p)| {
+            let m = BlockMeta {
+                start,
+                len,
+                offset,
+                bytes: p.len() as u64,
+            };
+            offset += p.len() as u64;
+            m
+        })
+        .collect();
+    let header = ShardHeader {
+        dtype_bytes,
+        shape: shape.to_vec(),
+        grid: grid.to_vec(),
+        blocks,
+    };
+    let mut out = header.to_bytes();
+    debug_assert_eq!(out.len(), header_len);
+    for p in payloads {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Reencode a `.mgrs` shard: per-block fidelity/codec conversion when
+/// the grid stays, full re-tiling when it changes.
+fn reencode_shard(
+    bytes: &[u8],
+    spec: &ReencodeSpec,
+    workers: usize,
+) -> Result<(Vec<u8>, ReencodeReport)> {
+    let (sh, _) = ShardHeader::parse(bytes).map_err(Error::Container)?;
+    match &spec.blocks_per_axis {
+        Some(grid) if *grid != sh.grid => match sh.dtype_bytes {
+            4 => retile_shard::<f32>(bytes, &sh, grid, spec, workers),
+            _ => retile_shard::<f64>(bytes, &sh, grid, spec, workers),
+        },
+        _ => reencode_shard_blocks(bytes, &sh, spec),
+    }
+}
+
+/// Same-layout shard conversion: every block is independently
+/// truncated (byte copy) or codec-recoded; the index is rebuilt with
+/// the new offsets.
+fn reencode_shard_blocks(
+    bytes: &[u8],
+    sh: &ShardHeader,
+    spec: &ReencodeSpec,
+) -> Result<(Vec<u8>, ReencodeReport)> {
+    let mut payloads = Vec::with_capacity(sh.nblocks());
+    let mut copied = 0usize;
+    let mut decoded = 0u64;
+    for (k, b) in sh.blocks.iter().enumerate() {
+        let slice = block_slice(bytes, b);
+        let (bh, hlen) = ContainerHeader::parse(slice)
+            .map_err(|e| Error::Container(e.context(format!("shard block {k}"))))?;
+        let keep = resolve_keep(&bh, spec.fidelity)?;
+        match spec.codec {
+            Some(c) if c != bh.codec => {
+                let (p, d) = recode_container(slice, &bh, hlen, keep, c)?;
+                decoded += d;
+                payloads.push(p);
+            }
+            _ => {
+                payloads.push(truncate_container(slice, &bh, hlen, keep));
+                copied += 1;
+            }
+        }
+    }
+    let out = build_shard(
+        sh.dtype_bytes,
+        &sh.shape,
+        &sh.grid,
+        sh.blocks.iter().map(|b| (b.start.clone(), b.len.clone())),
+        &payloads,
+    );
+    let report = ReencodeReport {
+        bytes_in: bytes.len() as u64,
+        bytes_out: out.len() as u64,
+        blocks_in: sh.nblocks(),
+        blocks_out: payloads.len(),
+        blocks_copied: copied,
+        bytes_decoded: decoded,
+    };
+    Ok((out, report))
+}
+
+fn extent_roi(ext: &BlockExtent) -> Vec<Range<usize>> {
+    ext.start
+        .iter()
+        .zip(&ext.len)
+        .map(|(&s, &l)| s..s + l)
+        .collect()
+}
+
+/// Re-tile a shard onto a new block grid. Old blocks are decoded only
+/// where the tiling actually changed: a new block whose extent exactly
+/// matches an old block's (full fidelity, codec unchanged) is copied
+/// byte-for-byte; every other new block is cut from an assembly of
+/// just the old blocks it intersects and re-refactored with the same
+/// error bound / level cap the input carries.
+fn retile_shard<T: Scalar>(
+    bytes: &[u8],
+    sh: &ShardHeader,
+    grid: &[usize],
+    spec: &ReencodeSpec,
+    workers: usize,
+) -> Result<(Vec<u8>, ReencodeReport)> {
+    let new_extents = partition_grid(&sh.shape, grid).map_err(|e| Error::Usage(e.to_string()))?;
+    if new_extents.len() > MAX_BLOCKS {
+        return Err(Error::Usage(format!(
+            "grid {grid:?} declares {} blocks, the index caps at {MAX_BLOCKS}",
+            new_extents.len()
+        )));
+    }
+    // eb / nlevels / default codec come from the input's first block —
+    // write_grid gives every block the same parameters, so block 0 is
+    // representative of a well-formed shard
+    let (h0, _) = ContainerHeader::parse(block_slice(bytes, &sh.blocks[0]))
+        .map_err(|e| Error::Container(e.context("shard block 0")))?;
+    let eb = h0.quant.error_bound;
+    let codec = spec.codec.unwrap_or(h0.codec);
+
+    // which new blocks can be byte-copied from an identical old extent
+    let copy_ok = matches!(spec.fidelity, Fidelity::All);
+    let source_of = |ext: &BlockExtent| -> Option<usize> {
+        if !copy_ok {
+            return None;
+        }
+        let k = sh
+            .blocks
+            .iter()
+            .position(|b| b.start == ext.start && b.len == ext.len)?;
+        let (bh, _) = ContainerHeader::parse_prefix(block_slice(bytes, &sh.blocks[k])).ok()?;
+        (bh.codec == codec).then_some(k)
+    };
+    let sources: Vec<Option<usize>> = new_extents.iter().map(&source_of).collect();
+
+    // decode exactly the old blocks that intersect a changed extent and
+    // assemble them in index order — later-block-wins on shared planes,
+    // matching what a full retrieval would assemble
+    let mut needed: BTreeSet<usize> = BTreeSet::new();
+    for (ext, src) in new_extents.iter().zip(&sources) {
+        if src.is_none() {
+            needed.extend(sh.blocks_intersecting(&extent_roi(ext)));
+        }
+    }
+    let mut bytes_decoded = 0u64;
+    let assembled = if needed.is_empty() {
+        None
+    } else {
+        let mut parts = Vec::with_capacity(needed.len());
+        for &k in &needed {
+            let slice = block_slice(bytes, &sh.blocks[k]);
+            let (bh, _) = ContainerHeader::parse(slice)
+                .map_err(|e| Error::Container(e.context(format!("shard block {k}"))))?;
+            let keep = resolve_keep(&bh, spec.fidelity)?;
+            let mut r = ProgressiveReader::<T>::open(slice).map_err(Error::Container)?;
+            let t = r.retrieve(keep).map_err(Error::Compress)?;
+            bytes_decoded += bh.prefix_bytes(keep);
+            parts.push((sh.extent(k), t));
+        }
+        Some(assemble_blocks(&sh.shape, &parts))
+    };
+
+    // same level-cap rule as ShardWriter::write_grid under with_nlevels
+    let block_max = max_levels(&new_extents[0].len).ok_or_else(|| {
+        Error::Usage(format!(
+            "block shape {:?} is not refactorable",
+            new_extents[0].len
+        ))
+    })?;
+    let levels = Some(h0.nlevels.clamp(1, block_max));
+
+    let items: Vec<(BlockExtent, Option<usize>)> =
+        new_extents.iter().cloned().zip(sources.iter().copied()).collect();
+    let assembled_ref = assembled.as_ref();
+    let results = run_pooled(
+        workers.max(1),
+        items,
+        |(ext, src): (BlockExtent, Option<usize>)| -> anyhow::Result<(Vec<u8>, bool)> {
+            if let Some(k) = src {
+                return Ok((block_slice(bytes, &sh.blocks[k]).to_vec(), true));
+            }
+            let full = assembled_ref
+                .ok_or_else(|| anyhow::anyhow!("no decoded source for block {:?}", ext.coord))?;
+            let block = extract_block(full, &ext);
+            let hierarchy = Hierarchy::uniform_with_levels(block.shape(), levels);
+            let mut w = ProgressiveWriter::<T>::new(hierarchy, codec);
+            let (p, _) = w.write(&block, eb)?;
+            Ok((p, false))
+        },
+    );
+    let mut payloads = Vec::with_capacity(results.len());
+    let mut copied = 0usize;
+    for r in results {
+        let (p, was_copy) = r.map_err(Error::Compress)?;
+        copied += was_copy as usize;
+        payloads.push(p);
+    }
+    let out = build_shard(
+        sh.dtype_bytes,
+        &sh.shape,
+        grid,
+        new_extents.iter().map(|e| (e.start.clone(), e.len.clone())),
+        &payloads,
+    );
+    let report = ReencodeReport {
+        bytes_in: bytes.len() as u64,
+        bytes_out: out.len() as u64,
+        blocks_in: sh.nblocks(),
+        blocks_out: payloads.len(),
+        blocks_copied: copied,
+        bytes_decoded,
+    };
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::Tensor;
+    use crate::util::stats;
+
+    fn field(n: usize) -> Tensor<f64> {
+        Tensor::from_fn(&[n, n], |idx| {
+            let x = idx[0] as f64 / (n - 1) as f64;
+            let y = idx[1] as f64 / (n - 1) as f64;
+            (3.0 * x).sin() * (2.0 * y).cos() + 0.25 * x * y
+        })
+    }
+
+    fn container(n: usize, codec: Codec, eb: f64) -> (Tensor<f64>, Vec<u8>) {
+        let t = field(n);
+        let h = Hierarchy::uniform(t.shape());
+        let mut w = ProgressiveWriter::<f64>::new(h, codec);
+        let (bytes, _) = w.write(&t, eb).unwrap();
+        (t, bytes)
+    }
+
+    #[test]
+    fn truncation_is_a_byte_prefix_copy_and_parses() {
+        let (_, bytes) = container(17, Codec::Zlib, 1e-3);
+        let (h, hlen) = ContainerHeader::parse(&bytes).unwrap();
+        for keep in 1..=h.nclasses() {
+            let spec = ReencodeSpec {
+                fidelity: Fidelity::Classes(keep),
+                ..Default::default()
+            };
+            let (out, report) = reencode(&bytes, &spec).unwrap();
+            assert_eq!(report.bytes_decoded, 0, "keep={keep}");
+            assert_eq!(report.blocks_copied, 1);
+            let (th, thlen) = ContainerHeader::parse(&out).unwrap();
+            assert_eq!(th.nclasses(), keep);
+            assert_eq!(th.segments, h.segments[..keep]);
+            // payload bytes are verbatim prefixes of the original
+            assert_eq!(out[thlen..], bytes[hlen..hlen + h.prefix_bytes(keep) as usize]);
+            // the full-keep "truncation" is the identity
+            if keep == h.nclasses() {
+                assert_eq!(out, bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_container_retrieves_like_the_prefix() {
+        let (_, bytes) = container(17, Codec::HuffRle, 1e-3);
+        let mut r = ProgressiveReader::<f64>::open(&bytes).unwrap();
+        let want = r.retrieve(2).unwrap();
+        let spec = ReencodeSpec {
+            fidelity: Fidelity::Classes(2),
+            ..Default::default()
+        };
+        let (out, _) = reencode(&bytes, &spec).unwrap();
+        let mut tr = ProgressiveReader::<f64>::open(&out).unwrap();
+        assert_eq!(tr.nclasses(), 2);
+        let got = tr.retrieve(2).unwrap();
+        assert_eq!(got.data(), want.data(), "bitwise prefix equivalence");
+    }
+
+    #[test]
+    fn codec_conversion_roundtrips_bitwise() {
+        let (_, bytes) = container(17, Codec::Zlib, 1e-3);
+        let mut r = ProgressiveReader::<f64>::open(&bytes).unwrap();
+        let want = r.retrieve(r.nclasses()).unwrap();
+        let spec = ReencodeSpec {
+            codec: Some(Codec::HuffRle),
+            ..Default::default()
+        };
+        let (out, report) = reencode(&bytes, &spec).unwrap();
+        assert!(report.bytes_decoded > 0);
+        assert_eq!(report.blocks_copied, 0);
+        let (h, _) = ContainerHeader::parse(&out).unwrap();
+        assert_eq!(h.codec, Codec::HuffRle);
+        let mut r2 = ProgressiveReader::<f64>::open(&out).unwrap();
+        let got = r2.retrieve(r2.nclasses()).unwrap();
+        assert_eq!(got.data(), want.data(), "entropy stage must be lossless");
+        // converting back lands on the original bytes
+        let back_spec = ReencodeSpec {
+            codec: Some(Codec::Zlib),
+            ..Default::default()
+        };
+        let (back, _) = reencode(&out, &back_spec).unwrap();
+        assert_eq!(back, bytes);
+    }
+
+    #[test]
+    fn annotations_survive_codec_conversion() {
+        let (t, bytes) = container(33, Codec::Zlib, 1e-3);
+        let (h, _) = ContainerHeader::parse(&bytes).unwrap();
+        let spec = ReencodeSpec {
+            codec: Some(Codec::HuffRle),
+            ..Default::default()
+        };
+        let (out, _) = reencode(&bytes, &spec).unwrap();
+        let (h2, _) = ContainerHeader::parse(&out).unwrap();
+        for (a, b) in h.segments.iter().zip(&h2.segments) {
+            assert_eq!(a.linf, b.linf);
+            assert_eq!(a.rmse, b.rmse);
+            assert_eq!(a.nvalues, b.nvalues);
+        }
+        let mut r = ProgressiveReader::<f64>::open(&out).unwrap();
+        let full = r.retrieve(r.nclasses()).unwrap();
+        assert!(stats::linf(full.data(), t.data()) <= 1e-3);
+    }
+
+    #[test]
+    fn container_to_shard_layout_change() {
+        let (t, bytes) = container(17, Codec::Zlib, 1e-3);
+        let spec = ReencodeSpec {
+            blocks_per_axis: Some(vec![2, 2]),
+            ..Default::default()
+        };
+        let (out, report) = reencode(&bytes, &spec).unwrap();
+        assert!(is_shard(&out));
+        assert_eq!(report.blocks_in, 1);
+        assert_eq!(report.blocks_out, 4);
+        let (sh, _) = ShardHeader::parse(&out).unwrap();
+        assert_eq!(sh.grid, vec![2, 2]);
+        // reconstruction still meets the original bound within the
+        // compounded 2·eb budget
+        let mut r0 = ProgressiveReader::<f64>::open(&bytes).unwrap();
+        let recon = r0.retrieve(r0.nclasses()).unwrap();
+        let mut parts = Vec::new();
+        for k in 0..sh.nblocks() {
+            let slice = block_slice(&out, &sh.blocks[k]);
+            let mut r = ProgressiveReader::<f64>::open(slice).unwrap();
+            let nk = r.nclasses();
+            parts.push((sh.extent(k), r.retrieve(nk).unwrap()));
+        }
+        let got = assemble_blocks(&sh.shape, &parts);
+        assert!(stats::linf(got.data(), recon.data()) <= 1e-3);
+        assert!(stats::linf(got.data(), t.data()) <= 2e-3);
+    }
+
+    #[test]
+    fn fidelity_errors_are_typed() {
+        let (_, bytes) = container(9, Codec::Zlib, 1e-2);
+        let spec = ReencodeSpec {
+            fidelity: Fidelity::Classes(99),
+            ..Default::default()
+        };
+        assert!(matches!(reencode(&bytes, &spec), Err(Error::Fidelity(_))));
+        let spec = ReencodeSpec {
+            fidelity: Fidelity::ByteBudget(0),
+            ..Default::default()
+        };
+        assert!(matches!(reencode(&bytes, &spec), Err(Error::Fidelity(_))));
+        let spec = ReencodeSpec {
+            blocks_per_axis: Some(vec![5, 5]),
+            ..Default::default()
+        };
+        assert!(matches!(reencode(&bytes, &spec), Err(Error::Usage(_))));
+        // garbage input is a container error, not a panic
+        assert!(matches!(
+            reencode(b"not an artifact at all", &ReencodeSpec::default()),
+            Err(Error::Container(_))
+        ));
+    }
+}

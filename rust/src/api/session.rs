@@ -12,7 +12,7 @@ use crate::api::fidelity::Fidelity;
 use crate::api::sharded::Sharded;
 use crate::api::tensor::{AnyTensor, Dtype};
 use crate::compress::{Codec, Compressed, CompressorStats};
-use crate::coordinator::{partition_slabs, run_pooled};
+use crate::coordinator::{partition_grid, partition_slabs, run_pooled};
 use crate::grid::{max_levels, Hierarchy};
 use crate::storage::container::peek_dtype;
 use crate::storage::{
@@ -853,6 +853,53 @@ impl Session {
         Sharded::from_bytes(bytes)
     }
 
+    /// [`Session::refactor_sharded`] over a full N-D block grid:
+    /// partition `data` into `blocks_per_axis[d]` node-sharing pieces
+    /// along every axis ([`partition_grid`]) and refactor each block
+    /// independently in parallel. Every axis — split or not — must be
+    /// refactorable (`2^k + 1` nodes), and each split must leave a
+    /// power-of-two block interior; violations are typed
+    /// [`enum@Error::Usage`] errors. `refactor_sharded_grid(data,
+    /// &[n, 1, 1, …])` produces the same artifact as
+    /// `refactor_sharded(data, n)`.
+    pub fn refactor_sharded_grid(
+        &self,
+        data: &AnyTensor,
+        blocks_per_axis: &[usize],
+    ) -> Result<Sharded> {
+        self.check_input(data)?;
+        // surface grid misuse (rank mismatch, non-dividing counts) as a
+        // usage error before any refactoring work starts
+        partition_grid(self.shape(), blocks_per_axis).map_err(|e| Error::Usage(e.to_string()))?;
+        let nlevels = self.hierarchy.nlevels();
+        let bytes = match data {
+            AnyTensor::F32(t) => ShardWriter::<f32>::new(self.codec, self.workers)
+                .with_nlevels(nlevels)
+                .write_grid(t, blocks_per_axis, self.error_bound)
+                .map_err(Error::Compress)?
+                .0,
+            AnyTensor::F64(t) => ShardWriter::<f64>::new(self.codec, self.workers)
+                .with_nlevels(nlevels)
+                .write_grid(t, blocks_per_axis, self.error_bound)
+                .map_err(Error::Compress)?
+                .0,
+        };
+        Sharded::from_bytes(bytes)
+    }
+
+    /// **Reencode**: rewrite a serialized `.mgr`/`.mgrs` artifact to a
+    /// new fidelity, codec, or block layout without a full decode —
+    /// see [`crate::api::reencode`] for the exact work each conversion
+    /// performs. Runs re-tiling block refactors on this session's
+    /// worker pool.
+    pub fn reencode(
+        &self,
+        bytes: &[u8],
+        spec: &crate::api::ReencodeSpec,
+    ) -> Result<(Vec<u8>, crate::api::ReencodeReport)> {
+        crate::api::reencode::reencode_with_workers(bytes, spec, self.workers)
+    }
+
     /// **Retrieve**: reconstruct a reduced-fidelity tensor from a
     /// refactored representation. Dispatches on the *container's* dtype,
     /// so any valid container is retrievable — including ones produced
@@ -1291,6 +1338,24 @@ mod tests {
         let stats = r.cache_stats();
         assert!(stats.cached_bytes <= 64);
         assert_eq!(stats.budget, Some(64));
+    }
+
+    #[test]
+    fn sharded_grid_degenerate_case_matches_the_slab_path() {
+        let s = session(&[17, 9]);
+        let data = smooth(&[17, 9]);
+        let slab = s.refactor_sharded(&data, 2).unwrap();
+        let grid = s.refactor_sharded_grid(&data, &[2, 1]).unwrap();
+        assert_eq!(grid.as_bytes().unwrap(), slab.as_bytes().unwrap());
+        // grid misuse is a typed usage error, named before any work
+        assert!(matches!(
+            s.refactor_sharded_grid(&data, &[2]),
+            Err(Error::Usage(_))
+        ));
+        assert!(matches!(
+            s.refactor_sharded_grid(&data, &[2, 3]),
+            Err(Error::Usage(_))
+        ));
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::api::error::{Error, Result};
 use crate::api::fidelity::Fidelity;
 use crate::api::session::{resolve_fidelity, BoxSource, SharedBytes};
 use crate::api::tensor::{AnyTensor, Dtype};
-use crate::coordinator::partition::assemble_slabs;
+use crate::coordinator::partition::assemble_blocks;
 use crate::grid::{row_major_strides, Tensor};
 use crate::storage::shard::{Section, ShardHeader, ShardReader};
 use crate::storage::LazyReader;
@@ -91,9 +91,9 @@ impl<T: Scalar> BlockSet<T> {
             let keep = resolve_fidelity(reader.header(), fidelity)
                 .map_err(|e| block_fidelity_error(k, e))?;
             let t = reader.retrieve(keep).map_err(Error::Compress)?;
-            parts.push((header.slab(k), t));
+            parts.push((header.extent(k), t));
         }
-        Ok(assemble_slabs(&header.shape, &parts))
+        Ok(assemble_blocks(&header.shape, &parts))
     }
 
     fn retrieve_region(
@@ -104,16 +104,16 @@ impl<T: Scalar> BlockSet<T> {
     ) -> Result<Tensor<T>> {
         let out_shape: Vec<usize> = roi.iter().map(|r| r.end - r.start).collect();
         let mut out = Tensor::zeros(&out_shape);
-        // touch only the intersecting blocks, in slab order — the shared
-        // boundary node takes the upper neighbour's value, exactly like
-        // assemble_slabs, so a full-domain region equals a full retrieve
-        for k in header.blocks_intersecting(&roi[header.axis]) {
-            let slab = header.slab(k);
+        // touch only the blocks the region intersects in every
+        // dimension, in row-major grid order — a shared boundary plane
+        // takes the later block's value, exactly like assemble_blocks,
+        // so a full-domain region equals a full retrieve
+        for k in header.blocks_intersecting(roi) {
             let reader = self.open(k)?;
             let keep = resolve_fidelity(reader.header(), fidelity)
                 .map_err(|e| block_fidelity_error(k, e))?;
             let t = reader.retrieve(keep).map_err(Error::Compress)?;
-            copy_block_region(&mut out, &t, header.axis, slab.start, roi);
+            copy_block_region(&mut out, &t, &header.blocks[k].start, roi);
         }
         Ok(out)
     }
@@ -128,31 +128,29 @@ fn block_fidelity_error(k: usize, e: Error) -> Error {
     }
 }
 
-/// Copy the part of `block` (slab starting at global node `slab_start`
-/// along `axis`) that falls inside `roi` into `out` (whose shape is the
-/// roi's extent per dimension).
+/// Copy the part of `block` (an N-D grid block whose first global node
+/// per axis is `bstart`) that falls inside `roi` into `out` (whose
+/// shape is the roi's extent per dimension).
 fn copy_block_region<T: Scalar>(
     out: &mut Tensor<T>,
     block: &Tensor<T>,
-    axis: usize,
-    slab_start: usize,
+    bstart: &[usize],
     roi: &[Range<usize>],
 ) {
     let d = roi.len();
     let oshape = out.shape().to_vec();
-    let slab_end = slab_start + block.shape()[axis];
-    let lo_axis = roi[axis].start.max(slab_start);
-    let hi_axis = roi[axis].end.min(slab_end);
-    if lo_axis >= hi_axis {
-        return;
-    }
     // the sub-box of `out` this block covers, in out coordinates
-    let lo: Vec<usize> = (0..d)
-        .map(|dd| if dd == axis { lo_axis - roi[axis].start } else { 0 })
-        .collect();
-    let hi: Vec<usize> = (0..d)
-        .map(|dd| if dd == axis { hi_axis - roi[axis].start } else { oshape[dd] })
-        .collect();
+    let mut lo = Vec::with_capacity(d);
+    let mut hi = Vec::with_capacity(d);
+    for dd in 0..d {
+        let l = roi[dd].start.max(bstart[dd]);
+        let h = roi[dd].end.min(bstart[dd] + block.shape()[dd]);
+        if l >= h {
+            return; // no overlap along this axis
+        }
+        lo.push(l - roi[dd].start);
+        hi.push(h - roi[dd].start);
+    }
     let ostrides = row_major_strides(&oshape);
     let bstrides = row_major_strides(block.shape());
     let mut idx = lo.clone();
@@ -162,7 +160,7 @@ fn copy_block_region<T: Scalar>(
         for dd in 0..d {
             let g = roi[dd].start + idx[dd];
             op += idx[dd] * ostrides[dd];
-            bp += (if dd == axis { g - slab_start } else { g }) * bstrides[dd];
+            bp += (g - bstart[dd]) * bstrides[dd];
         }
         out.data_mut()[op] = block.data()[bp];
         // bump the odometer within [lo, hi)
@@ -241,7 +239,7 @@ impl fmt::Debug for Sharded {
         f.debug_struct("Sharded")
             .field("dtype", &self.dtype())
             .field("shape", &self.shape())
-            .field("axis", &self.axis())
+            .field("grid", &self.grid())
             .field("nblocks", &self.nblocks())
             .finish_non_exhaustive()
     }
@@ -291,8 +289,8 @@ impl Sharded {
         Self::from_reader(reader, None)
     }
 
-    /// The parsed and validated shard index (global shape, partition
-    /// axis, per-block slab extents and byte offsets).
+    /// The parsed and validated shard index (global shape, per-axis
+    /// grid dims, per-block N-D extents and byte offsets).
     pub fn header(&self) -> &ShardHeader {
         &self.header
     }
@@ -307,9 +305,10 @@ impl Sharded {
         &self.header.shape
     }
 
-    /// The axis the domain was partitioned along.
-    pub fn axis(&self) -> usize {
-        self.header.axis
+    /// Blocks per axis of the partition grid (a single-axis slab shard
+    /// shows as `[n, 1, 1, …]`).
+    pub fn grid(&self) -> &[usize] {
+        &self.header.grid
     }
 
     /// Number of blocks.
@@ -368,9 +367,9 @@ impl Sharded {
 
     /// Reconstruct the full domain at `fidelity`: every block retrieves
     /// its class prefix independently (fidelity resolved against each
-    /// block's own measured annotations) and the slabs reassemble into
+    /// block's own measured annotations) and the blocks reassemble into
     /// the global tensor. At [`Fidelity::All`] the result is bitwise
-    /// identical to refactoring and retrieving each slab with a plain
+    /// identical to refactoring and retrieving each block with a plain
     /// [`crate::api::Session`] and reassembling.
     ///
     /// [`Fidelity::ByteBudget`] is rejected with a typed error: a byte
@@ -386,9 +385,10 @@ impl Sharded {
     }
 
     /// Reconstruct only `roi` (one half-open global index range per
-    /// dimension) at `fidelity`, opening **only the blocks whose slab
-    /// intersects the region** — every other block's bytes stay
-    /// untouched, which [`Sharded::bytes_read`] makes observable. The
+    /// dimension) at `fidelity`, opening **only the blocks whose extent
+    /// intersects the region in every dimension** — every other block's
+    /// bytes stay untouched, which [`Sharded::bytes_read`] makes
+    /// observable. The
     /// result tensor has the roi's extents as its shape and equals the
     /// same region sliced out of a full [`Sharded::retrieve`].
     pub fn retrieve_region(&self, roi: &[Range<usize>], fidelity: Fidelity) -> Result<AnyTensor> {
@@ -439,12 +439,12 @@ impl Sharded {
     }
 
     /// Indices of the blocks a region of interest would open (the ones
-    /// whose slab intersects `roi` along the partition axis), without
+    /// whose N-D extent intersects `roi` in every dimension), without
     /// opening anything. Errors on a malformed region exactly as
     /// [`Sharded::retrieve_region`] would (same validation).
     pub fn blocks_for_region(&self, roi: &[Range<usize>]) -> Result<Vec<usize>> {
         self.validate_roi(roi)?;
-        Ok(self.header.blocks_intersecting(&roi[self.header.axis]))
+        Ok(self.header.blocks_intersecting(roi))
     }
 }
 
@@ -517,7 +517,7 @@ mod tests {
         let data = smooth(&[17, 17]);
         let sharded = s.refactor_sharded(&data, 4).unwrap();
         assert_eq!(sharded.nblocks(), 4);
-        assert_eq!(sharded.axis(), 0);
+        assert_eq!(sharded.grid(), &[4, 1]);
         let full = sharded.retrieve(Fidelity::All).unwrap();
         assert!(full.linf_to(&data).unwrap() <= 1e-3);
         assert!(format!("{sharded:?}").contains("Sharded"));
@@ -550,6 +550,34 @@ mod tests {
                 .unwrap();
             assert_eq!(whole.as_f64().unwrap().data(), full.data());
         }
+    }
+
+    #[test]
+    fn grid_shards_retrieve_regions_by_block() {
+        let s = session(&[17, 9]);
+        let data = smooth(&[17, 9]);
+        let sharded = s.refactor_sharded_grid(&data, &[2, 2]).unwrap();
+        assert_eq!(sharded.grid(), &[2, 2]);
+        assert_eq!(sharded.nblocks(), 4);
+        let full = sharded.retrieve(Fidelity::All).unwrap();
+        // a region interior to block (1,1) selects exactly that block —
+        // intersection is per-dimension, not per-axis
+        assert_eq!(sharded.blocks_for_region(&[10..17, 6..9]).unwrap(), vec![3]);
+        let region = sharded
+            .retrieve_region(&[10..17, 6..9], Fidelity::All)
+            .unwrap();
+        let full = full.as_f64().unwrap();
+        let region = region.as_f64().unwrap();
+        for i in 0..7 {
+            for j in 0..3 {
+                assert_eq!(region.get(&[i, j]), full.get(&[i + 10, j + 6]), "({i},{j})");
+            }
+        }
+        // the full-domain region equals the full retrieve bitwise
+        let whole = sharded
+            .retrieve_region(&[0..17, 0..9], Fidelity::All)
+            .unwrap();
+        assert_eq!(whole.as_f64().unwrap().data(), full.data());
     }
 
     #[test]

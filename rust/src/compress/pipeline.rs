@@ -18,6 +18,7 @@
 //!   classes.
 
 use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -77,11 +78,25 @@ pub fn encode_stream(codec: Codec, q: &[i64]) -> Result<Vec<u8>> {
     }
 }
 
+/// Process-wide count of [`decode_stream`] invocations. Together with
+/// [`crate::compress::quantize::dequantize_count`] this is the
+/// observability hook `mgr reencode` tests use to *prove* a conversion
+/// performed no decode work it promised to skip (fidelity truncation is
+/// a byte-level copy; codec recoding touches entropy streams only).
+static DECODE_STREAM_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative [`decode_stream`] invocations in this process (monotonic;
+/// compare deltas around an operation under test).
+pub fn decode_stream_count() -> u64 {
+    DECODE_STREAM_CALLS.load(Ordering::Relaxed)
+}
+
 /// Invert [`encode_stream`] for a payload expected to hold exactly
 /// `expect` quantized values. The expectation bounds every intermediate
 /// allocation, so corrupt payloads (including decompression bombs) error
 /// out instead of exhausting memory.
 pub fn decode_stream(codec: Codec, payload: &[u8], expect: usize) -> Result<Vec<i64>> {
+    DECODE_STREAM_CALLS.fetch_add(1, Ordering::Relaxed);
     let q = match codec {
         Codec::HuffRle => rle::decode_with_limit(&huffman::decode(payload)?, expect)?,
         Codec::Zlib => {
@@ -312,8 +327,11 @@ impl<T: Scalar> MgardCompressor<T> {
             c.shape,
             h.shape()
         );
+        // a truncated-fidelity container (mgr reencode --keep K) carries
+        // fewer segments than the hierarchy has classes; the missing
+        // tail is simply not retrievable
         ensure!(
-            c.segments.len() == h.nclasses(),
+            c.segments.len() >= 1 && c.segments.len() <= h.nclasses(),
             "payload has {} class segments, hierarchy has {} classes",
             c.segments.len(),
             h.nclasses()

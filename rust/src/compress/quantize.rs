@@ -6,7 +6,7 @@
 //! field's L∞ error is at most `(nlevels+1) · δ/2 = eb` — the same
 //! triangle-inequality argument MGARD uses for its uniform mode.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use anyhow::{bail, Result};
 
@@ -68,8 +68,22 @@ pub fn quantize<T: Scalar>(data: &[T], meta: &QuantMeta) -> Result<Vec<i64>> {
     Ok(out)
 }
 
+/// Process-wide count of [`dequantize`] invocations. Paired with
+/// [`crate::compress::pipeline::decode_stream_count`], it lets `mgr
+/// reencode` tests assert that fidelity truncation performed zero
+/// coefficient reconstruction (pure byte copy), not merely that the
+/// output happens to match.
+static DEQUANTIZE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative [`dequantize`] invocations in this process (monotonic;
+/// compare deltas around an operation under test).
+pub fn dequantize_count() -> u64 {
+    DEQUANTIZE_CALLS.load(Ordering::Relaxed)
+}
+
 /// Invert [`quantize`] (chunk-parallel like it).
 pub fn dequantize<T: Scalar>(q: &[i64], meta: &QuantMeta) -> Vec<T> {
+    DEQUANTIZE_CALLS.fetch_add(1, Ordering::Relaxed);
     let workers = par::workers_for(q.len());
     if workers <= 1 {
         return q.iter().map(|&k| T::from_f64(k as f64 * meta.bin)).collect();

@@ -21,6 +21,7 @@ pub mod pipeline;
 
 pub use parallel::ParallelRefactorer;
 pub use partition::{
-    assemble_slabs, extract_slab, partition_slabs, round_robin_owner, sweep_utilization, Slab,
+    assemble_blocks, assemble_slabs, extract_block, extract_slab, partition_grid, partition_slabs,
+    round_robin_owner, sweep_utilization, BlockExtent, Slab,
 };
 pub use pipeline::{run_pooled, Backend, Coordinator, JobResult, JobSpec, Mode as JobMode};

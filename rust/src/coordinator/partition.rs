@@ -9,6 +9,8 @@
 //! sharded domain's axis can be e.g. `3·4 + 1 = 13` nodes even though
 //! `13` itself is not `2^k + 1`.)
 
+use std::ops::Range;
+
 use anyhow::{ensure, Result};
 
 use crate::grid::{row_major_strides, Tensor};
@@ -27,24 +29,49 @@ pub struct Slab {
     pub device: usize,
 }
 
-/// Split axis `axis` of `shape` into `parts` refactorable slabs.
-///
-/// `parts` must divide `shape[axis] - 1` with a power-of-two quotient
-/// `2^j`, `j >= 1`. Degenerate inputs (an out-of-range axis, an axis too
-/// short to refactor — including the `shape[axis] == 0` underflow this
-/// used to panic on — or `parts == 0`) are typed errors, never panics.
-pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Result<Vec<Slab>> {
-    ensure!(
-        axis < shape.len(),
-        "partition axis {axis} outside 0..{} for shape {shape:?}",
-        shape.len()
-    );
-    let n = shape[axis];
+/// One block of an N-D grid partition: per-axis node-sharing extents
+/// plus the block's coordinate in the grid. Produced by
+/// [`partition_grid`]; blocks are emitted in row-major coordinate order
+/// (last axis fastest), so a `[parts, 1, 1, …]` grid lists the same
+/// blocks in the same order as [`partition_slabs`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockExtent {
+    /// Grid coordinate of this block, one entry per axis.
+    pub coord: Vec<usize>,
+    /// First global node index per axis (inclusive).
+    pub start: Vec<usize>,
+    /// Node count per axis (each a `2^j + 1`; neighbouring blocks share
+    /// their boundary plane).
+    pub len: Vec<usize>,
+}
+
+impl BlockExtent {
+    /// The block's own tensor shape (its per-axis node counts).
+    pub fn shape(&self) -> &[usize] {
+        &self.len
+    }
+
+    /// Whether the block intersects a half-open per-axis region. The
+    /// shared boundary plane belongs to *both* of its neighbours, so a
+    /// region covering only that plane selects both.
+    pub fn intersects(&self, roi: &[Range<usize>]) -> bool {
+        roi.len() == self.start.len()
+            && roi.iter().enumerate().all(|(d, r)| {
+                self.start[d] < r.end && self.start[d] + self.len[d] > r.start
+            })
+    }
+}
+
+/// Validate one axis of a node-centered split: `parts` must divide
+/// `n - 1` with a power-of-two quotient `2^j`, `j >= 1` (so every piece
+/// is a refactorable `2^j + 1` nodes). Returns the shared interior size
+/// `(n - 1) / parts`.
+fn axis_segment(axis: usize, n: usize, parts: usize) -> Result<usize> {
     ensure!(
         n >= 3,
         "axis {axis} has {n} node(s); a refactorable axis needs at least 3 (2^j + 1)"
     );
-    ensure!(parts >= 1, "parts must be at least 1, got 0");
+    ensure!(parts >= 1, "parts must be at least 1, got 0 (axis {axis})");
     ensure!(
         (n - 1) % parts == 0,
         "parts {parts} must divide n-1 = {} (axis {axis} has {n} nodes)",
@@ -53,8 +80,27 @@ pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Result<Vec
     let seg = (n - 1) / parts;
     ensure!(
         seg >= 2 && seg.is_power_of_two(),
-        "slab interior must be 2^j (j>=1), got {seg}"
+        "slab interior must be 2^j (j>=1), got {seg} (axis {axis})"
     );
+    Ok(seg)
+}
+
+/// Split axis `axis` of `shape` into `parts` refactorable slabs.
+///
+/// `parts` must divide `shape[axis] - 1` with a power-of-two quotient
+/// `2^j`, `j >= 1`. Degenerate inputs (an out-of-range axis, an axis too
+/// short to refactor — including the `shape[axis] == 0` underflow this
+/// used to panic on — or `parts == 0`) are typed errors, never panics.
+/// This is the `[parts, 1, 1, …]` special case of [`partition_grid`],
+/// kept as the single-axis front because multi-device slab scheduling
+/// (`device = p`) and the §3.6 presentation are both 1-D.
+pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Result<Vec<Slab>> {
+    ensure!(
+        axis < shape.len(),
+        "partition axis {axis} outside 0..{} for shape {shape:?}",
+        shape.len()
+    );
+    let seg = axis_segment(axis, shape[axis], parts)?;
     Ok((0..parts)
         .map(|p| Slab {
             axis,
@@ -63,6 +109,89 @@ pub fn partition_slabs(shape: &[usize], axis: usize, parts: usize) -> Result<Vec
             device: p,
         })
         .collect())
+}
+
+/// Split every axis of `shape` into `blocks_per_axis[d]` node-sharing
+/// pieces, producing the full N-D block grid in row-major coordinate
+/// order. Every axis — including unsplit ones (`parts == 1`) — must
+/// satisfy the node-centered rule ([`axis_segment`]), so **every block
+/// of the grid is refactorable by construction** (each dimension is a
+/// `2^j + 1`). `partition_grid(shape, [n, 1, 1, …])` yields exactly the
+/// extents of `partition_slabs(shape, 0, n)`.
+pub fn partition_grid(shape: &[usize], blocks_per_axis: &[usize]) -> Result<Vec<BlockExtent>> {
+    ensure!(!shape.is_empty(), "cannot partition a zero-dimensional domain");
+    ensure!(
+        blocks_per_axis.len() == shape.len(),
+        "blocks-per-axis has {} entr(y/ies), shape {shape:?} has {} dimension(s)",
+        blocks_per_axis.len(),
+        shape.len()
+    );
+    let d = shape.len();
+    let mut segs = Vec::with_capacity(d);
+    for axis in 0..d {
+        segs.push(axis_segment(axis, shape[axis], blocks_per_axis[axis])?);
+    }
+    let total: usize = blocks_per_axis.iter().product();
+    let mut out = Vec::with_capacity(total);
+    let mut coord = vec![0usize; d];
+    for _ in 0..total {
+        out.push(BlockExtent {
+            coord: coord.clone(),
+            start: coord.iter().zip(&segs).map(|(&c, &s)| c * s).collect(),
+            len: segs.iter().map(|&s| s + 1).collect(),
+        });
+        for dd in (0..d).rev() {
+            coord[dd] += 1;
+            if coord[dd] < blocks_per_axis[dd] {
+                break;
+            }
+            coord[dd] = 0;
+        }
+    }
+    Ok(out)
+}
+
+/// Extract a block's tensor (copying; boundary planes are duplicated
+/// into every neighbour, matching node-centered domain decomposition).
+pub fn extract_block<T: Scalar>(t: &Tensor<T>, ext: &BlockExtent) -> Tensor<T> {
+    let strides = row_major_strides(t.shape());
+    Tensor::from_fn(&ext.len, |idx| {
+        let mut full_idx: usize = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            full_idx += (ext.start[d] + i) * strides[d];
+        }
+        t.data()[full_idx]
+    })
+}
+
+/// Reassemble grid blocks into the full tensor. Blocks are written in
+/// order, so a shared boundary plane takes the **last** writer's value
+/// (the row-major-later block) — the N-D generalization of
+/// [`assemble_slabs`]' upper-neighbour-wins rule, and the rule
+/// [`crate::api::Sharded::retrieve_region`] matches.
+pub fn assemble_blocks<T: Scalar>(shape: &[usize], blocks: &[(BlockExtent, Tensor<T>)]) -> Tensor<T> {
+    let mut out = Tensor::zeros(shape);
+    let strides = row_major_strides(shape);
+    for (ext, data) in blocks {
+        let total: usize = data.shape().iter().product();
+        let d = shape.len();
+        let mut idx = vec![0usize; d];
+        for li in 0..total {
+            let mut full_idx = 0usize;
+            for (dd, &i) in idx.iter().enumerate() {
+                full_idx += (ext.start[dd] + i) * strides[dd];
+            }
+            out.data_mut()[full_idx] = data.data()[li];
+            for dd in (0..d).rev() {
+                idx[dd] += 1;
+                if idx[dd] < data.shape()[dd] {
+                    break;
+                }
+                idx[dd] = 0;
+            }
+        }
+    }
+    out
 }
 
 /// Extract a slab's tensor (copying; boundary nodes are duplicated into
@@ -260,6 +389,78 @@ mod tests {
         }
         let back = assemble_slabs(&shape, &parts);
         assert!(linf(back.data(), t.data()) < 1e-10);
+    }
+
+    #[test]
+    fn grid_degenerate_case_matches_slabs_bitwise() {
+        // [parts, 1, …] grids are the slab partition, extent for extent
+        for (shape, parts) in [(vec![17usize, 9], 2usize), (vec![33, 17], 4), (vec![13], 3)] {
+            let mut grid_spec = vec![1usize; shape.len()];
+            grid_spec[0] = parts;
+            let grid = partition_grid(&shape, &grid_spec).unwrap();
+            let slabs = partition_slabs(&shape, 0, parts).unwrap();
+            assert_eq!(grid.len(), slabs.len());
+            for (b, s) in grid.iter().zip(&slabs) {
+                assert_eq!(b.start[0], s.start);
+                assert_eq!(b.len[0], s.len);
+                for d in 1..shape.len() {
+                    assert_eq!(b.start[d], 0);
+                    assert_eq!(b.len[d], shape[d]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_blocks_tile_in_row_major_order() {
+        let blocks = partition_grid(&[17, 9], &[2, 2]).unwrap();
+        assert_eq!(blocks.len(), 4);
+        let coords: Vec<_> = blocks.iter().map(|b| b.coord.clone()).collect();
+        assert_eq!(coords, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+        for b in &blocks {
+            assert_eq!(b.len, vec![9, 5]);
+            assert_eq!(b.start, vec![b.coord[0] * 8, b.coord[1] * 4]);
+            assert!(crate::grid::max_levels(b.shape()).is_some(), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn grid_rejects_bad_specs_with_the_axis_named() {
+        let err = partition_grid(&[17, 9], &[2]).unwrap_err().to_string();
+        assert!(err.contains("dimension"), "{err}");
+        let err = partition_grid(&[17, 9], &[2, 3]).unwrap_err().to_string();
+        assert!(err.contains("axis 1") && err.contains("divide"), "{err}");
+        let err = partition_grid(&[17, 9], &[0, 1]).unwrap_err().to_string();
+        assert!(err.contains("axis 0") && err.contains("at least 1"), "{err}");
+        let err = partition_grid(&[17, 9], &[2, 8]).unwrap_err().to_string();
+        assert!(err.contains("2^j"), "{err}");
+        assert!(partition_grid(&[], &[]).is_err());
+    }
+
+    #[test]
+    fn grid_extract_assemble_roundtrip_bitwise() {
+        let shape = [17usize, 9, 5];
+        let mut rng = Rng::new(5);
+        let t = Tensor::from_fn(&shape, |_| rng.normal());
+        let blocks = partition_grid(&shape, &[2, 2, 1]).unwrap();
+        let parts: Vec<(BlockExtent, Tensor<f64>)> = blocks
+            .iter()
+            .map(|b| (b.clone(), extract_block(&t, b)))
+            .collect();
+        let back = assemble_blocks(&shape, &parts);
+        assert_eq!(back, t, "bitwise grid reassembly");
+    }
+
+    #[test]
+    fn block_extent_intersection_is_all_dimensions() {
+        let blocks = partition_grid(&[17, 9], &[2, 2]).unwrap();
+        // block (1,0) spans [8..17) x [0..5)
+        let b = &blocks[2];
+        assert!(b.intersects(&[10..12, 0..2]));
+        assert!(!b.intersects(&[10..12, 6..8]), "misses on axis 1");
+        assert!(!b.intersects(&[0..5, 0..2]), "misses on axis 0");
+        assert!(b.intersects(&[8..9, 4..5]), "shared corner node hits");
+        assert!(!b.intersects(&[10..12]), "rank mismatch never matches");
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!   segments are read off disk. `--upgrade-from K` demonstrates the
 //!   incremental path — retrieve `K` classes first, then upgrade to the
 //!   requested fidelity decoding only the delta segments.
+//! * `reencode` — rewrite a `.mgr`/`.mgrs` artifact into a truncated
+//!   fidelity (pure byte copy), a different entropy codec (entropy
+//!   stage only), or a new block grid (decodes only where the tiling
+//!   changed) — one artifact, many layouts.
 //! * `plan` — place a container's class segments across storage tiers
 //!   (reads the header only; no payload is touched).
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
@@ -33,7 +37,7 @@
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, Session, Sharded};
+use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, ReencodeSpec, Session, Sharded};
 use mgr::compress::Codec;
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
 use mgr::grid::Tensor;
@@ -147,27 +151,54 @@ fn path_is_shard(path: &str) -> bool {
 }
 
 /// Parse the optional `--region i0..i1,j0..j1,…` knob of `retrieve`:
-/// one half-open global index range per dimension.
+/// one half-open global index range per dimension. Malformed specs name
+/// the offending axis and token.
 fn parse_region(args: &Args) -> Result<Option<Vec<std::ops::Range<usize>>>> {
     let Some(spec) = args.get("region") else {
         return Ok(None);
     };
     let mut roi = Vec::new();
-    for part in spec.split(',') {
+    for (axis, part) in spec.split(',').enumerate() {
         let (a, b) = part.split_once("..").ok_or_else(|| {
-            anyhow!("--region expects comma-separated ranges like 0..17,4..9 — got '{part}'")
+            anyhow!(
+                "--region axis {axis}: expected a half-open range like 0..17 \
+                 (comma-separated per axis), got '{part}'"
+            )
         })?;
         let start: usize = a
             .trim()
             .parse()
-            .map_err(|_| anyhow!("--region: bad range start '{a}' in '{part}'"))?;
+            .map_err(|_| anyhow!("--region axis {axis}: bad range start '{a}' in '{part}'"))?;
         let end: usize = b
             .trim()
             .parse()
-            .map_err(|_| anyhow!("--region: bad range end '{b}' in '{part}'"))?;
+            .map_err(|_| anyhow!("--region axis {axis}: bad range end '{b}' in '{part}'"))?;
         roi.push(start..end);
     }
     Ok(Some(roi))
+}
+
+/// Parse a `--blocks` value: either a single count (slab partitioning,
+/// optionally combined with `--axis`) or a comma-separated per-axis
+/// list like `4,2,2` (an N-D grid). Malformed specs name the offending
+/// axis and token.
+fn parse_blocks(spec: &str) -> Result<Vec<usize>> {
+    let mut blocks = Vec::new();
+    for (axis, tok) in spec.split(',').enumerate() {
+        let n: usize = tok.trim().parse().map_err(|_| {
+            anyhow!(
+                "--blocks axis {axis}: expected a positive block count, got '{}' in '{spec}'",
+                tok.trim()
+            )
+        })?;
+        ensure!(
+            n >= 1,
+            "--blocks axis {axis}: block count must be at least 1, got '{}' in '{spec}'",
+            tok.trim()
+        );
+        blocks.push(n);
+    }
+    Ok(blocks)
 }
 
 /// Parse the optional `--upgrade-from K` staging knob of `retrieve`.
@@ -189,6 +220,7 @@ fn run(args: &Args) -> Result<()> {
         Some("info") => info(args),
         Some("refactor") => refactor(args),
         Some("retrieve") => retrieve(args),
+        Some("reencode") => reencode(args),
         Some("plan") => plan(args),
         Some("compress") | Some("roundtrip") => compress(args),
         Some("serve") => serve(args),
@@ -202,10 +234,15 @@ fn run(args: &Args) -> Result<()> {
                  \x20 info                      artifact + device summary\n\
                  \x20 refactor   [--shape NxNxN --input grayscott|random --dtype f32|f64]\n\
                  \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
-                 \x20            [--blocks P --axis A --out f.mgrs]   sharded (one container per slab)\n\
+                 \x20            [--blocks P [--axis A] | --blocks P0,P1,... --out f.mgrs]\n\
+                 \x20            sharded: P slabs on one axis, or an N-D block grid\n\
                  \x20 retrieve   --in f.mgr [--keep K | --error E | --bytes B]\n\
                  \x20            [--upgrade-from K] [--dump raw.bin]\n\
                  \x20 retrieve   --in f.mgrs [--region i0..i1,j0..j1,...]  region-of-interest\n\
+                 \x20 reencode   --in f.mgr|f.mgrs --out g.mgr|g.mgrs\n\
+                 \x20            [--keep K | --error E | --bytes B]   truncate fidelity (byte copy)\n\
+                 \x20            [--codec zlib|huff-rle]              re-run the entropy stage only\n\
+                 \x20            [--blocks P0,P1,...] [--workers N]   re-tile onto a new block grid\n\
                  \x20 plan       --in f.mgr\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
                  \x20 serve      --in f.mgr|f.mgrs [--addr 127.0.0.1:4860]\n\
@@ -293,28 +330,46 @@ fn refactor(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `refactor --blocks P [--axis A]`: the §3.6 sharded create path —
-/// partition, refactor every slab in parallel, one MGRS artifact out.
+/// `refactor --blocks P [--axis A]` / `--blocks P0,P1,…`: the §3.6
+/// sharded create path — partition into slabs or an N-D block grid,
+/// refactor every block in parallel, one MGRS artifact out.
 fn refactor_sharded(args: &Args, session: &Session, data: &AnyTensor) -> Result<()> {
-    let blocks = args.get_usize("blocks", 2)?;
-    let axis = args.get_usize("axis", 0)?;
-    let (sharded, secs) = time(|| session.refactor_sharded_on(data, blocks, axis));
+    let blocks = parse_blocks(args.get("blocks").expect("caller checked --blocks"))?;
+    let (sharded, secs, layout) = if blocks.len() == 1 {
+        let axis = args.get_usize("axis", 0)?;
+        let (s, secs) = time(|| session.refactor_sharded_on(data, blocks[0], axis));
+        (s, secs, format!("{} block(s) along axis {axis}", blocks[0]))
+    } else {
+        ensure!(
+            args.get("axis").is_none(),
+            "--axis applies to a single --blocks count; a per-axis grid like --blocks {} \
+             fixes the layout itself",
+            args.get("blocks").unwrap()
+        );
+        let (s, secs) = time(|| session.refactor_sharded_grid(data, &blocks));
+        (s, secs, format!("a {blocks:?} block grid"))
+    };
     let sharded = sharded?;
     let header = sharded.header();
     println!(
-        "refactored {:?} {} into {} block(s) along axis {axis} \
+        "refactored {:?} {} into {layout} \
          ({} codec, eb {:.1e}) in {:.1} ms — {:.2} GB/s aggregate",
         data.shape(),
         data.dtype(),
-        sharded.nblocks(),
         session.codec().name(),
         session.error_bound(),
         secs * 1e3,
         data.nbytes() as f64 / secs / 1e9
     );
-    println!("{:<8} {:>10} {:>10} {:>14}", "block", "start", "nodes", "bytes");
+    println!("{:<8} {:>16} {:>16} {:>12}", "block", "start", "nodes", "bytes");
     for (k, b) in header.blocks.iter().enumerate() {
-        println!("{:<8} {:>10} {:>10} {:>14}", k, b.start, b.len, b.bytes);
+        println!(
+            "{:<8} {:>16} {:>16} {:>12}",
+            k,
+            format!("{:?}", b.start),
+            format!("{:?}", b.len),
+            b.bytes
+        );
     }
     let total = sharded.total_bytes();
     println!(
@@ -436,16 +491,22 @@ fn retrieve_sharded(args: &Args, path: &str) -> Result<()> {
     let sharded = Sharded::open_file(path).with_context(|| format!("opening shard {path}"))?;
     let header = sharded.header();
     println!(
-        "shard: shape {:?} {}, {} block(s) along axis {}, {}-byte index",
+        "shard: shape {:?} {}, {} block(s) in a {:?} grid, {}-byte index",
         sharded.shape(),
         sharded.dtype(),
         sharded.nblocks(),
-        sharded.axis(),
+        sharded.grid(),
         sharded.index_bytes()
     );
-    println!("{:<8} {:>10} {:>10} {:>14}", "block", "start", "nodes", "bytes");
+    println!("{:<8} {:>16} {:>16} {:>12}", "block", "start", "nodes", "bytes");
     for (k, b) in header.blocks.iter().enumerate() {
-        println!("{:<8} {:>10} {:>10} {:>14}", k, b.start, b.len, b.bytes);
+        println!(
+            "{:<8} {:>16} {:>16} {:>12}",
+            k,
+            format!("{:?}", b.start),
+            format!("{:?}", b.len),
+            b.bytes
+        );
     }
 
     let fidelity = parse_fidelity(args)?;
@@ -473,6 +534,44 @@ fn retrieve_sharded(args: &Args, path: &str) -> Result<()> {
         100.0 * sharded.bytes_read() as f64 / sharded.total_bytes() as f64
     );
     dump_tensor(args, &tensor)
+}
+
+/// `mgr reencode`: rewrite an artifact into a new fidelity, codec, or
+/// block layout without a full decode → re-refactor round trip (see
+/// [`mgr::api::reencode`]). The report shows how much work was
+/// actually done — a pure truncation decodes nothing.
+fn reencode(args: &Args) -> Result<()> {
+    let path = container_path(args)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("reencode needs --out FILE"))?;
+    let codec = args.get("codec").map(|c| c.parse::<Codec>()).transpose()?;
+    let blocks = args.get("blocks").map(parse_blocks).transpose()?;
+    let spec = ReencodeSpec {
+        fidelity: parse_fidelity(args)?,
+        codec,
+        blocks_per_axis: blocks,
+    };
+    let workers = args.get_usize("workers", 4)?;
+    let (report, secs) =
+        time(|| mgr::api::reencode::reencode_file(&path, out, &spec, workers));
+    let report = report?;
+    println!(
+        "reencoded {path} -> {out} in {:.1} ms: {} -> {} bytes, {} -> {} block(s)",
+        secs * 1e3,
+        report.bytes_in,
+        report.bytes_out,
+        report.blocks_in,
+        report.blocks_out
+    );
+    println!(
+        "  {} block(s) copied byte-for-byte; {} of {} payload bytes entropy-decoded ({:.1}%)",
+        report.blocks_copied,
+        report.bytes_decoded,
+        report.bytes_in,
+        100.0 * report.bytes_decoded as f64 / report.bytes_in as f64
+    );
+    Ok(())
 }
 
 /// Honor `--dump raw.bin`: always dumps f64 LE (f32 data is widened).
@@ -730,6 +829,50 @@ mod tests {
         assert!(parse_region(&args("retrieve --region 0-17")).is_err());
         assert!(parse_region(&args("retrieve --region x..9")).is_err());
         assert!(parse_region(&args("retrieve --region 0..y")).is_err());
+    }
+
+    #[test]
+    fn region_errors_name_the_axis_and_token() {
+        // a malformed component must point at its axis, not just fail
+        let err = parse_region(&args("retrieve --region 0..9,4-7"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis 1") && err.contains("'4-7'"), "{err}");
+        let err = parse_region(&args("retrieve --region x..9"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis 0") && err.contains("'x'"), "{err}");
+        let err = parse_region(&args("retrieve --region 0..9,1..y,2..3"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis 1") && err.contains("'y'"), "{err}");
+        let err = parse_region(&args("retrieve --region 0..9,,3..4"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("axis 1"), "{err}");
+    }
+
+    #[test]
+    fn blocks_specs_parse() {
+        assert_eq!(parse_blocks("4").unwrap(), vec![4]);
+        assert_eq!(parse_blocks("4,2,2").unwrap(), vec![4, 2, 2]);
+        assert_eq!(parse_blocks(" 2 , 1 ").unwrap(), vec![2, 1]);
+    }
+
+    #[test]
+    fn blocks_errors_name_the_axis_and_token() {
+        let err = parse_blocks("4,x,2").unwrap_err().to_string();
+        assert!(err.contains("axis 1") && err.contains("'x'"), "{err}");
+        let err = parse_blocks("-3").unwrap_err().to_string();
+        assert!(err.contains("axis 0") && err.contains("'-3'"), "{err}");
+        let err = parse_blocks("4,0").unwrap_err().to_string();
+        assert!(err.contains("axis 1") && err.contains("at least 1"), "{err}");
+        let err = parse_blocks("").unwrap_err().to_string();
+        assert!(err.contains("axis 0"), "{err}");
+        let err = parse_blocks("2,,2").unwrap_err().to_string();
+        assert!(err.contains("axis 1"), "{err}");
+        let err = parse_blocks("2,3.5").unwrap_err().to_string();
+        assert!(err.contains("axis 1") && err.contains("'3.5'"), "{err}");
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! | 7  | 1 | codec (0 = zlib, 1 = huff-rle) |
 //! | 8  | 1 | ndim |
 //! | 9  | 1 | nlevels |
-//! | 10 | 1 | nclasses (= nlevels + 1) |
+//! | 10 | 1 | nclasses (1..=nlevels+1; < means a truncated-fidelity prefix) |
 //! | 11 | 1 | reserved (0) |
 //! | 12 | 8 | quantizer error bound `eb` (f64) |
 //! | 20 | 8 | quantizer bin width `δ` (f64) |
@@ -315,9 +315,13 @@ impl ContainerHeader {
         ensure!(ndim >= 1 && ndim <= MAX_NDIM, "ndim {ndim} outside 1..={MAX_NDIM}");
         let nlevels = cur.u8()? as usize;
         let nclasses = cur.u8()? as usize;
+        // a full container carries nlevels + 1 classes; a truncated one
+        // (mgr reencode --keep K) carries a shorter prefix of the same
+        // hierarchy — nlevels stays, so class value counts still check
         ensure!(
-            nclasses == nlevels + 1,
-            "nclasses {nclasses} must equal nlevels {nlevels} + 1"
+            nclasses >= 1 && nclasses <= nlevels + 1,
+            "nclasses {nclasses} outside 1..={} (nlevels {nlevels} + 1)",
+            nlevels + 1
         );
         let reserved = cur.u8()?;
         ensure!(reserved == 0, "reserved header byte must be 0, got {reserved}");

@@ -3,45 +3,56 @@
 //!
 //! The headline scaling result (264 TB/s aggregate on 1024 Summit nodes)
 //! comes from *embarrassingly parallel per-block refactoring*: the
-//! domain splits into node-sharing slabs, each slab gets its own
+//! domain splits into node-sharing blocks, each block gets its own
 //! hierarchy, and no block ever talks to another. An `MGRS` shard is
 //! exactly that decomposition as one artifact: a small **index** (global
-//! shape, partition axis, per-block slab extents and byte offsets)
+//! shape, per-axis grid dims, per-block N-D extents and byte offsets)
 //! followed by N complete, independent [`MGRC`](crate::storage::container)
-//! containers — one per slab.
+//! containers — one per block, in row-major grid-coordinate order.
 //!
 //! Because every block is a self-contained progressive container, the
 //! retrieval side inherits everything MGRC already provides — per-class
 //! laziness, measured error annotations, hardened decoding — and adds
 //! the HP-MDR-style capability this module exists for: **region-of-
 //! interest retrieval** that opens only the blocks intersecting the
-//! request, leaving the others' bytes untouched on disk.
+//! request *in every dimension*, leaving the others' bytes untouched on
+//! disk.
 //!
-//! # Index format (version 1, little-endian)
+//! # Index format (version 2, little-endian)
 //!
 //! | offset | size | field |
 //! |---|---|---|
 //! | 0  | 4 | magic `"MGRS"` |
-//! | 4  | 2 | version (`1`) |
+//! | 4  | 2 | version (`2`) |
 //! | 6  | 1 | scalar width in bytes (4 = f32, 8 = f64) |
-//! | 7  | 1 | partition axis |
+//! | 7  | 1 | reserved (0; held the partition axis in v1) |
 //! | 8  | 1 | ndim |
 //! | 9  | 1 | reserved (0) |
 //! | 10 | 2 | nblocks (u16) |
 //! | 12 | 8·ndim | global shape, one u64 per dimension |
-//! | …  | 32·nblocks | block table |
+//! | …  | 8·ndim | grid dims, one u64 per dimension (∏ = nblocks) |
+//! | …  | (16·ndim + 16)·nblocks | block table |
 //! | …  | Σ bytes | block payloads: complete MGRC containers, in order |
 //!
-//! Each block-table entry is `{ start: u64, len: u64, offset: u64,
-//! bytes: u64 }`: the slab's first global node index and node count
-//! along the partition axis, and the absolute byte offset/length of its
-//! MGRC container. Neighbouring slabs share their boundary node
-//! (`start[k+1] = start[k] + len[k] - 1`) and the payloads are laid out
-//! contiguously after the index — both properties are *validated*, so a
-//! corrupt offset table (pointing past EOF, overlapping, or leaving
-//! gaps) is a typed parse error, never an out-of-bounds read. Parsing is
-//! total: malformed or truncated bytes yield `Err`, never a panic, and
-//! every allocation is bounded by validated header fields.
+//! Each block-table entry is `{ start[d]: u64 × ndim, len[d]: u64 ×
+//! ndim, offset: u64, bytes: u64 }`: the block's first global node
+//! index and node count along every axis, then the absolute byte
+//! offset/length of its MGRC container. Blocks are listed in row-major
+//! grid-coordinate order, neighbouring blocks share their boundary
+//! plane (`start = coord[d]·seg[d]`, `len = seg[d] + 1` where `seg[d] =
+//! (shape[d] - 1) / grid[d]`), and payloads are laid out contiguously
+//! after the index — all three properties are *validated*, so a corrupt
+//! table (extents overlapping, gapped, or off-grid; offsets pointing
+//! past EOF) is a typed parse error, never an out-of-bounds read.
+//! Parsing is total: malformed or truncated bytes yield `Err`, never a
+//! panic, and every allocation is bounded by validated header fields.
+//!
+//! **Version 1** indexes (single-axis slabs: byte 7 held the partition
+//! axis and each table entry was `{ start, len, offset, bytes }` scalars
+//! along that axis) still parse: they are mapped onto a degenerate grid
+//! (`grid[axis] = nblocks`, `1` elsewhere) at parse time, so every
+//! consumer sees one N-D model. [`ShardHeader::to_bytes`] always writes
+//! version 2.
 //!
 //! The normative spec (with a worked hex dump) lives in
 //! `docs/format.md`; this module is its implementation.
@@ -56,7 +67,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::compress::Codec;
-use crate::coordinator::partition::{extract_slab, partition_slabs, Slab};
+use crate::coordinator::partition::{extract_block, partition_grid, BlockExtent};
 use crate::coordinator::run_pooled;
 use crate::grid::{max_levels, Hierarchy, Tensor};
 use crate::storage::container::{self, Cursor, ProgressiveWriter};
@@ -65,19 +76,24 @@ use crate::util::Scalar;
 
 /// Shard index magic bytes.
 pub const SHARD_MAGIC: [u8; 4] = *b"MGRS";
-/// Current shard index format version.
-pub const SHARD_VERSION: u16 = 1;
+/// Current shard index format version (N-D block grids). Version 1
+/// (single-axis slabs) still parses — see the module docs.
+pub const SHARD_VERSION: u16 = 2;
+/// The legacy single-axis-slab index version.
+pub const SHARD_VERSION_V1: u16 = 1;
 /// Largest block count a shard index may declare.
 pub const MAX_BLOCKS: usize = 1 << 12;
 /// Size of the fixed index prelude (magic through nblocks) that precedes
-/// the variable shape + block-table part. A streaming reader fetches
-/// exactly this many bytes, calls [`shard_var_len`] to learn how long
-/// the rest of the index is, and never over-reads.
+/// the variable shape + grid + block-table part. A streaming reader
+/// fetches exactly this many bytes, calls [`shard_var_len`] to learn how
+/// long the rest of the index is, and never over-reads. Identical in v1
+/// and v2.
 pub const SHARD_FIXED_LEN: usize = 12;
 
-/// Byte length of the variable index part (shape + block table) declared
-/// by a [`SHARD_FIXED_LEN`]-byte prelude. Validates only what sizing
-/// needs — magic, version, and the dimension/block counts.
+/// Byte length of the variable index part (shape [+ grid] + block table)
+/// declared by a [`SHARD_FIXED_LEN`]-byte prelude, for either supported
+/// version. Validates only what sizing needs — magic, version, and the
+/// dimension/block counts.
 pub fn shard_var_len(prelude: &[u8]) -> Result<usize> {
     ensure!(
         prelude.len() >= SHARD_FIXED_LEN,
@@ -87,7 +103,7 @@ pub fn shard_var_len(prelude: &[u8]) -> Result<usize> {
     ensure!(prelude[..4] == SHARD_MAGIC, "not an MGRS shard index (bad magic)");
     let version = u16::from_le_bytes(prelude[4..6].try_into().unwrap());
     ensure!(
-        version == SHARD_VERSION,
+        version == SHARD_VERSION || version == SHARD_VERSION_V1,
         "unsupported shard index version {version}"
     );
     let ndim = prelude[8] as usize;
@@ -101,7 +117,11 @@ pub fn shard_var_len(prelude: &[u8]) -> Result<usize> {
         nblocks >= 1 && nblocks <= MAX_BLOCKS,
         "block count {nblocks} outside 1..={MAX_BLOCKS}"
     );
-    Ok(8 * ndim + 32 * nblocks)
+    Ok(if version == SHARD_VERSION_V1 {
+        8 * ndim + 32 * nblocks
+    } else {
+        16 * ndim + (16 * ndim + 16) * nblocks
+    })
 }
 
 /// Whether a byte buffer starts with the MGRS shard magic (lets a CLI
@@ -110,29 +130,33 @@ pub fn is_shard(buf: &[u8]) -> bool {
     buf.len() >= 4 && buf[..4] == SHARD_MAGIC
 }
 
-/// Block-table entry: one per slab, in axis order.
+/// Block-table entry: one per block, in row-major grid-coordinate
+/// order.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BlockMeta {
-    /// First global node index of the slab along the partition axis.
-    pub start: usize,
-    /// Node count of the slab along the partition axis (a `2^j + 1`).
-    pub len: usize,
+    /// First global node index of the block, per axis.
+    pub start: Vec<usize>,
+    /// Node count of the block per axis (each a `2^j + 1`, or the full
+    /// axis when that axis is unsplit).
+    pub len: Vec<usize>,
     /// Absolute byte offset of the block's MGRC container in the shard.
     pub offset: u64,
     /// Byte length of the block's MGRC container.
     pub bytes: u64,
 }
 
-/// Parsed (or to-be-written) shard index.
+/// Parsed (or to-be-written) shard index. A v1 index parses into the
+/// same model: its partition axis becomes the one grid dimension larger
+/// than 1.
 #[derive(Clone, Debug)]
 pub struct ShardHeader {
     /// Scalar width in bytes (4 = f32, 8 = f64) — every block agrees.
     pub dtype_bytes: u8,
-    /// The axis the domain was partitioned along.
-    pub axis: usize,
     /// Global grid shape of the sharded field.
     pub shape: Vec<usize>,
-    /// One entry per block, in slab order along the axis.
+    /// Blocks per axis; `grid.iter().product() == nblocks`.
+    pub grid: Vec<usize>,
+    /// One entry per block, in row-major grid-coordinate order.
     pub blocks: Vec<BlockMeta>,
 }
 
@@ -142,9 +166,11 @@ impl ShardHeader {
         self.blocks.len()
     }
 
-    /// Serialized index size in bytes.
+    /// Serialized index size in bytes (of the v2 form [`ShardHeader::to_bytes`]
+    /// writes; a header parsed from a v1 stream reserializes as v2, so
+    /// this may differ from the parsed stream's own index length).
     pub fn header_bytes(&self) -> usize {
-        SHARD_FIXED_LEN + 8 * self.shape.len() + 32 * self.blocks.len()
+        SHARD_FIXED_LEN + 16 * self.shape.len() + (16 * self.shape.len() + 16) * self.blocks.len()
     }
 
     /// Total block-payload bytes (the MGRC containers, index excluded).
@@ -152,54 +178,75 @@ impl ShardHeader {
         self.blocks.iter().map(|b| b.bytes).sum()
     }
 
-    /// Grid shape of block `k` (the global shape with the axis extent
-    /// replaced by the slab's node count).
+    /// Grid shape of block `k` (its per-axis node counts).
     pub fn block_shape(&self, k: usize) -> Vec<usize> {
-        let mut s = self.shape.clone();
-        s[self.axis] = self.blocks[k].len;
-        s
+        self.blocks[k].len.clone()
     }
 
-    /// The slab descriptor of block `k` (feeds
-    /// [`crate::coordinator::partition::assemble_slabs`]).
-    pub fn slab(&self, k: usize) -> Slab {
-        Slab {
-            axis: self.axis,
-            start: self.blocks[k].start,
-            len: self.blocks[k].len,
-            device: k,
+    /// Row-major grid coordinate of block `k`.
+    pub fn block_coord(&self, k: usize) -> Vec<usize> {
+        let mut coord = vec![0usize; self.grid.len()];
+        let mut rem = k;
+        for d in (0..self.grid.len()).rev() {
+            coord[d] = rem % self.grid[d];
+            rem /= self.grid[d];
+        }
+        coord
+    }
+
+    /// The N-D extent descriptor of block `k` (feeds
+    /// [`crate::coordinator::partition::assemble_blocks`]).
+    pub fn extent(&self, k: usize) -> BlockExtent {
+        BlockExtent {
+            coord: self.block_coord(k),
+            start: self.blocks[k].start.clone(),
+            len: self.blocks[k].len.clone(),
         }
     }
 
-    /// Indices of the blocks whose slab `[start, start + len)` intersects
-    /// `range` along the partition axis. The shared boundary node belongs
-    /// to *both* of its neighbours, so a range covering only that node
-    /// selects both.
-    pub fn blocks_intersecting(&self, range: &Range<usize>) -> Vec<usize> {
+    /// Indices of the blocks whose extent intersects `roi` in **every**
+    /// dimension (`roi` must have one range per axis). A shared boundary
+    /// plane belongs to *all* of its neighbours, so a region covering
+    /// only that plane selects each of them.
+    pub fn blocks_intersecting(&self, roi: &[Range<usize>]) -> Vec<usize> {
         self.blocks
             .iter()
             .enumerate()
-            .filter(|(_, b)| b.start < range.end && b.start + b.len > range.start)
+            .filter(|(_, b)| {
+                roi.len() == b.start.len()
+                    && roi
+                        .iter()
+                        .enumerate()
+                        .all(|(d, r)| b.start[d] < r.end && b.start[d] + b.len[d] > r.start)
+            })
             .map(|(k, _)| k)
             .collect()
     }
 
-    /// Serialize (index only — block payloads follow separately).
+    /// Serialize (index only — block payloads follow separately). Always
+    /// writes version 2.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.header_bytes());
         out.extend_from_slice(&SHARD_MAGIC);
         out.extend_from_slice(&SHARD_VERSION.to_le_bytes());
         out.push(self.dtype_bytes);
-        out.push(self.axis as u8);
+        out.push(0); // reserved (v1: partition axis)
         out.push(self.shape.len() as u8);
         out.push(0); // reserved
         out.extend_from_slice(&(self.blocks.len() as u16).to_le_bytes());
         for &d in &self.shape {
             out.extend_from_slice(&(d as u64).to_le_bytes());
         }
+        for &g in &self.grid {
+            out.extend_from_slice(&(g as u64).to_le_bytes());
+        }
         for b in &self.blocks {
-            out.extend_from_slice(&(b.start as u64).to_le_bytes());
-            out.extend_from_slice(&(b.len as u64).to_le_bytes());
+            for &s in &b.start {
+                out.extend_from_slice(&(s as u64).to_le_bytes());
+            }
+            for &l in &b.len {
+                out.extend_from_slice(&(l as u64).to_le_bytes());
+            }
             out.extend_from_slice(&b.offset.to_le_bytes());
             out.extend_from_slice(&b.bytes.to_le_bytes());
         }
@@ -207,16 +254,17 @@ impl ShardHeader {
     }
 
     /// Parse and validate a buffer that holds (at least) the shard
-    /// index: every field, slab tiling, and byte-layout contiguity, but
+    /// index: every field, grid tiling, and byte-layout contiguity, but
     /// **no payload accounting** — the buffer may end right after the
-    /// block table. Returns the header and its serialized size.
+    /// block table. Returns the header and its serialized size (of the
+    /// *parsed stream's* version — a v1 index reports its v1 length).
     pub fn parse_prefix(buf: &[u8]) -> Result<(ShardHeader, usize)> {
         let mut cur = Cursor::new(buf);
         let magic = cur.take(4)?;
         ensure!(magic == SHARD_MAGIC, "not an MGRS shard index (bad magic)");
         let version = cur.u16()?;
         ensure!(
-            version == SHARD_VERSION,
+            version == SHARD_VERSION || version == SHARD_VERSION_V1,
             "unsupported shard index version {version}"
         );
         let dtype_bytes = cur.u8()?;
@@ -224,14 +272,19 @@ impl ShardHeader {
             dtype_bytes == 4 || dtype_bytes == 8,
             "unsupported scalar width {dtype_bytes}"
         );
-        let axis = cur.u8()? as usize;
+        // byte 7: the partition axis in v1, reserved (0) in v2
+        let axis_byte = cur.u8()? as usize;
         let ndim = cur.u8()? as usize;
         ensure!(
             ndim >= 1 && ndim <= container::MAX_NDIM,
             "ndim {ndim} outside 1..={}",
             container::MAX_NDIM
         );
-        ensure!(axis < ndim, "partition axis {axis} outside 0..{ndim}");
+        if version == SHARD_VERSION_V1 {
+            ensure!(axis_byte < ndim, "partition axis {axis_byte} outside 0..{ndim}");
+        } else {
+            ensure!(axis_byte == 0, "reserved shard index byte 7 must be 0, got {axis_byte}");
+        }
         let reserved = cur.u8()?;
         ensure!(reserved == 0, "reserved shard index byte must be 0, got {reserved}");
         let nblocks = cur.u16()? as usize;
@@ -256,8 +309,49 @@ impl ShardHeader {
             shape.push(d as usize);
         }
 
+        let (grid, blocks) = if version == SHARD_VERSION_V1 {
+            Self::parse_v1_table(&mut cur, &shape, axis_byte, nblocks)?
+        } else {
+            Self::parse_v2_table(&mut cur, &shape, nblocks)?
+        };
+        let header_len = cur.pos();
+
+        // byte layout: payloads contiguous right after the index, sizes
+        // summing without overflow — a corrupt offset (past EOF, a gap,
+        // an overlap) dies here, not in a seek
+        let mut expect_offset = header_len as u64;
+        for (k, b) in blocks.iter().enumerate() {
+            ensure!(
+                b.offset == expect_offset,
+                "block {k} payload offset {} disagrees with the contiguous layout (expected {expect_offset})",
+                b.offset
+            );
+            expect_offset = expect_offset
+                .checked_add(b.bytes)
+                .ok_or_else(|| anyhow!("shard block sizes overflow"))?;
+        }
+
+        Ok((
+            ShardHeader {
+                dtype_bytes,
+                shape,
+                grid,
+                blocks,
+            },
+            header_len,
+        ))
+    }
+
+    /// Parse + validate a v1 (single-axis slab) block table and map it
+    /// onto the degenerate grid `grid[axis] = nblocks`, `1` elsewhere.
+    fn parse_v1_table(
+        cur: &mut Cursor<'_>,
+        shape: &[usize],
+        axis: usize,
+        nblocks: usize,
+    ) -> Result<(Vec<usize>, Vec<BlockMeta>)> {
         let axis_nodes = shape[axis] as u64;
-        let mut blocks = Vec::with_capacity(nblocks);
+        let mut slabs = Vec::with_capacity(nblocks);
         for k in 0..nblocks {
             let start = cur.u64()?;
             let len = cur.u64()?;
@@ -279,61 +373,149 @@ impl ShardHeader {
                 bytes >= container::FIXED_HEADER_LEN as u64,
                 "block {k} declares {bytes} byte(s) — too small to hold an MGRC container"
             );
-            blocks.push(BlockMeta {
-                start: start as usize,
-                len: len as usize,
-                offset,
-                bytes,
-            });
+            slabs.push((start as usize, len as usize, offset, bytes));
         }
-        let header_len = cur.pos();
 
         // slab tiling: blocks share boundary nodes and cover the axis
         ensure!(
-            blocks[0].start == 0,
+            slabs[0].0 == 0,
             "block 0 must start at node 0, starts at {}",
-            blocks[0].start
+            slabs[0].0
         );
         for k in 1..nblocks {
-            let expect = blocks[k - 1].start + blocks[k - 1].len - 1;
+            let expect = slabs[k - 1].0 + slabs[k - 1].1 - 1;
             ensure!(
-                blocks[k].start == expect,
+                slabs[k].0 == expect,
                 "block {k} starts at node {}, expected {expect} (neighbouring slabs share their boundary node)",
-                blocks[k].start
+                slabs[k].0
             );
         }
-        let last = blocks.last().expect("nblocks >= 1");
+        let last = slabs.last().expect("nblocks >= 1");
         ensure!(
-            last.start + last.len == shape[axis],
+            last.0 + last.1 == shape[axis],
             "blocks cover nodes 0..{} but the axis has {}",
-            last.start + last.len,
+            last.0 + last.1,
             shape[axis]
         );
 
-        // byte layout: payloads contiguous right after the index, sizes
-        // summing without overflow — a corrupt offset (past EOF, a gap,
-        // an overlap) dies here, not in a seek
-        let mut expect_offset = header_len as u64;
-        for (k, b) in blocks.iter().enumerate() {
+        let mut grid = vec![1usize; shape.len()];
+        grid[axis] = nblocks;
+        let blocks = slabs
+            .into_iter()
+            .map(|(start, len, offset, bytes)| {
+                let mut s = vec![0usize; shape.len()];
+                let mut l = shape.to_vec();
+                s[axis] = start;
+                l[axis] = len;
+                BlockMeta {
+                    start: s,
+                    len: l,
+                    offset,
+                    bytes,
+                }
+            })
+            .collect();
+        Ok((grid, blocks))
+    }
+
+    /// Parse + validate a v2 (N-D grid) index: grid dims multiply to the
+    /// block count, and every block entry carries exactly the canonical
+    /// node-sharing extent of its row-major grid coordinate — overlaps,
+    /// gaps, and off-grid extents are all typed errors.
+    fn parse_v2_table(
+        cur: &mut Cursor<'_>,
+        shape: &[usize],
+        nblocks: usize,
+    ) -> Result<(Vec<usize>, Vec<BlockMeta>)> {
+        let ndim = shape.len();
+        let mut grid = Vec::with_capacity(ndim);
+        let mut product: usize = 1;
+        for d in 0..ndim {
+            let g = cur.u64()? as usize;
             ensure!(
-                b.offset == expect_offset,
-                "block {k} payload offset {} disagrees with the contiguous layout (expected {expect_offset})",
-                b.offset
+                g >= 1 && g <= MAX_BLOCKS,
+                "grid dim {g} on axis {d} outside 1..={MAX_BLOCKS}"
             );
-            expect_offset = expect_offset
-                .checked_add(b.bytes)
-                .ok_or_else(|| anyhow!("shard block sizes overflow"))?;
+            product = product
+                .checked_mul(g)
+                .filter(|&p| p <= MAX_BLOCKS)
+                .ok_or_else(|| anyhow!("grid dims multiply past {MAX_BLOCKS} blocks"))?;
+            grid.push(g);
+        }
+        ensure!(
+            product == nblocks,
+            "grid dims {grid:?} declare {product} block(s), the table holds {nblocks}"
+        );
+
+        // per-axis canonical segment sizes; a split axis must obey the
+        // node-centered rule so every block is refactorable along it
+        let mut seg = Vec::with_capacity(ndim);
+        for d in 0..ndim {
+            if grid[d] == 1 {
+                seg.push(shape[d] - 1); // unsplit: the block spans the axis
+            } else {
+                ensure!(
+                    (shape[d] - 1) % grid[d] == 0,
+                    "grid dim {} does not divide axis {d} interior {}",
+                    grid[d],
+                    shape[d] - 1
+                );
+                let s = (shape[d] - 1) / grid[d];
+                ensure!(
+                    s >= 2 && s.is_power_of_two(),
+                    "axis {d} block interior must be 2^j (j>=1), got {s}"
+                );
+                seg.push(s);
+            }
         }
 
-        Ok((
-            ShardHeader {
-                dtype_bytes,
-                axis,
-                shape,
-                blocks,
-            },
-            header_len,
-        ))
+        let mut blocks = Vec::with_capacity(nblocks);
+        let mut coord = vec![0usize; ndim];
+        for k in 0..nblocks {
+            let mut start = Vec::with_capacity(ndim);
+            let mut len = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                start.push(cur.u64()? as usize);
+            }
+            for _ in 0..ndim {
+                len.push(cur.u64()? as usize);
+            }
+            let offset = cur.u64()?;
+            let bytes = cur.u64()?;
+            for d in 0..ndim {
+                let (want_start, want_len) = if grid[d] == 1 {
+                    (0, shape[d])
+                } else {
+                    (coord[d] * seg[d], seg[d] + 1)
+                };
+                ensure!(
+                    start[d] == want_start && len[d] == want_len,
+                    "block {k} extent {}..{} on axis {d} disagrees with grid coordinate {coord:?} \
+                     (expected {want_start}..{}; overlapping or gapped tilings are invalid)",
+                    start[d],
+                    start[d].saturating_add(len[d]),
+                    want_start + want_len
+                );
+            }
+            ensure!(
+                bytes >= container::FIXED_HEADER_LEN as u64,
+                "block {k} declares {bytes} byte(s) — too small to hold an MGRC container"
+            );
+            blocks.push(BlockMeta {
+                start,
+                len,
+                offset,
+                bytes,
+            });
+            for d in (0..ndim).rev() {
+                coord[d] += 1;
+                if coord[d] < grid[d] {
+                    break;
+                }
+                coord[d] = 0;
+            }
+        }
+        Ok((grid, blocks))
     }
 
     /// Parse and fully validate a shard buffer: [`ShardHeader::parse_prefix`]
@@ -350,12 +532,12 @@ impl ShardHeader {
     }
 }
 
-/// Writes sharded containers: partition the domain into node-sharing
-/// slabs ([`partition_slabs`]), refactor every slab **in parallel** on
-/// the coordinator worker pool ([`run_pooled`] — one independent
-/// hierarchy and [`ProgressiveWriter`] per block, intra-kernel forking
-/// auto-suppressed while the pool runs), then lay the per-block MGRC
-/// containers out behind one MGRS index.
+/// Writes sharded containers: partition the domain into a node-sharing
+/// N-D block grid ([`partition_grid`]), refactor every block **in
+/// parallel** on the coordinator worker pool ([`run_pooled`] — one
+/// independent hierarchy and [`ProgressiveWriter`] per block,
+/// intra-kernel forking auto-suppressed while the pool runs), then lay
+/// the per-block MGRC containers out behind one MGRS index.
 pub struct ShardWriter<T> {
     codec: Codec,
     workers: usize,
@@ -388,9 +570,9 @@ impl<T: Scalar> ShardWriter<T> {
     }
 
     /// Partition `data` along `axis` into `blocks` slabs, refactor each
-    /// under absolute error bound `eb`, and serialize the shard. Returns
-    /// the bytes and the index header. Every block satisfies `eb`
-    /// independently, so the assembled full-fidelity retrieval does too.
+    /// under absolute error bound `eb`, and serialize the shard — the
+    /// `[blocks, 1, 1, …]` special case of [`ShardWriter::write_grid`]
+    /// (rotated onto `axis`). Returns the bytes and the index header.
     pub fn write(
         &self,
         data: &Tensor<T>,
@@ -398,38 +580,70 @@ impl<T: Scalar> ShardWriter<T> {
         blocks: usize,
         eb: f64,
     ) -> Result<(Vec<u8>, ShardHeader)> {
-        let slabs = partition_slabs(data.shape(), axis, blocks)?;
-        let mut bshape = data.shape().to_vec();
-        bshape[axis] = slabs[0].len;
+        ensure!(
+            axis < data.shape().len(),
+            "partition axis {axis} outside 0..{} for shape {:?}",
+            data.shape().len(),
+            data.shape()
+        );
+        let mut grid = vec![1usize; data.shape().len()];
+        grid[axis] = blocks;
+        self.write_grid(data, &grid, eb)
+    }
+
+    /// Partition `data` into an N-D grid of `blocks_per_axis[d]` blocks
+    /// per axis ([`partition_grid`]), refactor each block under absolute
+    /// error bound `eb`, and serialize the shard. Returns the bytes and
+    /// the index header. Every block satisfies `eb` independently, so
+    /// the assembled full-fidelity retrieval does too.
+    pub fn write_grid(
+        &self,
+        data: &Tensor<T>,
+        blocks_per_axis: &[usize],
+        eb: f64,
+    ) -> Result<(Vec<u8>, ShardHeader)> {
+        let extents = partition_grid(data.shape(), blocks_per_axis)?;
+        ensure!(
+            extents.len() <= MAX_BLOCKS,
+            "grid {blocks_per_axis:?} declares {} blocks, the index caps at {MAX_BLOCKS}",
+            extents.len()
+        );
+        let bshape = extents[0].len.clone();
         let block_max = max_levels(&bshape).ok_or_else(|| {
             anyhow!("shard block shape {bshape:?} is not refactorable (every dimension must be 2^k + 1)")
         })?;
-        // every slab has the same shape, so one clamped level count
+        // every block has the same shape, so one clamped level count
         // serves them all (None = the block's own maximum)
         let levels = self.nlevels.map(|n| n.clamp(1, block_max));
 
         let codec = self.codec;
-        let results = run_pooled(self.workers, slabs.clone(), |slab: Slab| -> Result<Vec<u8>> {
-            let block = extract_slab(data, &slab);
-            let hierarchy = Hierarchy::uniform_with_levels(block.shape(), levels);
-            let mut w = ProgressiveWriter::<T>::new(hierarchy, codec);
-            let (bytes, _) = w.write(&block, eb)?;
-            Ok(bytes)
-        });
+        let results = run_pooled(
+            self.workers,
+            extents.clone(),
+            |ext: BlockExtent| -> Result<Vec<u8>> {
+                let block = extract_block(data, &ext);
+                let hierarchy = Hierarchy::uniform_with_levels(block.shape(), levels);
+                let mut w = ProgressiveWriter::<T>::new(hierarchy, codec);
+                let (bytes, _) = w.write(&block, eb)?;
+                Ok(bytes)
+            },
+        );
         let mut payloads = Vec::with_capacity(results.len());
         for (k, r) in results.into_iter().enumerate() {
             payloads.push(r.with_context(|| format!("refactoring shard block {k}"))?);
         }
 
-        let header_len = SHARD_FIXED_LEN + 8 * data.shape().len() + 32 * slabs.len();
+        let ndim = data.shape().len();
+        let header_len =
+            SHARD_FIXED_LEN + 16 * ndim + (16 * ndim + 16) * extents.len();
         let mut offset = header_len as u64;
-        let metas = slabs
+        let metas = extents
             .iter()
             .zip(&payloads)
-            .map(|(s, p)| {
+            .map(|(e, p)| {
                 let m = BlockMeta {
-                    start: s.start,
-                    len: s.len,
+                    start: e.start.clone(),
+                    len: e.len.clone(),
                     offset,
                     bytes: p.len() as u64,
                 };
@@ -439,14 +653,15 @@ impl<T: Scalar> ShardWriter<T> {
             .collect();
         let header = ShardHeader {
             dtype_bytes: T::BYTES as u8,
-            axis,
             shape: data.shape().to_vec(),
+            grid: blocks_per_axis.to_vec(),
             blocks: metas,
         };
         let mut out = header.to_bytes();
         for p in &payloads {
             out.extend_from_slice(p);
         }
+        debug_assert_eq!(header.header_bytes(), header_len);
         Ok((out, header))
     }
 
@@ -460,6 +675,20 @@ impl<T: Scalar> ShardWriter<T> {
         path: impl AsRef<Path>,
     ) -> Result<ShardHeader> {
         let (bytes, header) = self.write(data, axis, blocks, eb)?;
+        std::fs::write(path.as_ref(), bytes)
+            .with_context(|| format!("writing shard {}", path.as_ref().display()))?;
+        Ok(header)
+    }
+
+    /// [`ShardWriter::write_grid`] straight to a file.
+    pub fn write_grid_file(
+        &self,
+        data: &Tensor<T>,
+        blocks_per_axis: &[usize],
+        eb: f64,
+        path: impl AsRef<Path>,
+    ) -> Result<ShardHeader> {
+        let (bytes, header) = self.write_grid(data, blocks_per_axis, eb)?;
         std::fs::write(path.as_ref(), bytes)
             .with_context(|| format!("writing shard {}", path.as_ref().display()))?;
         Ok(header)
@@ -851,16 +1080,86 @@ mod tests {
         let (parsed, header_len) = ShardHeader::parse(&bytes).unwrap();
         assert_eq!(header_len, header.header_bytes());
         assert_eq!(parsed.shape, vec![17, 9]);
-        assert_eq!(parsed.axis, 0);
+        assert_eq!(parsed.grid, vec![2, 1]);
         assert_eq!(parsed.dtype_bytes, 8);
         assert_eq!(parsed.blocks, header.blocks);
-        assert_eq!(parsed.blocks[0].start, 0);
-        assert_eq!(parsed.blocks[0].len, 9);
-        assert_eq!(parsed.blocks[1].start, 8, "slabs share node 8");
+        assert_eq!(parsed.blocks[0].start, vec![0, 0]);
+        assert_eq!(parsed.blocks[0].len, vec![9, 9]);
+        assert_eq!(parsed.blocks[1].start, vec![8, 0], "slabs share node 8");
         assert_eq!(
             header.header_bytes() as u64 + header.payload_bytes(),
             bytes.len() as u64
         );
+    }
+
+    #[test]
+    fn grid_write_parse_roundtrip_and_decode() {
+        let t = field2d();
+        let w = ShardWriter::<f64>::new(Codec::Zlib, 2);
+        let (bytes, _) = w.write_grid(&t, &[2, 2], 1e-3).unwrap();
+        let (parsed, _) = ShardHeader::parse(&bytes).unwrap();
+        assert_eq!(parsed.grid, vec![2, 2]);
+        assert_eq!(parsed.nblocks(), 4);
+        // row-major coords: (0,0) (0,1) (1,0) (1,1)
+        assert_eq!(parsed.block_coord(2), vec![1, 0]);
+        assert_eq!(parsed.blocks[2].start, vec![8, 0]);
+        assert_eq!(parsed.blocks[2].len, vec![9, 5]);
+
+        let r = ShardReader::open(IoCursor::new(bytes)).unwrap();
+        for k in 0..r.nblocks() {
+            let lazy = r.lazy_block::<f64>(k).unwrap();
+            let n = lazy.nclasses();
+            let got = lazy.retrieve(n).unwrap();
+            let want = extract_block(&t, &parsed.extent(k));
+            assert!(linf(got.data(), want.data()) <= 1e-3, "block {k}");
+        }
+    }
+
+    #[test]
+    fn v1_indexes_still_parse_onto_a_degenerate_grid() {
+        // hand-assemble a v1 shard: v1 prelude + scalar slab table +
+        // the same MGRC payloads a v2 writer produces
+        let (_, v2, header) = shard2d(Codec::Zlib, 2);
+        let v2_len = header.header_bytes();
+        let ndim = header.shape.len();
+        let v1_len = SHARD_FIXED_LEN + 8 * ndim + 32 * header.nblocks();
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&SHARD_MAGIC);
+        v1.extend_from_slice(&SHARD_VERSION_V1.to_le_bytes());
+        v1.push(8); // dtype
+        v1.push(0); // partition axis
+        v1.push(ndim as u8);
+        v1.push(0);
+        v1.extend_from_slice(&(header.nblocks() as u16).to_le_bytes());
+        for &d in &header.shape {
+            v1.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        let mut offset = v1_len as u64;
+        for b in &header.blocks {
+            v1.extend_from_slice(&(b.start[0] as u64).to_le_bytes());
+            v1.extend_from_slice(&(b.len[0] as u64).to_le_bytes());
+            v1.extend_from_slice(&offset.to_le_bytes());
+            v1.extend_from_slice(&b.bytes.to_le_bytes());
+            offset += b.bytes;
+        }
+        assert_eq!(v1.len(), v1_len);
+        v1.extend_from_slice(&v2[v2_len..]);
+
+        assert_eq!(shard_var_len(&v1[..SHARD_FIXED_LEN]).unwrap(), v1_len - SHARD_FIXED_LEN);
+        let (parsed, parsed_len) = ShardHeader::parse(&v1).unwrap();
+        assert_eq!(parsed_len, v1_len, "v1 reports its own index length");
+        assert_eq!(parsed.grid, vec![2, 1], "axis 0 becomes the split grid dim");
+        assert_eq!(parsed.blocks[1].start, vec![8, 0]);
+        assert_eq!(parsed.blocks[1].len, vec![9, 9]);
+
+        // and the v1 stream is fully readable block for block
+        let r = ShardReader::open(IoCursor::new(v1)).unwrap();
+        let v2r = ShardReader::open(IoCursor::new(v2)).unwrap();
+        for k in 0..2 {
+            let got = r.lazy_block::<f64>(k).unwrap().retrieve(2).unwrap();
+            let want = v2r.lazy_block::<f64>(k).unwrap().retrieve(2).unwrap();
+            assert_eq!(got.data(), want.data(), "block {k}");
+        }
     }
 
     #[test]
@@ -877,8 +1176,7 @@ mod tests {
             let lazy = r.lazy_block::<f64>(k).unwrap();
             let n = lazy.nclasses();
             let got = lazy.retrieve(n).unwrap();
-            let slab = header.slab(k);
-            let want = extract_slab(&t, &slab);
+            let want = extract_block(&t, &header.extent(k));
             assert!(linf(got.data(), want.data()) <= 1e-3, "block {k}");
         }
         assert_eq!(r.bytes_read(), r.total_bytes());
@@ -916,25 +1214,36 @@ mod tests {
     #[test]
     fn corrupt_offset_tables_are_typed_errors() {
         let (_, bytes, header) = shard2d(Codec::Zlib, 2);
-        let table = SHARD_FIXED_LEN + 8 * header.shape.len();
+        let ndim = header.shape.len();
+        // v2 layout: shape + grid, then (16·ndim + 16)-byte entries of
+        // start[d]… len[d]… offset bytes
+        let table = SHARD_FIXED_LEN + 16 * ndim;
+        let entry = 16 * ndim + 16;
 
         // block 1's offset pointing past EOF breaks contiguity
         let mut m = bytes.clone();
-        let off_pos = table + 32 + 16;
+        let off_pos = table + entry + 16 * ndim;
         m[off_pos..off_pos + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(ShardHeader::parse(&m).is_err());
         assert!(ShardReader::open(IoCursor::new(m)).is_err());
 
         // block 0's byte length inflated past EOF fails accounting
         let mut m = bytes.clone();
-        let len_pos = table + 24;
+        let len_pos = table + 16 * ndim + 8;
         m[len_pos..len_pos + 8].copy_from_slice(&(1u64 << 40).to_le_bytes());
         assert!(ShardReader::open(IoCursor::new(m)).is_err());
 
-        // a slab-tiling gap (block 1 start bumped) is rejected
+        // a tiling gap (block 1's axis-0 start bumped off its grid
+        // coordinate) is rejected
         let mut m = bytes.clone();
-        let start_pos = table + 32;
+        let start_pos = table + entry;
         m[start_pos..start_pos + 8].copy_from_slice(&9u64.to_le_bytes());
+        assert!(ShardHeader::parse(&m).is_err());
+
+        // grid dims that do not multiply to nblocks are rejected
+        let mut m = bytes.clone();
+        let grid_pos = SHARD_FIXED_LEN + 8 * ndim;
+        m[grid_pos..grid_pos + 8].copy_from_slice(&3u64.to_le_bytes());
         assert!(ShardHeader::parse(&m).is_err());
     }
 
@@ -970,12 +1279,28 @@ mod tests {
     #[test]
     fn blocks_intersecting_shares_boundary_nodes() {
         let (_, _, header) = shard2d(Codec::Zlib, 2);
-        // slabs: [0..9) and [8..17), sharing node 8
-        assert_eq!(header.blocks_intersecting(&(0..3)), vec![0]);
-        assert_eq!(header.blocks_intersecting(&(10..17)), vec![1]);
-        assert_eq!(header.blocks_intersecting(&(8..9)), vec![0, 1]);
-        assert_eq!(header.blocks_intersecting(&(0..17)), vec![0, 1]);
-        assert!(header.blocks_intersecting(&(17..17)).is_empty());
+        // slabs: [0..9) and [8..17) on axis 0, sharing node 8
+        assert_eq!(header.blocks_intersecting(&[0..3, 0..9]), vec![0]);
+        assert_eq!(header.blocks_intersecting(&[10..17, 0..9]), vec![1]);
+        assert_eq!(header.blocks_intersecting(&[8..9, 0..9]), vec![0, 1]);
+        assert_eq!(header.blocks_intersecting(&[0..17, 0..9]), vec![0, 1]);
+        assert!(header.blocks_intersecting(&[17..17, 0..9]).is_empty());
+        // rank-mismatched regions never match
+        assert!(header.blocks_intersecting(&[0..17]).is_empty());
+    }
+
+    #[test]
+    fn blocks_intersecting_is_all_dimensions() {
+        let t = field2d();
+        let w = ShardWriter::<f64>::new(Codec::Zlib, 2);
+        let (_, header) = w.write_grid(&t, &[2, 2], 1e-3).unwrap();
+        // grid blocks: (0,0)=[0..9)x[0..5)  (0,1)=[0..9)x[4..9)
+        //              (1,0)=[8..17)x[0..5) (1,1)=[8..17)x[4..9)
+        assert_eq!(header.blocks_intersecting(&[0..3, 0..3]), vec![0]);
+        assert_eq!(header.blocks_intersecting(&[10..17, 6..9]), vec![3]);
+        assert_eq!(header.blocks_intersecting(&[0..3, 0..9]), vec![0, 1]);
+        assert_eq!(header.blocks_intersecting(&[8..9, 4..5]), vec![0, 1, 2, 3]);
+        assert!(header.blocks_intersecting(&[0..0, 0..9]).is_empty());
     }
 
     #[test]

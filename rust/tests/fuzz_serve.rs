@@ -30,6 +30,21 @@ fn smooth(shape: &[usize]) -> AnyTensor {
     .into()
 }
 
+/// A server over a `[2, 2]`-grid shard plus the serial full
+/// reconstruction.
+fn serve_grid_shard() -> (Server, AnyTensor) {
+    let s = Session::builder().shape(&[17, 9]).build().unwrap();
+    let sharded = s.refactor_sharded_grid(&smooth(&[17, 9]), &[2, 2]).unwrap();
+    let want = sharded.retrieve(Fidelity::All).unwrap();
+    let server = Server::start(
+        ServeTarget::Shard(sharded),
+        "127.0.0.1:0",
+        ServeConfig::default(),
+    )
+    .unwrap();
+    (server, want)
+}
+
 /// A server over a small container plus the serial baseline tensor.
 fn serve_container() -> (Server, AnyTensor) {
     let s = Session::builder().shape(&[17, 17]).build().unwrap();
@@ -213,6 +228,75 @@ fn fidelity_and_region_errors_are_typed_not_protocol() {
     let stats = server.shutdown();
     assert_eq!(stats.errors, 3);
     assert_eq!(stats.framing_errors, 0);
+}
+
+#[test]
+fn nd_region_abuse_gets_typed_errors_and_the_connection_keeps_serving() {
+    let (server, want) = serve_grid_shard();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // rank mismatches against the 2-D grid-sharded domain → REGION
+    for roi in [vec![0u64..4], vec![0u64..4, 0..4, 0..4]] {
+        match client.retrieve_region(&roi, Fidelity::All) {
+            Err(ClientError::Remote { code, message }) => {
+                assert_eq!(code, status::REGION, "{roi:?}");
+                assert!(message.contains("dimension"), "{message}");
+            }
+            other => panic!("expected region error for {roi:?}, got {other:?}"),
+        }
+    }
+    // out-of-grid ROIs on either axis → REGION, naming the axis bound
+    for roi in [vec![0u64..99, 0..4], vec![0u64..17, 9..12]] {
+        match client.retrieve_region(&roi, Fidelity::All) {
+            Err(ClientError::Remote { code, message }) => {
+                assert_eq!(code, status::REGION, "{roi:?}");
+                assert!(message.contains("outside"), "{message}");
+            }
+            other => panic!("expected region error for {roi:?}, got {other:?}"),
+        }
+    }
+    // astronomically large wire coordinates stay a typed REGION error
+    match client.retrieve_region(&[(1u64 << 40)..(1 << 41), 0..4], Fidelity::All) {
+        Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::REGION),
+        other => panic!("expected region error, got {other:?}"),
+    }
+    // the SAME client connection still serves after five rejections:
+    // a full-domain ROI equals the full reconstruction, bit-exact
+    let got = client
+        .retrieve_region(&[0..17, 0..9], Fidelity::All)
+        .unwrap();
+    assert_eq!(got.tensor, want);
+    drop(client);
+
+    // reversed / empty bounds never reach the shard: decode_request
+    // rejects them, so the reply is PROTOCOL, not REGION — and the raw
+    // connection keeps serving afterwards
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    for roi in [vec![5u64..3], vec![0u64..0, 0..9], vec![3u64..3, 0..9]] {
+        let body = encode_request(&Request::RetrieveRegion(roi.clone(), Fidelity::All));
+        write_frame(&mut raw, &body).unwrap();
+        let resp = read_frame(&mut raw, MAX_RESPONSE_LEN).unwrap().unwrap();
+        match decode_response(&resp, ResponseKind::Tensor).unwrap() {
+            Response::Error { code, message } => {
+                assert_eq!(code, status::PROTOCOL, "{roi:?}");
+                assert!(message.contains("empty or inverted"), "{message}");
+            }
+            other => panic!("expected protocol error for {roi:?}, got {other:?}"),
+        }
+    }
+    write_frame(&mut raw, &encode_request(&Request::Retrieve(Fidelity::All))).unwrap();
+    let resp = read_frame(&mut raw, MAX_RESPONSE_LEN).unwrap().unwrap();
+    assert!(matches!(
+        decode_response(&resp, ResponseKind::Tensor).unwrap(),
+        Response::Tensor(_)
+    ));
+    drop(raw);
+
+    assert_daemon_serves(&server, &want);
+    let stats = server.shutdown();
+    assert_eq!(stats.errors, 8, "5 REGION + 3 PROTOCOL: {stats:?}");
+    assert_eq!(stats.framing_errors, 0, "{stats:?}");
+    assert!(stats.ok >= 3, "{stats:?}");
 }
 
 #[test]

@@ -20,6 +20,39 @@ fn sample_shard(codec: Codec, blocks: usize) -> (Vec<u8>, ShardHeader) {
     w.write(&field, 0, blocks, 1e-3).unwrap()
 }
 
+fn sample_grid_shard(codec: Codec) -> (Vec<u8>, ShardHeader) {
+    let field = Tensor::<f64>::from_fn(&[17, 9], |idx| {
+        ((idx[0] as f64) * 0.37).sin() + ((idx[1] as f64) * 0.21).cos()
+    });
+    let w = ShardWriter::<f64>::new(codec, 2);
+    w.write_grid(&field, &[2, 2], 1e-3).unwrap()
+}
+
+/// A hand-built, well-formed **v1** (single-axis slab) index over
+/// [17, 9]: two slabs on axis 0, 40-byte placeholder payloads.
+fn v1_stream() -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(b"MGRS");
+    b.extend_from_slice(&1u16.to_le_bytes());
+    b.push(8); // f64
+    b.push(0); // partition axis (v1 meaning of byte 7)
+    b.push(2); // ndim
+    b.push(0); // reserved
+    b.extend_from_slice(&2u16.to_le_bytes()); // nblocks
+    for d in [17u64, 9] {
+        b.extend_from_slice(&d.to_le_bytes());
+    }
+    let hlen = (SHARD_FIXED_LEN + 8 * 2 + 32 * 2) as u64;
+    for (start, len, off) in [(0u64, 9u64, hlen), (8, 9, hlen + 40)] {
+        b.extend_from_slice(&start.to_le_bytes());
+        b.extend_from_slice(&len.to_le_bytes());
+        b.extend_from_slice(&off.to_le_bytes());
+        b.extend_from_slice(&40u64.to_le_bytes());
+    }
+    b.extend(std::iter::repeat(0u8).take(80)); // placeholder payloads
+    b
+}
+
 /// Open + exhaustively exercise a (possibly corrupt) shard buffer: the
 /// index parse, every block open, and every retrieval prefix. Nothing
 /// here may panic; errors are fine.
@@ -114,13 +147,16 @@ fn foreign_magic_and_garbage_rejected() {
 #[test]
 fn offset_tables_pointing_past_eof_are_rejected() {
     let (bytes, header) = sample_shard(Codec::Zlib, 2);
-    let table = SHARD_FIXED_LEN + 8 * header.shape.len();
-    // per-block entry layout: start(0..8) len(8..16) offset(16..24) bytes(24..32)
+    let ndim = header.shape.len();
+    // v2 geometry: shape + grid dims precede the table; each entry is
+    // start[d]×ndim, len[d]×ndim, offset, bytes
+    let table = SHARD_FIXED_LEN + 16 * ndim;
+    let entry = 16 * ndim + 16;
     for k in 0..header.nblocks() {
-        for field in [16usize, 24] {
+        for field in [16 * ndim, 16 * ndim + 8] {
             for huge in [u64::MAX, bytes.len() as u64 + 1, 1 << 40] {
                 let mut m = bytes.clone();
-                let pos = table + 32 * k + field;
+                let pos = table + entry * k + field;
                 m[pos..pos + 8].copy_from_slice(&huge.to_le_bytes());
                 assert!(
                     ShardHeader::parse(&m).is_err() || ShardReader::open(Cursor::new(m.clone())).is_err(),
@@ -130,6 +166,118 @@ fn offset_tables_pointing_past_eof_are_rejected() {
             }
         }
     }
+}
+
+#[test]
+fn grid_dims_disagreeing_with_the_table_are_rejected() {
+    let (bytes, header) = sample_grid_shard(Codec::Zlib);
+    assert_eq!(header.grid, vec![2, 2]);
+    let ndim = header.shape.len();
+    let gpos = SHARD_FIXED_LEN + 8 * ndim; // grid dims sit right after the shape
+    for d in 0..ndim {
+        for bad in [0u64, 3, 5, 4096, u64::MAX] {
+            let mut m = bytes.clone();
+            m[gpos + 8 * d..gpos + 8 * d + 8].copy_from_slice(&bad.to_le_bytes());
+            assert!(
+                ShardHeader::parse(&m).is_err(),
+                "grid dim {bad} on axis {d} must be rejected"
+            );
+            exercise(&m);
+        }
+    }
+    // a plausible-but-wrong grid — right block count, wrong tiling —
+    // dies on the canonical-extent check, not the product check
+    let mut m = bytes.clone();
+    m[gpos..gpos + 8].copy_from_slice(&4u64.to_le_bytes());
+    m[gpos + 8..gpos + 16].copy_from_slice(&1u64.to_le_bytes());
+    assert!(ShardHeader::parse(&m).is_err(), "[4, 1] relabel of a [2, 2] table");
+    exercise(&m);
+}
+
+#[test]
+fn overlapping_or_gapped_extents_are_rejected() {
+    let (bytes, header) = sample_grid_shard(Codec::HuffRle);
+    let ndim = header.shape.len();
+    let table = SHARD_FIXED_LEN + 16 * ndim;
+    let entry = 16 * ndim + 16;
+    // nudge every start/len coordinate of every block by ±1: each such
+    // mutation overlaps or gaps the tiling and must fail the
+    // canonical-extent check — fail closed, never panic
+    for k in 0..header.nblocks() {
+        for field in (0..16 * ndim).step_by(8) {
+            for delta in [1i64, -1] {
+                let mut m = bytes.clone();
+                let pos = table + entry * k + field;
+                let v = u64::from_le_bytes(m[pos..pos + 8].try_into().unwrap());
+                let nv = v.wrapping_add(delta as u64);
+                m[pos..pos + 8].copy_from_slice(&nv.to_le_bytes());
+                assert!(
+                    ShardHeader::parse(&m).is_err(),
+                    "block {k} entry byte +{field} nudged by {delta} must be rejected"
+                );
+                exercise(&m);
+            }
+        }
+    }
+}
+
+#[test]
+fn v1_indexes_parse_onto_a_degenerate_grid() {
+    let v1 = v1_stream();
+    let (h, hlen) = ShardHeader::parse_prefix(&v1).unwrap();
+    assert_eq!(hlen, SHARD_FIXED_LEN + 8 * 2 + 32 * 2);
+    assert_eq!(h.grid, vec![2, 1], "axis-0 slabs become a [parts, 1] grid");
+    assert_eq!(h.blocks[0].start, vec![0, 0]);
+    assert_eq!(h.blocks[0].len, vec![9, 9]);
+    assert_eq!(h.blocks[1].start, vec![8, 0]);
+    assert_eq!(h.blocks[1].len, vec![9, 9]);
+    assert_eq!(ShardHeader::parse(&v1).unwrap().0.grid, vec![2, 1]);
+    // reserialization always writes v2, whose table is strictly longer
+    assert_eq!(h.to_bytes().len(), h.header_bytes());
+    assert!(h.header_bytes() > hlen);
+}
+
+#[test]
+fn version_byte_flips_fail_closed() {
+    // a v1 stream relabeled version 2 lacks the grid dims the v2 table
+    // starts with — the first "grid dim" it reads is block 0's start
+    let mut m = v1_stream();
+    m[4..6].copy_from_slice(&2u16.to_le_bytes());
+    assert!(ShardHeader::parse(&m).is_err(), "v1 table as v2 must be rejected");
+    exercise(&m);
+
+    // ... and a v2 stream relabeled version 1 misparses its grid dims as
+    // the first slab entry — also rejected, never panicking
+    let (v2, _) = sample_grid_shard(Codec::Zlib);
+    let mut m = v2.clone();
+    m[4..6].copy_from_slice(&1u16.to_le_bytes());
+    assert!(ShardHeader::parse(&m).is_err(), "v2 table as v1 must be rejected");
+    exercise(&m);
+
+    // unknown future versions are rejected up front
+    for ver in [0u16, 3, 7, u16::MAX] {
+        let mut m = v2.clone();
+        m[4..6].copy_from_slice(&ver.to_le_bytes());
+        assert!(ShardHeader::parse(&m).is_err(), "version {ver} must be rejected");
+        exercise(&m);
+    }
+}
+
+#[test]
+fn truncated_v2_headers_fail_closed() {
+    let (bytes, header) = sample_grid_shard(Codec::Zlib);
+    // every prefix of the v2 index region — mid-prelude, mid-shape,
+    // mid-grid, mid-table — is a typed error
+    for len in 0..header.header_bytes() {
+        assert!(ShardHeader::parse(&bytes[..len]).is_err(), "prefix {len}");
+        assert!(ShardHeader::parse_prefix(&bytes[..len]).is_err(), "prefix {len}");
+        exercise(&bytes[..len]);
+    }
+    // the bare index (no payloads) satisfies parse_prefix but not the
+    // full payload-accounting parse
+    let hdr = &bytes[..header.header_bytes()];
+    assert!(ShardHeader::parse_prefix(hdr).is_ok());
+    assert!(ShardHeader::parse(hdr).is_err());
 }
 
 #[test]

@@ -1,11 +1,17 @@
-//! Property-style matrix over the §3.6 slab partitioning: for every
+//! Property-style matrix over the §3.6 partitioning: for every
 //! axis × 1D/2D/3D shape × f32/f64 × valid part count (including the
 //! 2-part and max-part boundaries), extraction followed by reassembly
-//! reproduces the original tensor **bitwise**, and every slab is itself
-//! refactorable (`max_levels` is `Some` — the property that makes
-//! embarrassing-parallel refactoring possible at all).
+//! reproduces the original tensor **bitwise**, and every block is
+//! itself refactorable (`max_levels` is `Some` — the property that
+//! makes embarrassing-parallel refactoring possible at all). The same
+//! matrix runs for single-axis slabs and for N-D block grids, and the
+//! `[p, 1, 1, …]` degenerate grid is checked against the slab
+//! partition extent-for-extent.
 
-use mgr::coordinator::{assemble_slabs, extract_slab, partition_slabs, Slab};
+use mgr::coordinator::{
+    assemble_blocks, assemble_slabs, extract_block, extract_slab, partition_grid,
+    partition_slabs, BlockExtent, Slab,
+};
 use mgr::grid::{max_levels, Tensor};
 use mgr::util::rng::Rng;
 use mgr::util::Scalar;
@@ -99,6 +105,119 @@ fn two_part_and_max_part_boundaries() {
     }
     // one past the maximum is rejected (interior would be 1 node)
     assert!(partition_slabs(&shape, 0, 32).is_err());
+}
+
+fn grid_roundtrip_case<T: Scalar>(shape: &[usize], grid: &[usize], seed: u64) {
+    let mut rng = Rng::new(seed);
+    let t = Tensor::<T>::from_fn(shape, |_| T::from_f64(rng.normal()));
+    let extents = partition_grid(shape, grid)
+        .unwrap_or_else(|e| panic!("{shape:?} grid {grid:?}: {e}"));
+    assert_eq!(extents.len(), grid.iter().product::<usize>(), "{shape:?} grid {grid:?}");
+
+    let mut parts: Vec<(BlockExtent, Tensor<T>)> = Vec::new();
+    for e in &extents {
+        let block = extract_block(&t, e);
+        // per-block refactorability: every dimension of every block is 2^k+1
+        assert!(
+            max_levels(block.shape()).is_some(),
+            "block {e:?} of {shape:?} has unrefactorable shape {:?}",
+            block.shape()
+        );
+        assert_eq!(block.shape(), e.len.as_slice());
+        parts.push((e.clone(), block));
+    }
+
+    // bitwise roundtrip (exact equality, not an epsilon)
+    let back = assemble_blocks(shape, &parts);
+    assert_eq!(back, t, "{shape:?} grid {grid:?}");
+}
+
+#[test]
+fn grid_matrix_roundtrips_bitwise_for_every_shape_dtype_and_grid() {
+    // all-axes-2^k+1 shapes (grid partitioning validates every axis)
+    let shapes: &[&[usize]] = &[&[17], &[33], &[17, 9], &[9, 33], &[5, 9, 17], &[9, 9, 9]];
+    let mut seed = 5000;
+    for shape in shapes {
+        // a few valid part counts per axis, then the full cross product
+        let per_axis: Vec<Vec<usize>> = shape
+            .iter()
+            .map(|&n| valid_parts(n).into_iter().take(3).collect())
+            .collect();
+        assert!(per_axis.iter().all(|p| !p.is_empty()), "{shape:?}");
+        let mut pick = vec![0usize; shape.len()];
+        loop {
+            let grid: Vec<usize> = pick.iter().zip(&per_axis).map(|(&i, p)| p[i]).collect();
+            seed += 2;
+            grid_roundtrip_case::<f64>(shape, &grid, seed);
+            grid_roundtrip_case::<f32>(shape, &grid, seed + 1);
+            let mut done = true;
+            for d in (0..pick.len()).rev() {
+                pick[d] += 1;
+                if pick[d] < per_axis[d].len() {
+                    done = false;
+                    break;
+                }
+                pick[d] = 0;
+            }
+            if done {
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_grid_matches_the_slab_partition() {
+    // [p, 1] (and [1, p]) grids must produce extent-for-extent the same
+    // decomposition as the slab partitioner on that axis
+    let shape = [33usize, 9];
+    for axis in 0..2 {
+        for p in [2usize, 4] {
+            let slabs = partition_slabs(&shape, axis, p).unwrap();
+            let mut gridspec = vec![1usize; 2];
+            gridspec[axis] = p;
+            let extents = partition_grid(&shape, &gridspec).unwrap();
+            assert_eq!(extents.len(), slabs.len());
+            for (e, s) in extents.iter().zip(&slabs) {
+                let mut start = vec![0usize; 2];
+                let mut len = shape.to_vec();
+                start[axis] = s.start;
+                len[axis] = s.len;
+                assert_eq!(e.start, start, "axis {axis} parts {p}");
+                assert_eq!(e.len, len, "axis {axis} parts {p}");
+            }
+        }
+    }
+}
+
+#[test]
+fn boundary_grids_and_rejections() {
+    // [17, 9]: the maximal grid has 2-node interiors on both axes — the
+    // thinnest legal blocks (3 nodes per side)
+    grid_roundtrip_case::<f64>(&[17, 9], &[8, 4], 99);
+    grid_roundtrip_case::<f32>(&[17, 9], &[8, 4], 100);
+    // one past the maximum on either axis is rejected
+    assert!(partition_grid(&[17, 9], &[16, 4]).is_err());
+    assert!(partition_grid(&[17, 9], &[8, 8]).is_err());
+    // non-dividing part counts are rejected
+    assert!(partition_grid(&[17, 9], &[3, 1]).is_err());
+    // rank mismatches are rejected with a typed error, never a panic
+    assert!(partition_grid(&[17, 9], &[2]).is_err());
+    assert!(partition_grid(&[17, 9], &[2, 2, 2]).is_err());
+    assert!(partition_grid(&[], &[]).is_err());
+}
+
+#[test]
+fn single_block_grid_is_the_identity_partition() {
+    let shape = [17usize, 9];
+    let mut rng = Rng::new(13);
+    let t = Tensor::<f64>::from_fn(&shape, |_| rng.normal());
+    let extents = partition_grid(&shape, &[1, 1]).unwrap();
+    assert_eq!(extents.len(), 1);
+    assert_eq!(extents[0].start, vec![0, 0]);
+    assert_eq!(extents[0].len, vec![17, 9]);
+    let block = extract_block(&t, &extents[0]);
+    assert_eq!(block, t, "one block is the whole domain, bitwise");
 }
 
 #[test]

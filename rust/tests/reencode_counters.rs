@@ -1,0 +1,78 @@
+//! Proof that `mgr reencode` takes the structurally-cheap paths: pure
+//! fidelity truncation performs **zero** entropy decodes and **zero**
+//! dequantizations, and a codec conversion re-runs the entropy stage
+//! only (it never dequantizes).
+//!
+//! The evidence is the process-wide monotonic call counters
+//! [`decode_stream_count`] / [`dequantize_count`]. Because the counters
+//! are process-wide and `cargo test` runs a binary's `#[test]`s on
+//! parallel threads, this file deliberately holds exactly ONE test —
+//! integration-test binaries are separate processes, so nothing else
+//! can increment the counters between the snapshots below.
+//!
+//! [`decode_stream_count`]: mgr::compress::pipeline::decode_stream_count
+//! [`dequantize_count`]: mgr::compress::quantize::dequantize_count
+
+use mgr::api::reencode::{reencode, ReencodeSpec};
+use mgr::api::Fidelity;
+use mgr::compress::pipeline::decode_stream_count;
+use mgr::compress::quantize::dequantize_count;
+use mgr::compress::Codec;
+use mgr::grid::{Hierarchy, Tensor};
+use mgr::storage::{ProgressiveWriter, ShardWriter};
+
+#[test]
+fn truncation_decodes_nothing_and_recode_never_dequantizes() {
+    // build the artifacts BEFORE snapshotting: writing measures the
+    // per-class annotations by decoding, which is expected to count
+    let t = Tensor::<f64>::from_fn(&[17, 9], |idx| {
+        ((idx[0] as f64) * 0.37).sin() + ((idx[1] as f64) * 0.21).cos()
+    });
+    let h = Hierarchy::uniform(t.shape());
+    let mut w = ProgressiveWriter::<f64>::new(h, Codec::Zlib);
+    let (container, _) = w.write(&t, 1e-3).unwrap();
+    let (shard, _) = ShardWriter::<f64>::new(Codec::Zlib, 1)
+        .write_grid(&t, &[2, 2], 1e-3)
+        .unwrap();
+
+    // pure truncation — a container and a whole shard: zero entropy
+    // decodes, zero dequantizations, on top of the reports agreeing
+    let spec = ReencodeSpec {
+        fidelity: Fidelity::Classes(2),
+        ..Default::default()
+    };
+    let d0 = decode_stream_count();
+    let q0 = dequantize_count();
+    let (_, r1) = reencode(&container, &spec).unwrap();
+    let (_, r2) = reencode(&shard, &spec).unwrap();
+    assert_eq!(
+        decode_stream_count() - d0,
+        0,
+        "truncation must not entropy-decode"
+    );
+    assert_eq!(dequantize_count() - q0, 0, "truncation must not dequantize");
+    assert_eq!(r1.bytes_decoded, 0);
+    assert_eq!(r2.bytes_decoded, 0);
+    assert_eq!(r1.blocks_copied, 1);
+    assert_eq!(r2.blocks_copied, 4);
+
+    // codec conversion: the entropy stage runs (once per kept class),
+    // dequantization still never does
+    let spec = ReencodeSpec {
+        codec: Some(Codec::HuffRle),
+        ..Default::default()
+    };
+    let d0 = decode_stream_count();
+    let q0 = dequantize_count();
+    let (_, r3) = reencode(&container, &spec).unwrap();
+    assert!(
+        decode_stream_count() > d0,
+        "codec conversion re-runs the entropy stage"
+    );
+    assert_eq!(
+        dequantize_count() - q0,
+        0,
+        "codec conversion must not dequantize"
+    );
+    assert!(r3.bytes_decoded > 0);
+}

@@ -1,0 +1,227 @@
+//! Acceptance matrix for `mgr reencode` (`api::reencode`): the three
+//! structurally-cheap conversions, exercised through the public facade
+//! across dtype × codec.
+//!
+//! * truncation: the truncated artifact retrieves **bit-identically**
+//!   to `Fidelity::Classes(K)` on the original;
+//! * same-grid reencode at full fidelity is the byte-level identity;
+//! * re-tiling onto a grid that shares no extents is byte-identical to
+//!   `ShardWriter::write_grid` on the full reconstruction (with the
+//!   input's own error bound / level cap / codec), and its compounded
+//!   error stays within 2·eb of the original field;
+//! * a single-block N-D region of interest reads exactly the index
+//!   plus that one block's bytes.
+
+use std::io::Cursor;
+
+use mgr::api::reencode::{reencode, ReencodeSpec};
+use mgr::api::{AnyTensor, Fidelity, OpenContainer, Session, Sharded};
+use mgr::compress::Codec;
+use mgr::coordinator::assemble_blocks;
+use mgr::grid::Tensor;
+use mgr::storage::container::ContainerHeader;
+use mgr::storage::shard::is_shard;
+use mgr::storage::{BlockMeta, ProgressiveReader, ShardHeader, ShardWriter};
+use mgr::util::{stats, Scalar};
+
+fn smooth<T: Scalar>(shape: &[usize]) -> Tensor<T> {
+    Tensor::from_fn(shape, |idx| {
+        T::from_f64(
+            idx.iter()
+                .enumerate()
+                .map(|(d, &i)| ((d + 2) as f64 * i as f64 * 0.23).sin())
+                .sum(),
+        )
+    })
+}
+
+fn slice<'a>(bytes: &'a [u8], b: &BlockMeta) -> &'a [u8] {
+    &bytes[b.offset as usize..(b.offset + b.bytes) as usize]
+}
+
+#[test]
+fn truncated_shard_retrieves_like_classes_k() {
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        let t = smooth::<f64>(&[17, 9]);
+        let (bytes, sh) = ShardWriter::<f64>::new(codec, 2)
+            .write_grid(&t, &[2, 2], 1e-3)
+            .unwrap();
+        let original = Sharded::from_bytes(bytes.clone()).unwrap();
+        let want = original.retrieve(Fidelity::Classes(2)).unwrap();
+
+        let spec = ReencodeSpec {
+            fidelity: Fidelity::Classes(2),
+            ..Default::default()
+        };
+        let (out, report) = reencode(&bytes, &spec).unwrap();
+        assert_eq!(report.blocks_copied, sh.nblocks(), "{codec:?}: pure byte copies");
+        assert_eq!(report.bytes_decoded, 0, "{codec:?}: truncation never decodes");
+        assert!(report.bytes_out < report.bytes_in, "{codec:?}");
+
+        // the truncated shard's *full* retrieval is the original's
+        // Classes(2) retrieval, bitwise
+        let truncated = Sharded::from_bytes(out).unwrap();
+        let got = truncated.retrieve(Fidelity::All).unwrap();
+        assert_eq!(got, want, "{codec:?}");
+    }
+}
+
+#[test]
+fn truncated_container_retrieves_like_classes_k_via_the_session() {
+    let session = Session::builder().shape(&[17, 17]).build().unwrap();
+    let field: AnyTensor = smooth::<f64>(&[17, 17]).into();
+    let refactored = session.refactor(&field).unwrap();
+    let want = session.retrieve(&refactored, Fidelity::Classes(2)).unwrap();
+
+    let spec = ReencodeSpec {
+        fidelity: Fidelity::Classes(2),
+        ..Default::default()
+    };
+    let (out, report) = session.reencode(refactored.as_bytes(), &spec).unwrap();
+    assert_eq!(report.bytes_decoded, 0);
+    let container = OpenContainer::open(Cursor::new(out)).unwrap();
+    let got = container.retrieve(Fidelity::All).unwrap();
+    assert_eq!(got.tensor(), &want, "truncated artifact == Classes(2) retrieval");
+}
+
+#[test]
+fn identical_grid_reencode_is_the_byte_identity() {
+    for codec in [Codec::Zlib, Codec::HuffRle] {
+        let t = smooth::<f64>(&[17, 9]);
+        let (bytes, sh) = ShardWriter::<f64>::new(codec, 2)
+            .write_grid(&t, &[2, 2], 1e-3)
+            .unwrap();
+        let spec = ReencodeSpec {
+            blocks_per_axis: Some(vec![2, 2]),
+            ..Default::default()
+        };
+        let (out, report) = reencode(&bytes, &spec).unwrap();
+        assert_eq!(out, bytes, "{codec:?}: same grid + full fidelity is the identity");
+        assert_eq!(report.blocks_copied, sh.nblocks(), "{codec:?}");
+        assert_eq!(report.bytes_decoded, 0, "{codec:?}");
+    }
+}
+
+fn retile_case<T: Scalar>(codec: Codec) {
+    let t = smooth::<T>(&[17, 9]);
+    let (bytes, sh) = ShardWriter::<T>::new(codec, 2)
+        .write_grid(&t, &[2, 2], 1e-3)
+        .unwrap();
+    // [2, 1] shares no extent with [2, 2]: every output block is cut
+    // fresh — the pure re-tile path, with nothing byte-copied
+    let spec = ReencodeSpec {
+        blocks_per_axis: Some(vec![2, 1]),
+        ..Default::default()
+    };
+    let (out, report) = reencode(&bytes, &spec).unwrap();
+    assert!(is_shard(&out));
+    assert_eq!(report.blocks_in, 4, "{codec:?}");
+    assert_eq!(report.blocks_out, 2, "{codec:?}");
+    assert_eq!(report.blocks_copied, 0, "{codec:?}: no shared extents");
+    assert!(report.bytes_decoded > 0, "{codec:?}");
+
+    // comparator: the full reconstruction re-sharded by write_grid with
+    // the input's own parameters (eb, level cap, codec) — the re-tile
+    // must land on these bytes exactly
+    let mut parts = Vec::new();
+    for k in 0..sh.nblocks() {
+        let mut r = ProgressiveReader::<T>::open(slice(&bytes, &sh.blocks[k])).unwrap();
+        let n = r.nclasses();
+        parts.push((sh.extent(k), r.retrieve(n).unwrap()));
+    }
+    let full = assemble_blocks(&sh.shape, &parts);
+    let (h0, _) = ContainerHeader::parse(slice(&bytes, &sh.blocks[0])).unwrap();
+    let (want, _) = ShardWriter::<T>::new(codec, 1)
+        .with_nlevels(h0.nlevels)
+        .write_grid(&full, &[2, 1], h0.quant.error_bound)
+        .unwrap();
+    assert_eq!(out, want, "{codec:?}: re-tile == write_grid on the reconstruction");
+
+    // compounded error: one quantize-dequantize round trip on top of
+    // the original refactoring stays within 2·eb of the source field
+    let (sh2, _) = ShardHeader::parse(&out).unwrap();
+    let mut parts = Vec::new();
+    for k in 0..sh2.nblocks() {
+        let mut r = ProgressiveReader::<T>::open(slice(&out, &sh2.blocks[k])).unwrap();
+        let n = r.nclasses();
+        parts.push((sh2.extent(k), r.retrieve(n).unwrap()));
+    }
+    let got = assemble_blocks(&sh2.shape, &parts);
+    let got64: Vec<f64> = got.data().iter().map(|v| v.to_f64()).collect();
+    let src64: Vec<f64> = t.data().iter().map(|v| v.to_f64()).collect();
+    assert!(
+        stats::linf(&got64, &src64) <= 2e-3,
+        "{codec:?}: compounded error must stay within 2·eb"
+    );
+}
+
+#[test]
+fn retile_matches_write_grid_for_every_dtype_and_codec() {
+    retile_case::<f64>(Codec::Zlib);
+    retile_case::<f64>(Codec::HuffRle);
+    retile_case::<f32>(Codec::Zlib);
+    retile_case::<f32>(Codec::HuffRle);
+}
+
+#[test]
+fn shard_codec_recode_roundtrips_to_the_original_bytes() {
+    let t = smooth::<f64>(&[17, 9]);
+    let (bytes, sh) = ShardWriter::<f64>::new(Codec::Zlib, 2)
+        .write_grid(&t, &[2, 2], 1e-3)
+        .unwrap();
+    let there = ReencodeSpec {
+        codec: Some(Codec::HuffRle),
+        ..Default::default()
+    };
+    let (out, report) = reencode(&bytes, &there).unwrap();
+    assert_eq!(report.blocks_copied, 0);
+    assert!(report.bytes_decoded > 0);
+
+    // retrieval is invariant under the entropy stage
+    let want = Sharded::from_bytes(bytes.clone())
+        .unwrap()
+        .retrieve(Fidelity::All)
+        .unwrap();
+    let got = Sharded::from_bytes(out.clone())
+        .unwrap()
+        .retrieve(Fidelity::All)
+        .unwrap();
+    assert_eq!(got, want, "entropy recode must be lossless");
+
+    // every block landed on the new codec
+    let (sh2, _) = ShardHeader::parse(&out).unwrap();
+    assert_eq!(sh2.nblocks(), sh.nblocks());
+    for b in &sh2.blocks {
+        let (h, _) = ContainerHeader::parse(slice(&out, b)).unwrap();
+        assert_eq!(h.codec, Codec::HuffRle);
+    }
+
+    // ... and converting back lands on the original artifact, bitwise
+    let back = ReencodeSpec {
+        codec: Some(Codec::Zlib),
+        ..Default::default()
+    };
+    let (again, _) = reencode(&out, &back).unwrap();
+    assert_eq!(again, bytes);
+}
+
+#[test]
+fn single_block_nd_roi_reads_exactly_index_plus_one_block() {
+    let t = smooth::<f64>(&[17, 9]);
+    let (bytes, sh) = ShardWriter::<f64>::new(Codec::Zlib, 2)
+        .write_grid(&t, &[2, 2], 1e-3)
+        .unwrap();
+    let sharded = Sharded::from_bytes(bytes).unwrap();
+    // [10..15, 5..8] lies strictly inside block 3 (extent [8..17, 4..9])
+    // — it avoids every shared boundary plane, so exactly one block's
+    // bytes may be touched on top of the index
+    sharded
+        .retrieve_region(&[10..15, 5..8], Fidelity::All)
+        .unwrap();
+    assert_eq!(
+        sharded.bytes_read(),
+        sharded.index_bytes() + sh.blocks[3].bytes,
+        "a single-block ROI opens exactly the index + that block"
+    );
+    assert!(sharded.bytes_read() < sharded.total_bytes());
+}
