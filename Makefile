@@ -9,18 +9,21 @@
 #   make bench-shard      sharded refactor + ROI report -> BENCH_shard.json
 #   make bench-serve      daemon under 1->64 concurrent clients -> BENCH_serve.json
 #   make bench-reencode   truncate/recode/re-tile throughput -> BENCH_reencode.json
+#   make bench-stream     live-simulation streaming pipeline -> BENCH_stream.json
 #   make test-concurrency concurrency battery + the #[ignore]d stress variants
 #   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
 #   make shard-demo       CLI shard round trip: refactor --blocks -> .mgrs -> --region
 #   make serve-demo       CLI daemon round trip: serve -> --stats -> --shutdown
 #   make reencode-demo    CLI rewrite loop: truncate -> recode -> re-tile a .mgrs
+#   make stream-demo      CLI time-series round trip: stream -> .mgrt -> retrieve --step
 #   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
 #   make check-docs  dead-link check over the markdown docs book
 
 .PHONY: artifacts test test-rust test-python bench bench-container bench-reader \
-        bench-shard bench-serve bench-reencode test-concurrency serve-demo \
-        container-demo shard-demo reencode-demo lint doc check-docs
+        bench-shard bench-serve bench-reencode bench-stream test-concurrency \
+        serve-demo container-demo shard-demo reencode-demo stream-demo lint doc \
+        check-docs
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -52,10 +55,16 @@ bench-serve:
 bench-reencode:
 	cargo bench --bench reencode
 
+bench-stream:
+	cargo bench --bench stream_pipeline
+
 # The concurrency battery on its own (CI runs this as a dedicated matrix
 # entry, then the #[ignore]d long-loop stress variants in release mode).
+# The stream battery rides along: MGRT parse fuzzing and the dtype x codec
+# temporal-delta matrix.
 test-concurrency:
-	RUST_BACKTRACE=1 cargo test --test concurrent_readers --test fuzz_serve
+	RUST_BACKTRACE=1 cargo test --test concurrent_readers --test fuzz_serve \
+		--test fuzz_stream --test stream_matrix
 	cargo test --release -q --test concurrent_readers --test fuzz_serve -- --ignored
 
 # Exercise the progressive-container CLI round trip: write a .mgr
@@ -89,6 +98,18 @@ reencode-demo:
 	cargo run --release -- reencode --in /tmp/mgr-re-huff.mgrs --out /tmp/mgr-re-tiled.mgrs --blocks 4,1,1
 	cargo run --release -- retrieve --in /tmp/mgr-re-tiled.mgrs --region 10..15,0..33,0..33
 	rm -f /tmp/mgr-re-demo.mgrs /tmp/mgr-re-keep2.mgrs /tmp/mgr-re-huff.mgrs /tmp/mgr-re-tiled.mgrs
+
+# Exercise the time-series CLI round trip: stream a live Gray-Scott run
+# into one append-able .mgrt log (temporal deltas chosen per step by
+# measured size), list its step table, then reconstruct a step at full
+# fidelity and a region of an earlier step.
+stream-demo:
+	cargo run --release -- stream --out /tmp/mgr-stream-demo.mgrt --n 33 --steps 8 \
+		--interval 10 --warmup 200 --window 4 --eb 1e-3
+	cargo run --release -- retrieve --in /tmp/mgr-stream-demo.mgrt
+	cargo run --release -- retrieve --in /tmp/mgr-stream-demo.mgrt --step 7 --keep 2
+	cargo run --release -- retrieve --in /tmp/mgr-stream-demo.mgrt --step 3 --region 0..16,0..33,0..33
+	rm -f /tmp/mgr-stream-demo.mgrt
 
 # Exercise the serving front end to end: refactor a container, start the
 # daemon on it, query telemetry over the wire, then stop it over the wire.

@@ -1,0 +1,153 @@
+//! Streaming pipeline bench: a live Gray-Scott producer feeding
+//! [`mgr::api::SeriesWriter`] through the bounded in-flight window.
+//! Reports sustained refactored steps/s against the raw simulation
+//! rate, the delta-vs-independent size ratio, and the measured peak
+//! in-flight bytes — and doubles as the acceptance check that the
+//! encoder keeps up with the producer (the simulation must not stall
+//! behind refactoring) while the backpressure bound holds. Writes
+//! `BENCH_stream.json` (see `docs/performance.md`).
+
+use std::time::Instant;
+
+use mgr::api::{AnyTensor, Fidelity, Series, Session};
+use mgr::sim::GrayScott;
+use mgr::storage::StepEncoding;
+use mgr::util::bench::{BenchReport, ReportRow};
+use mgr::util::stats::value_range;
+
+const N: usize = 33;
+const NSTEPS: usize = 12;
+const WINDOW: usize = 4;
+
+fn main() {
+    println!("== streaming pipeline: in-situ refactoring of live timesteps ==");
+    let mut sim = GrayScott::new(N, 5);
+    sim.step(150);
+    let probe = sim.v_field();
+    let eb = 1e-3 * value_range(probe.data());
+    let shape = probe.shape().to_vec();
+    let step_bytes = probe.len() * 8;
+    let session = Session::builder().shape(&shape).error_bound(eb).build().unwrap();
+
+    // calibrate the snapshot interval so simulation work per snapshot is
+    // roughly 2x one step's encode cost (the stream writer measures both
+    // the independent and the delta candidate, so ~2 refactors per step)
+    let t0 = Instant::now();
+    session.refactor(&AnyTensor::from(probe.clone())).unwrap();
+    session.refactor(&AnyTensor::from(probe)).unwrap();
+    let encode_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    sim.step(4);
+    let sim_step_s = t0.elapsed().as_secs_f64() / 4.0;
+    let interval = ((2.0 * encode_s / sim_step_s).ceil() as usize).clamp(1, 200);
+    println!(
+        "calibration: encode {:.2} ms/step, sim {:.3} ms/step -> snapshot every {interval} steps",
+        encode_s * 1e3,
+        sim_step_s * 1e3
+    );
+
+    // raw production rate: the same simulation segment, nothing consumed
+    let mut raw_sim = sim.clone();
+    let t0 = Instant::now();
+    for _ in 0..NSTEPS {
+        raw_sim.step(interval);
+        let _ = raw_sim.v_field();
+    }
+    let sim_wall = t0.elapsed().as_secs_f64();
+
+    // streamed run: identical segment, every snapshot refactored in situ
+    let path = std::env::temp_dir().join(format!("mgr_bench_stream_{}.mgrt", std::process::id()));
+    let writer = session.stream_file(&path, WINDOW).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..NSTEPS {
+        sim.step(interval);
+        writer.push(&AnyTensor::from(sim.v_field())).unwrap();
+    }
+    let stats = writer.finish().unwrap();
+    let pipeline_wall = t0.elapsed().as_secs_f64();
+
+    let sim_rate = NSTEPS as f64 / sim_wall;
+    let pipe_rate = NSTEPS as f64 / pipeline_wall;
+    let deltas = stats
+        .steps
+        .iter()
+        .filter(|s| s.encoding == StepEncoding::Delta)
+        .count();
+    println!(
+        "bench stream  raw sim {sim_rate:>6.1} steps/s   pipelined {pipe_rate:>6.1} steps/s \
+         ({:.2}x of raw)",
+        pipe_rate / sim_rate
+    );
+    println!(
+        "bench stream  {deltas}/{NSTEPS} delta steps   committed/independent ratio {:.3}   \
+         peak resident {} KiB (bound {} KiB)",
+        stats.delta_ratio(),
+        stats.peak_resident_bytes / 1024,
+        (WINDOW + 1) * step_bytes / 1024
+    );
+
+    // acceptance: refactoring keeps pace with production (the window
+    // hides encode latency behind simulation work) and the backpressure
+    // bound held
+    assert!(
+        pipeline_wall <= 1.5 * sim_wall,
+        "refactoring fell behind the simulation: {pipeline_wall:.2}s vs {sim_wall:.2}s raw"
+    );
+    assert!(
+        stats.peak_resident_bytes <= (WINDOW + 1) * step_bytes,
+        "peak resident {} exceeds ({WINDOW}+1) x {step_bytes}",
+        stats.peak_resident_bytes
+    );
+
+    // the product must actually be readable: spot-check the last step
+    let series = Series::open_file(&path).unwrap();
+    assert_eq!(series.nsteps(), NSTEPS);
+    let last = series
+        .retrieve_step(NSTEPS as u64 - 1, Fidelity::All)
+        .unwrap();
+    let err = last.linf_to(&AnyTensor::from(sim.v_field())).unwrap();
+    assert!(err <= eb, "final step L-inf {err:.3e} exceeds bound {eb:.3e}");
+    std::fs::remove_file(&path).ok();
+
+    let mut rep = BenchReport::new("stream_pipeline");
+    rep.push(ReportRow {
+        kernel: "stream".into(),
+        variant: "sim_raw".into(),
+        dtype: "f64".into(),
+        shape: shape.clone(),
+        axis: Some(interval),
+        median_s: sim_wall / NSTEPS as f64,
+        mad_rel: 0.0,
+        gbps: (NSTEPS * step_bytes) as f64 / sim_wall / 1e9,
+        speedup: None,
+        bytes: Some((NSTEPS * step_bytes) as u64),
+    });
+    rep.push(ReportRow {
+        kernel: "stream".into(),
+        variant: "pipelined".into(),
+        dtype: "f64".into(),
+        shape: shape.clone(),
+        axis: Some(WINDOW),
+        median_s: pipeline_wall / NSTEPS as f64,
+        mad_rel: 0.0,
+        gbps: (NSTEPS * step_bytes) as f64 / pipeline_wall / 1e9,
+        speedup: Some(pipe_rate / sim_rate),
+        bytes: Some(stats.peak_resident_bytes as u64),
+    });
+    rep.push(ReportRow {
+        kernel: "stream".into(),
+        variant: "delta_ratio".into(),
+        dtype: "f64".into(),
+        shape,
+        axis: Some(deltas),
+        median_s: 0.0,
+        mad_rel: 0.0,
+        gbps: 0.0,
+        speedup: Some(stats.delta_ratio()),
+        bytes: Some(stats.total_bytes()),
+    });
+    match rep.write("BENCH_stream.json") {
+        Ok(()) => println!("wrote BENCH_stream.json ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write BENCH_stream.json: {e}"),
+    }
+}

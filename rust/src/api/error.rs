@@ -43,6 +43,10 @@ pub enum Error {
     /// domain: wrong rank, an empty range, or bounds outside the global
     /// shape (see [`crate::api::Sharded::retrieve_region`]).
     Region(String),
+    /// A timestep request a series cannot satisfy: index beyond the
+    /// committed steps of a `.mgrt` stream, or addressed at a target
+    /// that has no timestep axis (see [`crate::api::Series`]).
+    Step(String),
     /// Parsing or validating a progressive container failed (truncated,
     /// foreign, or corrupt bytes — see [`crate::storage::container`]).
     Container(anyhow::Error),
@@ -68,6 +72,7 @@ impl std::fmt::Display for Error {
             ),
             Error::Fidelity(msg) => write!(f, "fidelity: {msg}"),
             Error::Region(msg) => write!(f, "region: {msg}"),
+            Error::Step(msg) => write!(f, "step: {msg}"),
             Error::Container(e) => write!(f, "container: {e:#}"),
             Error::Compress(e) => write!(f, "compression: {e:#}"),
             Error::Io(e) => write!(f, "i/o: {e}"),

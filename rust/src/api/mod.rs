@@ -21,6 +21,8 @@
 //! | create, sharded | [`Session::refactor_sharded`] (grid: [`Session::refactor_sharded_grid`]) | [`Sharded`] |
 //! | retrieve a region | [`Sharded::retrieve_region`] (opens only intersecting blocks) | [`AnyTensor`] |
 //! | reencode | [`Session::reencode`] / [`reencode::reencode`] with a [`ReencodeSpec`] | bytes + [`ReencodeReport`] |
+//! | stream (in-situ) | [`Session::stream`] / [`Session::stream_file`] → [`SeriesWriter::push`] | `.mgrt` + [`StreamStats`](crate::stream::StreamStats) |
+//! | retrieve a step | [`Series::retrieve_step`] / [`Series::retrieve_region_step`] | [`AnyTensor`] |
 //!
 //! [`Fidelity`] carries the three retrieval knobs: a class prefix
 //! ([`Fidelity::Classes`]), an absolute error target resolved against the
@@ -128,6 +130,7 @@
 mod error;
 mod fidelity;
 pub mod reencode;
+mod series;
 mod session;
 mod sharded;
 mod tensor;
@@ -135,6 +138,7 @@ mod tensor;
 pub use error::{Error, Result};
 pub use fidelity::Fidelity;
 pub use reencode::{ReencodeReport, ReencodeSpec};
+pub use series::{Series, SeriesWriter, StepInfo};
 pub use session::{OpenContainer, Refactored, Retrieved, Session, SessionBuilder};
 pub use sharded::Sharded;
 pub use tensor::{AnyTensor, Dtype};

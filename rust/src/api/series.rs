@@ -1,0 +1,497 @@
+//! Dtype-erased facade over `.mgrt` time-series streams: the write side
+//! ([`SeriesWriter`], handed out by [`crate::api::Session::stream`]) and
+//! the read side ([`Series`], the per-timestep dual of
+//! [`crate::api::Sharded`]).
+
+use std::fs::File;
+use std::io::BufReader;
+use std::ops::Range;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::api::error::{Error, Result};
+use crate::api::fidelity::Fidelity;
+use crate::api::session::{resolve_fidelity, BoxSource};
+use crate::api::tensor::{AnyTensor, Dtype};
+use crate::grid::{row_major_strides, Tensor};
+use crate::storage::stream::{StepEncoding, StreamHeader, WriteSeek};
+use crate::storage::{ContainerHeader, ReadSeek};
+use crate::stream::{StreamConfig, StreamReader, StreamStats, StreamWriter};
+use crate::util::Scalar;
+
+/// Boxed write-side sink (the dual of [`BoxSource`]).
+pub(crate) type BoxSink = Box<dyn WriteSeek + Send>;
+
+/// Public per-step metadata (the committed step table, dtype-erased).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepInfo {
+    /// Step index on the timestep axis.
+    pub index: u64,
+    /// True when the step is delta-coded against `parent`.
+    pub delta: bool,
+    /// Delta parent (`Some` iff `delta`).
+    pub parent: Option<u64>,
+    /// Committed container bytes of this step.
+    pub bytes: u64,
+}
+
+fn step_info(meta: &crate::storage::stream::StepMeta) -> StepInfo {
+    StepInfo {
+        index: meta.index,
+        delta: meta.encoding == StepEncoding::Delta,
+        parent: meta.parent,
+        bytes: meta.bytes,
+    }
+}
+
+/// Stream-layer failures parse/validate container-shaped bytes — the
+/// facade surfaces them under the same kind as snapshot containers.
+fn stream_err(e: anyhow::Error) -> Error {
+    Error::Container(e)
+}
+
+enum TypedSeries {
+    F32(StreamReader<f32, BoxSource>),
+    F64(StreamReader<f64, BoxSource>),
+}
+
+/// An open `.mgrt` time-series stream: retrieve any committed step at
+/// any [`Fidelity`], bit-identically to refactoring that snapshot
+/// standalone — delta chains are resolved internally (see
+/// [`crate::stream`] for the semantics). All methods take `&self`; one
+/// `Series` behind an [`Arc`] serves many threads, and
+/// [`Series::refresh`] picks up steps a live producer has committed
+/// since open.
+pub struct Series {
+    inner: TypedSeries,
+}
+
+impl Series {
+    /// Open a series over any seekable byte source.
+    pub fn open(src: impl ReadSeek + Send + 'static) -> Result<Self> {
+        let mut src: BoxSource = Box::new(src);
+        let header = StreamHeader::read_from(&mut src).map_err(stream_err)?;
+        let inner = match Dtype::from_bytes(header.dtype_bytes).map_err(stream_err)? {
+            Dtype::F32 => TypedSeries::F32(StreamReader::open(src).map_err(stream_err)?),
+            Dtype::F64 => TypedSeries::F64(StreamReader::open(src).map_err(stream_err)?),
+        };
+        Ok(Series { inner })
+    }
+
+    /// Open a fully buffered in-memory series.
+    pub fn from_bytes(bytes: impl Into<Vec<u8>>) -> Result<Self> {
+        Self::open(std::io::Cursor::new(bytes.into()))
+    }
+
+    /// Open a series from a file. The handle is kept, so a later
+    /// [`Series::refresh`] sees steps appended to the file since.
+    pub fn open_file(path: impl AsRef<Path>) -> Result<Self> {
+        let file = File::open(path.as_ref())?;
+        Self::open(BufReader::new(file))
+    }
+
+    /// Scalar type of every step.
+    pub fn dtype(&self) -> Dtype {
+        match &self.inner {
+            TypedSeries::F32(_) => Dtype::F32,
+            TypedSeries::F64(_) => Dtype::F64,
+        }
+    }
+
+    /// Grid shape of every step.
+    pub fn shape(&self) -> Vec<usize> {
+        match &self.inner {
+            TypedSeries::F32(r) => r.shape(),
+            TypedSeries::F64(r) => r.shape(),
+        }
+    }
+
+    /// Committed steps visible to this series (see [`Series::refresh`]).
+    pub fn nsteps(&self) -> usize {
+        match &self.inner {
+            TypedSeries::F32(r) => r.nsteps(),
+            TypedSeries::F64(r) => r.nsteps(),
+        }
+    }
+
+    /// The committed step table.
+    pub fn steps(&self) -> Vec<StepInfo> {
+        let metas = match &self.inner {
+            TypedSeries::F32(r) => r.steps(),
+            TypedSeries::F64(r) => r.steps(),
+        };
+        metas.iter().map(step_info).collect()
+    }
+
+    /// Metadata of step `t`.
+    pub fn step(&self, t: u64) -> Result<StepInfo> {
+        self.check_step(t)?;
+        let meta = match &self.inner {
+            TypedSeries::F32(r) => r.step_meta(t),
+            TypedSeries::F64(r) => r.step_meta(t),
+        };
+        Ok(step_info(&meta.map_err(stream_err)?))
+    }
+
+    /// The embedded container header of step `t` (its measured per-class
+    /// error annotations drive [`Fidelity`] resolution).
+    pub fn step_header(&self, t: u64) -> Result<Arc<ContainerHeader>> {
+        self.check_step(t)?;
+        match &self.inner {
+            TypedSeries::F32(r) => r.container_header(t),
+            TypedSeries::F64(r) => r.container_header(t),
+        }
+        .map_err(stream_err)
+    }
+
+    /// Payload bytes fetched from the source so far.
+    pub fn bytes_read(&self) -> u64 {
+        match &self.inner {
+            TypedSeries::F32(r) => r.bytes_read(),
+            TypedSeries::F64(r) => r.bytes_read(),
+        }
+    }
+
+    /// Drop every cached decoded class and container header.
+    pub fn drop_cache(&self) {
+        match &self.inner {
+            TypedSeries::F32(r) => r.drop_cache(),
+            TypedSeries::F64(r) => r.drop_cache(),
+        }
+    }
+
+    /// Re-read the step table from the (possibly grown) source; newly
+    /// committed steps become retrievable. Returns how many appeared.
+    pub fn refresh(&self) -> Result<usize> {
+        match &self.inner {
+            TypedSeries::F32(r) => r.refresh(),
+            TypedSeries::F64(r) => r.refresh(),
+        }
+        .map_err(stream_err)
+    }
+
+    fn check_step(&self, t: u64) -> Result<()> {
+        let n = self.nsteps();
+        if t >= n as u64 {
+            return Err(Error::Step(format!(
+                "step {t} out of range (series has {n} committed step{})",
+                if n == 1 { "" } else { "s" }
+            )));
+        }
+        Ok(())
+    }
+
+    /// Reconstruct step `t` at `fidelity`. A delta-coded step costs its
+    /// chain's bytes but reconstructs the identical tensor; fidelity
+    /// (and a [`Fidelity::ByteBudget`]'s segment accounting) applies to
+    /// step `t`'s own container.
+    pub fn retrieve_step(&self, t: u64, fidelity: Fidelity) -> Result<AnyTensor> {
+        self.check_step(t)?;
+        let header = self.step_header(t)?;
+        let keep = resolve_fidelity(&header, fidelity)?;
+        match &self.inner {
+            TypedSeries::F32(r) => Ok(AnyTensor::F32(
+                r.retrieve_step(t, keep).map_err(Error::Compress)?,
+            )),
+            TypedSeries::F64(r) => Ok(AnyTensor::F64(
+                r.retrieve_step(t, keep).map_err(Error::Compress)?,
+            )),
+        }
+    }
+
+    /// Reconstruct only `roi` of step `t` at `fidelity`. Steps are
+    /// monolithic containers (unlike [`crate::api::Sharded`] blocks), so
+    /// this is a convenience slice of the full-shape reconstruction —
+    /// it saves result memory and wire bytes, not decode work.
+    pub fn retrieve_region_step(
+        &self,
+        t: u64,
+        roi: &[Range<usize>],
+        fidelity: Fidelity,
+    ) -> Result<AnyTensor> {
+        self.check_step(t)?;
+        self.validate_roi(roi)?;
+        let header = self.step_header(t)?;
+        let keep = resolve_fidelity(&header, fidelity)?;
+        match &self.inner {
+            TypedSeries::F32(r) => {
+                let full = r.retrieve_step(t, keep).map_err(Error::Compress)?;
+                Ok(AnyTensor::F32(slice_region(&full, roi)))
+            }
+            TypedSeries::F64(r) => {
+                let full = r.retrieve_step(t, keep).map_err(Error::Compress)?;
+                Ok(AnyTensor::F64(slice_region(&full, roi)))
+            }
+        }
+    }
+
+    /// ROI validation mirroring [`crate::api::Sharded`]: full rank, and
+    /// every dimension's range non-empty and within the shape.
+    fn validate_roi(&self, roi: &[Range<usize>]) -> Result<()> {
+        let shape = self.shape();
+        if roi.len() != shape.len() {
+            return Err(Error::Region(format!(
+                "region has {} range(s), the series domain has {} dimension(s)",
+                roi.len(),
+                shape.len()
+            )));
+        }
+        for (d, r) in roi.iter().enumerate() {
+            if r.start >= r.end || r.end > shape[d] {
+                return Err(Error::Region(format!(
+                    "dimension {d}: range {}..{} is empty or outside 0..{}",
+                    r.start, r.end, shape[d]
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Copy the `roi` sub-box of `src` into a fresh tensor of the roi's
+/// extent (row-major odometer, like the sharded region assembly).
+fn slice_region<T: Scalar>(src: &Tensor<T>, roi: &[Range<usize>]) -> Tensor<T> {
+    let d = roi.len();
+    let out_shape: Vec<usize> = roi.iter().map(|r| r.end - r.start).collect();
+    let mut out = Tensor::zeros(&out_shape);
+    let ostrides = row_major_strides(&out_shape);
+    let sstrides = row_major_strides(src.shape());
+    let mut idx = vec![0usize; d];
+    loop {
+        let mut op = 0usize;
+        let mut sp = 0usize;
+        for dd in 0..d {
+            op += idx[dd] * ostrides[dd];
+            sp += (roi[dd].start + idx[dd]) * sstrides[dd];
+        }
+        out.data_mut()[op] = src.data()[sp];
+        let mut dd = d;
+        loop {
+            if dd == 0 {
+                return out;
+            }
+            dd -= 1;
+            idx[dd] += 1;
+            if idx[dd] < out_shape[dd] {
+                break;
+            }
+            idx[dd] = 0;
+        }
+    }
+}
+
+enum TypedSeriesWriter {
+    F32(StreamWriter<f32, BoxSink>),
+    F64(StreamWriter<f64, BoxSink>),
+}
+
+/// The write side of a series: push snapshots as the producer emits
+/// them; encoding, delta selection, and commit run on the pipeline
+/// behind [`crate::stream::StreamWriter`]. [`SeriesWriter::push`]
+/// blocks when the in-flight window is full (backpressure), and
+/// [`SeriesWriter::finish`] commits everything and reports per-step
+/// choices plus the measured memory high-water mark.
+pub struct SeriesWriter {
+    inner: TypedSeriesWriter,
+    shape: Vec<usize>,
+}
+
+impl SeriesWriter {
+    pub(crate) fn create(
+        sink: BoxSink,
+        dtype: Dtype,
+        shape: &[usize],
+        config: StreamConfig,
+    ) -> Result<Self> {
+        let inner = match dtype {
+            Dtype::F32 => TypedSeriesWriter::F32(
+                StreamWriter::new(sink, shape, config).map_err(|e| Error::Build(format!("{e:#}")))?,
+            ),
+            Dtype::F64 => TypedSeriesWriter::F64(
+                StreamWriter::new(sink, shape, config).map_err(|e| Error::Build(format!("{e:#}")))?,
+            ),
+        };
+        Ok(SeriesWriter {
+            inner,
+            shape: shape.to_vec(),
+        })
+    }
+
+    /// Scalar type the stream was opened for.
+    pub fn dtype(&self) -> Dtype {
+        match &self.inner {
+            TypedSeriesWriter::F32(_) => Dtype::F32,
+            TypedSeriesWriter::F64(_) => Dtype::F64,
+        }
+    }
+
+    /// Queue one snapshot. Blocks while the window is full; fails fast
+    /// if the encode worker has failed.
+    pub fn push(&self, snapshot: &AnyTensor) -> Result<()> {
+        if snapshot.shape() != self.shape {
+            return Err(Error::Shape {
+                expected: self.shape.clone(),
+                got: snapshot.shape().to_vec(),
+            });
+        }
+        match (&self.inner, snapshot) {
+            (TypedSeriesWriter::F32(w), AnyTensor::F32(t)) => {
+                w.push(t.clone()).map_err(Error::Compress)
+            }
+            (TypedSeriesWriter::F64(w), AnyTensor::F64(t)) => {
+                w.push(t.clone()).map_err(Error::Compress)
+            }
+            _ => Err(Error::Dtype {
+                expected: self.dtype(),
+                got: snapshot.dtype(),
+            }),
+        }
+    }
+
+    /// Snapshots currently queued behind the encoder.
+    pub fn queued(&self) -> usize {
+        match &self.inner {
+            TypedSeriesWriter::F32(w) => w.queued(),
+            TypedSeriesWriter::F64(w) => w.queued(),
+        }
+    }
+
+    /// Drain the window, commit every pushed step, and report.
+    pub fn finish(self) -> Result<StreamStats> {
+        let (_sink, stats) = match self.inner {
+            TypedSeriesWriter::F32(w) => w.finish().map_err(Error::Compress)?,
+            TypedSeriesWriter::F64(w) => w.finish().map_err(Error::Compress)?,
+        };
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Session;
+    use crate::sim::GrayScott;
+
+    fn session(shape: &[usize]) -> Session {
+        Session::builder()
+            .shape(shape)
+            .error_bound(1e-3)
+            .build()
+            .unwrap()
+    }
+
+    fn stream_bytes(shape: &[usize], snaps: &[Tensor<f64>]) -> Vec<u8> {
+        let s = session(shape);
+        let buf: Arc<std::sync::Mutex<std::io::Cursor<Vec<u8>>>> = Default::default();
+        // in-memory sink: Session::stream takes any Write + Seek + Send
+        struct SharedCursor(Arc<std::sync::Mutex<std::io::Cursor<Vec<u8>>>>);
+        impl std::io::Write for SharedCursor {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().write(b)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                self.0.lock().unwrap().flush()
+            }
+        }
+        impl std::io::Seek for SharedCursor {
+            fn seek(&mut self, p: std::io::SeekFrom) -> std::io::Result<u64> {
+                self.0.lock().unwrap().seek(p)
+            }
+        }
+        let w = s.stream(SharedCursor(buf.clone()), 2).unwrap();
+        for snap in snaps {
+            w.push(&snap.clone().into()).unwrap();
+        }
+        w.finish().unwrap();
+        let guard = buf.lock().unwrap();
+        guard.get_ref().clone()
+    }
+
+    #[test]
+    fn series_roundtrip_and_metadata() {
+        let snaps = GrayScott::snapshots(9, 11, 60, 4, 3);
+        let bytes = stream_bytes(&[9, 9, 9], &snaps);
+        let series = Series::from_bytes(bytes).unwrap();
+        assert_eq!(series.nsteps(), 4);
+        assert_eq!(series.shape(), vec![9, 9, 9]);
+        assert_eq!(series.dtype(), Dtype::F64);
+        let infos = series.steps();
+        assert_eq!(infos.len(), 4);
+        assert!(!infos[0].delta && infos[0].parent.is_none());
+        assert_eq!(series.step(3).unwrap(), infos[3]);
+
+        let s = session(&[9, 9, 9]);
+        for (t, snap) in snaps.iter().enumerate() {
+            let full = series.retrieve_step(t as u64, Fidelity::All).unwrap();
+            let standalone = s
+                .retrieve(&s.refactor(&snap.clone().into()).unwrap(), Fidelity::All)
+                .unwrap();
+            assert_eq!(full, standalone, "step {t}");
+        }
+    }
+
+    #[test]
+    fn region_step_is_a_slice_of_the_full_reconstruction() {
+        let snaps = GrayScott::snapshots(9, 5, 60, 3, 3);
+        let bytes = stream_bytes(&[9, 9, 9], &snaps);
+        let series = Series::from_bytes(bytes).unwrap();
+        let roi = [2..7, 0..9, 3..5];
+        let region = series
+            .retrieve_region_step(2, &roi, Fidelity::Classes(2))
+            .unwrap();
+        assert_eq!(region.shape(), &[5, 9, 2]);
+        let full = series.retrieve_step(2, Fidelity::Classes(2)).unwrap();
+        let (full, region) = (full.as_f64().unwrap(), region.as_f64().unwrap());
+        for x in 0..5 {
+            for y in 0..9 {
+                for z in 0..2 {
+                    assert_eq!(
+                        region.get(&[x, y, z]),
+                        full.get(&[x + 2, y, z + 3]),
+                        "({x},{y},{z})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_errors_for_bad_requests() {
+        let snaps = GrayScott::snapshots(9, 7, 40, 2, 2);
+        let bytes = stream_bytes(&[9, 9, 9], &snaps);
+        let series = Series::from_bytes(bytes).unwrap();
+        assert!(matches!(
+            series.retrieve_step(2, Fidelity::All),
+            Err(Error::Step(_))
+        ));
+        assert!(matches!(
+            series.retrieve_region_step(0, &[0..9], Fidelity::All),
+            Err(Error::Region(_))
+        ));
+        assert!(matches!(
+            series.retrieve_region_step(0, &[0..9, 0..99, 0..9], Fidelity::All),
+            Err(Error::Region(_))
+        ));
+        assert!(matches!(
+            series.retrieve_step(0, Fidelity::Classes(99)),
+            Err(Error::Fidelity(_))
+        ));
+        assert!(Series::from_bytes(b"MGRC####".to_vec()).is_err());
+    }
+
+    #[test]
+    fn writer_rejects_mismatched_pushes() {
+        let s = session(&[9, 9]);
+        let w = s
+            .stream(std::io::Cursor::new(Vec::new()), 2)
+            .unwrap();
+        let wrong_shape: AnyTensor = Tensor::<f64>::zeros(&[5, 5]).into();
+        assert!(matches!(w.push(&wrong_shape), Err(Error::Shape { .. })));
+        let wrong_dtype: AnyTensor = Tensor::<f32>::zeros(&[9, 9]).into();
+        assert!(matches!(w.push(&wrong_dtype), Err(Error::Dtype { .. })));
+        let ok: AnyTensor = Tensor::<f64>::zeros(&[9, 9]).into();
+        w.push(&ok).unwrap();
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.steps.len(), 1);
+    }
+}

@@ -9,6 +9,7 @@ use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::api::error::{Error, Result};
 use crate::api::fidelity::Fidelity;
+use crate::api::series::SeriesWriter;
 use crate::api::sharded::Sharded;
 use crate::api::tensor::{AnyTensor, Dtype};
 use crate::compress::{Codec, Compressed, CompressorStats};
@@ -885,6 +886,32 @@ impl Session {
                 .0,
         };
         Sharded::from_bytes(bytes)
+    }
+
+    /// **Stream**: open an append-able `.mgrt` time-series log on
+    /// `sink` and hand back the [`SeriesWriter`] a producer pushes
+    /// snapshots into. Each step is refactored on a background pipeline
+    /// under this session's shape/dtype/codec/error bound, choosing
+    /// independent or temporal-delta encoding greedily by measured size
+    /// (see [`crate::stream`]); `window` bounds the snapshots queued
+    /// behind the encoder — [`SeriesWriter::push`] **blocks** when it is
+    /// full, so in-flight memory never exceeds `(window + 1)` snapshots.
+    pub fn stream<W>(&self, sink: W, window: usize) -> Result<SeriesWriter>
+    where
+        W: Write + Seek + Send + 'static,
+    {
+        let mut config = crate::stream::StreamConfig::new(self.error_bound);
+        config.codec = self.codec;
+        config.nlevels = Some(self.hierarchy.nlevels());
+        config.window = window;
+        config.workers = self.workers;
+        SeriesWriter::create(Box::new(sink), self.dtype, self.shape(), config)
+    }
+
+    /// [`Session::stream`] straight to a freshly created file.
+    pub fn stream_file(&self, path: impl AsRef<Path>, window: usize) -> Result<SeriesWriter> {
+        let file = File::create(path.as_ref())?;
+        self.stream(std::io::BufWriter::new(file), window)
     }
 
     /// **Reencode**: rewrite a serialized `.mgr`/`.mgrs` artifact to a

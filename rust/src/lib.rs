@@ -25,6 +25,7 @@
 //! | [`coordinator`] | jobs, partitioning, cooperative-parallel orchestration |
 //! | [`simgpu`] | device/interconnect performance model, Table-2 auto-tuner, Summit cluster sim |
 //! | [`storage`] | multi-tier storage + parallel-I/O cost model, progressive `.mgr` container |
+//! | [`stream`] | in-situ streaming refactoring of live timesteps into `.mgrt` logs (temporal deltas) |
 //! | [`compress`] | quantizer + lossless coders + MGARD compression pipeline (monolithic and per-class) |
 //! | [`sim`] | Gray-Scott reaction-diffusion workload generator |
 //! | [`vis`] | iso-surface area metric for the visualization showcase |
@@ -45,5 +46,6 @@ pub mod serve;
 pub mod sim;
 pub mod simgpu;
 pub mod storage;
+pub mod stream;
 pub mod util;
 pub mod vis;

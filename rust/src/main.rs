@@ -10,6 +10,10 @@
 //! * `refactor` — decompose a Gray-Scott (or random) field into a
 //!   progressive representation, report per-class sizes and measured
 //!   error annotations; `--out f.mgr` stores the container.
+//! * `stream` — run a live Gray-Scott simulation (parameters on flags)
+//!   and refactor every snapshot in situ into an append-able `.mgrt`
+//!   time-series with temporal delta coding; backpressure bounds the
+//!   in-flight snapshot window.
 //! * `retrieve` — reconstruct a fidelity prefix from a container:
 //!   `--keep K` classes, `--error E` (smallest prefix whose recorded L∞
 //!   annotation meets `E`), or `--bytes B` (longest prefix fitting the
@@ -26,10 +30,10 @@
 //!   (reads the header only; no payload is touched).
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
 //! * `serve` — long-lived TCP daemon answering `retrieve` /
-//!   `retrieve_region` / `upgrade` over the wire protocol in
-//!   `docs/serve.md`, sharing one lazily opened container or shard
-//!   across all connections; `--stats` / `--shutdown` run the client
-//!   side against a running daemon.
+//!   `retrieve_region` / `retrieve_step` / `upgrade` over the wire
+//!   protocol in `docs/serve.md`, sharing one lazily opened container,
+//!   shard, or time-series across all connections; `--stats` /
+//!   `--shutdown` run the client side against a running daemon.
 //! * `pool` — run a batch of jobs through the coordinator worker pool
 //!   (formerly `serve`).
 //! * `pjrt-check` — execute the AOT artifacts and verify them against the
@@ -37,8 +41,11 @@
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, ReencodeSpec, Session, Sharded};
+use mgr::api::{
+    AnyTensor, Dtype, Fidelity, OpenContainer, ReencodeSpec, Series, Session, Sharded,
+};
 use mgr::compress::Codec;
+use mgr::storage::StepEncoding;
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
 use mgr::grid::Tensor;
 use mgr::runtime::EngineHandle;
@@ -69,7 +76,7 @@ fn load_field(args: &Args) -> Result<AnyTensor> {
                 bail!("grayscott input needs a cubic --shape NxNxN");
             }
             let steps = args.get_usize("steps", 200)?;
-            let mut sim = GrayScott::new(shape[0], args.get_usize("seed", 7)? as u64);
+            let mut sim = sim_from_args(args, shape[0], args.get_usize("seed", 7)? as u64)?;
             sim.step(steps);
             sim.v_field().into()
         }
@@ -81,6 +88,22 @@ fn load_field(args: &Args) -> Result<AnyTensor> {
     };
     let dtype: Dtype = args.get_or("dtype", "f64").parse()?;
     Ok(field.cast(dtype))
+}
+
+/// Build a Gray-Scott simulation from the CLI reaction/diffusion knobs
+/// (`--du --dv --f --k --dt`, defaulting to Pearson's classic values).
+/// An unstable `--dt` is rejected up front with the stability limit in
+/// the message instead of producing a diverged field.
+fn sim_from_args(args: &Args, n: usize, seed: u64) -> Result<GrayScott> {
+    Ok(GrayScott::with_params(
+        n,
+        seed,
+        args.get_f64("du", 0.16)?,
+        args.get_f64("dv", 0.08)?,
+        args.get_f64("f", 0.04)?,
+        args.get_f64("k", 0.06)?,
+        args.get_f64("dt", 0.95)?,
+    )?)
 }
 
 /// Build a session matching the CLI knobs for a field of `shape`.
@@ -148,6 +171,28 @@ fn path_is_shard(path: &str) -> bool {
     };
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic).is_ok() && mgr::storage::shard::is_shard(&magic)
+}
+
+/// Whether `path` starts with the MGRT stream magic (dispatches
+/// `retrieve` onto the time-series path). Same tolerance as
+/// [`path_is_shard`] for short or unreadable files.
+fn path_is_stream(path: &str) -> bool {
+    use std::io::Read;
+    let Ok(mut f) = std::fs::File::open(path) else {
+        return false;
+    };
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic).is_ok() && mgr::storage::stream::is_stream(&magic)
+}
+
+/// Parse the optional `--step T` timestep selector of `retrieve`.
+fn parse_step(args: &Args) -> Result<Option<u64>> {
+    args.get("step")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| anyhow!("--step expects a timestep index, got '{v}'"))
+        })
+        .transpose()
 }
 
 /// Parse the optional `--region i0..i1,j0..j1,…` knob of `retrieve`:
@@ -219,6 +264,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("info") => info(args),
         Some("refactor") => refactor(args),
+        Some("stream") => stream(args),
         Some("retrieve") => retrieve(args),
         Some("reencode") => reencode(args),
         Some("plan") => plan(args),
@@ -236,9 +282,14 @@ fn run(args: &Args) -> Result<()> {
                  \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
                  \x20            [--blocks P [--axis A] | --blocks P0,P1,... --out f.mgrs]\n\
                  \x20            sharded: P slabs on one axis, or an N-D block grid\n\
+                 \x20 stream     --out f.mgrt [--n 33 --steps 16 --interval 10 --warmup 200]\n\
+                 \x20            [--window 4 --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
+                 \x20            [--du 0.16 --dv 0.08 --f 0.04 --k 0.06 --dt 0.95]\n\
+                 \x20            refactor live Gray-Scott snapshots in situ (temporal deltas)\n\
                  \x20 retrieve   --in f.mgr [--keep K | --error E | --bytes B]\n\
                  \x20            [--upgrade-from K] [--dump raw.bin]\n\
                  \x20 retrieve   --in f.mgrs [--region i0..i1,j0..j1,...]  region-of-interest\n\
+                 \x20 retrieve   --in f.mgrt --step T [--region ...]       one timestep\n\
                  \x20 reencode   --in f.mgr|f.mgrs --out g.mgr|g.mgrs\n\
                  \x20            [--keep K | --error E | --bytes B]   truncate fidelity (byte copy)\n\
                  \x20            [--codec zlib|huff-rle]              re-run the entropy stage only\n\
@@ -386,8 +437,83 @@ fn refactor_sharded(args: &Args, session: &Session, data: &AnyTensor) -> Result<
     Ok(())
 }
 
+/// `mgr stream`: run a live Gray-Scott simulation and refactor every
+/// snapshot in situ into an append-able `.mgrt` time-series, choosing
+/// independent vs temporal-delta encoding per step by measured size.
+/// The bounded window means the simulation *blocks* instead of
+/// buffering when it outruns the encoder.
+fn stream(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("stream needs --out FILE.mgrt"))?;
+    let n = args.get_usize("n", 33)?;
+    let nsteps = args.get_usize("steps", 16)?;
+    let interval = args.get_usize("interval", 10)?;
+    let warmup = args.get_usize("warmup", 200)?;
+    let window = args.get_usize("window", 4)?;
+    ensure!(nsteps >= 1, "--steps must be at least 1");
+    ensure!(interval >= 1, "--interval must be at least 1");
+    let dtype: Dtype = args.get_or("dtype", "f64").parse()?;
+    let mut sim = sim_from_args(args, n, args.get_usize("seed", 7)? as u64)?;
+    let session = session_for(args, &[n, n, n], dtype)?;
+    sim.step(warmup);
+
+    let writer = session.stream_file(out, window)?;
+    let (stats, secs) = time(|| -> Result<_> {
+        for _ in 0..nsteps {
+            sim.step(interval);
+            writer.push(&AnyTensor::from(sim.v_field()).cast(dtype))?;
+        }
+        Ok(writer.finish()?)
+    });
+    let stats = stats?;
+
+    println!(
+        "streamed {nsteps} step(s) of [{n}, {n}, {n}] {dtype} into {out} in {:.1} ms \
+         ({:.1} steps/s, window {window})",
+        secs * 1e3,
+        nsteps as f64 / secs
+    );
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>12}",
+        "step", "encoding", "bytes", "independent", "delta"
+    );
+    for s in &stats.steps {
+        let enc = match s.encoding {
+            StepEncoding::Independent => "independent",
+            StepEncoding::Delta => "delta",
+        };
+        println!(
+            "{:<8} {:>12} {:>12} {:>14} {:>12}",
+            s.index,
+            enc,
+            s.bytes,
+            s.independent_bytes,
+            s.delta_bytes.map_or("-".to_string(), |b| b.to_string())
+        );
+    }
+    println!(
+        "total {} bytes ({:.3}x of all-independent); peak in-flight {} bytes \
+         (bound: (window+1) x {} snapshot bytes = {})",
+        stats.total_bytes(),
+        stats.delta_ratio(),
+        stats.peak_resident_bytes,
+        n * n * n * dtype.bytes(),
+        (window + 1) * n * n * n * dtype.bytes()
+    );
+    Ok(())
+}
+
 fn retrieve(args: &Args) -> Result<()> {
     let path = container_path(args)?;
+    if path_is_stream(&path) {
+        return retrieve_stream(args, &path);
+    }
+    ensure!(
+        args.get("step").is_none(),
+        "--step needs a time-series (.mgrt) artifact; {path} has no timestep axis \
+         — `mgr stream` produces one"
+    );
     if path_is_shard(&path) {
         return retrieve_sharded(args, &path);
     }
@@ -476,6 +602,76 @@ fn retrieve(args: &Args) -> Result<()> {
         header.segments[keep - 1].rmse
     );
 
+    dump_tensor(args, &tensor)
+}
+
+/// `retrieve` on a time-series (`.mgrt`) artifact: print the committed
+/// step table, then reconstruct `--step T` (optionally only `--region`)
+/// at the requested fidelity. Delta-coded steps resolve their parent
+/// chain internally — only the chain's bytes are read, and the result
+/// is bit-identical to refactoring that snapshot standalone.
+fn retrieve_stream(args: &Args, path: &str) -> Result<()> {
+    ensure!(
+        args.get("upgrade-from").is_none(),
+        "--upgrade-from applies to single containers; series retrieval caches decoded \
+         classes per step instead (just retrieve again at the higher fidelity)"
+    );
+    let series = Series::open_file(path).with_context(|| format!("opening stream {path}"))?;
+    println!(
+        "stream: shape {:?} {}, {} committed step(s)",
+        series.shape(),
+        series.dtype(),
+        series.nsteps()
+    );
+    println!(
+        "{:<8} {:>12} {:>8} {:>12}",
+        "step", "encoding", "parent", "bytes"
+    );
+    for s in series.steps() {
+        println!(
+            "{:<8} {:>12} {:>8} {:>12}",
+            s.index,
+            if s.delta { "delta" } else { "independent" },
+            s.parent.map_or("-".to_string(), |p| p.to_string()),
+            s.bytes
+        );
+    }
+
+    let Some(t) = parse_step(args)? else {
+        println!("(pass --step T to reconstruct a timestep)");
+        return Ok(());
+    };
+    let fidelity = parse_fidelity(args)?;
+    let tensor = if let Some(roi) = parse_region(args)? {
+        let (x, secs) = time(|| series.retrieve_region_step(t, &roi, fidelity));
+        let x = x?;
+        println!(
+            "retrieved region {:?} of step {t} in {:.1} ms",
+            x.shape(),
+            secs * 1e3
+        );
+        x
+    } else {
+        let (x, secs) = time(|| series.retrieve_step(t, fidelity));
+        let x = x?;
+        println!("retrieved step {t} in {:.1} ms", secs * 1e3);
+        x
+    };
+    let info = series.step(t)?;
+    println!(
+        "step {t} is {}; read {} stream bytes for it{}",
+        if info.delta {
+            format!("delta-coded (parent {})", info.parent.unwrap_or_default())
+        } else {
+            "independent".to_string()
+        },
+        series.bytes_read(),
+        if info.delta {
+            " (its parent chain included)"
+        } else {
+            ""
+        }
+    );
     dump_tensor(args, &tensor)
 }
 
@@ -655,9 +851,9 @@ fn compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `mgr serve`: share one lazily opened container/shard behind a TCP
-/// front (daemon mode), or talk to a running daemon (`--stats`,
-/// `--shutdown`).
+/// `mgr serve`: share one lazily opened container/shard/time-series
+/// behind a TCP front (daemon mode), or talk to a running daemon
+/// (`--stats`, `--shutdown`).
 fn serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:4860");
     if args.has("stats") {
@@ -677,6 +873,7 @@ fn serve(args: &Args) -> Result<()> {
     let kind = match &target {
         ServeTarget::Container(_) => "container",
         ServeTarget::Shard(_) => "shard",
+        ServeTarget::Series(_) => "time-series",
     };
     let config = ServeConfig {
         workers: args.get_usize("workers", ServeConfig::default().workers)?,
@@ -873,6 +1070,45 @@ mod tests {
         assert!(err.contains("axis 1"), "{err}");
         let err = parse_blocks("2,3.5").unwrap_err().to_string();
         assert!(err.contains("axis 1") && err.contains("'3.5'"), "{err}");
+    }
+
+    #[test]
+    fn step_selector_parses() {
+        assert_eq!(parse_step(&args("retrieve")).unwrap(), None);
+        assert_eq!(parse_step(&args("retrieve --step 3")).unwrap(), Some(3));
+        assert!(parse_step(&args("retrieve --step x")).is_err());
+        assert!(parse_step(&args("retrieve --step -1")).is_err());
+    }
+
+    #[test]
+    fn unstable_dt_is_rejected_with_the_limit() {
+        // 6·0.16·1.2 > 1: the CLI must refuse before simulating
+        let err = sim_from_args(&args("stream --dt 1.2"), 9, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stability"), "{err}");
+        // defaults and explicit stable overrides both construct
+        assert!(sim_from_args(&args("stream"), 9, 1).is_ok());
+        assert!(sim_from_args(&args("stream --f 0.03 --k 0.061 --dt 0.5"), 9, 1).is_ok());
+        assert!(sim_from_args(&args("stream --du x"), 9, 1).is_err());
+    }
+
+    #[test]
+    fn stream_then_retrieve_step_roundtrip() {
+        let path = std::env::temp_dir().join(format!("mgr_cli_stream_{}.mgrt", std::process::id()));
+        let p = path.to_str().unwrap();
+        stream(&args(&format!(
+            "stream --out {p} --n 9 --steps 3 --interval 2 --warmup 20 --window 2"
+        )))
+        .unwrap();
+        assert!(path_is_stream(p) && !path_is_shard(p));
+        // full retrieval of a committed step, then the info-only form
+        retrieve(&args(&format!("retrieve --in {p} --step 2 --keep 2"))).unwrap();
+        retrieve(&args(&format!("retrieve --in {p} --region 0..4,0..9,2..5 --step 1"))).unwrap();
+        retrieve(&args(&format!("retrieve --in {p}"))).unwrap();
+        // out-of-range step surfaces the typed error
+        assert!(retrieve(&args(&format!("retrieve --in {p} --step 9"))).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

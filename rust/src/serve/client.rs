@@ -173,6 +173,24 @@ impl Client {
         self.tensor_roundtrip(&Request::RetrieveRegion(roi.to_vec(), fidelity))
     }
 
+    /// Reconstruct timestep `t` of a served time-series at a fidelity
+    /// (MGRT sources only). The daemon re-reads the step table of a
+    /// growing file once before reporting an out-of-range step.
+    pub fn retrieve_step(&mut self, t: u64, fidelity: Fidelity) -> ClientResult<RemoteTensor> {
+        self.tensor_roundtrip(&Request::RetrieveStep(t, fidelity))
+    }
+
+    /// Reconstruct a region of timestep `t` (MGRT sources only); ranges
+    /// are half-open in global coordinates.
+    pub fn retrieve_region_step(
+        &mut self,
+        t: u64,
+        roi: &[Range<u64>],
+        fidelity: Fidelity,
+    ) -> ClientResult<RemoteTensor> {
+        self.tensor_roundtrip(&Request::RetrieveRegionStep(t, roi.to_vec(), fidelity))
+    }
+
     /// Retrieve at `from`, then upgrade to `to` on the server's shared
     /// reader; returns the `to` reconstruction (the telemetry shows the
     /// incremental fetch).

@@ -5,15 +5,21 @@
 //! *consuming* it at whatever fidelity a reader can afford. The [`api`]
 //! facade already makes every retrieval verb `&self` over shared
 //! readers; this module puts a network front on exactly that path: one
-//! [`ServeTarget`] (a lazily opened `.mgr` container or `.mgrs` shard)
-//! is shared by every connection of a [`Server`], and each request is
-//! answered bit-identically to a local retrieval.
+//! [`ServeTarget`] (a lazily opened `.mgr` container, `.mgrs` shard, or
+//! `.mgrt` time-series) is shared by every connection of a [`Server`],
+//! and each request is answered bit-identically to a local retrieval.
+//! Time-series targets add per-step verbs (`retrieve_step`,
+//! `retrieve_region_step`) and may still be *growing* under a live
+//! producer: on an out-of-range step the daemon re-reads the committed
+//! step table once before answering with a typed `STEP` error, so
+//! readers can poll a simulation's output as it streams.
 //!
 //! The pieces:
 //!
 //! * [`protocol`] — the length-prefixed wire format (normative spec:
 //!   `docs/serve.md`): request verbs `retrieve`, `retrieve_region`,
-//!   `upgrade`, `stats`, `shutdown`; typed response statuses.
+//!   `upgrade`, `stats`, `shutdown`, `retrieve_step`,
+//!   `retrieve_region_step`; typed response statuses.
 //! * [`server`] — the daemon: accept loop, one I/O thread per
 //!   connection, a worker-permit semaphore bounding concurrent decodes,
 //!   and an admission byte-gate bounding estimated response bytes in

@@ -52,6 +52,10 @@ pub mod verb {
     pub const STATS: u8 = 4;
     /// Ask the daemon to stop accepting connections and exit.
     pub const SHUTDOWN: u8 = 5;
+    /// Reconstruct one timestep of a time-series source at a fidelity.
+    pub const RETRIEVE_STEP: u8 = 6;
+    /// Reconstruct a region of one timestep (time-series sources).
+    pub const RETRIEVE_REGION_STEP: u8 = 7;
 }
 
 /// Response status codes (the first body byte of a response frame).
@@ -70,6 +74,9 @@ pub mod status {
     pub const USAGE: u8 = 4;
     /// The server failed internally (corrupt source, I/O failure, …).
     pub const INTERNAL: u8 = 5;
+    /// The requested timestep is not committed in the served series
+    /// (the daemon re-reads a growing file once before giving up).
+    pub const STEP: u8 = 6;
 }
 
 /// Fidelity wire tags (first byte of a 9-byte fidelity encoding).
@@ -93,6 +100,10 @@ pub enum Request {
     Stats,
     /// Daemon shutdown.
     Shutdown,
+    /// One timestep of a time-series source at a fidelity.
+    RetrieveStep(u64, Fidelity),
+    /// A region of one timestep (half-open per-axis ranges).
+    RetrieveRegionStep(u64, Vec<Range<u64>>, Fidelity),
 }
 
 /// A decoded response body.
@@ -267,6 +278,21 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         }
         Request::Stats => out.push(verb::STATS),
         Request::Shutdown => out.push(verb::SHUTDOWN),
+        Request::RetrieveStep(t, f) => {
+            out.push(verb::RETRIEVE_STEP);
+            out.extend_from_slice(&t.to_le_bytes());
+            put_fidelity(&mut out, *f);
+        }
+        Request::RetrieveRegionStep(t, roi, f) => {
+            out.push(verb::RETRIEVE_REGION_STEP);
+            out.extend_from_slice(&t.to_le_bytes());
+            put_fidelity(&mut out, *f);
+            out.push(roi.len() as u8);
+            for r in roi {
+                out.extend_from_slice(&r.start.to_le_bytes());
+                out.extend_from_slice(&r.end.to_le_bytes());
+            }
+        }
     }
     out
 }
@@ -359,6 +385,26 @@ fn take_fidelity(c: &mut BodyCursor<'_>) -> WireResult<Fidelity> {
     }
 }
 
+/// Read a region spec: a rank byte, then `rank` half-open u64 ranges.
+fn take_region(c: &mut BodyCursor<'_>) -> WireResult<Vec<Range<u64>>> {
+    let ndim = c.u8("region rank")? as usize;
+    if ndim == 0 {
+        return Err(WireError::Malformed("region rank must be at least 1".into()));
+    }
+    let mut roi = Vec::with_capacity(ndim);
+    for d in 0..ndim {
+        let start = c.u64("region start")?;
+        let end = c.u64("region end")?;
+        if start >= end {
+            return Err(WireError::Malformed(format!(
+                "region axis {d} is empty or inverted ({start}..{end})"
+            )));
+        }
+        roi.push(start..end);
+    }
+    Ok(roi)
+}
+
 /// Decode a request frame body.
 pub fn decode_request(body: &[u8]) -> WireResult<Request> {
     let mut c = BodyCursor::new(body);
@@ -371,21 +417,7 @@ pub fn decode_request(body: &[u8]) -> WireResult<Request> {
         }
         verb::RETRIEVE_REGION => {
             let f = take_fidelity(&mut c)?;
-            let ndim = c.u8("region rank")? as usize;
-            if ndim == 0 {
-                return Err(WireError::Malformed("region rank must be at least 1".into()));
-            }
-            let mut roi = Vec::with_capacity(ndim);
-            for d in 0..ndim {
-                let start = c.u64("region start")?;
-                let end = c.u64("region end")?;
-                if start >= end {
-                    return Err(WireError::Malformed(format!(
-                        "region axis {d} is empty or inverted ({start}..{end})"
-                    )));
-                }
-                roi.push(start..end);
-            }
+            let roi = take_region(&mut c)?;
             c.done("region request")?;
             Ok(Request::RetrieveRegion(roi, f))
         }
@@ -402,6 +434,19 @@ pub fn decode_request(body: &[u8]) -> WireResult<Request> {
         verb::SHUTDOWN => {
             c.done("shutdown request")?;
             Ok(Request::Shutdown)
+        }
+        verb::RETRIEVE_STEP => {
+            let t = c.u64("step index")?;
+            let f = take_fidelity(&mut c)?;
+            c.done("step request")?;
+            Ok(Request::RetrieveStep(t, f))
+        }
+        verb::RETRIEVE_REGION_STEP => {
+            let t = c.u64("step index")?;
+            let f = take_fidelity(&mut c)?;
+            let roi = take_region(&mut c)?;
+            c.done("region-step request")?;
+            Ok(Request::RetrieveRegionStep(t, roi, f))
         }
         other => Err(WireError::Malformed(format!("unknown verb {other}"))),
     }
@@ -493,6 +538,13 @@ mod tests {
         roundtrip_req(Request::Upgrade(Fidelity::Classes(1), Fidelity::All));
         roundtrip_req(Request::Stats);
         roundtrip_req(Request::Shutdown);
+        roundtrip_req(Request::RetrieveStep(0, Fidelity::All));
+        roundtrip_req(Request::RetrieveStep(u64::MAX, Fidelity::ErrorBound(1e-2)));
+        roundtrip_req(Request::RetrieveRegionStep(
+            7,
+            vec![0..5, 2..9, 1..2],
+            Fidelity::Classes(2),
+        ));
     }
 
     #[test]
@@ -585,6 +637,19 @@ mod tests {
         body.push(1);
         body.extend_from_slice(&5u64.to_le_bytes());
         body.extend_from_slice(&5u64.to_le_bytes());
+        assert!(decode_request(&body).is_err());
+        // step requests: truncated index, missing fidelity, empty region
+        assert!(decode_request(&[verb::RETRIEVE_STEP, 1, 2]).is_err());
+        let mut body = vec![verb::RETRIEVE_STEP];
+        body.extend_from_slice(&3u64.to_le_bytes());
+        assert!(decode_request(&body).is_err(), "missing fidelity");
+        let mut body = encode_request(&Request::RetrieveStep(3, Fidelity::All));
+        body[0] = verb::RETRIEVE_REGION_STEP;
+        body.push(0);
+        assert!(decode_request(&body).is_err(), "zero-rank region");
+        // trailing garbage after a step request
+        let mut body = encode_request(&Request::RetrieveStep(3, Fidelity::All));
+        body.push(9);
         assert!(decode_request(&body).is_err());
     }
 

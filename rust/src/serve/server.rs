@@ -29,7 +29,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Instant;
 
-use crate::api::{AnyTensor, Error, OpenContainer, Result as ApiResult, Sharded};
+use crate::api::{AnyTensor, Error, Fidelity, OpenContainer, Result as ApiResult, Series, Sharded};
 use crate::serve::protocol::{
     decode_request, encode_response, read_frame, status, write_frame, Request, Response, WireError,
     WireTensor, MAX_REQUEST_LEN,
@@ -37,20 +37,24 @@ use crate::serve::protocol::{
 use crate::serve::telemetry::{ServeStats, Telemetry};
 use crate::storage::shard::SHARD_MAGIC;
 
-/// What a daemon serves: one progressive container or one shard, opened
-/// lazily and shared (`&self` retrieval) across every connection.
+/// What a daemon serves: one progressive container, one shard, or one
+/// time-series stream, opened lazily and shared (`&self` retrieval)
+/// across every connection.
 pub enum ServeTarget {
     /// A single `.mgr` progressive container.
     Container(OpenContainer),
     /// A multi-block `.mgrs` shard (region retrieval available).
     Shard(Sharded),
+    /// A `.mgrt` time-series (per-step retrieval; the file may still be
+    /// growing under a live producer — see [`Series::refresh`]).
+    Series(Series),
 }
 
 impl ServeTarget {
     /// Open a file as a serve target, dispatching on its magic bytes:
-    /// `MGRS` opens as a shard, anything else is handed to the container
-    /// path (which produces the descriptive bad-magic error for foreign
-    /// files).
+    /// `MGRS` opens as a shard, `MGRT` as a time-series, anything else
+    /// is handed to the container path (which produces the descriptive
+    /// bad-magic error for foreign files).
     pub fn open_file(path: impl AsRef<Path>) -> ApiResult<Self> {
         let mut magic = [0u8; 4];
         let mut f = File::open(path.as_ref())?;
@@ -58,16 +62,19 @@ impl ServeTarget {
         drop(f);
         if n == 4 && magic == SHARD_MAGIC {
             Sharded::open_file(path).map(ServeTarget::Shard)
+        } else if n == 4 && crate::storage::stream::is_stream(&magic) {
+            Series::open_file(path).map(ServeTarget::Series)
         } else {
             OpenContainer::open_file(path).map(ServeTarget::Container)
         }
     }
 
-    /// Global shape of the served domain.
-    pub fn shape(&self) -> &[usize] {
+    /// Global shape of the served domain (per step, for a time-series).
+    pub fn shape(&self) -> Vec<usize> {
         match self {
-            ServeTarget::Container(c) => c.shape(),
-            ServeTarget::Shard(s) => s.shape(),
+            ServeTarget::Container(c) => c.shape().to_vec(),
+            ServeTarget::Shard(s) => s.shape().to_vec(),
+            ServeTarget::Series(s) => s.shape(),
         }
     }
 
@@ -76,6 +83,7 @@ impl ServeTarget {
         match self {
             ServeTarget::Container(c) => c.dtype().bytes() as u8,
             ServeTarget::Shard(s) => s.dtype().bytes() as u8,
+            ServeTarget::Series(s) => s.dtype().bytes() as u8,
         }
     }
 
@@ -85,6 +93,7 @@ impl ServeTarget {
         match self {
             ServeTarget::Container(c) => c.bytes_read(),
             ServeTarget::Shard(s) => s.bytes_read(),
+            ServeTarget::Series(s) => s.bytes_read(),
         }
     }
 
@@ -113,8 +122,49 @@ impl ServeTarget {
                 s.retrieve(*from)?;
                 s.retrieve(*to)
             }
+            (ServeTarget::Series(s), Request::RetrieveStep(t, f)) => {
+                retrieve_step_fresh(s, *t, None, *f)
+            }
+            (ServeTarget::Series(s), Request::RetrieveRegionStep(t, roi, f)) => {
+                let roi = convert_roi(roi)?;
+                retrieve_step_fresh(s, *t, Some(roi), *f)
+            }
+            (
+                ServeTarget::Series(_),
+                Request::Retrieve(_) | Request::RetrieveRegion(..) | Request::Upgrade(..),
+            ) => Err(Error::Usage(
+                "time-series sources are addressed per timestep \
+                 (use the retrieve_step verbs)"
+                    .into(),
+            )),
+            (_, Request::RetrieveStep(..) | Request::RetrieveRegionStep(..)) => Err(Error::Usage(
+                "step retrieval requires a time-series (MGRT) source".into(),
+            )),
             _ => unreachable!("stats/shutdown are handled before execute"),
         }
+    }
+}
+
+/// Serve a step request, re-reading the step table **once** when the
+/// index is past the committed count: the served file may have grown
+/// under a live producer since the last look, and a refresh is cheap
+/// (header walk; committed-step caches survive it).
+fn retrieve_step_fresh(
+    series: &Series,
+    t: u64,
+    roi: Option<Vec<Range<usize>>>,
+    f: Fidelity,
+) -> ApiResult<AnyTensor> {
+    let go = |series: &Series| match &roi {
+        Some(roi) => series.retrieve_region_step(t, roi, f),
+        None => series.retrieve_step(t, f),
+    };
+    match go(series) {
+        Err(Error::Step(_)) => {
+            series.refresh()?;
+            go(series)
+        }
+        other => other,
     }
 }
 
@@ -138,6 +188,7 @@ fn status_for(e: &Error) -> u8 {
         Error::Fidelity(_) => status::FIDELITY,
         Error::Region(_) => status::REGION,
         Error::Usage(_) => status::USAGE,
+        Error::Step(_) => status::STEP,
         _ => status::INTERNAL,
     }
 }
@@ -411,7 +462,9 @@ fn accept_loop(
 fn estimate_response_bytes(target: &ServeTarget, req: &Request) -> u64 {
     let width = target.dtype_bytes() as u64;
     let elements: u64 = match req {
-        Request::RetrieveRegion(roi, _) => roi.iter().map(|r| r.end.saturating_sub(r.start)).product(),
+        Request::RetrieveRegion(roi, _) | Request::RetrieveRegionStep(_, roi, _) => {
+            roi.iter().map(|r| r.end.saturating_sub(r.start)).product()
+        }
         _ => target.shape().iter().map(|&d| d as u64).product(),
     };
     elements.saturating_mul(width).saturating_add(64)
@@ -628,11 +681,19 @@ mod tests {
             Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::USAGE),
             other => panic!("expected remote usage error, got {other:?}"),
         }
+        // step verb against a plain container
+        match client.retrieve_step(0, Fidelity::All) {
+            Err(ClientError::Remote { code, message }) => {
+                assert_eq!(code, status::USAGE);
+                assert!(message.contains("MGRT"), "{message}");
+            }
+            other => panic!("expected remote usage error, got {other:?}"),
+        }
         // the connection keeps working after typed errors
         assert!(client.retrieve(Fidelity::Classes(1)).is_ok());
 
         let stats = server.shutdown();
-        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.errors, 3);
         assert_eq!(stats.ok, 1);
     }
 
@@ -738,6 +799,81 @@ mod tests {
         assert_eq!(stats.errors, 0);
     }
 
+    /// Deterministically stream `snaps` into `path` as a 9³ f64 series.
+    fn stream_snaps_to(snaps: &[Tensor<f64>], path: &std::path::Path) {
+        let s = Session::builder()
+            .shape(&[9, 9, 9])
+            .error_bound(1e-3)
+            .build()
+            .unwrap();
+        let writer = s.stream_file(path, 2).unwrap();
+        for t in snaps {
+            writer.push(&AnyTensor::from(t.clone())).unwrap();
+        }
+        writer.finish().unwrap();
+    }
+
+    #[test]
+    fn series_target_serves_steps_and_sees_growth() {
+        let snaps = crate::sim::GrayScott::snapshots(9, 13, 40, 4, 2);
+        let dir = std::env::temp_dir();
+        let live = dir.join(format!("mgr_serve_series_{}.mgrt", std::process::id()));
+        let full = dir.join(format!("mgr_serve_series_full_{}.mgrt", std::process::id()));
+        // the "live" file holds two committed steps; the full file is what
+        // the producer will have written after two more appends (the
+        // writer is deterministic, so its committed prefix is identical)
+        stream_snaps_to(&snaps[..2], &live);
+        stream_snaps_to(&snaps, &full);
+
+        let target = ServeTarget::open_file(&live).unwrap();
+        assert!(matches!(target, ServeTarget::Series(_)));
+        let server = start(target);
+        let mut client = Client::connect(server.addr()).unwrap();
+        let truth = Series::open_file(&full).unwrap();
+
+        // served steps are bit-identical to local reconstruction
+        let got = client.retrieve_step(0, Fidelity::All).unwrap();
+        assert_eq!(got.tensor, truth.retrieve_step(0, Fidelity::All).unwrap());
+        let got = client.retrieve_step(1, Fidelity::Classes(2)).unwrap();
+        assert_eq!(
+            got.tensor,
+            truth.retrieve_step(1, Fidelity::Classes(2)).unwrap()
+        );
+        let roi = [2..7u64, 0..9, 3..5];
+        let got = client.retrieve_region_step(1, &roi, Fidelity::All).unwrap();
+        assert_eq!(
+            got.tensor,
+            truth
+                .retrieve_region_step(1, &[2..7, 0..9, 3..5], Fidelity::All)
+                .unwrap()
+        );
+
+        // an uncommitted step is a typed error, not a hang or crash
+        match client.retrieve_step(3, Fidelity::All) {
+            Err(ClientError::Remote { code, message }) => {
+                assert_eq!(code, status::STEP);
+                assert!(message.contains('3'), "{message}");
+            }
+            other => panic!("expected remote step error, got {other:?}"),
+        }
+        // whole-domain verbs need a step index on a time-series
+        match client.retrieve(Fidelity::All) {
+            Err(ClientError::Remote { code, .. }) => assert_eq!(code, status::USAGE),
+            other => panic!("expected remote usage error, got {other:?}"),
+        }
+
+        // the producer commits two more steps; the daemon refreshes its
+        // step table once and serves the new tail without reopening
+        std::fs::write(&live, std::fs::read(&full).unwrap()).unwrap();
+        let got = client.retrieve_step(3, Fidelity::All).unwrap();
+        assert_eq!(got.tensor, truth.retrieve_step(3, Fidelity::All).unwrap());
+
+        drop(client);
+        server.shutdown();
+        std::fs::remove_file(&live).ok();
+        std::fs::remove_file(&full).ok();
+    }
+
     #[test]
     fn open_file_dispatches_on_magic() {
         let dir = std::env::temp_dir();
@@ -758,7 +894,16 @@ mod tests {
             ServeTarget::Shard(_)
         ));
 
+        let snaps = crate::sim::GrayScott::snapshots(9, 5, 20, 1, 2);
+        let tpath = dir.join("mgr_serve_target_test.mgrt");
+        stream_snaps_to(&snaps, &tpath);
+        assert!(matches!(
+            ServeTarget::open_file(&tpath).unwrap(),
+            ServeTarget::Series(_)
+        ));
+
         std::fs::remove_file(&cpath).ok();
         std::fs::remove_file(&spath).ok();
+        std::fs::remove_file(&tpath).ok();
     }
 }

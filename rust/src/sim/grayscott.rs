@@ -13,6 +13,7 @@
 //! is exactly the kind of smooth-with-features data MGARD targets.
 
 use crate::grid::Tensor;
+use crate::util::par;
 use crate::util::rng::Rng;
 
 /// Simulation state and parameters.
@@ -65,6 +66,40 @@ impl GrayScott {
         }
     }
 
+    /// Like [`GrayScott::new`] but with caller-chosen diffusion/reaction
+    /// parameters and time step. Rejects a `dt` outside the forward-Euler
+    /// stability limit of the 7-point Laplacian, `6·max(Du,Dv)·dt < 1`:
+    /// beyond it the scheme amplifies grid-frequency noise instead of
+    /// simulating, and every downstream snapshot would be garbage.
+    pub fn with_params(
+        n: usize,
+        seed: u64,
+        du: f64,
+        dv: f64,
+        f: f64,
+        k: f64,
+        dt: f64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(n >= 3, "grid side must be at least 3, got {n}");
+        for (name, x) in [("du", du), ("dv", dv), ("f", f), ("k", k)] {
+            anyhow::ensure!(x.is_finite() && x >= 0.0, "{name} must be finite and >= 0, got {x}");
+        }
+        anyhow::ensure!(dt.is_finite() && dt > 0.0, "dt must be finite and > 0, got {dt}");
+        let cfl = 6.0 * du.max(dv) * dt;
+        anyhow::ensure!(
+            cfl < 1.0,
+            "unstable time step: 6*max(Du,Dv)*dt = {cfl:.3} exceeds the \
+             forward-Euler stability limit of 1 (lower --dt or the diffusion rates)"
+        );
+        let mut sim = GrayScott::new(n, seed);
+        sim.du = du;
+        sim.dv = dv;
+        sim.f = f;
+        sim.k = k;
+        sim.dt = dt;
+        Ok(sim)
+    }
+
     #[inline]
     fn lap(field: &[f64], n: usize, x: usize, y: usize, z: usize) -> f64 {
         let at = |x: usize, y: usize, z: usize| field[x * n * n + y * n + z];
@@ -76,31 +111,66 @@ impl GrayScott {
     }
 
     /// Advance `steps` Euler steps.
+    ///
+    /// Each step fans out over contiguous x-plane chunks of the output
+    /// buffers ([`par::chunks`] + [`par::run_tasks`]): every output
+    /// element is computed by the same expression from the *previous*
+    /// step's full fields, so the result is bit-identical to serial
+    /// execution for every worker count (and stays serial below
+    /// [`par::DEFAULT_PAR_THRESHOLD`] or inside a parallel region).
     pub fn step(&mut self, steps: usize) {
-        let n = self.n;
         let mut nu = self.u.clone();
         let mut nv = self.v.clone();
         for _ in 0..steps {
-            for x in 0..n {
-                for y in 0..n {
-                    for z in 0..n {
-                        let i = x * n * n + y * n + z;
-                        let u = self.u[i];
-                        let v = self.v[i];
-                        let uvv = u * v * v;
-                        nu[i] = u
-                            + self.dt
-                                * (self.du * Self::lap(&self.u, n, x, y, z) - uvv
-                                    + self.f * (1.0 - u));
-                        nv[i] = v
-                            + self.dt
-                                * (self.dv * Self::lap(&self.v, n, x, y, z) + uvv
-                                    - (self.f + self.k) * v);
-                    }
-                }
-            }
+            self.step_once(&mut nu, &mut nv);
             std::mem::swap(&mut self.u, &mut nu);
             std::mem::swap(&mut self.v, &mut nv);
+        }
+    }
+
+    /// One Euler update of both species, reading `self.u`/`self.v` and
+    /// writing `nu`/`nv`, parallel over disjoint x-plane chunks.
+    fn step_once(&self, nu: &mut [f64], nv: &mut [f64]) {
+        let n = self.n;
+        let plane = n * n;
+        let workers = par::workers_for(2 * self.u.len()).min(n);
+        let mut tasks: Vec<par::Task<'_>> = Vec::with_capacity(workers);
+        let mut nu_rest = nu;
+        let mut nv_rest = nv;
+        for (x0, xlen) in par::chunks(n, workers) {
+            let (nu_chunk, nu_tail) = nu_rest.split_at_mut(xlen * plane);
+            let (nv_chunk, nv_tail) = nv_rest.split_at_mut(xlen * plane);
+            nu_rest = nu_tail;
+            nv_rest = nv_tail;
+            tasks.push(Box::new(move || {
+                self.update_planes(x0, xlen, nu_chunk, nv_chunk)
+            }));
+        }
+        par::run_tasks(tasks);
+    }
+
+    /// Update planes `x0..x0 + xlen` into chunk-local buffers.
+    fn update_planes(&self, x0: usize, xlen: usize, nu: &mut [f64], nv: &mut [f64]) {
+        let n = self.n;
+        for xi in 0..xlen {
+            let x = x0 + xi;
+            for y in 0..n {
+                for z in 0..n {
+                    let i = x * n * n + y * n + z;
+                    let o = xi * n * n + y * n + z;
+                    let u = self.u[i];
+                    let v = self.v[i];
+                    let uvv = u * v * v;
+                    nu[o] = u
+                        + self.dt
+                            * (self.du * Self::lap(&self.u, n, x, y, z) - uvv
+                                + self.f * (1.0 - u));
+                    nv[o] = v
+                        + self.dt
+                            * (self.dv * Self::lap(&self.v, n, x, y, z) + uvv
+                                - (self.f + self.k) * v);
+                }
+            }
         }
     }
 
@@ -169,5 +239,43 @@ mod tests {
         let snaps = GrayScott::snapshots(9, 4, 20, 3, 10);
         assert_eq!(snaps.len(), 3);
         assert_ne!(snaps[0].data(), snaps[2].data());
+    }
+
+    #[test]
+    fn parallel_step_is_bit_identical_to_serial() {
+        // 41³ puts 2·n³ above DEFAULT_PAR_THRESHOLD, so `a` forks on any
+        // multi-core machine while `b` runs under the serial guard; no
+        // global knobs are touched so this cannot race other tests.
+        assert!(2 * 41usize.pow(3) >= par::DEFAULT_PAR_THRESHOLD);
+        let mut a = GrayScott::new(41, 7);
+        let mut b = GrayScott::new(41, 7);
+        a.step(10);
+        par::with_serial(|| b.step(10));
+        assert_eq!(a.u, b.u);
+        assert_eq!(a.v, b.v);
+    }
+
+    #[test]
+    fn with_params_overrides_and_simulates() {
+        let mut sim = GrayScott::with_params(9, 3, 0.16, 0.08, 0.035, 0.065, 0.8).unwrap();
+        assert_eq!((sim.f, sim.k, sim.dt), (0.035, 0.065, 0.8));
+        sim.step(5);
+        // defaults through with_params must match new() exactly
+        let mut c = GrayScott::with_params(9, 3, 0.16, 0.08, 0.04, 0.06, 0.95).unwrap();
+        let mut d = GrayScott::new(9, 3);
+        c.step(5);
+        d.step(5);
+        assert_eq!(c.v, d.v);
+    }
+
+    #[test]
+    fn with_params_rejects_unstable_and_nonsense() {
+        // 6·0.16·1.1 = 1.056 > 1: outside the stability limit
+        let e = GrayScott::with_params(9, 0, 0.16, 0.08, 0.04, 0.06, 1.1).unwrap_err();
+        assert!(e.to_string().contains("stability"), "{e}");
+        assert!(GrayScott::with_params(9, 0, 0.16, 0.08, 0.04, 0.06, 0.0).is_err());
+        assert!(GrayScott::with_params(9, 0, -0.1, 0.08, 0.04, 0.06, 0.5).is_err());
+        assert!(GrayScott::with_params(9, 0, 0.16, 0.08, f64::NAN, 0.06, 0.5).is_err());
+        assert!(GrayScott::with_params(2, 0, 0.16, 0.08, 0.04, 0.06, 0.5).is_err());
     }
 }

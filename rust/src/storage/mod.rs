@@ -15,7 +15,10 @@
 //! container across a §3.6 domain decomposition: one `MGRS` index over
 //! N independent per-slab containers, written in parallel and read
 //! block-by-block (region-of-interest retrieval opens only the blocks
-//! a request intersects). Readers are shared-concurrency-safe: the
+//! a request intersects). The [`stream`] module adds the time axis: an
+//! `MGRT` log of per-step embedded containers, appended live under a
+//! crash-safe commit protocol with optional temporal delta coding
+//! between steps. Readers are shared-concurrency-safe: the
 //! decoded-class cache lives in [`cache`] (a byte-budgeted concurrent
 //! LRU with per-class decode guards) and every retrieval method takes
 //! `&self`, so one reader behind an `Arc` serves many threads with
@@ -29,6 +32,7 @@ pub mod iosim;
 pub mod mover;
 pub mod reader;
 pub mod shard;
+pub mod stream;
 pub mod tier;
 
 pub use cache::{CacheStats, ClassCache};
@@ -37,4 +41,5 @@ pub use iosim::ParallelFs;
 pub use mover::{place_classes, Placement};
 pub use reader::{ContainerReader, LazyReader, ReadSeek};
 pub use shard::{BlockMeta, Section, ShardHeader, ShardReader, ShardWriter};
+pub use stream::{StepEncoding, StepMeta, StreamHeader, StreamSink, WriteSeek};
 pub use tier::{StorageTier, TierSpec};

@@ -115,16 +115,17 @@ mod tests {
     }
 
     #[test]
-    fn retrieval_grows_with_classes() {
+    fn retrieval_grows_with_classes() -> Result<()> {
         let sizes = [1u64 << 10, 7 << 10, 56 << 10, 448 << 10, 3584 << 10];
         let t = tiers();
         let p = place_classes(&sizes, &t);
         let mut last = 0.0;
         for keep in 1..=sizes.len() {
-            let rt = p.retrieval_time(&t, keep).unwrap();
+            let rt = p.retrieval_time(&t, keep)?;
             assert!(rt >= last - 1e-12);
             last = rt;
         }
+        Ok(())
     }
 
     #[test]
@@ -173,7 +174,27 @@ mod tests {
         // regression: a placed tier absent from the spec list used to
         // panic via expect("tier spec missing")
         let p = place_classes(&[10], &[TierSpec::archive()]);
-        assert!(p.retrieval_time(&[TierSpec::burst_buffer()], 1).is_err());
+        let err = p
+            .retrieval_time(&[TierSpec::burst_buffer()], 1)
+            .unwrap_err();
+        // the error names the missing tier so multi-tier callers can tell
+        // which spec their configuration dropped
+        assert!(err.to_string().contains("Archive"), "{err}");
         assert!(p.retrieval_time(&[TierSpec::archive()], 1).is_ok());
+        // a keep prefix that touches only provided tiers must keep working
+        // even when specs for deeper placed tiers are absent
+        let two = vec![
+            TierSpec {
+                capacity: 100,
+                ..TierSpec::burst_buffer()
+            },
+            TierSpec {
+                capacity: u64::MAX,
+                ..TierSpec::archive()
+            },
+        ];
+        let p = place_classes(&[50, 900], &two);
+        assert!(p.retrieval_time(&[two[0]], 1).is_ok());
+        assert!(p.retrieval_time(&[two[0]], 2).is_err());
     }
 }

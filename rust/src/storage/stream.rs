@@ -1,0 +1,517 @@
+//! Append-able time-series containers (`.mgrt`): the byte-level form of
+//! the paper's Fig-1 workflow applied to a *running* simulation.
+//!
+//! A snapshot container ([`MGRC`](crate::storage::container)) freezes one
+//! timestep; an `MGRT` stream is a **log of timesteps**, written while
+//! the producer is still running. Each committed step embeds one
+//! complete MGRC container, so every capability of the snapshot path —
+//! per-class laziness, measured error annotations, hardened decoding —
+//! carries over per step. Steps may be **independent** (the embedded
+//! container decodes on its own) or **delta-coded** (the embedded
+//! container's segment payloads hold the entropy-coded *difference of
+//! quantized coefficients* against a parent step, MGARD+-style); the
+//! encoding and parent are recorded per step so a reader reconstructs
+//! any step touching only its delta chain.
+//!
+//! # Format (version 1, little-endian)
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0  | 4 | magic `"MGRT"` |
+//! | 4  | 2 | version (`1`) |
+//! | 6  | 1 | scalar width in bytes (4 = f32, 8 = f64) |
+//! | 7  | 1 | ndim |
+//! | 8  | 4 | **committed step count** (u32, patched on every commit) |
+//! | 12 | 4 | reserved (0) |
+//! | 16 | 8·ndim | shape, one u64 per dimension |
+//! | …  | — | step records, appended in index order |
+//!
+//! Each step record is a 25-byte header followed by its payload:
+//!
+//! | size | field |
+//! |---|---|
+//! | 8 | step index echo (u64, must equal the record's position) |
+//! | 1 | encoding (0 = independent, 1 = delta) |
+//! | 8 | parent step index (u64; `u64::MAX` iff independent) |
+//! | 8 | payload bytes (u64) |
+//! | … | payload: one complete MGRC container |
+//!
+//! # Commit protocol (crash safety)
+//!
+//! [`StreamSink::append`] writes the new record *completely* and flushes
+//! it, **then** patches the committed-step count at offset
+//! [`NSTEPS_OFFSET`] and flushes again. A parser trusts only the
+//! committed count: exactly that many records are walked and validated,
+//! and any bytes after the last committed record — a torn append the
+//! producer never got to commit — are ignored. A crash at any point
+//! therefore leaves every previously committed step readable; the
+//! in-flight step simply does not exist.
+//!
+//! Parsing is total: malformed or truncated bytes yield a typed `Err`,
+//! never a panic, and every allocation is bounded by validated header
+//! fields (steps ≤ 2^20, dimensions ≤ 2^24, total nodes ≤ 2^32). The
+//! step walk validates the index echo, the encoding tag, the parent
+//! reference (`parent < index`, so chains terminate and cycles cannot
+//! exist), and that every record lies inside the stream. Embedded
+//! containers are validated by the MGRC parser when a step is opened.
+//!
+//! The normative spec (with a worked hex dump) lives in
+//! `docs/format.md`; this module is its implementation.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::storage::container::{MAX_DIM, MAX_NDIM, MAX_NODES};
+
+/// Stream magic bytes.
+pub const STREAM_MAGIC: [u8; 4] = *b"MGRT";
+/// Current stream format version.
+pub const STREAM_VERSION: u16 = 1;
+/// Size of the fixed prelude (magic through reserved); the shape words
+/// follow it.
+pub const STREAM_FIXED_LEN: usize = 16;
+/// Absolute byte offset of the committed-step count — the only field
+/// ever rewritten after creation.
+pub const NSTEPS_OFFSET: u64 = 8;
+/// Size of a step-record header (index echo + encoding + parent +
+/// payload length).
+pub const STEP_RECORD_LEN: usize = 25;
+/// Largest committed-step count a stream may declare (bounds the
+/// metadata allocation of a hostile header).
+pub const MAX_STEPS: u32 = 1 << 20;
+/// Parent-field sentinel carried by independent steps.
+pub const INDEPENDENT_PARENT: u64 = u64::MAX;
+
+/// True when `magic` is the 4-byte MGRT stream magic (dispatch helper
+/// for consumers that sniff file types, mirroring
+/// [`crate::storage::shard::is_shard`]).
+pub fn is_stream(magic: &[u8]) -> bool {
+    magic == STREAM_MAGIC
+}
+
+/// Sink abstraction for stream writers (anything writable and seekable;
+/// the write-side dual of [`crate::storage::ReadSeek`]).
+pub trait WriteSeek: Write + Seek {}
+impl<T: Write + Seek> WriteSeek for T {}
+
+/// How a step's embedded container payload is to be interpreted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepEncoding {
+    /// The embedded container decodes on its own.
+    Independent,
+    /// The embedded container's segments hold quantized-coefficient
+    /// deltas against the parent step; reconstruction needs the parent's
+    /// quantized classes first.
+    Delta,
+}
+
+impl StepEncoding {
+    fn code(self) -> u8 {
+        match self {
+            StepEncoding::Independent => 0,
+            StepEncoding::Delta => 1,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Self> {
+        match code {
+            0 => Ok(StepEncoding::Independent),
+            1 => Ok(StepEncoding::Delta),
+            other => bail!("unknown step encoding tag {other}"),
+        }
+    }
+}
+
+/// Step-table entry: one per committed step.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepMeta {
+    /// The step's index on the timestep axis (== its table position).
+    pub index: u64,
+    /// Independent or delta-coded.
+    pub encoding: StepEncoding,
+    /// Delta parent (`Some(p)` with `p < index` iff delta-coded).
+    pub parent: Option<u64>,
+    /// Absolute byte offset of the embedded MGRC payload.
+    pub offset: u64,
+    /// Embedded MGRC payload length in bytes.
+    pub bytes: u64,
+}
+
+/// Parsed stream header: the prelude plus the walked step table of
+/// every *committed* record.
+#[derive(Clone, Debug)]
+pub struct StreamHeader {
+    /// Scalar width in bytes (4 = f32, 8 = f64).
+    pub dtype_bytes: u8,
+    /// Grid shape every step's field carries.
+    pub shape: Vec<usize>,
+    /// One entry per committed step, in index order.
+    pub steps: Vec<StepMeta>,
+}
+
+impl StreamHeader {
+    /// Number of committed steps.
+    pub fn nsteps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Serialized prelude size (fixed part + shape words) for `ndim`
+    /// dimensions.
+    pub fn prelude_bytes(ndim: usize) -> usize {
+        STREAM_FIXED_LEN + 8 * ndim
+    }
+
+    /// The step-table entry for step `t`.
+    pub fn step(&self, t: u64) -> Result<&StepMeta> {
+        self.steps
+            .get(t as usize)
+            .ok_or_else(|| anyhow!("step {t} out of range (stream has {} steps)", self.steps.len()))
+    }
+
+    /// Parse and fully validate a buffered stream. Trailing bytes after
+    /// the last committed record are permitted (torn-append tolerance);
+    /// everything up to there must check out.
+    pub fn parse(buf: &[u8]) -> Result<StreamHeader> {
+        let mut cur = std::io::Cursor::new(buf);
+        Self::read_from(&mut cur)
+    }
+
+    /// Parse and fully validate a seekable stream, reading only the
+    /// prelude and the 25-byte record headers (payload bytes are skipped
+    /// over, not fetched). This is the open path of
+    /// [`crate::stream::StreamReader`]; re-running it on a grown file
+    /// picks up newly committed steps.
+    pub fn read_from<R: Read + Seek>(src: &mut R) -> Result<StreamHeader> {
+        let total = src.seek(SeekFrom::End(0))?;
+        src.seek(SeekFrom::Start(0))?;
+
+        let mut fixed = [0u8; STREAM_FIXED_LEN];
+        read_exact_at(src, &mut fixed, "stream prelude")?;
+        ensure!(fixed[0..4] == STREAM_MAGIC, "not an MGRT stream (bad magic)");
+        let version = u16::from_le_bytes(fixed[4..6].try_into().unwrap());
+        ensure!(version == STREAM_VERSION, "unsupported stream version {version}");
+        let dtype_bytes = fixed[6];
+        ensure!(
+            dtype_bytes == 4 || dtype_bytes == 8,
+            "unsupported scalar width {dtype_bytes}"
+        );
+        let ndim = fixed[7] as usize;
+        ensure!(ndim >= 1 && ndim <= MAX_NDIM, "ndim {ndim} outside 1..={MAX_NDIM}");
+        let nsteps = u32::from_le_bytes(fixed[8..12].try_into().unwrap());
+        ensure!(nsteps <= MAX_STEPS, "step count {nsteps} exceeds {MAX_STEPS}");
+        let reserved = u32::from_le_bytes(fixed[12..16].try_into().unwrap());
+        ensure!(reserved == 0, "reserved prelude word must be 0, got {reserved}");
+
+        let mut shape = Vec::with_capacity(ndim);
+        let mut word = [0u8; 8];
+        let mut nodes: u64 = 1;
+        for _ in 0..ndim {
+            read_exact_at(src, &mut word, "stream shape")?;
+            let d = u64::from_le_bytes(word);
+            ensure!(d >= 3 && d <= MAX_DIM, "dimension {d} outside 3..={MAX_DIM}");
+            nodes = nodes
+                .checked_mul(d)
+                .filter(|&n| n <= MAX_NODES)
+                .ok_or_else(|| anyhow!("stream tensor exceeds {MAX_NODES} nodes"))?;
+            shape.push(d as usize);
+        }
+
+        // walk exactly the committed records; anything beyond the last
+        // one is an uncommitted torn append and is deliberately ignored
+        let mut steps = Vec::with_capacity(nsteps as usize);
+        let mut pos = Self::prelude_bytes(ndim) as u64;
+        let mut rec = [0u8; STEP_RECORD_LEN];
+        for k in 0..nsteps as u64 {
+            ensure!(
+                pos + STEP_RECORD_LEN as u64 <= total,
+                "stream truncated: step {k} record header ends past EOF"
+            );
+            read_exact_at(src, &mut rec, "step record")?;
+            let echo = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+            ensure!(echo == k, "step record {k} echoes index {echo}");
+            let encoding = StepEncoding::from_code(rec[8])?;
+            let parent_raw = u64::from_le_bytes(rec[9..17].try_into().unwrap());
+            let parent = match encoding {
+                StepEncoding::Independent => {
+                    ensure!(
+                        parent_raw == INDEPENDENT_PARENT,
+                        "independent step {k} carries parent {parent_raw}"
+                    );
+                    None
+                }
+                StepEncoding::Delta => {
+                    ensure!(
+                        parent_raw < k,
+                        "delta step {k} references parent {parent_raw} (must be < {k})"
+                    );
+                    Some(parent_raw)
+                }
+            };
+            let bytes = u64::from_le_bytes(rec[17..25].try_into().unwrap());
+            let offset = pos + STEP_RECORD_LEN as u64;
+            let end = offset
+                .checked_add(bytes)
+                .ok_or_else(|| anyhow!("step {k} payload length overflows"))?;
+            ensure!(end <= total, "stream truncated: step {k} payload ends past EOF");
+            steps.push(StepMeta {
+                index: k,
+                encoding,
+                parent,
+                offset,
+                bytes,
+            });
+            src.seek(SeekFrom::Start(end))?;
+            pos = end;
+        }
+
+        Ok(StreamHeader {
+            dtype_bytes,
+            shape,
+            steps,
+        })
+    }
+}
+
+fn read_exact_at<R: Read>(src: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    src.read_exact(buf)
+        .map_err(|e| anyhow!("stream truncated reading {what}: {e}"))
+}
+
+/// Append-side of the MGRT format: owns the sink, writes the prelude on
+/// creation, and appends step records under the two-flush commit
+/// protocol (record first, committed-count patch second). Callers hand
+/// it complete embedded-container payloads; the streaming encoder that
+/// produces them lives in [`crate::stream::StreamWriter`].
+pub struct StreamSink<W: Write + Seek> {
+    sink: W,
+    nsteps: u32,
+    end: u64,
+}
+
+impl<W: Write + Seek> StreamSink<W> {
+    /// Write a fresh prelude (zero committed steps) for `shape` fields
+    /// of `dtype_bytes`-wide scalars.
+    pub fn create(mut sink: W, dtype_bytes: u8, shape: &[usize]) -> Result<Self> {
+        ensure!(
+            dtype_bytes == 4 || dtype_bytes == 8,
+            "unsupported scalar width {dtype_bytes}"
+        );
+        ensure!(
+            !shape.is_empty() && shape.len() <= MAX_NDIM,
+            "ndim {} outside 1..={MAX_NDIM}",
+            shape.len()
+        );
+        for &d in shape {
+            ensure!(
+                d >= 3 && (d as u64) <= MAX_DIM,
+                "dimension {d} outside 3..={MAX_DIM}"
+            );
+        }
+        let mut prelude = Vec::with_capacity(StreamHeader::prelude_bytes(shape.len()));
+        prelude.extend_from_slice(&STREAM_MAGIC);
+        prelude.extend_from_slice(&STREAM_VERSION.to_le_bytes());
+        prelude.push(dtype_bytes);
+        prelude.push(shape.len() as u8);
+        prelude.extend_from_slice(&0u32.to_le_bytes()); // committed steps
+        prelude.extend_from_slice(&0u32.to_le_bytes()); // reserved
+        for &d in shape {
+            prelude.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        sink.seek(SeekFrom::Start(0))?;
+        sink.write_all(&prelude)?;
+        sink.flush()?;
+        Ok(StreamSink {
+            sink,
+            nsteps: 0,
+            end: prelude.len() as u64,
+        })
+    }
+
+    /// Committed steps so far.
+    pub fn nsteps(&self) -> u32 {
+        self.nsteps
+    }
+
+    /// Total committed bytes (prelude + committed records).
+    pub fn committed_bytes(&self) -> u64 {
+        self.end
+    }
+
+    /// Append one step record and commit it. The record (header +
+    /// `payload`) is written and flushed *before* the committed-count
+    /// patch, so a crash between the two flushes leaves a torn tail the
+    /// parser ignores — never a half-visible step.
+    pub fn append(
+        &mut self,
+        encoding: StepEncoding,
+        parent: Option<u64>,
+        payload: &[u8],
+    ) -> Result<()> {
+        ensure!(self.nsteps < MAX_STEPS, "stream is full ({MAX_STEPS} steps)");
+        let k = self.nsteps as u64;
+        let parent_raw = match (encoding, parent) {
+            (StepEncoding::Independent, None) => INDEPENDENT_PARENT,
+            (StepEncoding::Delta, Some(p)) if p < k => p,
+            (StepEncoding::Delta, Some(p)) => {
+                bail!("delta step {k} cannot reference parent {p} (must be < {k})")
+            }
+            (StepEncoding::Independent, Some(_)) => {
+                bail!("independent step {k} cannot carry a parent")
+            }
+            (StepEncoding::Delta, None) => bail!("delta step {k} requires a parent"),
+        };
+
+        let mut rec = Vec::with_capacity(STEP_RECORD_LEN + payload.len());
+        rec.extend_from_slice(&k.to_le_bytes());
+        rec.push(encoding.code());
+        rec.extend_from_slice(&parent_raw.to_le_bytes());
+        rec.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        rec.extend_from_slice(payload);
+
+        self.sink.seek(SeekFrom::Start(self.end))?;
+        self.sink.write_all(&rec)?;
+        self.sink.flush()?;
+
+        let committed = self.nsteps + 1;
+        self.sink.seek(SeekFrom::Start(NSTEPS_OFFSET))?;
+        self.sink.write_all(&committed.to_le_bytes())?;
+        self.sink.flush()?;
+
+        self.nsteps = committed;
+        self.end += rec.len() as u64;
+        Ok(())
+    }
+
+    /// Consume the sink (e.g. to recover the underlying buffer/file).
+    pub fn into_inner(self) -> W {
+        self.sink
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sink3(shape: &[usize]) -> StreamSink<Cursor<Vec<u8>>> {
+        StreamSink::create(Cursor::new(Vec::new()), 8, shape).unwrap()
+    }
+
+    #[test]
+    fn empty_stream_roundtrips() {
+        let s = sink3(&[9, 9, 9]);
+        let buf = s.into_inner().into_inner();
+        assert_eq!(buf.len(), StreamHeader::prelude_bytes(3));
+        let h = StreamHeader::parse(&buf).unwrap();
+        assert_eq!(h.dtype_bytes, 8);
+        assert_eq!(h.shape, vec![9, 9, 9]);
+        assert_eq!(h.nsteps(), 0);
+    }
+
+    #[test]
+    fn appended_steps_roundtrip_with_offsets() {
+        let mut s = sink3(&[5, 5]);
+        s.append(StepEncoding::Independent, None, b"AAAA").unwrap();
+        s.append(StepEncoding::Delta, Some(0), b"BBBBBB").unwrap();
+        s.append(StepEncoding::Delta, Some(1), b"C").unwrap();
+        assert_eq!(s.nsteps(), 3);
+        let buf = s.into_inner().into_inner();
+
+        let h = StreamHeader::parse(&buf).unwrap();
+        assert_eq!(h.nsteps(), 3);
+        let s0 = h.step(0).unwrap();
+        assert_eq!(s0.encoding, StepEncoding::Independent);
+        assert_eq!(s0.parent, None);
+        assert_eq!(&buf[s0.offset as usize..(s0.offset + s0.bytes) as usize], b"AAAA");
+        let s1 = h.step(1).unwrap();
+        assert_eq!(s1.encoding, StepEncoding::Delta);
+        assert_eq!(s1.parent, Some(0));
+        assert_eq!(&buf[s1.offset as usize..(s1.offset + s1.bytes) as usize], b"BBBBBB");
+        let s2 = h.step(2).unwrap();
+        assert_eq!(s2.parent, Some(1));
+        assert_eq!(&buf[s2.offset as usize..(s2.offset + s2.bytes) as usize], b"C");
+        assert!(h.step(3).is_err());
+    }
+
+    #[test]
+    fn uncommitted_tail_is_invisible_and_harmless() {
+        let mut s = sink3(&[5, 5]);
+        s.append(StepEncoding::Independent, None, b"AAAA").unwrap();
+        let mut buf = s.into_inner().into_inner();
+        // a torn append: record bytes landed, the count patch did not
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&INDEPENDENT_PARENT.to_le_bytes());
+        buf.extend_from_slice(&100u64.to_le_bytes()); // payload length lies
+        buf.extend_from_slice(b"torn");
+        let h = StreamHeader::parse(&buf).unwrap();
+        assert_eq!(h.nsteps(), 1, "torn tail must stay invisible");
+    }
+
+    #[test]
+    fn truncation_inside_committed_records_is_an_error() {
+        let mut s = sink3(&[5, 5]);
+        s.append(StepEncoding::Independent, None, b"AAAA").unwrap();
+        s.append(StepEncoding::Delta, Some(0), b"BBBBBB").unwrap();
+        let buf = s.into_inner().into_inner();
+        for cut in 0..buf.len() {
+            let err = StreamHeader::parse(&buf[..cut]);
+            assert!(err.is_err(), "prefix of {cut} bytes parsed");
+        }
+    }
+
+    #[test]
+    fn parent_and_encoding_violations_are_writer_errors() {
+        let mut s = sink3(&[5, 5]);
+        assert!(s.append(StepEncoding::Delta, Some(0), b"x").is_err(), "parent == index");
+        assert!(s.append(StepEncoding::Delta, None, b"x").is_err(), "delta without parent");
+        s.append(StepEncoding::Independent, None, b"x").unwrap();
+        assert!(
+            s.append(StepEncoding::Independent, Some(0), b"x").is_err(),
+            "independent with parent"
+        );
+        assert!(s.append(StepEncoding::Delta, Some(7), b"x").is_err(), "future parent");
+        s.append(StepEncoding::Delta, Some(0), b"y").unwrap();
+        assert_eq!(s.nsteps(), 2);
+    }
+
+    #[test]
+    fn corrupt_prelude_fields_are_typed_errors() {
+        let mut s = sink3(&[5, 5]);
+        s.append(StepEncoding::Independent, None, b"AAAA").unwrap();
+        let good = s.into_inner().into_inner();
+
+        let mut bad = good.clone();
+        bad[0..4].copy_from_slice(b"MGRC"); // foreign magic
+        assert!(StreamHeader::parse(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad[4] = 9; // version
+        assert!(StreamHeader::parse(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad[6] = 5; // dtype width
+        assert!(StreamHeader::parse(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&(MAX_STEPS + 1).to_le_bytes()); // nsteps
+        assert!(StreamHeader::parse(&bad).is_err());
+
+        let mut bad = good.clone();
+        bad[12] = 1; // reserved
+        assert!(StreamHeader::parse(&bad).is_err());
+
+        let mut bad = good;
+        bad[16..24].copy_from_slice(&2u64.to_le_bytes()); // dimension < 3
+        assert!(StreamHeader::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn is_stream_discriminates_magics() {
+        assert!(is_stream(b"MGRT"));
+        assert!(!is_stream(b"MGRC"));
+        assert!(!is_stream(b"MGRS"));
+        assert!(!is_stream(b"MGR"));
+    }
+}

@@ -1,0 +1,82 @@
+//! In-situ streaming refactoring: encode a live simulation's timesteps
+//! into one append-able [`MGRT`](crate::storage::stream) artifact as
+//! they are produced (paper Fig 1 applied to a running producer;
+//! MGARD+'s temporal-correlation reduction from PAPERS.md).
+//!
+//! The subsystem has two halves:
+//!
+//! - [`StreamWriter`] — a bounded-window pipeline: the producer
+//!   ([`crate::sim::GrayScott`] in the demos) pushes snapshots and
+//!   **blocks when the window is full** (backpressure), while a worker
+//!   thread refactors each step and appends it under the MGRT commit
+//!   protocol. Peak resident memory is therefore bounded by
+//!   `(window + 1) · step_bytes` of queued + in-flight snapshots, which
+//!   the writer accounts for exactly and reports in [`StreamStats`].
+//! - [`StreamReader`] — reconstructs any committed step, touching only
+//!   that step's delta chain, bit-identically to refactoring the same
+//!   snapshot standalone at the same fidelity.
+//!
+//! # Temporal delta coding
+//!
+//! Per step the writer produces two candidates and keeps the smaller
+//! (greedy, by measured encoded size — MGARD+'s selection criterion):
+//!
+//! 1. **independent** — the step's own progressive container, exactly
+//!    what [`crate::storage::ProgressiveWriter`] emits;
+//! 2. **delta** — the same container layout, but every class segment
+//!    entropy-codes `q_t[k] − q_parent[k]`, the *integer difference of
+//!    quantized coefficients* against the previous step.
+//!
+//! Because the delta is taken after quantization, reconstruction is
+//! exact in quantized space: `q_t = q_parent + Δ` recovers the very
+//! integers the independent encoding would have stored, so a delta step
+//! dequantizes, assembles, and recomposes to the **bit-identical**
+//! tensor at every class prefix, and the compounded error bound is the
+//! single-step bound — error never accumulates along a chain. Chains
+//! are capped ([`StreamConfig::max_chain`]) so reconstruction cost
+//! stays bounded, and each chain terminates in an independent root.
+//!
+//! The dtype-erased facade over both halves is
+//! [`crate::api::Series`] / [`crate::api::Session::stream`].
+
+pub mod reader;
+pub mod writer;
+
+pub use reader::StreamReader;
+pub use writer::{StepReport, StreamStats, StreamWriter};
+
+use crate::compress::Codec;
+
+/// Streaming-encoder configuration (one per [`StreamWriter`]).
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Absolute error bound every step is refactored under.
+    pub error_bound: f64,
+    /// Entropy codec for every step's segments.
+    pub codec: Codec,
+    /// Decompose level count (`None` = deepest the shape supports).
+    pub nlevels: Option<usize>,
+    /// Max snapshots queued before `push` blocks (≥ 1).
+    pub window: usize,
+    /// Max consecutive delta steps before an independent step is forced
+    /// (≥ 1); bounds the chain a reader must walk.
+    pub max_chain: usize,
+    /// Worker threads for the per-class candidate encodes
+    /// (via [`crate::coordinator::run_pooled`]).
+    pub workers: usize,
+}
+
+impl StreamConfig {
+    /// Defaults: zlib, deepest hierarchy, window 4, chains capped at 16,
+    /// encode pool sized by [`crate::util::par::threads`].
+    pub fn new(error_bound: f64) -> Self {
+        StreamConfig {
+            error_bound,
+            codec: Codec::Zlib,
+            nlevels: None,
+            window: 4,
+            max_chain: 16,
+            workers: crate::util::par::threads(),
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! The streaming encode pipeline: bounded-window backpressure in front,
+//! greedy independent-vs-delta candidate selection behind, MGRT commit
+//! protocol underneath.
+
+use std::collections::VecDeque;
+use std::io::{Seek, Write};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::compress::{decode_stream, encode_stream};
+use crate::coordinator::run_pooled;
+use crate::grid::{max_levels, Hierarchy, Tensor};
+use crate::storage::stream::{StepEncoding, StreamSink};
+use crate::storage::ProgressiveWriter;
+use crate::stream::StreamConfig;
+use crate::util::Scalar;
+
+/// What happened to one step: the chosen encoding and both candidates'
+/// measured container sizes (the greedy decision's evidence).
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Step index on the timestep axis.
+    pub index: u64,
+    /// Which candidate won.
+    pub encoding: StepEncoding,
+    /// Committed container bytes (the winner's size).
+    pub bytes: u64,
+    /// Measured size of the independent candidate.
+    pub independent_bytes: u64,
+    /// Measured size of the delta candidate (`None` when no delta was
+    /// attempted: first step, or the chain cap forced independence).
+    pub delta_bytes: Option<u64>,
+}
+
+/// Summary a finished stream hands back.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    /// One report per committed step, in order.
+    pub steps: Vec<StepReport>,
+    /// High-water mark of queued + in-flight snapshot bytes — the
+    /// backpressure guarantee, measured: at most
+    /// `(window + 1) · step_bytes`.
+    pub peak_resident_bytes: usize,
+    /// The window the writer ran with.
+    pub window: usize,
+}
+
+impl StreamStats {
+    /// Committed payload bytes across all steps.
+    pub fn total_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Committed bytes ÷ what all-independent encoding would have cost
+    /// (≤ 1 when delta coding ever won; exactly 1 when it never did).
+    pub fn delta_ratio(&self) -> f64 {
+        let ind: u64 = self.steps.iter().map(|s| s.independent_bytes).sum();
+        if ind == 0 {
+            return 1.0;
+        }
+        self.total_bytes() as f64 / ind as f64
+    }
+}
+
+struct State<T> {
+    queue: VecDeque<Tensor<T>>,
+    closed: bool,
+    failed: Option<String>,
+    resident_bytes: usize,
+    peak_resident_bytes: usize,
+}
+
+struct Shared<T> {
+    window: usize,
+    state: Mutex<State<T>>,
+    /// Producer waits here for a window slot.
+    space: Condvar,
+    /// Worker waits here for a snapshot (or close).
+    work: Condvar,
+}
+
+/// Absolute quantized classes of the previously committed step — the
+/// delta base (kept instead of the tensor itself: deltas are taken in
+/// quantized space, see the module docs).
+struct PrevStep {
+    qs: Vec<Vec<i64>>,
+    chain: usize,
+}
+
+/// Streaming encoder: push snapshots, get an `.mgrt` out. See
+/// [`crate::stream`] for the pipeline and delta-coding semantics.
+pub struct StreamWriter<T: Scalar, W: Write + Seek + Send + 'static> {
+    shared: Arc<Shared<T>>,
+    shape: Vec<usize>,
+    worker: Option<JoinHandle<Result<(StreamSink<W>, Vec<StepReport>)>>>,
+}
+
+impl<T: Scalar, W: Write + Seek + Send + 'static> StreamWriter<T, W> {
+    /// Open a stream over `sink` for `shape`-shaped snapshots and start
+    /// the encode worker. `shape` must be refactorable (every dim
+    /// `2^k + 1`), like every other write path in the crate.
+    pub fn new(sink: W, shape: &[usize], config: StreamConfig) -> Result<Self> {
+        ensure!(config.window >= 1, "stream window must be >= 1");
+        ensure!(config.max_chain >= 1, "stream max_chain must be >= 1");
+        ensure!(
+            config.error_bound.is_finite() && config.error_bound > 0.0,
+            "error bound must be positive and finite"
+        );
+        let max = max_levels(shape).ok_or_else(|| {
+            anyhow!("shape {shape:?} is not refactorable (dims must be 2^k+1)")
+        })?;
+        if let Some(l) = config.nlevels {
+            ensure!(l >= 1 && l <= max, "nlevels {l} outside 1..={max} for shape {shape:?}");
+        }
+        let hierarchy = Hierarchy::uniform_with_levels(shape, config.nlevels);
+        let sink = StreamSink::create(sink, T::BYTES as u8, shape)?;
+
+        let shared = Arc::new(Shared {
+            window: config.window,
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                closed: false,
+                failed: None,
+                resident_bytes: 0,
+                peak_resident_bytes: 0,
+            }),
+            space: Condvar::new(),
+            work: Condvar::new(),
+        });
+
+        let worker_shared = Arc::clone(&shared);
+        let worker = std::thread::spawn(move || {
+            worker_loop::<T, W>(worker_shared, sink, hierarchy, config)
+        });
+
+        Ok(StreamWriter {
+            shared,
+            shape: shape.to_vec(),
+            worker: Some(worker),
+        })
+    }
+
+    /// Queue one snapshot for encoding. **Blocks** while `window`
+    /// snapshots are already queued — this is the backpressure that
+    /// bounds in-flight memory; the producing simulation stalls instead
+    /// of buffering unboundedly. Fails fast if the worker has failed.
+    pub fn push(&self, snapshot: Tensor<T>) -> Result<()> {
+        ensure!(
+            snapshot.shape() == &self.shape[..],
+            "snapshot shape {:?} does not match stream shape {:?}",
+            snapshot.shape(),
+            self.shape
+        );
+        let nbytes = snapshot.nbytes();
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(msg) = &st.failed {
+                bail!("stream worker failed: {msg}");
+            }
+            ensure!(!st.closed, "stream already finished");
+            if st.queue.len() < self.shared.window {
+                break;
+            }
+            st = self.shared.space.wait(st).unwrap();
+        }
+        st.resident_bytes += nbytes;
+        st.peak_resident_bytes = st.peak_resident_bytes.max(st.resident_bytes);
+        st.queue.push_back(snapshot);
+        self.shared.work.notify_all();
+        Ok(())
+    }
+
+    /// Snapshots currently queued (for tests and progress displays).
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// Drain the queue, stop the worker, and hand back the sink plus
+    /// the per-step reports and measured memory high-water mark. Every
+    /// pushed snapshot is committed before this returns.
+    pub fn finish(mut self) -> Result<(W, StreamStats)> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            self.shared.work.notify_all();
+        }
+        let handle = self.worker.take().expect("finish called once");
+        let (sink, steps) = handle
+            .join()
+            .map_err(|_| anyhow!("stream worker panicked"))??;
+        let st = self.shared.state.lock().unwrap();
+        let stats = StreamStats {
+            steps,
+            peak_resident_bytes: st.peak_resident_bytes,
+            window: self.shared.window,
+        };
+        drop(st);
+        Ok((sink.into_inner(), stats))
+    }
+}
+
+impl<T: Scalar, W: Write + Seek + Send + 'static> Drop for StreamWriter<T, W> {
+    fn drop(&mut self) {
+        if let Some(handle) = self.worker.take() {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            self.shared.work.notify_all();
+            drop(st);
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop<T: Scalar, W: Write + Seek + Send + 'static>(
+    shared: Arc<Shared<T>>,
+    mut sink: StreamSink<W>,
+    hierarchy: Hierarchy,
+    config: StreamConfig,
+) -> Result<(StreamSink<W>, Vec<StepReport>)> {
+    let mut pw = ProgressiveWriter::<T>::new(hierarchy, config.codec);
+    let mut prev: Option<PrevStep> = None;
+    let mut reports = Vec::new();
+
+    loop {
+        let snapshot = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    // a window slot freed: the producer may queue the
+                    // next snapshot while this one is being encoded
+                    shared.space.notify_all();
+                    break Some(t);
+                }
+                if st.closed {
+                    break None;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        let Some(snapshot) = snapshot else { break };
+        let nbytes = snapshot.nbytes();
+
+        match encode_step(&mut pw, &mut sink, &mut prev, &config, &snapshot) {
+            Ok(report) => {
+                let mut st = shared.state.lock().unwrap();
+                st.resident_bytes -= nbytes;
+                drop(st);
+                reports.push(report);
+            }
+            Err(e) => {
+                let mut st = shared.state.lock().unwrap();
+                st.failed = Some(format!("{e:#}"));
+                shared.space.notify_all();
+                drop(st);
+                return Err(e);
+            }
+        }
+    }
+    Ok((sink, reports))
+}
+
+/// Encode one snapshot: produce the independent candidate (and, when a
+/// parent is available and the chain cap allows, the quantized-delta
+/// candidate), keep the smaller by measured size, and commit it.
+fn encode_step<T: Scalar, W: Write + Seek>(
+    pw: &mut ProgressiveWriter<T>,
+    sink: &mut StreamSink<W>,
+    prev: &mut Option<PrevStep>,
+    config: &StreamConfig,
+    snapshot: &Tensor<T>,
+) -> Result<StepReport> {
+    let index = sink.nsteps() as u64;
+    let (bytes_ind, header) = pw.write(snapshot, config.error_bound)?;
+
+    // recover the absolute quantized classes from the container we just
+    // wrote — they are both this step's delta base for the next one and
+    // the minuend of this step's own delta candidate
+    let mut qs = Vec::with_capacity(header.nclasses());
+    let mut off = header.header_bytes();
+    for seg in &header.segments {
+        let len = seg.bytes as usize;
+        let q = decode_stream(header.codec, &bytes_ind[off..off + len], seg.nvalues as usize)?;
+        off += len;
+        qs.push(q);
+    }
+
+    let delta = match prev.as_ref() {
+        Some(p) if p.chain < config.max_chain => delta_candidate(&header, &qs, &p.qs, config)?,
+        _ => None,
+    };
+
+    let independent_bytes = bytes_ind.len() as u64;
+    let delta_bytes = delta.as_ref().map(|d| d.len() as u64);
+    let (encoding, parent, payload) = match delta {
+        Some(d) if (d.len() as u64) < independent_bytes => {
+            (StepEncoding::Delta, Some(index - 1), d)
+        }
+        _ => (StepEncoding::Independent, None, bytes_ind),
+    };
+    sink.append(encoding, parent, &payload)?;
+
+    let chain = match encoding {
+        StepEncoding::Independent => 0,
+        StepEncoding::Delta => prev.as_ref().map_or(1, |p| p.chain + 1),
+    };
+    *prev = Some(PrevStep { qs, chain });
+
+    Ok(StepReport {
+        index,
+        encoding,
+        bytes: payload.len() as u64,
+        independent_bytes,
+        delta_bytes,
+    })
+}
+
+/// Serialize the delta candidate: the independent container's header
+/// (annotations included — reconstruction is identical, so they stay
+/// exact) over segments that entropy-code `q[k] − q_prev[k]`. Returns
+/// `None` when class structure diverged or a difference overflows
+/// (fall back to independent rather than commit a lossy delta).
+fn delta_candidate(
+    header: &crate::storage::ContainerHeader,
+    qs: &[Vec<i64>],
+    prev_qs: &[Vec<i64>],
+    config: &StreamConfig,
+) -> Result<Option<Vec<u8>>> {
+    if prev_qs.len() != qs.len()
+        || qs.iter().zip(prev_qs).any(|(a, b)| a.len() != b.len())
+    {
+        return Ok(None);
+    }
+    let mut deltas = Vec::with_capacity(qs.len());
+    for (q, pq) in qs.iter().zip(prev_qs) {
+        let mut d = Vec::with_capacity(q.len());
+        for (&a, &b) in q.iter().zip(pq) {
+            match a.checked_sub(b) {
+                Some(x) => d.push(x),
+                None => return Ok(None),
+            }
+        }
+        deltas.push(d);
+    }
+
+    let codec = header.codec;
+    let jobs: Vec<&[i64]> = deltas.iter().map(|d| d.as_slice()).collect();
+    let workers = config.workers.clamp(1, jobs.len());
+    let payloads = run_pooled(workers, jobs, |d| encode_stream(codec, d));
+    let payloads: Vec<Vec<u8>> = payloads.into_iter().collect::<Result<_>>()?;
+
+    let mut delta_header = header.clone();
+    for (seg, p) in delta_header.segments.iter_mut().zip(&payloads) {
+        seg.bytes = p.len() as u64;
+    }
+    let mut out = delta_header.to_bytes();
+    for p in &payloads {
+        out.extend_from_slice(p);
+    }
+    Ok(Some(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::sim::GrayScott;
+    use crate::storage::stream::StreamHeader;
+    use std::io::Cursor;
+
+    fn config(eb: f64, window: usize) -> StreamConfig {
+        let mut c = StreamConfig::new(eb);
+        c.window = window;
+        c
+    }
+
+    #[test]
+    fn evolving_steps_commit_and_parse() {
+        let snaps = GrayScott::snapshots(9, 7, 40, 5, 5);
+        let w = StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9, 9], config(1e-3, 2))
+            .unwrap();
+        for s in &snaps {
+            w.push(s.clone()).unwrap();
+        }
+        let (sink, stats) = w.finish().unwrap();
+        assert_eq!(stats.steps.len(), 5);
+        let buf = sink.into_inner();
+        let h = StreamHeader::parse(&buf).unwrap();
+        assert_eq!(h.nsteps(), 5);
+        // step 0 has no parent to delta against
+        assert_eq!(h.step(0).unwrap().encoding, StepEncoding::Independent);
+        // the greedy choice is recorded consistently in index and report
+        for (meta, rep) in h.steps.iter().zip(&stats.steps) {
+            assert_eq!(meta.encoding, rep.encoding);
+            assert_eq!(meta.bytes, rep.bytes);
+        }
+    }
+
+    #[test]
+    fn adjacent_timesteps_pick_delta_and_shrink() {
+        // closely spaced snapshots of a smooth evolution: quantized
+        // coefficients barely move, so the delta candidate must win at
+        // least once and the stream must come out smaller than
+        // all-independent encoding
+        let snaps = GrayScott::snapshots(17, 3, 200, 6, 2);
+        let w = StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[17, 17, 17], config(1e-4, 3))
+            .unwrap();
+        for s in &snaps {
+            w.push(s.clone()).unwrap();
+        }
+        let (_, stats) = w.finish().unwrap();
+        assert!(
+            stats.steps.iter().any(|s| s.encoding == StepEncoding::Delta),
+            "no delta step chosen: {:?}",
+            stats.steps
+        );
+        assert!(stats.delta_ratio() < 1.0, "ratio {}", stats.delta_ratio());
+    }
+
+    #[test]
+    fn chain_cap_forces_periodic_independents() {
+        let snaps = GrayScott::snapshots(9, 5, 200, 6, 1);
+        let mut c = config(1e-2, 2);
+        c.max_chain = 2;
+        let w = StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9, 9], c).unwrap();
+        for s in &snaps {
+            w.push(s.clone()).unwrap();
+        }
+        let (_, stats) = w.finish().unwrap();
+        let mut chain = 0usize;
+        for s in &stats.steps {
+            match s.encoding {
+                StepEncoding::Delta => {
+                    chain += 1;
+                    assert!(chain <= 2, "chain cap violated at step {}", s.index);
+                    assert!(s.delta_bytes.is_some());
+                }
+                StepEncoding::Independent => chain = 0,
+            }
+        }
+        // the step right after a full chain must not even attempt delta
+        assert!(stats
+            .steps
+            .windows(3)
+            .filter(|w| w[0].encoding == StepEncoding::Delta
+                && w[1].encoding == StepEncoding::Delta)
+            .all(|w| w[2].delta_bytes.is_none()));
+    }
+
+    #[test]
+    fn peak_resident_bytes_bounded_by_window() {
+        let snaps = GrayScott::snapshots(9, 1, 20, 8, 2);
+        let step_bytes = snaps[0].nbytes();
+        let window = 2;
+        let w =
+            StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9, 9], config(1e-3, window))
+                .unwrap();
+        for s in &snaps {
+            w.push(s.clone()).unwrap();
+        }
+        let (_, stats) = w.finish().unwrap();
+        assert!(
+            stats.peak_resident_bytes <= (window + 1) * step_bytes,
+            "peak {} exceeds ({window}+1) x {step_bytes}",
+            stats.peak_resident_bytes
+        );
+        assert!(stats.peak_resident_bytes >= step_bytes);
+    }
+
+    #[test]
+    fn shape_and_config_errors_are_typed() {
+        assert!(
+            StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[10, 10], config(1e-3, 2))
+                .is_err(),
+            "non 2^k+1 shape"
+        );
+        assert!(
+            StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9], config(-1.0, 2))
+                .is_err(),
+            "negative error bound"
+        );
+        assert!(
+            StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9], config(1e-3, 0))
+                .is_err(),
+            "zero window"
+        );
+        let w =
+            StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9], config(1e-3, 2)).unwrap();
+        let wrong = Tensor::<f64>::zeros(&[5, 5]);
+        assert!(w.push(wrong).is_err(), "shape mismatch on push");
+        let (_, stats) = w.finish().unwrap();
+        assert_eq!(stats.steps.len(), 0);
+    }
+
+    #[test]
+    fn huffrle_codec_streams_too() {
+        let snaps = GrayScott::snapshots(9, 9, 40, 3, 3);
+        let mut c = config(1e-3, 2);
+        c.codec = Codec::HuffRle;
+        let w = StreamWriter::<f64, _>::new(Cursor::new(Vec::new()), &[9, 9, 9], c).unwrap();
+        for s in &snaps {
+            w.push(s.clone()).unwrap();
+        }
+        let (sink, _) = w.finish().unwrap();
+        assert_eq!(StreamHeader::parse(&sink.into_inner()).unwrap().nsteps(), 3);
+    }
+}

@@ -1,0 +1,248 @@
+//! Deterministic corrupt/truncated-input fuzzing of the MGRT
+//! time-series parser, in the style of `tests/fuzz_shard.rs`. The
+//! contract under test: a malformed stream yields a typed `Err` — it
+//! must **never** panic, abort on a huge allocation, or read out of
+//! bounds — and the commit protocol's torn-append tolerance must leave
+//! every committed step readable bit-identically.
+
+use std::io::{self, Cursor, Seek, SeekFrom, Write};
+use std::sync::{Arc, Mutex};
+
+use mgr::api::{AnyTensor, Fidelity, Series, Session};
+use mgr::compress::Codec;
+use mgr::grid::Tensor;
+use mgr::sim::GrayScott;
+use mgr::storage::stream::{
+    StreamHeader, INDEPENDENT_PARENT, NSTEPS_OFFSET, STEP_RECORD_LEN, STREAM_FIXED_LEN,
+};
+use mgr::storage::{ShardHeader, ShardWriter};
+use mgr::util::rng::Rng;
+
+/// A cloneable in-memory sink: the writer keeps one handle, the test
+/// keeps another to extract the produced bytes.
+#[derive(Clone, Default)]
+struct SharedCursor(Arc<Mutex<Cursor<Vec<u8>>>>);
+
+impl SharedCursor {
+    fn bytes(&self) -> Vec<u8> {
+        self.0.lock().unwrap().get_ref().clone()
+    }
+}
+
+impl Write for SharedCursor {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().write(buf)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        self.0.lock().unwrap().flush()
+    }
+}
+
+impl Seek for SharedCursor {
+    fn seek(&mut self, pos: SeekFrom) -> io::Result<u64> {
+        self.0.lock().unwrap().seek(pos)
+    }
+}
+
+/// A real `.mgrt` produced through the public streaming path: Gray-Scott
+/// snapshots of a 9³ grid, so the sample holds both independent and
+/// (for smoothly evolving steps) delta-coded records.
+fn sample_stream(nsteps: usize) -> Vec<u8> {
+    let snaps = GrayScott::snapshots(9, 11, 30, nsteps, 2);
+    let s = Session::builder()
+        .shape(&[9, 9, 9])
+        .error_bound(1e-3)
+        .build()
+        .unwrap();
+    let shared = SharedCursor::default();
+    let w = s.stream(shared.clone(), 2).unwrap();
+    for t in &snaps {
+        w.push(&AnyTensor::from(t.clone())).unwrap();
+    }
+    w.finish().unwrap();
+    shared.bytes()
+}
+
+/// Open + exhaustively exercise a (possibly corrupt) stream buffer: the
+/// header walk, every step's metadata, and every step's reconstruction.
+/// Nothing here may panic; errors are fine.
+fn exercise(buf: &[u8]) {
+    let _ = StreamHeader::parse(buf);
+    if let Ok(series) = Series::from_bytes(buf.to_vec()) {
+        let n = series.nsteps() as u64;
+        for t in 0..n {
+            let _ = series.step(t);
+            let _ = series.retrieve_step(t, Fidelity::Classes(1));
+            let _ = series.retrieve_step(t, Fidelity::All);
+        }
+        assert!(series.retrieve_step(n, Fidelity::All).is_err());
+    }
+}
+
+#[test]
+fn truncation_sweep_over_every_prefix_length() {
+    let bytes = sample_stream(3);
+    // a stream truncated anywhere — mid-prelude, mid-record-header,
+    // mid-payload — is rejected at open: the committed count pins the
+    // exact extent every record must fit inside
+    for len in 0..bytes.len() {
+        assert!(
+            StreamHeader::parse(&bytes[..len]).is_err(),
+            "prefix of {len} bytes must be rejected"
+        );
+        assert!(
+            Series::from_bytes(bytes[..len].to_vec()).is_err(),
+            "prefix of {len} bytes must not open"
+        );
+    }
+    exercise(&bytes); // the intact stream must fully retrieve
+}
+
+#[test]
+fn bit_flips_across_the_metadata_never_panic() {
+    let bytes = sample_stream(3);
+    let header = StreamHeader::parse(&bytes).unwrap();
+    // every bit of the prelude, every record header, and the head of
+    // every embedded container payload
+    let mut targets: Vec<usize> = (0..StreamHeader::prelude_bytes(3)).collect();
+    for meta in &header.steps {
+        let rec = meta.offset as usize - STEP_RECORD_LEN;
+        targets.extend(rec..meta.offset as usize);
+        targets.extend(meta.offset as usize..meta.offset as usize + 32);
+    }
+    for i in targets {
+        for bit in 0..8 {
+            let mut m = bytes.clone();
+            m[i] ^= 1 << bit;
+            // count-shrinking flips may validly succeed with fewer
+            // steps; everything else must fail typed — never panic
+            exercise(&m);
+        }
+    }
+}
+
+#[test]
+fn random_mutations_never_panic() {
+    let bytes = sample_stream(4);
+    let mut rng = Rng::new(42);
+    for _ in 0..500 {
+        let mut m = bytes.clone();
+        match rng.below(3) {
+            0 => {
+                let i = rng.below(m.len());
+                m[i] ^= 1 << rng.below(8);
+            }
+            1 => {
+                let i = rng.below(m.len());
+                m[i] = rng.below(256) as u8;
+            }
+            _ => {
+                let i = rng.below(m.len());
+                let l = 1 + rng.below(16).min(m.len() - i - 1);
+                m.drain(i..i + l);
+            }
+        }
+        exercise(&m);
+    }
+}
+
+#[test]
+fn foreign_magic_and_garbage_rejected() {
+    let mut rng = Rng::new(7);
+    for len in [0usize, 1, 4, STREAM_FIXED_LEN, 64, 200, 1000] {
+        let garbage: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        assert!(StreamHeader::parse(&garbage).is_err());
+        assert!(Series::from_bytes(garbage).is_err());
+    }
+    // right magic, garbage tail
+    let mut buf = b"MGRT".to_vec();
+    buf.extend((0..200).map(|_| rng.below(256) as u8));
+    assert!(StreamHeader::parse(&buf).is_err());
+
+    // cross-format confusion fails closed in both directions: a shard is
+    // not a stream, a stream is not a shard, a zip is neither
+    let field = Tensor::<f64>::from_fn(&[9, 9], |idx| (idx[0] as f64 * 0.3).sin() + idx[1] as f64);
+    let (shard, _) = ShardWriter::<f64>::new(Codec::Zlib, 2)
+        .write(&field, 0, 2, 1e-3)
+        .unwrap();
+    assert!(StreamHeader::parse(&shard).is_err());
+    let stream = sample_stream(1);
+    assert!(ShardHeader::parse(&stream).is_err());
+    assert!(StreamHeader::parse(b"PK\x03\x04 the rest of a zip file").is_err());
+}
+
+#[test]
+fn out_of_range_parent_references_are_rejected() {
+    let bytes = sample_stream(3);
+    let header = StreamHeader::parse(&bytes).unwrap();
+    // rewrite step 2's record header by hand: encoding at +8, parent at
+    // +9..17 (see the format table in `storage::stream`)
+    let rec = header.steps[2].offset as usize - STEP_RECORD_LEN;
+    let patch = |enc: u8, parent: u64| {
+        let mut m = bytes.clone();
+        m[rec + 8] = enc;
+        m[rec + 9..rec + 17].copy_from_slice(&parent.to_le_bytes());
+        m
+    };
+    for (enc, parent, why) in [
+        (1u8, 2u64, "delta parent == index"),
+        (1, 5, "delta parent > index"),
+        (1, INDEPENDENT_PARENT, "delta parent is the independent sentinel"),
+        (0, 0, "independent step carrying a parent"),
+        (2, INDEPENDENT_PARENT, "unknown encoding tag"),
+    ] {
+        let m = patch(enc, parent);
+        assert!(StreamHeader::parse(&m).is_err(), "{why} must be rejected");
+        exercise(&m);
+    }
+    // the index echo pins each record to its table position
+    let mut m = bytes.clone();
+    m[rec..rec + 8].copy_from_slice(&7u64.to_le_bytes());
+    assert!(StreamHeader::parse(&m).is_err(), "echo mismatch must be rejected");
+    exercise(&m);
+    // a committed count past the real record extent is a truncation error
+    let mut m = bytes.clone();
+    m[NSTEPS_OFFSET as usize..NSTEPS_OFFSET as usize + 4].copy_from_slice(&4u32.to_le_bytes());
+    assert!(StreamHeader::parse(&m).is_err(), "inflated count must be rejected");
+    exercise(&m);
+}
+
+#[test]
+fn torn_final_append_leaves_committed_steps_readable() {
+    let bytes = sample_stream(4);
+    let truth = Series::from_bytes(bytes.clone()).unwrap();
+
+    // crash between the two commit flushes: step 3's record bytes are on
+    // disk but the count patch never landed — exactly what rolling the
+    // committed count back by one simulates
+    let mut torn = bytes.clone();
+    torn[NSTEPS_OFFSET as usize..NSTEPS_OFFSET as usize + 4]
+        .copy_from_slice(&3u32.to_le_bytes());
+    let h = StreamHeader::parse(&torn).unwrap();
+    assert_eq!(h.nsteps(), 3, "the in-flight step must not exist");
+    let series = Series::from_bytes(torn).unwrap();
+    assert!(series.retrieve_step(3, Fidelity::All).is_err());
+    for t in 0..3u64 {
+        // committed steps — including delta chains — are bit-identical
+        assert_eq!(
+            series.retrieve_step(t, Fidelity::All).unwrap(),
+            truth.retrieve_step(t, Fidelity::All).unwrap(),
+            "step {t} after a torn final append"
+        );
+    }
+
+    // a crash mid-record (arbitrary garbage tail) is equally invisible
+    let mut garbled = bytes.clone();
+    garbled[NSTEPS_OFFSET as usize..NSTEPS_OFFSET as usize + 4]
+        .copy_from_slice(&3u32.to_le_bytes());
+    garbled.truncate(bytes.len() - 11);
+    garbled.extend_from_slice(b"\xff\xfftorn");
+    let series = Series::from_bytes(garbled).unwrap();
+    for t in 0..3u64 {
+        assert_eq!(
+            series.retrieve_step(t, Fidelity::All).unwrap(),
+            truth.retrieve_step(t, Fidelity::All).unwrap(),
+            "step {t} after a mid-record tear"
+        );
+    }
+}

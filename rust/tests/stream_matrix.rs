@@ -1,0 +1,176 @@
+//! The central streaming invariants, swept across dtype × codec:
+//!
+//! 1. **Bit-identity** — every step retrieved from a `.mgrt` (whether
+//!    it was committed independent or delta-coded) is bit-identical to
+//!    refactoring that snapshot *standalone* through the same session
+//!    and retrieving at the same fidelity. Delta coding happens in
+//!    quantized-integer space, so `q_parent + Δ` reconstructs the
+//!    child's quantized coefficients exactly — at every class prefix.
+//! 2. **Error bound** — full-fidelity reconstruction of every step
+//!    (independent or at the end of a delta chain) stays within the
+//!    session's L∞ bound of the original snapshot; deltas never
+//!    compound the error.
+//! 3. **Backpressure** — the writer's measured high-water mark of
+//!    resident snapshot bytes respects the `(window + 1) · step_bytes`
+//!    bound, so a producer ahead of the encoder blocks instead of
+//!    ballooning.
+
+use std::io::{self, Cursor, Seek, SeekFrom, Write};
+use std::sync::{Arc, Mutex};
+
+use mgr::api::{AnyTensor, Dtype, Fidelity, Series, Session};
+use mgr::compress::Codec;
+use mgr::sim::GrayScott;
+use mgr::storage::StepEncoding;
+
+const SHAPE: [usize; 3] = [17, 17, 17];
+const NSTEPS: usize = 5;
+const WINDOW: usize = 2;
+
+/// f32 quantization can't honor bounds below its precision at O(1)
+/// values, so the bound scales with the dtype (same convention as
+/// `tests/api_matrix.rs`).
+fn eb_for(dtype: Dtype) -> f64 {
+    match dtype {
+        Dtype::F32 => 1e-2,
+        Dtype::F64 => 1e-4,
+    }
+}
+
+#[derive(Clone, Default)]
+struct SharedCursor(Arc<Mutex<Cursor<Vec<u8>>>>);
+
+impl SharedCursor {
+    fn bytes(&self) -> Vec<u8> {
+        self.0.lock().unwrap().get_ref().clone()
+    }
+}
+
+impl Write for SharedCursor {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().write(buf)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        self.0.lock().unwrap().flush()
+    }
+}
+
+impl Seek for SharedCursor {
+    fn seek(&mut self, pos: SeekFrom) -> io::Result<u64> {
+        self.0.lock().unwrap().seek(pos)
+    }
+}
+
+fn session(dtype: Dtype, codec: Codec) -> Session {
+    Session::builder()
+        .shape(&SHAPE)
+        .dtype(dtype)
+        .codec(codec)
+        .error_bound(eb_for(dtype))
+        .build()
+        .unwrap()
+}
+
+/// Closely spaced Gray-Scott snapshots (smooth evolution, so delta
+/// coding has something to win on), cast to the matrix dtype.
+fn snapshots(dtype: Dtype) -> Vec<AnyTensor> {
+    GrayScott::snapshots(SHAPE[0], 3, 200, NSTEPS, 2)
+        .into_iter()
+        .map(|t| AnyTensor::from(t).cast(dtype))
+        .collect()
+}
+
+#[test]
+fn every_step_is_bit_identical_to_standalone_refactoring() {
+    let mut delta_ever_won = false;
+    for dtype in [Dtype::F32, Dtype::F64] {
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let s = session(dtype, codec);
+            let snaps = snapshots(dtype);
+            let shared = SharedCursor::default();
+            let w = s.stream(shared.clone(), WINDOW).unwrap();
+            for snap in &snaps {
+                w.push(snap).unwrap();
+            }
+            let stats = w.finish().unwrap();
+            assert_eq!(stats.steps.len(), NSTEPS);
+            delta_ever_won |= stats.steps.iter().any(|r| r.encoding == StepEncoding::Delta);
+            // closely spaced smooth steps under the default codec must
+            // favor deltas overall (mirrors the writer's own unit test)
+            if dtype == Dtype::F64 && codec == Codec::Zlib {
+                assert!(stats.delta_ratio() < 1.0, "ratio {}", stats.delta_ratio());
+            }
+
+            let series = Series::from_bytes(shared.bytes()).unwrap();
+            assert_eq!(series.nsteps(), NSTEPS);
+            for (t, snap) in snaps.iter().enumerate() {
+                let standalone = s.refactor(snap).unwrap();
+                for fid in [
+                    Fidelity::Classes(1),
+                    Fidelity::Classes(2),
+                    Fidelity::All,
+                    Fidelity::ErrorBound(1e-2),
+                ] {
+                    let from_stream = series.retrieve_step(t as u64, fid).unwrap();
+                    let want = standalone.retrieve(fid).unwrap();
+                    assert_eq!(
+                        from_stream, want,
+                        "{dtype} {codec:?} step {t} at {fid:?} diverged from standalone"
+                    );
+                }
+            }
+        }
+    }
+    assert!(delta_ever_won, "no combination ever chose delta coding");
+}
+
+#[test]
+fn delta_chains_honor_the_error_bound() {
+    for dtype in [Dtype::F32, Dtype::F64] {
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let s = session(dtype, codec);
+            let snaps = snapshots(dtype);
+            let shared = SharedCursor::default();
+            let w = s.stream(shared.clone(), WINDOW).unwrap();
+            for snap in &snaps {
+                w.push(snap).unwrap();
+            }
+            w.finish().unwrap();
+
+            let eb = eb_for(dtype);
+            let series = Series::from_bytes(shared.bytes()).unwrap();
+            for (t, snap) in snaps.iter().enumerate() {
+                let info = series.step(t as u64).unwrap();
+                let full = series.retrieve_step(t as u64, Fidelity::All).unwrap();
+                let err = full.linf_to(snap).unwrap();
+                assert!(
+                    err <= eb,
+                    "{dtype} {codec:?} step {t} ({}) L∞ {err:.3e} exceeds bound {eb:.1e}",
+                    if info.delta { "delta" } else { "independent" }
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn peak_resident_bytes_respect_the_window_bound() {
+    let s = session(Dtype::F64, Codec::Zlib);
+    let snaps = snapshots(Dtype::F64);
+    let step_bytes = snaps[0].nbytes();
+    let shared = SharedCursor::default();
+    let w = s.stream(shared.clone(), WINDOW).unwrap();
+    for snap in &snaps {
+        w.push(snap).unwrap();
+    }
+    let stats = w.finish().unwrap();
+    assert_eq!(stats.window, WINDOW);
+    // the backpressure contract: at most `window` queued snapshots plus
+    // the one the encoder holds, never the whole run
+    assert!(
+        stats.peak_resident_bytes <= (WINDOW + 1) * step_bytes,
+        "peak {} exceeds ({WINDOW} + 1) × {step_bytes}",
+        stats.peak_resident_bytes
+    );
+    assert!(stats.peak_resident_bytes >= step_bytes, "at least one step was resident");
+}
