@@ -10,20 +10,23 @@
 #   make bench-serve      daemon under 1->64 concurrent clients -> BENCH_serve.json
 #   make bench-reencode   truncate/recode/re-tile throughput -> BENCH_reencode.json
 #   make bench-stream     live-simulation streaming pipeline -> BENCH_stream.json
+#   make bench-harness    workload-mix harness -> BENCH_harness.json (+ a
+#                         regression report vs BENCH_harness.prev.json if kept)
 #   make test-concurrency concurrency battery + the #[ignore]d stress variants
 #   make container-demo   CLI round trip: refactor -> .mgr -> retrieve
 #   make shard-demo       CLI shard round trip: refactor --blocks -> .mgrs -> --region
 #   make serve-demo       CLI daemon round trip: serve -> --stats -> --shutdown
 #   make reencode-demo    CLI rewrite loop: truncate -> recode -> re-tile a .mgrs
 #   make stream-demo      CLI time-series round trip: stream -> .mgrt -> retrieve --step
+#   make tier-demo        CLI tier execution: place -> real tier dirs -> retrieve --from-tiers
 #   make lint        clippy -D warnings + rustfmt check
 #   make doc         rustdoc for the crate (no deps)
 #   make check-docs  dead-link check over the markdown docs book
 
 .PHONY: artifacts test test-rust test-python bench bench-container bench-reader \
-        bench-shard bench-serve bench-reencode bench-stream test-concurrency \
-        serve-demo container-demo shard-demo reencode-demo stream-demo lint doc \
-        check-docs
+        bench-shard bench-serve bench-reencode bench-stream bench-harness \
+        test-concurrency serve-demo container-demo shard-demo reencode-demo \
+        stream-demo tier-demo lint doc check-docs
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -57,6 +60,21 @@ bench-reencode:
 
 bench-stream:
 	cargo bench --bench stream_pipeline
+
+# One roof over every paper verb: refactor/retrieve/upgrade/region/
+# stream/tier mixes over size x dtype x codec, one BENCH_harness.json
+# out. Keep a previous run as BENCH_harness.prev.json and the target
+# appends a pass/fail regression report (tools/harness_tolerance.json
+# sets the per-mix slowdown gates). MGR_HARNESS_PRESET=full widens the
+# grid.
+bench-harness:
+	cargo bench --bench harness
+	@if [ -f BENCH_harness.prev.json ]; then \
+		python3 tools/regression_report.py BENCH_harness.prev.json BENCH_harness.json \
+			--tolerance-file tools/harness_tolerance.json; \
+	else \
+		echo "no baseline: cp BENCH_harness.json BENCH_harness.prev.json to gate the next run"; \
+	fi
 
 # The concurrency battery on its own (CI runs this as a dedicated matrix
 # entry, then the #[ignore]d long-loop stress variants in release mode).
@@ -110,6 +128,22 @@ stream-demo:
 	cargo run --release -- retrieve --in /tmp/mgr-stream-demo.mgrt --step 7 --keep 2
 	cargo run --release -- retrieve --in /tmp/mgr-stream-demo.mgrt --step 3 --region 0..16,0..33,0..33
 	rm -f /tmp/mgr-stream-demo.mgrt
+
+# Exercise tiered-storage execution end to end: refactor a container,
+# execute its placement against three real tier directories (capacities
+# squeezed so the classes actually spread), then retrieve through the
+# executed tier ladder — once plainly, once with the archive throttled
+# to 2 MB/s so the prefetcher has something to hide.
+tier-demo:
+	rm -rf /tmp/mgr-tiers && mkdir -p /tmp/mgr-tiers
+	cargo run --release -- refactor --shape 65x65 --eb 1e-4 --out /tmp/mgr-tier-demo.mgr
+	cargo run --release -- place --in /tmp/mgr-tier-demo.mgr \
+		--tiers bb=/tmp/mgr-tiers/bb:pfs=/tmp/mgr-tiers/pfs:ar=/tmp/mgr-tiers/ar \
+		--cap-bb 2048 --cap-pfs 8192
+	cargo run --release -- retrieve --from-tiers /tmp/mgr-tier-demo.mgr.tiers.json --keep 2
+	cargo run --release -- retrieve --from-tiers /tmp/mgr-tier-demo.mgr.tiers.json \
+		--throttle ar=2e6
+	rm -rf /tmp/mgr-tier-demo.mgr /tmp/mgr-tier-demo.mgr.tiers.json /tmp/mgr-tiers
 
 # Exercise the serving front end to end: refactor a container, start the
 # daemon on it, query telemetry over the wire, then stop it over the wire.

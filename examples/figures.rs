@@ -432,8 +432,8 @@ fn fig18() {
             "{:<8} {:>9.2}% {:>12.1} {:>12.1} {:>13.1}% {:>14.2}",
             keep,
             frac * 100.0,
-            fs.write_time(4096, total_bytes * frac),
-            fs.read_time(512, total_bytes * frac),
+            fs.write_time(4096, total_bytes * frac).unwrap(),
+            fs.read_time(512, total_bytes * frac).unwrap(),
             acc * 100.0,
             field.nbytes() as f64 / dec_s / 1e9
         );

@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
             keep,
             frac * 100.0,
             acc * 100.0,
-            fs.read_time(512, modeled_total * frac),
+            fs.read_time(512, modeled_total * frac)?,
             tier_time
         );
         if acc >= target_acc && keep < chosen {
@@ -95,9 +95,10 @@ fn main() -> anyhow::Result<()> {
     );
     println!(
         "   modeled 4 TB read cost: {:.1} s -> {:.1} s ({:.0}% I/O saving; paper: ~66% with its class sizing)",
-        fs.read_time(512, modeled_total),
-        fs.read_time(512, modeled_total * frac),
-        (1.0 - fs.read_time(512, modeled_total * frac) / fs.read_time(512, modeled_total)) * 100.0
+        fs.read_time(512, modeled_total)?,
+        fs.read_time(512, modeled_total * frac)?,
+        (1.0 - fs.read_time(512, modeled_total * frac)? / fs.read_time(512, modeled_total)?)
+            * 100.0
     );
     Ok(())
 }

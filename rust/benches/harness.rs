@@ -1,0 +1,247 @@
+//! Workload-mix regression harness: one bench binary that drives the
+//! paper's verbs — refactor, retrieve, upgrade, region, stream, and the
+//! executed tier ladder — over size × dtype × codec mixes, and writes a
+//! single machine-readable `BENCH_harness.json` so successive runs can
+//! be diffed by `tools/regression_report.py` (see `docs/performance.md`
+//! and `make bench-harness`).
+//!
+//! Knobs (environment):
+//! * `MGR_HARNESS_PRESET` — `small` (default; CI-sized) or `full`;
+//! * `MGR_BENCH_OUT` — output path (default `BENCH_harness.json`).
+
+use std::collections::BTreeSet;
+
+use mgr::api::{AnyTensor, Dtype, Fidelity, OpenContainer, Session};
+use mgr::compress::Codec;
+use mgr::grid::Tensor;
+use mgr::storage::exec::{class_sizes, TierExecutor, TierManifest, TierRoot, TieredReader};
+use mgr::storage::{place_classes, StorageTier, TierSpec};
+use mgr::util::bench::{bench_auto, report, BenchReport, Measurement, ReportRow};
+
+struct Preset {
+    name: &'static str,
+    /// Grid edge (fields are `n × n`).
+    n: usize,
+    /// Per-measurement time budget, seconds.
+    budget_s: f64,
+    /// Snapshots pushed by the stream mix.
+    steps: usize,
+}
+
+fn preset() -> Preset {
+    match std::env::var("MGR_HARNESS_PRESET").as_deref() {
+        Ok("full") => Preset {
+            name: "full",
+            n: 65,
+            budget_s: 0.25,
+            steps: 6,
+        },
+        _ => Preset {
+            name: "small",
+            n: 33,
+            budget_s: 0.05,
+            steps: 3,
+        },
+    }
+}
+
+fn dtype_name(dtype: Dtype) -> &'static str {
+    match dtype {
+        Dtype::F32 => "f32",
+        Dtype::F64 => "f64",
+    }
+}
+
+fn field_for(dtype: Dtype, n: usize, phase: f64) -> AnyTensor {
+    match dtype {
+        Dtype::F32 => Tensor::<f32>::from_fn(&[n, n], |idx| {
+            ((idx[0] as f32) * 0.29 + phase as f32).sin() + ((idx[1] as f32) * 0.17).cos()
+        })
+        .into(),
+        Dtype::F64 => Tensor::<f64>::from_fn(&[n, n], |idx| {
+            ((idx[0] as f64) * 0.29 + phase).sin() + ((idx[1] as f64) * 0.17).cos()
+        })
+        .into(),
+    }
+}
+
+fn row(
+    kernel: &str,
+    variant: &str,
+    dtype: Dtype,
+    shape: &[usize],
+    m: &Measurement,
+    bytes: usize,
+) -> ReportRow {
+    ReportRow {
+        kernel: kernel.into(),
+        variant: variant.into(),
+        dtype: dtype_name(dtype).into(),
+        shape: shape.to_vec(),
+        axis: None,
+        median_s: m.median_s,
+        mad_rel: m.mad_rel,
+        gbps: m.gbps(bytes),
+        speedup: None,
+        bytes: Some(bytes as u64),
+    }
+}
+
+fn main() {
+    let p = preset();
+    println!("== workload-mix harness (preset {}, n={}) ==", p.name, p.n);
+    let base = std::env::temp_dir().join(format!("mgr_harness_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+    std::fs::create_dir_all(&base).unwrap();
+
+    let mut rep = BenchReport::new("harness");
+    let shape = vec![p.n, p.n];
+
+    // -- mix: refactor (create) over dtype × codec --------------------
+    for dtype in [Dtype::F32, Dtype::F64] {
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let session = Session::builder()
+                .shape(&shape)
+                .dtype(dtype)
+                .codec(codec)
+                .build()
+                .unwrap();
+            let field = field_for(dtype, p.n, 0.0);
+            let m = bench_auto(
+                &format!("refactor {} {}", dtype_name(dtype), codec.name()),
+                p.budget_s,
+                || {
+                    std::hint::black_box(session.refactor(&field).unwrap());
+                },
+            );
+            report(&m, Some(field.nbytes()));
+            let variant = format!("create-{}", codec.name());
+            rep.push(row("refactor", &variant, dtype, &shape, &m, field.nbytes()));
+        }
+    }
+
+    // -- mix: retrieve (full + coarse fidelity) over dtype ------------
+    for dtype in [Dtype::F32, Dtype::F64] {
+        let session = Session::builder().shape(&shape).dtype(dtype).build().unwrap();
+        let field = field_for(dtype, p.n, 0.0);
+        let r = session.refactor(&field).unwrap();
+        for (variant, fid) in [("full", Fidelity::All), ("coarse", Fidelity::Classes(1))] {
+            let m = bench_auto(
+                &format!("retrieve {variant} {}", dtype_name(dtype)),
+                p.budget_s,
+                || {
+                    std::hint::black_box(session.retrieve(&r, fid).unwrap());
+                },
+            );
+            report(&m, Some(field.nbytes()));
+            rep.push(row("retrieve", variant, dtype, &shape, &m, field.nbytes()));
+        }
+    }
+
+    // -- mix: lazy open + incremental upgrade -------------------------
+    {
+        let session = Session::builder().shape(&shape).build().unwrap();
+        let field = field_for(Dtype::F64, p.n, 0.0);
+        let r = session.refactor(&field).unwrap();
+        let path = base.join("u.mgr");
+        session.store_file(&r, &path).unwrap();
+        let m = bench_auto("open coarse, upgrade full", p.budget_s, || {
+            let c = OpenContainer::open_file(&path).unwrap();
+            let coarse = c.retrieve(Fidelity::Classes(1)).unwrap();
+            std::hint::black_box(coarse.upgrade(Fidelity::All).unwrap());
+        });
+        report(&m, Some(field.nbytes()));
+        let nb = field.nbytes();
+        rep.push(row("upgrade", "open-coarse-then-full", Dtype::F64, &shape, &m, nb));
+    }
+
+    // -- mix: sharded region window -----------------------------------
+    {
+        let session = Session::builder().shape(&shape).build().unwrap();
+        let field = field_for(Dtype::F64, p.n, 0.0);
+        let sharded = session.refactor_sharded_grid(&field, &[2, 2]).unwrap();
+        let lo = p.n / 4;
+        let hi = 3 * p.n / 4;
+        let roi = [lo..hi, lo..hi];
+        let m = bench_auto("region center window", p.budget_s, || {
+            std::hint::black_box(sharded.retrieve_region(&roi, Fidelity::All).unwrap());
+        });
+        report(&m, Some(field.nbytes()));
+        let nb = field.nbytes();
+        rep.push(row("region", "center-window", Dtype::F64, &shape, &m, nb));
+    }
+
+    // -- mix: streaming time-series write -----------------------------
+    {
+        let session = Session::builder().shape(&shape).build().unwrap();
+        let frames: Vec<AnyTensor> = (0..p.steps)
+            .map(|s| field_for(Dtype::F64, p.n, s as f64 * 0.1))
+            .collect();
+        let path = base.join("s.mgrt");
+        let m = bench_auto(&format!("stream {} steps", p.steps), p.budget_s, || {
+            let w = session.stream_file(&path, 2).unwrap();
+            for f in &frames {
+                w.push(f).unwrap();
+            }
+            std::hint::black_box(w.finish().unwrap());
+        });
+        let moved = frames[0].nbytes() * p.steps;
+        report(&m, Some(moved));
+        rep.push(row("stream", "delta-write", Dtype::F64, &shape, &m, moved));
+    }
+
+    // -- mix: executed tier ladder (storage::exec) --------------------
+    {
+        let session = Session::builder().shape(&shape).build().unwrap();
+        let field = field_for(Dtype::F64, p.n, 0.0);
+        let r = session.refactor(&field).unwrap();
+        let path = base.join("t.mgr");
+        session.store_file(&r, &path).unwrap();
+        let sizes = class_sizes(&path).unwrap();
+        let middle: u64 = sizes[1..sizes.len() - 1].iter().sum();
+        let specs = vec![
+            TierSpec {
+                capacity: sizes[0],
+                ..TierSpec::burst_buffer()
+            },
+            TierSpec {
+                capacity: middle,
+                ..TierSpec::parallel_fs()
+            },
+            TierSpec::archive(),
+        ];
+        let placement = place_classes(&sizes, &specs);
+        let roots = vec![
+            TierRoot::new(StorageTier::BurstBuffer, base.join("bb")),
+            TierRoot::new(StorageTier::ParallelFs, base.join("pfs")),
+            TierRoot::new(StorageTier::Archive, base.join("ar")),
+        ];
+        let exec = TierExecutor::new(roots).unwrap();
+        let artifact_bytes = std::fs::metadata(&path).unwrap().len() as usize;
+
+        let m = bench_auto("tier execute", p.budget_s, || {
+            std::hint::black_box(exec.execute(&placement, &path).unwrap());
+        });
+        report(&m, Some(artifact_bytes));
+        rep.push(row("tier", "execute", Dtype::F64, &shape, &m, artifact_bytes));
+
+        let manifest_path = TierManifest::path_for(&path);
+        let m = bench_auto("tier ladder read", p.budget_s, || {
+            let reader = TieredReader::open(&manifest_path).unwrap();
+            let c = OpenContainer::open(reader.source()).unwrap();
+            std::hint::black_box(c.retrieve(Fidelity::All).unwrap());
+        });
+        report(&m, Some(artifact_bytes));
+        rep.push(row("tier", "ladder-read", Dtype::F64, &shape, &m, artifact_bytes));
+    }
+
+    let mixes: BTreeSet<&str> = rep.rows.iter().map(|r| r.kernel.as_str()).collect();
+    let names: Vec<&str> = mixes.iter().copied().collect();
+    println!("\nworkload mixes covered ({}): {}", names.len(), names.join(", "));
+    let out = std::env::var("MGR_BENCH_OUT").unwrap_or_else(|_| "BENCH_harness.json".to_string());
+    match rep.write(&out) {
+        Ok(()) => println!("wrote {out} ({} rows)", rep.rows.len()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    std::fs::remove_dir_all(&base).ok();
+}

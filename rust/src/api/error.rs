@@ -55,6 +55,10 @@ pub enum Error {
     Compress(anyhow::Error),
     /// An I/O operation on a source or sink failed.
     Io(std::io::Error),
+    /// Tiered-storage execution failed: over-capacity placement,
+    /// plan/artifact mismatch, bad manifest, or an interrupted move
+    /// (see [`crate::storage::exec`]).
+    Tier(crate::storage::exec::ExecError),
 }
 
 impl std::fmt::Display for Error {
@@ -76,6 +80,7 @@ impl std::fmt::Display for Error {
             Error::Container(e) => write!(f, "container: {e:#}"),
             Error::Compress(e) => write!(f, "compression: {e:#}"),
             Error::Io(e) => write!(f, "i/o: {e}"),
+            Error::Tier(e) => write!(f, "tier: {e}"),
         }
     }
 }
@@ -85,6 +90,7 @@ impl std::error::Error for Error {
         match self {
             Error::Container(e) | Error::Compress(e) => Some(e.as_ref()),
             Error::Io(e) => Some(e),
+            Error::Tier(e) => Some(e),
             _ => None,
         }
     }
@@ -93,6 +99,12 @@ impl std::error::Error for Error {
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
         Error::Io(e)
+    }
+}
+
+impl From<crate::storage::exec::ExecError> for Error {
+    fn from(e: crate::storage::exec::ExecError) -> Self {
+        Error::Tier(e)
     }
 }
 
@@ -125,5 +137,13 @@ mod tests {
         let e = Error::Container(anyhow::anyhow!("bad magic"));
         assert!(std::error::Error::source(&e).is_some());
         assert!(e.to_string().contains("bad magic"));
+    }
+
+    #[test]
+    fn tier_errors_keep_their_kind() {
+        let e = Error::from(crate::storage::exec::ExecError::OverCapacity(vec![3]));
+        assert!(e.to_string().starts_with("tier:"), "{e}");
+        assert!(e.to_string().contains("capacity"), "{e}");
+        assert!(matches!(e, Error::Tier(_)));
     }
 }

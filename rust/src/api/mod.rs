@@ -17,6 +17,7 @@
 //! | retrieve | [`Session::retrieve`] with a [`Fidelity`] | [`AnyTensor`] |
 //! | store | [`Session::store`] / [`Session::store_file`] | bytes written |
 //! | place | [`Session::plan`] / [`Session::plan_header`] | [`Placement`](crate::storage::Placement) |
+//! | place, executed | [`Session::store_tiered`] (bytes actually move — see [`crate::storage::exec`]) | [`Placement`](crate::storage::Placement) + [`TierManifest`](crate::storage::TierManifest) |
 //! | open (lazy) | [`Session::open`] / [`Session::open_file`] | [`OpenContainer`] → [`Retrieved`] |
 //! | create, sharded | [`Session::refactor_sharded`] (grid: [`Session::refactor_sharded_grid`]) | [`Sharded`] |
 //! | retrieve a region | [`Sharded::retrieve_region`] (opens only intersecting blocks) | [`AnyTensor`] |
@@ -146,4 +147,7 @@ pub use tensor::{AnyTensor, Dtype};
 // One-stop imports for facade callers: the codec knob and the types the
 // verbs return or resolve against.
 pub use crate::compress::{Codec, Compressed, CompressorStats};
-pub use crate::storage::{CacheStats, ContainerHeader, Placement, ShardHeader, TierSpec};
+pub use crate::storage::{
+    CacheStats, ContainerHeader, Placement, ShardHeader, TierExecutor, TierManifest, TierRoot,
+    TierSpec, TierStats, TieredReader, Throttle,
+};

@@ -16,6 +16,7 @@ use crate::compress::{Codec, Compressed, CompressorStats};
 use crate::coordinator::{partition_grid, partition_slabs, run_pooled};
 use crate::grid::{max_levels, Hierarchy};
 use crate::storage::container::peek_dtype;
+use crate::storage::exec::{TierExecutor, TierManifest};
 use crate::storage::{
     place_classes, CacheStats, ContainerHeader, ContainerReader, LazyReader, Placement,
     ProgressiveWriter, ReadSeek, ShardWriter, TierSpec,
@@ -978,6 +979,27 @@ impl Session {
     pub fn plan_header(&self, header: &ContainerHeader) -> Result<Placement> {
         let class_bytes: Vec<u64> = header.segments.iter().map(|s| s.bytes).collect();
         Ok(place_classes(&class_bytes, &self.tiers))
+    }
+
+    /// **Store, executed**: [`Session::store_file`] + [`Session::plan`]
+    /// + [`crate::storage::exec::TierExecutor::execute`] in one verb —
+    /// write the container to `path`, place its class segments across
+    /// the session's tiers, and *actually move* the planned bytes into
+    /// `exec`'s tier directories, committing the tier manifest next to
+    /// the artifact. Returns the placement and the committed manifest;
+    /// a [`crate::storage::exec::TieredReader`] over that manifest then
+    /// retrieves the data coarse-first off the tier ladder.
+    pub fn store_tiered(
+        &self,
+        r: &Refactored,
+        path: impl AsRef<Path>,
+        exec: &TierExecutor,
+    ) -> Result<(Placement, TierManifest)> {
+        let path = path.as_ref();
+        self.store_file(r, path)?;
+        let placement = self.plan(r)?;
+        let manifest = exec.execute(&placement, path)?;
+        Ok((placement, manifest))
     }
 
     /// Monolithic MGARD compression (classic single-blob output) on the

@@ -28,6 +28,13 @@
 //!   changed) — one artifact, many layouts.
 //! * `plan` — place a container's class segments across storage tiers
 //!   (reads the header only; no payload is touched).
+//! * `place` — *execute* a placement against real tier directories
+//!   (`--tiers bb=DIR:pfs=DIR:ar=DIR`): per-class segment bytes are
+//!   byte-range-copied out of the artifact onto their tiers, a manifest
+//!   is committed next to it, and measured movement telemetry is
+//!   printed. `retrieve --from-tiers MANIFEST` then reconstructs the
+//!   data straight off the tier ladder, coarse classes first, with an
+//!   optional background prefetcher promoting the next class.
 //! * `compress` / `roundtrip` — MGARD-style error-bounded compression.
 //! * `serve` — long-lived TCP daemon answering `retrieve` /
 //!   `retrieve_region` / `retrieve_step` / `upgrade` over the wire
@@ -45,7 +52,11 @@ use mgr::api::{
     AnyTensor, Dtype, Fidelity, OpenContainer, ReencodeSpec, Series, Session, Sharded,
 };
 use mgr::compress::Codec;
-use mgr::storage::StepEncoding;
+use mgr::storage::exec::{
+    class_sizes, tier_from_key, TierExecutor, TierManifest, TierReadOptions, TierRoot,
+    TieredReader, Throttle,
+};
+use mgr::storage::{place_classes, StepEncoding, StorageTier, TierSpec};
 use mgr::coordinator::{Backend, Coordinator, JobMode, JobSpec};
 use mgr::grid::Tensor;
 use mgr::runtime::EngineHandle;
@@ -268,6 +279,7 @@ fn run(args: &Args) -> Result<()> {
         Some("retrieve") => retrieve(args),
         Some("reencode") => reencode(args),
         Some("plan") => plan(args),
+        Some("place") => place(args),
         Some("compress") | Some("roundtrip") => compress(args),
         Some("serve") => serve(args),
         Some("pool") => pool(args),
@@ -290,11 +302,17 @@ fn run(args: &Args) -> Result<()> {
                  \x20            [--upgrade-from K] [--dump raw.bin]\n\
                  \x20 retrieve   --in f.mgrs [--region i0..i1,j0..j1,...]  region-of-interest\n\
                  \x20 retrieve   --in f.mgrt --step T [--region ...]       one timestep\n\
+                 \x20 retrieve   --from-tiers f.mgr.tiers.json  walk the executed tier ladder\n\
+                 \x20            [--no-prefetch] [--throttle bb=BW,pfs=BW,ar=BW]\n\
                  \x20 reencode   --in f.mgr|f.mgrs --out g.mgr|g.mgrs\n\
                  \x20            [--keep K | --error E | --bytes B]   truncate fidelity (byte copy)\n\
                  \x20            [--codec zlib|huff-rle]              re-run the entropy stage only\n\
                  \x20            [--blocks P0,P1,...] [--workers N]   re-tile onto a new block grid\n\
                  \x20 plan       --in f.mgr\n\
+                 \x20 place      --in f.mgr|f.mgrs --tiers bb=DIR:pfs=DIR:ar=DIR\n\
+                 \x20            [--cap-bb N --cap-pfs N --cap-ar N]  capacity overrides, bytes\n\
+                 \x20            [--throttle bb=BW,...]  emulate tier bandwidth, bytes/s\n\
+                 \x20            execute the placement: move the planned bytes for real\n\
                  \x20 compress   [--shape NxNxN --eb 1e-3 --codec zlib|huff-rle --dtype f32|f64]\n\
                  \x20 serve      --in f.mgr|f.mgrs [--addr 127.0.0.1:4860]\n\
                  \x20            [--workers N --max-inflight-mb M]   retrieval daemon\n\
@@ -505,6 +523,9 @@ fn stream(args: &Args) -> Result<()> {
 }
 
 fn retrieve(args: &Args) -> Result<()> {
+    if let Some(manifest) = args.get("from-tiers") {
+        return retrieve_tiered(args, manifest);
+    }
     let path = container_path(args)?;
     if path_is_stream(&path) {
         return retrieve_stream(args, &path);
@@ -523,6 +544,13 @@ fn retrieve(args: &Args) -> Result<()> {
          — refactor with --blocks to shard the domain"
     );
     let container = open_arg(args)?;
+    retrieve_container(args, container)
+}
+
+/// The single-container retrieval core, shared by `retrieve --in f.mgr`
+/// and `retrieve --from-tiers` (the latter feeds a tiered byte source —
+/// same container stream, different storage underneath).
+fn retrieve_container(args: &Args, container: OpenContainer) -> Result<()> {
     let header = container.header().clone();
     println!(
         "container: shape {:?} {}, {} levels, {} classes, {} codec, eb {:.1e}",
@@ -815,6 +843,155 @@ fn plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--throttle bb=BW,pfs=BW,ar=BW` (bytes/s, symmetric
+/// read/write, zero added latency) into per-tier throttles.
+fn parse_throttles(args: &Args) -> Result<Vec<(StorageTier, Throttle)>> {
+    let Some(spec) = args.get("throttle") else {
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.is_empty()) {
+        let (key, bw) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("throttle '{part}' is not key=BYTES_PER_SEC"))?;
+        let tier = tier_from_key(key)
+            .ok_or_else(|| anyhow!("unknown tier key '{key}' in --throttle (bb, pfs, ar)"))?;
+        let bw: f64 = bw
+            .parse()
+            .map_err(|_| anyhow!("throttle bandwidth '{bw}' is not a number"))?;
+        ensure!(bw > 0.0, "throttle bandwidth must be positive, got {bw}");
+        out.push((tier, Throttle::bandwidth(bw)));
+    }
+    Ok(out)
+}
+
+/// Parse `--tiers bb=DIR:pfs=DIR:ar=DIR` (fastest tier first) into
+/// executor roots plus matching placement specs: Summit-preset
+/// bandwidth/latency figures, capacities overridable in bytes via
+/// `--cap-bb/--cap-pfs/--cap-ar`, and any `--throttle` entries attached
+/// to their roots.
+fn parse_tier_roots(args: &Args) -> Result<(Vec<TierRoot>, Vec<TierSpec>)> {
+    let spec = args.get("tiers").ok_or_else(|| {
+        anyhow!("--tiers bb=DIR:pfs=DIR:ar=DIR is required (fastest tier first)")
+    })?;
+    let throttles = parse_throttles(args)?;
+    let mut roots: Vec<TierRoot> = Vec::new();
+    let mut specs = Vec::new();
+    for part in spec.split(':').filter(|p| !p.is_empty()) {
+        let (key, dir) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("tier spec '{part}' is not key=DIR (keys: bb, pfs, ar)"))?;
+        let tier = tier_from_key(key)
+            .ok_or_else(|| anyhow!("unknown tier key '{key}' in --tiers (bb, pfs, ar)"))?;
+        ensure!(!dir.is_empty(), "tier '{key}' has an empty directory");
+        ensure!(
+            !roots.iter().any(|r| r.tier == tier),
+            "tier '{key}' listed twice in --tiers"
+        );
+        let mut tier_spec = match tier {
+            StorageTier::BurstBuffer => TierSpec::burst_buffer(),
+            StorageTier::ParallelFs => TierSpec::parallel_fs(),
+            StorageTier::Archive => TierSpec::archive(),
+        };
+        if let Some(cap) = args.get(&format!("cap-{key}")) {
+            tier_spec.capacity = cap
+                .parse()
+                .map_err(|_| anyhow!("--cap-{key} expects bytes, got '{cap}'"))?;
+        }
+        let mut root = TierRoot::new(tier, dir);
+        if let Some(&(_, th)) = throttles.iter().find(|(t, _)| *t == tier) {
+            root = root.throttled(th);
+        }
+        roots.push(root);
+        specs.push(tier_spec);
+    }
+    ensure!(!roots.is_empty(), "--tiers names no tiers");
+    Ok((roots, specs))
+}
+
+/// `place`: plan a placement for the artifact's real segment sizes,
+/// then *execute* it — byte-range-copy every class segment onto its
+/// tier directory, commit the manifest, and print measured (not
+/// modeled) movement telemetry.
+fn place(args: &Args) -> Result<()> {
+    let path = container_path(args)?;
+    let (roots, specs) = parse_tier_roots(args)?;
+    let sizes = class_sizes(&path)?;
+    let placement = place_classes(&sizes, &specs);
+    println!(
+        "placing {} class segments ({} payload bytes) across {} real tier roots:",
+        sizes.len(),
+        sizes.iter().sum::<u64>(),
+        roots.len()
+    );
+    for (k, tier) in placement.assignment.iter().enumerate() {
+        println!(
+            "  class {k}: {:>12} B -> {tier:?}{}",
+            placement.bytes[k],
+            if placement.is_over_capacity(k) {
+                "  (OVER CAPACITY)"
+            } else {
+                ""
+            }
+        );
+    }
+    let executor = TierExecutor::new(roots)?;
+    let (manifest, secs) = time(|| executor.execute(&placement, &path));
+    let manifest = manifest?;
+    println!(
+        "moved {} class bytes (+ {} meta bytes) in {:.1} ms; manifest committed to {}",
+        placement.bytes.iter().sum::<u64>(),
+        manifest.meta_bytes,
+        secs * 1e3,
+        TierManifest::path_for(&path).display()
+    );
+    println!("tier telemetry (measured):\n{}", executor.stats().to_json());
+    Ok(())
+}
+
+/// `retrieve --from-tiers MANIFEST`: reconstruct the container straight
+/// off the tier ladder an executed placement left behind — coarse
+/// classes stream from their tier files first (optionally throttled,
+/// optionally prefetched ahead of upgrades) — then print the measured
+/// movement telemetry. The retrieval core (and its result) is identical
+/// to `retrieve --in` on the original artifact.
+fn retrieve_tiered(args: &Args, manifest_path: &str) -> Result<()> {
+    ensure!(
+        args.get("region").is_none() && args.get("step").is_none(),
+        "--from-tiers serves single-container manifests (no --region/--step)"
+    );
+    let options = TierReadOptions {
+        prefetch: !args.has("no-prefetch"),
+        throttles: parse_throttles(args)?,
+    };
+    let reader = TieredReader::open_with(manifest_path, options)?;
+    let m = reader.manifest();
+    ensure!(
+        !m.artifact.to_string_lossy().ends_with(".mgrs"),
+        "--from-tiers retrieval serves single-container (.mgr) manifests; shard placements \
+         execute fine, but retrieve shards through the original artifact"
+    );
+    println!(
+        "tiered manifest: {} — {} bytes in {} class segments (+{} meta bytes)",
+        m.artifact.display(),
+        m.total_bytes,
+        m.nclasses,
+        m.meta_bytes
+    );
+    for c in &m.classes {
+        println!("  class {}: {:>12} B on {:?}", c.class, c.bytes, c.tier);
+    }
+    let container = OpenContainer::open(reader.source())?;
+    retrieve_container(args, container)?;
+    let stats = reader.stats();
+    println!(
+        "prefetcher: {} classes promoted ahead of use, {} reads served from memory",
+        stats.prefetched_classes, stats.prefetch_hits
+    );
+    println!("tier telemetry (measured):\n{}", stats.to_json());
+    Ok(())
+}
+
 fn compress(args: &Args) -> Result<()> {
     let data = load_field(args)?;
     let session = session_for(args, data.shape(), data.dtype())?;
@@ -981,6 +1158,47 @@ mod tests {
 
     fn args(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn tiers_spec_parses_in_order_with_overrides() {
+        let a = args(
+            "place --in f.mgr --tiers bb=/t/bb:pfs=/t/pfs:ar=/t/ar --cap-bb 4096 \
+             --throttle bb=1e6",
+        );
+        let (roots, specs) = parse_tier_roots(&a).unwrap();
+        assert_eq!(roots.len(), 3);
+        assert_eq!(roots[0].tier, StorageTier::BurstBuffer);
+        assert_eq!(roots[0].root, std::path::PathBuf::from("/t/bb"));
+        assert!(roots[0].throttle.is_some(), "--throttle bb= attaches to the bb root");
+        assert!(roots[1].throttle.is_none() && roots[2].throttle.is_none());
+        assert_eq!(specs[0].capacity, 4096, "--cap-bb overrides the preset");
+        assert_eq!(specs[1].capacity, TierSpec::parallel_fs().capacity);
+        assert_eq!(roots[2].tier, StorageTier::Archive);
+    }
+
+    #[test]
+    fn tiers_spec_errors_name_the_problem() {
+        let missing = parse_tier_roots(&args("place --in f.mgr")).unwrap_err();
+        assert!(missing.to_string().contains("--tiers"), "{missing}");
+        let bad_key = parse_tier_roots(&args("place --tiers nvme=/t")).unwrap_err();
+        assert!(bad_key.to_string().contains("nvme"), "{bad_key}");
+        let no_eq = parse_tier_roots(&args("place --tiers bb")).unwrap_err();
+        assert!(no_eq.to_string().contains("key=DIR"), "{no_eq}");
+        let dup = parse_tier_roots(&args("place --tiers bb=/a:bb=/b")).unwrap_err();
+        assert!(dup.to_string().contains("twice"), "{dup}");
+    }
+
+    #[test]
+    fn throttle_spec_parses_and_validates() {
+        let ths = parse_throttles(&args("retrieve --throttle bb=2.5e9,ar=1e6")).unwrap();
+        assert_eq!(ths.len(), 2);
+        assert_eq!(ths[0].0, StorageTier::BurstBuffer);
+        assert_eq!(ths[0].1.read_bw, 2.5e9);
+        assert_eq!(ths[1].0, StorageTier::Archive);
+        assert!(parse_throttles(&args("retrieve")).unwrap().is_empty());
+        assert!(parse_throttles(&args("retrieve --throttle bb=-5")).is_err());
+        assert!(parse_throttles(&args("retrieve --throttle bb")).is_err());
     }
 
     #[test]

@@ -1,0 +1,1349 @@
+//! Tiered-storage **execution**: actually move the bytes the mover plans.
+//!
+//! [`crate::storage::mover`] decides where each coefficient class should
+//! live; until this module, that decision was arithmetic — no byte ever
+//! moved and `Placement::retrieval_time` was a model. A [`TierExecutor`]
+//! executes a [`Placement`] against real directories standing in for the
+//! NVMe/disk/archive tiers of the paper's Fig-1 workflow:
+//!
+//! * every class segment of a `.mgr` (or every block's class segments of
+//!   a `.mgrs`) is copied **by byte range** out of the source artifact
+//!   into a per-class segment file under its assigned tier's root;
+//! * the non-class bytes (container header, shard index, per-block
+//!   headers) land in one *meta* segment on the fastest tier, so the
+//!   union of the segment files is byte-for-byte the original artifact;
+//! * a JSON **manifest** records the extent map (artifact offset →
+//!   segment file + offset) and is committed atomically (temp file +
+//!   rename) *after* every segment copy succeeded — a crash between copy
+//!   and commit leaves the source untouched and the run re-executable;
+//! * [`TieredReader`] serves the artifact back as a seekable byte stream
+//!   ([`TieredSource`]) that reads each range from the tier that holds
+//!   it, so the existing lazy readers walk the tier ladder coarse-first
+//!   without knowing tiers exist;
+//! * an optional background **prefetcher** promotes the class *after*
+//!   the highest one touched so far into memory, ahead of the predicted
+//!   `upgrade` call;
+//! * every tier read/write is **measured** (wall-clock, not modeled) and
+//!   surfaced as a [`TierStats`] telemetry block, and an optional
+//!   per-tier [`Throttle`] emulates a slow tier's bandwidth and latency
+//!   so the model can be cross-checked against measurement on one box.
+//!
+//! Failures are the typed [`ExecError`] — over-capacity placements are
+//! refused before any byte moves, and a copy error removes the partial
+//! segment files it created, so the tiers never hold a half-move.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::{Duration, Instant};
+
+use crate::storage::mover::Placement;
+use crate::storage::reader::ContainerReader;
+use crate::storage::shard::{is_shard, ShardReader};
+use crate::storage::tier::StorageTier;
+use crate::util::json;
+
+/// Copy-buffer size for byte-range moves.
+const COPY_CHUNK: usize = 256 * 1024;
+
+/// Typed failure of tier execution or tiered reading.
+#[derive(Debug)]
+pub enum ExecError {
+    /// The placement force-placed classes past the deepest tier's
+    /// capacity ([`Placement::over_capacity`]); the executor refuses it
+    /// before moving any byte.
+    OverCapacity(Vec<usize>),
+    /// The placement assigns a class to a tier no root directory was
+    /// configured for.
+    MissingRoot(StorageTier),
+    /// The placement's per-class byte sizes disagree with the artifact's
+    /// actual segment table (stale plan, wrong artifact).
+    PlanMismatch(String),
+    /// Parsing the source `.mgr`/`.mgrs` artifact failed.
+    Artifact(anyhow::Error),
+    /// The manifest is missing, malformed, or names segment files whose
+    /// sizes no longer match it (e.g. a truncated segment).
+    Manifest(String),
+    /// Execution was interrupted before the manifest commit (the
+    /// crash-simulation hook); segment files may exist but the manifest
+    /// does not reference them — re-running the execution recovers.
+    Interrupted(String),
+    /// An I/O operation on a tier root, segment file, or the source
+    /// artifact failed.
+    Io {
+        /// What the executor was doing when the operation failed.
+        what: String,
+        /// The underlying I/O error.
+        source: io::Error,
+    },
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::OverCapacity(classes) => write!(
+                f,
+                "placement over capacity: classes {classes:?} exceed the configured tiers; \
+                 nothing was moved"
+            ),
+            ExecError::MissingRoot(tier) => {
+                write!(f, "no root directory configured for placed tier {tier:?}")
+            }
+            ExecError::PlanMismatch(msg) => write!(f, "plan/artifact mismatch: {msg}"),
+            ExecError::Artifact(e) => write!(f, "artifact: {e:#}"),
+            ExecError::Manifest(msg) => write!(f, "manifest: {msg}"),
+            ExecError::Interrupted(msg) => write!(f, "interrupted before commit: {msg}"),
+            ExecError::Io { what, source } => write!(f, "i/o while {what}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ExecError::Artifact(e) => Some(e.as_ref()),
+            ExecError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Result alias for tier execution.
+pub type ExecResult<T> = std::result::Result<T, ExecError>;
+
+fn io_err(what: impl Into<String>, source: io::Error) -> ExecError {
+    ExecError::Io {
+        what: what.into(),
+        source,
+    }
+}
+
+/// Emulated bandwidth/latency of one tier (a tempdir is as fast as the
+/// page cache; a throttle makes it behave like the tier it stands in
+/// for). Sleeps `latency + bytes / bw` around each read or write, so
+/// the *measured* counters reflect the emulated tier.
+#[derive(Clone, Copy, Debug)]
+pub struct Throttle {
+    /// Emulated read bandwidth, bytes/s (`f64::INFINITY` = unthrottled).
+    pub read_bw: f64,
+    /// Emulated write bandwidth, bytes/s (`f64::INFINITY` = unthrottled).
+    pub write_bw: f64,
+    /// Emulated per-access latency, seconds.
+    pub latency: f64,
+}
+
+impl Throttle {
+    /// Symmetric throttle: `bw` bytes/s both ways, zero latency.
+    pub fn bandwidth(bw: f64) -> Self {
+        Throttle {
+            read_bw: bw,
+            write_bw: bw,
+            latency: 0.0,
+        }
+    }
+
+    fn sleep_for(&self, bytes: u64, bw: f64) {
+        let mut secs = self.latency;
+        if bw.is_finite() && bw > 0.0 {
+            secs += bytes as f64 / bw;
+        }
+        if secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs.min(10.0)));
+        }
+    }
+}
+
+/// One tier's backing directory plus its optional throttle.
+#[derive(Clone, Debug)]
+pub struct TierRoot {
+    /// Which tier this directory stands in for.
+    pub tier: StorageTier,
+    /// Directory the tier's segment files live in.
+    pub root: PathBuf,
+    /// Optional bandwidth/latency emulation for this tier.
+    pub throttle: Option<Throttle>,
+}
+
+impl TierRoot {
+    /// An unthrottled tier root.
+    pub fn new(tier: StorageTier, root: impl Into<PathBuf>) -> Self {
+        TierRoot {
+            tier,
+            root: root.into(),
+            throttle: None,
+        }
+    }
+
+    /// Attach a throttle to this root.
+    pub fn throttled(mut self, throttle: Throttle) -> Self {
+        self.throttle = Some(throttle);
+        self
+    }
+}
+
+fn tier_index(tier: StorageTier) -> usize {
+    match tier {
+        StorageTier::BurstBuffer => 0,
+        StorageTier::ParallelFs => 1,
+        StorageTier::Archive => 2,
+    }
+}
+
+fn tier_from_index(i: usize) -> StorageTier {
+    match i {
+        0 => StorageTier::BurstBuffer,
+        1 => StorageTier::ParallelFs,
+        _ => StorageTier::Archive,
+    }
+}
+
+/// Short stable key of a tier, used by the CLI `--tiers` spec and the
+/// manifest/telemetry JSON: `bb`, `pfs`, `ar`.
+pub fn tier_key(tier: StorageTier) -> &'static str {
+    match tier {
+        StorageTier::BurstBuffer => "bb",
+        StorageTier::ParallelFs => "pfs",
+        StorageTier::Archive => "ar",
+    }
+}
+
+/// Inverse of [`tier_key`].
+pub fn tier_from_key(key: &str) -> Option<StorageTier> {
+    match key {
+        "bb" => Some(StorageTier::BurstBuffer),
+        "pfs" => Some(StorageTier::ParallelFs),
+        "ar" => Some(StorageTier::Archive),
+        _ => None,
+    }
+}
+
+#[derive(Default)]
+struct TierCounters {
+    bytes_written: AtomicU64,
+    bytes_read: AtomicU64,
+    writes: AtomicU64,
+    reads: AtomicU64,
+    write_ns: AtomicU64,
+    read_ns: AtomicU64,
+}
+
+/// Shared measured counters (executor writes, reader/prefetcher reads).
+#[derive(Default)]
+struct StatsCore {
+    tiers: [TierCounters; 3],
+    meta_bytes: AtomicU64,
+    prefetch_hits: AtomicU64,
+    prefetched: AtomicU64,
+}
+
+impl StatsCore {
+    fn charge_write(&self, tier: StorageTier, bytes: u64, elapsed: Duration) {
+        let c = &self.tiers[tier_index(tier)];
+        c.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        c.writes.fetch_add(1, Ordering::Relaxed);
+        c.write_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn charge_read(&self, tier: StorageTier, bytes: u64, elapsed: Duration) {
+        let c = &self.tiers[tier_index(tier)];
+        c.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        c.reads.fetch_add(1, Ordering::Relaxed);
+        c.read_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> TierStats {
+        TierStats {
+            tiers: (0..3)
+                .map(|i| {
+                    let c = &self.tiers[i];
+                    TierStatLine {
+                        tier: tier_from_index(i),
+                        bytes_written: c.bytes_written.load(Ordering::Relaxed),
+                        bytes_read: c.bytes_read.load(Ordering::Relaxed),
+                        writes: c.writes.load(Ordering::Relaxed),
+                        reads: c.reads.load(Ordering::Relaxed),
+                        write_s: c.write_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                        read_s: c.read_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                    }
+                })
+                .collect(),
+            meta_bytes: self.meta_bytes.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetched_classes: self.prefetched.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Measured (wall-clock) per-tier movement counters of one tier.
+#[derive(Clone, Debug)]
+pub struct TierStatLine {
+    /// The tier the line describes.
+    pub tier: StorageTier,
+    /// Class-payload bytes written to this tier by `execute` (the meta
+    /// segment is accounted separately in [`TierStats::meta_bytes`]).
+    pub bytes_written: u64,
+    /// Bytes read back from this tier (meta and class segments).
+    pub bytes_read: u64,
+    /// Write operations performed.
+    pub writes: u64,
+    /// Read operations performed.
+    pub reads: u64,
+    /// Measured seconds spent writing (throttle sleeps included).
+    pub write_s: f64,
+    /// Measured seconds spent reading (throttle sleeps included).
+    pub read_s: f64,
+}
+
+/// Measured tier-movement telemetry: what [`TierExecutor::stats`] /
+/// [`TieredReader::stats`] report and the CLI prints as JSON.
+#[derive(Clone, Debug)]
+pub struct TierStats {
+    /// One line per tier (burst buffer, parallel fs, archive — in that
+    /// order, zeros for untouched tiers).
+    pub tiers: Vec<TierStatLine>,
+    /// Bytes of non-class metadata (container header / shard index)
+    /// written to the fastest tier.
+    pub meta_bytes: u64,
+    /// Reads served from a prefetch-promoted in-memory class instead of
+    /// a tier file.
+    pub prefetch_hits: u64,
+    /// Classes the background prefetcher promoted.
+    pub prefetched_classes: u64,
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+impl TierStats {
+    /// Serialize the telemetry block to stable JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"tiers\": [\n");
+        for (i, t) in self.tiers.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"tier\": {}, \"bytes_written\": {}, \"bytes_read\": {}, \
+                 \"writes\": {}, \"reads\": {}, \"write_s\": {:.6}, \"read_s\": {:.6}}}{}\n",
+                json_str(tier_key(t.tier)),
+                t.bytes_written,
+                t.bytes_read,
+                t.writes,
+                t.reads,
+                t.write_s,
+                t.read_s,
+                if i + 1 < self.tiers.len() { "," } else { "" },
+            ));
+        }
+        out.push_str(&format!(
+            "  ],\n  \"meta_bytes\": {},\n  \"prefetch_hits\": {},\n  \
+             \"prefetched_classes\": {}\n}}\n",
+            self.meta_bytes, self.prefetch_hits, self.prefetched_classes
+        ));
+        out
+    }
+
+    /// The stat line of one tier.
+    pub fn tier(&self, tier: StorageTier) -> &TierStatLine {
+        &self.tiers[tier_index(tier)]
+    }
+}
+
+/// Which logical segment an extent's bytes live in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Seg {
+    /// Non-class bytes: container header, shard index, per-block
+    /// container headers.
+    Meta,
+    /// Class `k`'s entropy-coded payload (all blocks' `k` segments for a
+    /// shard).
+    Class(usize),
+}
+
+/// One contiguous byte range of the artifact and where it landed.
+#[derive(Clone, Debug)]
+pub struct Extent {
+    /// Absolute offset of the range in the original artifact.
+    pub offset: u64,
+    /// Length of the range in bytes.
+    pub len: u64,
+    /// Which segment file holds it.
+    pub seg: Seg,
+    /// Offset of the range within that segment file.
+    pub seg_off: u64,
+}
+
+/// Where one class's payload landed.
+#[derive(Clone, Debug)]
+pub struct ClassLocation {
+    /// Class index (coarsest = 0).
+    pub class: usize,
+    /// Tier the class was placed on.
+    pub tier: StorageTier,
+    /// Total payload bytes of the class (across all blocks for shards).
+    pub bytes: u64,
+    /// The segment file holding the class.
+    pub file: PathBuf,
+}
+
+/// The committed record of one executed placement: which segment file
+/// on which tier holds every byte range of the artifact. Serialized as
+/// JSON next to the artifact ([`TierManifest::path_for`]); the unit a
+/// [`TieredReader`] opens.
+#[derive(Clone, Debug)]
+pub struct TierManifest {
+    /// The source artifact the placement was executed from.
+    pub artifact: PathBuf,
+    /// Total artifact size in bytes (== sum of all extent lengths).
+    pub total_bytes: u64,
+    /// Number of coefficient classes.
+    pub nclasses: usize,
+    /// Tier holding the meta segment (always the fastest configured).
+    pub meta_tier: StorageTier,
+    /// The meta segment file (header/index bytes).
+    pub meta_file: PathBuf,
+    /// Meta segment size in bytes.
+    pub meta_bytes: u64,
+    /// Per-class landing site, coarsest first.
+    pub classes: Vec<ClassLocation>,
+    /// The full extent map, sorted by artifact offset.
+    pub extents: Vec<Extent>,
+}
+
+impl TierManifest {
+    /// Conventional manifest location for `artifact`:
+    /// `<artifact>.tiers.json`.
+    pub fn path_for(artifact: impl AsRef<Path>) -> PathBuf {
+        let a = artifact.as_ref();
+        let mut name = a.file_name().unwrap_or_default().to_os_string();
+        name.push(".tiers.json");
+        a.with_file_name(name)
+    }
+
+    fn seg_file(&self, seg: Seg) -> &Path {
+        match seg {
+            Seg::Meta => &self.meta_file,
+            Seg::Class(k) => &self.classes[k].file,
+        }
+    }
+
+    fn seg_tier(&self, seg: Seg) -> StorageTier {
+        match seg {
+            Seg::Meta => self.meta_tier,
+            Seg::Class(k) => self.classes[k].tier,
+        }
+    }
+
+    /// Serialize to JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"artifact\": {},\n  \"total_bytes\": {},\n  \"nclasses\": {},\n",
+            json_str(&self.artifact.display().to_string()),
+            self.total_bytes,
+            self.nclasses
+        ));
+        out.push_str(&format!(
+            "  \"meta\": {{\"tier\": {}, \"file\": {}, \"bytes\": {}}},\n",
+            json_str(tier_key(self.meta_tier)),
+            json_str(&self.meta_file.display().to_string()),
+            self.meta_bytes
+        ));
+        out.push_str("  \"classes\": [\n");
+        for (i, c) in self.classes.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"class\": {}, \"tier\": {}, \"bytes\": {}, \"file\": {}}}{}\n",
+                c.class,
+                json_str(tier_key(c.tier)),
+                c.bytes,
+                json_str(&c.file.display().to_string()),
+                if i + 1 < self.classes.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n  \"extents\": [\n");
+        for (i, e) in self.extents.iter().enumerate() {
+            let seg = match e.seg {
+                Seg::Meta => -1i64,
+                Seg::Class(k) => k as i64,
+            };
+            out.push_str(&format!(
+                "    {{\"offset\": {}, \"len\": {}, \"seg\": {}, \"seg_off\": {}}}{}\n",
+                e.offset,
+                e.len,
+                seg,
+                e.seg_off,
+                if i + 1 < self.extents.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a manifest document (no file-system validation — see
+    /// [`TieredReader::open`] for the checked path).
+    pub fn from_json(text: &str) -> ExecResult<Self> {
+        let doc = json::parse(text).map_err(|e| ExecError::Manifest(format!("{e:#}")))?;
+        let req_u64 = |v: &json::Value, key: &str| -> ExecResult<u64> {
+            v.get(key)
+                .and_then(json::Value::as_f64)
+                .map(|f| f as u64)
+                .ok_or_else(|| ExecError::Manifest(format!("missing numeric field '{key}'")))
+        };
+        let req_str = |v: &json::Value, key: &str| -> ExecResult<String> {
+            v.get(key)
+                .and_then(json::Value::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| ExecError::Manifest(format!("missing string field '{key}'")))
+        };
+        let req_tier = |v: &json::Value, key: &str| -> ExecResult<StorageTier> {
+            let k = req_str(v, key)?;
+            tier_from_key(&k).ok_or_else(|| ExecError::Manifest(format!("unknown tier '{k}'")))
+        };
+        let artifact = PathBuf::from(req_str(&doc, "artifact")?);
+        let total_bytes = req_u64(&doc, "total_bytes")?;
+        let nclasses = req_u64(&doc, "nclasses")? as usize;
+        let meta = doc
+            .get("meta")
+            .ok_or_else(|| ExecError::Manifest("missing 'meta' object".into()))?;
+        let meta_tier = req_tier(meta, "tier")?;
+        let meta_file = PathBuf::from(req_str(meta, "file")?);
+        let meta_bytes = req_u64(meta, "bytes")?;
+        let mut classes = Vec::new();
+        for c in doc
+            .get("classes")
+            .and_then(json::Value::as_arr)
+            .ok_or_else(|| ExecError::Manifest("missing 'classes' array".into()))?
+        {
+            classes.push(ClassLocation {
+                class: req_u64(c, "class")? as usize,
+                tier: req_tier(c, "tier")?,
+                bytes: req_u64(c, "bytes")?,
+                file: PathBuf::from(req_str(c, "file")?),
+            });
+        }
+        if classes.len() != nclasses {
+            return Err(ExecError::Manifest(format!(
+                "nclasses {} disagrees with {} class entries",
+                nclasses,
+                classes.len()
+            )));
+        }
+        let mut extents = Vec::new();
+        for e in doc
+            .get("extents")
+            .and_then(json::Value::as_arr)
+            .ok_or_else(|| ExecError::Manifest("missing 'extents' array".into()))?
+        {
+            let seg_raw = e
+                .get("seg")
+                .and_then(json::Value::as_f64)
+                .ok_or_else(|| ExecError::Manifest("missing numeric field 'seg'".into()))?;
+            let seg = if seg_raw < 0.0 {
+                Seg::Meta
+            } else {
+                let k = seg_raw as usize;
+                if k >= nclasses {
+                    return Err(ExecError::Manifest(format!(
+                        "extent names class {k} but the manifest has {nclasses}"
+                    )));
+                }
+                Seg::Class(k)
+            };
+            extents.push(Extent {
+                offset: req_u64(e, "offset")?,
+                len: req_u64(e, "len")?,
+                seg,
+                seg_off: req_u64(e, "seg_off")?,
+            });
+        }
+        extents.sort_by_key(|e| e.offset);
+        let covered: u64 = extents.iter().map(|e| e.len).sum();
+        if covered != total_bytes {
+            return Err(ExecError::Manifest(format!(
+                "extents cover {covered} of {total_bytes} artifact bytes"
+            )));
+        }
+        Ok(TierManifest {
+            artifact,
+            total_bytes,
+            nclasses,
+            meta_tier,
+            meta_file,
+            meta_bytes,
+            classes,
+            extents,
+        })
+    }
+
+    /// Read and parse a manifest file.
+    pub fn load(path: impl AsRef<Path>) -> ExecResult<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| io_err(format!("reading manifest {}", path.as_ref().display()), e))?;
+        Self::from_json(&text)
+    }
+}
+
+/// The artifact's byte geography: where every class's payload bytes sit
+/// in the `.mgr`/`.mgrs` stream, and what the per-class totals are.
+#[derive(Clone, Debug)]
+pub struct ArtifactLayout {
+    /// Total artifact size in bytes.
+    pub total_bytes: u64,
+    /// Aggregated payload bytes per class (summed over blocks for
+    /// shards) — the input [`crate::storage::mover::place_classes`]
+    /// plans over.
+    pub class_bytes: Vec<u64>,
+    /// Every byte range, sorted by artifact offset.
+    pub extents: Vec<(u64, u64, Seg)>,
+}
+
+/// Map a `.mgr`/`.mgrs` artifact into its extent layout by reading the
+/// header/index only (no payload byte is touched).
+pub fn artifact_layout(path: impl AsRef<Path>) -> ExecResult<ArtifactLayout> {
+    let path = path.as_ref();
+    let mut magic = [0u8; 4];
+    File::open(path)
+        .and_then(|mut f| f.read_exact(&mut magic))
+        .map_err(|e| io_err(format!("opening artifact {}", path.display()), e))?;
+    let mut extents: Vec<(u64, u64, Seg)> = Vec::new();
+    let mut class_bytes: Vec<u64> = Vec::new();
+    let mut note_class = |k: usize, bytes: u64| {
+        if class_bytes.len() <= k {
+            class_bytes.resize(k + 1, 0);
+        }
+        class_bytes[k] += bytes;
+    };
+    let total_bytes;
+    if is_shard(&magic) {
+        let shard = ShardReader::open_file(path).map_err(ExecError::Artifact)?;
+        total_bytes = shard.total_bytes();
+        extents.push((0, shard.header_len() as u64, Seg::Meta));
+        let blocks = shard.header().blocks.clone();
+        for (b, meta) in blocks.iter().enumerate() {
+            let cont = shard.open_block(b).map_err(ExecError::Artifact)?;
+            extents.push((meta.offset, cont.header_len() as u64, Seg::Meta));
+            let segments = cont.header().segments.clone();
+            for (k, s) in segments.iter().enumerate() {
+                if s.bytes > 0 {
+                    extents.push((meta.offset + cont.segment_offset(k), s.bytes, Seg::Class(k)));
+                }
+                note_class(k, s.bytes);
+            }
+        }
+    } else {
+        let cont = ContainerReader::open_file(path).map_err(ExecError::Artifact)?;
+        total_bytes = cont.total_bytes();
+        extents.push((0, cont.header_len() as u64, Seg::Meta));
+        for (k, s) in cont.header().segments.iter().enumerate() {
+            if s.bytes > 0 {
+                extents.push((cont.segment_offset(k), s.bytes, Seg::Class(k)));
+            }
+            note_class(k, s.bytes);
+        }
+    }
+    extents.sort_by_key(|e| e.0);
+    let covered: u64 = extents.iter().map(|e| e.1).sum();
+    if covered != total_bytes {
+        return Err(ExecError::PlanMismatch(format!(
+            "artifact maps {covered} of {total_bytes} bytes into extents"
+        )));
+    }
+    Ok(ArtifactLayout {
+        total_bytes,
+        class_bytes,
+        extents,
+    })
+}
+
+/// Aggregated per-class payload sizes of an artifact — the byte vector
+/// a [`Placement`] for it must be planned over.
+pub fn class_sizes(path: impl AsRef<Path>) -> ExecResult<Vec<u64>> {
+    Ok(artifact_layout(path)?.class_bytes)
+}
+
+/// Crash-simulation hook for [`TierExecutor::execute_faulted`] (the
+/// fault-injection tests): where to abandon the execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecFault {
+    /// Run to completion (what [`TierExecutor::execute`] uses).
+    None,
+    /// Copy every segment, then return [`ExecError::Interrupted`]
+    /// *before* the manifest commit — the torn state a crash between
+    /// copy and commit leaves behind.
+    BeforeManifestCommit,
+}
+
+/// Executes placements against real tier directories, measuring every
+/// byte moved. Construct with the fastest tier first — the meta segment
+/// (header/index bytes) always lands on the first root.
+pub struct TierExecutor {
+    roots: Vec<TierRoot>,
+    stats: Arc<StatsCore>,
+}
+
+impl TierExecutor {
+    /// Wire up an executor over `roots` (fastest tier first; at least
+    /// one root). Each root directory is created if absent.
+    pub fn new(roots: Vec<TierRoot>) -> ExecResult<Self> {
+        if roots.is_empty() {
+            return Err(ExecError::Manifest("at least one tier root is required".into()));
+        }
+        for r in &roots {
+            std::fs::create_dir_all(&r.root)
+                .map_err(|e| io_err(format!("creating tier root {}", r.root.display()), e))?;
+        }
+        Ok(TierExecutor {
+            roots,
+            stats: Arc::new(StatsCore::default()),
+        })
+    }
+
+    /// The configured roots, fastest first.
+    pub fn roots(&self) -> &[TierRoot] {
+        &self.roots
+    }
+
+    fn root_for(&self, tier: StorageTier) -> ExecResult<&TierRoot> {
+        self.roots
+            .iter()
+            .find(|r| r.tier == tier)
+            .ok_or(ExecError::MissingRoot(tier))
+    }
+
+    /// Measured movement counters accumulated by this executor.
+    pub fn stats(&self) -> TierStats {
+        self.stats.snapshot()
+    }
+
+    /// Execute `placement` for `artifact`: copy every class segment's
+    /// byte range into its assigned tier, write the meta segment to the
+    /// fastest tier, and atomically commit the manifest to
+    /// [`TierManifest::path_for`]`(artifact)`. Refuses over-capacity
+    /// placements before moving anything; on any copy failure the
+    /// partial segment files created by this run are removed, so a
+    /// failed execution leaves no half-move behind. Re-running after a
+    /// failure (or an interrupted commit) is idempotent.
+    pub fn execute(
+        &self,
+        placement: &Placement,
+        artifact: impl AsRef<Path>,
+    ) -> ExecResult<TierManifest> {
+        self.execute_faulted(placement, artifact, ExecFault::None)
+    }
+
+    /// [`TierExecutor::execute`] with a crash-simulation fault point —
+    /// the fault-injection tests' hook.
+    #[doc(hidden)]
+    pub fn execute_faulted(
+        &self,
+        placement: &Placement,
+        artifact: impl AsRef<Path>,
+        fault: ExecFault,
+    ) -> ExecResult<TierManifest> {
+        let artifact = artifact.as_ref();
+        if !placement.over_capacity.is_empty() {
+            return Err(ExecError::OverCapacity(placement.over_capacity.clone()));
+        }
+        let layout = artifact_layout(artifact)?;
+        if placement.bytes != layout.class_bytes {
+            return Err(ExecError::PlanMismatch(format!(
+                "placement plans {:?} class bytes, artifact holds {:?}",
+                placement.bytes, layout.class_bytes
+            )));
+        }
+        // resolve every destination BEFORE any byte moves
+        let name = artifact
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| ExecError::Manifest("artifact path has no file name".into()))?
+            .to_string();
+        let meta_root = &self.roots[0];
+        let meta_file = meta_root.root.join(format!("{name}.meta.seg"));
+        let mut class_files = Vec::with_capacity(placement.assignment.len());
+        for (k, &tier) in placement.assignment.iter().enumerate() {
+            let root = self.root_for(tier)?;
+            class_files.push((root.root.join(format!("{name}.class{k}.seg")), root));
+        }
+
+        let mut created: Vec<PathBuf> = Vec::new();
+        let result = self.copy_segments(
+            artifact,
+            &layout,
+            placement,
+            &meta_file,
+            meta_root,
+            &class_files,
+            &mut created,
+            fault,
+        );
+        // a failed copy removes whatever this run created (no partial
+        // moves); the injected crash deliberately leaves the torn state
+        // behind, like a real crash would — recovery re-runs over it
+        if let Err(e) = &result {
+            if !matches!(e, ExecError::Interrupted(_)) {
+                for p in &created {
+                    let _ = std::fs::remove_file(p);
+                }
+            }
+        }
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn copy_segments(
+        &self,
+        artifact: &Path,
+        layout: &ArtifactLayout,
+        placement: &Placement,
+        meta_file: &Path,
+        meta_root: &TierRoot,
+        class_files: &[(PathBuf, &TierRoot)],
+        created: &mut Vec<PathBuf>,
+        fault: ExecFault,
+    ) -> ExecResult<TierManifest> {
+        let mut src = File::open(artifact)
+            .map_err(|e| io_err(format!("opening artifact {}", artifact.display()), e))?;
+
+        // open every destination segment file (truncating: re-runs
+        // overwrite stale halves)
+        let mut open_dest = |path: &Path| -> ExecResult<File> {
+            created.push(path.to_path_buf());
+            File::create(path)
+                .map_err(|e| io_err(format!("creating segment file {}", path.display()), e))
+        };
+        let mut meta_out = open_dest(meta_file)?;
+        let mut class_out = Vec::with_capacity(class_files.len());
+        for (path, _) in class_files {
+            class_out.push(open_dest(path)?);
+        }
+
+        // walk the extents in artifact order, appending each range to
+        // its segment file and recording the landing offset
+        let mut extents = Vec::with_capacity(layout.extents.len());
+        let mut meta_off = 0u64;
+        let mut class_off = vec![0u64; class_files.len()];
+        for &(offset, len, seg) in &layout.extents {
+            let (out, root, seg_off) = match seg {
+                Seg::Meta => (&mut meta_out, meta_root, &mut meta_off),
+                Seg::Class(k) => (&mut class_out[k], class_files[k].1, &mut class_off[k]),
+            };
+            let t0 = Instant::now();
+            copy_range(&mut src, out, offset, len)?;
+            if let Some(th) = root.throttle {
+                th.sleep_for(len, th.write_bw);
+            }
+            let elapsed = t0.elapsed();
+            match seg {
+                Seg::Meta => {
+                    self.stats.meta_bytes.fetch_add(len, Ordering::Relaxed);
+                }
+                Seg::Class(_) => self.stats.charge_write(root.tier, len, elapsed),
+            }
+            extents.push(Extent {
+                offset,
+                len,
+                seg,
+                seg_off: *seg_off,
+            });
+            *seg_off += len;
+        }
+        drop(meta_out);
+        drop(class_out);
+
+        let manifest = TierManifest {
+            artifact: artifact.to_path_buf(),
+            total_bytes: layout.total_bytes,
+            nclasses: placement.bytes.len(),
+            meta_tier: meta_root.tier,
+            meta_file: meta_file.to_path_buf(),
+            meta_bytes: meta_off,
+            classes: placement
+                .assignment
+                .iter()
+                .enumerate()
+                .map(|(k, &tier)| ClassLocation {
+                    class: k,
+                    tier,
+                    bytes: placement.bytes[k],
+                    file: class_files[k].0.clone(),
+                })
+                .collect(),
+            extents,
+        };
+
+        if fault == ExecFault::BeforeManifestCommit {
+            return Err(ExecError::Interrupted(
+                "fault injected between segment copy and manifest commit".into(),
+            ));
+        }
+
+        // atomic commit: temp file + rename
+        let manifest_path = TierManifest::path_for(artifact);
+        let tmp = manifest_path.with_extension("json.tmp");
+        {
+            created.push(tmp.clone());
+            let mut f = File::create(&tmp)
+                .map_err(|e| io_err(format!("creating manifest {}", tmp.display()), e))?;
+            f.write_all(manifest.to_json().as_bytes())
+                .map_err(|e| io_err("writing manifest", e))?;
+        }
+        std::fs::rename(&tmp, &manifest_path)
+            .map_err(|e| io_err(format!("committing manifest {}", manifest_path.display()), e))?;
+        Ok(manifest)
+    }
+}
+
+fn copy_range(src: &mut File, out: &mut File, offset: u64, len: u64) -> ExecResult<()> {
+    src.seek(SeekFrom::Start(offset))
+        .map_err(|e| io_err(format!("seeking artifact to {offset}"), e))?;
+    let mut remaining = len;
+    let mut buf = vec![0u8; COPY_CHUNK.min((len as usize).max(1))];
+    while remaining > 0 {
+        let n = buf.len().min(remaining as usize);
+        src.read_exact(&mut buf[..n])
+            .map_err(|e| io_err("reading artifact range", e))?;
+        out.write_all(&buf[..n])
+            .map_err(|e| io_err("writing segment range", e))?;
+        remaining -= n as u64;
+    }
+    Ok(())
+}
+
+/// Options of [`TieredReader::open_with`].
+#[derive(Clone, Debug, Default)]
+pub struct TierReadOptions {
+    /// Start the background prefetcher (promote class `k+1` into memory
+    /// once a read touches class `k`).
+    pub prefetch: bool,
+    /// Per-tier read throttles (emulate the tier the directory stands
+    /// in for).
+    pub throttles: Vec<(StorageTier, Throttle)>,
+}
+
+struct SourceInner {
+    manifest: TierManifest,
+    throttles: [Option<Throttle>; 3],
+    stats: Arc<StatsCore>,
+    /// Promoted whole-class buffers (class index → class file bytes),
+    /// with the condvar [`TieredReader::wait_promoted`] parks on.
+    promoted: Mutex<HashMap<usize, Arc<Vec<u8>>>>,
+    promoted_cv: Condvar,
+    predictor: Mutex<Option<Sender<usize>>>,
+}
+
+impl SourceInner {
+    /// Read `len` bytes at `file_off` out of `seg`'s tier file, with the
+    /// tier's throttle applied and the measured counters charged.
+    fn read_seg_range(&self, seg: Seg, file_off: u64, buf: &mut [u8]) -> io::Result<()> {
+        let path = self.manifest.seg_file(seg);
+        let tier = self.manifest.seg_tier(seg);
+        let t0 = Instant::now();
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(file_off))?;
+        f.read_exact(buf)?;
+        if let Some(th) = self.throttles[tier_index(tier)] {
+            th.sleep_for(buf.len() as u64, th.read_bw);
+        }
+        self.stats.charge_read(tier, buf.len() as u64, t0.elapsed());
+        Ok(())
+    }
+
+    /// Whole-class read for the prefetcher (throttled + charged).
+    fn read_class_file(&self, k: usize) -> io::Result<Vec<u8>> {
+        let len = self.manifest.classes[k].bytes as usize;
+        let mut buf = vec![0u8; len];
+        self.read_seg_range(Seg::Class(k), 0, &mut buf)?;
+        Ok(buf)
+    }
+
+    fn predict(&self, touched: usize) {
+        if let Some(tx) = self.predictor.lock().unwrap().as_ref() {
+            let _ = tx.send(touched);
+        }
+    }
+}
+
+fn prefetch_loop(inner: Weak<SourceInner>, rx: Receiver<usize>) {
+    while let Ok(touched) = rx.recv() {
+        let Some(inner) = inner.upgrade() else { break };
+        let next = touched + 1;
+        if next >= inner.manifest.nclasses || inner.manifest.classes[next].bytes == 0 {
+            continue;
+        }
+        if inner.promoted.lock().unwrap().contains_key(&next) {
+            continue;
+        }
+        // promotion is best-effort: a failed read here is re-attempted
+        // (and surfaced) by the foreground read that needs the class
+        if let Ok(buf) = inner.read_class_file(next) {
+            inner.promoted.lock().unwrap().insert(next, Arc::new(buf));
+            inner.stats.prefetched.fetch_add(1, Ordering::Relaxed);
+            inner.promoted_cv.notify_all();
+        }
+    }
+}
+
+/// Tier-ladder read access to an executed placement: validates the
+/// manifest against the segment files on disk, then hands out
+/// [`TieredSource`]s — seekable byte streams identical to the original
+/// artifact, served range-by-range from the tiers (coarse classes
+/// first, exactly as the lazy readers request them).
+pub struct TieredReader {
+    inner: Arc<SourceInner>,
+}
+
+impl TieredReader {
+    /// Open a committed manifest with default options (no prefetch, no
+    /// throttles).
+    pub fn open(manifest_path: impl AsRef<Path>) -> ExecResult<Self> {
+        Self::open_with(manifest_path, TierReadOptions::default())
+    }
+
+    /// Open a committed manifest, verifying every referenced segment
+    /// file exists with exactly the recorded size (a truncated or
+    /// missing segment is a typed [`ExecError::Manifest`]).
+    pub fn open_with(
+        manifest_path: impl AsRef<Path>,
+        options: TierReadOptions,
+    ) -> ExecResult<Self> {
+        let manifest = TierManifest::load(&manifest_path)?;
+        let mut check = |path: &Path, want: u64, what: &str| -> ExecResult<()> {
+            let meta = std::fs::metadata(path)
+                .map_err(|e| io_err(format!("checking {what} segment {}", path.display()), e))?;
+            if meta.len() != want {
+                return Err(ExecError::Manifest(format!(
+                    "{what} segment {} holds {} bytes, manifest records {want} \
+                     (truncated or stale — re-run the placement execution)",
+                    path.display(),
+                    meta.len()
+                )));
+            }
+            Ok(())
+        };
+        check(&manifest.meta_file, manifest.meta_bytes, "meta")?;
+        for c in &manifest.classes {
+            check(&c.file, c.bytes, "class")?;
+        }
+        let mut throttles = [None; 3];
+        for (tier, th) in &options.throttles {
+            throttles[tier_index(*tier)] = Some(*th);
+        }
+        let inner = Arc::new(SourceInner {
+            manifest,
+            throttles,
+            stats: Arc::new(StatsCore::default()),
+            promoted: Mutex::new(HashMap::new()),
+            promoted_cv: Condvar::new(),
+            predictor: Mutex::new(None),
+        });
+        if options.prefetch {
+            let (tx, rx) = std::sync::mpsc::channel();
+            *inner.predictor.lock().unwrap() = Some(tx);
+            let weak = Arc::downgrade(&inner);
+            std::thread::Builder::new()
+                .name("mgr-tier-prefetch".into())
+                .spawn(move || prefetch_loop(weak, rx))
+                .map_err(|e| io_err("spawning prefetcher", e))?;
+        }
+        Ok(TieredReader { inner })
+    }
+
+    /// The committed manifest this reader serves.
+    pub fn manifest(&self) -> &TierManifest {
+        &self.inner.manifest
+    }
+
+    /// Total artifact size in bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.inner.manifest.total_bytes
+    }
+
+    /// Measured read counters (shared with every source and the
+    /// prefetcher).
+    pub fn stats(&self) -> TierStats {
+        self.inner.stats.snapshot()
+    }
+
+    /// A fresh seekable byte stream over the tiered artifact. Sources
+    /// share the counters, promoted classes, and prefetcher.
+    pub fn source(&self) -> TieredSource {
+        TieredSource {
+            inner: Arc::clone(&self.inner),
+            pos: 0,
+        }
+    }
+
+    /// Number of classes the prefetcher has promoted so far.
+    pub fn promoted_classes(&self) -> usize {
+        self.inner.promoted.lock().unwrap().len()
+    }
+
+    /// Block until class `k` is promoted (or `timeout` passes); returns
+    /// whether it is promoted. Test/determinism hook — retrieval never
+    /// needs it.
+    pub fn wait_promoted(&self, k: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.inner.promoted.lock().unwrap();
+        while !guard.contains_key(&k) {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self
+                .inner
+                .promoted_cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap();
+            guard = g;
+        }
+        true
+    }
+}
+
+/// A seekable byte stream over an executed placement: positions map to
+/// the original artifact's offsets, reads are served from whichever
+/// tier file holds the range (or from a promoted in-memory class). Feed
+/// it to [`crate::storage::ContainerReader`] /
+/// `mgr::api::OpenContainer::open` — retrieval walks the tier ladder
+/// without knowing it.
+pub struct TieredSource {
+    inner: Arc<SourceInner>,
+    pos: u64,
+}
+
+impl Clone for TieredSource {
+    fn clone(&self) -> Self {
+        TieredSource {
+            inner: Arc::clone(&self.inner),
+            pos: 0,
+        }
+    }
+}
+
+impl Read for TieredSource {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let total = self.inner.manifest.total_bytes;
+        if self.pos >= total || buf.is_empty() {
+            return Ok(0);
+        }
+        // the extent holding pos (extents are sorted and cover [0, total))
+        let extents = &self.inner.manifest.extents;
+        let i = match extents.binary_search_by(|e| e.offset.cmp(&self.pos)) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let e = &extents[i];
+        let within = self.pos - e.offset;
+        let n = buf.len().min((e.len - within) as usize);
+        let out = &mut buf[..n];
+        let served_class = match e.seg {
+            Seg::Class(k) => {
+                let promoted = self.inner.promoted.lock().unwrap().get(&k).cloned();
+                if let Some(bytes) = promoted {
+                    let start = (e.seg_off + within) as usize;
+                    out.copy_from_slice(&bytes[start..start + n]);
+                    self.inner.stats.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.inner.read_seg_range(e.seg, e.seg_off + within, out)?;
+                }
+                Some(k)
+            }
+            Seg::Meta => {
+                self.inner.read_seg_range(e.seg, e.seg_off + within, out)?;
+                None
+            }
+        };
+        if let Some(k) = served_class {
+            self.inner.predict(k);
+        }
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+impl Seek for TieredSource {
+    fn seek(&mut self, pos: SeekFrom) -> io::Result<u64> {
+        let total = self.inner.manifest.total_bytes as i128;
+        let target = match pos {
+            SeekFrom::Start(p) => p as i128,
+            SeekFrom::End(d) => total + d as i128,
+            SeekFrom::Current(d) => self.pos as i128 + d as i128,
+        };
+        if target < 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "seek before start of tiered source",
+            ));
+        }
+        self.pos = target as u64;
+        Ok(self.pos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::grid::{Hierarchy, Tensor};
+    use crate::storage::container::{ContainerHeader, ProgressiveWriter};
+    use crate::storage::mover::place_classes;
+    use crate::storage::tier::TierSpec;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "mgr_exec_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn write_container(dir: &Path, n: usize) -> (PathBuf, ContainerHeader) {
+        let field = Tensor::<f64>::from_fn(&[n, n], |idx| {
+            (idx[0] as f64 * 0.31).sin() + (idx[1] as f64 * 0.17).cos()
+        });
+        let mut w = ProgressiveWriter::<f64>::new(Hierarchy::uniform(field.shape()), Codec::Zlib);
+        let (bytes, header) = w.write(&field, 1e-3).unwrap();
+        let path = dir.join("t.mgr");
+        std::fs::write(&path, &bytes).unwrap();
+        (path, header)
+    }
+
+    fn three_roots(base: &Path) -> Vec<TierRoot> {
+        vec![
+            TierRoot::new(StorageTier::BurstBuffer, base.join("bb")),
+            TierRoot::new(StorageTier::ParallelFs, base.join("pfs")),
+            TierRoot::new(StorageTier::Archive, base.join("ar")),
+        ]
+    }
+
+    #[test]
+    fn tier_keys_roundtrip() {
+        for t in [
+            StorageTier::BurstBuffer,
+            StorageTier::ParallelFs,
+            StorageTier::Archive,
+        ] {
+            assert_eq!(tier_from_key(tier_key(t)), Some(t));
+        }
+        assert_eq!(tier_from_key("nvme"), None);
+    }
+
+    #[test]
+    fn layout_covers_every_byte_and_sums_classes() {
+        let base = tmp_dir("layout");
+        let (path, header) = write_container(&base, 17);
+        let layout = artifact_layout(&path).unwrap();
+        assert_eq!(layout.total_bytes, header.header_bytes() as u64 + header.payload_bytes());
+        let want: Vec<u64> = header.segments.iter().map(|s| s.bytes).collect();
+        assert_eq!(layout.class_bytes, want);
+        assert_eq!(class_sizes(&path).unwrap(), want);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn executed_segments_reassemble_bitwise() {
+        let base = tmp_dir("roundtrip");
+        let (path, _) = write_container(&base, 17);
+        let original = std::fs::read(&path).unwrap();
+        let sizes = class_sizes(&path).unwrap();
+        let tiers = vec![
+            TierSpec {
+                capacity: sizes[0] + sizes[1],
+                ..TierSpec::burst_buffer()
+            },
+            TierSpec::parallel_fs(),
+            TierSpec::archive(),
+        ];
+        let placement = place_classes(&sizes, &tiers);
+        let exec = TierExecutor::new(three_roots(&base)).unwrap();
+        let manifest = exec.execute(&placement, &path).unwrap();
+        assert_eq!(manifest.total_bytes as usize, original.len());
+
+        // reading the whole tiered source reproduces the artifact
+        let reader = TieredReader::open(TierManifest::path_for(&path)).unwrap();
+        let mut src = reader.source();
+        let mut back = Vec::new();
+        src.read_to_end(&mut back).unwrap();
+        assert_eq!(back, original);
+
+        // manifest parse/serialize roundtrip
+        let reparsed = TierManifest::from_json(&manifest.to_json()).unwrap();
+        assert_eq!(reparsed.total_bytes, manifest.total_bytes);
+        assert_eq!(reparsed.extents.len(), manifest.extents.len());
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn over_capacity_refused_before_any_move() {
+        let base = tmp_dir("overcap");
+        let (path, _) = write_container(&base, 17);
+        let sizes = class_sizes(&path).unwrap();
+        let tiny = vec![TierSpec {
+            capacity: 1,
+            ..TierSpec::archive()
+        }];
+        let placement = place_classes(&sizes, &tiny);
+        assert!(!placement.over_capacity.is_empty());
+        let roots = three_roots(&base);
+        let ar_root = roots[2].root.clone();
+        let exec = TierExecutor::new(roots).unwrap();
+        match exec.execute(&placement, &path) {
+            Err(ExecError::OverCapacity(classes)) => {
+                assert_eq!(classes, placement.over_capacity)
+            }
+            other => panic!("expected OverCapacity, got {other:?}"),
+        }
+        // nothing was created anywhere
+        assert_eq!(std::fs::read_dir(&ar_root).unwrap().count(), 0);
+        let s = exec.stats();
+        assert!(s.tiers.iter().all(|t| t.bytes_written == 0));
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn stats_json_has_all_tiers() {
+        let s = StatsCore::default().snapshot();
+        let doc = json::parse(&s.to_json()).unwrap();
+        assert_eq!(doc.get("tiers").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("prefetch_hits").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn seek_contract() {
+        let base = tmp_dir("seek");
+        let (path, _) = write_container(&base, 9);
+        let sizes = class_sizes(&path).unwrap();
+        let placement = place_classes(&sizes, &[TierSpec::archive()]);
+        let exec =
+            TierExecutor::new(vec![TierRoot::new(StorageTier::Archive, base.join("ar"))]).unwrap();
+        exec.execute(&placement, &path).unwrap();
+        let reader = TieredReader::open(TierManifest::path_for(&path)).unwrap();
+        let mut src = reader.source();
+        let end = src.seek(SeekFrom::End(0)).unwrap();
+        assert_eq!(end, reader.total_bytes());
+        assert_eq!(src.seek(SeekFrom::Start(4)).unwrap(), 4);
+        assert_eq!(src.seek(SeekFrom::Current(-2)).unwrap(), 2);
+        assert!(src.seek(SeekFrom::Current(-100)).is_err());
+        // read past end returns 0
+        src.seek(SeekFrom::End(10)).unwrap();
+        let mut buf = [0u8; 4];
+        assert_eq!(src.read(&mut buf).unwrap(), 0);
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

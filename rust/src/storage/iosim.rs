@@ -6,6 +6,8 @@
 //! 4 TB write at 4096 ranks costs tens of seconds — the scale of Fig 18's
 //! bars.
 
+use anyhow::{ensure, Result};
+
 /// A parallel filesystem shared by `ranks` MPI writers/readers.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelFs {
@@ -35,14 +37,34 @@ impl ParallelFs {
         self.meta_cost * (1.0 + (ranks as f64 / 1024.0).ln().max(0.0))
     }
 
-    /// Time for `ranks` processes to collectively write `bytes`.
-    pub fn write_time(&self, ranks: usize, bytes: f64) -> f64 {
-        self.meta(ranks) + bytes / self.effective_bw(ranks)
+    /// The division both cost formulas share used to return `inf`/NaN
+    /// whenever `ranks == 0` or a bandwidth field is zero/negative —
+    /// callers comparing plans would silently rank garbage. Errors
+    /// instead, naming the degenerate input.
+    fn checked_bw(&self, ranks: usize) -> Result<f64> {
+        ensure!(ranks >= 1, "I/O model needs at least one rank, got 0");
+        ensure!(
+            self.per_rank_bw > 0.0 && self.aggregate_bw > 0.0,
+            "non-positive bandwidth (per-rank {} B/s, aggregate {} B/s) makes transfer time \
+             undefined",
+            self.per_rank_bw,
+            self.aggregate_bw
+        );
+        Ok(self.effective_bw(ranks))
     }
 
-    /// Time for `ranks` processes to collectively read `bytes`.
-    pub fn read_time(&self, ranks: usize, bytes: f64) -> f64 {
-        self.meta(ranks) + bytes / (self.effective_bw(ranks) * 1.25)
+    /// Time for `ranks` processes to collectively write `bytes`. Errors
+    /// (instead of returning `inf`/NaN) when `ranks` is zero or a
+    /// bandwidth field is non-positive.
+    pub fn write_time(&self, ranks: usize, bytes: f64) -> Result<f64> {
+        Ok(self.meta(ranks) + bytes / self.checked_bw(ranks)?)
+    }
+
+    /// Time for `ranks` processes to collectively read `bytes`. Errors
+    /// (instead of returning `inf`/NaN) when `ranks` is zero or a
+    /// bandwidth field is non-positive.
+    pub fn read_time(&self, ranks: usize, bytes: f64) -> Result<f64> {
+        Ok(self.meta(ranks) + bytes / (self.checked_bw(ranks)? * 1.25))
     }
 }
 
@@ -54,18 +76,18 @@ mod tests {
     fn four_tb_write_is_tens_of_seconds() {
         // Fig 18 scale: 4 TB at 4096 ranks
         let fs = ParallelFs::alpine();
-        let t = fs.write_time(4096, 4e12);
+        let t = fs.write_time(4096, 4e12).unwrap();
         assert!((10.0..120.0).contains(&t), "write {t} s");
         // 512-rank read of the same data is slower per byte
-        let r = fs.read_time(512, 4e12);
+        let r = fs.read_time(512, 4e12).unwrap();
         assert!(r > t * 0.5);
     }
 
     #[test]
     fn fewer_bytes_less_time() {
         let fs = ParallelFs::alpine();
-        let full = fs.write_time(4096, 4e12);
-        let third = fs.write_time(4096, 4e12 * 0.34);
+        let full = fs.write_time(4096, 4e12).unwrap();
+        let third = fs.write_time(4096, 4e12 * 0.34).unwrap();
         assert!(third < full * 0.5, "I/O saving must track byte saving");
     }
 
@@ -73,8 +95,34 @@ mod tests {
     fn aggregate_ceiling_binds() {
         let fs = ParallelFs::alpine();
         // 16384 ranks would exceed the ceiling -> same bw as 4096
-        let a = fs.write_time(4096, 1e12) - fs.meta(4096);
-        let b = fs.write_time(16384, 1e12) - fs.meta(16384);
+        let a = fs.write_time(4096, 1e12).unwrap() - fs.meta(4096);
+        let b = fs.write_time(16384, 1e12).unwrap() - fs.meta(16384);
         assert!((a - b).abs() / a < 0.3);
+    }
+
+    #[test]
+    fn zero_ranks_is_a_typed_error_not_inf() {
+        // regression: ranks == 0 used to divide by effective_bw(0) == 0
+        // and hand the caller +inf — a "time" that silently wins or
+        // loses any plan comparison
+        let fs = ParallelFs::alpine();
+        let err = fs.write_time(0, 1e9).unwrap_err();
+        assert!(err.to_string().contains("rank"), "{err}");
+        assert!(fs.read_time(0, 1e9).is_err());
+    }
+
+    #[test]
+    fn zero_bandwidth_is_a_typed_error_not_nan() {
+        let broken = ParallelFs {
+            per_rank_bw: 0.0,
+            ..ParallelFs::alpine()
+        };
+        let err = broken.write_time(512, 1e9).unwrap_err();
+        assert!(err.to_string().contains("bandwidth"), "{err}");
+        let broken = ParallelFs {
+            aggregate_bw: -1.0,
+            ..ParallelFs::alpine()
+        };
+        assert!(broken.read_time(512, 1e9).is_err());
     }
 }

@@ -18,7 +18,13 @@
 //! a request intersects). The [`stream`] module adds the time axis: an
 //! `MGRT` log of per-step embedded containers, appended live under a
 //! crash-safe commit protocol with optional temporal delta coding
-//! between steps. Readers are shared-concurrency-safe: the
+//! between steps. The [`exec`] module makes the tier model *real*:
+//! a [`TierExecutor`] executes a [`Placement`] against actual
+//! directories standing in for the tiers (byte-range segment copies,
+//! measured — not modeled — movement counters, optional bandwidth
+//! throttles, a background class prefetcher), and a [`TieredReader`]
+//! serves the artifact back from the tier ladder coarse-first.
+//! Readers are shared-concurrency-safe: the
 //! decoded-class cache lives in [`cache`] (a byte-budgeted concurrent
 //! LRU with per-class decode guards) and every retrieval method takes
 //! `&self`, so one reader behind an `Arc` serves many threads with
@@ -28,6 +34,7 @@
 
 pub mod cache;
 pub mod container;
+pub mod exec;
 pub mod iosim;
 pub mod mover;
 pub mod reader;
@@ -37,6 +44,10 @@ pub mod tier;
 
 pub use cache::{CacheStats, ClassCache};
 pub use container::{ContainerHeader, ProgressiveReader, ProgressiveWriter, SegmentMeta};
+pub use exec::{
+    ExecError, TierExecutor, TierManifest, TierReadOptions, TierRoot, TierStats, TieredReader,
+    TieredSource, Throttle,
+};
 pub use iosim::ParallelFs;
 pub use mover::{place_classes, Placement};
 pub use reader::{ContainerReader, LazyReader, ReadSeek};

@@ -1,0 +1,204 @@
+//! Fault-injection sweep for tiered-storage execution: every induced
+//! failure must surface as a *typed* [`ExecError`], leave the source
+//! artifact untouched, leave no half-move behind (except the documented
+//! torn state of a simulated crash), and recover by simply re-running
+//! the execution — idempotently.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use mgr::api::{Dtype, Session};
+use mgr::grid::Tensor;
+use mgr::storage::exec::{
+    class_sizes, ExecError, ExecFault, TierExecutor, TierManifest, TierRoot, TieredReader,
+};
+use mgr::storage::{place_classes, StorageTier, TierSpec};
+
+fn tmp_base(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "mgr_fuzz_tier_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A refactored container on disk plus a placement that spreads its
+/// classes over all three tiers.
+fn fixture(base: &Path) -> (PathBuf, Vec<u8>, mgr::storage::Placement, Vec<TierRoot>) {
+    let session = Session::builder()
+        .shape(&[33, 33])
+        .dtype(Dtype::F64)
+        .build()
+        .unwrap();
+    let field = Tensor::<f64>::from_fn(&[33, 33], |idx| {
+        (idx[0] as f64 * 0.23).sin() * (idx[1] as f64 * 0.19).cos()
+    })
+    .into();
+    let r = session.refactor(&field).unwrap();
+    let path = base.join("f.mgr");
+    session.store_file(&r, &path).unwrap();
+    let original = std::fs::read(&path).unwrap();
+
+    let sizes = class_sizes(&path).unwrap();
+    let middle: u64 = sizes[1..sizes.len() - 1].iter().sum();
+    let specs = vec![
+        TierSpec {
+            capacity: sizes[0],
+            ..TierSpec::burst_buffer()
+        },
+        TierSpec {
+            capacity: middle,
+            ..TierSpec::parallel_fs()
+        },
+        TierSpec::archive(),
+    ];
+    let placement = place_classes(&sizes, &specs);
+    assert!(placement.over_capacity.is_empty());
+    let roots = vec![
+        TierRoot::new(StorageTier::BurstBuffer, base.join("bb")),
+        TierRoot::new(StorageTier::ParallelFs, base.join("pfs")),
+        TierRoot::new(StorageTier::Archive, base.join("ar")),
+    ];
+    (path, original, placement, roots)
+}
+
+fn dir_file_count(dir: &Path) -> usize {
+    std::fs::read_dir(dir).map(|d| d.count()).unwrap_or(0)
+}
+
+fn roundtrips(path: &Path, original: &[u8]) {
+    let reader = TieredReader::open(TierManifest::path_for(path)).unwrap();
+    let mut back = Vec::new();
+    reader.source().read_to_end(&mut back).unwrap();
+    assert_eq!(back, original, "tiered stream must match the artifact");
+}
+
+#[test]
+fn deleted_tier_root_is_a_typed_io_error_and_rerun_recovers() {
+    let base = tmp_base("delroot");
+    let (path, original, placement, roots) = fixture(&base);
+    let pfs_dir = roots[1].root.clone();
+    let exec = TierExecutor::new(roots).unwrap();
+
+    // the tier vanishes between wiring and execution (unmounted mid-move)
+    std::fs::remove_dir_all(&pfs_dir).unwrap();
+    let err = exec.execute(&placement, &path).unwrap_err();
+    assert!(matches!(err, ExecError::Io { .. }), "got {err:?}");
+    assert!(err.to_string().contains("segment"), "{err}");
+    assert!(std::error::Error::source(&err).is_some(), "chain must survive");
+
+    // the source artifact is untouched and no half-move was left behind
+    assert_eq!(std::fs::read(&path).unwrap(), original);
+    assert_eq!(dir_file_count(&base.join("bb")), 0);
+    assert_eq!(dir_file_count(&base.join("ar")), 0);
+    assert!(!TierManifest::path_for(&path).exists());
+
+    // recovery: restore the root and simply re-run
+    std::fs::create_dir_all(&pfs_dir).unwrap();
+    exec.execute(&placement, &path).unwrap();
+    roundtrips(&path, &original);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn truncated_or_missing_segment_is_typed_and_reexecution_repairs() {
+    let base = tmp_base("trunc");
+    let (path, original, placement, roots) = fixture(&base);
+    let exec = TierExecutor::new(roots).unwrap();
+    let manifest = exec.execute(&placement, &path).unwrap();
+
+    // truncate the finest class's segment file behind the manifest's back
+    let victim = &manifest.classes.last().unwrap().file;
+    let bytes = std::fs::read(victim).unwrap();
+    assert!(bytes.len() > 1);
+    std::fs::write(victim, &bytes[..bytes.len() - 1]).unwrap();
+    let err = TieredReader::open(TierManifest::path_for(&path)).unwrap_err();
+    assert!(matches!(err, ExecError::Manifest(_)), "got {err:?}");
+    assert!(err.to_string().contains("truncated or stale"), "{err}");
+
+    // a *missing* segment is typed too
+    std::fs::remove_file(victim).unwrap();
+    let err = TieredReader::open(TierManifest::path_for(&path)).unwrap_err();
+    assert!(matches!(err, ExecError::Io { .. }), "got {err:?}");
+
+    // recovery is one idempotent re-run over the stale files
+    exec.execute(&placement, &path).unwrap();
+    roundtrips(&path, &original);
+    assert_eq!(std::fs::read(&path).unwrap(), original);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn read_only_destination_is_typed_and_leaves_no_partial_move() {
+    use std::os::unix::fs::PermissionsExt;
+    let base = tmp_base("rodir");
+    let (path, original, placement, roots) = fixture(&base);
+    let ar_dir = roots[2].root.clone();
+    let exec = TierExecutor::new(roots).unwrap();
+
+    std::fs::set_permissions(&ar_dir, std::fs::Permissions::from_mode(0o555)).unwrap();
+    // privileged runs (root in CI containers) ignore directory modes —
+    // probe, and skip the scenario when the fault cannot be induced
+    let probe = ar_dir.join(".probe");
+    if std::fs::File::create(&probe).is_ok() {
+        let _ = std::fs::remove_file(&probe);
+        let _ = std::fs::set_permissions(&ar_dir, std::fs::Permissions::from_mode(0o755));
+        eprintln!("skipping: running with privileges that bypass read-only dirs");
+        std::fs::remove_dir_all(&base).ok();
+        return;
+    }
+
+    let err = exec.execute(&placement, &path).unwrap_err();
+    assert!(matches!(err, ExecError::Io { .. }), "got {err:?}");
+    assert!(err.to_string().contains("creating segment file"), "{err}");
+
+    // source untouched; the files created on the writable tiers before
+    // the failure were cleaned up
+    assert_eq!(std::fs::read(&path).unwrap(), original);
+    assert_eq!(dir_file_count(&base.join("bb")), 0);
+    assert_eq!(dir_file_count(&base.join("pfs")), 0);
+    assert!(!TierManifest::path_for(&path).exists());
+
+    // recovery: restore write permission and re-run
+    std::fs::set_permissions(&ar_dir, std::fs::Permissions::from_mode(0o755)).unwrap();
+    exec.execute(&placement, &path).unwrap();
+    roundtrips(&path, &original);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn crash_before_manifest_commit_is_recoverable_by_rerunning() {
+    let base = tmp_base("crash");
+    let (path, original, placement, roots) = fixture(&base);
+    let exec = TierExecutor::new(roots).unwrap();
+
+    // simulate a crash after every segment copy but before the commit
+    let err = exec
+        .execute_faulted(&placement, &path, ExecFault::BeforeManifestCommit)
+        .unwrap_err();
+    assert!(matches!(err, ExecError::Interrupted(_)), "got {err:?}");
+
+    // the torn state a real crash leaves: segment files exist, but the
+    // manifest does not reference them (it was never committed)
+    assert!(!TierManifest::path_for(&path).exists());
+    let torn: usize = [base.join("bb"), base.join("pfs"), base.join("ar")]
+        .iter()
+        .map(|d| dir_file_count(d.as_path()))
+        .sum();
+    assert!(torn > 0, "crash must leave the copied segments behind");
+    assert_eq!(std::fs::read(&path).unwrap(), original, "source untouched");
+
+    // recovery: a plain re-run overwrites the torn files and commits
+    let manifest = exec.execute(&placement, &path).unwrap();
+    assert_eq!(manifest.total_bytes as usize, original.len());
+    roundtrips(&path, &original);
+
+    // and re-running again over committed state is idempotent
+    exec.execute(&placement, &path).unwrap();
+    roundtrips(&path, &original);
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -1,0 +1,373 @@
+//! Acceptance battery for tiered-storage **execution** (`storage::exec`):
+//! the bytes a `Placement` plans must actually move, retrieval through
+//! the tier ladder must be bit-identical to direct container retrieval
+//! for every dtype × codec, the prefetcher must cut upgrade latency
+//! without changing results, over-capacity placements must be refused
+//! with a typed error and no partial moves, and the mover's *modeled*
+//! retrieval ordering must agree with the executor's *measured* one.
+
+use std::collections::HashSet;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use mgr::api::{AnyTensor, Dtype, Error, Fidelity, OpenContainer, Refactored, Session};
+use mgr::compress::Codec;
+use mgr::grid::Tensor;
+use mgr::storage::exec::{
+    class_sizes, ExecError, TierExecutor, TierManifest, TierReadOptions, TierRoot, TieredReader,
+    Throttle,
+};
+use mgr::storage::{place_classes, StorageTier, TierSpec};
+
+fn tmp_base(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "mgr_tier_exec_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn field_for(dtype: Dtype, n: usize) -> AnyTensor {
+    match dtype {
+        Dtype::F32 => Tensor::<f32>::from_fn(&[n, n], |idx| {
+            (idx[0] as f32 * 0.31).sin() + (idx[1] as f32 * 0.17).cos()
+        })
+        .into(),
+        Dtype::F64 => Tensor::<f64>::from_fn(&[n, n], |idx| {
+            (idx[0] as f64 * 0.31).sin() + (idx[1] as f64 * 0.17).cos()
+        })
+        .into(),
+    }
+}
+
+fn three_roots(base: &Path) -> Vec<TierRoot> {
+    vec![
+        TierRoot::new(StorageTier::BurstBuffer, base.join("bb")),
+        TierRoot::new(StorageTier::ParallelFs, base.join("pfs")),
+        TierRoot::new(StorageTier::Archive, base.join("ar")),
+    ]
+}
+
+/// Capacity-limit the fast tiers so the greedy placement spreads the
+/// classes across all three: class 0 exactly fills the burst buffer,
+/// the middle classes exactly fill the parallel fs, and the finest
+/// class overflows to the archive.
+fn spread_specs(sizes: &[u64]) -> Vec<TierSpec> {
+    assert!(sizes.len() >= 3, "need at least three classes to spread");
+    let middle: u64 = sizes[1..sizes.len() - 1].iter().sum();
+    vec![
+        TierSpec {
+            capacity: sizes[0],
+            ..TierSpec::burst_buffer()
+        },
+        TierSpec {
+            capacity: middle,
+            ..TierSpec::parallel_fs()
+        },
+        TierSpec::archive(),
+    ]
+}
+
+fn refactor_to_file(
+    base: &Path,
+    dtype: Dtype,
+    codec: Codec,
+    n: usize,
+) -> (Session, Refactored, PathBuf) {
+    let session = Session::builder()
+        .shape(&[n, n])
+        .dtype(dtype)
+        .codec(codec)
+        .build()
+        .unwrap();
+    let r = session.refactor(&field_for(dtype, n)).unwrap();
+    let path = base.join("f.mgr");
+    session.store_file(&r, &path).unwrap();
+    (session, r, path)
+}
+
+#[test]
+fn executed_bytes_match_the_plan_per_tier_exactly() {
+    let base = tmp_base("bytes");
+    let (_session, _r, path) = refactor_to_file(&base, Dtype::F64, Codec::Zlib, 33);
+    let sizes = class_sizes(&path).unwrap();
+    let specs = spread_specs(&sizes);
+    let placement = place_classes(&sizes, &specs);
+    assert!(placement.over_capacity.is_empty());
+    let used: HashSet<StorageTier> = placement.assignment.iter().copied().collect();
+    assert_eq!(used.len(), 3, "plan must spread: {:?}", placement.assignment);
+
+    let exec = TierExecutor::new(three_roots(&base)).unwrap();
+    let manifest = exec.execute(&placement, &path).unwrap();
+
+    // the measured per-tier write counters equal the plan EXACTLY
+    let stats = exec.stats();
+    for tier in [
+        StorageTier::BurstBuffer,
+        StorageTier::ParallelFs,
+        StorageTier::Archive,
+    ] {
+        let planned: u64 = placement
+            .assignment
+            .iter()
+            .zip(&placement.bytes)
+            .filter(|(t, _)| **t == tier)
+            .map(|(_, b)| *b)
+            .sum();
+        assert_eq!(stats.tier(tier).bytes_written, planned, "{tier:?}");
+    }
+    // ... and so do the segment files on disk
+    for c in &manifest.classes {
+        let on_disk = std::fs::metadata(&c.file).unwrap().len();
+        assert_eq!(on_disk, c.bytes, "class {}", c.class);
+        assert_eq!(c.bytes, placement.bytes[c.class]);
+    }
+    let meta_on_disk = std::fs::metadata(&manifest.meta_file).unwrap().len();
+    assert_eq!(meta_on_disk, manifest.meta_bytes);
+    assert_eq!(stats.meta_bytes, manifest.meta_bytes);
+    assert!(TierManifest::path_for(&path).exists());
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn tier_ladder_retrieval_is_bit_identical_for_every_dtype_and_codec() {
+    for dtype in [Dtype::F32, Dtype::F64] {
+        for codec in [Codec::Zlib, Codec::HuffRle] {
+            let base = tmp_base(&format!("ladder_{dtype:?}_{}", codec.name()));
+            let (session, r, path) = refactor_to_file(&base, dtype, codec, 33);
+            let sizes = class_sizes(&path).unwrap();
+            let placement = place_classes(&sizes, &spread_specs(&sizes));
+            let exec = TierExecutor::new(three_roots(&base)).unwrap();
+            exec.execute(&placement, &path).unwrap();
+
+            let reader = TieredReader::open(TierManifest::path_for(&path)).unwrap();
+            let tiered = OpenContainer::open(reader.source()).unwrap();
+            let direct = OpenContainer::open_file(&path).unwrap();
+            for keep in 1..=r.nclasses() {
+                let a = tiered.retrieve(Fidelity::Classes(keep)).unwrap();
+                let b = direct.retrieve(Fidelity::Classes(keep)).unwrap();
+                assert_eq!(
+                    a.tensor(),
+                    b.tensor(),
+                    "dtype {dtype:?} codec {} keep {keep}",
+                    codec.name()
+                );
+            }
+            // the in-memory session path agrees too
+            let full = tiered.retrieve(Fidelity::All).unwrap();
+            assert_eq!(full.tensor(), &session.retrieve(&r, Fidelity::All).unwrap());
+            std::fs::remove_dir_all(&base).ok();
+        }
+    }
+}
+
+#[test]
+fn prefetcher_cuts_upgrade_latency_without_changing_results() {
+    let base = tmp_base("prefetch");
+    let (_session, _r, path) = refactor_to_file(&base, Dtype::F64, Codec::Zlib, 33);
+    let sizes = class_sizes(&path).unwrap();
+    // class 0 on the (unthrottled) burst buffer, everything else on the
+    // archive, whose reads we throttle hard
+    let specs = vec![
+        TierSpec {
+            capacity: sizes[0],
+            ..TierSpec::burst_buffer()
+        },
+        TierSpec::archive(),
+    ];
+    let placement = place_classes(&sizes, &specs);
+    assert!(placement.over_capacity.is_empty());
+    let roots = vec![
+        TierRoot::new(StorageTier::BurstBuffer, base.join("bb")),
+        TierRoot::new(StorageTier::Archive, base.join("ar")),
+    ];
+    let exec = TierExecutor::new(roots).unwrap();
+    exec.execute(&placement, &path).unwrap();
+
+    let slow = Throttle {
+        read_bw: f64::INFINITY,
+        write_bw: f64::INFINITY,
+        latency: 0.08,
+    };
+    let manifest_path = TierManifest::path_for(&path);
+    let opts = |prefetch: bool| TierReadOptions {
+        prefetch,
+        throttles: vec![(StorageTier::Archive, slow)],
+    };
+
+    // cold: no prefetcher — the upgrade pays the archive latency
+    let plain = TieredReader::open_with(&manifest_path, opts(false)).unwrap();
+    let plain_c = OpenContainer::open(plain.source()).unwrap();
+    let coarse_plain = plain_c.retrieve(Fidelity::Classes(1)).unwrap();
+    let t0 = Instant::now();
+    let up_plain = coarse_plain.upgrade(Fidelity::Classes(2)).unwrap();
+    let cold = t0.elapsed();
+
+    // warm: touching class 0 schedules promotion of class 1; wait for
+    // it (determinism hook), then the upgrade is served from memory
+    let pre = TieredReader::open_with(&manifest_path, opts(true)).unwrap();
+    let pre_c = OpenContainer::open(pre.source()).unwrap();
+    let coarse_pre = pre_c.retrieve(Fidelity::Classes(1)).unwrap();
+    assert!(
+        pre.wait_promoted(1, Duration::from_secs(20)),
+        "prefetcher never promoted class 1"
+    );
+    let t0 = Instant::now();
+    let up_pre = coarse_pre.upgrade(Fidelity::Classes(2)).unwrap();
+    let warm = t0.elapsed();
+
+    // promotion never changes results
+    let direct = OpenContainer::open_file(&path).unwrap();
+    let want = direct.retrieve(Fidelity::Classes(2)).unwrap();
+    assert_eq!(up_pre.tensor(), want.tensor());
+    assert_eq!(up_plain.tensor(), want.tensor());
+    assert_eq!(coarse_pre.tensor(), coarse_plain.tensor());
+
+    // ... and it strictly reduces the measured upgrade latency: the
+    // cold path sleeps >= the archive latency at least once, the warm
+    // path never touches the archive
+    let s = pre.stats();
+    assert!(s.prefetch_hits > 0, "upgrade was not served from memory");
+    assert!(s.prefetched_classes >= 1);
+    assert!(
+        warm < cold,
+        "prefetched upgrade ({warm:?}) not faster than cold ({cold:?})"
+    );
+    assert!(warm.as_secs_f64() < slow.latency, "warm upgrade hit the archive");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn over_capacity_is_a_typed_error_with_no_partial_moves() {
+    let base = tmp_base("overcap");
+    // a session whose only tier cannot hold anything
+    let session = Session::builder()
+        .shape(&[17, 17])
+        .tiers(vec![TierSpec {
+            capacity: 1,
+            ..TierSpec::archive()
+        }])
+        .build()
+        .unwrap();
+    let r = session.refactor(&field_for(Dtype::F64, 17)).unwrap();
+    let roots = three_roots(&base);
+    let root_dirs: Vec<PathBuf> = roots.iter().map(|t| t.root.clone()).collect();
+    let exec = TierExecutor::new(roots).unwrap();
+    let path = base.join("f.mgr");
+
+    let err = session.store_tiered(&r, &path, &exec).unwrap_err();
+    match &err {
+        Error::Tier(ExecError::OverCapacity(classes)) => {
+            assert!(!classes.is_empty(), "over-capacity classes must be named")
+        }
+        other => panic!("expected Error::Tier(OverCapacity), got {other:?}"),
+    }
+
+    // the artifact was stored, but no segment byte moved and no
+    // manifest was committed
+    assert!(path.exists());
+    for d in &root_dirs {
+        assert_eq!(std::fs::read_dir(d).unwrap().count(), 0, "{}", d.display());
+    }
+    assert!(!TierManifest::path_for(&path).exists());
+    let stats = exec.stats();
+    assert!(stats.tiers.iter().all(|t| t.bytes_written == 0));
+    assert_eq!(stats.meta_bytes, 0);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn store_tiered_executes_and_roundtrips_through_the_facade() {
+    let base = tmp_base("facade");
+    let session = Session::builder().shape(&[17, 17]).build().unwrap();
+    let r = session.refactor(&field_for(Dtype::F64, 17)).unwrap();
+    let exec = TierExecutor::new(three_roots(&base)).unwrap();
+    let path = base.join("f.mgr");
+    let (placement, manifest) = session.store_tiered(&r, &path, &exec).unwrap();
+    assert_eq!(placement.assignment.len(), r.nclasses());
+    assert_eq!(manifest.nclasses, r.nclasses());
+
+    let reader = TieredReader::open(TierManifest::path_for(&path)).unwrap();
+    let round = OpenContainer::open(reader.source())
+        .unwrap()
+        .retrieve(Fidelity::All)
+        .unwrap();
+    assert_eq!(round.tensor(), &session.retrieve(&r, Fidelity::All).unwrap());
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn shard_artifacts_execute_and_reassemble_bitwise() {
+    let base = tmp_base("shard");
+    let session = Session::builder().shape(&[33, 33]).build().unwrap();
+    let sharded = session.refactor_sharded(&field_for(Dtype::F64, 33), 2).unwrap();
+    let path = base.join("f.mgrs");
+    sharded.store_file(&path).unwrap();
+    let original = std::fs::read(&path).unwrap();
+
+    let sizes = class_sizes(&path).unwrap();
+    assert!(sizes.iter().sum::<u64>() > 0);
+    let placement = place_classes(&sizes, &spread_specs(&sizes));
+    let exec = TierExecutor::new(three_roots(&base)).unwrap();
+    let manifest = exec.execute(&placement, &path).unwrap();
+    assert_eq!(manifest.total_bytes as usize, original.len());
+
+    let reader = TieredReader::open(TierManifest::path_for(&path)).unwrap();
+    let mut back = Vec::new();
+    reader.source().read_to_end(&mut back).unwrap();
+    assert_eq!(back, original, "tiered shard stream must be bit-identical");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn modeled_retrieval_ordering_matches_measured_ordering() {
+    let base = tmp_base("model");
+    let (_session, _r, path) = refactor_to_file(&base, Dtype::F64, Codec::Zlib, 65);
+    let sizes = class_sizes(&path).unwrap();
+    let specs = spread_specs(&sizes);
+    let placement = place_classes(&sizes, &specs);
+    let exec = TierExecutor::new(three_roots(&base)).unwrap();
+    exec.execute(&placement, &path).unwrap();
+    let manifest_path = TierManifest::path_for(&path);
+
+    // the MODEL: retrieval_time is monotone in fidelity, and full
+    // fidelity costs strictly more than the coarsest class
+    let nclasses = sizes.len();
+    let modeled: Vec<f64> = (1..=nclasses)
+        .map(|keep| placement.retrieval_time(&specs, keep).unwrap())
+        .collect();
+    for w in modeled.windows(2) {
+        assert!(w[1] >= w[0] - 1e-12, "model must be monotone in fidelity");
+    }
+    assert!(modeled[nclasses - 1] > modeled[0]);
+
+    // the MEASUREMENT: wall-clock seconds the executor's reader spent
+    // in tier files for the same two fidelities (min of 5, fresh
+    // reader each time so counters start at zero)
+    let measure = |keep: usize| -> (f64, u64) {
+        let mut best = f64::INFINITY;
+        let mut bytes = 0u64;
+        for _ in 0..5 {
+            let reader = TieredReader::open(&manifest_path).unwrap();
+            let c = OpenContainer::open(reader.source()).unwrap();
+            c.retrieve(Fidelity::Classes(keep)).unwrap();
+            let s = reader.stats();
+            best = best.min(s.tiers.iter().map(|t| t.read_s).sum::<f64>());
+            bytes = s.tiers.iter().map(|t| t.bytes_read).sum::<u64>();
+        }
+        (best, bytes)
+    };
+    let (lo_s, lo_b) = measure(1);
+    let (hi_s, hi_b) = measure(nclasses);
+    assert!(hi_b > lo_b, "full fidelity must read more bytes: {hi_b} vs {lo_b}");
+    assert!(
+        hi_s > lo_s,
+        "measured ordering disagrees with the model: keep=1 took {lo_s:.6}s, \
+         keep=all took {hi_s:.6}s"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -1,0 +1,208 @@
+#!/usr/bin/env python3
+"""Performance-regression report over two harness runs.
+
+Compares a BASELINE and a CURRENT ``BENCH_harness.json`` (any
+``BenchReport`` document works: ``{"name": …, "threads": …, "rows":
+[…]}``), matching rows by their ``(kernel, variant, dtype, shape,
+axis)`` key and reporting the per-row delta of the compared metric
+(default ``median_s``; lower is better). A row regresses when
+
+    current > baseline * (1 + tolerance)
+
+and its baseline is above the noise floor ``min_median_s`` (timings
+below the floor are dominated by timer jitter, not by the code under
+test). Rows present on only one side are listed as NEW / MISSING but
+never fail the run — coverage changes are deliberate, regressions are
+not. Exits 1 when any row regresses, so CI can gate on it. Stdlib only.
+
+Usage:
+    regression_report.py BASELINE CURRENT [--tolerance 0.35]
+        [--tolerance-file tools/harness_tolerance.json]
+        [--metric median_s] [--out report.md]
+    regression_report.py --self-test
+
+The tolerance file holds ``{"default": 0.35, "per_kernel": {"tier":
+0.6}, "min_median_s": 1e-4}`` — per-kernel entries override the
+default (wall-clock-noisy mixes get looser gates).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_TOLERANCE = 0.35
+DEFAULT_FLOOR = 1e-4
+
+
+def row_key(row):
+    shape = "x".join(str(n) for n in row.get("shape", []))
+    axis = row.get("axis")
+    return (
+        row.get("kernel", "?"),
+        row.get("variant", "?"),
+        row.get("dtype", "?"),
+        shape,
+        "-" if axis is None else str(axis),
+    )
+
+
+def load_rows(path):
+    doc = json.loads(Path(path).read_text())
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: not a bench report (no 'rows' array)")
+    table = {}
+    for row in rows:
+        table[row_key(row)] = row
+    return table
+
+
+class Tolerances:
+    def __init__(self, default=DEFAULT_TOLERANCE, per_kernel=None, floor=DEFAULT_FLOOR):
+        self.default = default
+        self.per_kernel = per_kernel or {}
+        self.floor = floor
+
+    @classmethod
+    def from_file(cls, path):
+        doc = json.loads(Path(path).read_text())
+        return cls(
+            default=float(doc.get("default", DEFAULT_TOLERANCE)),
+            per_kernel={k: float(v) for k, v in doc.get("per_kernel", {}).items()},
+            floor=float(doc.get("min_median_s", DEFAULT_FLOOR)),
+        )
+
+    def for_kernel(self, kernel):
+        return self.per_kernel.get(kernel, self.default)
+
+
+def compare(baseline, current, tol, metric="median_s"):
+    """Return (report_lines, violations, new_keys, missing_keys)."""
+    lines = []
+    violations = []
+    for key in sorted(baseline.keys() & current.keys()):
+        base = baseline[key].get(metric)
+        cur = current[key].get(metric)
+        name = "/".join(key)
+        if not isinstance(base, (int, float)) or not isinstance(cur, (int, float)):
+            lines.append(f"| {name} | - | - | - | SKIP (no {metric}) |")
+            continue
+        delta = (cur - base) / base * 100.0 if base > 0 else 0.0
+        limit = tol.for_kernel(key[0])
+        below_floor = base < tol.floor
+        regressed = not below_floor and base > 0 and cur > base * (1.0 + limit)
+        if regressed:
+            status = f"FAIL (> +{limit * 100.0:.0f}%)"
+            violations.append((name, base, cur, delta))
+        elif below_floor:
+            status = "ok (below noise floor)"
+        else:
+            status = "ok"
+        lines.append(f"| {name} | {base:.6g} | {cur:.6g} | {delta:+.1f}% | {status} |")
+    new = sorted(current.keys() - baseline.keys())
+    missing = sorted(baseline.keys() - current.keys())
+    return lines, violations, new, missing
+
+
+def render(args, lines, violations, new, missing, tol):
+    out = [
+        "# Workload-mix regression report",
+        "",
+        f"baseline: `{args.baseline}`  ",
+        f"current: `{args.current}`  ",
+        f"metric: `{args.metric}` (lower is better), default tolerance "
+        f"+{tol.default * 100.0:.0f}%, noise floor {tol.floor:g}s",
+        "",
+        f"| row (kernel/variant/dtype/shape/axis) | baseline | current | delta | status |",
+        "|---|---|---|---|---|",
+    ]
+    out.extend(lines)
+    for key in new:
+        out.append(f"| {'/'.join(key)} | - | present | - | NEW |")
+    for key in missing:
+        out.append(f"| {'/'.join(key)} | present | - | - | MISSING |")
+    out.append("")
+    if violations:
+        out.append(f"**{len(violations)} regression(s):**")
+        for name, base, cur, delta in violations:
+            out.append(f"- {name}: {base:.6g}s -> {cur:.6g}s ({delta:+.1f}%)")
+    else:
+        out.append("**No regressions.**")
+    out.append("")
+    return "\n".join(out)
+
+
+def self_test():
+    """Exercise the comparison logic without any input files."""
+    mk = lambda med: {
+        "kernel": "tier",
+        "variant": "execute",
+        "dtype": "f64",
+        "shape": [33, 33],
+        "axis": None,
+        "median_s": med,
+    }
+    tol = Tolerances(default=0.2, per_kernel={"tier": 0.5}, floor=1e-4)
+    key = row_key(mk(1.0))
+
+    # within tolerance -> no violation
+    _, v, _, _ = compare({key: mk(1.0)}, {key: mk(1.4)}, tol)
+    assert not v, "tier tolerance 0.5 must allow +40%"
+    # past tolerance -> violation
+    _, v, _, _ = compare({key: mk(1.0)}, {key: mk(1.6)}, tol)
+    assert len(v) == 1, "+60% must fail the 0.5 tier gate"
+    # below the noise floor -> never a violation
+    _, v, _, _ = compare({key: mk(1e-6)}, {key: mk(1e-3)}, tol)
+    assert not v, "noise-floor timings must not fail"
+    # per-kernel override falls back to the default
+    other = row_key({"kernel": "refactor", "variant": "x", "dtype": "f64", "shape": [9]})
+    row = dict(mk(1.0), kernel="refactor")
+    _, v, _, _ = compare({other: row}, {other: dict(row, median_s=1.3)}, tol)
+    assert len(v) == 1, "+30% must fail the 0.2 default gate"
+    # coverage changes are reported, not failed
+    _, v, new, missing = compare({key: mk(1.0)}, {}, tol)
+    assert not v and not new and missing == [key]
+    print("self-test: ok")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", nargs="?", help="baseline BENCH_harness.json")
+    ap.add_argument("current", nargs="?", help="current BENCH_harness.json")
+    ap.add_argument("--tolerance", type=float, default=None, help="relative slowdown gate")
+    ap.add_argument("--tolerance-file", default=None, help="JSON tolerance config")
+    ap.add_argument("--metric", default="median_s", help="row metric to compare")
+    ap.add_argument("--out", default=None, help="also write the markdown report here")
+    ap.add_argument("--self-test", action="store_true", help="run built-in checks and exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        self_test()
+        return 0
+    if not args.baseline or not args.current:
+        ap.error("BASELINE and CURRENT are required (or use --self-test)")
+
+    if args.tolerance_file:
+        tol = Tolerances.from_file(args.tolerance_file)
+    else:
+        tol = Tolerances()
+    if args.tolerance is not None:
+        tol.default = args.tolerance
+
+    baseline = load_rows(args.baseline)
+    current = load_rows(args.current)
+    lines, violations, new, missing = compare(baseline, current, tol, args.metric)
+    text = render(args, lines, violations, new, missing, tol)
+    print(text)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+
+    if violations:
+        print(f"regression_report: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
