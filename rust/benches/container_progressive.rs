@@ -67,6 +67,7 @@ fn main() {
                 gbps: m.gbps(raw_bytes),
                 speedup: None,
                 bytes: Some(payload.len() as u64),
+                ..Default::default()
             });
 
             let m = bench_auto(
@@ -88,6 +89,7 @@ fn main() {
                 gbps: m.gbps(raw_bytes),
                 speedup: None,
                 bytes: Some(payload.len() as u64),
+                ..Default::default()
             });
         }
 
@@ -118,6 +120,7 @@ fn main() {
             gbps: m.gbps(field.nbytes()),
             speedup: None,
             bytes: Some(container.nbytes() as u64),
+            ..Default::default()
         });
 
         let m = bench_auto(&format!("container read ({})", codec.name()), 0.3, || {
@@ -135,6 +138,7 @@ fn main() {
             gbps: m.gbps(field.nbytes()),
             speedup: None,
             bytes: Some(container.nbytes() as u64),
+            ..Default::default()
         });
         println!(
             "container total: {} bytes over {} raw ({:.1}x); header {} B\n",

@@ -12,15 +12,26 @@
 //!    comparison (vectorized/fused/batched vs per-node branching /
 //!    unfused / gathered), both sides serial to isolate design effects.
 //!
+//! 3. **autotuned vs fixed default** — the calibration pass
+//!    (`simgpu::calibrate`) picks fork configurations per kernel family
+//!    with the §3.2 rank-prune-measure loop; its winners are compared
+//!    against the fixed default policy.
+//!
 //! Every measurement is appended to a machine-readable report
 //! (`BENCH_kernels.json`, override with `MGR_BENCH_OUT`) so later PRs
-//! have a regression baseline — see `docs/performance.md`.
+//! have a regression baseline — see `docs/performance.md`. Rows carry
+//! roofline accounting: `bytes_moved` (nominal compulsory traffic) and
+//! `pct_peak` (achieved GB/s over the measured stream peak recorded in
+//! the report's `peak_gbps`).
+//!
+//! `MGR_KERNEL_PRESET=small` runs a reduced grid for CI smoke checks.
 //!
 //! Run with `cargo bench --bench fig13_kernels`. The IPK closure solves
 //! in place and reuses its buffer across iterations; magnitudes drift but
 //! per-iteration arithmetic is identical, so timings are unaffected.
 
 use mgr::refactor::{axis, DimOps};
+use mgr::simgpu::calibrate;
 use mgr::util::bench::{bench_auto, report, BenchReport, Measurement, ReportRow};
 use mgr::util::par;
 use mgr::util::rng::Rng;
@@ -39,18 +50,21 @@ fn push_row(
     bytes: usize,
     speedup: Option<f64>,
 ) {
-    rep.push(ReportRow {
-        kernel: kernel.to_string(),
-        variant: variant.to_string(),
-        dtype: dtype.to_string(),
-        shape: shape.to_vec(),
-        axis: ax,
-        median_s: m.median_s,
-        mad_rel: m.mad_rel,
-        gbps: m.gbps(bytes),
-        speedup,
-        bytes: None,
-    });
+    let peak = rep.peak_gbps;
+    rep.push(
+        ReportRow {
+            kernel: kernel.to_string(),
+            variant: variant.to_string(),
+            dtype: dtype.to_string(),
+            shape: shape.to_vec(),
+            axis: ax,
+            median_s: m.median_s,
+            mad_rel: m.mad_rel,
+            speedup,
+            ..Default::default()
+        }
+        .with_roofline(bytes as u64, peak),
+    );
 }
 
 /// Serial-vs-parallel sweep for one dtype and grid size: every kernel
@@ -141,18 +155,20 @@ fn serial_vs_parallel<T: Scalar>(n: usize, dtype: &str, rep: &mut BenchReport) {
             ("serial-total", totals[0], None),
             ("parallel-total", totals[1], Some(family)),
         ] {
-            rep.push(ReportRow {
-                kernel: kernel.to_string(),
-                variant: variant.to_string(),
-                dtype: dtype.to_string(),
-                shape: shape.to_vec(),
-                axis: None,
-                median_s: t,
-                mad_rel: 0.0,
-                gbps: total_bytes as f64 / t / 1e9,
-                speedup,
-                bytes: None,
-            });
+            let peak = rep.peak_gbps;
+            rep.push(
+                ReportRow {
+                    kernel: kernel.to_string(),
+                    variant: variant.to_string(),
+                    dtype: dtype.to_string(),
+                    shape: shape.to_vec(),
+                    axis: None,
+                    median_s: t,
+                    speedup,
+                    ..Default::default()
+                }
+                .with_roofline(total_bytes as u64, peak),
+            );
         }
     }
 }
@@ -307,17 +323,72 @@ fn ops_c(xs: &[f64]) -> DimOps<f64> {
     DimOps::new(&fine)
 }
 
+/// §3.2 closed on the host: run the calibration pass (rank the fork
+/// configuration space analytically, profile the top-3 plus the fixed
+/// default against the real kernels) and emit default-vs-autotuned rows.
+fn autotuned_vs_default(sizes: &[usize], rep: &mut BenchReport) {
+    println!("\n== autotuned vs fixed-default fork configurations (f64) ==");
+    let cal = calibrate::calibrate::<f64>(sizes);
+    for k in &cal.kernels {
+        let name = k.class.name().to_uppercase();
+        println!(
+            "  {name:<5} {:>9} elems: default {:.3} ms -> tuned {:.3} ms \
+             ({:.2}x, {:.1} GB/s, {:.0}% of peak, {} of {} configs profiled)",
+            k.elems,
+            k.default_time * 1e3,
+            k.chosen_time * 1e3,
+            k.speedup(),
+            k.gbps(),
+            k.pct_peak(cal.peak_gbps),
+            k.profiled,
+            k.candidates_ranked,
+        );
+        for (variant, t, speedup) in [
+            ("default", k.default_time, None),
+            ("autotuned", k.chosen_time, Some(k.speedup())),
+        ] {
+            let peak = rep.peak_gbps;
+            rep.push(
+                ReportRow {
+                    kernel: name.clone(),
+                    variant: variant.to_string(),
+                    dtype: "f64".to_string(),
+                    shape: vec![k.elems],
+                    median_s: t,
+                    speedup,
+                    ..Default::default()
+                }
+                .with_roofline(k.bytes_moved, peak),
+            );
+        }
+    }
+}
+
 fn main() {
+    let small = matches!(
+        std::env::var("MGR_KERNEL_PRESET").as_deref(),
+        Ok("small")
+    );
     let mut rep = BenchReport::new("fig13_kernels");
+    rep.peak_gbps = Some(calibrate::measure_peak_gbps());
+    println!(
+        "achievable read+write stream peak: {:.1} GB/s (roofline denominator)",
+        rep.peak_gbps.unwrap()
+    );
     println!(
         "== Fig 13 (host): serial vs parallel kernels, {} threads available ==",
         par::threads()
     );
-    for &n in &[33usize, 65, 129, 193] {
+    let sizes: &[usize] = if small { &[33] } else { &[33, 65, 129, 193] };
+    for &n in sizes {
         serial_vs_parallel::<f64>(n, "f64", &mut rep);
     }
-    serial_vs_parallel::<f32>(193, "f32", &mut rep);
-    optimized_vs_baseline(129, &mut rep);
+    if !small {
+        serial_vs_parallel::<f32>(193, "f32", &mut rep);
+    }
+    optimized_vs_baseline(if small { 33 } else { 129 }, &mut rep);
+    let cal_sizes: &[usize] = if small { &[1 << 16] } else { &[1 << 18, 1 << 21] };
+    autotuned_vs_default(cal_sizes, &mut rep);
 
     let path = std::env::var("MGR_BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".into());
     rep.write(&path).expect("write bench report");

@@ -84,6 +84,7 @@ fn row(
         gbps: m.gbps(bytes),
         speedup: None,
         bytes: Some(bytes as u64),
+        ..Default::default()
     }
 }
 

@@ -35,6 +35,7 @@ fn row(
         gbps: m.gbps(raw_bytes),
         speedup: None,
         bytes: Some(bytes_read),
+        ..Default::default()
     }
 }
 

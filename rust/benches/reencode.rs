@@ -32,6 +32,7 @@ fn row(
         gbps: m.gbps(in_bytes),
         speedup: None,
         bytes: Some(out_bytes),
+        ..Default::default()
     }
 }
 

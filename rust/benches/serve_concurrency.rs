@@ -154,6 +154,7 @@ fn main() {
                 gbps,
                 speedup: scale,
                 bytes: Some(level.total_bytes),
+                ..Default::default()
             });
         }
     }

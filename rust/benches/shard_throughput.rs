@@ -30,6 +30,7 @@ fn row(
         gbps: m.gbps(raw_bytes),
         speedup: None,
         bytes: Some(bytes),
+        ..Default::default()
     }
 }
 

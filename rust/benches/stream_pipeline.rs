@@ -121,6 +121,7 @@ fn main() {
         gbps: (NSTEPS * step_bytes) as f64 / sim_wall / 1e9,
         speedup: None,
         bytes: Some((NSTEPS * step_bytes) as u64),
+        ..Default::default()
     });
     rep.push(ReportRow {
         kernel: "stream".into(),
@@ -133,6 +134,7 @@ fn main() {
         gbps: (NSTEPS * step_bytes) as f64 / pipeline_wall / 1e9,
         speedup: Some(pipe_rate / sim_rate),
         bytes: Some(stats.peak_resident_bytes as u64),
+        ..Default::default()
     });
     rep.push(ReportRow {
         kernel: "stream".into(),
@@ -145,6 +147,7 @@ fn main() {
         gbps: 0.0,
         speedup: Some(stats.delta_ratio()),
         bytes: Some(stats.total_bytes()),
+        ..Default::default()
     });
     match rep.write("BENCH_stream.json") {
         Ok(()) => println!("wrote BENCH_stream.json ({} rows)", rep.rows.len()),

@@ -510,6 +510,7 @@ pub struct SessionBuilder {
     workers: usize,
     threads: Option<usize>,
     par_threshold: Option<usize>,
+    autotune: bool,
     /// Deferred configuration error (builder methods cannot fail in
     /// place); surfaced as [`enum@Error::Build`] by `build()`.
     poisoned: Option<String>,
@@ -533,6 +534,7 @@ impl Default for SessionBuilder {
                 .unwrap_or(4),
             threads: None,
             par_threshold: None,
+            autotune: false,
             poisoned: None,
         }
     }
@@ -600,6 +602,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Run the host calibration pass ([`crate::simgpu::calibrate`])
+    /// during `build()`: short measured runs pick fork configurations
+    /// per kernel family for this session's dtype and data volume, and
+    /// install them in the process-global tuned registry. Explicitly set
+    /// knobs ([`SessionBuilder::threads`] / `--threads`, env vars)
+    /// bypass the installed table at lookup time — see `DESIGN.md`.
+    pub fn autotune(mut self, autotune: bool) -> Self {
+        self.autotune = autotune;
+        self
+    }
+
     /// Preset shape/dtype/codec/error-bound from an existing container,
     /// so a consumer can build a matching session without re-stating the
     /// producer's configuration.
@@ -636,6 +649,12 @@ impl SessionBuilder {
                 "shape {shape:?} is not refactorable: every dimension must be 2^k + 1, k >= 1"
             ))
         })?;
+        if max == 0 {
+            return Err(Error::Build(format!(
+                "shape {shape:?} has no refactorable dimension (every axis has size 1); \
+                 at least one axis must be 2^k + 1 with k >= 1"
+            )));
+        }
         let nlevels = self.nlevels.unwrap_or(max);
         if !(1..=max).contains(&nlevels) {
             return Err(Error::Build(format!(
@@ -659,6 +678,17 @@ impl SessionBuilder {
         }
         if let Some(t) = self.par_threshold {
             crate::util::par::set_par_threshold(t);
+        }
+        if self.autotune {
+            let elems: usize = shape.iter().product();
+            match self.dtype {
+                Dtype::F32 => {
+                    crate::simgpu::calibrate::calibrate::<f32>(&[elems]);
+                }
+                Dtype::F64 => {
+                    crate::simgpu::calibrate::calibrate::<f64>(&[elems]);
+                }
+            }
         }
 
         let hierarchy = Hierarchy::uniform_with_levels(&shape, Some(nlevels));

@@ -138,7 +138,15 @@ impl Hierarchy {
     pub fn uniform_with_levels(shape: &[usize], nlevels: Option<usize>) -> Self {
         let coords = shape
             .iter()
-            .map(|&n| (0..n).map(|i| i as f64 / (n - 1) as f64).collect())
+            .map(|&n| {
+                if n == 1 {
+                    // degenerate axis: a single node at the origin (the
+                    // 0/0 division below would produce NaN)
+                    vec![0.0]
+                } else {
+                    (0..n).map(|i| i as f64 / (n - 1) as f64).collect()
+                }
+            })
             .collect();
         Self::new(shape, coords, nlevels)
     }
@@ -212,16 +220,29 @@ impl Hierarchy {
 
 /// Largest number of decompose steps a shape supports, or `None` if some
 /// dimension is not of size `2^k + 1`.
+///
+/// Size-1 axes are *degenerate*: they carry no odd nodes, ride through
+/// every level as an identity factor of the tensor-product operators
+/// (see [`crate::refactor::DimOps::new`]), and do not constrain the level
+/// count. A shape whose axes are all size 1 supports zero decompose
+/// steps (`Some(0)`), which downstream level-count validation rejects
+/// with a typed error rather than a panic.
 pub fn max_levels(shape: &[usize]) -> Option<usize> {
+    if shape.is_empty() {
+        return None;
+    }
     let mut min = usize::MAX;
     for &n in shape {
+        if n == 1 {
+            continue;
+        }
         if n < 3 || !(n - 1).is_power_of_two() {
             return None;
         }
         min = min.min((n - 1).trailing_zeros() as usize);
     }
     if min == usize::MAX {
-        None
+        Some(0)
     } else {
         Some(min)
     }
@@ -341,6 +362,33 @@ pub fn zero_view<T: Scalar>(dst: &mut [T], full: &[usize], s: usize) {
     }
 }
 
+/// Fused `dst = src` + [`zero_view`]: copy the full buffer and zero the
+/// stride-`s` view positions in the same pass. Builds the coefficient
+/// field for the correction solve with one traversal of the level buffer
+/// instead of two (a pure memory-traffic fusion — values written are
+/// identical to the copy-then-zero pair).
+pub fn copy_with_zero_view<T: Scalar>(src: &[T], full: &[usize], s: usize, dst: &mut [T]) {
+    let n: usize = full.iter().product();
+    assert_eq!(src.len(), n);
+    assert_eq!(dst.len(), n);
+    assert!(s >= 1);
+    let d = full.len();
+    let inner_n = full[d - 1];
+    let outer: usize = full[..d - 1].iter().product();
+    let mut idx = vec![0usize; d - 1];
+    for o in 0..outer {
+        let base = o * inner_n;
+        let drow = &mut dst[base..base + inner_n];
+        drow.copy_from_slice(&src[base..base + inner_n]);
+        if idx.iter().all(|&i| i % s == 0) {
+            for j in (0..inner_n).step_by(s) {
+                drow[j] = T::ZERO;
+            }
+        }
+        bump(&mut idx, &full[..d - 1]);
+    }
+}
+
 #[inline]
 fn bump(idx: &mut [usize], shape: &[usize]) {
     for d in (0..idx.len()).rev() {
@@ -363,6 +411,39 @@ mod tests {
         assert_eq!(max_levels(&[6]), None);
         assert_eq!(max_levels(&[2]), None);
         assert_eq!(max_levels(&[3, 3, 3]), Some(1));
+        // degenerate size-1 axes don't constrain the level count
+        assert_eq!(max_levels(&[1, 65]), Some(6));
+        assert_eq!(max_levels(&[5, 1, 9]), Some(2));
+        assert_eq!(max_levels(&[1, 1]), Some(0));
+        assert_eq!(max_levels(&[]), None);
+        assert_eq!(max_levels(&[1, 6]), None);
+    }
+
+    #[test]
+    fn degenerate_axis_hierarchy() {
+        let h = Hierarchy::uniform(&[1, 9]);
+        assert_eq!(h.nlevels(), 3);
+        assert_eq!(h.level_shape(0), vec![1, 9]);
+        assert_eq!(h.level_shape(3), vec![1, 2]);
+        assert!(h.coords()[0][0].is_finite(), "no NaN coordinate for n=1");
+        assert_eq!(h.level_coords(1)[0], vec![0.0]);
+    }
+
+    #[test]
+    fn copy_with_zero_view_matches_copy_then_zero() {
+        for full in [vec![5usize, 9], vec![9], vec![3, 5, 5], vec![1, 5]] {
+            let t = Tensor::from_fn(&full, |idx| {
+                (idx.iter().fold(0usize, |a, &i| a * 100 + i) + 1) as f64
+            });
+            let n = t.len();
+            for s in [1usize, 2, 4] {
+                let mut want = t.data().to_vec();
+                zero_view(&mut want, &full, s);
+                let mut got = vec![-1.0f64; n];
+                copy_with_zero_view(t.data(), &full, s, &mut got);
+                assert_eq!(got, want, "full={full:?} s={s}");
+            }
+        }
     }
 
     #[test]

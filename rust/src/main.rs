@@ -272,8 +272,22 @@ fn parse_upgrade_from(args: &Args) -> Result<Option<usize>> {
 
 fn run(args: &Args) -> Result<()> {
     args.apply_parallelism()?;
+    // --autotune on any data subcommand: calibrate fork configurations
+    // for both precisions before the real work starts (the `autotune`
+    // subcommand prints the full table instead)
+    if args.has("autotune") && args.subcommand.as_deref() != Some("autotune") {
+        let rep = mgr::simgpu::calibrate::calibrate::<f64>(&[1 << 18]);
+        mgr::simgpu::calibrate::calibrate::<f32>(&[1 << 18]);
+        println!(
+            "autotune: calibrated {} kernel configurations per precision \
+             (stream peak {:.1} GB/s)",
+            rep.kernels.len(),
+            rep.peak_gbps
+        );
+    }
     match args.subcommand.as_deref() {
         Some("info") => info(args),
+        Some("autotune") => autotune_cmd(args),
         Some("refactor") => refactor(args),
         Some("stream") => stream(args),
         Some("retrieve") => retrieve(args),
@@ -290,6 +304,9 @@ fn run(args: &Args) -> Result<()> {
                  usage: mgr <subcommand> [options]\n\n\
                  subcommands:\n\
                  \x20 info                      artifact + device summary\n\
+                 \x20 autotune   [--dtype f32|f64] [--elems N]\n\
+                 \x20            calibrate per-kernel fork configurations on this machine\n\
+                 \x20            (rank candidates analytically, measure the top 3 + default)\n\
                  \x20 refactor   [--shape NxNxN --input grayscott|random --dtype f32|f64]\n\
                  \x20            [--out f.mgr --eb 1e-3 --codec zlib|huff-rle]\n\
                  \x20            [--blocks P [--axis A] | --blocks P0,P1,... --out f.mgrs]\n\
@@ -322,11 +339,60 @@ fn run(args: &Args) -> Result<()> {
                  global options (any subcommand):\n\
                  \x20 --threads N        intra-kernel worker count (0 = all cores)\n\
                  \x20 --par-threshold N  min elements before kernels fork\n\
-                 \x20                    (0 = restore default, 1 = always fork)\n"
+                 \x20                    (0 = restore default, 1 = always fork)\n\
+                 \x20 --autotune         calibrate fork configurations before running\n\
+                 \x20                    (explicit --threads/--par-threshold win over\n\
+                 \x20                    calibrated values)\n"
             );
             Ok(())
         }
     }
+}
+
+/// `mgr autotune`: run the host calibration pass and print the winning
+/// fork configuration per kernel family, with roofline positions
+/// (achieved GB/s against the measured stream peak).
+fn autotune_cmd(args: &Args) -> Result<()> {
+    use mgr::simgpu::calibrate;
+    let dtype: Dtype = args.get_or("dtype", "f64").parse()?;
+    let elems = args.get_usize("elems", 0)?;
+    let sizes: Vec<usize> = if elems > 0 {
+        vec![elems]
+    } else {
+        vec![1 << 18, 1 << 21]
+    };
+    let rep = match dtype {
+        Dtype::F32 => calibrate::calibrate::<f32>(&sizes),
+        Dtype::F64 => calibrate::calibrate::<f64>(&sizes),
+    };
+    println!(
+        "achievable read+write stream peak: {:.1} GB/s ({} candidate configs ranked per kernel)",
+        rep.peak_gbps,
+        rep.kernels.first().map_or(0, |k| k.candidates_ranked)
+    );
+    println!(
+        "{:<7} {:>10} {:>9} {:>11} {:>11} {:>8} {:>9} {:>8}",
+        "kernel", "elems", "threads", "default ms", "tuned ms", "speedup", "GB/s", "of peak"
+    );
+    for k in &rep.kernels {
+        println!(
+            "{:<7} {:>10} {:>9} {:>11.3} {:>11.3} {:>7.2}x {:>9.2} {:>7.1}%",
+            k.class.name(),
+            k.elems,
+            k.chosen.threads,
+            k.default_time * 1e3,
+            k.chosen_time * 1e3,
+            k.speedup(),
+            k.gbps(),
+            k.pct_peak(rep.peak_gbps)
+        );
+    }
+    println!(
+        "installed {} configurations for {dtype} in the process-global tuned registry \
+         (explicit --threads/--par-threshold bypass them)",
+        rep.kernels.len()
+    );
+    Ok(())
 }
 
 fn info(args: &Args) -> Result<()> {

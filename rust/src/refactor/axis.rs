@@ -22,8 +22,8 @@
 //! [`crate::util::par::workers_for`].
 
 use crate::refactor::DimOps;
-use crate::util::par::{self, SendPtr, Task};
-use crate::util::Scalar;
+use crate::util::par::{self, KernelClass, SendPtr, Task};
+use crate::util::{simd, Scalar};
 
 /// Decompose `shape` relative to `axis` into `(outer, m, inner)` loop bounds.
 #[inline]
@@ -44,7 +44,7 @@ pub fn upsample<T: Scalar>(
     r: &[T],
     dst: &mut [T],
 ) {
-    let workers = par::workers_for(dst.len());
+    let workers = par::workers_for_kernel(KernelClass::Gpk, T::BYTES, dst.len());
     upsample_with(src, src_shape, axis, r, dst, workers);
 }
 
@@ -110,12 +110,9 @@ fn upsample_units<T: Scalar>(
             let hi = &src[sb + (i + 1) * inner..sb + (i + 2) * inner];
             let (even_row, rest) = dst_chunk[off..off + 2 * inner].split_at_mut(inner);
             even_row.copy_from_slice(lo);
-            let odd_row = rest;
-            let ri = r[i];
-            for e in 0..inner {
-                // fma(r, hi, fma(-r, lo, lo))
-                odd_row[e] = ri.mul_add(hi[e], (-ri).mul_add(lo[e], lo[e]));
-            }
+            // fma(r, hi, fma(-r, lo, lo)) per element, SIMD off the
+            // stride-1 fast path in util::simd (bit-identical)
+            simd::interp_row(lo, hi, r[i], rest);
             off += 2 * inner;
         } else {
             dst_chunk[off..off + inner].copy_from_slice(&src[sb + a * inner..sb + mc * inner]);
@@ -142,7 +139,7 @@ pub fn masstrans<T: Scalar>(
     ops: &DimOps<T>,
     dst: &mut [T],
 ) {
-    let workers = par::workers_for(src.len());
+    let workers = par::workers_for_kernel(KernelClass::Lpk, T::BYTES, src.len());
     masstrans_with(src, src_shape, axis, ops, dst, workers);
 }
 
@@ -212,12 +209,7 @@ fn masstrans_rows<T: Scalar>(
         let r2 = &src[sb + j * inner..][..inner];
         let r3 = &src[sb + (j + 1).min(m - 1) * inner..][..inner];
         let r4 = &src[sb + (j + 2).min(m - 1) * inner..][..inner];
-        for e in 0..inner {
-            let acc = t0.mul_add(r0[e], t1 * r1[e]);
-            let acc = t2.mul_add(r2[e], acc);
-            let acc = t3.mul_add(r3[e], acc);
-            row[e] = t4.mul_add(r4[e], acc);
-        }
+        simd::five_tap_row([t0, t1, t2, t3, t4], [r0, r1, r2, r3, r4], row);
     }
 }
 
@@ -228,7 +220,7 @@ fn masstrans_rows<T: Scalar>(
 /// with every `inner` lane carrying an independent load vector — the
 /// paper's `O(n²)` batched-vector concurrency maps to SIMD lanes here.
 pub fn thomas<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, ops: &DimOps<T>) {
-    let workers = par::workers_for(buf.len());
+    let workers = par::workers_for_kernel(KernelClass::Ipk, T::BYTES, buf.len());
     thomas_with(buf, shape, axis, ops, workers);
 }
 
@@ -285,26 +277,17 @@ fn thomas_serial<T: Scalar>(buf: &mut [T], outer: usize, m: usize, inner: usize,
     for o in 0..outer {
         let b = o * m * inner;
         // forward
-        for e in 0..inner {
-            buf[b + e] = buf[b + e] * ops.denom[0];
-        }
+        simd::scale_row(&mut buf[b..b + inner], ops.denom[0]);
         for i in 1..m {
             let (prev, cur) = buf[b + (i - 1) * inner..].split_at_mut(inner);
             let cur = &mut cur[..inner];
-            let s = ops.sub[i];
-            let d = ops.denom[i];
-            for e in 0..inner {
-                cur[e] = ((-s).mul_add(prev[e], cur[e])) * d;
-            }
+            simd::sweep_fwd_row(prev, cur, ops.sub[i], ops.denom[i]);
         }
         // backward
         for i in (0..m - 1).rev() {
             let (cur, next) = buf[b + i * inner..].split_at_mut(inner);
             let cur = &mut cur[..inner];
-            let c = ops.cp[i];
-            for e in 0..inner {
-                cur[e] = (-c).mul_add(next[e], cur[e]);
-            }
+            simd::sweep_bwd_row(&next[..inner], cur, ops.cp[i]);
         }
     }
 }
@@ -324,28 +307,22 @@ unsafe fn thomas_cols<T: Scalar>(
     elen: usize,
     ops: &DimOps<T>,
 ) {
+    // Row segments [e0, e0+elen) at consecutive axis indices never
+    // overlap (rows are `inner` apart), so shared/mutable slice pairs
+    // over distinct rows are sound.
     // forward
-    for e in e0..e0 + elen {
-        let v = base.add(e);
-        *v = *v * ops.denom[0];
-    }
+    let seed = std::slice::from_raw_parts_mut(base.add(e0), elen);
+    simd::scale_row(seed, ops.denom[0]);
     for i in 1..m {
-        let s = ops.sub[i];
-        let d = ops.denom[i];
-        for e in e0..e0 + elen {
-            let prev = *base.add((i - 1) * inner + e);
-            let cur = base.add(i * inner + e);
-            *cur = ((-s).mul_add(prev, *cur)) * d;
-        }
+        let prev = std::slice::from_raw_parts(base.add((i - 1) * inner + e0), elen);
+        let cur = std::slice::from_raw_parts_mut(base.add(i * inner + e0), elen);
+        simd::sweep_fwd_row(prev, cur, ops.sub[i], ops.denom[i]);
     }
     // backward
     for i in (0..m - 1).rev() {
-        let c = ops.cp[i];
-        for e in e0..e0 + elen {
-            let next = *base.add((i + 1) * inner + e);
-            let cur = base.add(i * inner + e);
-            *cur = (-c).mul_add(next, *cur);
-        }
+        let next = std::slice::from_raw_parts(base.add((i + 1) * inner + e0), elen);
+        let cur = std::slice::from_raw_parts_mut(base.add(i * inner + e0), elen);
+        simd::sweep_bwd_row(next, cur, ops.cp[i]);
     }
 }
 
@@ -362,7 +339,7 @@ pub fn upsample_apply_last<T: Scalar>(
     buf: &mut [T],
     sign: T,
 ) {
-    let workers = par::workers_for(buf.len());
+    let workers = par::workers_for_kernel(KernelClass::Gpk, T::BYTES, buf.len());
     upsample_apply_last_with(src, src_shape, r, buf, sign, workers);
 }
 
@@ -383,15 +360,12 @@ pub fn upsample_apply_last_with<T: Scalar>(
     let outer: usize = src_shape[..d - 1].iter().product();
     debug_assert_eq!(buf.len(), outer * mf);
     par::for_slab_chunks(src, buf, outer, mc, mf, workers, |_, len, src_chunk, chunk| {
+        // interpolant scratch, one allocation per task (not per line)
+        let mut tmp = vec![T::ZERO; a];
         for o in 0..len {
             let s = &src_chunk[o * mc..(o + 1) * mc];
             let b = &mut chunk[o * mf..(o + 1) * mf];
-            for i in 0..a {
-                b[2 * i] = sign.mul_add(s[i], b[2 * i]);
-                let interp = r[i].mul_add(s[i + 1], (-r[i]).mul_add(s[i], s[i]));
-                b[2 * i + 1] = sign.mul_add(interp, b[2 * i + 1]);
-            }
-            b[2 * a] = sign.mul_add(s[a], b[2 * a]);
+            simd::upsample_apply_row(s, r, b, sign, &mut tmp);
         }
     });
 }
@@ -410,10 +384,7 @@ pub fn coefficients_axis<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize,
             let (lo_part, rest) = buf[b + 2 * j * inner..].split_at_mut(inner);
             let (odd, hi_part) = rest.split_at_mut(inner);
             let hi = &hi_part[..inner];
-            for e in 0..inner {
-                let interp = ri.mul_add(hi[e], (-ri).mul_add(lo_part[e], lo_part[e]));
-                odd[e] -= interp;
-            }
+            simd::interp_sub_row(lo_part, hi, ri, odd);
         }
     }
 }
@@ -429,10 +400,7 @@ pub fn interpolate_axis<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize, 
             let (lo_part, rest) = buf[b + 2 * j * inner..].split_at_mut(inner);
             let (odd, hi_part) = rest.split_at_mut(inner);
             let hi = &hi_part[..inner];
-            for e in 0..inner {
-                let interp = ri.mul_add(hi[e], (-ri).mul_add(lo_part[e], lo_part[e]));
-                odd[e] += interp;
-            }
+            simd::interp_add_row(lo_part, hi, ri, odd);
         }
     }
 }
@@ -445,6 +413,31 @@ pub fn zero_even_axis<T: Scalar>(buf: &mut [T], shape: &[usize], axis: usize) {
         let b = o * m * inner;
         for i in (0..m).step_by(2) {
             buf[b + i * inner..b + (i + 1) * inner].fill(T::ZERO);
+        }
+    }
+}
+
+/// Fused `dst = src` + [`zero_even_axis`]: build the single-axis
+/// coefficient field in one pass over the buffer instead of a full copy
+/// followed by a zeroing sweep (values written are identical).
+pub fn copy_with_zero_even_axis<T: Scalar>(
+    src: &[T],
+    shape: &[usize],
+    axis: usize,
+    dst: &mut [T],
+) {
+    let (outer, m, inner) = axis_split(shape, axis);
+    debug_assert_eq!(src.len(), outer * m * inner);
+    debug_assert_eq!(dst.len(), src.len());
+    for o in 0..outer {
+        let b = o * m * inner;
+        for i in 0..m {
+            let row = &mut dst[b + i * inner..b + (i + 1) * inner];
+            if i % 2 == 0 {
+                row.fill(T::ZERO);
+            } else {
+                row.copy_from_slice(&src[b + i * inner..b + (i + 1) * inner]);
+            }
         }
     }
 }
@@ -466,9 +459,7 @@ pub fn add_to_even_axis<T: Scalar>(
         for i in 0..mc {
             let row = &mut buf[b + 2 * i * inner..b + (2 * i + 1) * inner];
             let zrow = &z[zb + i * inner..zb + (i + 1) * inner];
-            for e in 0..inner {
-                row[e] = sign.mul_add(zrow[e], row[e]);
-            }
+            simd::axpy_row(row, zrow, sign);
         }
     }
 }
@@ -665,6 +656,25 @@ mod tests {
                         assert_eq!(serial, parallel, "apply_last {shape:?} w{w}");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_with_zero_even_matches_copy_then_zero() {
+        let mut rng = Rng::new(41);
+        for shape in [vec![5usize, 3], vec![9], vec![2, 5, 4]] {
+            for axis in 0..shape.len() {
+                if shape[axis] % 2 == 0 {
+                    continue;
+                }
+                let n: usize = shape.iter().product();
+                let src: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let mut want = src.clone();
+                zero_even_axis(&mut want, &shape, axis);
+                let mut got = vec![-7.0f64; n];
+                copy_with_zero_even_axis(&src, &shape, axis, &mut got);
+                assert_eq!(got, want, "{shape:?} ax{axis}");
             }
         }
     }

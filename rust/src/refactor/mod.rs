@@ -59,9 +59,36 @@ pub struct DimOps<T> {
 
 impl<T: Scalar> DimOps<T> {
     /// Build from one dimension's level coordinates (length `m = 2a+1`).
+    ///
+    /// `m == 1` is the degenerate (size-1) axis: it carries no odd nodes
+    /// and no intervals, so every per-dimension operator collapses to the
+    /// 1×1 identity factor of the tensor product — upsample copies the
+    /// single row, mass-trans passes it through (`k[2] = [1]`), and the
+    /// Thomas solve is `z = f` (`denom = [1]`, no off-diagonals).
     pub fn new(xs: &[f64]) -> Self {
         let m = xs.len();
-        assert!(m >= 3 && m % 2 == 1, "level view size must be odd >= 3");
+        assert!(
+            m == 1 || (m >= 3 && m % 2 == 1),
+            "level view size must be 1 or odd >= 3"
+        );
+        if m == 1 {
+            return DimOps {
+                r: Vec::new(),
+                h: Vec::new(),
+                wl: vec![T::ZERO],
+                wr: vec![T::ZERO],
+                sub: vec![T::ZERO],
+                cp: vec![T::ZERO],
+                denom: vec![T::ONE],
+                k: [
+                    vec![T::ZERO],
+                    vec![T::ZERO],
+                    vec![T::ONE],
+                    vec![T::ZERO],
+                    vec![T::ZERO],
+                ],
+            };
+        }
         let a = (m - 1) / 2;
         let conv = |v: f64| T::from_f64(v);
 
@@ -198,6 +225,26 @@ mod tests {
         assert!((ops.wl[1] - 0.5).abs() < 1e-12);
         // coarse mass diag for h=0.5: [1/6, 1/3, 1/6]
         assert!((ops.denom[0] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dimops_degenerate_identity() {
+        let ops: DimOps<f64> = DimOps::new(&[0.0]);
+        assert_eq!(ops.fine_len(), 1);
+        assert_eq!(ops.coarse_len(), 1);
+        assert_eq!(ops.k[2], vec![1.0]);
+        assert_eq!(ops.denom, vec![1.0]);
+        // whole-kernel identity: a size-1 axis passes rows through exactly
+        let v = [3.5f64, -1.25];
+        let mut out = [0.0; 2];
+        axis::masstrans(&v, &[1, 2], 0, &ops, &mut out);
+        assert_eq!(out, v);
+        let mut z = v;
+        axis::thomas(&mut z, &[1, 2], 0, &ops);
+        assert_eq!(z, v);
+        let mut up = [0.0; 2];
+        axis::upsample(&v, &[1, 2], 0, &ops.r, &mut up);
+        assert_eq!(up, v);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! chunking is bit-identical to serial execution, so step results do not
 //! depend on the worker count.
 
-use crate::grid::{gather_view, scatter_add_view, scatter_view, zero_view};
+use crate::grid::{copy_with_zero_view, gather_view, scatter_add_view, scatter_view};
 use crate::refactor::axis;
 use crate::refactor::DimOps;
 use crate::util::Scalar;
@@ -61,29 +61,37 @@ fn build_interp_partial<T: Scalar>(
     let clen: usize = cshape.iter().product();
     gather_view(buf, shape, 2, &mut ws.coarse[..clen]);
 
-    // ping-pong per-dimension upsampling over dims 0..d-1 (the last dim
+    // Ping-pong per-dimension upsampling over dims 0..d-1 (the last dim
     // stays coarse): after processing dim k, dims 0..=k are fine-sized.
+    // The first pass reads `ws.coarse` directly and the destination
+    // parity is chosen so the final pass lands in `ws.a` — no seeding
+    // copy in, no near-full-size copy back out.
     let mut cur_shape = cshape;
-    ws.a[..clen].copy_from_slice(&ws.coarse[..clen]);
-    let mut in_a = true;
-    for k in 0..d - 1 {
+    let passes = d - 1;
+    let mut to_a = passes % 2 == 1; // destination of the next pass
+    for k in 0..passes {
         let mut out_shape = cur_shape.clone();
         out_shape[k] = shape[k];
         let out_len: usize = out_shape.iter().product();
         let in_len: usize = cur_shape.iter().product();
-        let (src, dst): (&[T], &mut [T]) = if in_a {
-            (&ws.a[..in_len], &mut ws.b[..out_len])
-        } else {
+        let (src, dst): (&[T], &mut [T]) = if k == 0 {
+            if to_a {
+                (&ws.coarse[..in_len], &mut ws.a[..out_len])
+            } else {
+                (&ws.coarse[..in_len], &mut ws.b[..out_len])
+            }
+        } else if to_a {
             (&ws.b[..in_len], &mut ws.a[..out_len])
+        } else {
+            (&ws.a[..in_len], &mut ws.b[..out_len])
         };
         axis::upsample(src, &cur_shape, k, &ops[k].r, dst);
         cur_shape = out_shape;
-        in_a = !in_a;
+        to_a = !to_a;
     }
-    if !in_a {
-        let plen: usize = cur_shape.iter().product();
-        let (a, b) = (&mut ws.a, &ws.b);
-        a[..plen].copy_from_slice(&b[..plen]);
+    if passes == 0 {
+        // 1-D: the partial interpolant *is* the coarse grid
+        ws.a[..clen].copy_from_slice(&ws.coarse[..clen]);
     }
     cur_shape
 }
@@ -96,40 +104,35 @@ fn build_correction<'w, T: Scalar>(
     ws: &'w mut Workspace<T>,
 ) -> (&'w [T], Vec<usize>) {
     let d = shape.len();
-    // LPK cascade: dim-by-dim mass-trans, ping-pong cf -> a -> b -> ...
+    // LPK cascade: dim-by-dim mass-trans, ping-pong cf -> {a,b} -> ...
+    // Destination parity is chosen so the final mass-trans lands in
+    // `ws.a` for any `d` — the old even-`d` copy-back is fused away and
+    // the Thomas cascade runs in place on the holding buffer.
     let mut cur_shape = shape.to_vec();
-    let mut src_is_cf = true;
-    let mut in_a = false; // next output goes to a
+    let mut to_a = d % 2 == 1; // destination of the next pass
     for k in 0..d {
         let mut out_shape = cur_shape.clone();
         out_shape[k] = (cur_shape[k] + 1) / 2;
         let out_len: usize = out_shape.iter().product();
         let in_len: usize = cur_shape.iter().product();
         {
-            let (src, dst): (&[T], &mut [T]) = if src_is_cf {
-                (&ws.cf[..in_len], &mut ws.a[..out_len])
-            } else if in_a {
+            let (src, dst): (&[T], &mut [T]) = if k == 0 {
+                if to_a {
+                    (&ws.cf[..in_len], &mut ws.a[..out_len])
+                } else {
+                    (&ws.cf[..in_len], &mut ws.b[..out_len])
+                }
+            } else if to_a {
                 (&ws.b[..in_len], &mut ws.a[..out_len])
             } else {
                 (&ws.a[..in_len], &mut ws.b[..out_len])
             };
             axis::masstrans(src, &cur_shape, k, &ops[k], dst);
         }
-        if src_is_cf {
-            src_is_cf = false;
-            in_a = false; // result is in a; next output to b
-        } else {
-            in_a = !in_a;
-        }
+        to_a = !to_a;
         cur_shape = out_shape;
     }
-    // result buffer: if d odd -> a, if d even -> b (since first lands in a)
     let zlen: usize = cur_shape.iter().product();
-    let result_in_a = d % 2 == 1;
-    if !result_in_a {
-        let (a, b) = (&mut ws.a, &ws.b);
-        a[..zlen].copy_from_slice(&b[..zlen]);
-    }
     // IPK: in-place Thomas along every dim on the coarse grid
     for k in 0..d {
         axis::thomas(&mut ws.a[..zlen], &cur_shape, k, &ops[k]);
@@ -165,9 +168,8 @@ pub fn decompose_step<T: Scalar>(
         ws.coarse = coarse;
     }
 
-    // --- coefficient field: zeros at N_{l-1} ---
-    ws.cf[..vlen].copy_from_slice(buf);
-    zero_view(&mut ws.cf[..vlen], shape, 2);
+    // --- coefficient field: zeros at N_{l-1} (fused copy+zero pass) ---
+    copy_with_zero_view(buf, shape, 2, &mut ws.cf[..vlen]);
 
     // --- LPK + IPK: correction ---
     let (z, _zshape) = build_correction(shape, ops, ws);
@@ -188,9 +190,8 @@ pub fn recompose_step<T: Scalar>(
     debug_assert_eq!(buf.len(), vlen);
     let clen: usize = coarse_shape(shape).iter().product();
 
-    // --- correction from stored coefficients ---
-    ws.cf[..vlen].copy_from_slice(buf);
-    zero_view(&mut ws.cf[..vlen], shape, 2);
+    // --- correction from stored coefficients (fused copy+zero pass) ---
+    copy_with_zero_view(buf, shape, 2, &mut ws.cf[..vlen]);
     let (z, _) = build_correction(shape, ops, ws);
 
     // --- coarse nodes -= z ---
@@ -221,8 +222,7 @@ pub fn decompose_step_axis<T: Scalar>(
 ) {
     let vlen: usize = shape.iter().product();
     axis::coefficients_axis(buf, shape, ax, &ops.r);
-    ws.cf[..vlen].copy_from_slice(buf);
-    axis::zero_even_axis(&mut ws.cf[..vlen], shape, ax);
+    axis::copy_with_zero_even_axis(buf, shape, ax, &mut ws.cf[..vlen]);
     let mut fshape = shape.to_vec();
     fshape[ax] = (shape[ax] + 1) / 2;
     let flen: usize = fshape.iter().product();
@@ -245,8 +245,7 @@ pub fn recompose_step_axis<T: Scalar>(
     ws: &mut Workspace<T>,
 ) {
     let vlen: usize = shape.iter().product();
-    ws.cf[..vlen].copy_from_slice(buf);
-    axis::zero_even_axis(&mut ws.cf[..vlen], shape, ax);
+    axis::copy_with_zero_even_axis(buf, shape, ax, &mut ws.cf[..vlen]);
     let mut fshape = shape.to_vec();
     fshape[ax] = (shape[ax] + 1) / 2;
     let flen: usize = fshape.iter().product();
@@ -300,6 +299,28 @@ mod tests {
         recompose_step(&mut buf, &shape, &ops, &mut ws);
         for (a, b) in buf.iter().zip(&orig) {
             assert!((a - b).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn roundtrip_degenerate_axis() {
+        // a size-1 dim rides through as the identity factor
+        let mut rng = Rng::new(14);
+        let shape = [1usize, 9, 5];
+        let coords: Vec<Vec<f64>> = shape
+            .iter()
+            .map(|&m| if m == 1 { vec![0.0] } else { rng.coords(m) })
+            .collect();
+        let ops = ops_for(&coords);
+        let n: usize = shape.iter().product();
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut buf = orig.clone();
+        let mut ws = Workspace::new(n);
+        decompose_step(&mut buf, &shape, &ops, &mut ws);
+        assert_ne!(buf, orig);
+        recompose_step(&mut buf, &shape, &ops, &mut ws);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-12);
         }
     }
 

@@ -6,8 +6,41 @@
 //! logic runs here against the simulated measurement; on real hardware the
 //! measurement hook would be a kernel launch.
 
-use crate::simgpu::device::DeviceSpec;
+use crate::simgpu::device::{DeviceSpec, SpecError};
 use crate::simgpu::perfmodel::{BlockConfig, Kernel, PerfModel, TABLE2_CONFIGS};
+
+/// The §3.2 prune-and-profile loop, shared by the device auto-tuner and
+/// the host calibration pass ([`crate::simgpu::calibrate`]): rank every
+/// candidate with a cheap analytic `model`, profile only the `keep` best
+/// with the expensive `measure`, and return the measured winner, its
+/// time, and the profiled shortlist.
+///
+/// Ordering uses [`f64::total_cmp`], so a NaN score (e.g. from a
+/// nonsensical [`DeviceSpec`]) sorts deterministically *after* every
+/// finite time instead of panicking — the old `partial_cmp().unwrap()`
+/// here was a crash on any NaN in the model output.
+pub fn prune_and_profile<C: Copy>(
+    candidates: &[C],
+    keep: usize,
+    mut model: impl FnMut(C) -> f64,
+    mut measure: impl FnMut(C) -> f64,
+) -> (C, f64, Vec<C>) {
+    assert!(!candidates.is_empty(), "no candidate configurations");
+    let mut scored: Vec<(C, f64)> = candidates.iter().map(|&c| (c, model(c))).collect();
+    // stable sort: equal scores keep candidate order -> deterministic
+    scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let kept: Vec<C> = scored.iter().take(keep.max(1)).map(|&(c, _)| c).collect();
+    let mut best = kept[0];
+    let mut best_t = measure(kept[0]);
+    for &c in &kept[1..] {
+        let t = measure(c);
+        if t.total_cmp(&best_t).is_lt() {
+            best = c;
+            best_t = t;
+        }
+    }
+    (best, best_t, kept)
+}
 
 /// Outcome of auto-tuning one kernel.
 #[derive(Clone, Debug)]
@@ -41,22 +74,12 @@ pub const DEFAULT_CONFIG: BlockConfig = BlockConfig::new(8, 4, 4);
 /// Auto-tune one kernel for a device / size / precision.
 pub fn autotune(device: &DeviceSpec, kernel: Kernel, n: usize, elem_bytes: usize) -> AutotuneResult {
     let model = PerfModel::new(device.clone(), n, elem_bytes);
-
-    // rank the full candidate space with the analytic model
-    let mut scored: Vec<(BlockConfig, f64)> = TABLE2_CONFIGS
-        .iter()
-        .map(|&c| (c, model.model_time(kernel, c)))
-        .collect();
-    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-
-    // profile only the top three
-    let candidates: Vec<BlockConfig> = scored.iter().take(3).map(|&(c, _)| c).collect();
-    let (chosen, chosen_time) = candidates
-        .iter()
-        .map(|&c| (c, model.measured_time(kernel, c)))
-        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .unwrap();
-
+    let (chosen, chosen_time, candidates) = prune_and_profile(
+        &TABLE2_CONFIGS,
+        3,
+        |c| model.model_time(kernel, c),
+        |c| model.measured_time(kernel, c),
+    );
     AutotuneResult {
         kernel,
         chosen,
@@ -65,6 +88,19 @@ pub fn autotune(device: &DeviceSpec, kernel: Kernel, n: usize, elem_bytes: usize
         candidates,
         search_space: TABLE2_CONFIGS.len(),
     }
+}
+
+/// [`autotune`] with up-front spec validation: a device with non-finite
+/// or non-positive parameters yields a typed [`SpecError`] instead of
+/// NaN-polluted (though no longer panicking) results.
+pub fn autotune_checked(
+    device: &DeviceSpec,
+    kernel: Kernel,
+    n: usize,
+    elem_bytes: usize,
+) -> Result<AutotuneResult, SpecError> {
+    device.validate()?;
+    Ok(autotune(device, kernel, n, elem_bytes))
 }
 
 /// Auto-tune all three kernels and return the per-kernel geometric-mean
@@ -105,6 +141,48 @@ mod tests {
         let max = rs.iter().map(|r| r.speedup()).fold(0.0, f64::max);
         assert!(max > 1.1, "expected some kernel to gain >10%, got {max}");
         assert!(max < 10.0);
+    }
+
+    #[test]
+    fn nan_device_does_not_panic_and_fails_typed() {
+        // regression: the ranking used partial_cmp().unwrap(), so one NaN
+        // model time (any non-finite spec field) panicked the tuner
+        let mut bad = DeviceSpec::volta_v100();
+        bad.mem_bw = f64::NAN;
+        let r = autotune(&bad, Kernel::Gpk, 65, 4);
+        assert_eq!(r.candidates.len(), 3, "NaN times must still rank");
+        assert!(matches!(
+            autotune_checked(&bad, Kernel::Gpk, 65, 4),
+            Err(SpecError::NonFinite { field: "mem_bw", .. })
+        ));
+        bad.mem_bw = -1.0;
+        assert!(matches!(
+            autotune_checked(&bad, Kernel::Gpk, 65, 4),
+            Err(SpecError::NonPositive { field: "mem_bw", .. })
+        ));
+        assert!(autotune_checked(&DeviceSpec::volta_v100(), Kernel::Gpk, 65, 4).is_ok());
+    }
+
+    #[test]
+    fn prune_and_profile_deterministic_and_nan_safe() {
+        let cands = [1usize, 2, 3, 4, 5];
+        // model: prefer 3, 1, 5 (NaN model scores sink to the end)
+        let model = |c: usize| match c {
+            3 => 0.1,
+            1 => 0.2,
+            5 => 0.3,
+            2 => f64::NAN,
+            _ => 0.9,
+        };
+        // measure: NaN for the model's favourite -> must not be chosen
+        let measure = |c: usize| if c == 3 { f64::NAN } else { c as f64 };
+        let (best, t, kept) = prune_and_profile(&cands, 3, model, measure);
+        assert_eq!(kept, vec![3, 1, 5]);
+        assert_eq!(best, 1);
+        assert_eq!(t, 1.0);
+        // identical inputs -> identical outcome
+        let again = prune_and_profile(&cands, 3, model, measure);
+        assert_eq!((again.0, again.1, again.2), (best, t, kept));
     }
 
     #[test]

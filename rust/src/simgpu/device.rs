@@ -1,5 +1,36 @@
 //! Device and interconnect specifications (published vendor numbers).
 
+/// Why a [`DeviceSpec`] fails validation — typed so callers (the
+/// auto-tuner, model-building CLIs) can reject a bad spec up front
+/// instead of propagating NaN times through the ranking.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpecError {
+    /// A floating-point field is NaN or infinite.
+    NonFinite { field: &'static str, value: f64 },
+    /// A floating-point field is zero or negative.
+    NonPositive { field: &'static str, value: f64 },
+    /// An integer field is zero.
+    ZeroField { field: &'static str },
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::NonFinite { field, value } => {
+                write!(f, "device spec field {field} is not finite ({value})")
+            }
+            SpecError::NonPositive { field, value } => {
+                write!(f, "device spec field {field} must be positive (got {value})")
+            }
+            SpecError::ZeroField { field } => {
+                write!(f, "device spec field {field} must be nonzero")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
 /// One accelerator (or CPU-core) specification.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceSpec {
@@ -69,6 +100,35 @@ impl DeviceSpec {
         }
     }
 
+    /// Validate every field the performance models divide by or iterate
+    /// over. Returns the first offending field as a typed [`SpecError`].
+    pub fn validate(&self) -> Result<(), SpecError> {
+        for (field, value) in [
+            ("mem_bw", self.mem_bw),
+            ("fp32_flops", self.fp32_flops),
+            ("fp64_flops", self.fp64_flops),
+        ] {
+            if !value.is_finite() {
+                return Err(SpecError::NonFinite { field, value });
+            }
+            if value <= 0.0 {
+                return Err(SpecError::NonPositive { field, value });
+            }
+        }
+        for (field, value) in [
+            ("transaction_bytes", self.transaction_bytes),
+            ("sm_count", self.sm_count),
+            ("max_threads_per_sm", self.max_threads_per_sm),
+            ("shared_mem_per_block", self.shared_mem_per_block),
+            ("mem_capacity", self.mem_capacity),
+        ] {
+            if value == 0 {
+                return Err(SpecError::ZeroField { field });
+            }
+        }
+        Ok(())
+    }
+
     /// Peak achievable single-pass (read+write) refactoring throughput:
     /// the paper measures this with a simultaneous read+write benchmark.
     /// Analytically it is `mem_bw / 2` scaled by the ~88% of nominal DRAM
@@ -135,6 +195,35 @@ mod tests {
         let t = DeviceSpec::turing_2080ti();
         assert!(t.fp64_flops / t.fp32_flops < 0.05); // 1:32 — §3.5 story
         assert_eq!(v.single_pass_bw(), 0.88 * 450e9);
+    }
+
+    #[test]
+    fn validate_catches_bad_fields() {
+        for d in [
+            DeviceSpec::volta_v100(),
+            DeviceSpec::turing_2080ti(),
+            DeviceSpec::power9_core(),
+        ] {
+            assert_eq!(d.validate(), Ok(()), "{}", d.name);
+        }
+        let mut d = DeviceSpec::volta_v100();
+        d.fp64_flops = f64::INFINITY;
+        assert!(matches!(
+            d.validate(),
+            Err(SpecError::NonFinite { field: "fp64_flops", .. })
+        ));
+        d.fp64_flops = 0.0;
+        assert!(matches!(
+            d.validate(),
+            Err(SpecError::NonPositive { field: "fp64_flops", .. })
+        ));
+        d = DeviceSpec::volta_v100();
+        d.transaction_bytes = 0;
+        assert_eq!(
+            d.validate(),
+            Err(SpecError::ZeroField { field: "transaction_bytes" })
+        );
+        assert!(d.validate().unwrap_err().to_string().contains("transaction_bytes"));
     }
 
     #[test]

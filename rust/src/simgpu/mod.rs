@@ -1,4 +1,5 @@
-//! GPU performance substrate: analytic device + cluster models.
+//! GPU performance substrate: analytic device + cluster models, plus the
+//! host calibration pass that closes the loop on real execution.
 //!
 //! The paper's evaluation hardware (Summit nodes with 6×V100, an RTX 2080
 //! Ti desktop, NVLink/X-Bus interconnects) is not available here, so —
@@ -11,20 +12,27 @@
 //! is simulated.
 //!
 //! * [`device`] — device specs (V100, RTX 2080 Ti, POWER9 core) and
-//!   interconnects (NVLink, X-Bus, EDR InfiniBand).
+//!   interconnects (NVLink, X-Bus, EDR InfiniBand), with typed
+//!   validation ([`SpecError`]).
 //! * [`perfmodel`] — §3.2 transaction-count models for GPK/LPK/IPK and the
 //!   second-order "measured" simulator behind Table 2.
 //! * [`autotune`] — heuristic auto-tuning: model-rank, prune to top-3,
-//!   measure, pick (§3.2).
+//!   measure, pick (§3.2). [`prune_and_profile`] is the reusable loop.
+//! * [`calibrate`] — the same prune-and-profile loop re-targeted at the
+//!   *host*: short measured runs of the real kernels choose fork
+//!   configurations for [`crate::util::par`], and a stream benchmark
+//!   measures the roofline peak that benches normalize against.
 //! * [`cluster`] — single-GPU / node / multi-node throughput roll-ups
 //!   (Figs 14, 16, 17) including cooperative-parallel communication.
 
 pub mod autotune;
+pub mod calibrate;
 pub mod cluster;
 pub mod device;
 pub mod perfmodel;
 
-pub use autotune::{autotune, AutotuneResult};
+pub use autotune::{autotune, autotune_checked, prune_and_profile, AutotuneResult};
+pub use calibrate::{calibrate, measure_peak_gbps, CalibrationReport, KernelCalibration};
 pub use cluster::{ClusterModel, Parallelism};
-pub use device::{DeviceSpec, Interconnect};
+pub use device::{DeviceSpec, Interconnect, SpecError};
 pub use perfmodel::{BlockConfig, Kernel, PerfModel};

@@ -176,10 +176,11 @@ impl PerfModel {
     }
 
     /// Rank configurations by a time function: returns rank per config
-    /// (1 = fastest), aligned with the input order.
+    /// (1 = fastest), aligned with the input order. NaN times rank
+    /// deterministically last ([`f64::total_cmp`]) instead of panicking.
     pub fn rank_by(times: &[f64]) -> Vec<usize> {
         let mut order: Vec<usize> = (0..times.len()).collect();
-        order.sort_by(|&a, &b| times[a].partial_cmp(&times[b]).unwrap());
+        order.sort_by(|&a, &b| times[a].total_cmp(&times[b]));
         let mut ranks = vec![0usize; times.len()];
         for (rank, idx) in order.into_iter().enumerate() {
             ranks[idx] = rank + 1;
@@ -283,5 +284,12 @@ mod tests {
     #[test]
     fn rank_by_basics() {
         assert_eq!(PerfModel::rank_by(&[3.0, 1.0, 2.0]), vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn rank_by_nan_sinks_last() {
+        // regression: a NaN time used to panic the unwrap'd partial_cmp
+        assert_eq!(PerfModel::rank_by(&[f64::NAN, 1.0, 2.0]), vec![3, 1, 2]);
+        assert_eq!(PerfModel::rank_by(&[f64::NAN, f64::NAN]), vec![1, 2]);
     }
 }

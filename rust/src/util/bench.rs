@@ -113,6 +113,48 @@ pub struct ReportRow {
     /// Output size in bytes, when the row describes an encoder (the
     /// container bench's per-class size breakdown).
     pub bytes: Option<u64>,
+    /// Nominal compulsory memory traffic of one iteration, bytes — the
+    /// numerator of the roofline position (`docs/performance.md`).
+    pub bytes_moved: Option<u64>,
+    /// Achieved throughput as a percentage of the report's measured
+    /// memory-bandwidth peak (`peak_gbps`).
+    pub pct_peak: Option<f64>,
+}
+
+impl Default for ReportRow {
+    /// Empty cell: fill the fields a bench measures, leave the rest.
+    fn default() -> Self {
+        ReportRow {
+            kernel: String::new(),
+            variant: String::new(),
+            dtype: String::new(),
+            shape: Vec::new(),
+            axis: None,
+            median_s: 0.0,
+            mad_rel: 0.0,
+            gbps: 0.0,
+            speedup: None,
+            bytes: None,
+            bytes_moved: None,
+            pct_peak: None,
+        }
+    }
+}
+
+impl ReportRow {
+    /// Set the roofline fields from a byte volume and the measured peak:
+    /// `bytes_moved`, recomputed `gbps`, and `pct_peak` when a peak is
+    /// known.
+    pub fn with_roofline(mut self, bytes_moved: u64, peak_gbps: Option<f64>) -> Self {
+        self.bytes_moved = Some(bytes_moved);
+        if self.median_s > 0.0 {
+            self.gbps = bytes_moved as f64 / self.median_s / 1e9;
+        }
+        self.pct_peak = peak_gbps
+            .filter(|&p| p > 0.0)
+            .map(|p| 100.0 * self.gbps / p);
+        self
+    }
 }
 
 /// Collected bench rows plus run metadata, serializable to JSON.
@@ -121,6 +163,10 @@ pub struct BenchReport {
     pub name: String,
     /// Worker count the parallel variants ran with.
     pub threads: usize,
+    /// Measured read+write stream bandwidth of the machine the report
+    /// was produced on, GB/s ([`crate::simgpu::calibrate::measure_peak_gbps`]);
+    /// the denominator of every row's `pct_peak`.
+    pub peak_gbps: Option<f64>,
     pub rows: Vec<ReportRow>,
 }
 
@@ -153,6 +199,7 @@ impl BenchReport {
         BenchReport {
             name: name.to_string(),
             threads: crate::util::par::threads(),
+            peak_gbps: None,
             rows: Vec::new(),
         }
     }
@@ -167,13 +214,17 @@ impl BenchReport {
         out.push_str("{\n");
         out.push_str(&format!("  \"name\": {},\n", json_str(&self.name)));
         out.push_str(&format!("  \"threads\": {},\n", self.threads));
+        out.push_str(&format!(
+            "  \"peak_gbps\": {},\n",
+            self.peak_gbps.map_or("null".to_string(), json_f64)
+        ));
         out.push_str("  \"rows\": [\n");
         for (i, r) in self.rows.iter().enumerate() {
             let shape: Vec<String> = r.shape.iter().map(|n| n.to_string()).collect();
             out.push_str(&format!(
                 "    {{\"kernel\": {}, \"variant\": {}, \"dtype\": {}, \"shape\": [{}], \
                  \"axis\": {}, \"median_s\": {}, \"mad_rel\": {}, \"gbps\": {}, \"speedup\": {}, \
-                 \"bytes\": {}}}{}\n",
+                 \"bytes\": {}, \"bytes_moved\": {}, \"pct_peak\": {}}}{}\n",
                 json_str(&r.kernel),
                 json_str(&r.variant),
                 json_str(&r.dtype),
@@ -184,6 +235,8 @@ impl BenchReport {
                 json_f64(r.gbps),
                 r.speedup.map_or("null".to_string(), json_f64),
                 r.bytes.map_or("null".to_string(), |b| b.to_string()),
+                r.bytes_moved.map_or("null".to_string(), |b| b.to_string()),
+                r.pct_peak.map_or("null".to_string(), json_f64),
                 if i + 1 < self.rows.len() { "," } else { "" },
             ));
         }
@@ -217,18 +270,23 @@ mod tests {
     #[test]
     fn report_json_parses_back() {
         let mut rep = BenchReport::new("unit \"test\"");
-        rep.push(ReportRow {
-            kernel: "LPK".into(),
-            variant: "parallel".into(),
-            dtype: "f64".into(),
-            shape: vec![129, 129, 129],
-            axis: Some(0),
-            median_s: 1.25e-3,
-            mad_rel: 0.01,
-            gbps: 13.7,
-            speedup: Some(1.9),
-            bytes: Some(4096),
-        });
+        rep.peak_gbps = Some(40.0);
+        rep.push(
+            ReportRow {
+                kernel: "LPK".into(),
+                variant: "parallel".into(),
+                dtype: "f64".into(),
+                shape: vec![129, 129, 129],
+                axis: Some(0),
+                median_s: 1.0e-3,
+                mad_rel: 0.01,
+                gbps: 13.7,
+                speedup: Some(1.9),
+                bytes: Some(4096),
+                ..Default::default()
+            }
+            .with_roofline(10_000_000, rep.peak_gbps),
+        );
         rep.push(ReportRow {
             kernel: "LPK".into(),
             variant: "serial-total".into(),
@@ -236,19 +294,23 @@ mod tests {
             shape: vec![129, 129, 129],
             axis: None,
             median_s: 4.0e-3,
-            mad_rel: 0.0,
             gbps: 4.2,
-            speedup: None,
-            bytes: None,
+            ..Default::default()
         });
         let doc = crate::util::json::parse(&rep.to_json()).expect("valid JSON");
         assert_eq!(doc.get("name").unwrap().as_str().unwrap(), "unit \"test\"");
+        assert!((doc.get("peak_gbps").unwrap().as_f64().unwrap() - 40.0).abs() < 1e-9);
         let rows = doc.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("axis").unwrap().as_usize(), Some(0));
         assert_eq!(rows[0].get("bytes").unwrap().as_usize(), Some(4096));
+        // with_roofline: 10 MB in 1 ms = 10 GB/s = 25% of the 40 GB/s peak
+        assert_eq!(rows[0].get("bytes_moved").unwrap().as_usize(), Some(10_000_000));
+        assert!((rows[0].get("gbps").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+        assert!((rows[0].get("pct_peak").unwrap().as_f64().unwrap() - 25.0).abs() < 1e-9);
         assert!(rows[1].get("speedup").unwrap().as_f64().is_none());
         assert!(rows[1].get("bytes").unwrap().as_usize().is_none());
+        assert!(rows[1].get("pct_peak").unwrap().as_f64().is_none());
         assert!((rows[0].get("speedup").unwrap().as_f64().unwrap() - 1.9).abs() < 1e-9);
     }
 

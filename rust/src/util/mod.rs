@@ -5,6 +5,7 @@ pub mod cli;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 /// Floating-point scalar the refactoring core is generic over.

@@ -18,15 +18,22 @@
 //!   parallel region (a [`run_tasks`] worker, or a cooperative
 //!   [`crate::coordinator::ParallelRefactorer`] worker) sees
 //!   [`workers_for`]` == 1`, so coordinator-level and kernel-level
-//!   parallelism compose instead of oversubscribing.
+//!   parallelism compose instead of oversubscribing;
+//! * calibrated per-kernel configs — [`install_tuned`] /
+//!   [`workers_for_kernel`]: `simgpu::calibrate` measures short runs of
+//!   the real kernels and installs per (kernel family, element width,
+//!   size class) [`ExecConfig`]s here. Kernels consult them through
+//!   [`workers_for_kernel`]; any explicitly set knob (CLI, builder, env)
+//!   bypasses the table entirely.
 //!
 //! The execution backend is `std::thread::scope` by default, or rayon's
 //! work-stealing pool when the crate is built with `--features rayon`
 //! (same task semantics, lower fork/join overhead).
 
 use std::cell::Cell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Mutex, OnceLock, RwLock};
 
 /// Default minimum element count before a kernel forks (≈1 MiB of f64):
 /// below this, fork/join overhead dominates the work.
@@ -44,8 +51,48 @@ thread_local! {
     static IN_PARALLEL: Cell<bool> = Cell::new(false);
 }
 
-fn env_usize(name: &str) -> Option<usize> {
-    std::env::var(name).ok().and_then(|v| v.parse().ok())
+/// Parse one environment knob. `0` restores the default — the same
+/// contract as [`set_threads`]`(0)` / [`set_par_threshold`]`(0)`.
+/// Malformed values are **rejected with a one-time warning** (they used
+/// to be swallowed by `parse().ok()`, so a typo like `MGR_THREADS=1O`
+/// silently degraded to the default with no signal).
+fn parse_knob(name: &str, raw: Option<&str>) -> Option<usize> {
+    let raw = raw?;
+    match raw.trim().parse::<usize>() {
+        Ok(0) => None,
+        Ok(n) => Some(n),
+        Err(_) => {
+            warn_knob_once(name, raw);
+            None
+        }
+    }
+}
+
+/// Emit the malformed-knob warning at most once per knob per process.
+fn warn_knob_once(name: &str, raw: &str) {
+    static WARNED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let mut warned = WARNED.lock().unwrap();
+    if !warned.iter().any(|n| n == name) {
+        warned.push(name.to_string());
+        eprintln!(
+            "mgr: ignoring malformed {name}='{raw}' \
+             (expected a non-negative integer; using the default)"
+        );
+    }
+}
+
+fn env_threads() -> Option<usize> {
+    *ENV_THREADS
+        .get_or_init(|| parse_knob("MGR_THREADS", std::env::var("MGR_THREADS").ok().as_deref()))
+}
+
+fn env_threshold() -> Option<usize> {
+    *ENV_THRESHOLD.get_or_init(|| {
+        parse_knob(
+            "MGR_PAR_THRESHOLD",
+            std::env::var("MGR_PAR_THRESHOLD").ok().as_deref(),
+        )
+    })
 }
 
 /// Worker count used when a kernel decides to fork: the programmatic
@@ -55,7 +102,7 @@ pub fn threads() -> usize {
     if o != UNSET {
         return o.max(1);
     }
-    if let Some(n) = *ENV_THREADS.get_or_init(|| env_usize("MGR_THREADS")) {
+    if let Some(n) = env_threads() {
         return n.max(1);
     }
     std::thread::available_parallelism()
@@ -74,8 +121,7 @@ pub fn par_threshold() -> usize {
     if o != UNSET {
         return o;
     }
-    (*ENV_THRESHOLD.get_or_init(|| env_usize("MGR_PAR_THRESHOLD")))
-        .unwrap_or(DEFAULT_PAR_THRESHOLD)
+    env_threshold().unwrap_or(DEFAULT_PAR_THRESHOLD)
 }
 
 /// Override the fork threshold (`0` restores the default).
@@ -116,6 +162,141 @@ pub fn workers_for(elems: usize) -> usize {
         return 1;
     }
     threads()
+}
+
+/// Kernel families the calibration pass tunes separately (their
+/// byte-per-element ratios and sweep structures differ, so one global
+/// threshold misfits at least one of them — the paper's Table 2 argument
+/// applied to host execution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelClass {
+    /// GPK interpolation (`upsample`, `upsample_apply_last`).
+    Gpk,
+    /// LPK fused mass × transfer stencil (`masstrans`).
+    Lpk,
+    /// IPK batched Thomas solve (`thomas`).
+    Ipk,
+    /// Quantize / dequantize element streams.
+    Quant,
+}
+
+impl KernelClass {
+    /// Every tunable class, in tuning order.
+    pub const ALL: [KernelClass; 4] = [
+        KernelClass::Gpk,
+        KernelClass::Lpk,
+        KernelClass::Ipk,
+        KernelClass::Quant,
+    ];
+
+    /// Stable lowercase name (bench rows, calibration tables).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelClass::Gpk => "gpk",
+            KernelClass::Lpk => "lpk",
+            KernelClass::Ipk => "ipk",
+            KernelClass::Quant => "quant",
+        }
+    }
+}
+
+/// One tuned execution configuration: how wide to fork, how small is too
+/// small to fork at all, and the minimum elements a single task must
+/// own (so small buffers never oversplit into per-task overhead).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker count when the kernel forks.
+    pub threads: usize,
+    /// Minimum buffer element count before forking.
+    pub par_threshold: usize,
+    /// Minimum elements per task; caps workers at `elems / chunk`.
+    pub chunk: usize,
+}
+
+impl ExecConfig {
+    /// Worker count this configuration yields for an `elems`-element
+    /// buffer.
+    pub fn workers(&self, elems: usize) -> usize {
+        if elems < self.par_threshold {
+            return 1;
+        }
+        self.threads.min(elems / self.chunk.max(1)).max(1)
+    }
+}
+
+/// Tuned registry key: (kernel family, element width in bytes, log2 size
+/// class).
+type TunedKey = (KernelClass, usize, u8);
+
+static TUNED: OnceLock<RwLock<HashMap<TunedKey, ExecConfig>>> = OnceLock::new();
+
+fn tuned_map() -> &'static RwLock<HashMap<TunedKey, ExecConfig>> {
+    TUNED.get_or_init(|| RwLock::new(HashMap::new()))
+}
+
+/// Log2 bucket a buffer size falls into (`size_class(n) == size_class(m)`
+/// iff `n` and `m` share a power-of-two magnitude). Calibration measures
+/// one representative size per class; lookup matches the nearest class.
+pub fn size_class(elems: usize) -> u8 {
+    (usize::BITS - elems.leading_zeros()) as u8
+}
+
+/// Install a calibrated configuration for `(class, elem_bytes,
+/// size_class)` — called by `simgpu::calibrate` with measured winners.
+pub fn install_tuned(class: KernelClass, elem_bytes: usize, size_class: u8, cfg: ExecConfig) {
+    tuned_map().write().unwrap().insert((class, elem_bytes, size_class), cfg);
+}
+
+/// Drop every calibrated configuration (tests; re-calibration).
+pub fn clear_tuned() {
+    tuned_map().write().unwrap().clear();
+}
+
+/// The calibrated configuration that would govern an `elems`-element
+/// buffer of `elem_bytes`-wide scalars, if any: exact size-class match
+/// first, else the nearest measured class for the same (kernel, width)
+/// pair (ties prefer the smaller class — deterministic).
+pub fn tuned_for(class: KernelClass, elem_bytes: usize, elems: usize) -> Option<ExecConfig> {
+    let map = tuned_map().read().unwrap();
+    if map.is_empty() {
+        return None;
+    }
+    let sc = size_class(elems);
+    if let Some(cfg) = map.get(&(class, elem_bytes, sc)) {
+        return Some(*cfg);
+    }
+    map.iter()
+        .filter(|((k, b, _), _)| *k == class && *b == elem_bytes)
+        .min_by_key(|((_, _, s), _)| ((i32::from(*s) - i32::from(sc)).abs(), *s))
+        .map(|(_, cfg)| *cfg)
+}
+
+/// True when any parallelism knob was set explicitly (CLI flag, builder
+/// method, or environment variable). Explicit knobs always win over the
+/// calibrated table — the documented bypass for autotuning.
+fn knobs_overridden() -> bool {
+    THREADS_OVERRIDE.load(Ordering::Relaxed) != UNSET
+        || THRESHOLD_OVERRIDE.load(Ordering::Relaxed) != UNSET
+        || env_threads().is_some()
+        || env_threshold().is_some()
+}
+
+/// [`workers_for`], kernel-aware: consults the calibrated configuration
+/// for this kernel family / element width / size class when one is
+/// installed and no explicit knob overrides it. Falls back to the global
+/// [`workers_for`] policy otherwise. Nested parallel regions always run
+/// serial, exactly like [`workers_for`].
+pub fn workers_for_kernel(class: KernelClass, elem_bytes: usize, elems: usize) -> usize {
+    if in_parallel_region() {
+        return 1;
+    }
+    if knobs_overridden() {
+        return workers_for(elems);
+    }
+    match tuned_for(class, elem_bytes, elems) {
+        Some(cfg) => cfg.workers(elems),
+        None => workers_for(elems),
+    }
 }
 
 /// Split `n` items into at most `workers` contiguous `(start, len)`
@@ -309,6 +490,93 @@ mod tests {
         set_par_threshold(0);
         assert_eq!(par_threshold(), DEFAULT_PAR_THRESHOLD);
         assert!(threads() >= 1);
+    }
+
+    /// Satellite contract for the env knobs: integers parse, `0` restores
+    /// the default (matching `set_threads(0)` / `set_par_threshold(0)`),
+    /// and malformed values are rejected (warned once) instead of being
+    /// silently swallowed.
+    #[test]
+    fn env_knob_parsing_contract() {
+        assert_eq!(parse_knob("MGR_THREADS", None), None);
+        assert_eq!(parse_knob("MGR_THREADS", Some("8")), Some(8));
+        assert_eq!(parse_knob("MGR_THREADS", Some(" 12 ")), Some(12));
+        assert_eq!(parse_knob("MGR_THREADS", Some("0")), None);
+        assert_eq!(parse_knob("MGR_PAR_THRESHOLD", Some("0")), None);
+        assert_eq!(parse_knob("MGR_PAR_THRESHOLD", Some("131072")), Some(131072));
+        for bad in ["abc", "-3", "1e5", "1O", "", "7.5"] {
+            assert_eq!(parse_knob("MGR_THREADS", Some(bad)), None, "raw={bad:?}");
+            assert_eq!(parse_knob("MGR_PAR_THRESHOLD", Some(bad)), None, "raw={bad:?}");
+        }
+    }
+
+    #[test]
+    fn size_class_buckets_by_magnitude() {
+        assert_eq!(size_class(0), 0);
+        assert_eq!(size_class(1), 1);
+        assert_eq!(size_class(2), 2);
+        assert_eq!(size_class(3), 2);
+        assert_eq!(size_class(4), 3);
+        assert_eq!(size_class((1 << 20) - 1), 20);
+        assert_eq!(size_class(1 << 20), 21);
+    }
+
+    #[test]
+    fn exec_config_workers() {
+        let cfg = ExecConfig {
+            threads: 8,
+            par_threshold: 1000,
+            chunk: 100,
+        };
+        assert_eq!(cfg.workers(999), 1); // below threshold
+        assert_eq!(cfg.workers(1000), 8); // 10 chunks >= 8 threads
+        assert_eq!(cfg.workers(4000), 8);
+        let small = ExecConfig {
+            threads: 8,
+            par_threshold: 10,
+            chunk: 100,
+        };
+        assert_eq!(small.workers(250), 2); // chunk caps the fork width
+        assert_eq!(small.workers(50), 1); // never zero
+    }
+
+    #[test]
+    fn tuned_registry_consulted_and_overridable() {
+        let _lock = CONFIG_LOCK.lock().unwrap();
+        // an externally set env knob would legitimately bypass the table;
+        // skip the assertions in that environment rather than fail
+        if env_threads().is_some() || env_threshold().is_some() {
+            return;
+        }
+        clear_tuned();
+        let cfg = ExecConfig {
+            threads: 5,
+            par_threshold: 1 << 10,
+            chunk: 1,
+        };
+        install_tuned(KernelClass::Gpk, 8, size_class(1 << 20), cfg);
+        // exact class match
+        assert_eq!(tuned_for(KernelClass::Gpk, 8, 1 << 20), Some(cfg));
+        // nearest-class fallback (no exact entry for tiny sizes)
+        assert_eq!(tuned_for(KernelClass::Gpk, 8, 64), Some(cfg));
+        // other kernel families and widths are not affected
+        assert_eq!(tuned_for(KernelClass::Lpk, 8, 1 << 20), None);
+        assert_eq!(tuned_for(KernelClass::Gpk, 4, 1 << 20), None);
+        assert_eq!(workers_for_kernel(KernelClass::Gpk, 8, 1 << 20), 5);
+        assert_eq!(workers_for_kernel(KernelClass::Gpk, 8, 512), 1);
+        // untuned families fall back to the global policy
+        assert_eq!(
+            workers_for_kernel(KernelClass::Lpk, 8, 64),
+            workers_for(64)
+        );
+        // explicit knobs always win over the calibrated table
+        set_threads(2);
+        assert_eq!(workers_for_kernel(KernelClass::Gpk, 8, 1 << 20), 2);
+        set_threads(0);
+        // nested regions stay serial
+        with_serial(|| assert_eq!(workers_for_kernel(KernelClass::Gpk, 8, 1 << 20), 1));
+        clear_tuned();
+        assert_eq!(tuned_for(KernelClass::Gpk, 8, 1 << 20), None);
     }
 
     #[test]

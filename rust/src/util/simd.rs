@@ -1,0 +1,919 @@
+//! Stride-1 SIMD fast paths for the refactoring inner loops.
+//!
+//! The §3.3 reordered-gather layout makes every kernel line contiguous, so
+//! the hot loops in [`crate::refactor::axis`] are straight runs of fused
+//! multiply-adds over stride-1 slices. Without `-C target-feature=+fma`
+//! those `mul_add` calls lower to libm `fma()` — a function call per
+//! element. This module provides runtime-dispatched AVX2+FMA row
+//! primitives that keep the *exact* per-lane operation sequence of the
+//! scalar code, so results are **bit-identical** to the scalar path (the
+//! same invariant the parallel layer upholds; asserted by
+//! `tests/simd_matrix.rs`).
+//!
+//! Design rules, in order of importance:
+//!
+//! 1. **Bit-identity.** Every vector op is an element-wise `loadu` /
+//!    broadcast / `fmadd` / `mul` / `add` / `sub` / `storeu` — the same
+//!    rounding sequence per lane as the scalar formula. No horizontal
+//!    reductions, no shuffles, no re-association, no approximate
+//!    reciprocals, and no vector `round` (whose half-to-even tie rule
+//!    differs from `f64::round` — which is why the quantizer keeps its
+//!    scalar `.round()` inside a chunked loop instead of using this
+//!    module).
+//! 2. **Scalar twin.** Every dispatching entry point `op(..)` has a public
+//!    `op_scalar(..)` reference implementation; off the fast path (non-x86
+//!    targets, missing CPU features, `MGR_NO_SIMD`, or a remainder tail)
+//!    the dispatcher computes exactly what the twin computes.
+//! 3. **Dispatch once.** CPU-feature detection is cached in an atomic;
+//!    the per-row dispatch cost is one relaxed load and a `TypeId`
+//!    comparison that constant-folds after monomorphization.
+//!
+//! Set `MGR_NO_SIMD=1` to force the scalar paths process-wide (read once,
+//! like the [`crate::util::par`] knobs).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::Scalar;
+
+/// Detection cache states.
+const UNKNOWN: u8 = 0;
+const ON: u8 = 1;
+const OFF: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNKNOWN);
+
+/// True when the AVX2+FMA fast paths are active on this host (feature
+/// detection succeeded and `MGR_NO_SIMD` is unset). Cached after the
+/// first call.
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = detect();
+            STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+fn detect() -> bool {
+    if std::env::var_os("MGR_NO_SIMD").is_some_and(|v| !v.is_empty() && v != "0") {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Reinterpret `&[T]` as `&[U]` when `T` and `U` are the same type
+/// (monomorphization-time dispatch; the branch constant-folds away).
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn cast<T: 'static, U: 'static>(s: &[T]) -> Option<&[U]> {
+    if std::any::TypeId::of::<T>() == std::any::TypeId::of::<U>() {
+        // SAFETY: TypeId equality proves T and U are the same type, so the
+        // layout (and every bit pattern) is identical.
+        Some(unsafe { &*(s as *const [T] as *const [U]) })
+    } else {
+        None
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn cast_mut<T: 'static, U: 'static>(s: &mut [T]) -> Option<&mut [U]> {
+    if std::any::TypeId::of::<T>() == std::any::TypeId::of::<U>() {
+        // SAFETY: as in `cast` — same type, same layout.
+        Some(unsafe { &mut *(s as *mut [T] as *mut [U]) })
+    } else {
+        None
+    }
+}
+
+/// `out[e] = fma(r, hi[e], fma(-r, lo[e], lo[e]))` — the GPK odd-row
+/// interpolant with a row-constant ratio.
+#[inline]
+pub fn interp_row<T: Scalar>(lo: &[T], hi: &[T], r: T, out: &mut [T]) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(lo), Some(hi), Some(out)) =
+            (cast::<T, f64>(lo), cast::<T, f64>(hi), cast_mut::<T, f64>(out))
+        {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_row_f64(lo, hi, r.to_f64(), out) };
+            return;
+        }
+        if let (Some(lo), Some(hi), Some(out)) =
+            (cast::<T, f32>(lo), cast::<T, f32>(hi), cast_mut::<T, f32>(out))
+        {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_row_f32(lo, hi, r.to_f64() as f32, out) };
+            return;
+        }
+    }
+    interp_row_scalar(lo, hi, r, out);
+}
+
+/// Scalar reference for [`interp_row`].
+#[inline]
+pub fn interp_row_scalar<T: Scalar>(lo: &[T], hi: &[T], r: T, out: &mut [T]) {
+    for e in 0..out.len() {
+        out[e] = r.mul_add(hi[e], (-r).mul_add(lo[e], lo[e]));
+    }
+}
+
+/// [`interp_row`] with a per-element ratio vector (the fused last-axis
+/// upsample, where the row index *is* the coarse axis).
+#[inline]
+pub fn interp_row_vr<T: Scalar>(lo: &[T], hi: &[T], r: &[T], out: &mut [T]) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(lo), Some(hi), Some(r), Some(out)) = (
+            cast::<T, f64>(lo),
+            cast::<T, f64>(hi),
+            cast::<T, f64>(r),
+            cast_mut::<T, f64>(out),
+        ) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_row_vr_f64(lo, hi, r, out) };
+            return;
+        }
+        if let (Some(lo), Some(hi), Some(r), Some(out)) = (
+            cast::<T, f32>(lo),
+            cast::<T, f32>(hi),
+            cast::<T, f32>(r),
+            cast_mut::<T, f32>(out),
+        ) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_row_vr_f32(lo, hi, r, out) };
+            return;
+        }
+    }
+    interp_row_vr_scalar(lo, hi, r, out);
+}
+
+/// Scalar reference for [`interp_row_vr`].
+#[inline]
+pub fn interp_row_vr_scalar<T: Scalar>(lo: &[T], hi: &[T], r: &[T], out: &mut [T]) {
+    for e in 0..out.len() {
+        out[e] = r[e].mul_add(hi[e], (-r[e]).mul_add(lo[e], lo[e]));
+    }
+}
+
+/// `odd[e] -= fma(r, hi[e], fma(-r, lo[e], lo[e]))` — single-axis GPK
+/// coefficients (value minus interpolant), in place.
+#[inline]
+pub fn interp_sub_row<T: Scalar>(lo: &[T], hi: &[T], r: T, odd: &mut [T]) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(lo), Some(hi), Some(odd)) =
+            (cast::<T, f64>(lo), cast::<T, f64>(hi), cast_mut::<T, f64>(odd))
+        {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_sub_row_f64(lo, hi, r.to_f64(), odd) };
+            return;
+        }
+        if let (Some(lo), Some(hi), Some(odd)) =
+            (cast::<T, f32>(lo), cast::<T, f32>(hi), cast_mut::<T, f32>(odd))
+        {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_sub_row_f32(lo, hi, r.to_f64() as f32, odd) };
+            return;
+        }
+    }
+    interp_sub_row_scalar(lo, hi, r, odd);
+}
+
+/// Scalar reference for [`interp_sub_row`].
+#[inline]
+pub fn interp_sub_row_scalar<T: Scalar>(lo: &[T], hi: &[T], r: T, odd: &mut [T]) {
+    for e in 0..odd.len() {
+        let interp = r.mul_add(hi[e], (-r).mul_add(lo[e], lo[e]));
+        odd[e] -= interp;
+    }
+}
+
+/// Inverse of [`interp_sub_row`]: `odd[e] += interpolant`.
+#[inline]
+pub fn interp_add_row<T: Scalar>(lo: &[T], hi: &[T], r: T, odd: &mut [T]) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(lo), Some(hi), Some(odd)) =
+            (cast::<T, f64>(lo), cast::<T, f64>(hi), cast_mut::<T, f64>(odd))
+        {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_add_row_f64(lo, hi, r.to_f64(), odd) };
+            return;
+        }
+        if let (Some(lo), Some(hi), Some(odd)) =
+            (cast::<T, f32>(lo), cast::<T, f32>(hi), cast_mut::<T, f32>(odd))
+        {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::interp_add_row_f32(lo, hi, r.to_f64() as f32, odd) };
+            return;
+        }
+    }
+    interp_add_row_scalar(lo, hi, r, odd);
+}
+
+/// Scalar reference for [`interp_add_row`].
+#[inline]
+pub fn interp_add_row_scalar<T: Scalar>(lo: &[T], hi: &[T], r: T, odd: &mut [T]) {
+    for e in 0..odd.len() {
+        let interp = r.mul_add(hi[e], (-r).mul_add(lo[e], lo[e]));
+        odd[e] += interp;
+    }
+}
+
+/// The LPK fused five-tap row:
+/// `out = fma(t4, r4, fma(t3, r3, fma(t2, r2, fma(t0, r0, t1*r1))))`.
+#[inline]
+pub fn five_tap_row<T: Scalar>(taps: [T; 5], rows: [&[T]; 5], out: &mut [T]) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(r0), Some(r1), Some(r2), Some(r3), Some(r4), Some(o)) = (
+            cast::<T, f64>(rows[0]),
+            cast::<T, f64>(rows[1]),
+            cast::<T, f64>(rows[2]),
+            cast::<T, f64>(rows[3]),
+            cast::<T, f64>(rows[4]),
+            cast_mut::<T, f64>(out),
+        ) {
+            let t = taps.map(Scalar::to_f64);
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::five_tap_row_f64(t, [r0, r1, r2, r3, r4], o) };
+            return;
+        }
+        if let (Some(r0), Some(r1), Some(r2), Some(r3), Some(r4), Some(o)) = (
+            cast::<T, f32>(rows[0]),
+            cast::<T, f32>(rows[1]),
+            cast::<T, f32>(rows[2]),
+            cast::<T, f32>(rows[3]),
+            cast::<T, f32>(rows[4]),
+            cast_mut::<T, f32>(out),
+        ) {
+            let t = taps.map(|v| v.to_f64() as f32);
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::five_tap_row_f32(t, [r0, r1, r2, r3, r4], o) };
+            return;
+        }
+    }
+    five_tap_row_scalar(taps, rows, out);
+}
+
+/// Scalar reference for [`five_tap_row`].
+#[inline]
+pub fn five_tap_row_scalar<T: Scalar>(taps: [T; 5], rows: [&[T]; 5], out: &mut [T]) {
+    let [t0, t1, t2, t3, t4] = taps;
+    let [r0, r1, r2, r3, r4] = rows;
+    for e in 0..out.len() {
+        let acc = t0.mul_add(r0[e], t1 * r1[e]);
+        let acc = t2.mul_add(r2[e], acc);
+        let acc = t3.mul_add(r3[e], acc);
+        out[e] = t4.mul_add(r4[e], acc);
+    }
+}
+
+/// `row[e] *= d` — the IPK forward-sweep seed row.
+#[inline]
+pub fn scale_row<T: Scalar>(row: &mut [T], d: T) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let Some(row) = cast_mut::<T, f64>(row) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::scale_row_f64(row, d.to_f64()) };
+            return;
+        }
+        if let Some(row) = cast_mut::<T, f32>(row) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::scale_row_f32(row, d.to_f64() as f32) };
+            return;
+        }
+    }
+    scale_row_scalar(row, d);
+}
+
+/// Scalar reference for [`scale_row`].
+#[inline]
+pub fn scale_row_scalar<T: Scalar>(row: &mut [T], d: T) {
+    for v in row.iter_mut() {
+        let scaled = *v * d;
+        *v = scaled;
+    }
+}
+
+/// IPK forward sweep: `cur[e] = fma(-s, prev[e], cur[e]) * d`.
+#[inline]
+pub fn sweep_fwd_row<T: Scalar>(prev: &[T], cur: &mut [T], s: T, d: T) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(prev), Some(cur)) = (cast::<T, f64>(prev), cast_mut::<T, f64>(cur)) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::sweep_fwd_row_f64(prev, cur, s.to_f64(), d.to_f64()) };
+            return;
+        }
+        if let (Some(prev), Some(cur)) = (cast::<T, f32>(prev), cast_mut::<T, f32>(cur)) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::sweep_fwd_row_f32(prev, cur, s.to_f64() as f32, d.to_f64() as f32) };
+            return;
+        }
+    }
+    sweep_fwd_row_scalar(prev, cur, s, d);
+}
+
+/// Scalar reference for [`sweep_fwd_row`].
+#[inline]
+pub fn sweep_fwd_row_scalar<T: Scalar>(prev: &[T], cur: &mut [T], s: T, d: T) {
+    for e in 0..cur.len() {
+        cur[e] = ((-s).mul_add(prev[e], cur[e])) * d;
+    }
+}
+
+/// IPK backward sweep: `cur[e] = fma(-c, next[e], cur[e])`.
+#[inline]
+pub fn sweep_bwd_row<T: Scalar>(next: &[T], cur: &mut [T], c: T) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(next), Some(cur)) = (cast::<T, f64>(next), cast_mut::<T, f64>(cur)) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::sweep_bwd_row_f64(next, cur, c.to_f64()) };
+            return;
+        }
+        if let (Some(next), Some(cur)) = (cast::<T, f32>(next), cast_mut::<T, f32>(cur)) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::sweep_bwd_row_f32(next, cur, c.to_f64() as f32) };
+            return;
+        }
+    }
+    sweep_bwd_row_scalar(next, cur, c);
+}
+
+/// Scalar reference for [`sweep_bwd_row`].
+#[inline]
+pub fn sweep_bwd_row_scalar<T: Scalar>(next: &[T], cur: &mut [T], c: T) {
+    for e in 0..cur.len() {
+        cur[e] = (-c).mul_add(next[e], cur[e]);
+    }
+}
+
+/// `dst[e] = fma(sign, src[e], dst[e])` — scaled accumulate onto even
+/// rows (temporal recombination).
+#[inline]
+pub fn axpy_row<T: Scalar>(dst: &mut [T], src: &[T], sign: T) {
+    #[cfg(target_arch = "x86_64")]
+    if enabled() {
+        if let (Some(dst), Some(src)) = (cast_mut::<T, f64>(dst), cast::<T, f64>(src)) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::axpy_row_f64(dst, src, sign.to_f64()) };
+            return;
+        }
+        if let (Some(dst), Some(src)) = (cast_mut::<T, f32>(dst), cast::<T, f32>(src)) {
+            // SAFETY: `enabled()` verified AVX2+FMA at runtime.
+            unsafe { x86::axpy_row_f32(dst, src, sign.to_f64() as f32) };
+            return;
+        }
+    }
+    axpy_row_scalar(dst, src, sign);
+}
+
+/// Scalar reference for [`axpy_row`].
+#[inline]
+pub fn axpy_row_scalar<T: Scalar>(dst: &mut [T], src: &[T], sign: T) {
+    for e in 0..dst.len() {
+        dst[e] = sign.mul_add(src[e], dst[e]);
+    }
+}
+
+/// Fused last-axis upsample + apply for one line: `b` (fine, `2a+1`)
+/// accumulates `sign ×` the interpolant of `s` (coarse, `a+1`) with
+/// per-interval ratios `r` (`a`). `tmp` is caller-provided scratch of at
+/// least `a` elements so batched callers allocate once per task.
+///
+/// Fast path (`sign == ±1`, which covers decompose and recompose): the
+/// interpolants are computed with [`interp_row_vr`] and applied with plain
+/// `+=`/`-=` — bit-identical to the scalar `fma(±1, x, y)` because an fma
+/// by `±1` rounds `y ± x` exactly once, which is what `+`/`-` compute.
+/// Any other `sign` falls back to the scalar reference.
+#[inline]
+pub fn upsample_apply_row<T: Scalar>(s: &[T], r: &[T], b: &mut [T], sign: T, tmp: &mut [T]) {
+    let a = r.len();
+    debug_assert_eq!(s.len(), a + 1);
+    debug_assert_eq!(b.len(), 2 * a + 1);
+    debug_assert!(tmp.len() >= a);
+    if !(sign == T::ONE || sign == -T::ONE) {
+        upsample_apply_row_scalar(s, r, b, sign);
+        return;
+    }
+    let tmp = &mut tmp[..a];
+    interp_row_vr(&s[..a], &s[1..], r, tmp);
+    if sign == T::ONE {
+        for i in 0..a {
+            b[2 * i] += s[i];
+            b[2 * i + 1] += tmp[i];
+        }
+        b[2 * a] += s[a];
+    } else {
+        for i in 0..a {
+            b[2 * i] -= s[i];
+            b[2 * i + 1] -= tmp[i];
+        }
+        b[2 * a] -= s[a];
+    }
+}
+
+/// Scalar reference for [`upsample_apply_row`].
+#[inline]
+pub fn upsample_apply_row_scalar<T: Scalar>(s: &[T], r: &[T], b: &mut [T], sign: T) {
+    let a = r.len();
+    for i in 0..a {
+        b[2 * i] = sign.mul_add(s[i], b[2 * i]);
+        let interp = r[i].mul_add(s[i + 1], (-r[i]).mul_add(s[i], s[i]));
+        b[2 * i + 1] = sign.mul_add(interp, b[2 * i + 1]);
+    }
+    b[2 * a] = sign.mul_add(s[a], b[2 * a]);
+}
+
+/// The AVX2+FMA row bodies. Each function keeps the scalar op sequence
+/// per lane — broadcast the constants, `loadu`/`fmadd`/`storeu` over full
+/// vectors, then a scalar tail identical to the `_scalar` twin — so every
+/// body is bit-identical to its dispatcher's fallback path.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_row_f64(lo: &[f64], hi: &[f64], r: f64, out: &mut [f64]) {
+        let n = out.len();
+        let rv = _mm256_set1_pd(r);
+        let nrv = _mm256_set1_pd(-r);
+        let mut i = 0;
+        while i + 4 <= n {
+            let lov = _mm256_loadu_pd(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_pd(hi.as_ptr().add(i));
+            let inner = _mm256_fmadd_pd(nrv, lov, lov);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_fmadd_pd(rv, hiv, inner));
+            i += 4;
+        }
+        while i < n {
+            out[i] = r.mul_add(hi[i], (-r).mul_add(lo[i], lo[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_row_f32(lo: &[f32], hi: &[f32], r: f32, out: &mut [f32]) {
+        let n = out.len();
+        let rv = _mm256_set1_ps(r);
+        let nrv = _mm256_set1_ps(-r);
+        let mut i = 0;
+        while i + 8 <= n {
+            let lov = _mm256_loadu_ps(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_ps(hi.as_ptr().add(i));
+            let inner = _mm256_fmadd_ps(nrv, lov, lov);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(rv, hiv, inner));
+            i += 8;
+        }
+        while i < n {
+            out[i] = r.mul_add(hi[i], (-r).mul_add(lo[i], lo[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_row_vr_f64(lo: &[f64], hi: &[f64], r: &[f64], out: &mut [f64]) {
+        let n = out.len();
+        let zero = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let lov = _mm256_loadu_pd(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_pd(hi.as_ptr().add(i));
+            let rv = _mm256_loadu_pd(r.as_ptr().add(i));
+            let nrv = _mm256_sub_pd(zero, rv);
+            let inner = _mm256_fmadd_pd(nrv, lov, lov);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_fmadd_pd(rv, hiv, inner));
+            i += 4;
+        }
+        while i < n {
+            out[i] = r[i].mul_add(hi[i], (-r[i]).mul_add(lo[i], lo[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_row_vr_f32(lo: &[f32], hi: &[f32], r: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let lov = _mm256_loadu_ps(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_ps(hi.as_ptr().add(i));
+            let rv = _mm256_loadu_ps(r.as_ptr().add(i));
+            let nrv = _mm256_sub_ps(zero, rv);
+            let inner = _mm256_fmadd_ps(nrv, lov, lov);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(rv, hiv, inner));
+            i += 8;
+        }
+        while i < n {
+            out[i] = r[i].mul_add(hi[i], (-r[i]).mul_add(lo[i], lo[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_sub_row_f64(lo: &[f64], hi: &[f64], r: f64, odd: &mut [f64]) {
+        let n = odd.len();
+        let rv = _mm256_set1_pd(r);
+        let nrv = _mm256_set1_pd(-r);
+        let mut i = 0;
+        while i + 4 <= n {
+            let lov = _mm256_loadu_pd(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_pd(hi.as_ptr().add(i));
+            let ov = _mm256_loadu_pd(odd.as_ptr().add(i));
+            let interp = _mm256_fmadd_pd(rv, hiv, _mm256_fmadd_pd(nrv, lov, lov));
+            _mm256_storeu_pd(odd.as_mut_ptr().add(i), _mm256_sub_pd(ov, interp));
+            i += 4;
+        }
+        while i < n {
+            let interp = r.mul_add(hi[i], (-r).mul_add(lo[i], lo[i]));
+            odd[i] -= interp;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_sub_row_f32(lo: &[f32], hi: &[f32], r: f32, odd: &mut [f32]) {
+        let n = odd.len();
+        let rv = _mm256_set1_ps(r);
+        let nrv = _mm256_set1_ps(-r);
+        let mut i = 0;
+        while i + 8 <= n {
+            let lov = _mm256_loadu_ps(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_ps(hi.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(odd.as_ptr().add(i));
+            let interp = _mm256_fmadd_ps(rv, hiv, _mm256_fmadd_ps(nrv, lov, lov));
+            _mm256_storeu_ps(odd.as_mut_ptr().add(i), _mm256_sub_ps(ov, interp));
+            i += 8;
+        }
+        while i < n {
+            let interp = r.mul_add(hi[i], (-r).mul_add(lo[i], lo[i]));
+            odd[i] -= interp;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_add_row_f64(lo: &[f64], hi: &[f64], r: f64, odd: &mut [f64]) {
+        let n = odd.len();
+        let rv = _mm256_set1_pd(r);
+        let nrv = _mm256_set1_pd(-r);
+        let mut i = 0;
+        while i + 4 <= n {
+            let lov = _mm256_loadu_pd(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_pd(hi.as_ptr().add(i));
+            let ov = _mm256_loadu_pd(odd.as_ptr().add(i));
+            let interp = _mm256_fmadd_pd(rv, hiv, _mm256_fmadd_pd(nrv, lov, lov));
+            _mm256_storeu_pd(odd.as_mut_ptr().add(i), _mm256_add_pd(ov, interp));
+            i += 4;
+        }
+        while i < n {
+            let interp = r.mul_add(hi[i], (-r).mul_add(lo[i], lo[i]));
+            odd[i] += interp;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn interp_add_row_f32(lo: &[f32], hi: &[f32], r: f32, odd: &mut [f32]) {
+        let n = odd.len();
+        let rv = _mm256_set1_ps(r);
+        let nrv = _mm256_set1_ps(-r);
+        let mut i = 0;
+        while i + 8 <= n {
+            let lov = _mm256_loadu_ps(lo.as_ptr().add(i));
+            let hiv = _mm256_loadu_ps(hi.as_ptr().add(i));
+            let ov = _mm256_loadu_ps(odd.as_ptr().add(i));
+            let interp = _mm256_fmadd_ps(rv, hiv, _mm256_fmadd_ps(nrv, lov, lov));
+            _mm256_storeu_ps(odd.as_mut_ptr().add(i), _mm256_add_ps(ov, interp));
+            i += 8;
+        }
+        while i < n {
+            let interp = r.mul_add(hi[i], (-r).mul_add(lo[i], lo[i]));
+            odd[i] += interp;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn five_tap_row_f64(t: [f64; 5], rows: [&[f64]; 5], out: &mut [f64]) {
+        let n = out.len();
+        let [r0, r1, r2, r3, r4] = rows;
+        let t0v = _mm256_set1_pd(t[0]);
+        let t1v = _mm256_set1_pd(t[1]);
+        let t2v = _mm256_set1_pd(t[2]);
+        let t3v = _mm256_set1_pd(t[3]);
+        let t4v = _mm256_set1_pd(t[4]);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v0 = _mm256_loadu_pd(r0.as_ptr().add(i));
+            let v1 = _mm256_loadu_pd(r1.as_ptr().add(i));
+            let v2 = _mm256_loadu_pd(r2.as_ptr().add(i));
+            let v3 = _mm256_loadu_pd(r3.as_ptr().add(i));
+            let v4 = _mm256_loadu_pd(r4.as_ptr().add(i));
+            let acc = _mm256_fmadd_pd(t0v, v0, _mm256_mul_pd(t1v, v1));
+            let acc = _mm256_fmadd_pd(t2v, v2, acc);
+            let acc = _mm256_fmadd_pd(t3v, v3, acc);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), _mm256_fmadd_pd(t4v, v4, acc));
+            i += 4;
+        }
+        while i < n {
+            let acc = t[0].mul_add(r0[i], t[1] * r1[i]);
+            let acc = t[2].mul_add(r2[i], acc);
+            let acc = t[3].mul_add(r3[i], acc);
+            out[i] = t[4].mul_add(r4[i], acc);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn five_tap_row_f32(t: [f32; 5], rows: [&[f32]; 5], out: &mut [f32]) {
+        let n = out.len();
+        let [r0, r1, r2, r3, r4] = rows;
+        let t0v = _mm256_set1_ps(t[0]);
+        let t1v = _mm256_set1_ps(t[1]);
+        let t2v = _mm256_set1_ps(t[2]);
+        let t3v = _mm256_set1_ps(t[3]);
+        let t4v = _mm256_set1_ps(t[4]);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v0 = _mm256_loadu_ps(r0.as_ptr().add(i));
+            let v1 = _mm256_loadu_ps(r1.as_ptr().add(i));
+            let v2 = _mm256_loadu_ps(r2.as_ptr().add(i));
+            let v3 = _mm256_loadu_ps(r3.as_ptr().add(i));
+            let v4 = _mm256_loadu_ps(r4.as_ptr().add(i));
+            let acc = _mm256_fmadd_ps(t0v, v0, _mm256_mul_ps(t1v, v1));
+            let acc = _mm256_fmadd_ps(t2v, v2, acc);
+            let acc = _mm256_fmadd_ps(t3v, v3, acc);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(t4v, v4, acc));
+            i += 8;
+        }
+        while i < n {
+            let acc = t[0].mul_add(r0[i], t[1] * r1[i]);
+            let acc = t[2].mul_add(r2[i], acc);
+            let acc = t[3].mul_add(r3[i], acc);
+            out[i] = t[4].mul_add(r4[i], acc);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn scale_row_f64(row: &mut [f64], d: f64) {
+        let n = row.len();
+        let dv = _mm256_set1_pd(d);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm256_loadu_pd(row.as_ptr().add(i));
+            _mm256_storeu_pd(row.as_mut_ptr().add(i), _mm256_mul_pd(v, dv));
+            i += 4;
+        }
+        while i < n {
+            row[i] *= d;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn scale_row_f32(row: &mut [f32], d: f32) {
+        let n = row.len();
+        let dv = _mm256_set1_ps(d);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(row.as_ptr().add(i));
+            _mm256_storeu_ps(row.as_mut_ptr().add(i), _mm256_mul_ps(v, dv));
+            i += 8;
+        }
+        while i < n {
+            row[i] *= d;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sweep_fwd_row_f64(prev: &[f64], cur: &mut [f64], s: f64, d: f64) {
+        let n = cur.len();
+        let nsv = _mm256_set1_pd(-s);
+        let dv = _mm256_set1_pd(d);
+        let mut i = 0;
+        while i + 4 <= n {
+            let pv = _mm256_loadu_pd(prev.as_ptr().add(i));
+            let cv = _mm256_loadu_pd(cur.as_ptr().add(i));
+            let v = _mm256_mul_pd(_mm256_fmadd_pd(nsv, pv, cv), dv);
+            _mm256_storeu_pd(cur.as_mut_ptr().add(i), v);
+            i += 4;
+        }
+        while i < n {
+            cur[i] = ((-s).mul_add(prev[i], cur[i])) * d;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sweep_fwd_row_f32(prev: &[f32], cur: &mut [f32], s: f32, d: f32) {
+        let n = cur.len();
+        let nsv = _mm256_set1_ps(-s);
+        let dv = _mm256_set1_ps(d);
+        let mut i = 0;
+        while i + 8 <= n {
+            let pv = _mm256_loadu_ps(prev.as_ptr().add(i));
+            let cv = _mm256_loadu_ps(cur.as_ptr().add(i));
+            let v = _mm256_mul_ps(_mm256_fmadd_ps(nsv, pv, cv), dv);
+            _mm256_storeu_ps(cur.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        while i < n {
+            cur[i] = ((-s).mul_add(prev[i], cur[i])) * d;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sweep_bwd_row_f64(next: &[f64], cur: &mut [f64], c: f64) {
+        let n = cur.len();
+        let ncv = _mm256_set1_pd(-c);
+        let mut i = 0;
+        while i + 4 <= n {
+            let nv = _mm256_loadu_pd(next.as_ptr().add(i));
+            let cv = _mm256_loadu_pd(cur.as_ptr().add(i));
+            _mm256_storeu_pd(cur.as_mut_ptr().add(i), _mm256_fmadd_pd(ncv, nv, cv));
+            i += 4;
+        }
+        while i < n {
+            cur[i] = (-c).mul_add(next[i], cur[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn sweep_bwd_row_f32(next: &[f32], cur: &mut [f32], c: f32) {
+        let n = cur.len();
+        let ncv = _mm256_set1_ps(-c);
+        let mut i = 0;
+        while i + 8 <= n {
+            let nv = _mm256_loadu_ps(next.as_ptr().add(i));
+            let cv = _mm256_loadu_ps(cur.as_ptr().add(i));
+            _mm256_storeu_ps(cur.as_mut_ptr().add(i), _mm256_fmadd_ps(ncv, nv, cv));
+            i += 8;
+        }
+        while i < n {
+            cur[i] = (-c).mul_add(next[i], cur[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy_row_f64(dst: &mut [f64], src: &[f64], sign: f64) {
+        let n = dst.len();
+        let sv = _mm256_set1_pd(sign);
+        let mut i = 0;
+        while i + 4 <= n {
+            let s = _mm256_loadu_pd(src.as_ptr().add(i));
+            let d = _mm256_loadu_pd(dst.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_fmadd_pd(sv, s, d));
+            i += 4;
+        }
+        while i < n {
+            dst[i] = sign.mul_add(src[i], dst[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn axpy_row_f32(dst: &mut [f32], src: &[f32], sign: f32) {
+        let n = dst.len();
+        let sv = _mm256_set1_ps(sign);
+        let mut i = 0;
+        while i + 8 <= n {
+            let s = _mm256_loadu_ps(src.as_ptr().add(i));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_fmadd_ps(sv, s, d));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = sign.mul_add(src[i], dst[i]);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn data(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    fn data32(n: usize, seed: u64) -> Vec<f32> {
+        data(n, seed).into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Lengths that cover empty rows, pure tails, exact vector widths,
+    /// and mixed vector+tail runs for both lane counts.
+    const LENS: [usize; 9] = [0, 1, 3, 4, 7, 8, 9, 31, 100];
+
+    #[test]
+    fn interp_rows_match_scalar() {
+        for n in LENS {
+            let (lo, hi) = (data(n, 1), data(n, 2));
+            let r = 0.37;
+            let (mut a, mut b) = (vec![0.0; n], vec![0.0; n]);
+            interp_row(&lo, &hi, r, &mut a);
+            interp_row_scalar(&lo, &hi, r, &mut b);
+            assert_eq!(a, b, "interp_row n={n}");
+
+            let rv = data(n, 3);
+            interp_row_vr(&lo, &hi, &rv, &mut a);
+            interp_row_vr_scalar(&lo, &hi, &rv, &mut b);
+            assert_eq!(a, b, "interp_row_vr n={n}");
+
+            let (mut a, mut b) = (data(n, 4), data(n, 4));
+            interp_sub_row(&lo, &hi, r, &mut a);
+            interp_sub_row_scalar(&lo, &hi, r, &mut b);
+            assert_eq!(a, b, "interp_sub_row n={n}");
+            interp_add_row(&lo, &hi, r, &mut a);
+            interp_add_row_scalar(&lo, &hi, r, &mut b);
+            assert_eq!(a, b, "interp_add_row n={n}");
+        }
+    }
+
+    #[test]
+    fn five_tap_and_sweeps_match_scalar() {
+        for n in LENS {
+            let rows: Vec<Vec<f64>> = (0..5).map(|s| data(n, 10 + s)).collect();
+            let rr: [&[f64]; 5] = [&rows[0], &rows[1], &rows[2], &rows[3], &rows[4]];
+            let taps = [0.1, -0.2, 0.7, 0.05, -0.4];
+            let (mut a, mut b) = (vec![0.0; n], vec![0.0; n]);
+            five_tap_row(taps, rr, &mut a);
+            five_tap_row_scalar(taps, rr, &mut b);
+            assert_eq!(a, b, "five_tap n={n}");
+
+            let prev = data(n, 20);
+            let (mut a, mut b) = (data(n, 21), data(n, 21));
+            scale_row(&mut a, 0.83);
+            scale_row_scalar(&mut b, 0.83);
+            assert_eq!(a, b, "scale n={n}");
+            sweep_fwd_row(&prev, &mut a, 0.31, 1.7);
+            sweep_fwd_row_scalar(&prev, &mut b, 0.31, 1.7);
+            assert_eq!(a, b, "fwd n={n}");
+            sweep_bwd_row(&prev, &mut a, -0.11);
+            sweep_bwd_row_scalar(&prev, &mut b, -0.11);
+            assert_eq!(a, b, "bwd n={n}");
+
+            let src = data(n, 22);
+            axpy_row(&mut a, &src, -1.0);
+            axpy_row_scalar(&mut b, &src, -1.0);
+            assert_eq!(a, b, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn f32_rows_match_scalar() {
+        for n in LENS {
+            let (lo, hi) = (data32(n, 1), data32(n, 2));
+            let (mut a, mut b) = (vec![0.0f32; n], vec![0.0f32; n]);
+            interp_row(&lo, &hi, 0.37f32, &mut a);
+            interp_row_scalar(&lo, &hi, 0.37f32, &mut b);
+            assert_eq!(a, b, "interp_row f32 n={n}");
+
+            let prev = data32(n, 5);
+            let (mut a, mut b) = (data32(n, 6), data32(n, 6));
+            sweep_fwd_row(&prev, &mut a, 0.31f32, 1.7f32);
+            sweep_fwd_row_scalar(&prev, &mut b, 0.31f32, 1.7f32);
+            assert_eq!(a, b, "fwd f32 n={n}");
+        }
+    }
+
+    #[test]
+    fn upsample_apply_row_matches_scalar() {
+        for a_len in [1usize, 2, 3, 8, 16, 33] {
+            let s = data(a_len + 1, 30);
+            let r = data(a_len, 31).iter().map(|v| v.abs().min(0.9)).collect::<Vec<_>>();
+            for sign in [1.0f64, -1.0] {
+                let base = data(2 * a_len + 1, 32);
+                let mut fast = base.clone();
+                let mut slow = base.clone();
+                let mut tmp = vec![0.0; a_len];
+                upsample_apply_row(&s, &r, &mut fast, sign, &mut tmp);
+                upsample_apply_row_scalar(&s, &r, &mut slow, sign);
+                assert_eq!(fast, slow, "upsample_apply a={a_len} sign={sign}");
+            }
+        }
+    }
+}

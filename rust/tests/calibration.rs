@@ -1,0 +1,91 @@
+//! End-to-end host calibration: the measured prune-and-profile loop must
+//! install winners into the par layer's tuned registry, and those winners
+//! must never be slower than the untuned default policy (the default is
+//! always in the profiled set, so "tuned loses to default" cannot happen
+//! by construction).
+//!
+//! Lives in an integration test (own process) because the tuned registry
+//! is process-global: exercising the real install path here cannot race
+//! the library's unit tests, which share one process.
+
+use mgr::simgpu::{calibrate, measure_peak_gbps};
+use mgr::util::par::{self, KernelClass};
+
+#[test]
+fn calibrate_installs_winners_no_slower_than_default() {
+    par::clear_tuned();
+    let target = 1usize << 12; // small: keeps the measured runs fast
+    let rep = calibrate::<f64>(&[target]);
+
+    // the roofline every bench row is normalized against
+    assert!(
+        rep.peak_gbps.is_finite() && rep.peak_gbps > 0.0,
+        "peak bandwidth must be a positive finite measurement, got {}",
+        rep.peak_gbps
+    );
+
+    // one calibration per kernel family
+    assert_eq!(rep.kernels.len(), KernelClass::ALL.len());
+    for class in KernelClass::ALL {
+        assert!(
+            rep.kernels.iter().any(|k| k.class == class),
+            "missing calibration for {}",
+            class.name()
+        );
+    }
+
+    for k in &rep.kernels {
+        let name = k.class.name();
+        assert!(
+            k.chosen_time.is_finite() && k.chosen_time > 0.0,
+            "{name}: chosen_time"
+        );
+        assert!(
+            k.default_time.is_finite() && k.default_time > 0.0,
+            "{name}: default_time"
+        );
+        // the default policy is always profiled, so the winner can tie it
+        // but never lose to it
+        assert!(
+            k.chosen_time <= k.default_time,
+            "{name}: chosen {} slower than default {}",
+            k.chosen_time,
+            k.default_time
+        );
+        assert!(k.speedup() >= 1.0, "{name}: speedup {}", k.speedup());
+        assert!(k.bytes_moved > 0, "{name}: bytes_moved");
+        assert!(k.candidates_ranked >= 6, "{name}: candidate space too small");
+        assert!(k.profiled >= 2, "{name}: must profile top picks + default");
+        assert!(k.gbps() > 0.0, "{name}: throughput");
+        assert!(k.pct_peak(rep.peak_gbps) > 0.0, "{name}: roofline position");
+
+        // the winner must be queryable at the exact decision size...
+        let got = par::tuned_for(k.class, k.elem_bytes, k.elems);
+        assert_eq!(got, Some(k.chosen), "{name}: registry lookup");
+        // ...and nearest-class fallback serves other sizes of the family
+        assert!(
+            par::tuned_for(k.class, k.elem_bytes, k.elems.saturating_mul(64)).is_some(),
+            "{name}: nearest size-class fallback"
+        );
+    }
+
+    // re-calibration overwrites rather than duplicates, and clearing
+    // restores the untuned state
+    let again = calibrate::<f64>(&[target]);
+    assert_eq!(again.kernels.len(), KernelClass::ALL.len());
+    par::clear_tuned();
+    assert!(par::tuned_for(KernelClass::Gpk, 8, target).is_none());
+}
+
+#[test]
+fn peak_measurement_is_positive_and_repeatable_in_magnitude() {
+    let a = measure_peak_gbps();
+    let b = measure_peak_gbps();
+    assert!(a.is_finite() && a > 0.0);
+    assert!(b.is_finite() && b > 0.0);
+    // not a tight bound — machines share cores with other work — but two
+    // back-to-back best-of-4 measurements should land within ~an order
+    // of magnitude of each other if the harness is sane
+    let ratio = if a > b { a / b } else { b / a };
+    assert!(ratio < 10.0, "peak measurements disagree wildly: {a} vs {b}");
+}

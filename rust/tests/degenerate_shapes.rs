@@ -1,0 +1,132 @@
+//! Degenerate-shape matrix: extent-1 axes, single-level hierarchies, and
+//! the all-degenerate shapes that must fail with a typed build error
+//! instead of panicking deep inside a kernel.
+//!
+//! Size-1 axes are legal everywhere (the per-dimension operators collapse
+//! to 1×1 identity factors of the tensor product), as long as at least
+//! one axis actually refines.
+
+use mgr::api::{AnyTensor, Dtype, Fidelity, Session};
+use mgr::grid::Tensor;
+
+/// Smooth deterministic field with O(1) values on any shape.
+fn field(shape: &[usize], dtype: Dtype) -> AnyTensor {
+    let f: AnyTensor = Tensor::<f64>::from_fn(shape, |idx| {
+        idx.iter()
+            .enumerate()
+            .map(|(d, &i)| ((d as f64 + 1.3) * i as f64 * 0.21).sin())
+            .product::<f64>()
+            + 0.25
+    })
+    .into();
+    f.cast(dtype)
+}
+
+#[test]
+fn extent_one_axes_roundtrip_end_to_end() {
+    let shapes: [&[usize]; 5] = [&[1, 65], &[65, 1], &[1, 33, 1], &[5, 1, 9], &[1, 1, 9]];
+    let eb = 1e-4;
+    for shape in shapes {
+        let session = Session::builder()
+            .shape(shape)
+            .dtype(Dtype::F64)
+            .error_bound(eb)
+            .build()
+            .unwrap_or_else(|e| panic!("{shape:?}: build failed: {e}"));
+        let data = field(shape, Dtype::F64);
+        let refactored = session
+            .refactor(&data)
+            .unwrap_or_else(|e| panic!("{shape:?}: refactor failed: {e}"));
+        assert_eq!(refactored.shape(), shape);
+
+        let full = session.retrieve(&refactored, Fidelity::All).unwrap();
+        let err = full.linf_to(&data).unwrap();
+        assert!(err <= eb * (1.0 + 1e-6) + 1e-12, "{shape:?}: err {err} > {eb}");
+
+        // every coarser prefix reconstructs without panicking, with
+        // non-increasing error
+        let mut last = f64::INFINITY;
+        for keep in 1..=refactored.nclasses() {
+            let approx = session.retrieve(&refactored, Fidelity::Classes(keep)).unwrap();
+            let e = approx.linf_to(&data).unwrap();
+            assert!(
+                e <= last * (1.0 + 1e-6) + 1e-12,
+                "{shape:?} keep={keep}: error increased {last} -> {e}"
+            );
+            last = e;
+        }
+    }
+}
+
+#[test]
+fn smallest_refactorable_axis_roundtrips() {
+    for shape in [&[3usize][..], &[3, 1][..]] {
+        let eb = 1e-6;
+        let session = Session::builder().shape(shape).error_bound(eb).build().unwrap();
+        let data = field(shape, Dtype::F64);
+        let refactored = session.refactor(&data).unwrap();
+        let full = session.retrieve(&refactored, Fidelity::All).unwrap();
+        let err = full.linf_to(&data).unwrap();
+        assert!(err <= eb * (1.0 + 1e-6) + 1e-12, "{shape:?}: err {err}");
+    }
+}
+
+#[test]
+fn all_degenerate_shapes_fail_with_typed_error() {
+    for shape in [&[1usize][..], &[1, 1][..], &[1, 1, 1][..]] {
+        let err = Session::builder()
+            .shape(shape)
+            .build()
+            .err()
+            .unwrap_or_else(|| panic!("{shape:?}: all-size-1 shape must not build"));
+        let msg = err.to_string();
+        assert!(
+            msg.contains("no refactorable dimension"),
+            "{shape:?}: unhelpful error: {msg}"
+        );
+    }
+}
+
+#[test]
+fn non_power_of_two_shapes_fail_with_typed_error() {
+    for shape in [&[6usize][..], &[2][..], &[1, 6][..], &[33, 4][..]] {
+        let err = Session::builder()
+            .shape(shape)
+            .build()
+            .err()
+            .unwrap_or_else(|| panic!("{shape:?}: invalid shape must not build"));
+        let msg = err.to_string();
+        assert!(
+            msg.contains("not refactorable"),
+            "{shape:?}: unhelpful error: {msg}"
+        );
+    }
+}
+
+#[test]
+fn single_level_hierarchy_roundtrips_and_bad_nlevels_is_rejected() {
+    let shape = [33usize];
+    let eb = 1e-5;
+    let session = Session::builder()
+        .shape(&shape)
+        .nlevels(1)
+        .error_bound(eb)
+        .build()
+        .unwrap();
+    let data = field(&shape, Dtype::F64);
+    let refactored = session.refactor(&data).unwrap();
+    let full = session.retrieve(&refactored, Fidelity::All).unwrap();
+    let err = full.linf_to(&data).unwrap();
+    assert!(err <= eb * (1.0 + 1e-6) + 1e-12, "single level: err {err}");
+
+    // out-of-range level counts fail at build, naming the valid range
+    for bad in [0usize, 99] {
+        let err = Session::builder()
+            .shape(&shape)
+            .nlevels(bad)
+            .build()
+            .err()
+            .unwrap_or_else(|| panic!("nlevels {bad} must not build"));
+        assert!(err.to_string().contains("nlevels"), "nlevels {bad}: {err}");
+    }
+}

@@ -1,0 +1,410 @@
+//! SIMD-vs-scalar bit-identity matrix.
+//!
+//! The stride-1 fast paths in `util::simd` promise *bit-identical* output
+//! to their `_scalar` twins — that contract is what lets the refactor
+//! kernels dispatch freely between paths without perturbing the lossless
+//! round-trip or the quantizer's error bound. This suite sweeps the
+//! contract across:
+//!
+//! * every row primitive × {f32, f64} × row lengths straddling the
+//!   vector-width remainder cases (1..=65, both sides of 8/16/32/64);
+//! * every whole kernel (GPK upsample, LPK mass-trans, IPK Thomas, the
+//!   fused last-axis upsample-apply) × {f32, f64} × axes 0..3 × odd/even
+//!   surrounding extents, against references built *only* from the
+//!   `_scalar` twins;
+//! * quantize/dequantize against plain serial loops.
+//!
+//! Comparisons use `to_f64().to_bits()` (f32→f64 widening is exact), so
+//! any divergence — including signed-zero or rounding-mode drift — fails.
+
+use mgr::compress::{dequantize, quantize, QuantMeta};
+use mgr::refactor::axis::{self, axis_split};
+use mgr::refactor::DimOps;
+use mgr::util::rng::Rng;
+use mgr::util::simd;
+use mgr::util::Scalar;
+
+/// Exact bit pattern of each element, widened to f64 (lossless for f32).
+fn bits<T: Scalar>(v: &[T]) -> Vec<u64> {
+    v.iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+fn randv<T: Scalar>(rng: &mut Rng, n: usize) -> Vec<T> {
+    (0..n).map(|_| T::from_f64(rng.range(-1.0, 1.0))).collect()
+}
+
+/// Strictly increasing, non-uniform coordinates of length `m`.
+fn coords(rng: &mut Rng, m: usize) -> Vec<f64> {
+    let mut xs = Vec::with_capacity(m);
+    let mut x = 0.0;
+    for _ in 0..m {
+        xs.push(x);
+        x += rng.range(0.5, 1.5);
+    }
+    xs
+}
+
+/// Row lengths straddling every vector-width remainder boundary.
+const LENS: [usize; 14] = [1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 33, 64, 65];
+
+fn row_primitives_matrix<T: Scalar>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for &n in &LENS {
+        let lo: Vec<T> = randv(&mut rng, n);
+        let hi: Vec<T> = randv(&mut rng, n);
+        let rv: Vec<T> = randv(&mut rng, n);
+        let r = T::from_f64(0.37);
+        let tag = format!("n={n} bytes={}", T::BYTES);
+
+        let mut a = vec![T::ZERO; n];
+        let mut b = vec![T::ZERO; n];
+        simd::interp_row(&lo, &hi, r, &mut a);
+        simd::interp_row_scalar(&lo, &hi, r, &mut b);
+        assert_eq!(bits(&a), bits(&b), "interp_row {tag}");
+
+        simd::interp_row_vr(&lo, &hi, &rv, &mut a);
+        simd::interp_row_vr_scalar(&lo, &hi, &rv, &mut b);
+        assert_eq!(bits(&a), bits(&b), "interp_row_vr {tag}");
+
+        let odd0: Vec<T> = randv(&mut rng, n);
+        let mut a = odd0.clone();
+        let mut b = odd0.clone();
+        simd::interp_sub_row(&lo, &hi, r, &mut a);
+        simd::interp_sub_row_scalar(&lo, &hi, r, &mut b);
+        assert_eq!(bits(&a), bits(&b), "interp_sub_row {tag}");
+
+        let mut a = odd0.clone();
+        let mut b = odd0.clone();
+        simd::interp_add_row(&lo, &hi, r, &mut a);
+        simd::interp_add_row_scalar(&lo, &hi, r, &mut b);
+        assert_eq!(bits(&a), bits(&b), "interp_add_row {tag}");
+
+        let taps: [T; 5] = [
+            T::from_f64(0.1),
+            T::from_f64(-0.4),
+            T::from_f64(1.2),
+            T::from_f64(-0.3),
+            T::from_f64(0.05),
+        ];
+        let rows_v: Vec<Vec<T>> = (0..5).map(|_| randv(&mut rng, n)).collect();
+        let rows: [&[T]; 5] = [&rows_v[0], &rows_v[1], &rows_v[2], &rows_v[3], &rows_v[4]];
+        let mut a = vec![T::ZERO; n];
+        let mut b = vec![T::ZERO; n];
+        simd::five_tap_row(taps, rows, &mut a);
+        simd::five_tap_row_scalar(taps, rows, &mut b);
+        assert_eq!(bits(&a), bits(&b), "five_tap_row {tag}");
+
+        let row0: Vec<T> = randv(&mut rng, n);
+        let d = T::from_f64(0.8125);
+        let mut a = row0.clone();
+        let mut b = row0.clone();
+        simd::scale_row(&mut a, d);
+        simd::scale_row_scalar(&mut b, d);
+        assert_eq!(bits(&a), bits(&b), "scale_row {tag}");
+
+        let prev: Vec<T> = randv(&mut rng, n);
+        let cur0: Vec<T> = randv(&mut rng, n);
+        let s = T::from_f64(0.21);
+        let mut a = cur0.clone();
+        let mut b = cur0.clone();
+        simd::sweep_fwd_row(&prev, &mut a, s, d);
+        simd::sweep_fwd_row_scalar(&prev, &mut b, s, d);
+        assert_eq!(bits(&a), bits(&b), "sweep_fwd_row {tag}");
+
+        let next: Vec<T> = randv(&mut rng, n);
+        let c = T::from_f64(-0.43);
+        let mut a = cur0.clone();
+        let mut b = cur0.clone();
+        simd::sweep_bwd_row(&next, &mut a, c);
+        simd::sweep_bwd_row_scalar(&next, &mut b, c);
+        assert_eq!(bits(&a), bits(&b), "sweep_bwd_row {tag}");
+
+        for sign in [T::ONE, T::from_f64(-1.0)] {
+            let dst0: Vec<T> = randv(&mut rng, n);
+            let src: Vec<T> = randv(&mut rng, n);
+            let mut a = dst0.clone();
+            let mut b = dst0.clone();
+            simd::axpy_row(&mut a, &src, sign);
+            simd::axpy_row_scalar(&mut b, &src, sign);
+            assert_eq!(bits(&a), bits(&b), "axpy_row {tag}");
+        }
+    }
+}
+
+#[test]
+fn row_primitives_bit_identical_f64() {
+    row_primitives_matrix::<f64>(0x51_3D_01);
+}
+
+#[test]
+fn row_primitives_bit_identical_f32() {
+    row_primitives_matrix::<f32>(0x51_3D_02);
+}
+
+fn upsample_apply_row_matrix<T: Scalar>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for mc in [2usize, 3, 5, 9, 17, 33] {
+        let a = mc - 1;
+        let mf = 2 * a + 1;
+        let s: Vec<T> = randv(&mut rng, mc);
+        let r: Vec<T> = randv(&mut rng, a)
+            .iter()
+            .map(|v: &T| T::from_f64(0.5 + 0.4 * v.to_f64()))
+            .collect();
+        for sign in [T::ONE, T::from_f64(-1.0)] {
+            let b0: Vec<T> = randv(&mut rng, mf);
+            let mut dispatched = b0.clone();
+            let mut scalar = b0.clone();
+            let mut tmp = vec![T::ZERO; a];
+            simd::upsample_apply_row(&s, &r, &mut dispatched, sign, &mut tmp);
+            simd::upsample_apply_row_scalar(&s, &r, &mut scalar, sign);
+            assert_eq!(
+                bits(&dispatched),
+                bits(&scalar),
+                "upsample_apply_row mc={mc} bytes={}",
+                T::BYTES
+            );
+        }
+    }
+}
+
+#[test]
+fn upsample_apply_row_bit_identical_f64() {
+    upsample_apply_row_matrix::<f64>(0xAB_17_01);
+}
+
+#[test]
+fn upsample_apply_row_bit_identical_f32() {
+    upsample_apply_row_matrix::<f32>(0xAB_17_02);
+}
+
+// ---- whole-kernel matrix: references built only from `_scalar` twins ----
+
+fn upsample_ref<T: Scalar>(src: &[T], src_shape: &[usize], ax: usize, r: &[T], dst: &mut [T]) {
+    let (outer, mc, inner) = axis_split(src_shape, ax);
+    let a = mc - 1;
+    let mf = 2 * a + 1;
+    for o in 0..outer {
+        let sb = o * mc * inner;
+        let db = o * mf * inner;
+        for i in 0..a {
+            let lo = &src[sb + i * inner..sb + (i + 1) * inner];
+            let hi = &src[sb + (i + 1) * inner..sb + (i + 2) * inner];
+            dst[db + 2 * i * inner..db + (2 * i + 1) * inner].copy_from_slice(lo);
+            let odd = &mut dst[db + (2 * i + 1) * inner..db + (2 * i + 2) * inner];
+            simd::interp_row_scalar(lo, hi, r[i], odd);
+        }
+        dst[db + 2 * a * inner..db + (2 * a + 1) * inner]
+            .copy_from_slice(&src[sb + a * inner..sb + mc * inner]);
+    }
+}
+
+fn masstrans_ref<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    ax: usize,
+    ops: &DimOps<T>,
+    dst: &mut [T],
+) {
+    let (outer, m, inner) = axis_split(src_shape, ax);
+    let a = (m - 1) / 2;
+    let k = &ops.k;
+    for o in 0..outer {
+        let sb = o * m * inner;
+        let db = o * (a + 1) * inner;
+        for i in 0..=a {
+            let j = 2 * i;
+            let t0 = if j >= 2 { k[0][i] } else { T::ZERO };
+            let t1 = if j >= 1 { k[1][i] } else { T::ZERO };
+            let t2 = k[2][i];
+            let t3 = if j + 1 < m { k[3][i] } else { T::ZERO };
+            let t4 = if j + 2 < m { k[4][i] } else { T::ZERO };
+            let r0 = &src[sb + j.saturating_sub(2) * inner..][..inner];
+            let r1 = &src[sb + j.saturating_sub(1) * inner..][..inner];
+            let r2 = &src[sb + j * inner..][..inner];
+            let r3 = &src[sb + (j + 1).min(m - 1) * inner..][..inner];
+            let r4 = &src[sb + (j + 2).min(m - 1) * inner..][..inner];
+            let row = &mut dst[db + i * inner..db + (i + 1) * inner];
+            simd::five_tap_row_scalar([t0, t1, t2, t3, t4], [r0, r1, r2, r3, r4], row);
+        }
+    }
+}
+
+fn thomas_ref<T: Scalar>(buf: &mut [T], shape: &[usize], ax: usize, ops: &DimOps<T>) {
+    let (outer, m, inner) = axis_split(shape, ax);
+    for o in 0..outer {
+        let b = o * m * inner;
+        simd::scale_row_scalar(&mut buf[b..b + inner], ops.denom[0]);
+        for i in 1..m {
+            let (prev, cur) = buf[b + (i - 1) * inner..].split_at_mut(inner);
+            let cur = &mut cur[..inner];
+            simd::sweep_fwd_row_scalar(prev, cur, ops.sub[i], ops.denom[i]);
+        }
+        for i in (0..m - 1).rev() {
+            let (cur, next) = buf[b + i * inner..].split_at_mut(inner);
+            let cur = &mut cur[..inner];
+            simd::sweep_bwd_row_scalar(&next[..inner], cur, ops.cp[i]);
+        }
+    }
+}
+
+fn upsample_apply_last_ref<T: Scalar>(
+    src: &[T],
+    src_shape: &[usize],
+    r: &[T],
+    buf: &mut [T],
+    sign: T,
+) {
+    let d = src_shape.len();
+    let mc = src_shape[d - 1];
+    let mf = 2 * (mc - 1) + 1;
+    let outer: usize = src_shape[..d - 1].iter().product();
+    for o in 0..outer {
+        let s = &src[o * mc..(o + 1) * mc];
+        let b = &mut buf[o * mf..(o + 1) * mf];
+        simd::upsample_apply_row_scalar(s, r, b, sign);
+    }
+}
+
+fn kernel_matrix<T: Scalar>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    for ax in 0..3usize {
+        for mf in [5usize, 17] {
+            for other in [4usize, 7] {
+                let mc = (mf + 1) / 2;
+                let xs = coords(&mut rng, mf);
+                let ops: DimOps<T> = DimOps::new(&xs);
+                let mut fshape = [other, other, other];
+                fshape[ax] = mf;
+                let mut cshape = fshape;
+                cshape[ax] = mc;
+                let flen: usize = fshape.iter().product();
+                let clen: usize = cshape.iter().product();
+                let tag = format!("axis={ax} mf={mf} other={other} bytes={}", T::BYTES);
+
+                // GPK upsample: default dispatch and explicit workers
+                let src: Vec<T> = randv(&mut rng, clen);
+                let mut want = vec![T::ZERO; flen];
+                upsample_ref(&src, &cshape, ax, &ops.r, &mut want);
+                let mut got = vec![T::ZERO; flen];
+                axis::upsample(&src, &cshape, ax, &ops.r, &mut got);
+                assert_eq!(bits(&got), bits(&want), "upsample {tag}");
+                let mut got = vec![T::ZERO; flen];
+                axis::upsample_with(&src, &cshape, ax, &ops.r, &mut got, 3);
+                assert_eq!(bits(&got), bits(&want), "upsample_with(3) {tag}");
+
+                // LPK mass-trans
+                let src: Vec<T> = randv(&mut rng, flen);
+                let mut want = vec![T::ZERO; clen];
+                masstrans_ref(&src, &fshape, ax, &ops, &mut want);
+                let mut got = vec![T::ZERO; clen];
+                axis::masstrans(&src, &fshape, ax, &ops, &mut got);
+                assert_eq!(bits(&got), bits(&want), "masstrans {tag}");
+                let mut got = vec![T::ZERO; clen];
+                axis::masstrans_with(&src, &fshape, ax, &ops, &mut got, 3);
+                assert_eq!(bits(&got), bits(&want), "masstrans_with(3) {tag}");
+
+                // IPK Thomas (in place on the coarse array)
+                let base: Vec<T> = randv(&mut rng, clen);
+                let mut want = base.clone();
+                thomas_ref(&mut want, &cshape, ax, &ops);
+                let mut got = base.clone();
+                axis::thomas(&mut got, &cshape, ax, &ops);
+                assert_eq!(bits(&got), bits(&want), "thomas {tag}");
+                let mut got = base.clone();
+                axis::thomas_with(&mut got, &cshape, ax, &ops, 3);
+                assert_eq!(bits(&got), bits(&want), "thomas_with(3) {tag}");
+            }
+        }
+    }
+
+    // Fused last-axis upsample-apply (only defined for the last axis).
+    for mf in [5usize, 17] {
+        for other in [4usize, 7] {
+            let mc = (mf + 1) / 2;
+            let xs = coords(&mut rng, mf);
+            let ops: DimOps<T> = DimOps::new(&xs);
+            let cshape = [other, other, mc];
+            let clen: usize = cshape.iter().product();
+            let flen = other * other * mf;
+            let src: Vec<T> = randv(&mut rng, clen);
+            let base: Vec<T> = randv(&mut rng, flen);
+            for sign in [T::ONE, T::from_f64(-1.0)] {
+                let mut want = base.clone();
+                upsample_apply_last_ref(&src, &cshape, &ops.r, &mut want, sign);
+                let mut got = base.clone();
+                axis::upsample_apply_last(&src, &cshape, &ops.r, &mut got, sign);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "upsample_apply_last mf={mf} other={other} bytes={}",
+                    T::BYTES
+                );
+                let mut got = base.clone();
+                axis::upsample_apply_last_with(&src, &cshape, &ops.r, &mut got, sign, 3);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "upsample_apply_last_with(3) mf={mf} other={other} bytes={}",
+                    T::BYTES
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn kernels_bit_identical_f64() {
+    kernel_matrix::<f64>(0xC0_FE_01);
+}
+
+#[test]
+fn kernels_bit_identical_f32() {
+    kernel_matrix::<f32>(0xC0_FE_02);
+}
+
+// ---- quantize / dequantize vs plain serial loops ----
+
+fn quant_matrix<T: Scalar>(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let meta = QuantMeta::for_bound(1e-4, 7);
+    let inv = 1.0 / meta.bin;
+    // lengths straddling the 64-element probe blocks and odd remainders
+    for n in [1usize, 63, 64, 65, 129, 1023, 10_000] {
+        let data: Vec<T> = randv(&mut rng, n);
+        let got = quantize(&data, &meta).expect("finite input quantizes");
+        let mut want = Vec::with_capacity(n);
+        for v in &data {
+            want.push((v.to_f64() * inv).round() as i64);
+        }
+        assert_eq!(got, want, "quantize n={n} bytes={}", T::BYTES);
+
+        let back: Vec<T> = dequantize(&got, &meta);
+        let mut back_ref = Vec::with_capacity(n);
+        for &k in &got {
+            back_ref.push(T::from_f64(k as f64 * meta.bin));
+        }
+        assert_eq!(
+            bits(&back),
+            bits(&back_ref),
+            "dequantize n={n} bytes={}",
+            T::BYTES
+        );
+        for (orig, rec) in data.iter().zip(&back) {
+            assert!(
+                (orig.to_f64() - rec.to_f64()).abs() <= meta.bin * 0.5 + 1e-12,
+                "bin-width bound violated"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantize_matches_serial_reference_f64() {
+    quant_matrix::<f64>(0xDE_AD_01);
+}
+
+#[test]
+fn quantize_matches_serial_reference_f32() {
+    quant_matrix::<f32>(0xDE_AD_02);
+}
